@@ -1,0 +1,83 @@
+//! Downlink compression scenario: the FPGA heritage use case from the
+//! paper's intro — hyperspectral instrument data is CCSDS-123-compressed
+//! on the framing FPGA before downlink, while the VPU handles the DSP/AI
+//! work. Reports compression ratio, throughput, and the Table I resource
+//! cost of hosting the compressor next to the CIF/LCD interface.
+//!
+//! Run: `cargo run --release --example compress_downlink`
+
+use spacecodesign::compress::{compress, decompress, Cube, Params};
+use spacecodesign::fpga::{designs, Device};
+use spacecodesign::util::rng::Rng;
+
+/// AVIRIS-like synthetic scene (see DESIGN.md §1 substitution table).
+fn synthetic_scene(bands: usize, rows: usize, cols: usize, seed: u64) -> Cube {
+    let mut rng = Rng::new(seed);
+    let mut base = vec![0f64; rows * cols];
+    for (i, b) in base.iter_mut().enumerate() {
+        let (y, x) = (i / cols, i % cols);
+        *b = 3000.0
+            + 1500.0 * (x as f64 * 0.07).sin()
+            + 900.0 * (y as f64 * 0.05).cos()
+            + 120.0 * rng.normal();
+    }
+    let mut data = vec![0u16; bands * rows * cols];
+    for z in 0..bands {
+        let gain = 1.0 + 0.4 * ((z as f64) * 0.12).sin();
+        let offset = 400.0 * ((z as f64) * 0.045).cos();
+        for i in 0..rows * cols {
+            data[z * rows * cols + i] =
+                (base[i] * gain + offset + 40.0 * rng.normal()).clamp(0.0, 65535.0) as u16;
+        }
+    }
+    Cube::new(bands, rows, cols, data).unwrap()
+}
+
+fn main() -> spacecodesign::Result<()> {
+    println!("== CCSDS-123 downlink compression on the framing FPGA ==\n");
+
+    // Sweep scene depths (scaled-down stand-ins for 680x512x224 AVIRIS).
+    println!(
+        "{:<18} {:>10} {:>10} {:>8} {:>10} {:>12}",
+        "scene", "raw KiB", "coded KiB", "ratio", "bits/smp", "Msamples/s"
+    );
+    for bands in [8usize, 32, 64] {
+        let cube = synthetic_scene(bands, 96, 96, bands as u64);
+        let t0 = std::time::Instant::now();
+        let (bits, stats) = compress(&cube, Params::default())?;
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(decompress(&bits)?, cube, "lossless roundtrip");
+        println!(
+            "{:<18} {:>10.0} {:>10.0} {:>7.2}x {:>10.2} {:>12.2}",
+            format!("{bands}x96x96"),
+            stats.in_bytes as f64 / 1024.0,
+            stats.out_bytes as f64 / 1024.0,
+            stats.ratio,
+            stats.bits_per_sample,
+            cube.samples() as f64 / dt / 1e6
+        );
+    }
+
+    // Downlink budget: what the ratio buys at SpaceWire rates.
+    let cube = synthetic_scene(32, 96, 96, 99);
+    let (_, stats) = compress(&cube, Params::default())?;
+    let spw_mbps = 100.0; // paper §II: 2 SpaceWire links at 100 Mbps
+    let raw_s = stats.in_bytes as f64 * 8.0 / (spw_mbps * 1e6);
+    let coded_s = stats.out_bytes as f64 * 8.0 / (spw_mbps * 1e6);
+    println!(
+        "\ndownlink over {spw_mbps:.0} Mbps SpaceWire: raw {raw_s:.2}s vs coded {coded_s:.2}s \
+         ({:.2}x more scenes per pass)",
+        raw_s / coded_s
+    );
+
+    // The FPGA budget for hosting this next to the interface (Table I).
+    let dev = Device::xcku060();
+    let total = designs::cif_lcd_interface(1024, 1024) + designs::ccsds123(680, 512, 224, 16, 1);
+    let u = dev.utilization(&total);
+    println!(
+        "\nFPGA cost (interface + CCSDS-123 on {}): LUT {:.1}%  DFF {:.1}%  DSP {:.1}%  RAMB {:.1}%",
+        dev.name, u.lut_pct, u.dff_pct, u.dsp_pct, u.bram_pct
+    );
+    println!("compress_downlink OK");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Interface loopback bring-up (paper §IV, first experiment): sweep
+//! frame sizes, pixel depths and clock pairs through CIF -> VPU echo ->
+//! LCD, reporting feasibility, transfer times and integrity — the test
+//! you would run first on real hardware.
+//!
+//! Run: `cargo run --release --example loopback` (no artifacts needed)
+
+use spacecodesign::config::IfaceConfig;
+use spacecodesign::iface::loopback::{paper_sweep, run_loopback};
+use spacecodesign::util::image::PixelFormat;
+
+fn main() {
+    println!("== paper §IV feasibility matrix ==");
+    for (name, r) in paper_sweep() {
+        match r {
+            Ok(rep) => println!(
+                "  {name:<28} OK     cif {:>8}  lcd {:>8}  total {:>8}  intact={} crc={}",
+                rep.cif_time.to_string(),
+                rep.lcd_time.to_string(),
+                rep.total.to_string(),
+                rep.data_intact,
+                rep.crc_ok
+            ),
+            Err(e) => println!("  {name:<28} INFEASIBLE ({e})"),
+        }
+    }
+
+    println!("\n== frequency sweep, 1024x1024 @ 8bpp ==");
+    for mhz in [10.0, 25.0, 50.0, 75.0, 100.0] {
+        let cfg = IfaceConfig {
+            pixel_clock_hz: mhz * 1e6,
+            ..IfaceConfig::paper_50mhz()
+        };
+        match run_loopback(cfg, cfg, 1024, 1024, PixelFormat::Bpp8, 7) {
+            Ok(rep) => println!(
+                "  {mhz:>5.0} MHz: one-way {:>8}  ({:.1} FPS wire rate)",
+                rep.cif_time.to_string(),
+                1.0 / rep.cif_time.as_secs()
+            ),
+            Err(e) => println!("  {mhz:>5.0} MHz: INFEASIBLE ({e})"),
+        }
+    }
+
+    println!("\n== buffer-size sensitivity, 16bpp frames @ CIF 100 MHz ==");
+    for (words, px) in [(512usize, 32usize), (2048, 64), (8192, 128), (32768, 256)] {
+        let mut cif = IfaceConfig::reduced_100mhz(100.0e6);
+        cif.image_buffer_words = words;
+        let mut lcd = IfaceConfig::reduced_100mhz(90.0e6);
+        lcd.image_buffer_words = words;
+        let verdict = match run_loopback(cif, lcd, px, px, PixelFormat::Bpp16, 9) {
+            Ok(_) => "OK",
+            Err(_) => "infeasible",
+        };
+        println!("  {words:>6}-word buffers: {px:>4}x{px:<4} 16bpp -> {verdict}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Quickstart: the smallest end-to-end slice of the stack.
+//!
+//! Loads one AOT Pallas artifact (3x3 convolution on a 128x128 frame),
+//! executes it on the PJRT CPU client from Rust, and checks the numerics
+//! against the scalar groundtruth — the numerics bridge in ~40 lines.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use spacecodesign::dsp::conv::conv2d_f32;
+use spacecodesign::runtime::Runtime;
+use spacecodesign::util::rng::Rng;
+
+fn main() -> spacecodesign::Result<()> {
+    let mut rt = Runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts: {:?}", rt.artifact_names());
+
+    // A random 128x128 image and a normalized 3x3 blur kernel.
+    let mut rng = Rng::new(1);
+    let img: Vec<f32> = (0..128 * 128).map(|_| rng.next_f32()).collect();
+    let mut kern: Vec<f32> = (0..9).map(|_| rng.next_f32()).collect();
+    let s: f32 = kern.iter().sum();
+    kern.iter_mut().for_each(|v| *v /= s);
+
+    // Execute the Pallas conv kernel (lowered at build time by
+    // python/compile/aot.py) through PJRT.
+    let out = rt.execute("conv_128_k3", &[&img, &kern])?;
+
+    // Validate against the independent scalar implementation.
+    let gt = conv2d_f32(&img, 128, 128, &kern, 3)?;
+    let max_err = out[0]
+        .iter()
+        .zip(&gt)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "conv_128_k3 executed: {} outputs, max |err| vs scalar = {max_err:.2e}",
+        out[0].len()
+    );
+    assert!(max_err < 1e-4, "numerics bridge broken");
+    println!("quickstart OK");
+    Ok(())
+}

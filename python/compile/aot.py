@@ -1,0 +1,143 @@
+"""AOT compile path: lower every benchmark graph to HLO text artifacts.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the Rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run: cd python && python -m compile.aot --out ../artifacts
+Idempotent per the Makefile: `make artifacts` only re-runs when compile/
+sources change.
+
+Artifacts produced:
+  <name>.hlo.txt       one per benchmark variant (see `main` below)
+  manifest.json        machine-readable index the Rust runtime loads
+  mesh_<T>.bin         the static render mesh (Rust groundtruth input)
+  cnn_weights.{npz,bin}, cnn_train_log.json   via train_cnn (if absent)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, train_cnn
+
+RENDER_TRIS_FULL = 320    # face budget for the 1024x1024 renderer artifact
+RENDER_TRIS_SMALL = 80
+CNN_GRID = 8              # 8x8 patches of 128x128 over the 1MPixel frame
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    dense constants as `constant({...})`, which silently destroys the baked
+    CNN weights / render mesh when the Rust side re-parses the text.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO printer elided a constant; artifact unusable")
+    return text
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": "f32"}
+
+
+def build_artifact(name: str, fn, specs, out_dir: str, meta: dict) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as fh:
+        fh.write(text)
+    outs = jax.tree_util.tree_leaves(lowered.out_info)
+    entry = {
+        "name": name,
+        "file": fname,
+        "inputs": [_spec_json(s) for s in specs],
+        "outputs": [{"shape": list(o.shape), "dtype": "f32"} for o in outs],
+        "meta": meta,
+    }
+    print(f"  {name:<18} {len(text)/1024:8.0f} KiB  {time.time()-t0:5.1f}s")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int,
+                    default=int(os.environ.get("AOT_TRAIN_STEPS", "400")))
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    print("== AOT: building artifacts ==")
+    params = train_cnn.load_weights(out_dir)
+    if params is None:
+        print("-- no trained CNN weights found; training now --")
+        params = train_cnn.train(args.train_steps, out_dir)
+
+    # Static render meshes, also exported for the Rust groundtruth.
+    verts_f, faces_f = datasets.make_mesh(RENDER_TRIS_FULL)
+    verts_s, faces_s = datasets.make_mesh(RENDER_TRIS_SMALL)
+    datasets.save_mesh_bin(
+        os.path.join(out_dir, f"mesh_{RENDER_TRIS_FULL}.bin"), verts_f, faces_f)
+    datasets.save_mesh_bin(
+        os.path.join(out_dir, f"mesh_{RENDER_TRIS_SMALL}.bin"), verts_s, faces_s)
+
+    entries = []
+
+    def add(name, maker, meta):
+        fn, specs = maker
+        entries.append(build_artifact(name, fn, specs, out_dir, meta))
+
+    add("binning_2048", model.make_binning(2048, 2048),
+        {"bench": "binning", "h": 2048, "w": 2048})
+    add("binning_256", model.make_binning(256, 256),
+        {"bench": "binning", "h": 256, "w": 256})
+
+    for k in (3, 5, 7, 9, 11, 13):
+        add(f"conv_1024_k{k}", model.make_conv(1024, 1024, k),
+            {"bench": "conv", "h": 1024, "w": 1024, "k": k})
+    add("conv_128_k3", model.make_conv(128, 128, 3),
+        {"bench": "conv", "h": 128, "w": 128, "k": 3})
+
+    add("render_1024",
+        model.make_render(1024, 1024, verts_f, faces_f, RENDER_TRIS_FULL),
+        {"bench": "render", "h": 1024, "w": 1024,
+         "n_tris": RENDER_TRIS_FULL, "n_faces": int(len(faces_f)),
+         "mesh_file": f"mesh_{RENDER_TRIS_FULL}.bin"})
+    add("render_128",
+        model.make_render(128, 128, verts_s, faces_s, RENDER_TRIS_SMALL),
+        {"bench": "render", "h": 128, "w": 128,
+         "n_tris": RENDER_TRIS_SMALL, "n_faces": int(len(faces_s)),
+         "mesh_file": f"mesh_{RENDER_TRIS_SMALL}.bin"})
+
+    add("cnn_frame_1024", model.make_cnn_frame(params, grid=CNN_GRID),
+        {"bench": "cnn", "h": CNN_GRID * 128, "w": CNN_GRID * 128,
+         "grid": CNN_GRID, "patch": 128})
+    add("cnn_patch_b1", model.make_cnn_patches(params, 1),
+        {"bench": "cnn_patch", "batch": 1, "patch": 128})
+    add("cnn_patch_b16", model.make_cnn_patches(params, 16),
+        {"bench": "cnn_patch", "batch": 16, "patch": 128})
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

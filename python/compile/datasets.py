@@ -1,0 +1,223 @@
+"""Synthetic workload generators (build-time).
+
+Substitutions for data we cannot download in this environment (DESIGN.md §1):
+
+* `ship_chips` replaces the Kaggle "Ships in Satellite Imagery" dataset:
+  128x128 RGB chips of textured sea, half of which contain a bright
+  elongated hull with a wake. The discriminative structure (oriented
+  high-intensity rectangle vs. correlated low-frequency background)
+  matches the planet-imagery task the paper's CNN was trained on.
+
+* `make_mesh` replaces the paper's (unpublished) triangle mesh model for
+  the Depth Rendering benchmark: a deterministic bumpy icosphere
+  ("asteroid") with a configurable face budget. The same mesh is exported
+  to `artifacts/mesh_*.bin` so the Rust groundtruth rasterizer renders
+  the identical model.
+
+Everything is deterministic given a seed (numpy RandomState), so pytest,
+the AOT artifacts and the Rust side agree.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Ship / sea chips
+# ---------------------------------------------------------------------------
+
+def _sea_background(rs: np.random.RandomState, n: int, size: int) -> np.ndarray:
+    """Correlated bluish sea texture: low-frequency swell + speckle."""
+    yy, xx = np.meshgrid(
+        np.linspace(0, 1, size, dtype=np.float32),
+        np.linspace(0, 1, size, dtype=np.float32),
+        indexing="ij",
+    )
+    img = np.empty((n, size, size, 3), dtype=np.float32)
+    for i in range(n):
+        base = 0.25 + 0.1 * rs.rand()
+        swell = np.zeros((size, size), dtype=np.float32)
+        for _ in range(3):
+            fx, fy = rs.uniform(2, 9, size=2)
+            ph = rs.uniform(0, 2 * np.pi, size=2)
+            swell += np.sin(2 * np.pi * fx * xx + ph[0]) * np.cos(
+                2 * np.pi * fy * yy + ph[1]
+            )
+        swell *= 0.02
+        speckle = rs.randn(size, size).astype(np.float32) * 0.015
+        lum = base + swell + speckle
+        img[i, :, :, 0] = lum * 0.55
+        img[i, :, :, 1] = lum * 0.85
+        img[i, :, :, 2] = lum * 1.0
+    return np.clip(img, 0.0, 1.0)
+
+
+def _paint_ship(rs: np.random.RandomState, chip: np.ndarray) -> None:
+    """Paint one rotated hull + wake into a (S, S, 3) chip, in place."""
+    size = chip.shape[0]
+    cy, cx = rs.uniform(0.3 * size, 0.7 * size, size=2)
+    length = rs.uniform(0.18, 0.42) * size
+    width = length * rs.uniform(0.22, 0.38)
+    theta = rs.uniform(0, np.pi)
+    ct, st = np.cos(theta), np.sin(theta)
+    yy, xx = np.meshgrid(
+        np.arange(size, dtype=np.float32), np.arange(size, dtype=np.float32),
+        indexing="ij",
+    )
+    u = (xx - cx) * ct + (yy - cy) * st      # along hull
+    v = -(xx - cx) * st + (yy - cy) * ct     # across hull
+    # Pointed bow: width tapers toward +u end.
+    taper = np.clip(1.0 - np.maximum(u, 0) / (0.6 * length), 0.25, 1.0)
+    hull = (np.abs(u) < length / 2) & (np.abs(v) < (width / 2) * taper)
+    bright = rs.uniform(0.55, 0.9)
+    for c, tint in enumerate((1.0, 0.97, 0.92)):
+        chip[:, :, c] = np.where(hull, bright * tint, chip[:, :, c])
+    # Deck stripe + wake behind the stern.
+    stripe = hull & (np.abs(v) < width * 0.08)
+    chip[:, :, 0][stripe] *= 0.6
+    wake = (
+        (u < -length / 2)
+        & (u > -length * 1.6)
+        & (np.abs(v) < width * 0.4 * (1 + (-u - length / 2) / length))
+    )
+    wobble = 0.5 + 0.5 * np.sin(u * 0.9)
+    for c in range(3):
+        chip[:, :, c] = np.where(
+            wake, np.minimum(chip[:, :, c] + 0.12 * wobble, 1.0), chip[:, :, c]
+        )
+
+
+def ship_chips(
+    n: int, size: int = 128, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """n chips (n, size, size, 3) float32 in [0,1] + labels (n,) int32."""
+    rs = np.random.RandomState(seed)
+    x = _sea_background(rs, n, size)
+    y = (rs.rand(n) < 0.5).astype(np.int32)
+    for i in range(n):
+        if y[i]:
+            _paint_ship(rs, x[i])
+    return x, y
+
+
+def ship_frame(
+    grid: int = 8, patch: int = 128, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """A (grid*patch, grid*patch, 3) satellite frame tiled from chips.
+
+    Returns the frame and the (grid*grid,) patch labels in row-major patch
+    order — the order the paper's LEON patch-splitter scans.
+    """
+    x, y = ship_chips(grid * grid, size=patch, seed=seed)
+    frame = (
+        x.reshape(grid, grid, patch, patch, 3)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(grid * patch, grid * patch, 3)
+    )
+    return frame, y
+
+
+# ---------------------------------------------------------------------------
+# Triangle mesh ("asteroid" icosphere) for Depth Rendering
+# ---------------------------------------------------------------------------
+
+def _icosahedron() -> tuple[np.ndarray, np.ndarray]:
+    phi = (1.0 + np.sqrt(5.0)) / 2.0
+    v = np.array(
+        [
+            [-1, phi, 0], [1, phi, 0], [-1, -phi, 0], [1, -phi, 0],
+            [0, -1, phi], [0, 1, phi], [0, -1, -phi], [0, 1, -phi],
+            [phi, 0, -1], [phi, 0, 1], [-phi, 0, -1], [-phi, 0, 1],
+        ],
+        dtype=np.float64,
+    )
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    f = np.array(
+        [
+            [0, 11, 5], [0, 5, 1], [0, 1, 7], [0, 7, 10], [0, 10, 11],
+            [1, 5, 9], [5, 11, 4], [11, 10, 2], [10, 7, 6], [7, 1, 8],
+            [3, 9, 4], [3, 4, 2], [3, 2, 6], [3, 6, 8], [3, 8, 9],
+            [4, 9, 5], [2, 4, 11], [6, 2, 10], [8, 6, 7], [9, 8, 1],
+        ],
+        dtype=np.int64,
+    )
+    return v, f
+
+
+def _subdivide(v: np.ndarray, f: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """One loop of midpoint subdivision, re-projected to the unit sphere."""
+    verts = list(map(tuple, v))
+    index = {tuple(np.round(p, 12)): i for i, p in enumerate(v)}
+
+    def midpoint(a: int, b: int) -> int:
+        m = (v[a] + v[b]) / 2.0
+        m = m / np.linalg.norm(m)
+        key = tuple(np.round(m, 12))
+        if key not in index:
+            index[key] = len(verts)
+            verts.append(tuple(m))
+        return index[key]
+
+    out = []
+    for a, b, c in f:
+        ab, bc, ca = midpoint(a, b), midpoint(b, c), midpoint(c, a)
+        out += [[a, ab, ca], [b, bc, ab], [c, ca, bc], [ab, bc, ca]]
+    return np.array(verts, dtype=np.float64), np.array(out, dtype=np.int64)
+
+
+def make_mesh(
+    n_faces: int, seed: int = 7, bumpiness: float = 0.18
+) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic bumpy sphere with at most `n_faces` faces.
+
+    Returns (verts (V,3) f32, faces (F,3) i32). Faces beyond the icosphere
+    subdivision count are trimmed; callers pad triangle arrays with zero
+    rows (rendered as degenerate) up to their static budget.
+    """
+    v, f = _icosahedron()
+    while len(f) * 4 <= n_faces:
+        v, f = _subdivide(v, f)
+    rs = np.random.RandomState(seed)
+    # Deterministic radial bumps: sum of random spherical harmonics-ish lobes.
+    radius = np.ones(len(v))
+    for _ in range(6):
+        d = rs.randn(3)
+        d /= np.linalg.norm(d)
+        radius += bumpiness / 6.0 * np.cos(3.0 * (v @ d) + rs.uniform(0, np.pi))
+    v = v * radius[:, None]
+    if len(f) > n_faces:
+        f = f[:n_faces]
+    return v.astype(np.float32), f.astype(np.int32)
+
+
+def save_mesh_bin(path: str, verts: np.ndarray, faces: np.ndarray) -> None:
+    """Binary mesh interchange with the Rust groundtruth renderer.
+
+    Layout (little endian): magic b"MESH", u32 V, u32 F, then V*3 f32
+    vertices, then F*3 u32 face indices.
+    """
+    with open(path, "wb") as fh:
+        fh.write(b"MESH")
+        fh.write(np.uint32(len(verts)).tobytes())
+        fh.write(np.uint32(len(faces)).tobytes())
+        fh.write(verts.astype("<f4").tobytes())
+        fh.write(faces.astype("<u4").tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Camera poses for the renderer benchmark
+# ---------------------------------------------------------------------------
+
+def sample_poses(n: int, seed: int = 3) -> np.ndarray:
+    """n 6-DoF poses (rx, ry, rz, tx, ty, tz) looking at the model.
+
+    The model sits at the origin; the camera orbits at distance ~3.
+    """
+    rs = np.random.RandomState(seed)
+    poses = np.zeros((n, 6), dtype=np.float32)
+    poses[:, 0:3] = rs.uniform(-0.5, 0.5, size=(n, 3))
+    poses[:, 3] = rs.uniform(-0.4, 0.4, size=n)
+    poses[:, 4] = rs.uniform(-0.4, 0.4, size=n)
+    poses[:, 5] = rs.uniform(2.5, 3.5, size=n)
+    return poses

@@ -1,0 +1,58 @@
+"""Pallas kernel: 2x2 averaging binning with stride 2 (paper §III-C).
+
+Hardware adaptation (see DESIGN.md §7): the paper splits the 2048x2048
+frame into 36 bands and statically assigns 3 bands to each of the 12
+SHAVEs, staging each band in CMX. Here each *band* is one Pallas program
+instance: `grid=(n_bands,)` and the BlockSpec expresses the HBM->VMEM
+(DRAM->CMX analog) schedule. The 12-way core assignment is a scheduling
+concern and lives in the Rust L3 timing model (`vpu/scheduler.rs`), not in
+the kernel.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; interpret mode lowers the grid to plain HLO (while loop +
+dynamic slices), which XLA compiles to fast native code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _binning_kernel(x_ref, o_ref):
+    """One band: (bh, W) -> (bh/2, W/2) mean over 2x2 tiles."""
+    x = x_ref[...]
+    bh, w = x.shape
+    # Sum the four phases; multiply once by 0.25 (cheaper than mean twice).
+    o_ref[...] = (
+        x[0::2, 0::2] + x[0::2, 1::2] + x[1::2, 0::2] + x[1::2, 1::2]
+    ) * 0.25
+
+
+def pick_bands(height: int, preferred: int = 32) -> int:
+    """Largest band count <= preferred that divides H into even-height bands."""
+    for n in range(min(preferred, height // 2), 0, -1):
+        if height % n == 0 and (height // n) % 2 == 0:
+            return n
+    return 1
+
+
+def binning(x: jax.Array, n_bands: int | None = None) -> jax.Array:
+    """Banded 2x2 averaging binning. x: (H, W) float32 -> (H/2, W/2)."""
+    h, w = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"binning requires even dims, got {x.shape}")
+    if n_bands is None:
+        n_bands = pick_bands(h)
+    if h % n_bands or (h // n_bands) % 2:
+        raise ValueError(f"H={h} not divisible into {n_bands} even bands")
+    bh = h // n_bands
+    return pl.pallas_call(
+        _binning_kernel,
+        grid=(n_bands,),
+        in_specs=[pl.BlockSpec((bh, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bh // 2, w // 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h // 2, w // 2), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,140 @@
+"""Pallas kernels: CNN inference layers (paper §III-C, benchmark 4).
+
+The paper runs a 6-layer / 132K-parameter ship-detection CNN on the
+SHAVEs in fp16, one 128x128 patch at a time (LEON splits the 1MPixel
+frame into 64 patches). Our Pallas mapping (DESIGN.md §7):
+
+* one *patch* is one grid step (`grid=(N,)` over the batch) — the analog
+  of LEON dispatching patches to the SHAVE inference engine;
+* the convolution is expressed as K*K channel-contraction `jnp.dot`s over
+  the whole feature map — the MXU-friendly formulation (a (H*W, Cin) x
+  (Cin, Cout) matmul per tap) instead of the GPU-style im2col;
+* weights arrive as ordinary inputs; the AOT path bakes the *trained,
+  fp16-quantized* values in as HLO constants (mirroring the paper's
+  fp32->fp16 conversion with the Myriad2 routines).
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# conv3x3 (same) + bias + ReLU, NHWC, one image per program
+# ---------------------------------------------------------------------------
+
+def _conv_relu_kernel(x_ref, w_ref, b_ref, o_ref, *, h: int, wd: int,
+                      cin: int, cout: int, ksize: int):
+    x = x_ref[0]          # (H+2p, W+2p, Cin) padded patch
+    w = w_ref[...]        # (K, K, Cin, Cout)
+    b = b_ref[...]        # (Cout,)
+    acc = jnp.zeros((h * wd, cout), dtype=jnp.float32)
+    for u in range(ksize):
+        for v in range(ksize):
+            tap = x[u : u + h, v : v + wd, :].reshape(h * wd, cin)
+            # Channel contraction on the MXU: (H*W, Cin) @ (Cin, Cout).
+            acc = acc + jnp.dot(tap, w[u, v])
+    out = jnp.maximum(acc.reshape(h, wd, cout) + b, 0.0)
+    o_ref[0] = out
+
+
+def conv2d_nhwc_relu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """'Same' conv + bias + ReLU. x (N,H,W,Cin) f32, w (K,K,Cin,Cout)."""
+    n, h, wd, cin = x.shape
+    ksize, _, _, cout = w.shape
+    p = ksize // 2
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    kern = functools.partial(
+        _conv_relu_kernel, h=h, wd=wd, cin=cin, cout=cout, ksize=ksize
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h + 2 * p, wd + 2 * p, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((ksize, ksize, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, cout), jnp.float32),
+        interpret=True,
+    )(xp, w, b)
+
+
+# ---------------------------------------------------------------------------
+# 2x2 stride-2 max pool, NHWC, one image per program
+# ---------------------------------------------------------------------------
+
+def _maxpool_kernel(x_ref, o_ref, *, h: int, wd: int, c: int):
+    x = x_ref[0]
+    a = x[0::2, 0::2, :]
+    bq = x[0::2, 1::2, :]
+    cq = x[1::2, 0::2, :]
+    d = x[1::2, 1::2, :]
+    o_ref[0] = jnp.maximum(jnp.maximum(a, bq), jnp.maximum(cq, d))
+
+
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pooling, NHWC."""
+    n, h, wd, c = x.shape
+    kern = functools.partial(_maxpool_kernel, h=h, wd=wd, c=c)
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, wd, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, wd // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h // 2, wd // 2, c), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# dense layer (whole batch in one program — a single MXU matmul)
+# ---------------------------------------------------------------------------
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    out = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = False) -> jax.Array:
+    """x (N, Din) @ w (Din, Dout) + b, optional ReLU."""
+    n, din = x.shape
+    dout = w.shape[1]
+    kern = functools.partial(_dense_kernel, relu=relu)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, din), lambda i: (0, 0)),
+            pl.BlockSpec((din, dout), lambda i: (0, 0)),
+            pl.BlockSpec((dout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, dout), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dout), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# full forward pass (kernel composition — the L2 graph calls this)
+# ---------------------------------------------------------------------------
+
+def cnn_forward(params: dict, x: jax.Array) -> jax.Array:
+    """6-layer ship CNN forward pass built from the Pallas kernels above."""
+    h = x
+    for i in range(4):
+        h = conv2d_nhwc_relu(h, params[f"conv{i}_w"], params[f"conv{i}_b"])
+        h = maxpool2x2(h)
+    n = h.shape[0]
+    h = h.reshape(n, -1)
+    h = dense(h, params["fc0_w"], params["fc0_b"], relu=True)
+    return dense(h, params["fc1_w"], params["fc1_b"], relu=False)

@@ -1,0 +1,72 @@
+"""Pallas kernel: floating-point 2-D convolution, K in 3..13 (paper §III-C).
+
+Banding mirrors the paper's SHAVE decomposition: the image is split into
+row bands; each band is one Pallas program. Because 'same' convolution
+needs a halo of K//2 rows around each band, the wrapper zero-pads the
+input once and every program loads its band *plus halo* from the padded
+array with a dynamic-slice read (the BlockSpec hands the whole padded
+frame to the program; the explicit read expresses the CMX staging window —
+on a real TPU this would be the VMEM slab per program, see DESIGN.md §7).
+
+The inner loop is fully unrolled over the K*K taps: each tap is one
+vectorized multiply-accumulate over the (bh, W) band — the Pallas analog
+of the SHAVE SIMD MAC loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_band_kernel(x_ref, k_ref, o_ref, *, bh: int, width: int, ksize: int):
+    """One output band (bh, W) from a padded input band (bh+2p, W+2p)."""
+    i = pl.program_id(0)
+    p = ksize // 2
+    # Load this band's rows plus halo from the padded frame.
+    xb = x_ref[pl.dslice(i * bh, bh + 2 * p), :]
+    k = k_ref[...]
+    acc = jnp.zeros((bh, width), dtype=jnp.float32)
+    for u in range(ksize):  # statically unrolled taps
+        for v in range(ksize):
+            acc = acc + xb[u : u + bh, v : v + width] * k[u, v]
+    o_ref[...] = acc
+
+
+def pick_bands(height: int, preferred: int = 16) -> int:
+    for n in range(min(preferred, height), 0, -1):
+        if height % n == 0:
+            return n
+    return 1
+
+
+def conv2d(x: jax.Array, k: jax.Array, n_bands: int | None = None) -> jax.Array:
+    """'Same' banded 2-D cross-correlation. x (H, W) f32, k (K, K) f32."""
+    h, w = x.shape
+    ksize = k.shape[0]
+    if k.shape != (ksize, ksize) or ksize % 2 == 0:
+        raise ValueError(f"kernel must be odd square, got {k.shape}")
+    if n_bands is None:
+        n_bands = pick_bands(h)
+    if h % n_bands:
+        raise ValueError(f"H={h} not divisible into {n_bands} bands")
+    bh = h // n_bands
+    p = ksize // 2
+    xp = jnp.pad(x, ((p, p), (p, p)))
+    kern = functools.partial(_conv_band_kernel, bh=bh, width=w, ksize=ksize)
+    return pl.pallas_call(
+        kern,
+        grid=(n_bands,),
+        in_specs=[
+            # Whole padded frame visible to every program; the kernel's
+            # pl.load expresses the per-band staging window.
+            pl.BlockSpec((h + 2 * p, w + 2 * p), lambda i: (0, 0)),
+            pl.BlockSpec((ksize, ksize), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(xp, k)

@@ -1,0 +1,157 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness contracts: pytest (and hypothesis sweeps) assert
+`kernel(x) ≈ ref(x)` for all shapes/dtypes the AOT path exports. They are
+also the *training-time* implementations (the CNN trains against the ref
+ops, which are cleanly differentiable; the Pallas kernels are inference
+only, matching the paper where training happens offline in TensorFlow and
+inference runs on the SHAVEs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Averaging binning (paper §III-C, benchmark 1)
+# ---------------------------------------------------------------------------
+
+def binning_ref(x: jax.Array) -> jax.Array:
+    """2x2 averaging binning with stride 2.
+
+    Matches the paper's kernel: each output pixel is the mean of a 2x2
+    input region. Input (H, W) float32, output (H/2, W/2) float32.
+    """
+    h, w = x.shape
+    return x.reshape(h // 2, 2, w // 2, 2).mean(axis=(1, 3))
+
+
+# ---------------------------------------------------------------------------
+# Floating-point 2-D convolution (paper §III-C, benchmark 2)
+# ---------------------------------------------------------------------------
+
+def conv2d_ref(x: jax.Array, k: jax.Array) -> jax.Array:
+    """'Same' 2-D cross-correlation with zero padding.
+
+    The paper's "FP convolution" is the standard DSP filtering kernel; we
+    use cross-correlation orientation (filter applied as stored), which is
+    what the SHAVE inner loop computes. Input (H, W), kernel (K, K), both
+    float32; output (H, W) float32.
+    """
+    kh, kw = k.shape
+    out = lax.conv_general_dilated(
+        x[None, None, :, :],
+        k[None, None, :, :],
+        window_strides=(1, 1),
+        padding=((kh // 2, kh // 2), (kw // 2, kw // 2)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Depth rendering (paper §III-C, benchmark 3)
+# ---------------------------------------------------------------------------
+
+BACKGROUND_DEPTH = jnp.float32(1.0e9)
+
+
+def depth_render_ref(tris: jax.Array, height: int, width: int) -> jax.Array:
+    """Rasterizing depth renderer, scan over triangles.
+
+    `tris` is (T, 9) screen-space triangle data: columns are
+    x0,y0,x1,y1,x2,y2,d0,d1,d2 where (xi, yi) are projected pixel
+    coordinates and di the camera distance at vertex i. Output is an
+    (H, W) float32 z-buffer holding the nearest camera distance per pixel
+    (BACKGROUND_DEPTH where no triangle covers the pixel).
+
+    Degenerate (zero-area) triangles are ignored, so callers can pad the
+    triangle list to a static size with zeros.
+    """
+    ys = jnp.arange(height, dtype=jnp.float32)[:, None] + 0.5
+    xs = jnp.arange(width, dtype=jnp.float32)[None, :] + 0.5
+
+    def body(z, tri):
+        x0, y0, x1, y1, x2, y2, d0, d1, d2 = tri
+        # Signed edge functions (twice the signed sub-triangle areas).
+        w0 = (x2 - x1) * (ys - y1) - (y2 - y1) * (xs - x1)
+        w1 = (x0 - x2) * (ys - y2) - (y0 - y2) * (xs - x2)
+        w2 = (x1 - x0) * (ys - y0) - (y1 - y0) * (xs - x0)
+        area = (x1 - x0) * (y2 - y0) - (y1 - y0) * (x2 - x0)
+        # Inside test that works for both windings; degenerate -> empty.
+        pos = (w0 >= 0) & (w1 >= 0) & (w2 >= 0) & (area > 1e-12)
+        neg = (w0 <= 0) & (w1 <= 0) & (w2 <= 0) & (area < -1e-12)
+        inside = pos | neg
+        safe_area = jnp.where(jnp.abs(area) > 1e-12, area, 1.0)
+        b0 = w0 / safe_area
+        b1 = w1 / safe_area
+        b2 = w2 / safe_area
+        depth = b0 * d0 + b1 * d1 + b2 * d2
+        cand = jnp.where(inside, depth, BACKGROUND_DEPTH)
+        return jnp.minimum(z, cand), None
+
+    z0 = jnp.full((height, width), BACKGROUND_DEPTH, dtype=jnp.float32)
+    z, _ = lax.scan(body, z0, tris)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# CNN ship detection (paper §III-C, benchmark 4)
+# ---------------------------------------------------------------------------
+
+def conv2d_nhwc_relu_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """'Same' NHWC conv + bias + ReLU. x (N,H,W,Cin), w (K,K,Cin,Cout)."""
+    kh, kw = w.shape[0], w.shape[1]
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding=((kh // 2, kh // 2), (kw // 2, kw // 2)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jnp.maximum(out + b, 0.0)
+
+
+def maxpool2x2_ref(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pooling, NHWC."""
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer: x (N, Din) @ w (Din, Dout) + b."""
+    return x @ w + b
+
+
+def cnn_forward_ref(params: dict, x: jax.Array) -> jax.Array:
+    """Forward pass of the 6-layer ship-detection CNN (paper: 132K params).
+
+    Architecture (4 conv + 2 dense = 6 weight layers, ~132K parameters):
+      conv3x3  3->8   + ReLU + maxpool   128 -> 64
+      conv3x3  8->16  + ReLU + maxpool    64 -> 32
+      conv3x3 16->32  + ReLU + maxpool    32 -> 16
+      conv3x3 32->32  + ReLU + maxpool    16 -> 8
+      dense 2048 -> 57 + ReLU
+      dense   57 -> 2  (logits)
+    """
+    h = x
+    for i in range(4):
+        h = conv2d_nhwc_relu_ref(h, params[f"conv{i}_w"], params[f"conv{i}_b"])
+        h = maxpool2x2_ref(h)
+    n = h.shape[0]
+    h = h.reshape(n, -1)
+    h = jnp.maximum(dense_ref(h, params["fc0_w"], params["fc0_b"]), 0.0)
+    return dense_ref(h, params["fc1_w"], params["fc1_b"])
+
+
+CNN_CHANNELS = (3, 8, 16, 32, 32)
+CNN_HIDDEN = 57
+CNN_CLASSES = 2
+CNN_INPUT = 128
+
+
+def cnn_param_count(params: dict) -> int:
+    return sum(int(p.size) for p in params.values())

@@ -1,0 +1,88 @@
+"""Pallas kernel: rasterizing depth renderer (paper §III-C, benchmark 3).
+
+The paper renders a triangle-mesh model into a 1024x1024 16-bit depth
+image on the SHAVEs: each core rasterizes row bands (dynamically queued),
+using SIMD for the edge/barycentric math, with one Z-buffer working set in
+CMX and the static model in DRAM.
+
+Pallas mapping (DESIGN.md §7): one program per row band (`grid=(n_bands,)`),
+the band's Z-buffer is the program's output block (the CMX working buffer
+analog), and the triangle array — the "static model in DRAM" — is handed
+whole to every program. A `fori_loop` walks the triangles; all pixel math
+inside an iteration is vectorized over the (bh, W) band, the SIMD analog.
+TPU grids are static, so the paper's *dynamic* band queue is modelled in
+the L3 scheduler's timing (`vpu/scheduler.rs::DynamicQueue`), not here.
+
+Screen-space triangle data is precomputed by the L2 model (projection is
+part of the benchmark graph, see model.py): rows of `tris` are
+(x0,y0,x1,y1,x2,y2,d0,d1,d2). Zero rows are degenerate padding and render
+nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain python float: jnp scalars may not be captured as constants by a
+# Pallas kernel body.
+BACKGROUND_DEPTH = 1.0e9
+
+
+def _render_band_kernel(tris_ref, o_ref, *, bh: int, width: int, n_tris: int):
+    i = pl.program_id(0)
+    band_y0 = (i * bh).astype(jnp.float32)
+    ys = jnp.arange(bh, dtype=jnp.float32)[:, None] + 0.5 + band_y0
+    xs = jnp.arange(width, dtype=jnp.float32)[None, :] + 0.5
+
+    def body(t, z):
+        tri = tris_ref[t, :]
+        x0, y0, x1, y1, x2, y2, d0, d1, d2 = (tri[j] for j in range(9))
+        w0 = (x2 - x1) * (ys - y1) - (y2 - y1) * (xs - x1)
+        w1 = (x0 - x2) * (ys - y2) - (y0 - y2) * (xs - x2)
+        w2 = (x1 - x0) * (ys - y0) - (y1 - y0) * (xs - x0)
+        area = (x1 - x0) * (y2 - y0) - (y1 - y0) * (x2 - x0)
+        pos = (w0 >= 0) & (w1 >= 0) & (w2 >= 0) & (area > 1e-12)
+        neg = (w0 <= 0) & (w1 <= 0) & (w2 <= 0) & (area < -1e-12)
+        inside = pos | neg
+        safe_area = jnp.where(jnp.abs(area) > 1e-12, area, 1.0)
+        depth = (w0 * d0 + w1 * d1 + w2 * d2) / safe_area
+        return jnp.minimum(z, jnp.where(inside, depth, BACKGROUND_DEPTH))
+
+    z0 = jnp.full((bh, width), BACKGROUND_DEPTH, dtype=jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, n_tris, body, z0)
+
+
+def pick_bands(height: int, preferred: int = 16) -> int:
+    for n in range(min(preferred, height), 0, -1):
+        if height % n == 0:
+            return n
+    return 1
+
+
+def depth_render(
+    tris: jax.Array, height: int, width: int, n_bands: int | None = None
+) -> jax.Array:
+    """Rasterize (T, 9) screen-space triangles into an (H, W) f32 z-buffer."""
+    n_tris = tris.shape[0]
+    if tris.shape != (n_tris, 9):
+        raise ValueError(f"tris must be (T, 9), got {tris.shape}")
+    if n_bands is None:
+        n_bands = pick_bands(height)
+    if height % n_bands:
+        raise ValueError(f"H={height} not divisible into {n_bands} bands")
+    bh = height // n_bands
+    kern = functools.partial(
+        _render_band_kernel, bh=bh, width=width, n_tris=n_tris
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n_bands,),
+        in_specs=[pl.BlockSpec((n_tris, 9), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bh, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((height, width), jnp.float32),
+        interpret=True,
+    )(tris)

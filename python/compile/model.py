@@ -1,0 +1,163 @@
+"""L2: the benchmark compute graphs, built on the Pallas kernels.
+
+Each `make_*` factory returns a jax-jittable function for one benchmark
+variant; `aot.py` lowers these to HLO text for the Rust runtime. The
+graphs mirror the paper's VPU-side processing exactly:
+
+* binning / conv2d — the frame arrives from CIF as one array, is processed
+  in bands (inside the kernel grid), and leaves via LCD.
+* depth rendering — the *input* is just the 6-DoF pose (the paper's "6x1
+  vector", <1 us over CIF); the static mesh model lives "in DRAM", i.e. it
+  is baked into the artifact as an HLO constant. Projection (triangle
+  setup) happens on the graph, rasterization in the Pallas kernel.
+* CNN ship detection — the frame is split into 64 128x128 patches (the
+  paper's LEON-side splitter) and pushed through the 6-layer CNN with the
+  trained, fp16-quantized weights baked in as constants.
+
+All coordinate/projection math here is mirrored bit-for-bit in the Rust
+groundtruth (`rust/src/render/camera.rs`); change both or neither.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import binning as kbin
+from .kernels import conv2d as kconv
+from .kernels import render as krender
+from .kernels import cnn as kcnn
+
+# Camera intrinsics for the depth renderer (see camera.rs for the mirror).
+FOCAL_SCALE = 1.1     # focal length = FOCAL_SCALE * width
+ZNEAR = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Benchmark 1: averaging binning
+# ---------------------------------------------------------------------------
+
+def make_binning(h: int, w: int):
+    def fn(x):
+        return kbin.binning(x)
+
+    return fn, (jax.ShapeDtypeStruct((h, w), jnp.float32),)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark 2: FP convolution
+# ---------------------------------------------------------------------------
+
+def make_conv(h: int, w: int, k: int):
+    def fn(x, kern):
+        return kconv.conv2d(x, kern)
+
+    return fn, (
+        jax.ShapeDtypeStruct((h, w), jnp.float32),
+        jax.ShapeDtypeStruct((k, k), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Benchmark 3: depth rendering
+# ---------------------------------------------------------------------------
+
+def euler_to_matrix(rx, ry, rz):
+    """R = Rz @ Ry @ Rx, applied to column vectors (world -> camera)."""
+    cx, sx = jnp.cos(rx), jnp.sin(rx)
+    cy, sy = jnp.cos(ry), jnp.sin(ry)
+    cz, sz = jnp.cos(rz), jnp.sin(rz)
+    rmx = jnp.array([[1, 0, 0], [0, cx, -sx], [0, sx, cx]], dtype=jnp.float32)
+    rmy = jnp.array([[cy, 0, sy], [0, 1, 0], [-sy, 0, cy]], dtype=jnp.float32)
+    rmz = jnp.array([[cz, -sz, 0], [sz, cz, 0], [0, 0, 1]], dtype=jnp.float32)
+    return rmz @ rmy @ rmx
+
+
+def project_triangles(pose, verts, faces, width: int, height: int, n_tris: int):
+    """Triangle setup: 6-DoF pose + static mesh -> (T, 9) screen triangles.
+
+    Camera convention: camera at t, looking along its -z axis;
+    c = R @ (v - t); z' = -c.z; screen x = f*c.x/z' + W/2 (y likewise);
+    vertex depth = |c|. Faces with any vertex at z' <= ZNEAR are zeroed
+    (degenerate -> not rasterized). The triangle array is padded with zero
+    rows to the static budget `n_tris`.
+    """
+    rot = euler_to_matrix(pose[0], pose[1], pose[2])
+    t = pose[3:6]
+    cam = (verts - t[None, :]) @ rot.T            # (V, 3) camera coords
+    zp = -cam[:, 2]
+    focal = jnp.float32(FOCAL_SCALE * width)
+    safe_z = jnp.where(zp > ZNEAR, zp, 1.0)
+    sx = focal * cam[:, 0] / safe_z + width * 0.5
+    sy = focal * cam[:, 1] / safe_z + height * 0.5
+    dist = jnp.sqrt(jnp.sum(cam * cam, axis=1))
+
+    f = faces                                     # (F, 3) int32
+    tri = jnp.stack(
+        [
+            sx[f[:, 0]], sy[f[:, 0]],
+            sx[f[:, 1]], sy[f[:, 1]],
+            sx[f[:, 2]], sy[f[:, 2]],
+            dist[f[:, 0]], dist[f[:, 1]], dist[f[:, 2]],
+        ],
+        axis=1,
+    )
+    valid = (zp[f[:, 0]] > ZNEAR) & (zp[f[:, 1]] > ZNEAR) & (zp[f[:, 2]] > ZNEAR)
+    tri = jnp.where(valid[:, None], tri, 0.0)
+    pad = n_tris - tri.shape[0]
+    if pad < 0:
+        raise ValueError(f"mesh has {tri.shape[0]} faces > budget {n_tris}")
+    if pad:
+        tri = jnp.concatenate([tri, jnp.zeros((pad, 9), jnp.float32)], axis=0)
+    return tri
+
+
+def make_render(h: int, w: int, verts: np.ndarray, faces: np.ndarray, n_tris: int):
+    verts_c = jnp.asarray(verts, dtype=jnp.float32)
+    faces_c = jnp.asarray(faces.astype(np.int32))
+
+    def fn(pose):
+        tris = project_triangles(pose, verts_c, faces_c, w, h, n_tris)
+        return krender.depth_render(tris, h, w)
+
+    return fn, (jax.ShapeDtypeStruct((6,), jnp.float32),)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark 4: CNN ship detection
+# ---------------------------------------------------------------------------
+
+def quantize_fp16(params: dict) -> dict:
+    """Paper §III-C: fp32 weights converted to 16-bit FP for the VPU."""
+    return {k: jnp.asarray(np.asarray(v, np.float16), jnp.float32)
+            for k, v in params.items()}
+
+
+def make_cnn_patches(params: dict, n: int, size: int = 128):
+    q = quantize_fp16(params)
+
+    def fn(x):
+        return kcnn.cnn_forward(q, x)
+
+    return fn, (jax.ShapeDtypeStruct((n, size, size, 3), jnp.float32),)
+
+
+def make_cnn_frame(params: dict, grid: int = 8, patch: int = 128):
+    """Full-frame inference: (grid*patch)^2 RGB frame -> (grid^2, 2) logits.
+
+    The reshape/transpose implements the paper's LEON patch splitter in
+    row-major patch order.
+    """
+    q = quantize_fp16(params)
+    side = grid * patch
+
+    def fn(frame):
+        patches = (
+            frame.reshape(grid, patch, grid, patch, 3)
+            .transpose(0, 2, 1, 3, 4)
+            .reshape(grid * grid, patch, patch, 3)
+        )
+        return kcnn.cnn_forward(q, patches)
+
+    return fn, (jax.ShapeDtypeStruct((side, side, 3), jnp.float32),)

@@ -1,0 +1,177 @@
+"""Build-time trainer for the ship-detection CNN (paper §III-C).
+
+The paper trains a 6-layer / 132K-parameter CNN in TensorFlow on the
+Kaggle "Ships in Satellite Imagery" chips (96.8 % accuracy) and deploys
+the fp16-converted weights on the SHAVEs. We reproduce the regime on the
+synthetic chip generator (see datasets.py for the substitution argument),
+with a hand-rolled Adam (optax is not in the offline image).
+
+Outputs (all under artifacts/):
+  cnn_weights.npz   — float32 parameters (training precision)
+  cnn_weights.bin   — flat binary for the Rust scalar (LEON-baseline)
+                      inference engine; fp16-quantized like the artifact
+  cnn_train_log.json — steps, losses, train/test accuracy
+
+Run: cd python && python -m compile.train_cnn [--steps N] [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import datasets
+from .kernels import ref
+
+
+def init_params(seed: int = 0) -> dict:
+    """He-initialized parameters for the 6-layer CNN."""
+    rs = np.random.RandomState(seed)
+    ch = ref.CNN_CHANNELS
+    params = {}
+    for i in range(4):
+        fan_in = 9 * ch[i]
+        params[f"conv{i}_w"] = (
+            rs.randn(3, 3, ch[i], ch[i + 1]) * np.sqrt(2.0 / fan_in)
+        ).astype(np.float32)
+        params[f"conv{i}_b"] = np.zeros(ch[i + 1], np.float32)
+    feat = (ref.CNN_INPUT // 16) ** 2 * ch[4]
+    params["fc0_w"] = (rs.randn(feat, ref.CNN_HIDDEN) * np.sqrt(2.0 / feat)).astype(
+        np.float32
+    )
+    params["fc0_b"] = np.zeros(ref.CNN_HIDDEN, np.float32)
+    params["fc1_w"] = (
+        rs.randn(ref.CNN_HIDDEN, ref.CNN_CLASSES) * np.sqrt(2.0 / ref.CNN_HIDDEN)
+    ).astype(np.float32)
+    params["fc1_b"] = np.zeros(ref.CNN_CLASSES, np.float32)
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+def loss_fn(params, x, y):
+    logits = ref.cnn_forward_ref(params, x)
+    logz = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logz, y[:, None], axis=1).mean()
+    return nll, logits
+
+
+# --- hand-rolled Adam ------------------------------------------------------
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+@jax.jit
+def train_step(params, opt, x, y):
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x, y)
+    params, opt = adam_update(params, grads, opt)
+    acc = (logits.argmax(axis=1) == y).mean()
+    return params, opt, loss, acc
+
+
+@jax.jit
+def eval_logits(params, x):
+    return ref.cnn_forward_ref(params, x)
+
+
+def accuracy(params, x, y, batch: int = 64) -> float:
+    hits = 0
+    for i in range(0, len(x), batch):
+        logits = eval_logits(params, x[i : i + batch])
+        hits += int((np.asarray(logits).argmax(axis=1) == y[i : i + batch]).sum())
+    return hits / len(x)
+
+
+def save_weights_bin(path: str, params: dict) -> None:
+    """Rust interchange: magic CNNW, u32 count, per tensor
+    (u32 name_len, name, u32 ndim, u32 dims..., f32 data LE)."""
+    keys = sorted(params.keys())
+    with open(path, "wb") as fh:
+        fh.write(b"CNNW")
+        fh.write(np.uint32(len(keys)).tobytes())
+        for k in keys:
+            arr = np.asarray(params[k], np.float32)
+            # fp16 quantization, matching the deployed artifact.
+            arr = arr.astype(np.float16).astype(np.float32)
+            name = k.encode()
+            fh.write(np.uint32(len(name)).tobytes())
+            fh.write(name)
+            fh.write(np.uint32(arr.ndim).tobytes())
+            fh.write(np.asarray(arr.shape, "<u4").tobytes())
+            fh.write(arr.astype("<f4").tobytes())
+
+
+def train(steps: int, out_dir: str, seed: int = 0, batch: int = 32,
+          n_train: int = 1536, n_test: int = 512, verbose: bool = True) -> dict:
+    t0 = time.time()
+    xtr, ytr = datasets.ship_chips(n_train, seed=seed + 100)
+    xte, yte = datasets.ship_chips(n_test, seed=seed + 999)
+    xtr_j = jnp.asarray(xtr)
+    ytr_j = jnp.asarray(ytr)
+
+    params = init_params(seed)
+    n_params = ref.cnn_param_count(params)
+    opt = adam_init(params)
+    rs = np.random.RandomState(seed + 1)
+    log = {"steps": steps, "n_params": n_params, "losses": [], "train_acc": []}
+    for step in range(steps):
+        idx = rs.randint(0, n_train, size=batch)
+        params, opt, loss, acc = train_step(params, opt, xtr_j[idx], ytr_j[idx])
+        if step % 20 == 0 or step == steps - 1:
+            log["losses"].append([step, float(loss)])
+            log["train_acc"].append([step, float(acc)])
+            if verbose:
+                print(f"step {step:4d}  loss {float(loss):.4f}  acc {float(acc):.3f}")
+
+    params_np = {k: np.asarray(v) for k, v in params.items()}
+    test_acc = accuracy(params, jnp.asarray(xte), yte)
+    log["test_acc"] = test_acc
+    log["train_time_s"] = time.time() - t0
+    if verbose:
+        print(f"test accuracy {test_acc:.3f} ({n_params} params, "
+              f"{log['train_time_s']:.1f}s)")
+
+    os.makedirs(out_dir, exist_ok=True)
+    np.savez(os.path.join(out_dir, "cnn_weights.npz"), **params_np)
+    save_weights_bin(os.path.join(out_dir, "cnn_weights.bin"), params_np)
+    with open(os.path.join(out_dir, "cnn_train_log.json"), "w") as fh:
+        json.dump(log, fh, indent=1)
+    return params_np
+
+
+def load_weights(out_dir: str) -> dict | None:
+    path = os.path.join(out_dir, "cnn_weights.npz")
+    if not os.path.exists(path):
+        return None
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    train(args.steps, args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

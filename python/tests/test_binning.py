@@ -1,0 +1,76 @@
+"""Pallas binning kernel vs pure-jnp oracle (the core L1 contract)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binning, ref
+
+
+def rand(h, w, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).rand(h, w).astype(np.float32))
+
+
+@pytest.mark.parametrize("h,w", [(4, 4), (64, 64), (128, 256), (256, 128)])
+def test_matches_ref(h, w):
+    x = rand(h, w)
+    np.testing.assert_allclose(
+        binning.binning(x), ref.binning_ref(x), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_explicit_values():
+    x = jnp.asarray([[1.0, 2.0, 5.0, 7.0], [3.0, 4.0, 9.0, 11.0]], jnp.float32)
+    out = binning.binning(x)
+    np.testing.assert_allclose(out, [[2.5, 8.0]])
+
+
+def test_band_counts_agree():
+    x = rand(96, 64, seed=3)
+    full = binning.binning(x, n_bands=1)
+    for n in (2, 3, 4, 6, 8):
+        np.testing.assert_allclose(binning.binning(x, n_bands=n), full, rtol=1e-6)
+
+
+def test_rejects_odd_dims():
+    with pytest.raises(ValueError):
+        binning.binning(rand(5, 4).reshape(5, 4)[:5])
+    with pytest.raises(ValueError):
+        binning.binning(rand(4, 6)[:, :5])
+
+
+def test_rejects_bad_band_split():
+    with pytest.raises(ValueError):
+        binning.binning(rand(8, 8), n_bands=3)
+
+
+def test_pick_bands_invariants():
+    for h in (2, 4, 6, 64, 96, 2048):
+        n = binning.pick_bands(h)
+        assert h % n == 0 and (h // n) % 2 == 0, (h, n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h2=st.integers(1, 32),
+    w2=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_matches_ref(h2, w2, seed):
+    x = rand(2 * h2, 2 * w2, seed=seed)
+    np.testing.assert_allclose(
+        binning.binning(x), ref.binning_ref(x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_preserves_constant_image():
+    x = jnp.full((32, 32), 7.25, jnp.float32)
+    np.testing.assert_allclose(binning.binning(x), jnp.full((16, 16), 7.25))
+
+
+def test_output_range_bounded_by_input():
+    x = rand(64, 64, seed=9)
+    out = np.asarray(binning.binning(x))
+    assert out.min() >= float(x.min()) - 1e-6
+    assert out.max() <= float(x.max()) + 1e-6

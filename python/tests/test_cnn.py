@@ -1,0 +1,123 @@
+"""Pallas CNN layers + forward pass vs oracles; architecture invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import cnn, ref
+from compile.train_cnn import init_params
+
+
+def rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+    )
+
+
+# --- individual layers -----------------------------------------------------
+
+@pytest.mark.parametrize("cin,cout", [(3, 8), (8, 16), (16, 32), (32, 32)])
+def test_conv_layer_matches_ref(cin, cout):
+    x = rand((2, 16, 16, cin), seed=cin)
+    w = rand((3, 3, cin, cout), seed=cout, scale=0.2)
+    b = rand((cout,), seed=cin + cout, scale=0.1)
+    np.testing.assert_allclose(
+        cnn.conv2d_nhwc_relu(x, w, b),
+        ref.conv2d_nhwc_relu_ref(x, w, b),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_conv_layer_relu_clamps():
+    x = rand((1, 8, 8, 3), seed=1)
+    w = rand((3, 3, 3, 4), seed=2)
+    b = jnp.full((4,), -100.0, jnp.float32)
+    out = np.asarray(cnn.conv2d_nhwc_relu(x, w, b))
+    assert (out == 0).all()
+
+
+def test_maxpool_matches_ref():
+    x = rand((3, 16, 16, 8), seed=4)
+    np.testing.assert_allclose(cnn.maxpool2x2(x), ref.maxpool2x2_ref(x))
+
+
+def test_maxpool_explicit():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    out = np.asarray(cnn.maxpool2x2(x))[0, :, :, 0]
+    np.testing.assert_array_equal(out, [[5, 7], [13, 15]])
+
+
+def test_dense_matches_ref():
+    x = rand((4, 32), seed=5)
+    w = rand((32, 7), seed=6)
+    b = rand((7,), seed=7)
+    np.testing.assert_allclose(
+        cnn.dense(x, w, b), ref.dense_ref(x, w, b), rtol=1e-5, atol=1e-5
+    )
+    relu = np.asarray(cnn.dense(x, w, b, relu=True))
+    assert (relu >= 0).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([8, 16]),
+    cin=st.sampled_from([1, 3, 8]),
+    cout=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_conv_layer(n, hw, cin, cout, seed):
+    x = rand((n, hw, hw, cin), seed=seed)
+    w = rand((3, 3, cin, cout), seed=seed ^ 1, scale=0.2)
+    b = rand((cout,), seed=seed ^ 2, scale=0.1)
+    np.testing.assert_allclose(
+        cnn.conv2d_nhwc_relu(x, w, b),
+        ref.conv2d_nhwc_relu_ref(x, w, b),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+# --- full network ----------------------------------------------------------
+
+def test_param_count_matches_paper():
+    params = init_params()
+    n = ref.cnn_param_count(params)
+    # Paper: "6-layer network (132K parameters)".
+    assert 130_000 <= n <= 134_000, n
+
+
+def test_forward_matches_ref():
+    params = init_params(seed=3)
+    x = jnp.asarray(
+        np.random.RandomState(8).rand(2, 128, 128, 3).astype(np.float32)
+    )
+    np.testing.assert_allclose(
+        cnn.cnn_forward(params, x),
+        ref.cnn_forward_ref(params, x),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+def test_fp16_quantization_is_close_but_not_identity():
+    params = init_params(seed=4)
+    q = model.quantize_fp16(params)
+    w, wq = np.asarray(params["fc0_w"]), np.asarray(q["fc0_w"])
+    assert not np.array_equal(w, wq)          # quantization really happened
+    np.testing.assert_allclose(w, wq, rtol=1e-2, atol=1e-4)
+
+
+def test_frame_splitter_order_matches_chips():
+    """make_cnn_frame must classify patches in the generator's label order."""
+    from compile import datasets
+
+    frame, labels = datasets.ship_frame(grid=2, patch=128, seed=5)
+    params = init_params(seed=0)
+    fn, _ = model.make_cnn_frame(params, grid=2)
+    logits_frame = np.asarray(fn(jnp.asarray(frame)))
+    chips, labels2 = datasets.ship_chips(4, seed=5)
+    np.testing.assert_array_equal(labels, labels2)
+    fn_p, _ = model.make_cnn_patches(params, 4)
+    logits_patches = np.asarray(fn_p(jnp.asarray(chips)))
+    np.testing.assert_allclose(logits_frame, logits_patches, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,88 @@
+"""Pallas FP-convolution kernel vs pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, ref
+
+
+def rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        (np.random.RandomState(seed).rand(*shape) * scale).astype(np.float32)
+    )
+
+
+@pytest.mark.parametrize("k", [3, 5, 7, 9, 11, 13])
+def test_matches_ref_all_paper_kernel_sizes(k):
+    x = rand((64, 64), seed=k)
+    kern = rand((k, k), seed=100 + k)
+    np.testing.assert_allclose(
+        conv2d.conv2d(x, kern), ref.conv2d_ref(x, kern), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_identity_kernel():
+    x = rand((32, 48), seed=1)
+    kern = jnp.zeros((3, 3), jnp.float32).at[1, 1].set(1.0)
+    np.testing.assert_allclose(conv2d.conv2d(x, kern), x, rtol=1e-6)
+
+
+def test_box_blur_of_constant():
+    x = jnp.ones((16, 16), jnp.float32)
+    kern = jnp.full((3, 3), 1.0 / 9.0, jnp.float32)
+    out = np.asarray(conv2d.conv2d(x, kern))
+    # Interior pixels average nine ones.
+    np.testing.assert_allclose(out[1:-1, 1:-1], 1.0, rtol=1e-5)
+    # Zero-padded border sees fewer taps.
+    assert out[0, 0] < 0.5
+
+
+def test_band_counts_agree():
+    x = rand((96, 64), seed=2)
+    kern = rand((5, 5), seed=3)
+    full = conv2d.conv2d(x, kern, n_bands=1)
+    for n in (2, 3, 4, 8):
+        np.testing.assert_allclose(
+            conv2d.conv2d(x, kern, n_bands=n), full, rtol=1e-5, atol=1e-5
+        )
+
+
+def test_rejects_even_kernel():
+    with pytest.raises(ValueError):
+        conv2d.conv2d(rand((8, 8)), rand((4, 4)))
+
+
+def test_rejects_nonsquare_kernel():
+    with pytest.raises(ValueError):
+        conv2d.conv2d(rand((8, 8)), rand((3, 5)))
+
+
+def test_rejects_bad_band_split():
+    with pytest.raises(ValueError):
+        conv2d.conv2d(rand((10, 8)), rand((3, 3)), n_bands=4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.integers(2, 12).map(lambda v: v * 8),
+    w=st.integers(1, 8).map(lambda v: v * 8),
+    k=st.sampled_from([3, 5, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_matches_ref(h, w, k, seed):
+    x = rand((h, w), seed=seed)
+    kern = rand((k, k), seed=seed ^ 0x5A5A, scale=0.5)
+    np.testing.assert_allclose(
+        conv2d.conv2d(x, kern), ref.conv2d_ref(x, kern), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_linearity():
+    """conv(a*x + b*y) == a*conv(x) + b*conv(y)"""
+    x, y = rand((32, 32), seed=5), rand((32, 32), seed=6)
+    kern = rand((5, 5), seed=7)
+    lhs = conv2d.conv2d(2.0 * x + 3.0 * y, kern)
+    rhs = 2.0 * conv2d.conv2d(x, kern) + 3.0 * conv2d.conv2d(y, kern)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)

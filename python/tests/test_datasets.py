@@ -1,0 +1,70 @@
+"""Synthetic workload generators: determinism and task structure."""
+
+import numpy as np
+
+from compile import datasets
+
+
+def test_ship_chips_deterministic():
+    x1, y1 = datasets.ship_chips(8, seed=42)
+    x2, y2 = datasets.ship_chips(8, seed=42)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_ship_chips_shapes_and_range():
+    x, y = datasets.ship_chips(16, size=64, seed=1)
+    assert x.shape == (16, 64, 64, 3) and x.dtype == np.float32
+    assert y.shape == (16,) and set(np.unique(y)) <= {0, 1}
+    assert 0.0 <= x.min() and x.max() <= 1.0
+
+
+def test_ship_chips_balanced():
+    _, y = datasets.ship_chips(400, seed=2)
+    assert 120 < y.sum() < 280
+
+
+def test_ships_are_visibly_brighter():
+    """The discriminative signal the CNN learns must exist."""
+    x, y = datasets.ship_chips(200, seed=3)
+    bright = x.max(axis=(1, 2, 3))
+    ship_bright = bright[y == 1].mean()
+    sea_bright = bright[y == 0].mean()
+    assert ship_bright > sea_bright + 0.1
+
+
+def test_ship_frame_tiles_in_label_order():
+    frame, labels = datasets.ship_frame(grid=2, patch=64, seed=7)
+    chips, labels2 = datasets.ship_chips(4, size=64, seed=7)
+    np.testing.assert_array_equal(labels, labels2)
+    assert frame.shape == (128, 128, 3)
+    # Row-major patch order.
+    np.testing.assert_array_equal(frame[:64, :64], chips[0])
+    np.testing.assert_array_equal(frame[:64, 64:], chips[1])
+    np.testing.assert_array_equal(frame[64:, :64], chips[2])
+    np.testing.assert_array_equal(frame[64:, 64:], chips[3])
+
+
+def test_mesh_budget_respected():
+    for budget in (20, 80, 320, 1280):
+        _, faces = datasets.make_mesh(budget)
+        assert len(faces) <= budget
+        assert len(faces) >= budget * 0.2     # not degenerate either
+
+
+def test_mesh_faces_reference_valid_vertices():
+    verts, faces = datasets.make_mesh(320)
+    assert faces.min() >= 0 and faces.max() < len(verts)
+    # No zero-area faces in the generated mesh itself.
+    v = verts[faces]
+    cross = np.cross(v[:, 1] - v[:, 0], v[:, 2] - v[:, 0])
+    areas = np.linalg.norm(cross, axis=1)
+    assert (areas > 1e-6).all()
+
+
+def test_sample_poses_look_at_model():
+    poses = datasets.sample_poses(32)
+    assert poses.shape == (32, 6)
+    assert (poses[:, 5] > 2.0).all()          # camera in front, +z
+    p2 = datasets.sample_poses(32)
+    np.testing.assert_array_equal(poses, p2)  # deterministic

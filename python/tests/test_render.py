@@ -1,0 +1,139 @@
+"""Pallas depth-render kernel + projection graph vs oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets, model
+from compile.kernels import render, ref
+
+BG = render.BACKGROUND_DEPTH
+
+
+def tri_array(rows, budget=8):
+    out = np.zeros((budget, 9), np.float32)
+    for i, r in enumerate(rows):
+        out[i] = r
+    return jnp.asarray(out)
+
+
+def test_single_triangle_coverage_and_depth():
+    tris = tri_array([[4, 4, 60, 4, 4, 60, 2.0, 2.0, 2.0]])
+    z = np.asarray(render.depth_render(tris, 64, 64))
+    inside = z < BG / 2
+    assert 1000 < inside.sum() < 2000          # ~half the 56x56 bbox
+    np.testing.assert_allclose(z[inside], 2.0, rtol=1e-5)
+
+
+def test_zbuffer_takes_nearest():
+    # Two overlapping triangles, the second closer.
+    far = [0, 0, 63, 0, 0, 63, 9.0, 9.0, 9.0]
+    near = [0, 0, 63, 0, 0, 63, 4.0, 4.0, 4.0]
+    z = np.asarray(render.depth_render(tri_array([far, near]), 64, 64))
+    covered = z < BG / 2
+    np.testing.assert_allclose(z[covered], 4.0, rtol=1e-5)
+
+
+def test_degenerate_padding_renders_nothing():
+    z = np.asarray(render.depth_render(tri_array([]), 32, 32))
+    assert (z == BG).all()
+
+
+def test_winding_independence():
+    ccw = [4, 4, 60, 4, 32, 60, 1.0, 2.0, 3.0]
+    cw = [4, 4, 32, 60, 60, 4, 1.0, 3.0, 2.0]
+    z1 = np.asarray(render.depth_render(tri_array([ccw]), 64, 64))
+    z2 = np.asarray(render.depth_render(tri_array([cw]), 64, 64))
+    np.testing.assert_allclose(z1, z2, rtol=1e-4, atol=1e-3)
+
+
+def test_band_counts_agree():
+    rs = np.random.RandomState(0)
+    rows = [
+        [*rs.uniform(0, 64, 6), *rs.uniform(1, 5, 3)] for _ in range(6)
+    ]
+    tris = tri_array(rows, budget=8)
+    full = render.depth_render(tris, 64, 64, n_bands=1)
+    for n in (2, 4, 8, 16):
+        np.testing.assert_allclose(
+            render.depth_render(tris, 64, 64, n_bands=n), full, rtol=1e-5
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 12))
+def test_hypothesis_matches_ref(seed, n):
+    rs = np.random.RandomState(seed)
+    rows = [[*rs.uniform(-8, 72, 6), *rs.uniform(0.5, 9, 3)] for _ in range(n)]
+    tris = tri_array(rows, budget=16)
+    a = render.depth_render(tris, 64, 64)
+    b = ref.depth_render_ref(tris, 64, 64)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-2)
+
+
+# --- projection graph (the L2 half of the render benchmark) ---------------
+
+def test_projection_centers_model():
+    verts, faces = datasets.make_mesh(80)
+    pose = jnp.asarray([0, 0, 0, 0, 0, 3.0], jnp.float32)
+    tris = np.asarray(
+        model.project_triangles(pose, jnp.asarray(verts),
+                                jnp.asarray(faces), 128, 128, 80)
+    )
+    live = tris[np.abs(tris).sum(axis=1) > 0]
+    assert len(live) == len(faces)
+    xs = live[:, [0, 2, 4]]
+    ys = live[:, [1, 3, 5]]
+    assert 20 < xs.mean() < 108 and 20 < ys.mean() < 108
+    # Camera distance ~3 for every vertex of the unit-ish model.
+    assert ((live[:, 6:] > 1.5) & (live[:, 6:] < 4.8)).all()
+
+
+def test_projection_culls_behind_camera():
+    verts, faces = datasets.make_mesh(80)
+    # Camera at -3 on z, still looking along -z: model is behind.
+    pose = jnp.asarray([0, 0, 0, 0, 0, -3.0], jnp.float32)
+    tris = np.asarray(
+        model.project_triangles(pose, jnp.asarray(verts),
+                                jnp.asarray(faces), 128, 128, 80)
+    )
+    assert (tris == 0).all()
+
+
+def test_full_render_graph_vs_ref():
+    verts, faces = datasets.make_mesh(80)
+    fn, _specs = model.make_render(96, 96, verts, faces, 80)
+    pose = jnp.asarray(datasets.sample_poses(1)[0])
+    z = np.asarray(fn(pose))
+    tris = model.project_triangles(
+        pose, jnp.asarray(verts), jnp.asarray(faces), 96, 96, 80
+    )
+    zr = np.asarray(ref.depth_render_ref(tris, 96, 96))
+    np.testing.assert_allclose(z, zr, rtol=1e-4, atol=1e-2)
+    # The model must actually appear.
+    assert (z < BG / 2).sum() > 200
+
+
+def test_mesh_generator_properties():
+    verts, faces = datasets.make_mesh(320)
+    assert faces.shape == (320, 3)
+    assert faces.max() < len(verts)
+    norms = np.linalg.norm(verts, axis=1)
+    assert 0.5 < norms.min() and norms.max() < 1.5
+    # Deterministic.
+    v2, f2 = datasets.make_mesh(320)
+    np.testing.assert_array_equal(verts, v2)
+    np.testing.assert_array_equal(faces, f2)
+
+
+def test_mesh_bin_roundtrip(tmp_path):
+    verts, faces = datasets.make_mesh(80)
+    p = str(tmp_path / "m.bin")
+    datasets.save_mesh_bin(p, verts, faces)
+    raw = open(p, "rb").read()
+    assert raw[:4] == b"MESH"
+    v, f = np.frombuffer(raw[4:8], "<u4")[0], np.frombuffer(raw[8:12], "<u4")[0]
+    assert (v, f) == (len(verts), len(faces))
+    vb = np.frombuffer(raw[12 : 12 + v * 12], "<f4").reshape(v, 3)
+    np.testing.assert_array_equal(vb, verts)

@@ -1,0 +1,78 @@
+"""Trainer: loss goes down, weights serialize, .bin format is parseable."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import train_cnn
+from compile.kernels import ref
+
+
+def test_short_training_reduces_loss(tmp_path):
+    params = train_cnn.train(
+        steps=30, out_dir=str(tmp_path), seed=0, batch=16,
+        n_train=64, n_test=32, verbose=False,
+    )
+    import json
+
+    log = json.load(open(tmp_path / "cnn_train_log.json"))
+    losses = [l for _, l in log["losses"]]
+    assert losses[-1] < losses[0]
+    assert (tmp_path / "cnn_weights.npz").exists()
+    assert (tmp_path / "cnn_weights.bin").exists()
+
+
+def test_weights_npz_roundtrip(tmp_path):
+    train_cnn.train(steps=2, out_dir=str(tmp_path), seed=1, batch=8,
+                    n_train=16, n_test=8, verbose=False)
+    params = train_cnn.load_weights(str(tmp_path))
+    assert params is not None
+    assert ref.cnn_param_count(params) == 132_189
+    x = jnp.asarray(np.random.RandomState(0).rand(1, 128, 128, 3), jnp.float32)
+    logits = ref.cnn_forward_ref({k: jnp.asarray(v) for k, v in params.items()}, x)
+    assert logits.shape == (1, 2)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_weights_bin_format(tmp_path):
+    """Parse the Rust interchange format back in numpy."""
+    train_cnn.train(steps=1, out_dir=str(tmp_path), seed=2, batch=8,
+                    n_train=16, n_test=8, verbose=False)
+    raw = open(tmp_path / "cnn_weights.bin", "rb").read()
+    assert raw[:4] == b"CNNW"
+    n = np.frombuffer(raw[4:8], "<u4")[0]
+    assert n == 12  # 4 conv w+b pairs + 2 dense w+b pairs
+    off = 8
+    names = []
+    total = 0
+    for _ in range(n):
+        ln = np.frombuffer(raw[off : off + 4], "<u4")[0]
+        off += 4
+        names.append(raw[off : off + ln].decode())
+        off += ln
+        nd = np.frombuffer(raw[off : off + 4], "<u4")[0]
+        off += 4
+        dims = np.frombuffer(raw[off : off + 4 * nd], "<u4")
+        off += 4 * nd
+        sz = int(np.prod(dims))
+        vals = np.frombuffer(raw[off : off + 4 * sz], "<f4")
+        off += 4 * sz
+        total += sz
+        # fp16-quantized: every value must be exactly representable in fp16.
+        np.testing.assert_array_equal(vals, vals.astype(np.float16).astype(np.float32))
+    assert off == len(raw)
+    assert total == 132_189
+    assert names == sorted(names)
+
+
+def test_adam_step_moves_params():
+    params = train_cnn.init_params(seed=0)
+    opt = train_cnn.adam_init(params)
+    x = jnp.asarray(np.random.RandomState(1).rand(4, 128, 128, 3), jnp.float32)
+    y = jnp.asarray([0, 1, 0, 1])
+    new, _, loss, _ = train_cnn.train_step(params, opt, x, y)
+    assert float(loss) > 0
+    moved = any(
+        not np.array_equal(np.asarray(params[k]), np.asarray(new[k]))
+        for k in params
+    )
+    assert moved

@@ -1,0 +1,72 @@
+//! Bench: regenerate paper Fig. 5 (VPU power per benchmark) and the §IV
+//! FPS/W comparisons against LEON and the cited devices.
+//!
+//! Run: `make artifacts && cargo bench --bench fig5_power`
+
+use spacecodesign::coordinator::{comparators, Benchmark, CoProcessor};
+
+fn main() {
+    let mut cp = match CoProcessor::with_defaults() {
+        Ok(cp) => cp,
+        Err(e) => {
+            eprintln!("fig5_power needs artifacts (`make artifacts`): {e}");
+            return;
+        }
+    };
+
+    println!("== Fig. 5: power per benchmark (paper: SHAVE 0.8-1.0 W, LEON 0.6-0.7 W) ==\n");
+    println!(
+        "{:<22} {:>9} {:>9} | {:>13} {:>13} {:>8}",
+        "benchmark", "SHAVE W", "LEON W", "SHAVE FPS/W", "LEON FPS/W", "ratio"
+    );
+    let mut cnn_fpsw = 0.0;
+    for bench in Benchmark::table2() {
+        let run = cp.run_unmasked(bench, 42).expect("run");
+        let leon_w = cp.power.leon_power(bench.kind());
+        let shave_fpsw = run.fps_per_watt();
+        let leon_fpsw = 1.0 / run.t_leon.as_secs() / leon_w;
+        println!(
+            "{:<22} {:>9.2} {:>9.2} | {:>13.2} {:>13.3} {:>7.1}x",
+            run.bench.name(),
+            run.power_w,
+            leon_w,
+            shave_fpsw,
+            leon_fpsw,
+            shave_fpsw / leon_fpsw
+        );
+        if bench == Benchmark::CnnShip {
+            cnn_fpsw = 1.0 / run.t_proc.as_secs() / run.power_w;
+        }
+    }
+    println!("\n(paper: FPS/W ratio ~11x for binning, up to ~58x for FP conv)");
+
+    println!("\n== §IV device comparisons (CNN ship detection) ==");
+    let mut cp2 = CoProcessor::with_defaults().unwrap();
+    let cnn_run = cp2.run_unmasked(Benchmark::CnnShip, 42).unwrap();
+    let vpu = comparators::vpu_point(1.0 / cnn_run.t_proc.as_secs(), cnn_run.power_w);
+    for d in [
+        vpu,
+        comparators::zynq7020_cnn(),
+        comparators::jetson_nano_cnn(),
+    ] {
+        println!(
+            "  {:<32} {:>6.2} FPS @ {:>4.2} W = {:>6.2} FPS/W",
+            d.device,
+            d.fps,
+            d.watts,
+            d.fps_per_watt()
+        );
+    }
+    println!(
+        "  -> Zynq/VPU ratio {:.1}x (paper ~2.5x), VPU/Jetson ratio {:.1}x (paper ~4x)",
+        comparators::zynq7020_cnn().fps_per_watt() / cnn_fpsw,
+        cnn_fpsw / comparators::jetson_nano_cnn().fps_per_watt()
+    );
+
+    println!("\n== binning throughput vs 1-pipe Zynq (paper: ~3x) ==");
+    let b = comparators::zynq_binning_1pipe();
+    println!(
+        "  Zynq model: {:.1} processing-FPS; VPU system-level 9.1 FPS vs Zynq end-to-end ~3 FPS",
+        b.fps
+    );
+}

@@ -1,0 +1,141 @@
+//! Bench: wallclock microbenchmarks of the crate's hot paths — the
+//! targets of the §Perf optimization pass (EXPERIMENTS.md).
+//!
+//! Run: `make artifacts && cargo bench --bench hotpath`
+
+use spacecodesign::compress::{compress, Cube, Params};
+use spacecodesign::fabric::crc16::Crc16Xmodem;
+use spacecodesign::fabric::width;
+use spacecodesign::iface::signals::WireFrame;
+use spacecodesign::render;
+use spacecodesign::runtime::Runtime;
+use spacecodesign::util::image::{Frame, PixelFormat};
+use spacecodesign::util::rng::Rng;
+use spacecodesign::util::stats::{bench, bench_row};
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // --- CRC-16 over a 1 MPixel 8bpp frame -----------------------------
+    let mut bytes = vec![0u8; 1 << 20];
+    rng.fill_bytes(&mut bytes);
+    let s = bench(3, 12, || {
+        std::hint::black_box(Crc16Xmodem::checksum(&bytes));
+    });
+    println!(
+        "{}  ({:.0} MB/s)",
+        bench_row("crc16 1 MiB", &s),
+        1.0 / s.median
+    );
+
+    // --- wire frame build + check (CRC both directions) ----------------
+    let frame = Frame::from_data(
+        1024,
+        1024,
+        PixelFormat::Bpp16,
+        (0..1024 * 1024).map(|_| rng.next_u32() & 0xFFFF).collect(),
+    )
+    .unwrap();
+    let s = bench(2, 10, || {
+        let wire = WireFrame::from_frame(&frame);
+        std::hint::black_box(wire.to_frame().unwrap());
+    });
+    println!("{}", bench_row("wireframe roundtrip 1MP 16bpp", &s));
+
+    // --- width conversion FSM paths -------------------------------------
+    let pixels: Vec<u32> = (0..1 << 20).map(|_| rng.next_u32() & 0xFFFF).collect();
+    let s = bench(2, 10, || {
+        let words = width::pack_words(&pixels, PixelFormat::Bpp16).unwrap();
+        std::hint::black_box(
+            width::unpack_words(&words, PixelFormat::Bpp16, pixels.len()).unwrap(),
+        );
+    });
+    println!("{}", bench_row("width pack+unpack 1 Mpx 16bpp", &s));
+
+    // --- scalar groundtruth kernels -------------------------------------
+    let img: Vec<f32> = (0..1024 * 1024).map(|_| rng.next_f32()).collect();
+    let s = bench(1, 5, || {
+        std::hint::black_box(
+            spacecodesign::dsp::binning::binning_f32(&img, 1024, 1024).unwrap(),
+        );
+    });
+    println!("{}", bench_row("scalar binning 1MP", &s));
+
+    let kern: Vec<f32> = (0..49).map(|_| rng.next_f32() / 49.0).collect();
+    let small: Vec<f32> = (0..256 * 256).map(|_| rng.next_f32()).collect();
+    let s = bench(1, 5, || {
+        std::hint::black_box(
+            spacecodesign::dsp::conv::conv2d_f32(&small, 256, 256, &kern, 7).unwrap(),
+        );
+    });
+    println!("{}", bench_row("scalar conv7 256x256", &s));
+
+    // --- rasterizer ------------------------------------------------------
+    let mesh = render::Mesh::octahedron();
+    let pose = render::Pose {
+        rx: 0.2,
+        ry: 0.1,
+        rz: 0.0,
+        tx: 0.0,
+        ty: 0.0,
+        tz: 3.0,
+    };
+    let tris = render::project_triangles(&pose, &mesh, 1024, 1024, 8);
+    let s = bench(2, 8, || {
+        std::hint::black_box(render::depth_render(&tris, 1024, 1024));
+    });
+    println!("{}", bench_row("scalar raster 1MP (8 tris)", &s));
+
+    // --- CCSDS-123 compressor -------------------------------------------
+    let cube = {
+        let mut data = vec![0u16; 16 * 64 * 64];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = (2000 + (i % 613) * 3 + (rng.next_u32() % 60) as usize) as u16;
+        }
+        Cube::new(16, 64, 64, data).unwrap()
+    };
+    let s = bench(2, 8, || {
+        std::hint::black_box(compress(&cube, Params::default()).unwrap());
+    });
+    println!(
+        "{}  ({:.2} Msamples/s)",
+        bench_row("ccsds123 compress 16x64x64", &s),
+        cube.samples() as f64 / s.median / 1e6
+    );
+
+    // --- PJRT execution (the real numerics hot path) ---------------------
+    let Ok(mut rt) = Runtime::open_default() else {
+        eprintln!("(skipping PJRT benches: artifacts not built)");
+        return;
+    };
+    let x256: Vec<f32> = (0..256 * 256).map(|_| rng.next_f32()).collect();
+    let s = bench(2, 10, || {
+        std::hint::black_box(rt.execute("binning_256", &[&x256]).unwrap());
+    });
+    println!("{}", bench_row("pjrt binning_256", &s));
+
+    let x1m: Vec<f32> = (0..2048 * 2048).map(|_| rng.next_f32()).collect();
+    let s = bench(1, 5, || {
+        std::hint::black_box(rt.execute("binning_2048", &[&x1m]).unwrap());
+    });
+    println!("{}", bench_row("pjrt binning_2048", &s));
+
+    let ximg: Vec<f32> = (0..1024 * 1024).map(|_| rng.next_f32()).collect();
+    let k13: Vec<f32> = (0..169).map(|_| rng.next_f32() / 169.0).collect();
+    let s = bench(1, 3, || {
+        std::hint::black_box(rt.execute("conv_1024_k13", &[&ximg, &k13]).unwrap());
+    });
+    println!("{}", bench_row("pjrt conv_1024_k13", &s));
+
+    let pose6 = [0.1f32, -0.2, 0.0, 0.1, 0.0, 3.0];
+    let s = bench(1, 3, || {
+        std::hint::black_box(rt.execute("render_1024", &[&pose6]).unwrap());
+    });
+    println!("{}", bench_row("pjrt render_1024", &s));
+
+    let chip: Vec<f32> = (0..128 * 128 * 3).map(|_| rng.next_f32()).collect();
+    let s = bench(1, 5, || {
+        std::hint::black_box(rt.execute("cnn_patch_b1", &[&chip]).unwrap());
+    });
+    println!("{}", bench_row("pjrt cnn_patch_b1", &s));
+}

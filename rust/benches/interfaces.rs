@@ -1,0 +1,64 @@
+//! Bench: the §IV loopback experiments — feasibility matrix, frequency
+//! scaling, and wallclock cost of the interface simulation itself.
+//!
+//! Run: `cargo bench --bench interfaces` (no artifacts needed)
+
+use spacecodesign::config::IfaceConfig;
+use spacecodesign::iface::loopback::{paper_sweep, run_loopback};
+use spacecodesign::util::image::PixelFormat;
+use spacecodesign::util::stats;
+
+fn main() {
+    println!("== paper §IV loopback feasibility ==");
+    for (name, r) in paper_sweep() {
+        match r {
+            Ok(rep) => println!(
+                "  {name:<28} OK     cif {:>9}  lcd {:>9}  intact={} crc={}",
+                rep.cif_time.to_string(),
+                rep.lcd_time.to_string(),
+                rep.data_intact,
+                rep.crc_ok
+            ),
+            Err(_) => println!("  {name:<28} INFEASIBLE (as in the paper)"),
+        }
+    }
+
+    println!("\n== wire-rate scaling (1 MPixel 8bpp, one-way) ==");
+    for mhz in [10.0f64, 25.0, 50.0, 75.0, 100.0] {
+        let cfg = IfaceConfig {
+            pixel_clock_hz: mhz * 1e6,
+            ..IfaceConfig::paper_50mhz()
+        };
+        if let Ok(rep) = run_loopback(cfg, cfg, 1024, 1024, PixelFormat::Bpp8, 3) {
+            println!(
+                "  {mhz:>5.0} MHz: {:>9}  ({:>5.1} frames/s wire rate)",
+                rep.cif_time.to_string(),
+                1.0 / rep.cif_time.as_secs()
+            );
+        } else {
+            println!("  {mhz:>5.0} MHz: infeasible at paper buffers");
+        }
+    }
+
+    println!("\n== simulator wallclock (hot paths, host-side) ==");
+    let cfg = IfaceConfig::paper_50mhz();
+    let s = stats::bench(2, 10, || {
+        run_loopback(cfg, cfg, 1024, 1024, PixelFormat::Bpp16, 7).unwrap();
+    });
+    println!("{}", stats::bench_row("loopback 1MP 16bpp (full roundtrip)", &s));
+
+    let s = stats::bench(2, 10, || {
+        run_loopback(cfg, cfg, 2048, 2048, PixelFormat::Bpp8, 8).unwrap();
+    });
+    println!("{}", stats::bench_row("loopback 4MP 8bpp (full roundtrip)", &s));
+
+    // Simulated-vs-wallclock ratio: how much faster than real time the
+    // interface simulation runs.
+    let rep = run_loopback(cfg, cfg, 2048, 2048, PixelFormat::Bpp8, 8).unwrap();
+    println!(
+        "  simulated round-trip {} in {} wallclock (x{:.1} real time)",
+        rep.total,
+        spacecodesign::util::fmt_time(s.median),
+        rep.total.as_secs() / s.median
+    );
+}

@@ -1,0 +1,94 @@
+//! Bench: the paper's §IV acceleration results — LEON baseline vs the
+//! 12-SHAVE implementations, including the render content-dependence
+//! spread (10-16x) and the conv arithmetic-intensity trend.
+//!
+//! Run: `make artifacts && cargo bench --bench speedups`
+
+use spacecodesign::coordinator::{report, Benchmark, CoProcessor};
+
+fn main() {
+    let mut cp = match CoProcessor::with_defaults() {
+        Ok(cp) => cp,
+        Err(e) => {
+            eprintln!("speedups needs artifacts (`make artifacts`): {e}");
+            return;
+        }
+    };
+
+    println!("== speedups vs single LEON (paper: binning 14x, conv up to 75x,");
+    println!("   render 10-16x content-dependent, CNN >100x projected) ==\n");
+    for bench in Benchmark::table2() {
+        let run = cp.run_unmasked(bench, 42).expect("run");
+        println!("{}", report::speedup_row(&run));
+    }
+
+    println!("\n== conv: speedup vs arithmetic intensity ==");
+    for k in [3usize, 5, 7, 9, 11, 13] {
+        let run = cp.run_unmasked(Benchmark::Conv { k }, 42).unwrap();
+        println!(
+            "  {k:>2}x{k:<2} ({:>4} taps): {:>5.1}x",
+            k * k,
+            run.speedup()
+        );
+    }
+
+    println!("\n== render: content dependence across poses ==");
+    let mut speedups = Vec::new();
+    for seed in 0..10u64 {
+        let t_shave = cp.proc_time(Benchmark::Render, seed).unwrap();
+        let t_leon = cp.leon_time(Benchmark::Render, seed).unwrap();
+        let s = t_leon.as_secs() / t_shave.as_secs();
+        speedups.push(s);
+        println!(
+            "  pose #{seed}: SHAVE {:>8}  LEON {:>8}  speedup {s:>5.1}x",
+            t_shave.to_string(),
+            t_leon.to_string()
+        );
+    }
+    let (lo, hi) = (
+        speedups.iter().cloned().fold(f64::MAX, f64::min),
+        speedups.iter().cloned().fold(f64::MIN, f64::max),
+    );
+    println!("  spread: {lo:.1}x .. {hi:.1}x (paper: 10-16x)");
+
+    println!("\n== scheduling: static vs dynamic bands for render ==");
+    use spacecodesign::vpu::{cost::BenchKind, scheduler};
+    let cm = &cp.cost;
+    for seed in [1u64, 4, 7] {
+        // Rebuild the workload through the public path.
+        let t_dyn = cp.proc_time(Benchmark::Render, seed).unwrap();
+        // Static comparison on the same content.
+        let w = {
+            // proc_time used dynamic; reconstruct bands via cost model.
+            // (render bands depend on pose; use proc_time as the dynamic
+            // reference and compute static with the same band vector).
+            let mesh_dir = cp.runtime.manifest.dir.clone();
+            let spec = cp.runtime.manifest.get("render_1024").unwrap();
+            let mesh = spacecodesign::render::Mesh::load(
+                mesh_dir.join(spec.meta_str("mesh_file").unwrap()),
+            )
+            .unwrap();
+            let pose = spacecodesign::coordinator::host::render_pose(seed);
+            let tris = spacecodesign::render::project_triangles(
+                &pose, &mesh, 1024, 1024, mesh.faces.len(),
+            );
+            spacecodesign::vpu::cost::Workload {
+                out_elems: 1 << 20,
+                in_elems: 6,
+                band_bbox_px: spacecodesign::render::camera::band_bbox_px(
+                    &tris, 1024, 1024, 32,
+                ),
+                n_tris: mesh.faces.len(),
+                patches: 0,
+            }
+        };
+        let bands = cm.band_cycles(BenchKind::Render, &w, 32);
+        let t_static = scheduler::static_makespan(&bands, 12, 600.0e6);
+        println!(
+            "  pose #{seed}: dynamic {} vs static {}  ({:.0}% saved)",
+            t_dyn,
+            t_static,
+            100.0 * (1.0 - t_dyn.as_secs() / t_static.as_secs())
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Bench: regenerate paper Table I (FPGA resource utilization) and run
+//! ablation sweeps over the design parameters.
+//!
+//! Run: `cargo bench --bench table1_resources`
+
+use spacecodesign::fpga::{designs, Device};
+
+fn main() {
+    let dev = Device::xcku060();
+    println!("== Table I: resource utilization on {} ==", dev.name);
+    println!(
+        "{:<34} {:>6} {:>6} {:>6} {:>6}   {:>26}   paper",
+        "design", "LUT%", "DFF%", "DSP%", "RAMB%", "(LUT/DFF/DSP/RAMB counts)"
+    );
+    let rows: Vec<(&str, spacecodesign::fpga::ResourceCount, &str)> = vec![
+        ("CIF/LCD Interface", designs::cif_lcd_interface(1024, 1024), "1 / 0.3 / 0.3 / 0.6"),
+        ("CCSDS-123 (680x512x224, 16bpp)", designs::ccsds123(680, 512, 224, 16, 1), "11 / 6 / 0.2 / 6"),
+        ("FIR Filter (64-tap, 16bpp)", designs::fir_filter(64, 16), "0.5 / 0.5 / 2 / 0"),
+        ("Harris Corner Det. (1024x32)", designs::harris(1024, 32), "2 / 2 / 2 / 6"),
+    ];
+    for (name, r, paper) in &rows {
+        let u = dev.utilization(r);
+        println!(
+            "{:<34} {:>5.1}% {:>5.1}% {:>5.1}% {:>5.1}%   {:>8}/{:>7}/{:>5}/{:>5}   {}",
+            name, u.lut_pct, u.dff_pct, u.dsp_pct, u.bram_pct, r.luts, r.dffs, r.dsps, r.brams, paper
+        );
+    }
+
+    let total = rows.iter().fold(
+        spacecodesign::fpga::ResourceCount::default(),
+        |acc, (_, r, _)| acc + *r,
+    );
+    let u = dev.utilization(&total);
+    println!(
+        "{:<34} {:>5.1}% {:>5.1}% {:>5.1}% {:>5.1}%   (all designs combined: fits={})",
+        "TOTAL", u.lut_pct, u.dff_pct, u.dsp_pct, u.bram_pct, dev.fits(&total)
+    );
+
+    println!("\n== ablation: FIR taps -> DSP scaling ==");
+    for taps in [16u64, 32, 64, 128, 256] {
+        let r = designs::fir_filter(taps, 16);
+        let u = dev.utilization(&r);
+        println!("  {taps:>4}-tap: {:>4} DSP ({:.2}%)  {:>5} LUT", r.dsps, u.dsp_pct, r.luts);
+    }
+
+    println!("\n== ablation: CCSDS-123 parallel lanes ==");
+    for p in [1u64, 2, 4, 8] {
+        let r = designs::ccsds123(680, 512, 224, 16, p);
+        let u = dev.utilization(&r);
+        println!(
+            "  {p} lane(s): LUT {:>6.1}%  DFF {:>5.1}%  RAMB {:>5.1}%  fits={}",
+            u.lut_pct, u.dff_pct, u.bram_pct, dev.fits(&r)
+        );
+    }
+
+    println!("\n== ablation: Harris band width -> BRAM ==");
+    for w in [512u64, 1024, 2048, 4096] {
+        let r = designs::harris(w, 32);
+        println!("  {w:>5}-wide band: {:>4} RAMB ({:.1}%)", r.brams, dev.utilization(&r).bram_pct);
+    }
+
+    println!("\n== devices: same designs on the lab FPGA and a small SoC ==");
+    for d in [Device::xc7vx485t(), Device::zynq7020()] {
+        let u = d.utilization(&total);
+        println!(
+            "  {:<12} LUT {:>6.1}%  DFF {:>5.1}%  DSP {:>5.1}%  RAMB {:>6.1}%  fits={}",
+            d.name, u.lut_pct, u.dff_pct, u.dsp_pct, u.bram_pct, d.fits(&total)
+        );
+    }
+}

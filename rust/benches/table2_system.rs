@@ -1,0 +1,76 @@
+//! Bench: regenerate paper Table II (the full-system evaluation) plus
+//! the conv kernel-size sweep and an I/O-frequency ablation.
+//!
+//! Run: `make artifacts && cargo bench --bench table2_system`
+
+use spacecodesign::bench_model::analytic;
+use spacecodesign::config::SystemConfig;
+use spacecodesign::coordinator::{report, Benchmark, CoProcessor};
+
+fn main() {
+    let mut cp = match CoProcessor::with_defaults() {
+        Ok(cp) => cp,
+        Err(e) => {
+            eprintln!("table2_system needs artifacts (`make artifacts`): {e}");
+            return;
+        }
+    };
+
+    println!("== Table II: FPGA & VPU co-processing with CIF/LCD @ 50 MHz ==");
+    println!("(paper values: 109/50/71/156/185/721 ms unmasked latency; ");
+    println!(" 9.1/20/14.1/6.4/5.4/1.4 FPS unmasked; 3.2/8/8/8/6.1/1.5 FPS masked)\n");
+    println!("{}", report::table2_header());
+    for bench in Benchmark::table2() {
+        let (run, masked) = cp.run_both_modes(bench, 42, 32).expect("run");
+        println!("{}", report::table2_row(&run, &masked));
+        assert!(run.validation.pass && run.crc_ok, "{bench:?} failed validation");
+    }
+
+    println!("\n== conv kernel-size sweep (3..13, incl. sizes the paper omits) ==");
+    for k in [3usize, 5, 7, 9, 11, 13] {
+        let (run, masked) = cp.run_both_modes(Benchmark::Conv { k }, 42, 32).unwrap();
+        println!(
+            "  {k:>2}x{k:<2}: VPU {:>7}  unmasked {:>5.1} FPS  masked {:>4.1} FPS  speedup {:>5.1}x",
+            run.t_proc.to_string(),
+            run.throughput_fps,
+            masked.throughput_fps,
+            run.speedup()
+        );
+    }
+
+    println!("\n== ablation: CIF/LCD clock vs system throughput (conv 7x7, analytic) ==");
+    let base = cp.run_unmasked(Benchmark::Conv { k: 7 }, 42).unwrap();
+    for mhz in [12.5f64, 25.0, 50.0, 100.0] {
+        // Interface times scale inversely with the clock; processing and
+        // buffer copies do not.
+        let scale = 50.0 / mhz;
+        let t_cif = spacecodesign::fabric::clock::SimTime::from_secs(
+            base.t_cif.as_secs() * scale,
+        );
+        let t_lcd = spacecodesign::fabric::clock::SimTime::from_secs(
+            base.t_lcd.as_secs() * scale,
+        );
+        let unmasked = analytic::unmasked_latency(t_cif, base.t_proc, t_lcd);
+        let timing = spacecodesign::coordinator::MaskedTiming {
+            t_cif,
+            t_cifbuf: cp.masked_timing(&base).t_cifbuf,
+            t_proc: base.t_proc,
+            t_lcdbuf: cp.masked_timing(&base).t_lcdbuf,
+            t_lcd,
+        };
+        println!(
+            "  {mhz:>6.1} MHz: unmasked {:>5.1} FPS   masked {:>5.1} FPS",
+            1.0 / unmasked.as_secs(),
+            analytic::masked_throughput(&timing)
+        );
+    }
+
+    println!("\n== ablation: SHAVE count vs processing time (render, analytic) ==");
+    for n in [2usize, 4, 8, 12, 16] {
+        let mut cfg = SystemConfig::paper();
+        cfg.vpu.n_shaves = n;
+        let cp_n = CoProcessor::new(cfg).unwrap();
+        let t = cp_n.proc_time(Benchmark::Render, 42).unwrap();
+        println!("  {n:>2} SHAVEs: {t}");
+    }
+}

@@ -1,0 +1,148 @@
+//! Closed-form Table II model (DESIGN.md §4).
+//!
+//! Unmasked (serial): `latency = t_CIF + t_VPU + t_LCD`,
+//! `throughput = 1 / latency` — the paper's own footnote 1.
+//!
+//! Masked (pipelined): the LEON0 I/O chain
+//! `chain = t_LCDbuf + t_CIF + t_CIFbuf + t_LCD` serializes against the
+//! SHAVE processing, so the steady-state period is
+//! `max(t_proc, chain)` — this reproduces the paper's Masked throughput
+//! column exactly (3.2 / 8 / 8 / 8 / 6.1 / 1.5 FPS). The paper's
+//! footnote-2 latency formula is typographically corrupted; we report
+//! the DES-measured latency instead and cross-check the period here.
+
+use crate::coordinator::pipeline::MaskedTiming;
+use crate::fabric::clock::SimTime;
+
+/// Unmasked latency (paper footnote 1).
+pub fn unmasked_latency(t_cif: SimTime, t_proc: SimTime, t_lcd: SimTime) -> SimTime {
+    t_cif + t_proc + t_lcd
+}
+
+/// Masked steady-state period: max(processing, LEON0 I/O chain).
+pub fn masked_period(t: &MaskedTiming) -> SimTime {
+    t.t_proc.max(t.chain())
+}
+
+pub fn masked_throughput(t: &MaskedTiming) -> f64 {
+    1.0 / masked_period(t).as_secs()
+}
+
+/// Reconstruction of the paper's (typographically corrupted) footnote-2
+/// latency formula: `2 * max(t_proc, chain) + (chain - t_LCDbuf)`.
+/// This reproduces the paper's Masked latency column exactly for the
+/// binning (906 ms), conv (336 ms) and CNN (1505 ms) rows and within
+/// ~11 % for render (349 vs 391 ms). The DES measures ~2 periods
+/// (rx-start to LCD-done); the difference is where the frame's arrival
+/// is timestamped relative to the upstream stream buffer.
+pub fn masked_latency_estimate(t: &MaskedTiming) -> SimTime {
+    let p = masked_period(t);
+    p + p + t.chain().saturating_sub(t.t_lcdbuf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::simulate_masked;
+
+    fn ms(v: f64) -> SimTime {
+        SimTime::from_ms(v)
+    }
+
+    fn timing(cif: f64, cifbuf: f64, proc: f64, lcdbuf: f64, lcd: f64) -> MaskedTiming {
+        MaskedTiming {
+            t_cif: ms(cif),
+            t_cifbuf: ms(cifbuf),
+            t_proc: ms(proc),
+            t_lcdbuf: ms(lcdbuf),
+            t_lcd: ms(lcd),
+        }
+    }
+
+    #[test]
+    fn unmasked_matches_table_ii_examples() {
+        // Binning: 85 + 3 + 21 = 109 ms -> 9.1 FPS.
+        let l = unmasked_latency(ms(85.0), ms(3.0), ms(21.0));
+        assert_eq!(l, ms(109.0));
+        assert!((1.0 / l.as_secs() - 9.17).abs() < 0.1);
+        // 13x13 conv: 21 + 114 + 21 = 156 ms -> 6.4 FPS.
+        let l = unmasked_latency(ms(21.0), ms(114.0), ms(21.0));
+        assert_eq!(l, ms(156.0));
+    }
+
+    #[test]
+    fn masked_throughput_matches_table_ii() {
+        let rows = [
+            (timing(85.0, 168.0, 3.0, 42.0, 21.0), 3.16),   // binning
+            (timing(21.0, 42.0, 8.0, 42.0, 21.0), 7.94),    // conv3
+            (timing(21.0, 42.0, 114.0, 42.0, 21.0), 7.94),  // conv13
+            (timing(0.001, 0.0, 164.0, 42.0, 21.0), 6.10),  // render
+            (timing(63.0, 126.0, 658.0, 0.001, 0.001), 1.52), // cnn
+        ];
+        for (t, expect) in rows {
+            let fps = masked_throughput(&t);
+            assert!((fps - expect).abs() < 0.1, "{fps} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn analytic_period_matches_des() {
+        for t in [
+            timing(85.0, 168.0, 3.0, 42.0, 21.0),
+            timing(21.0, 42.0, 114.0, 42.0, 21.0),
+            timing(0.001, 0.0, 164.0, 42.0, 21.0),
+            timing(63.0, 126.0, 658.0, 0.001, 0.001),
+            timing(10.0, 10.0, 10.0, 10.0, 10.0),
+        ] {
+            let des = simulate_masked(&t, 48);
+            let model = masked_period(&t);
+            let rel = (des.period.as_secs() - model.as_secs()).abs() / model.as_secs();
+            assert!(rel < 0.02, "DES {} vs model {}", des.period, model);
+        }
+    }
+
+    #[test]
+    fn latency_estimate_reproduces_paper_masked_column() {
+        // (timing, paper Masked-latency ms, tolerance fraction)
+        let rows = [
+            (timing(85.0, 168.0, 3.0, 42.0, 21.0), 906.0, 0.01),
+            (timing(21.0, 42.0, 8.0, 42.0, 21.0), 336.0, 0.01),
+            (timing(21.0, 42.0, 114.0, 42.0, 21.0), 336.0, 0.01),
+            (timing(0.001, 0.0, 164.0, 42.0, 21.0), 391.0, 0.12),
+            (timing(63.0, 126.0, 658.0, 0.001, 0.001), 1505.0, 0.01),
+        ];
+        for (t, paper_ms, tol) in rows {
+            let est = masked_latency_estimate(&t).as_ms();
+            let rel = (est - paper_ms).abs() / paper_ms;
+            assert!(rel <= tol, "{est} ms vs paper {paper_ms} ms (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn des_latency_brackets_two_to_three_periods() {
+        for t in [
+            timing(85.0, 168.0, 3.0, 42.0, 21.0),
+            timing(21.0, 42.0, 29.0, 42.0, 21.0),
+            timing(0.001, 0.0, 164.0, 42.0, 21.0),
+            timing(63.0, 126.0, 658.0, 0.001, 0.001),
+        ] {
+            let r = simulate_masked(&t, 48);
+            let p = masked_period(&t).as_secs();
+            let l = r.avg_latency.as_secs();
+            assert!(l >= 1.4 * p && l <= 3.2 * p, "latency {l} vs period {p}");
+        }
+    }
+
+    #[test]
+    fn masking_helps_only_proc_heavy_kernels() {
+        // Paper: "benchmarks featuring excessive processing time can
+        // benefit ... benchmarks with small processing time suffer".
+        let heavy = timing(21.0, 42.0, 114.0, 42.0, 21.0);
+        let unmasked_heavy = 1.0 / unmasked_latency(ms(21.0), ms(114.0), ms(21.0)).as_secs();
+        assert!(masked_throughput(&heavy) > unmasked_heavy);
+
+        let light = timing(85.0, 168.0, 3.0, 42.0, 21.0);
+        let unmasked_light = 1.0 / unmasked_latency(ms(85.0), ms(3.0), ms(21.0)).as_secs();
+        assert!(masked_throughput(&light) < unmasked_light);
+    }
+}

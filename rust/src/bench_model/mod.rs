@@ -1,0 +1,6 @@
+//! Closed-form performance models, cross-validated against the
+//! discrete-event simulation (`coordinator::pipeline`) in tests.
+
+pub mod analytic;
+
+pub use analytic::{masked_period, masked_throughput, unmasked_latency};

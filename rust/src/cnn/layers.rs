@@ -1,0 +1,263 @@
+//! Scalar fp32 CNN inference (NHWC) — the LEON-baseline engine and host
+//! groundtruth for the ship-detection benchmark. Layer semantics match
+//! `python/compile/kernels/ref.py` exactly ('same' padding conv + bias +
+//! ReLU, 2x2 max pool, dense).
+
+use crate::cnn::weights::Weights;
+use crate::error::{Error, Result};
+
+/// NHWC feature map (single image: N=1 implied).
+#[derive(Clone, Debug)]
+pub struct FeatureMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl FeatureMap {
+    pub fn new(h: usize, w: usize, c: usize) -> FeatureMap {
+        FeatureMap {
+            h,
+            w,
+            c,
+            data: vec![0.0; h * w * c],
+        }
+    }
+
+    pub fn from_data(h: usize, w: usize, c: usize, data: Vec<f32>) -> Result<FeatureMap> {
+        if data.len() != h * w * c {
+            return Err(Error::Geometry(format!(
+                "feature map {h}x{w}x{c} needs {} values, got {}",
+                h * w * c,
+                data.len()
+            )));
+        }
+        Ok(FeatureMap { h, w, c, data })
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+}
+
+/// 'Same' 3x3 conv + bias + ReLU. w dims (3, 3, Cin, Cout) HWIO.
+pub fn conv3x3_relu(x: &FeatureMap, w: &[f32], b: &[f32], cout: usize) -> FeatureMap {
+    let cin = x.c;
+    debug_assert_eq!(w.len(), 9 * cin * cout);
+    let mut out = FeatureMap::new(x.h, x.w, cout);
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            for oc in 0..cout {
+                let mut acc = b[oc];
+                for u in 0..3usize {
+                    let yy = y as isize + u as isize - 1;
+                    if yy < 0 || yy >= x.h as isize {
+                        continue;
+                    }
+                    for v in 0..3usize {
+                        let xv = xx as isize + v as isize - 1;
+                        if xv < 0 || xv >= x.w as isize {
+                            continue;
+                        }
+                        let base = ((u * 3 + v) * cin) * cout + oc;
+                        let px = (yy as usize * x.w + xv as usize) * cin;
+                        for ic in 0..cin {
+                            acc += x.data[px + ic] * w[base + ic * cout];
+                        }
+                    }
+                }
+                out.data[(y * x.w + xx) * cout + oc] = acc.max(0.0);
+            }
+        }
+    }
+    out
+}
+
+/// 2x2 stride-2 max pool.
+pub fn maxpool2x2(x: &FeatureMap) -> FeatureMap {
+    let mut out = FeatureMap::new(x.h / 2, x.w / 2, x.c);
+    for y in 0..out.h {
+        for xx in 0..out.w {
+            for ch in 0..x.c {
+                let m = x
+                    .at(2 * y, 2 * xx, ch)
+                    .max(x.at(2 * y, 2 * xx + 1, ch))
+                    .max(x.at(2 * y + 1, 2 * xx, ch))
+                    .max(x.at(2 * y + 1, 2 * xx + 1, ch));
+                out.data[(y * out.w + xx) * x.c + ch] = m;
+            }
+        }
+    }
+    out
+}
+
+/// Dense layer: y = x @ w + b, optional ReLU. w dims (Din, Dout).
+pub fn dense(x: &[f32], w: &[f32], b: &[f32], dout: usize, relu: bool) -> Vec<f32> {
+    let din = x.len();
+    debug_assert_eq!(w.len(), din * dout);
+    let mut out = b.to_vec();
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue; // post-ReLU activations are sparse
+        }
+        let row = &w[i * dout..(i + 1) * dout];
+        for (o, &wv) in row.iter().enumerate() {
+            out[o] += xv * wv;
+        }
+    }
+    if relu {
+        for v in out.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+    out
+}
+
+/// Full 6-layer forward pass on one 128x128x3 chip -> 2 logits.
+pub fn cnn_forward(weights: &Weights, chip: &FeatureMap) -> Result<[f32; 2]> {
+    if chip.h != 128 || chip.w != 128 || chip.c != 3 {
+        return Err(Error::Geometry(format!(
+            "ship CNN expects 128x128x3 chips, got {}x{}x{}",
+            chip.h, chip.w, chip.c
+        )));
+    }
+    let mut fm = chip.clone();
+    for i in 0..4 {
+        let w = weights.get(&format!("conv{i}_w"))?;
+        let b = weights.get(&format!("conv{i}_b"))?;
+        let cout = *w.dims.last().unwrap();
+        fm = conv3x3_relu(&fm, &w.data, &b.data, cout);
+        fm = maxpool2x2(&fm);
+    }
+    let fc0w = weights.get("fc0_w")?;
+    let fc0b = weights.get("fc0_b")?;
+    let hidden = dense(&fm.data, &fc0w.data, &fc0b.data, 57, true);
+    let fc1w = weights.get("fc1_w")?;
+    let fc1b = weights.get("fc1_b")?;
+    let logits = dense(&hidden, &fc1w.data, &fc1b.data, 2, false);
+    Ok([logits[0], logits[1]])
+}
+
+/// Argmax classification.
+pub fn classify(weights: &Weights, chip: &FeatureMap) -> Result<usize> {
+    let l = cnn_forward(weights, chip)?;
+    Ok(if l[1] > l[0] { 1 } else { 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conv_identity_filter_passes_through() {
+        // Single channel, center tap 1.0 -> identity (+ReLU).
+        let mut x = FeatureMap::new(4, 4, 1);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = i as f32 / 10.0;
+        }
+        let mut w = vec![0f32; 9];
+        w[4] = 1.0; // center tap (u=1,v=1)
+        let out = conv3x3_relu(&x, &w, &[0.0], 1);
+        assert_eq!(out.data, x.data);
+    }
+
+    #[test]
+    fn conv_relu_clamps_negative() {
+        let x = FeatureMap::from_data(2, 2, 1, vec![1.0; 4]).unwrap();
+        let w = vec![0f32; 9];
+        let out = conv3x3_relu(&x, &w, &[-5.0], 1);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn conv_channel_mixing() {
+        // 1x1 image, 2 channels in, 1 out: out = x0*w0 + x1*w1 + b.
+        let x = FeatureMap::from_data(1, 1, 2, vec![2.0, 3.0]).unwrap();
+        let mut w = vec![0f32; 9 * 2];
+        // center tap (u=1,v=1): base index ((1*3+1)*2)*1 = 8.
+        w[8] = 10.0; // ic=0
+        w[9] = 100.0; // ic=1
+        let out = conv3x3_relu(&x, &w, &[1.0], 1);
+        assert_eq!(out.data, vec![2.0 * 10.0 + 3.0 * 100.0 + 1.0]);
+    }
+
+    #[test]
+    fn maxpool_explicit() {
+        let x = FeatureMap::from_data(
+            4,
+            4,
+            1,
+            (0..16).map(|v| v as f32).collect(),
+        )
+        .unwrap();
+        let out = maxpool2x2(&x);
+        assert_eq!(out.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn dense_explicit() {
+        let x = vec![1.0, 2.0];
+        let w = vec![1.0, 10.0, 100.0, 1000.0]; // (2, 2) row-major
+        let b = vec![0.5, -0.5];
+        let out = dense(&x, &w, &b, 2, false);
+        assert_eq!(out, vec![1.0 + 200.0 + 0.5, 10.0 + 2000.0 - 0.5]);
+    }
+
+    #[test]
+    fn dense_skips_zeros_correctly() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..64)
+            .map(|_| {
+                let v = rng.next_f32() - 0.5;
+                if v < 0.0 {
+                    0.0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let w: Vec<f32> = (0..64 * 8).map(|_| rng.next_f32() - 0.5).collect();
+        let b = vec![0.1f32; 8];
+        let fast = dense(&x, &w, &b, 8, false);
+        // Naive reference.
+        let mut slow = b.clone();
+        for i in 0..64 {
+            for o in 0..8 {
+                slow[o] += x[i] * w[i * 8 + o];
+            }
+        }
+        for (a, bb) in fast.iter().zip(&slow) {
+            assert!((a - bb).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn forward_rejects_wrong_chip_size() {
+        let w = Weights::default();
+        let chip = FeatureMap::new(64, 64, 3);
+        assert!(cnn_forward(&w, &chip).is_err());
+    }
+
+    #[test]
+    fn forward_with_trained_weights_if_built() {
+        let dir = crate::config::default_artifacts_dir();
+        let path = format!("{dir}/cnn_weights.bin");
+        if !std::path::Path::new(&path).exists() {
+            return;
+        }
+        let weights = Weights::load(&path).unwrap();
+        let mut rng = Rng::new(9);
+        let chip = FeatureMap::from_data(
+            128,
+            128,
+            3,
+            (0..128 * 128 * 3).map(|_| rng.next_f32()).collect(),
+        )
+        .unwrap();
+        let logits = cnn_forward(&weights, &chip).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,15 @@
+//! CNN ship-detection substrate (paper §III-C, benchmark 4).
+//!
+//! The scalar fp32 inference engine ([`layers`]) is the LEON-baseline
+//! implementation (the paper notes LEON lacks fp16 and would run the
+//! fp32 model) *and* the host groundtruth for validating the AOT
+//! artifact's logits. [`weights`] loads the trained parameters exported
+//! by `python/compile/train_cnn.py`; [`ships`] generates synthetic
+//! ship/sea chips matching the training distribution.
+
+pub mod layers;
+pub mod ships;
+pub mod weights;
+
+pub use layers::cnn_forward;
+pub use weights::Weights;

@@ -1,0 +1,203 @@
+//! Synthetic ship/sea chip generator — the Rust mirror of
+//! `python/compile/datasets.py::ship_chips` (same visual structure:
+//! correlated bluish swell background, bright tapered hull with deck
+//! stripe and wake).
+//!
+//! The random sequences differ from numpy's, so chips are not bit-equal
+//! to the training set — deliberately: classifying Rust-generated chips
+//! with the Python-trained weights is a *generalization* check, not a
+//! memorization check (see `rust/tests/integration_cnn.rs`).
+
+use crate::cnn::layers::FeatureMap;
+use crate::util::rng::Rng;
+
+/// One labelled chip: (size x size x 3) RGB in [0,1] + ship flag.
+pub struct Chip {
+    pub fm: FeatureMap,
+    pub has_ship: bool,
+}
+
+fn sea_background(rng: &mut Rng, size: usize) -> Vec<f32> {
+    let base = 0.25 + 0.1 * rng.next_f32();
+    // Three swell components.
+    let mut comps = Vec::new();
+    for _ in 0..3 {
+        let fx = rng.range_f64(2.0, 9.0) as f32;
+        let fy = rng.range_f64(2.0, 9.0) as f32;
+        let p0 = rng.range_f64(0.0, std::f64::consts::TAU) as f32;
+        let p1 = rng.range_f64(0.0, std::f64::consts::TAU) as f32;
+        comps.push((fx, fy, p0, p1));
+    }
+    let mut out = vec![0f32; size * size * 3];
+    let inv = 1.0 / (size - 1).max(1) as f32;
+    for y in 0..size {
+        let fy = y as f32 * inv;
+        for x in 0..size {
+            let fxn = x as f32 * inv;
+            let mut swell = 0f32;
+            for &(fx, fyc, p0, p1) in &comps {
+                swell += (std::f32::consts::TAU * fx * fxn + p0).sin()
+                    * (std::f32::consts::TAU * fyc * fy + p1).cos();
+            }
+            let lum =
+                base + 0.02 * swell + 0.015 * rng.normal() as f32;
+            let idx = (y * size + x) * 3;
+            out[idx] = (lum * 0.55).clamp(0.0, 1.0);
+            out[idx + 1] = (lum * 0.85).clamp(0.0, 1.0);
+            out[idx + 2] = lum.clamp(0.0, 1.0);
+        }
+    }
+    out
+}
+
+fn paint_ship(rng: &mut Rng, data: &mut [f32], size: usize) {
+    let s = size as f32;
+    let cy = rng.range_f64(0.3, 0.7) as f32 * s;
+    let cx = rng.range_f64(0.3, 0.7) as f32 * s;
+    let length = rng.range_f64(0.18, 0.42) as f32 * s;
+    let width = length * rng.range_f64(0.22, 0.38) as f32;
+    let theta = rng.range_f64(0.0, std::f64::consts::PI) as f32;
+    let (st, ct) = theta.sin_cos();
+    let bright = rng.range_f64(0.55, 0.9) as f32;
+    for y in 0..size {
+        for x in 0..size {
+            let dx = x as f32 - cx;
+            let dy = y as f32 - cy;
+            let u = dx * ct + dy * st;
+            let v = -dx * st + dy * ct;
+            let taper = (1.0 - u.max(0.0) / (0.6 * length)).clamp(0.25, 1.0);
+            let idx = (y * size + x) * 3;
+            if u.abs() < length / 2.0 && v.abs() < (width / 2.0) * taper {
+                data[idx] = bright;
+                data[idx + 1] = bright * 0.97;
+                data[idx + 2] = bright * 0.92;
+                if v.abs() < width * 0.08 {
+                    data[idx] *= 0.6; // deck stripe
+                }
+            } else if u < -length / 2.0
+                && u > -length * 1.6
+                && v.abs() < width * 0.4 * (1.0 + (-u - length / 2.0) / length)
+            {
+                // Wake behind the stern.
+                let wobble = 0.5 + 0.5 * (u * 0.9).sin();
+                for c in 0..3 {
+                    data[idx + c] = (data[idx + c] + 0.12 * wobble).min(1.0);
+                }
+            }
+        }
+    }
+}
+
+/// Generate `n` chips at `size` px, ~50 % with ships.
+pub fn ship_chips(n: usize, size: usize, seed: u64) -> Vec<Chip> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut data = sea_background(&mut rng, size);
+            let has_ship = rng.bool(0.5);
+            if has_ship {
+                paint_ship(&mut rng, &mut data, size);
+            }
+            Chip {
+                fm: FeatureMap::from_data(size, size, 3, data).unwrap(),
+                has_ship,
+            }
+        })
+        .collect()
+}
+
+/// Tile `grid x grid` chips into one RGB satellite frame; returns the
+/// frame as three planes worth of row-major RGB f32 and the labels in
+/// row-major patch order (the paper's LEON splitter order).
+pub fn ship_frame(grid: usize, patch: usize, seed: u64) -> (Vec<f32>, Vec<bool>) {
+    let chips = ship_chips(grid * grid, patch, seed);
+    let side = grid * patch;
+    let mut frame = vec![0f32; side * side * 3];
+    let mut labels = Vec::with_capacity(grid * grid);
+    for (i, chip) in chips.iter().enumerate() {
+        let gy = i / grid;
+        let gx = i % grid;
+        for y in 0..patch {
+            for x in 0..patch {
+                for c in 0..3 {
+                    frame[(((gy * patch + y) * side) + gx * patch + x) * 3 + c] =
+                        chip.fm.data[(y * patch + x) * 3 + c];
+                }
+            }
+        }
+        labels.push(chip.has_ship);
+    }
+    (frame, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ship_chips(4, 64, 42);
+        let b = ship_chips(4, 64, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.has_ship, y.has_ship);
+            assert_eq!(x.fm.data, y.fm.data);
+        }
+    }
+
+    #[test]
+    fn chips_in_unit_range() {
+        for chip in ship_chips(8, 64, 1) {
+            assert!(chip.fm.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let chips = ship_chips(300, 32, 2);
+        let ships = chips.iter().filter(|c| c.has_ship).count();
+        assert!((90..210).contains(&ships), "{ships}/300");
+    }
+
+    #[test]
+    fn ships_are_brighter_than_sea() {
+        let chips = ship_chips(200, 64, 3);
+        let max_of = |c: &Chip| {
+            c.fm.data.iter().cloned().fold(0f32, f32::max)
+        };
+        let ship_avg: f32 = chips
+            .iter()
+            .filter(|c| c.has_ship)
+            .map(max_of)
+            .sum::<f32>()
+            / chips.iter().filter(|c| c.has_ship).count() as f32;
+        let sea_avg: f32 = chips
+            .iter()
+            .filter(|c| !c.has_ship)
+            .map(max_of)
+            .sum::<f32>()
+            / chips.iter().filter(|c| !c.has_ship).count() as f32;
+        assert!(
+            ship_avg > sea_avg + 0.1,
+            "ship {ship_avg} vs sea {sea_avg}"
+        );
+    }
+
+    #[test]
+    fn frame_tiles_in_label_order() {
+        let (frame, labels) = ship_frame(2, 64, 7);
+        assert_eq!(frame.len(), 128 * 128 * 3);
+        assert_eq!(labels.len(), 4);
+        let chips = ship_chips(4, 64, 7);
+        // Top-left patch == chip 0.
+        for y in 0..64 {
+            for x in 0..64 {
+                for c in 0..3 {
+                    assert_eq!(
+                        frame[((y * 128) + x) * 3 + c],
+                        chips[0].fm.data[(y * 64 + x) * 3 + c]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Loader for `artifacts/cnn_weights.bin` (format defined in
+//! `python/compile/train_cnn.py::save_weights_bin`):
+//! magic "CNNW" | u32 n | per tensor: u32 name_len, name, u32 ndim,
+//! u32 dims..., f32 data (all little-endian). Values are fp16-quantized
+//! at export, matching what the AOT artifact bakes in.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// The named parameter set of the 6-layer ship CNN.
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn from_bytes(bytes: &[u8]) -> Result<Weights> {
+        let err = |msg: String| Error::ArtifactParse {
+            path: "<weights bytes>".into(),
+            msg,
+        };
+        if bytes.len() < 8 || &bytes[..4] != b"CNNW" {
+            return Err(err("bad magic".into()));
+        }
+        let n = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let mut off = 8;
+        let mut take = |len: usize| -> Result<&[u8]> {
+            if off + len > bytes.len() {
+                return Err(Error::ArtifactParse {
+                    path: "<weights bytes>".into(),
+                    msg: format!("truncated at offset {off}"),
+                });
+            }
+            let s = &bytes[off..off + len];
+            off += len;
+            Ok(s)
+        };
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len =
+                u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+            if name_len > 256 {
+                return Err(err(format!("implausible name length {name_len}")));
+            }
+            let name = String::from_utf8(take(name_len)?.to_vec())
+                .map_err(|e| err(e.to_string()))?;
+            let ndim = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+            if ndim > 8 {
+                return Err(err(format!("implausible ndim {ndim}")));
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = dims.iter().product();
+            if numel > 10_000_000 {
+                return Err(err(format!("implausible tensor size {numel}")));
+            }
+            let raw = take(numel * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.insert(name, Tensor { dims, data });
+        }
+        if off != bytes.len() {
+            return Err(err(format!(
+                "{} trailing bytes after {n} tensors",
+                bytes.len() - off
+            )));
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Weights> {
+        let bytes = std::fs::read(&path).map_err(|e| Error::ArtifactParse {
+            path: path.as_ref().display().to_string(),
+            msg: e.to_string(),
+        })?;
+        Weights::from_bytes(&bytes)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::ArtifactParse {
+                path: "<weights>".into(),
+                msg: format!("missing tensor '{name}'"),
+            })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(Tensor::numel).sum()
+    }
+
+    /// Sanity-check the expected 6-layer architecture.
+    pub fn validate_architecture(&self) -> Result<()> {
+        let expected: [(&str, &[usize]); 12] = [
+            ("conv0_w", &[3, 3, 3, 8]),
+            ("conv0_b", &[8]),
+            ("conv1_w", &[3, 3, 8, 16]),
+            ("conv1_b", &[16]),
+            ("conv2_w", &[3, 3, 16, 32]),
+            ("conv2_b", &[32]),
+            ("conv3_w", &[3, 3, 32, 32]),
+            ("conv3_b", &[32]),
+            ("fc0_w", &[2048, 57]),
+            ("fc0_b", &[57]),
+            ("fc1_w", &[57, 2]),
+            ("fc1_b", &[2]),
+        ];
+        for (name, dims) in expected {
+            let t = self.get(name)?;
+            if t.dims != dims {
+                return Err(Error::ArtifactParse {
+                    path: "<weights>".into(),
+                    msg: format!("{name}: dims {:?}, expected {:?}", t.dims, dims),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_weights_bytes() -> Vec<u8> {
+        // Two tensors: "a" = [2] f32, "b" = [1, 2] f32.
+        let mut out = Vec::new();
+        out.extend_from_slice(b"CNNW");
+        out.extend_from_slice(&2u32.to_le_bytes());
+        // "a"
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(b"a");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&1.5f32.to_le_bytes());
+        out.extend_from_slice(&(-2.0f32).to_le_bytes());
+        // "b"
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(b"b");
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&0.0f32.to_le_bytes());
+        out.extend_from_slice(&7.0f32.to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn parses_tiny_file() {
+        let w = Weights::from_bytes(&tiny_weights_bytes()).unwrap();
+        assert_eq!(w.get("a").unwrap().data, vec![1.5, -2.0]);
+        assert_eq!(w.get("b").unwrap().dims, vec![1, 2]);
+        assert_eq!(w.param_count(), 4);
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let bytes = tiny_weights_bytes();
+        assert!(Weights::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(Weights::from_bytes(&extra).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Weights::from_bytes(b"XXXX\0\0\0\0").is_err());
+    }
+
+    #[test]
+    fn missing_tensor_reported() {
+        let w = Weights::from_bytes(&tiny_weights_bytes()).unwrap();
+        assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn loads_trained_weights_if_built() {
+        let dir = crate::config::default_artifacts_dir();
+        let path = format!("{dir}/cnn_weights.bin");
+        if std::path::Path::new(&path).exists() {
+            let w = Weights::load(&path).unwrap();
+            w.validate_architecture().unwrap();
+            // Paper: "6-layer network (132K parameters)".
+            assert_eq!(w.param_count(), 132_189);
+            // fp16 quantization: every value exactly representable.
+            for t in w.tensors.values() {
+                for &v in &t.data {
+                    assert!(v.is_finite());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Bit-level I/O for the entropy coder (MSB-first, as the CCSDS
+//! bitstream is serialized).
+
+use crate::error::{Error, Result};
+
+/// MSB-first bit writer.
+#[derive(Clone, Debug, Default)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Bits used in the final byte (0..8).
+    bit_pos: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> BitWriter {
+        BitWriter::default()
+    }
+
+    /// Write the low `n` bits of `value`, MSB first.
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            let bit = ((value >> i) & 1) as u8;
+            if self.bit_pos == 0 {
+                self.bytes.push(0);
+            }
+            let last = self.bytes.len() - 1;
+            self.bytes[last] |= bit << (7 - self.bit_pos);
+            self.bit_pos = (self.bit_pos + 1) % 8;
+        }
+    }
+
+    /// `q` one-bits followed by a zero (unary).
+    pub fn write_unary(&mut self, q: u32) {
+        for _ in 0..q {
+            self.write_bits(1, 1);
+        }
+        self.write_bits(0, 1);
+    }
+
+    /// Pad to a byte boundary with zeros and return the buffer.
+    pub fn finish(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn bit_len(&self) -> usize {
+        if self.bit_pos == 0 {
+            self.bytes.len() * 8
+        } else {
+            (self.bytes.len() - 1) * 8 + self.bit_pos as usize
+        }
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize, // absolute bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> BitReader<'a> {
+        BitReader { bytes, pos: 0 }
+    }
+
+    pub fn read_bit(&mut self) -> Result<u64> {
+        let byte = self.pos / 8;
+        if byte >= self.bytes.len() {
+            return Err(Error::Ccsds("bitstream exhausted".into()));
+        }
+        let bit = 7 - (self.pos % 8) as u32;
+        self.pos += 1;
+        Ok(((self.bytes[byte] >> bit) & 1) as u64)
+    }
+
+    pub fn read_bits(&mut self, n: u32) -> Result<u64> {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.read_bit()?;
+        }
+        Ok(v)
+    }
+
+    /// Count ones until the terminating zero.
+    pub fn read_unary(&mut self, limit: u32) -> Result<u32> {
+        let mut q = 0;
+        loop {
+            if self.read_bit()? == 0 {
+                return Ok(q);
+            }
+            q += 1;
+            if q > limit {
+                return Err(Error::Ccsds(format!("unary run exceeds limit {limit}")));
+            }
+        }
+    }
+
+    pub fn bits_consumed(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    #[test]
+    fn bits_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFFFF, 16);
+        w.write_bits(0, 5);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        assert_eq!(r.read_bits(5).unwrap(), 0);
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let mut w = BitWriter::new();
+        for q in [0u32, 1, 7, 23] {
+            w.write_unary(q);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for q in [0u32, 1, 7, 23] {
+            assert_eq!(r.read_unary(24).unwrap(), q);
+        }
+    }
+
+    #[test]
+    fn exhaustion_is_an_error() {
+        let bytes = [0xFFu8];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bits(8).is_ok());
+        assert!(r.read_bit().is_err());
+    }
+
+    #[test]
+    fn unary_limit_enforced() {
+        let bytes = [0xFF, 0xFF];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_unary(8).is_err());
+    }
+
+    #[test]
+    fn bit_len_tracks_partial_bytes() {
+        let mut w = BitWriter::new();
+        w.write_bits(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.write_bits(0, 7);
+        assert_eq!(w.bit_len(), 8);
+        w.write_bits(0b11, 2);
+        assert_eq!(w.bit_len(), 10);
+    }
+
+    #[test]
+    fn prop_mixed_stream_roundtrips() {
+        check("bitio mixed roundtrip", 48, |g: &mut Gen| {
+            let ops: Vec<(bool, u64, u32)> = g.vec(1..=64, |g| {
+                if g.bool() {
+                    let n = g.int_in(1, 32) as u32;
+                    let v = g.u64() & ((1u64 << n) - 1).max(1);
+                    (true, v, n)
+                } else {
+                    (false, g.int_in(0, 20) as u64, 0)
+                }
+            });
+            let mut w = BitWriter::new();
+            for &(is_bits, v, n) in &ops {
+                if is_bits {
+                    w.write_bits(v, n);
+                } else {
+                    w.write_unary(v as u32);
+                }
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(is_bits, v, n) in &ops {
+                if is_bits {
+                    if r.read_bits(n).unwrap() != v & ((1u64 << n) - 1) {
+                        return false;
+                    }
+                } else if r.read_unary(32).unwrap() != v as u32 {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Hyperspectral cube container (BSQ sample order, 16-bit samples).
+
+use crate::error::{Error, Result};
+
+/// A `bands x rows x cols` cube in band-sequential (BSQ) layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cube {
+    pub bands: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// BSQ: `data[z * rows*cols + y * cols + x]`.
+    pub data: Vec<u16>,
+}
+
+impl Cube {
+    pub fn new(bands: usize, rows: usize, cols: usize, data: Vec<u16>) -> Result<Cube> {
+        if bands == 0 || rows == 0 || cols == 0 {
+            return Err(Error::Geometry("empty cube".into()));
+        }
+        if data.len() != bands * rows * cols {
+            return Err(Error::Geometry(format!(
+                "cube {bands}x{rows}x{cols} needs {} samples, got {}",
+                bands * rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Cube {
+            bands,
+            rows,
+            cols,
+            data,
+        })
+    }
+
+    #[inline]
+    pub fn get(&self, z: usize, y: usize, x: usize) -> u16 {
+        self.data[(z * self.rows + y) * self.cols + x]
+    }
+
+    /// One band plane as i64 working samples.
+    pub fn plane_i64(&self, z: usize) -> Vec<i64> {
+        let n = self.rows * self.cols;
+        self.data[z * n..(z + 1) * n]
+            .iter()
+            .map(|&v| v as i64)
+            .collect()
+    }
+
+    pub fn samples(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_bsq() {
+        let mut data = vec![0u16; 2 * 2 * 3];
+        data[(1 * 2 + 1) * 3 + 2] = 77; // z=1,y=1,x=2
+        let c = Cube::new(2, 2, 3, data).unwrap();
+        assert_eq!(c.get(1, 1, 2), 77);
+        assert_eq!(c.get(0, 0, 0), 0);
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        assert!(Cube::new(0, 2, 2, vec![]).is_err());
+        assert!(Cube::new(1, 2, 2, vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn plane_extraction() {
+        let data: Vec<u16> = (0..12).collect();
+        let c = Cube::new(3, 2, 2, data).unwrap();
+        assert_eq!(c.plane_i64(1), vec![4, 5, 6, 7]);
+    }
+}

@@ -1,0 +1,147 @@
+//! CCSDS-123-style decompressor: mirror of the encoder, running the same
+//! predictor in lock-step on reconstructed samples.
+
+use crate::compress::bitio::BitReader;
+use crate::compress::cube::Cube;
+use crate::compress::encoder::{GrState, MAGIC, VERSION};
+use crate::compress::predictor::{sample_bounds, unmap_residual, Predictor};
+use crate::compress::Params;
+use crate::error::{Error, Result};
+
+/// Decode one mapped residual (inverse of `encode_delta`).
+fn decode_delta(r: &mut BitReader, k: u32, limit: u32, d: u32) -> Result<u64> {
+    // Count ones; a zero before `limit` terminates a normal code.
+    let mut q = 0u32;
+    loop {
+        if q == limit {
+            // Escape: raw D+1-bit value follows (no zero terminator).
+            return r.read_bits(d + 1);
+        }
+        if r.read_bit()? == 0 {
+            break;
+        }
+        q += 1;
+    }
+    let low = r.read_bits(k)?;
+    Ok(((q as u64) << k) | low)
+}
+
+/// Decompress a bitstream produced by [`crate::compress::compress`].
+pub fn decompress(bytes: &[u8]) -> Result<Cube> {
+    let mut r = BitReader::new(bytes);
+    let mut magic = [0u8; 4];
+    for m in magic.iter_mut() {
+        *m = r.read_bits(8)? as u8;
+    }
+    if &magic != MAGIC {
+        return Err(Error::Ccsds("bad magic".into()));
+    }
+    let version = r.read_bits(8)? as u8;
+    if version != VERSION {
+        return Err(Error::Ccsds(format!("unsupported version {version}")));
+    }
+    let bands = r.read_bits(32)? as usize;
+    let rows = r.read_bits(32)? as usize;
+    let cols = r.read_bits(32)? as usize;
+    let params = Params {
+        dynamic_range: r.read_bits(8)? as u32,
+        pred_bands: r.read_bits(8)? as usize,
+        omega: r.read_bits(8)? as u32,
+        unary_limit: r.read_bits(8)? as u32,
+    };
+    if bands == 0 || rows == 0 || cols == 0 {
+        return Err(Error::Ccsds("empty geometry in header".into()));
+    }
+    if bands.saturating_mul(rows).saturating_mul(cols) > (1 << 30) {
+        return Err(Error::Ccsds("implausible cube size".into()));
+    }
+    let (smin, smax, _) = sample_bounds(params.dynamic_range);
+
+    let mut data = Vec::with_capacity(bands * rows * cols);
+    let mut planes: Vec<Vec<i64>> = Vec::new();
+
+    for _z in 0..bands {
+        let mut plane = vec![0i64; rows * cols];
+        let mut pred = Predictor::new_band(params);
+        let mut gr = GrState::new(params.dynamic_range);
+        let prev_refs: Vec<&[i64]> = planes
+            .iter()
+            .rev()
+            .take(params.pred_bands)
+            .map(|p| p.as_slice())
+            .collect();
+
+        for y in 0..rows {
+            for x in 0..cols {
+                if y == 0 && x == 0 {
+                    // First sample of each band is stored raw (see
+                    // encoder).
+                    plane[0] = r.read_bits(params.dynamic_range)? as i64;
+                    continue;
+                }
+                let pr = pred.predict(&plane, &prev_refs, cols, y, x);
+                let k = gr.k();
+                let delta =
+                    decode_delta(&mut r, k, params.unary_limit, params.dynamic_range)?;
+                let err = unmap_residual(delta, pr.s_hat, smin, smax);
+                let s = pr.s_hat + err;
+                if s < smin || s > smax {
+                    return Err(Error::Ccsds(format!(
+                        "reconstructed sample {s} out of range at y={y} x={x}"
+                    )));
+                }
+                plane[y * cols + x] = s;
+                gr.update(delta);
+                pred.update(err, &pr.diffs);
+            }
+        }
+        data.extend(plane.iter().map(|&s| s as u16));
+        planes.push(plane);
+        if planes.len() > params.pred_bands {
+            planes.remove(0);
+        }
+    }
+
+    Cube::new(bands, rows, cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::compress;
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(decompress(b"XXXX\x01").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_stream() {
+        let cube = Cube::new(2, 8, 8, vec![100u16; 128]).unwrap();
+        let (bits, _) = compress(&cube, Params::default()).unwrap();
+        // Chop the payload: decode must fail, not panic.
+        assert!(decompress(&bits[..bits.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let cube = Cube::new(1, 2, 2, vec![1, 2, 3, 4]).unwrap();
+        let (mut bits, _) = compress(&cube, Params::default()).unwrap();
+        bits[4] = 99;
+        assert!(decompress(&bits).is_err());
+    }
+
+    #[test]
+    fn gradient_roundtrip_nondefault_params() {
+        let data: Vec<u16> = (0..256u32).map(|i| (i * 17 % 4096) as u16).collect();
+        let cube = Cube::new(4, 8, 8, data).unwrap();
+        let params = Params {
+            dynamic_range: 12,
+            pred_bands: 2,
+            omega: 11,
+            unary_limit: 16,
+        };
+        let (bits, _) = compress(&cube, params).unwrap();
+        assert_eq!(decompress(&bits).unwrap(), cube);
+    }
+}

@@ -1,0 +1,282 @@
+//! The CCSDS-123-style adaptive linear predictor.
+//!
+//! Both encoder and decoder drive this with the *reconstructed* (for
+//! lossless: identical) samples in the same causal order, so their
+//! predictor states stay in lock-step — the property the round-trip
+//! tests pin.
+
+use crate::compress::Params;
+
+/// Mid-scale and clamp bounds for dynamic range `d` bits (unsigned).
+pub fn sample_bounds(d: u32) -> (i64, i64, i64) {
+    let smax = (1i64 << d) - 1;
+    (0, smax, 1i64 << (d - 1))
+}
+
+/// Neighbor-oriented local sum at (y, x) of a plane (paper's wide
+/// neighbor-oriented variant; 4x-weighted at edges so sigma ~ 4*s).
+pub fn local_sum(plane: &[i64], cols: usize, y: usize, x: usize) -> i64 {
+    let at = |yy: usize, xx: usize| plane[yy * cols + xx];
+    if y > 0 {
+        if cols == 1 {
+            // Degenerate single-column plane: only N is causal. (The NE
+            // fallback would read the *current* raster position, which
+            // the decoder has not reconstructed yet.)
+            4 * at(y - 1, x)
+        } else if x > 0 && x < cols - 1 {
+            at(y, x - 1) + at(y - 1, x - 1) + at(y - 1, x) + at(y - 1, x + 1)
+        } else if x == 0 {
+            2 * (at(y - 1, x) + at(y - 1, x + 1))
+        } else {
+            // x == cols-1
+            at(y, x - 1) + at(y - 1, x - 1) + 2 * at(y - 1, x)
+        }
+    } else if x > 0 {
+        4 * at(y, x - 1)
+    } else {
+        // First sample of the plane: caller special-cases prediction.
+        0
+    }
+}
+
+/// Per-band predictor state: the adaptive weight vector.
+#[derive(Clone, Debug)]
+pub struct Predictor {
+    params: Params,
+    /// Q-Omega fixed-point weights, one per prediction band.
+    pub weights: Vec<i64>,
+    /// Samples processed in the current band (drives the update shift).
+    t: u64,
+}
+
+/// Outcome of a prediction: the predicted sample and the central local
+/// differences used (needed for the weight update).
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub s_hat: i64,
+    pub diffs: Vec<i64>,
+}
+
+impl Predictor {
+    /// Fresh predictor for one band (weights reinitialized per band, as
+    /// the standard does at each band start in BSQ order).
+    pub fn new_band(params: Params) -> Predictor {
+        let mut weights = Vec::with_capacity(params.pred_bands);
+        // Standard-style init: w1 = 7/8 in Q-Omega, wi = w(i-1)/8.
+        let mut w = (7 << params.omega) / 8;
+        for _ in 0..params.pred_bands {
+            weights.push(w);
+            w /= 8;
+        }
+        Predictor {
+            params,
+            weights,
+            t: 0,
+        }
+    }
+
+    /// Predict sample (y, x) of the current band.
+    ///
+    /// `cur_plane` holds the reconstructed samples of the current band so
+    /// far (values at earlier raster positions are valid); `prev_planes`
+    /// holds up to P previous bands, most recent first.
+    pub fn predict(
+        &self,
+        cur_plane: &[i64],
+        prev_planes: &[&[i64]],
+        cols: usize,
+        y: usize,
+        x: usize,
+    ) -> Prediction {
+        let (smin, smax, mid) = sample_bounds(self.params.dynamic_range);
+        let omega = self.params.omega;
+
+        // First sample of the band: previous-band sample or mid-scale.
+        if y == 0 && x == 0 {
+            let s_hat = prev_planes
+                .first()
+                .map(|p| p[0])
+                .unwrap_or(mid)
+                .clamp(smin, smax);
+            return Prediction {
+                s_hat,
+                diffs: vec![0; prev_planes.len().min(self.params.pred_bands)],
+            };
+        }
+
+        let sigma = local_sum(cur_plane, cols, y, x);
+        let n_pred = prev_planes.len().min(self.params.pred_bands);
+
+        if n_pred == 0 {
+            // Band 0: purely spatial prediction sigma/4.
+            return Prediction {
+                s_hat: (sigma >> 2).clamp(smin, smax),
+                diffs: vec![],
+            };
+        }
+
+        // Central local differences of the previous bands at (y, x).
+        let mut diffs = Vec::with_capacity(n_pred);
+        let mut d_hat: i64 = 0;
+        for (i, plane) in prev_planes.iter().take(n_pred).enumerate() {
+            let s_prev = plane[y * cols + x];
+            let sigma_prev = local_sum(plane, cols, y, x);
+            let d = 4 * s_prev - sigma_prev;
+            d_hat += self.weights[i] * d;
+            diffs.push(d);
+        }
+
+        // s_hat = (d_hat + sigma * 2^Omega) / 2^(Omega+2), clamped.
+        let s_hat = ((d_hat + (sigma << omega)) >> (omega + 2)).clamp(smin, smax);
+        Prediction { s_hat, diffs }
+    }
+
+    /// Sign-algorithm weight update after observing the true sample.
+    pub fn update(&mut self, err: i64, diffs: &[i64]) {
+        self.t += 1;
+        if diffs.is_empty() {
+            return;
+        }
+        // Update shift: aggressive early, gentler as the band converges.
+        let rho = 4 + (self.t / 4096).min(4) as u32;
+        let wmax = 1i64 << (self.params.omega + 3);
+        let sgn = match err.cmp(&0) {
+            std::cmp::Ordering::Greater => 1,
+            std::cmp::Ordering::Less => -1,
+            std::cmp::Ordering::Equal => 0,
+        };
+        if sgn == 0 {
+            return;
+        }
+        for (w, &d) in self.weights.iter_mut().zip(diffs) {
+            let step = (d >> rho) * sgn;
+            *w = (*w + step).clamp(-wmax, wmax);
+        }
+    }
+}
+
+/// Bijective residual mapping (prediction error -> non-negative symbol).
+pub fn map_residual(err: i64, s_hat: i64, smin: i64, smax: i64) -> u64 {
+    let theta = (s_hat - smin).min(smax - s_hat);
+    if err.abs() <= theta {
+        if err >= 0 {
+            (2 * err) as u64
+        } else {
+            (-2 * err - 1) as u64
+        }
+    } else {
+        (theta + err.abs()) as u64
+    }
+}
+
+/// Inverse of [`map_residual`].
+pub fn unmap_residual(delta: u64, s_hat: i64, smin: i64, smax: i64) -> i64 {
+    let theta = (s_hat - smin).min(smax - s_hat);
+    let d = delta as i64;
+    if d <= 2 * theta {
+        if d % 2 == 0 {
+            d / 2
+        } else {
+            -(d + 1) / 2
+        }
+    } else {
+        // |err| = d - theta; the sign is the one that stays in range.
+        let mag = d - theta;
+        if s_hat + mag <= smax {
+            mag
+        } else {
+            -mag
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    #[test]
+    fn bounds_for_16bit() {
+        let (smin, smax, mid) = sample_bounds(16);
+        assert_eq!((smin, smax, mid), (0, 65535, 32768));
+    }
+
+    #[test]
+    fn local_sum_interior_and_edges() {
+        // 3x3 plane: values 1..9.
+        let p: Vec<i64> = (1..=9).collect();
+        // Interior (1,1): W=4, NW=1, N=2, NE=3 -> 10.
+        assert_eq!(local_sum(&p, 3, 1, 1), 10);
+        // Left edge (1,0): 2*(N + NE) = 2*(1+2) = 6.
+        assert_eq!(local_sum(&p, 3, 1, 0), 6);
+        // Right edge (1,2): W=5, NW=2, 2*N=6 -> 13.
+        assert_eq!(local_sum(&p, 3, 1, 2), 13);
+        // Top row (0,2): 4*W = 8.
+        assert_eq!(local_sum(&p, 3, 0, 2), 8);
+    }
+
+    #[test]
+    fn constant_plane_predicts_exactly() {
+        let params = Params::default();
+        let pred = Predictor::new_band(params);
+        let cur = vec![500i64; 16];
+        let prev = vec![500i64; 16];
+        let pr = pred.predict(&cur, &[&prev], 4, 2, 2);
+        // sigma = 4*500; d_prev = 0 -> s_hat = 500.
+        assert_eq!(pr.s_hat, 500);
+    }
+
+    #[test]
+    fn weight_update_moves_toward_correlated_band() {
+        let params = Params::default();
+        let mut pred = Predictor::new_band(params);
+        let w0 = pred.weights[0];
+        // Positive error with positive diff: weight must grow.
+        pred.update(100, &[4096, 0, 0]);
+        assert!(pred.weights[0] > w0);
+        // Negative error shrinks it back.
+        pred.update(-100, &[4096, 0, 0]);
+        assert_eq!(pred.weights[0], w0);
+    }
+
+    #[test]
+    fn residual_mapping_explicit_values() {
+        // s_hat mid-range: theta large, pure zig-zag.
+        assert_eq!(map_residual(0, 100, 0, 1000), 0);
+        assert_eq!(map_residual(1, 100, 0, 1000), 2);
+        assert_eq!(map_residual(-1, 100, 0, 1000), 1);
+        assert_eq!(map_residual(5, 100, 0, 1000), 10);
+        // Near the floor: theta = 2.
+        assert_eq!(map_residual(3, 2, 0, 1000), 5); // theta+|e| = 2+3
+    }
+
+    #[test]
+    fn prop_residual_mapping_bijective() {
+        check("residual map bijective", 96, |g: &mut Gen| {
+            let smax = 65535i64;
+            let s_hat = g.int_in(0, smax as usize) as i64;
+            // err must keep s = s_hat + err within [0, smax].
+            let err = g.int_in(0, smax as usize) as i64 - s_hat;
+            let delta = map_residual(err, s_hat, 0, smax);
+            let back = unmap_residual(delta, s_hat, 0, smax);
+            // delta must also be within the alphabet size.
+            back == err && delta <= smax as u64
+        });
+    }
+
+    #[test]
+    fn prop_mapping_is_injective_over_valid_errors() {
+        check("residual map injective", 32, |g: &mut Gen| {
+            let smax = 255i64;
+            let s_hat = g.int_in(0, 255) as i64;
+            let mut seen = std::collections::HashSet::new();
+            for s in 0..=smax {
+                let delta = map_residual(s - s_hat, s_hat, 0, smax);
+                if !seen.insert(delta) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

@@ -1,0 +1,199 @@
+//! System configuration: the knobs of the testbed in paper §II-§IV.
+//!
+//! Defaults reproduce the paper's evaluated operating point:
+//! CIF/LCD @ 50 MHz, 12 SHAVEs @ 600 MHz, 2 LEONs, XCKU060 framing FPGA.
+
+use crate::error::{Error, Result};
+
+/// Clock + sizing for one pixel interface (CIF or LCD).
+#[derive(Clone, Copy, Debug)]
+pub struct IfaceConfig {
+    /// Pixel clock in Hz; the paper validates up to 50 MHz full-frame,
+    /// 100 MHz (CIF) / 90 MHz (LCD) with reduced buffers.
+    pub pixel_clock_hz: f64,
+    /// Pixel FIFO depth (pixels) between FSM and Tx/Rx.
+    pub pixel_fifo_depth: usize,
+    /// Image buffer capacity in 32-bit words (BRAM-backed).
+    pub image_buffer_words: usize,
+    /// Horizontal blanking (porch) overhead per line, in pixel clocks.
+    /// Calibrated so a 2048x2048@8bpp frame takes ~85 ms at 50 MHz
+    /// (paper Table II).
+    pub porch_cycles_per_line: usize,
+}
+
+impl IfaceConfig {
+    /// Paper operating point: 50 MHz, full-frame buffers.
+    pub fn paper_50mhz() -> IfaceConfig {
+        IfaceConfig {
+            pixel_clock_hz: 50.0e6,
+            pixel_fifo_depth: 1024,
+            // 1Mi words = 4 MiB: buffers a 4 MPixel 8bpp or 2 MPixel 16bpp
+            // frame (paper: "due to the FPGA memory resources, we
+            // transmitted ... 16-bit frames with up to 1024x1024 size").
+            image_buffer_words: 1 << 20,
+            porch_cycles_per_line: 27,
+        }
+    }
+
+    /// Reduced-buffer high-frequency point (paper: CIF@100/LCD@90 MHz with
+    /// frames up to 64x64 @16bpp).
+    pub fn reduced_100mhz(pixel_clock_hz: f64) -> IfaceConfig {
+        IfaceConfig {
+            pixel_clock_hz,
+            pixel_fifo_depth: 256,
+            image_buffer_words: 2048, // 8 KiB
+            porch_cycles_per_line: 27,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(1.0e6..=200.0e6).contains(&self.pixel_clock_hz) {
+            return Err(Error::Config(format!(
+                "pixel clock {} Hz out of range",
+                self.pixel_clock_hz
+            )));
+        }
+        if self.pixel_fifo_depth == 0 || self.image_buffer_words == 0 {
+            return Err(Error::Config("zero-sized fifo/buffer".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Myriad2 VPU model parameters (paper §II/§III-B + Myriad2 datasheet).
+#[derive(Clone, Copy, Debug)]
+pub struct VpuConfig {
+    /// SHAVE vector cores: "the 12 SHAVE cores (VLIW & SIMD, 600MHz)".
+    pub n_shaves: usize,
+    pub shave_clock_hz: f64,
+    /// General-purpose LEON cores (LEON4: one for I/O, one for compute
+    /// management in Masked mode).
+    pub n_leons: usize,
+    pub leon_clock_hz: f64,
+    /// CMX scratchpad (SPM) capacity.
+    pub cmx_bytes: usize,
+    /// DRAM->DRAM buffered-copy rate for Masked-mode double buffering.
+    /// Calibrated from the paper: "copying an 1MPixel frame requires
+    /// ~42ms" => 25 Mpixel/s (DESIGN.md §4).
+    pub dram_copy_mpx_per_s: f64,
+    /// DMA engine bandwidth DRAM<->CMX (bytes/s).
+    pub dma_bytes_per_s: f64,
+}
+
+impl VpuConfig {
+    pub fn myriad2() -> VpuConfig {
+        VpuConfig {
+            n_shaves: 12,
+            shave_clock_hz: 600.0e6,
+            n_leons: 2,
+            leon_clock_hz: 230.0e6, // LEON4 OS/RT clock on Myriad2
+            cmx_bytes: 2 * 1024 * 1024,
+            dram_copy_mpx_per_s: 25.0e6,
+            dma_bytes_per_s: 1.5e9,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_shaves == 0 || self.n_leons == 0 {
+            return Err(Error::Config("VPU needs cores".into()));
+        }
+        if self.cmx_bytes < 64 * 1024 {
+            return Err(Error::Config("CMX implausibly small".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Whole-testbed configuration.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub cif: IfaceConfig,
+    pub lcd: IfaceConfig,
+    pub vpu: VpuConfig,
+    /// Directory holding AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+    /// Validate outputs against host groundtruth after each frame.
+    pub validate: bool,
+}
+
+impl SystemConfig {
+    /// The paper's evaluated configuration (Table II).
+    pub fn paper() -> SystemConfig {
+        SystemConfig {
+            cif: IfaceConfig::paper_50mhz(),
+            lcd: IfaceConfig::paper_50mhz(),
+            vpu: VpuConfig::myriad2(),
+            artifacts_dir: default_artifacts_dir(),
+            validate: true,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.cif.validate()?;
+        self.lcd.validate()?;
+        self.vpu.validate()
+    }
+}
+
+/// Resolve the artifacts directory: $SPACECODESIGN_ARTIFACTS, else
+/// ./artifacts relative to the crate root (where `make artifacts` puts it).
+pub fn default_artifacts_dir() -> String {
+    if let Ok(dir) = std::env::var("SPACECODESIGN_ARTIFACTS") {
+        return dir;
+    }
+    // Crate root = CARGO_MANIFEST_DIR at compile time (tests, benches),
+    // falling back to ./artifacts for installed binaries.
+    let compile_time = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(compile_time).exists() {
+        compile_time.to_string()
+    } else {
+        "artifacts".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_valid() {
+        SystemConfig::paper().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_point_matches_table_ii_geometry() {
+        let c = IfaceConfig::paper_50mhz();
+        assert_eq!(c.pixel_clock_hz, 50.0e6);
+        // 4 MiB image buffer holds a full 4 MPixel 8bpp frame.
+        assert!(c.image_buffer_words * 4 >= 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn rejects_bad_clock() {
+        let mut c = IfaceConfig::paper_50mhz();
+        c.pixel_clock_hz = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_fifo() {
+        let mut c = IfaceConfig::paper_50mhz();
+        c.pixel_fifo_depth = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn myriad2_matches_datasheet_envelope() {
+        let v = VpuConfig::myriad2();
+        assert_eq!(v.n_shaves, 12);
+        assert_eq!(v.shave_clock_hz, 600.0e6);
+        assert_eq!(v.cmx_bytes, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn dram_copy_rate_reproduces_42ms_per_mpixel() {
+        let v = VpuConfig::myriad2();
+        let t = (1024.0 * 1024.0) / v.dram_copy_mpx_per_s;
+        assert!((t - 0.042).abs() < 0.001, "copy time {t}");
+    }
+}

@@ -1,0 +1,189 @@
+//! The four custom SW benchmarks (paper §III-C) and their Table II I/O
+//! geometry.
+
+use crate::util::image::PixelFormat;
+use crate::vpu::cost::BenchKind;
+
+/// A benchmark configuration (one Table II row).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Benchmark {
+    /// 2x2 averaging binning: 4 MPixel 8bpp in -> 1 MPixel 8bpp out.
+    Binning,
+    /// K x K FP convolution: 1 MPixel 8bpp in/out.
+    Conv { k: usize },
+    /// Depth rendering: 6x1 pose in -> 1 MPixel 16bpp out.
+    Render,
+    /// CNN ship detection: 1 MPixel RGB 16bpp in -> 64x1 labels out.
+    CnnShip,
+}
+
+/// Frame geometry of one transfer direction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IoSide {
+    pub width: usize,
+    pub height: usize,
+    /// Planes transmitted sequentially (RGB = 3).
+    pub channels: usize,
+    pub format: PixelFormat,
+}
+
+impl IoSide {
+    pub fn mpixels(&self) -> f64 {
+        (self.width * self.height * self.channels) as f64 / (1 << 20) as f64
+    }
+}
+
+impl Benchmark {
+    /// The six Table II rows in paper order.
+    pub fn table2() -> Vec<Benchmark> {
+        vec![
+            Benchmark::Binning,
+            Benchmark::Conv { k: 3 },
+            Benchmark::Conv { k: 7 },
+            Benchmark::Conv { k: 13 },
+            Benchmark::Render,
+            Benchmark::CnnShip,
+        ]
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Benchmark::Binning => "Averaging Binning".into(),
+            Benchmark::Conv { k } => format!("{k}x{k} FP Convolution"),
+            Benchmark::Render => "Depth Rendering".into(),
+            Benchmark::CnnShip => "CNN Ship Detection".into(),
+        }
+    }
+
+    pub fn kind(&self) -> BenchKind {
+        match self {
+            Benchmark::Binning => BenchKind::Binning,
+            Benchmark::Conv { k } => BenchKind::Conv { k: *k },
+            Benchmark::Render => BenchKind::Render,
+            Benchmark::CnnShip => BenchKind::Cnn,
+        }
+    }
+
+    /// AOT artifact for the full-size (Table II) workload.
+    pub fn artifact(&self) -> String {
+        match self {
+            Benchmark::Binning => "binning_2048".into(),
+            Benchmark::Conv { k } => format!("conv_1024_k{k}"),
+            Benchmark::Render => "render_1024".into(),
+            Benchmark::CnnShip => "cnn_frame_1024".into(),
+        }
+    }
+
+    /// CIF (input) geometry, Table II "I/O Data" column.
+    pub fn input(&self) -> IoSide {
+        match self {
+            Benchmark::Binning => IoSide {
+                width: 2048,
+                height: 2048,
+                channels: 1,
+                format: PixelFormat::Bpp8,
+            },
+            Benchmark::Conv { .. } => IoSide {
+                width: 1024,
+                height: 1024,
+                channels: 1,
+                format: PixelFormat::Bpp8,
+            },
+            // The pose vector: 6 values in one line; transfer time ~ "<1us".
+            Benchmark::Render => IoSide {
+                width: 6,
+                height: 1,
+                channels: 1,
+                format: PixelFormat::Bpp16,
+            },
+            Benchmark::CnnShip => IoSide {
+                width: 1024,
+                height: 1024,
+                channels: 3,
+                format: PixelFormat::Bpp16,
+            },
+        }
+    }
+
+    /// LCD (output) geometry.
+    pub fn output(&self) -> IoSide {
+        match self {
+            Benchmark::Binning => IoSide {
+                width: 1024,
+                height: 1024,
+                channels: 1,
+                format: PixelFormat::Bpp8,
+            },
+            Benchmark::Conv { .. } => IoSide {
+                width: 1024,
+                height: 1024,
+                channels: 1,
+                format: PixelFormat::Bpp8,
+            },
+            Benchmark::Render => IoSide {
+                width: 1024,
+                height: 1024,
+                channels: 1,
+                format: PixelFormat::Bpp16,
+            },
+            Benchmark::CnnShip => IoSide {
+                width: 64,
+                height: 1,
+                channels: 1,
+                format: PixelFormat::Bpp16,
+            },
+        }
+    }
+
+    /// Number of processing bands and the scheduling policy (paper
+    /// §III-C: 36 static bands for binning, dynamic queue for render).
+    pub fn bands(&self) -> (usize, bool) {
+        match self {
+            Benchmark::Binning => (36, false),
+            Benchmark::Conv { .. } => (36, false),
+            Benchmark::Render => (32, true),
+            Benchmark::CnnShip => (64, true), // 64 patches, queued
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_six_rows_in_order() {
+        let rows = Benchmark::table2();
+        assert_eq!(rows.len(), 6);
+        assert_eq!(rows[0], Benchmark::Binning);
+        assert_eq!(rows[3], Benchmark::Conv { k: 13 });
+        assert_eq!(rows[5], Benchmark::CnnShip);
+    }
+
+    #[test]
+    fn io_geometry_matches_table_ii() {
+        // "4MP/1MP, 8bpp"
+        assert_eq!(Benchmark::Binning.input().mpixels(), 4.0);
+        assert_eq!(Benchmark::Binning.output().mpixels(), 1.0);
+        // "1MP/1MP, 8bpp"
+        assert_eq!(Benchmark::Conv { k: 7 }.input().mpixels(), 1.0);
+        // "6x1/1MP, 16bpp"
+        assert_eq!(Benchmark::Render.input().width, 6);
+        assert_eq!(Benchmark::Render.output().format, PixelFormat::Bpp16);
+        // "1MP RGB/64x1, 16bpp"
+        assert_eq!(Benchmark::CnnShip.input().channels, 3);
+        assert_eq!(Benchmark::CnnShip.output().width, 64);
+    }
+
+    #[test]
+    fn artifact_names_resolve() {
+        assert_eq!(Benchmark::Conv { k: 13 }.artifact(), "conv_1024_k13");
+        assert_eq!(Benchmark::Render.artifact(), "render_1024");
+    }
+
+    #[test]
+    fn scheduling_policy_matches_paper() {
+        assert_eq!(Benchmark::Binning.bands(), (36, false));
+        assert!(Benchmark::Render.bands().1, "render uses the dynamic queue");
+    }
+}

@@ -1,0 +1,324 @@
+//! Host-PC side: workload generation, groundtruth computation, and
+//! output validation (paper §II: the host feeds the FPGA and validates
+//! results against groundtruth).
+//!
+//! All generation is seeded and deterministic. The groundtruth path is
+//! fully independent of the PJRT path: scalar Rust implementations from
+//! `dsp`, `render` and `cnn` on the same quantized inputs.
+
+use crate::coordinator::benchmarks::Benchmark;
+use crate::error::{Error, Result};
+use crate::render::{self, Mesh, Pose};
+use crate::util::image::{Frame, PixelFormat};
+use crate::util::rng::Rng;
+
+/// Far-plane used to quantize render depths to 16 bpp.
+pub const RENDER_DEPTH_MAX: f32 = 8.0;
+
+/// One frame's worth of work: what goes over CIF, what the artifact
+/// consumes, and what the host expects back over LCD.
+pub struct WorkItem {
+    pub bench: Benchmark,
+    /// Planes transmitted over CIF (row-major; RGB as 3 planes).
+    pub input_frames: Vec<Frame>,
+    /// Arrays handed to the PJRT artifact (already normalized/dequantized
+    /// exactly as the VPU firmware would).
+    pub pjrt_inputs: Vec<Vec<f32>>,
+    /// Expected LCD frame, computed by the independent scalar pipeline.
+    pub expected: Frame,
+    /// CNN only: true patch labels (for accuracy reporting).
+    pub labels: Vec<bool>,
+}
+
+/// Deterministic normalized blur kernel for the conv benchmark
+/// (sum = 1, so outputs stay in [0, 1]).
+pub fn conv_kernel(k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xC0F0);
+    let mut kern: Vec<f32> = (0..k * k).map(|_| 0.1 + rng.next_f32()).collect();
+    let sum: f32 = kern.iter().sum();
+    for v in kern.iter_mut() {
+        *v /= sum;
+    }
+    kern
+}
+
+/// Deterministic test pose for the render benchmark.
+pub fn render_pose(seed: u64) -> Pose {
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    Pose {
+        rx: rng.range_f64(-0.5, 0.5) as f32,
+        ry: rng.range_f64(-0.5, 0.5) as f32,
+        rz: rng.range_f64(-0.5, 0.5) as f32,
+        tx: rng.range_f64(-0.4, 0.4) as f32,
+        ty: rng.range_f64(-0.4, 0.4) as f32,
+        tz: rng.range_f64(2.5, 3.5) as f32,
+    }
+}
+
+fn random_u8_frame(w: usize, h: usize, seed: u64) -> Frame {
+    let mut rng = Rng::new(seed);
+    Frame::from_data(
+        w,
+        h,
+        PixelFormat::Bpp8,
+        (0..w * h).map(|_| rng.next_u32() & 0xFF).collect(),
+    )
+    .unwrap()
+}
+
+/// Build the work item for one benchmark execution.
+///
+/// `mesh` is required for [`Benchmark::Render`] (the same model baked
+/// into the artifact); `weights` for [`Benchmark::CnnShip`].
+pub fn make_work(
+    bench: Benchmark,
+    seed: u64,
+    mesh: Option<&Mesh>,
+    weights: Option<&crate::cnn::Weights>,
+) -> Result<WorkItem> {
+    match bench {
+        Benchmark::Binning => {
+            let io = bench.input();
+            let frame = random_u8_frame(io.width, io.height, seed);
+            let norm = frame.to_f32_normalized();
+            let gt = crate::dsp::binning::binning_f32(&norm, io.height, io.width)?;
+            let out = bench.output();
+            let expected =
+                Frame::from_f32_normalized(out.width, out.height, out.format, &gt)?;
+            Ok(WorkItem {
+                bench,
+                input_frames: vec![frame],
+                pjrt_inputs: vec![norm],
+                expected,
+                labels: vec![],
+            })
+        }
+        Benchmark::Conv { k } => {
+            let io = bench.input();
+            let frame = random_u8_frame(io.width, io.height, seed);
+            let norm = frame.to_f32_normalized();
+            let kern = conv_kernel(k, seed);
+            let gt = crate::dsp::conv::conv2d_f32(&norm, io.height, io.width, &kern, k)?;
+            let out = bench.output();
+            let expected =
+                Frame::from_f32_normalized(out.width, out.height, out.format, &gt)?;
+            Ok(WorkItem {
+                bench,
+                input_frames: vec![frame],
+                pjrt_inputs: vec![norm, kern],
+                expected,
+                labels: vec![],
+            })
+        }
+        Benchmark::Render => {
+            let mesh = mesh.ok_or_else(|| {
+                Error::Config("render work item needs the mesh".into())
+            })?;
+            let out = bench.output();
+            let pose = render_pose(seed);
+            // Pose over CIF: 6 values, one line, 16 bpp — transported as
+            // raw half-scale integers; the artifact takes the f32 pose.
+            let pose_arr = pose.to_array().to_vec();
+            let tris =
+                render::project_triangles(&pose, mesh, out.width, out.height, mesh.faces.len());
+            let z = render::depth_render(&tris, out.width, out.height);
+            let data = render::raster::depth_to_u16(&z, RENDER_DEPTH_MAX);
+            let expected = Frame::from_data(out.width, out.height, out.format, data)?;
+            let pose_frame = Frame::from_data(
+                6,
+                1,
+                PixelFormat::Bpp16,
+                pose_arr
+                    .iter()
+                    .map(|&v| (((v + 4.0) / 8.0) * 65535.0) as u32 & 0xFFFF)
+                    .collect(),
+            )?;
+            Ok(WorkItem {
+                bench,
+                input_frames: vec![pose_frame],
+                pjrt_inputs: vec![pose_arr],
+                expected,
+                labels: vec![],
+            })
+        }
+        Benchmark::CnnShip => {
+            let weights = weights.ok_or_else(|| {
+                Error::Config("cnn work item needs trained weights".into())
+            })?;
+            let grid = 8usize;
+            let patch = 128usize;
+            let side = grid * patch;
+            let (frame_f32, labels) = crate::cnn::ships::ship_frame(grid, patch, seed);
+            // Quantize to 16-bit planes for CIF transport, then dequantize
+            // for the artifact — the groundtruth sees the same rounding.
+            let mut planes = Vec::with_capacity(3);
+            for c in 0..3 {
+                let plane: Vec<u32> = (0..side * side)
+                    .map(|i| (frame_f32[i * 3 + c] * 65535.0).round() as u32)
+                    .collect();
+                planes.push(Frame::from_data(side, side, PixelFormat::Bpp16, plane)?);
+            }
+            let dequant: Vec<f32> = (0..side * side * 3)
+                .map(|i| {
+                    let c = i % 3;
+                    let px = i / 3;
+                    planes[c].data[px] as f32 / 65535.0
+                })
+                .collect();
+            // Groundtruth: scalar CNN on each dequantized patch.
+            let mut expected_labels = Vec::with_capacity(grid * grid);
+            for gy in 0..grid {
+                for gx in 0..grid {
+                    let mut chip = crate::cnn::layers::FeatureMap::new(patch, patch, 3);
+                    for y in 0..patch {
+                        for x in 0..patch {
+                            for c in 0..3 {
+                                chip.data[(y * patch + x) * 3 + c] = dequant
+                                    [(((gy * patch + y) * side) + gx * patch + x) * 3 + c];
+                            }
+                        }
+                    }
+                    expected_labels
+                        .push(crate::cnn::layers::classify(weights, &chip)? as u32);
+                }
+            }
+            let expected =
+                Frame::from_data(64, 1, PixelFormat::Bpp16, expected_labels)?;
+            Ok(WorkItem {
+                bench,
+                input_frames: planes,
+                pjrt_inputs: vec![dequant],
+                expected,
+                labels,
+            })
+        }
+    }
+}
+
+/// Validation outcome for one received frame.
+#[derive(Clone, Debug)]
+pub struct Validation {
+    pub pixels: usize,
+    /// Pixels differing by more than 1 LSB from groundtruth.
+    pub mismatches: usize,
+    /// Maximum absolute pixel difference.
+    pub max_err: u32,
+    pub pass: bool,
+}
+
+/// Compare a received LCD frame against the work item's expectation.
+///
+/// Tolerance: quantization boundaries may flip +-1 LSB between the XLA
+/// and scalar float pipelines; rasterization seams may differ on a tiny
+/// fraction of edge pixels. Anything beyond that fails.
+pub fn validate(item: &WorkItem, received: &Frame) -> Result<Validation> {
+    if received.width != item.expected.width
+        || received.height != item.expected.height
+        || received.format != item.expected.format
+    {
+        return Err(Error::Validation(format!(
+            "geometry: got {}x{} {}bpp, expected {}x{} {}bpp",
+            received.width,
+            received.height,
+            received.format.bits(),
+            item.expected.width,
+            item.expected.height,
+            item.expected.format.bits()
+        )));
+    }
+    let mut mismatches = 0usize;
+    let mut max_err = 0u32;
+    for (&a, &b) in received.data.iter().zip(&item.expected.data) {
+        let d = a.abs_diff(b);
+        if d > 1 {
+            mismatches += 1;
+        }
+        max_err = max_err.max(d);
+    }
+    let pixels = received.data.len();
+    let allowed = match item.bench {
+        // Rasterization seam pixels (coverage flips on edges).
+        Benchmark::Render => pixels / 200,
+        // Everything else must agree to the LSB.
+        _ => 0,
+    };
+    Ok(Validation {
+        pixels,
+        mismatches,
+        max_err,
+        pass: mismatches <= allowed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_kernel_normalized() {
+        for k in [3usize, 7, 13] {
+            let kern = conv_kernel(k, 5);
+            assert_eq!(kern.len(), k * k);
+            let sum: f32 = kern.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(kern.iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn binning_work_item_self_consistent() {
+        let item = make_work(Benchmark::Binning, 3, None, None).unwrap();
+        assert_eq!(item.input_frames.len(), 1);
+        assert_eq!(item.input_frames[0].pixels(), 2048 * 2048);
+        assert_eq!(item.expected.pixels(), 1024 * 1024);
+        // Validating the expectation against itself passes.
+        let v = validate(&item, &item.expected.clone()).unwrap();
+        assert!(v.pass);
+        assert_eq!(v.mismatches, 0);
+    }
+
+    #[test]
+    fn validation_catches_corruption() {
+        let item = make_work(Benchmark::Conv { k: 3 }, 4, None, None).unwrap();
+        let mut bad = item.expected.clone();
+        for i in 0..100 {
+            bad.data[i * 37] ^= 0x10;
+        }
+        let v = validate(&item, &bad).unwrap();
+        assert!(!v.pass);
+        assert!(v.mismatches >= 90);
+    }
+
+    #[test]
+    fn validation_rejects_geometry_mismatch() {
+        let item = make_work(Benchmark::Conv { k: 3 }, 4, None, None).unwrap();
+        let wrong = Frame::new(16, 16, PixelFormat::Bpp8);
+        assert!(validate(&item, &wrong).is_err());
+    }
+
+    #[test]
+    fn render_work_item_uses_mesh() {
+        assert!(make_work(Benchmark::Render, 1, None, None).is_err());
+        let mesh = Mesh::octahedron();
+        let item = make_work(Benchmark::Render, 1, Some(&mesh), None).unwrap();
+        assert_eq!(item.pjrt_inputs[0].len(), 6);
+        // Some of the image is covered by the model.
+        let covered = item
+            .expected
+            .data
+            .iter()
+            .filter(|&&p| p < 60000)
+            .count();
+        assert!(covered > 1000, "covered {covered}");
+    }
+
+    #[test]
+    fn work_items_deterministic_per_seed() {
+        let a = make_work(Benchmark::Binning, 9, None, None).unwrap();
+        let b = make_work(Benchmark::Binning, 9, None, None).unwrap();
+        assert_eq!(a.input_frames[0], b.input_frames[0]);
+        assert_eq!(a.expected, b.expected);
+        let c = make_work(Benchmark::Binning, 10, None, None).unwrap();
+        assert_ne!(a.input_frames[0], c.input_frames[0]);
+    }
+}

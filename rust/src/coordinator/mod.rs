@@ -1,0 +1,26 @@
+//! The system coordinator: paper §II's co-processing architecture,
+//! wired end to end.
+//!
+//! * [`benchmarks`] — the four custom SW benchmarks (six Table II rows).
+//! * [`host`] — the Host PC: workload generation, groundtruth, validation
+//!   ("Our Host PC is responsible for transferring the I/O data to/from
+//!   the FPGA and validating the results via comparisons to groundtruth
+//!   data").
+//! * [`system`] — the FPGA + VPU testbed; Unmasked-mode frame execution
+//!   with real numerics through the PJRT runtime.
+//! * [`pipeline`] — the Masked-mode discrete-event pipeline simulation
+//!   (double-buffered, LEON0 = I/O, LEON1 = compute).
+//! * [`report`] — Table II / speedup / Fig. 5 formatting.
+//! * [`comparators`] — the cited Zynq-7020 / Jetson Nano comparison
+//!   models of §IV.
+
+pub mod benchmarks;
+pub mod comparators;
+pub mod host;
+pub mod pipeline;
+pub mod report;
+pub mod system;
+
+pub use benchmarks::Benchmark;
+pub use pipeline::{simulate_masked, MaskedResult, MaskedTiming};
+pub use system::{CoProcessor, FrameRun};

@@ -1,0 +1,158 @@
+//! Table/figure formatting: renders the simulator's outputs in the
+//! paper's own layout so EXPERIMENTS.md can diff them side by side.
+
+use crate::coordinator::pipeline::MaskedResult;
+use crate::coordinator::system::FrameRun;
+use crate::fabric::clock::SimTime;
+
+fn ms(t: SimTime) -> String {
+    if t.as_secs() < 1e-4 {
+        "<1us".to_string()
+    } else {
+        format!("{:.0}ms", t.as_ms())
+    }
+}
+
+/// One Table II row.
+pub fn table2_row(run: &FrameRun, masked: &MaskedResult) -> String {
+    let io = format!(
+        "{}/{}",
+        fmt_side(&run.bench.input()),
+        fmt_side(&run.bench.output())
+    );
+    format!(
+        "{:<22} {:<18} {:>7} {:>7} {:>7} | {:>8} {:>9.1} FPS | {:>8} {:>9.1} FPS",
+        run.bench.name(),
+        io,
+        ms(run.t_cif),
+        ms(run.t_proc),
+        ms(run.t_lcd),
+        ms(run.latency),
+        run.throughput_fps,
+        ms(masked.avg_latency),
+        masked.throughput_fps,
+    )
+}
+
+fn fmt_side(s: &crate::coordinator::benchmarks::IoSide) -> String {
+    if s.width * s.height <= 64 {
+        format!("{}x{}", s.width, s.height)
+    } else {
+        let mp = s.mpixels();
+        if mp.fract() == 0.0 {
+            format!("{}MP{}", mp as u32, if s.channels == 3 { " RGB" } else { "" })
+        } else {
+            format!("{mp:.1}MP")
+        }
+    }
+}
+
+pub fn table2_header() -> String {
+    format!(
+        "{:<22} {:<18} {:>7} {:>7} {:>7} | {:>8} {:>13} | {:>8} {:>13}\n{}",
+        "Benchmark",
+        "I/O Data",
+        "CIF",
+        "VPU",
+        "LCD",
+        "Unm.Lat",
+        "Unm.Thr",
+        "Msk.Lat",
+        "Msk.Thr",
+        "-".repeat(118)
+    )
+}
+
+/// Speedup table row (paper §IV text claims).
+pub fn speedup_row(run: &FrameRun) -> String {
+    format!(
+        "{:<22} LEON {:>9}  SHAVEx12 {:>8}  speedup {:>6.1}x  ({:.2} W, {:.1} proc-FPS/W)",
+        run.bench.name(),
+        ms(run.t_leon),
+        ms(run.t_proc),
+        run.speedup(),
+        run.power_w,
+        run.fps_per_watt(),
+    )
+}
+
+/// Validation summary line.
+pub fn validation_row(run: &FrameRun) -> String {
+    let acc = run
+        .accuracy
+        .map(|a| format!(", accuracy {:.1}%", a * 100.0))
+        .unwrap_or_default();
+    format!(
+        "{:<22} crc={} validated={} ({} px, {} mismatches, max_err {}{})",
+        run.bench.name(),
+        if run.crc_ok { "ok" } else { "FAIL" },
+        if run.validation.pass { "pass" } else { "FAIL" },
+        run.validation.pixels,
+        run.validation.mismatches,
+        run.validation.max_err,
+        acc,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::benchmarks::Benchmark;
+    use crate::coordinator::host::Validation;
+
+    fn dummy_run() -> FrameRun {
+        FrameRun {
+            bench: Benchmark::Conv { k: 3 },
+            t_cif: SimTime::from_ms(21.0),
+            t_proc: SimTime::from_ms(8.0),
+            t_lcd: SimTime::from_ms(21.0),
+            latency: SimTime::from_ms(50.0),
+            throughput_fps: 20.0,
+            crc_ok: true,
+            validation: Validation {
+                pixels: 100,
+                mismatches: 0,
+                max_err: 0,
+                pass: true,
+            },
+            accuracy: None,
+            power_w: 0.95,
+            t_leon: SimTime::from_ms(280.0),
+        }
+    }
+
+    #[test]
+    fn table2_row_contains_key_numbers() {
+        let masked = MaskedResult {
+            first_latency: SimTime::from_ms(300.0),
+            avg_latency: SimTime::from_ms(336.0),
+            period: SimTime::from_ms(126.0),
+            throughput_fps: 7.9,
+            frames: 32,
+        };
+        let row = table2_row(&dummy_run(), &masked);
+        assert!(row.contains("3x3 FP Convolution"));
+        assert!(row.contains("21ms"));
+        assert!(row.contains("20.0 FPS"));
+        assert!(row.contains("7.9 FPS"));
+    }
+
+    #[test]
+    fn sub_microsecond_renders_as_less_than_1us() {
+        assert_eq!(ms(SimTime::from_us(0.5)), "<1us");
+        assert_eq!(ms(SimTime::from_ms(21.0)), "21ms");
+    }
+
+    #[test]
+    fn speedup_row_shows_ratio() {
+        let row = speedup_row(&dummy_run());
+        assert!(row.contains("35.0x"), "{row}");
+    }
+
+    #[test]
+    fn validation_row_reports_pass() {
+        let row = validation_row(&dummy_run());
+        assert!(row.contains("crc=ok"));
+        assert!(row.contains("validated=pass"));
+    }
+}

@@ -1,0 +1,306 @@
+//! The assembled testbed: Host PC <-> FPGA (CIF/LCD) <-> VPU, with real
+//! numerics through the PJRT runtime and simulated time through the
+//! fabric/VPU models.
+
+use crate::config::SystemConfig;
+use crate::coordinator::benchmarks::Benchmark;
+use crate::coordinator::host::{self, Validation};
+use crate::coordinator::pipeline::{simulate_masked, MaskedResult, MaskedTiming};
+use crate::error::{Error, Result};
+use crate::fabric::bus::{Bus, BusConfig};
+use crate::fabric::clock::SimTime;
+use crate::iface::{CifModule, LcdModule};
+use crate::render::Mesh;
+use crate::runtime::Runtime;
+use crate::util::image::Frame;
+use crate::vpu::cost::{CostModel, Workload};
+use crate::vpu::drivers::{CamGeneric, LcdDriver};
+use crate::vpu::power::PowerModel;
+use crate::vpu::scheduler;
+
+/// Result of one Unmasked frame through the full stack.
+#[derive(Clone, Debug)]
+pub struct FrameRun {
+    pub bench: Benchmark,
+    /// CIF input transfer time (all planes).
+    pub t_cif: SimTime,
+    /// VPU processing time (scheduled makespan).
+    pub t_proc: SimTime,
+    /// LCD output transfer time.
+    pub t_lcd: SimTime,
+    /// Unmasked latency = t_cif + t_proc + t_lcd (paper footnote 1).
+    pub latency: SimTime,
+    pub throughput_fps: f64,
+    pub crc_ok: bool,
+    pub validation: Validation,
+    /// CNN only: classification accuracy against the true chip labels.
+    pub accuracy: Option<f64>,
+    /// VPU power during the processing phase (Fig. 5 model).
+    pub power_w: f64,
+    /// LEON-baseline processing time (for the speedup table).
+    pub t_leon: SimTime,
+}
+
+impl FrameRun {
+    pub fn speedup(&self) -> f64 {
+        self.t_leon.as_secs() / self.t_proc.as_secs()
+    }
+
+    pub fn fps_per_watt(&self) -> f64 {
+        // Processing-rate per Watt (the paper's Fig. 5 comparison metric).
+        1.0 / self.t_proc.as_secs() / self.power_w
+    }
+}
+
+/// The co-processor testbed.
+pub struct CoProcessor {
+    pub cfg: SystemConfig,
+    pub runtime: Runtime,
+    pub cost: CostModel,
+    pub power: PowerModel,
+    cif: CifModule,
+    lcd: LcdModule,
+    cam: CamGeneric,
+    lcd_drv: LcdDriver,
+    mesh_full: Option<Mesh>,
+    weights: Option<crate::cnn::Weights>,
+}
+
+impl CoProcessor {
+    pub fn new(cfg: SystemConfig) -> Result<CoProcessor> {
+        cfg.validate()?;
+        let runtime = Runtime::open(std::path::Path::new(&cfg.artifacts_dir))?;
+        let cif = CifModule::new(cfg.cif, Bus::new(BusConfig::default_50mhz()))?;
+        let lcd = LcdModule::new(cfg.lcd, Bus::new(BusConfig::default_50mhz()))?;
+        let cam = CamGeneric::new(cfg.cif.pixel_clock_hz, cfg.cif.porch_cycles_per_line);
+        let lcd_drv =
+            LcdDriver::new(cfg.lcd.pixel_clock_hz, cfg.lcd.porch_cycles_per_line);
+
+        // Load the render mesh + CNN weights if their artifacts exist.
+        let mesh_full = runtime
+            .manifest
+            .get("render_1024")
+            .ok()
+            .and_then(|spec| spec.meta_str("mesh_file").map(String::from))
+            .and_then(|f| Mesh::load(runtime.manifest.dir.join(f)).ok());
+        let weights = crate::cnn::Weights::load(
+            runtime.manifest.dir.join("cnn_weights.bin"),
+        )
+        .ok();
+
+        Ok(CoProcessor {
+            cost: CostModel::new(cfg.vpu),
+            power: PowerModel::default(),
+            cfg,
+            runtime,
+            cif,
+            lcd,
+            cam,
+            lcd_drv,
+            mesh_full,
+            weights,
+        })
+    }
+
+    pub fn with_defaults() -> Result<CoProcessor> {
+        CoProcessor::new(SystemConfig::paper())
+    }
+
+    /// Build the cost-model workload for a benchmark (render uses the
+    /// real projected content of this seed's pose).
+    fn workload(&self, bench: Benchmark, seed: u64) -> Result<Workload> {
+        use crate::vpu::cost::workloads;
+        Ok(match bench {
+            Benchmark::Binning => workloads::binning_4mp(),
+            Benchmark::Conv { .. } => workloads::conv_1mp(),
+            Benchmark::CnnShip => workloads::cnn_1mp(),
+            Benchmark::Render => {
+                let mesh = self.mesh_full.as_ref().ok_or_else(|| {
+                    Error::Config("render mesh not loaded (run `make artifacts`)".into())
+                })?;
+                let out = bench.output();
+                let pose = host::render_pose(seed);
+                let tris = crate::render::project_triangles(
+                    &pose,
+                    mesh,
+                    out.width,
+                    out.height,
+                    mesh.faces.len(),
+                );
+                let (n_bands, _) = bench.bands();
+                Workload {
+                    out_elems: out.width * out.height,
+                    in_elems: 6,
+                    band_bbox_px: crate::render::camera::band_bbox_px(
+                        &tris, out.width, out.height, n_bands,
+                    ),
+                    n_tris: mesh.faces.len(),
+                    patches: 0,
+                }
+            }
+        })
+    }
+
+    /// Scheduled SHAVE processing time for one frame.
+    pub fn proc_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
+        let w = self.workload(bench, seed)?;
+        let (n_bands, dynamic) = bench.bands();
+        let bands = self.cost.band_cycles(bench.kind(), &w, n_bands);
+        let f = self.cfg.vpu.shave_clock_hz;
+        let n = self.cfg.vpu.n_shaves;
+        Ok(if dynamic {
+            scheduler::dynamic_makespan(&bands, n, f)
+        } else {
+            scheduler::static_makespan(&bands, n, f)
+        })
+    }
+
+    /// LEON baseline time for the speedup comparison.
+    pub fn leon_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
+        let w = self.workload(bench, seed)?;
+        Ok(self.cost.leon_time(bench.kind(), &w))
+    }
+
+    /// Run one frame in Unmasked mode: real data through CIF, real
+    /// numerics through PJRT, real data back through LCD, validated.
+    pub fn run_unmasked(&mut self, bench: Benchmark, seed: u64) -> Result<FrameRun> {
+        let item = host::make_work(
+            bench,
+            seed,
+            self.mesh_full.as_ref(),
+            self.weights.as_ref(),
+        )?;
+
+        // --- CIF: host -> FPGA -> VPU (per plane) --------------------
+        let in_io = bench.input();
+        let mut t_cif = SimTime::ZERO;
+        let mut vpu_frames = Vec::new();
+        for plane in &item.input_frames {
+            self.cif.regs.configure(plane.width, plane.height, plane.format);
+            let (wire, tx) = self.cif.send_frame(plane, SimTime::ZERO)?;
+            let (got, _t_rx) = self.cam.receive(&wire, SimTime::ZERO)?;
+            t_cif += tx.wire_time;
+            vpu_frames.push(got);
+        }
+        debug_assert_eq!(vpu_frames.len(), in_io.channels);
+
+        // --- VPU processing: numerics (PJRT) + time (cost model) -----
+        let inputs: Vec<&[f32]> = item.pjrt_inputs.iter().map(|v| v.as_slice()).collect();
+        let outputs = self.runtime.execute(&bench.artifact(), &inputs)?;
+        let t_proc = self.proc_time(bench, seed)?;
+        let t_leon = self.leon_time(bench, seed)?;
+
+        // --- Convert the artifact output to the LCD frame ------------
+        let out_io = bench.output();
+        let (out_frame, accuracy) = match bench {
+            Benchmark::Binning | Benchmark::Conv { .. } => (
+                Frame::from_f32_normalized(
+                    out_io.width,
+                    out_io.height,
+                    out_io.format,
+                    &outputs[0],
+                )?,
+                None,
+            ),
+            Benchmark::Render => {
+                let data = crate::render::raster::depth_to_u16(
+                    &outputs[0],
+                    host::RENDER_DEPTH_MAX,
+                );
+                (
+                    Frame::from_data(out_io.width, out_io.height, out_io.format, data)?,
+                    None,
+                )
+            }
+            Benchmark::CnnShip => {
+                let logits = &outputs[0]; // (64, 2)
+                let labels: Vec<u32> = logits
+                    .chunks_exact(2)
+                    .map(|l| (l[1] > l[0]) as u32)
+                    .collect();
+                let acc = labels
+                    .iter()
+                    .zip(&item.labels)
+                    .filter(|(&p, &t)| (p == 1) == t)
+                    .count() as f64
+                    / labels.len() as f64;
+                (
+                    Frame::from_data(out_io.width, out_io.height, out_io.format, labels)?,
+                    Some(acc),
+                )
+            }
+        };
+
+        // --- LCD: VPU -> FPGA -> host ---------------------------------
+        self.lcd
+            .regs
+            .configure(out_frame.width, out_frame.height, out_frame.format);
+        let (wire_back, _t_tx) = self.lcd_drv.send(&out_frame, SimTime::ZERO);
+        let (received, rx) = self.lcd.receive_frame(&wire_back, SimTime::ZERO)?;
+        let t_lcd = rx.wire_time;
+
+        // --- Host validation ------------------------------------------
+        let validation = host::validate(&item, &received)?;
+        let latency = t_cif + t_proc + t_lcd;
+
+        Ok(FrameRun {
+            bench,
+            t_cif,
+            t_proc,
+            t_lcd,
+            latency,
+            throughput_fps: 1.0 / latency.as_secs(),
+            crc_ok: rx.crc_ok,
+            validation,
+            accuracy,
+            power_w: self.power.shave_power(bench.kind()),
+            t_leon,
+        })
+    }
+
+    /// Masked-mode phase timings derived from an Unmasked run.
+    pub fn masked_timing(&self, run: &FrameRun) -> MaskedTiming {
+        let copy_rate = self.cfg.vpu.dram_copy_mpx_per_s;
+        let in_px = run.bench.input().mpixels() * (1 << 20) as f64;
+        let out_px = run.bench.output().mpixels() * (1 << 20) as f64;
+        MaskedTiming {
+            t_cif: run.t_cif,
+            t_cifbuf: SimTime::from_secs(in_px / copy_rate),
+            t_proc: run.t_proc,
+            t_lcdbuf: SimTime::from_secs(out_px / copy_rate),
+            t_lcd: run.t_lcd,
+        }
+    }
+
+    /// Run Unmasked once (real data) + Masked DES over `n_frames`.
+    pub fn run_both_modes(
+        &mut self,
+        bench: Benchmark,
+        seed: u64,
+        n_frames: usize,
+    ) -> Result<(FrameRun, MaskedResult)> {
+        let run = self.run_unmasked(bench, seed)?;
+        let masked = simulate_masked(&self.masked_timing(&run), n_frames);
+        Ok((run, masked))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Full-stack integration lives in rust/tests/; here only the pieces
+    //! that need no artifacts.
+    use super::*;
+
+    #[test]
+    fn masked_timing_buffer_copies_match_42ms_per_mpixel() {
+        // Construct timings directly (no artifacts needed).
+        let cfg = SystemConfig::paper();
+        let copy = cfg.vpu.dram_copy_mpx_per_s;
+        let binning_in = Benchmark::Binning.input().mpixels() * (1 << 20) as f64;
+        let t = binning_in / copy;
+        assert!((t - 0.168).abs() < 0.002, "4 MPixel copy {t}s");
+        let cnn_in = Benchmark::CnnShip.input().mpixels() * (1 << 20) as f64;
+        let t = cnn_in / copy;
+        assert!((t - 0.126).abs() < 0.002, "RGB MPixel copy {t}s");
+    }
+}

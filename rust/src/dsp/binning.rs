@@ -1,0 +1,101 @@
+//! Scalar 2x2 averaging binning — the LEON baseline and host groundtruth
+//! for benchmark 1 (paper §III-C).
+//!
+//! Matches the Pallas kernel bit-for-bit in f32 (sum of four samples times
+//! 0.25, same association order).
+
+use crate::error::{Error, Result};
+
+/// f32 path (the numeric contract shared with the L1 kernel).
+pub fn binning_f32(input: &[f32], h: usize, w: usize) -> Result<Vec<f32>> {
+    if h % 2 != 0 || w % 2 != 0 || input.len() != h * w {
+        return Err(Error::Geometry(format!(
+            "binning needs even HxW matching data; got {h}x{w}, {} samples",
+            input.len()
+        )));
+    }
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0f32; oh * ow];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let y = oy * 2;
+            let x = ox * 2;
+            // Same association order as the kernel: (a + b + c + d) * 0.25.
+            let s = input[y * w + x]
+                + input[y * w + x + 1]
+                + input[(y + 1) * w + x]
+                + input[(y + 1) * w + x + 1];
+            out[oy * ow + ox] = s * 0.25;
+        }
+    }
+    Ok(out)
+}
+
+/// Integer path on 8/16-bit pixels (rounded mean), the form the paper's
+/// in-place LEON code uses on raw camera data.
+pub fn binning_u32(input: &[u32], h: usize, w: usize) -> Result<Vec<u32>> {
+    if h % 2 != 0 || w % 2 != 0 || input.len() != h * w {
+        return Err(Error::Geometry("bad binning geometry".into()));
+    }
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0u32; oh * ow];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let y = oy * 2;
+            let x = ox * 2;
+            let s = input[y * w + x]
+                + input[y * w + x + 1]
+                + input[(y + 1) * w + x]
+                + input[(y + 1) * w + x + 1];
+            out[oy * ow + ox] = (s + 2) / 4; // round-to-nearest
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f32_explicit() {
+        let input = vec![1.0, 2.0, 5.0, 7.0, 3.0, 4.0, 9.0, 11.0];
+        let out = binning_f32(&input, 2, 4).unwrap();
+        assert_eq!(out, vec![2.5, 8.0]);
+    }
+
+    #[test]
+    fn u32_rounds_to_nearest() {
+        // mean(1,1,1,2) = 1.25 -> 1; mean(3,3,3,4) = 3.25 -> 3;
+        // mean(1,2,2,2) = 1.75 -> 2.
+        let out = binning_u32(&[1, 1, 3, 3, 1, 2, 3, 4], 2, 4).unwrap();
+        assert_eq!(out, vec![1, 3]);
+        let out2 = binning_u32(&[1, 2, 0, 0, 2, 2, 0, 0], 2, 4).unwrap();
+        assert_eq!(out2[0], 2);
+    }
+
+    #[test]
+    fn rejects_odd_geometry() {
+        assert!(binning_f32(&[0.0; 6], 2, 3).is_err());
+        assert!(binning_f32(&[0.0; 8], 4, 2).is_ok());
+        assert!(binning_f32(&[0.0; 7], 2, 4).is_err());
+    }
+
+    #[test]
+    fn preserves_mean_brightness() {
+        let mut rng = Rng::new(5);
+        let (h, w) = (64, 64);
+        let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32()).collect();
+        let out = binning_f32(&input, h, w).unwrap();
+        let mi: f64 = input.iter().map(|&v| v as f64).sum::<f64>() / input.len() as f64;
+        let mo: f64 = out.iter().map(|&v| v as f64).sum::<f64>() / out.len() as f64;
+        assert!((mi - mo).abs() < 1e-6);
+    }
+
+    #[test]
+    fn idempotent_on_constant() {
+        let out = binning_u32(&vec![77u32; 16 * 16], 16, 16).unwrap();
+        assert!(out.iter().all(|&v| v == 77));
+    }
+}

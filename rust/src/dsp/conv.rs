@@ -1,0 +1,100 @@
+//! Scalar 'same' 2-D cross-correlation — LEON baseline / host groundtruth
+//! for benchmark 2 (paper §III-C). Zero padding, f32, identical tap order
+//! to the Pallas kernel (u-major, then v).
+
+use crate::error::{Error, Result};
+
+pub fn conv2d_f32(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    k: usize,
+) -> Result<Vec<f32>> {
+    if input.len() != h * w {
+        return Err(Error::Geometry("input size mismatch".into()));
+    }
+    if kernel.len() != k * k || k % 2 == 0 {
+        return Err(Error::Geometry(format!("kernel must be odd square, got {k}")));
+    }
+    let p = (k / 2) as isize;
+    let mut out = vec![0f32; h * w];
+    for y in 0..h as isize {
+        for x in 0..w as isize {
+            let mut acc = 0f32;
+            for u in 0..k as isize {
+                for v in 0..k as isize {
+                    let yy = y + u - p;
+                    let xx = x + v - p;
+                    if yy >= 0 && yy < h as isize && xx >= 0 && xx < w as isize {
+                        acc += input[(yy * w as isize + xx) as usize]
+                            * kernel[(u * k as isize + v) as usize];
+                    }
+                }
+            }
+            out[(y * w as isize + x) as usize] = acc;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_kernel() {
+        let mut rng = Rng::new(1);
+        let input: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+        let mut k = vec![0f32; 9];
+        k[4] = 1.0;
+        let out = conv2d_f32(&input, 8, 8, &k, 3).unwrap();
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn box_blur_constant_interior() {
+        let input = vec![1f32; 36];
+        let k = vec![1.0 / 9.0; 9];
+        let out = conv2d_f32(&input, 6, 6, &k, 3).unwrap();
+        for y in 1..5 {
+            for x in 1..5 {
+                assert!((out[y * 6 + x] - 1.0).abs() < 1e-6);
+            }
+        }
+        // Corner sees only 4 taps.
+        assert!((out[0] - 4.0 / 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shift_kernel_moves_image() {
+        // Kernel with 1 at (u=1, v=0) pulls the left neighbor.
+        let input: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut k = vec![0f32; 9];
+        k[3] = 1.0; // u=1, v=0 -> offset (0, -1)
+        let out = conv2d_f32(&input, 4, 4, &k, 3).unwrap();
+        assert_eq!(out[5], input[4]);
+        assert_eq!(out[0], 0.0); // zero padding
+    }
+
+    #[test]
+    fn rejects_even_kernel() {
+        assert!(conv2d_f32(&[0.0; 16], 4, 4, &[0.0; 16], 4).is_err());
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Rng::new(2);
+        let a: Vec<f32> = (0..100).map(|_| rng.next_f32()).collect();
+        let b: Vec<f32> = (0..100).map(|_| rng.next_f32()).collect();
+        let k: Vec<f32> = (0..25).map(|_| rng.next_f32()).collect();
+        let sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let ca = conv2d_f32(&a, 10, 10, &k, 5).unwrap();
+        let cb = conv2d_f32(&b, 10, 10, &k, 5).unwrap();
+        let cs = conv2d_f32(&sum, 10, 10, &k, 5).unwrap();
+        for i in 0..100 {
+            assert!((cs[i] - ca[i] - cb[i]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! 64-tap FIR filter — FPGA heritage DSP function (paper Table I row 3:
+//! "FIR Filter, 64-tap, 16bpp": 0.5% LUT, 0.5% DFF, 2% DSP).
+//!
+//! Two paths, mirroring the HDL:
+//! * [`fir_f32`] — reference float implementation;
+//! * [`FirFixed`] — the hardware's Q1.15 fixed-point systolic form
+//!   (streaming, one sample in / one out per cycle), with saturation.
+
+use crate::error::{Error, Result};
+
+/// Float reference: y[n] = sum_k h[k] * x[n-k] (causal, zero history).
+pub fn fir_f32(input: &[f32], taps: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; input.len()];
+    for n in 0..input.len() {
+        let mut acc = 0f32;
+        for (k, &h) in taps.iter().enumerate() {
+            if n >= k {
+                acc += h * input[n - k];
+            }
+        }
+        out[n] = acc;
+    }
+    out
+}
+
+/// Q1.15 fixed-point streaming FIR with a 64-deep delay line (the DSP48
+/// cascade in the HDL). Coefficients and samples are i16; the 40-bit DSP
+/// accumulator is modelled with i64 and the output saturates to i16.
+#[derive(Clone, Debug)]
+pub struct FirFixed {
+    taps: Vec<i16>,
+    delay: Vec<i16>,
+    pos: usize,
+}
+
+pub const Q15: f32 = 32768.0;
+
+impl FirFixed {
+    pub fn new(taps: Vec<i16>) -> Result<FirFixed> {
+        if taps.is_empty() || taps.len() > 256 {
+            return Err(Error::Config(format!("bad tap count {}", taps.len())));
+        }
+        let n = taps.len();
+        Ok(FirFixed {
+            taps,
+            delay: vec![0; n],
+            pos: 0,
+        })
+    }
+
+    /// 64-tap low-pass (windowed sinc) like the paper's benchmark config.
+    pub fn lowpass64(cutoff: f32) -> FirFixed {
+        let n = 64usize;
+        let mut taps = Vec::with_capacity(n);
+        let fc = cutoff.clamp(0.01, 0.49);
+        for i in 0..n {
+            let m = i as f32 - (n as f32 - 1.0) / 2.0;
+            let sinc = if m.abs() < 1e-6 {
+                2.0 * fc
+            } else {
+                (2.0 * std::f32::consts::PI * fc * m).sin() / (std::f32::consts::PI * m)
+            };
+            // Hamming window.
+            let wnd = 0.54
+                - 0.46
+                    * (2.0 * std::f32::consts::PI * i as f32 / (n as f32 - 1.0)).cos();
+            taps.push(((sinc * wnd) * Q15).round().clamp(-32768.0, 32767.0) as i16);
+        }
+        FirFixed::new(taps).unwrap()
+    }
+
+    pub fn taps(&self) -> &[i16] {
+        &self.taps
+    }
+
+    /// Process one sample (streaming; matches the systolic pipeline).
+    pub fn step(&mut self, x: i16) -> i16 {
+        self.delay[self.pos] = x;
+        let n = self.taps.len();
+        let mut acc: i64 = 0;
+        for k in 0..n {
+            let idx = (self.pos + n - k) % n;
+            acc += self.taps[k] as i64 * self.delay[idx] as i64;
+        }
+        self.pos = (self.pos + 1) % n;
+        // Q1.15 * Q1.15 = Q2.30; shift back with rounding, saturate.
+        let y = (acc + (1 << 14)) >> 15;
+        y.clamp(i16::MIN as i64, i16::MAX as i64) as i16
+    }
+
+    /// Batch convenience.
+    pub fn process(&mut self, input: &[i16]) -> Vec<i16> {
+        input.iter().map(|&x| self.step(x)).collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.delay.fill(0);
+        self.pos = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn float_impulse_recovers_taps() {
+        let taps = vec![0.5, 0.25, -0.125];
+        let mut impulse = vec![0f32; 8];
+        impulse[0] = 1.0;
+        let out = fir_f32(&impulse, &taps);
+        assert_eq!(&out[..3], &taps[..]);
+        assert!(out[3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fixed_impulse_recovers_taps() {
+        let mut fir = FirFixed::lowpass64(0.2);
+        let mut input = vec![0i16; 64];
+        input[0] = 16384; // 0.5 in Q15
+        let out = fir.process(&input);
+        for (k, &y) in out.iter().enumerate() {
+            let expect = (fir.taps()[k] as i64 * 16384 + (1 << 14)) >> 15;
+            assert_eq!(y as i64, expect, "tap {k}");
+        }
+    }
+
+    #[test]
+    fn fixed_matches_float_within_quantization() {
+        let mut rng = Rng::new(3);
+        let n = 512;
+        let xf: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let xi: Vec<i16> = xf.iter().map(|&v| (v * Q15) as i16).collect();
+        let mut fir = FirFixed::lowpass64(0.15);
+        let taps_f: Vec<f32> = fir.taps().iter().map(|&t| t as f32 / Q15).collect();
+        let yf = fir_f32(&xf, &taps_f);
+        let yi = fir.process(&xi);
+        for i in 0..n {
+            let err = (yi[i] as f32 / Q15 - yf[i]).abs();
+            assert!(err < 3e-3, "i={i} err={err}");
+        }
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let mut rng = Rng::new(4);
+        let input: Vec<i16> = (0..300).map(|_| rng.next_u32() as i16).collect();
+        let mut a = FirFixed::lowpass64(0.1);
+        let mut b = FirFixed::lowpass64(0.1);
+        let batch = a.process(&input);
+        let streamed: Vec<i16> = input
+            .chunks(17)
+            .flat_map(|c| b.process(c))
+            .collect();
+        assert_eq!(batch, streamed);
+    }
+
+    #[test]
+    fn lowpass_attenuates_high_frequency() {
+        let mut fir = FirFixed::lowpass64(0.1);
+        let n = 1024;
+        // Low tone (f=0.02) + high tone (f=0.4).
+        let lo: Vec<i16> = (0..n)
+            .map(|i| ((2.0 * std::f32::consts::PI * 0.02 * i as f32).sin() * 12000.0) as i16)
+            .collect();
+        let hi: Vec<i16> = (0..n)
+            .map(|i| ((2.0 * std::f32::consts::PI * 0.4 * i as f32).sin() * 12000.0) as i16)
+            .collect();
+        let ylo = fir.process(&lo);
+        fir.reset();
+        let yhi = fir.process(&hi);
+        let rms = |v: &[i16]| {
+            (v[200..].iter().map(|&s| (s as f64).powi(2)).sum::<f64>()
+                / (v.len() - 200) as f64)
+                .sqrt()
+        };
+        assert!(rms(&ylo) > 20.0 * rms(&yhi), "{} vs {}", rms(&ylo), rms(&yhi));
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let taps = vec![i16::MAX; 4];
+        let mut fir = FirFixed::new(taps).unwrap();
+        let out = fir.process(&[i16::MAX; 8]);
+        assert_eq!(out[7], i16::MAX); // would overflow without saturation
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut fir = FirFixed::lowpass64(0.2);
+        fir.process(&[1000i16; 70]);
+        fir.reset();
+        let out = fir.step(0);
+        assert_eq!(out, 0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Harris corner detector — FPGA heritage vision function (paper Table I
+//! row 4: "Harris Corner Detect., 1024x32, 8/32bpp").
+//!
+//! Classic pipeline, matching the streamed band-processing HDL form the
+//! resource row describes (the FPGA processes 1024-wide bands of 32 rows):
+//! Sobel gradients -> structure tensor (Ixx, Iyy, Ixy) -> 5x5 Gaussian
+//! smoothing -> R = det(M) - k trace(M)^2 -> threshold + 3x3 NMS.
+
+/// Harris parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct HarrisParams {
+    /// Harris k constant (typically 0.04-0.06).
+    pub k: f32,
+    /// Response threshold relative to the max response (0..1).
+    pub rel_threshold: f32,
+}
+
+impl Default for HarrisParams {
+    fn default() -> Self {
+        HarrisParams {
+            k: 0.05,
+            rel_threshold: 0.02,
+        }
+    }
+}
+
+/// A detected corner.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Corner {
+    pub x: usize,
+    pub y: usize,
+    pub response: f32,
+}
+
+/// Sobel gradients (zero at the 1-px border).
+pub fn sobel(img: &[f32], h: usize, w: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut gx = vec![0f32; h * w];
+    let mut gy = vec![0f32; h * w];
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            let at = |yy: usize, xx: usize| img[yy * w + xx];
+            gx[y * w + x] = (at(y - 1, x + 1) + 2.0 * at(y, x + 1) + at(y + 1, x + 1))
+                - (at(y - 1, x - 1) + 2.0 * at(y, x - 1) + at(y + 1, x - 1));
+            gy[y * w + x] = (at(y + 1, x - 1) + 2.0 * at(y + 1, x) + at(y + 1, x + 1))
+                - (at(y - 1, x - 1) + 2.0 * at(y - 1, x) + at(y - 1, x + 1));
+        }
+    }
+    (gx, gy)
+}
+
+/// Separable 5-tap binomial smoothing (1,4,6,4,1)/16 per axis.
+fn smooth5(src: &[f32], h: usize, w: usize) -> Vec<f32> {
+    const K: [f32; 5] = [1.0, 4.0, 6.0, 4.0, 1.0];
+    let norm = 16.0;
+    let mut tmp = vec![0f32; h * w];
+    let mut out = vec![0f32; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0f32;
+            for (i, &kv) in K.iter().enumerate() {
+                let xx = (x + i).saturating_sub(2).min(w - 1);
+                acc += kv * src[y * w + xx];
+            }
+            tmp[y * w + x] = acc / norm;
+        }
+    }
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0f32;
+            for (i, &kv) in K.iter().enumerate() {
+                let yy = (y + i).saturating_sub(2).min(h - 1);
+                acc += kv * tmp[yy * w + x];
+            }
+            out[y * w + x] = acc / norm;
+        }
+    }
+    out
+}
+
+/// Full-response map (before thresholding).
+pub fn harris_response(img: &[f32], h: usize, w: usize, params: &HarrisParams) -> Vec<f32> {
+    assert_eq!(img.len(), h * w);
+    let (gx, gy) = sobel(img, h, w);
+    let mut ixx = vec![0f32; h * w];
+    let mut iyy = vec![0f32; h * w];
+    let mut ixy = vec![0f32; h * w];
+    for i in 0..h * w {
+        ixx[i] = gx[i] * gx[i];
+        iyy[i] = gy[i] * gy[i];
+        ixy[i] = gx[i] * gy[i];
+    }
+    let sxx = smooth5(&ixx, h, w);
+    let syy = smooth5(&iyy, h, w);
+    let sxy = smooth5(&ixy, h, w);
+    let mut r = vec![0f32; h * w];
+    for i in 0..h * w {
+        let det = sxx[i] * syy[i] - sxy[i] * sxy[i];
+        let tr = sxx[i] + syy[i];
+        r[i] = det - params.k * tr * tr;
+    }
+    r
+}
+
+/// Detect corners: threshold (relative to max response) + 3x3 NMS.
+pub fn detect(img: &[f32], h: usize, w: usize, params: &HarrisParams) -> Vec<Corner> {
+    let r = harris_response(img, h, w, params);
+    let rmax = r.iter().cloned().fold(0f32, f32::max);
+    if rmax <= 0.0 {
+        return vec![];
+    }
+    let thresh = rmax * params.rel_threshold;
+    let mut corners = Vec::new();
+    for y in 2..h - 2 {
+        for x in 2..w - 2 {
+            let v = r[y * w + x];
+            if v < thresh {
+                continue;
+            }
+            let mut is_max = true;
+            'nms: for dy in -1i32..=1 {
+                for dx in -1i32..=1 {
+                    if dy == 0 && dx == 0 {
+                        continue;
+                    }
+                    let nv = r[((y as i32 + dy) * w as i32 + x as i32 + dx) as usize];
+                    if nv > v {
+                        is_max = false;
+                        break 'nms;
+                    }
+                }
+            }
+            if is_max {
+                corners.push(Corner { x, y, response: v });
+            }
+        }
+    }
+    corners
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// White square on black background at (x0, y0) size s.
+    fn square_image(h: usize, w: usize, x0: usize, y0: usize, s: usize) -> Vec<f32> {
+        let mut img = vec![0f32; h * w];
+        for y in y0..y0 + s {
+            for x in x0..x0 + s {
+                img[y * w + x] = 1.0;
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn detects_square_corners() {
+        let img = square_image(64, 64, 20, 20, 16);
+        let corners = detect(&img, 64, 64, &HarrisParams::default());
+        // Expect detections near the 4 square corners.
+        let expected = [(20, 20), (35, 20), (20, 35), (35, 35)];
+        for (ex, ey) in expected {
+            let hit = corners
+                .iter()
+                .any(|c| (c.x as i32 - ex).abs() <= 2 && (c.y as i32 - ey).abs() <= 2);
+            assert!(hit, "no corner near ({ex},{ey}); got {corners:?}");
+        }
+    }
+
+    #[test]
+    fn flat_image_has_no_corners() {
+        let img = vec![0.5f32; 64 * 64];
+        assert!(detect(&img, 64, 64, &HarrisParams::default()).is_empty());
+    }
+
+    #[test]
+    fn straight_edge_is_not_a_corner() {
+        // Vertical step edge through the middle.
+        let mut img = vec![0f32; 64 * 64];
+        for y in 0..64 {
+            for x in 32..64 {
+                img[y * 64 + x] = 1.0;
+            }
+        }
+        let corners = detect(&img, 64, 64, &HarrisParams::default());
+        // The edge interior must not fire (ends may, due to the border).
+        for c in &corners {
+            assert!(
+                c.y < 5 || c.y > 58,
+                "corner on edge interior at ({}, {})",
+                c.x,
+                c.y
+            );
+        }
+    }
+
+    #[test]
+    fn response_negative_on_edges_positive_on_corners() {
+        let img = square_image(32, 32, 10, 10, 12);
+        let r = harris_response(&img, 32, 32, &HarrisParams::default());
+        // Corner pixel: strongly positive.
+        assert!(r[11 * 32 + 11] > 0.0);
+        // Edge midpoint: negative (det ~ 0, trace large).
+        assert!(r[16 * 32 + 10] < 0.0);
+    }
+
+    #[test]
+    fn noise_robustness_rough() {
+        let mut rng = Rng::new(6);
+        let mut img = square_image(64, 64, 24, 24, 16);
+        for v in img.iter_mut() {
+            *v += (rng.next_f32() - 0.5) * 0.05;
+        }
+        let corners = detect(&img, 64, 64, &HarrisParams::default());
+        assert!(!corners.is_empty());
+        assert!(corners.len() < 40, "too many spurious corners: {}", corners.len());
+    }
+
+    #[test]
+    fn paper_band_geometry_runs() {
+        // Table I row: 1024x32 band.
+        let mut rng = Rng::new(7);
+        let img: Vec<f32> = (0..1024 * 32).map(|_| rng.next_f32()).collect();
+        let r = harris_response(&img, 32, 1024, &HarrisParams::default());
+        assert_eq!(r.len(), 1024 * 32);
+    }
+}

@@ -1,0 +1,16 @@
+//! Scalar DSP implementations.
+//!
+//! Two roles:
+//! * **FPGA heritage functions** from paper Table I: the 64-tap [`fir`]
+//!   filter and the [`harris`] corner detector (plus the CCSDS-123
+//!   compressor in `crate::compress`). These are the algorithms the
+//!   framing FPGA can host next to the CIF/LCD interface.
+//! * **LEON baselines / host groundtruth** for the VPU benchmarks:
+//!   scalar [`binning`] and [`conv`], which (a) provide the reference
+//!   output the host validates LCD frames against and (b) embody the
+//!   LEON-side implementations whose timing `vpu::cost` models.
+
+pub mod binning;
+pub mod conv;
+pub mod fir;
+pub mod harris;

@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All failure modes surfaced by the library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// FIFO pushed while full / popped while empty outside of a
+    /// flow-controlled context — an HDL design bug in simulation terms.
+    #[error("fifo {name} {kind} (capacity {capacity})")]
+    Fifo {
+        name: &'static str,
+        kind: &'static str,
+        capacity: usize,
+    },
+
+    /// A frame failed its CRC-16/XMODEM integrity check.
+    #[error("CRC mismatch: computed {computed:#06x}, received {received:#06x}")]
+    CrcMismatch { computed: u16, received: u16 },
+
+    /// Frame geometry does not match the configured interface registers.
+    #[error("frame geometry mismatch: {0}")]
+    Geometry(String),
+
+    /// Configuration rejected (frequency, buffer sizing, bpp, ...).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// The requested AOT artifact is missing from the manifest.
+    #[error("unknown artifact '{0}' (did `make artifacts` run?)")]
+    UnknownArtifact(String),
+
+    /// manifest.json / weights.bin / mesh.bin parse failures.
+    #[error("artifact parse error in {path}: {msg}")]
+    ArtifactParse { path: String, msg: String },
+
+    /// PJRT / XLA failures from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Benchmark output failed validation against the host groundtruth.
+    #[error("validation failed: {0}")]
+    Validation(String),
+
+    /// CCSDS-123 bitstream decode failure.
+    #[error("ccsds123 decode error: {0}")]
+    Ccsds(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,126 @@
+//! FPGA internal 32-bit bus model (paper Fig. 2: "CIF image buffer ...
+//! connecting CIF with the FPGA internal bus"; "CIF waits for data bursts
+//! to be stored in the image buffer").
+//!
+//! Transaction-level: a burst of N words costs `setup + N/words_per_cycle`
+//! bus cycles. The host (or SpaceWire transcoder) fills the CIF image
+//! buffer through this model, and drains the LCD image buffer likewise.
+
+use crate::fabric::clock::{ClockDomain, SimTime};
+
+/// Bus timing parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BusConfig {
+    pub clock: ClockDomain,
+    /// Arbitration + address phase overhead per burst.
+    pub setup_cycles: u64,
+    /// Data beats per cycle (1 for a single 32-bit AHB-style bus).
+    pub words_per_cycle: f64,
+    /// Maximum burst length in words (longer transfers are split).
+    pub max_burst: usize,
+}
+
+impl BusConfig {
+    /// 50 MHz single-beat AHB-style bus with 16-word bursts.
+    pub fn default_50mhz() -> BusConfig {
+        BusConfig {
+            clock: ClockDomain::new(50.0e6),
+            setup_cycles: 4,
+            words_per_cycle: 1.0,
+            max_burst: 16,
+        }
+    }
+}
+
+/// Stateless burst-cost calculator + cumulative traffic statistics.
+#[derive(Clone, Debug)]
+pub struct Bus {
+    pub cfg: BusConfig,
+    pub words_transferred: u64,
+    pub bursts: u64,
+    pub busy_cycles: u64,
+}
+
+impl Bus {
+    pub fn new(cfg: BusConfig) -> Bus {
+        Bus {
+            cfg,
+            words_transferred: 0,
+            bursts: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    /// Cycles to move `n_words` (split into max_burst chunks).
+    pub fn burst_cycles(&self, n_words: usize) -> u64 {
+        if n_words == 0 {
+            return 0;
+        }
+        let n_bursts = n_words.div_ceil(self.cfg.max_burst) as u64;
+        let data_cycles =
+            (n_words as f64 / self.cfg.words_per_cycle).ceil() as u64;
+        n_bursts * self.cfg.setup_cycles + data_cycles
+    }
+
+    /// Account a transfer and return its duration.
+    pub fn transfer(&mut self, n_words: usize) -> SimTime {
+        let cycles = self.burst_cycles(n_words);
+        self.words_transferred += n_words as u64;
+        self.bursts += n_words.div_ceil(self.cfg.max_burst) as u64;
+        self.busy_cycles += cycles;
+        self.cfg.clock.cycles(cycles)
+    }
+
+    /// Achieved bandwidth in bytes/s for a transfer of `n_words`.
+    pub fn effective_bandwidth(&self, n_words: usize) -> f64 {
+        let t = self.cfg.clock.cycles(self.burst_cycles(n_words)).as_secs();
+        if t == 0.0 {
+            0.0
+        } else {
+            n_words as f64 * 4.0 / t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_words_is_free() {
+        let bus = Bus::new(BusConfig::default_50mhz());
+        assert_eq!(bus.burst_cycles(0), 0);
+    }
+
+    #[test]
+    fn single_burst_cost() {
+        let bus = Bus::new(BusConfig::default_50mhz());
+        // 16 words: 4 setup + 16 data.
+        assert_eq!(bus.burst_cycles(16), 20);
+    }
+
+    #[test]
+    fn long_transfer_splits_into_bursts() {
+        let bus = Bus::new(BusConfig::default_50mhz());
+        // 33 words = 3 bursts -> 12 setup + 33 data.
+        assert_eq!(bus.burst_cycles(33), 45);
+    }
+
+    #[test]
+    fn transfer_accumulates_stats() {
+        let mut bus = Bus::new(BusConfig::default_50mhz());
+        let t = bus.transfer(32);
+        assert_eq!(bus.words_transferred, 32);
+        assert_eq!(bus.bursts, 2);
+        assert_eq!(t, bus.cfg.clock.cycles(8 + 32));
+    }
+
+    #[test]
+    fn bandwidth_approaches_wire_speed_for_large_bursts() {
+        let bus = Bus::new(BusConfig::default_50mhz());
+        let bw = bus.effective_bandwidth(1 << 20);
+        // 50 MHz * 4 B = 200 MB/s wire; setup amortizes to ~80 %+.
+        assert!(bw > 0.75 * 200.0e6, "bw {bw}");
+        assert!(bw <= 200.0e6);
+    }
+}

@@ -1,0 +1,159 @@
+//! Clock domains and simulated time.
+//!
+//! Simulated time is integer picoseconds — deterministic, no float drift
+//! when accumulating billions of cycles, and fine enough to resolve the
+//! paper's fastest clock (600 MHz SHAVE => 1667 ps period).
+
+use std::ops::{Add, AddAssign, Sub};
+
+/// Absolute or relative simulated time in picoseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_secs(s: f64) -> SimTime {
+        SimTime((s * 1e12).round() as u64)
+    }
+
+    pub fn from_ms(ms: f64) -> SimTime {
+        SimTime::from_secs(ms * 1e-3)
+    }
+
+    pub fn from_us(us: f64) -> SimTime {
+        SimTime::from_secs(us * 1e-6)
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 * 1e-12
+    }
+
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 * 1e-9
+    }
+
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 * 1e-6
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl std::fmt::Display for SimTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", crate::util::fmt_time(self.as_secs()))
+    }
+}
+
+/// One clock domain (the CIF and LCD modules may run on different clocks;
+/// the paper's FIFOs are CDC-capable for exactly this reason).
+#[derive(Clone, Copy, Debug)]
+pub struct ClockDomain {
+    pub freq_hz: f64,
+    period_ps: u64,
+}
+
+impl ClockDomain {
+    pub fn new(freq_hz: f64) -> ClockDomain {
+        assert!(freq_hz > 0.0);
+        ClockDomain {
+            freq_hz,
+            period_ps: (1e12 / freq_hz).round() as u64,
+        }
+    }
+
+    pub fn period(&self) -> SimTime {
+        SimTime(self.period_ps)
+    }
+
+    /// Duration of `n` cycles of this clock.
+    pub fn cycles(&self, n: u64) -> SimTime {
+        SimTime(self.period_ps * n)
+    }
+
+    /// Whole cycles elapsed at time `t` (floor).
+    pub fn cycles_at(&self, t: SimTime) -> u64 {
+        t.0 / self.period_ps
+    }
+
+    /// Earliest clock edge at or after `t`.
+    pub fn next_edge(&self, t: SimTime) -> SimTime {
+        let rem = t.0 % self.period_ps;
+        if rem == 0 {
+            t
+        } else {
+            SimTime(t.0 + self.period_ps - rem)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_duration_at_50mhz() {
+        let clk = ClockDomain::new(50.0e6);
+        assert_eq!(clk.period(), SimTime(20_000)); // 20 ns
+        // 1 MPixel at 1 px/cycle = ~21 ms (paper: 1024x1024 in 20.9 ms).
+        let t = clk.cycles(1024 * 1024);
+        assert!((t.as_ms() - 20.97).abs() < 0.01, "{}", t.as_ms());
+    }
+
+    #[test]
+    fn shave_clock_resolved() {
+        let clk = ClockDomain::new(600.0e6);
+        assert_eq!(clk.period(), SimTime(1667));
+    }
+
+    #[test]
+    fn next_edge_snaps_up() {
+        let clk = ClockDomain::new(100.0e6); // 10 ns
+        assert_eq!(clk.next_edge(SimTime(0)), SimTime(0));
+        assert_eq!(clk.next_edge(SimTime(1)), SimTime(10_000));
+        assert_eq!(clk.next_edge(SimTime(10_000)), SimTime(10_000));
+        assert_eq!(clk.next_edge(SimTime(10_001)), SimTime(20_000));
+    }
+
+    #[test]
+    fn simtime_conversions() {
+        assert_eq!(SimTime::from_ms(21.0).as_ms(), 21.0);
+        assert!((SimTime::from_us(3.5).as_secs() - 3.5e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn simtime_arithmetic() {
+        let a = SimTime(100) + SimTime(50);
+        assert_eq!(a, SimTime(150));
+        assert_eq!(a - SimTime(150), SimTime::ZERO);
+        assert_eq!(SimTime(10).saturating_sub(SimTime(20)), SimTime::ZERO);
+        assert_eq!(SimTime(10).max(SimTime(20)), SimTime(20));
+    }
+}

@@ -1,0 +1,274 @@
+//! CRC-16/XMODEM — the frame integrity check the paper's CIF appends to
+//! the last line of every transmitted frame (§III-A).
+//!
+//! Parameters: poly 0x1021, init 0x0000, no reflection, xorout 0x0000.
+//! Two implementations: bitwise (the HDL's serial LFSR) and table-driven
+//! (the hot-path version); tests pin them to each other and to the
+//! published check value.
+
+/// Table-driven CRC-16/XMODEM engine.
+#[derive(Clone, Debug)]
+pub struct Crc16Xmodem {
+    state: u16,
+}
+
+const POLY: u16 = 0x1021;
+
+static TABLE: once_cell::sync::Lazy<[u16; 256]> = once_cell::sync::Lazy::new(|| {
+    let mut table = [0u16; 256];
+    for (i, entry) in table.iter_mut().enumerate() {
+        let mut crc = (i as u16) << 8;
+        for _ in 0..8 {
+            crc = if crc & 0x8000 != 0 {
+                (crc << 1) ^ POLY
+            } else {
+                crc << 1
+            };
+        }
+        *entry = crc;
+    }
+    table
+});
+
+/// Slicing-by-4 tables: SLICE[k][b] = CRC of byte `b` followed by k zero
+/// bytes. Lets `update` consume 4 bytes per iteration with independent
+/// lookups instead of a serial dependency chain (see §Perf log).
+static SLICE: once_cell::sync::Lazy<[[u16; 256]; 4]> = once_cell::sync::Lazy::new(|| {
+    let t0 = &*TABLE;
+    let mut s = [[0u16; 256]; 4];
+    s[0] = *t0;
+    for k in 1..4 {
+        for b in 0..256 {
+            // Append one zero byte to the k-1 variant.
+            let prev = s[k - 1][b];
+            s[k][b] = (prev << 8) ^ t0[(prev >> 8) as usize];
+        }
+    }
+    s
+});
+
+impl Default for Crc16Xmodem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc16Xmodem {
+    pub fn new() -> Crc16Xmodem {
+        Crc16Xmodem { state: 0 }
+    }
+
+    #[inline(always)]
+    fn step_t(table: &[u16; 256], crc: u16, b: u8) -> u16 {
+        let idx = ((crc >> 8) ^ b as u16) & 0xFF;
+        (crc << 8) ^ table[idx as usize]
+    }
+
+    #[inline]
+    fn step(crc: u16, b: u8) -> u16 {
+        Self::step_t(&TABLE, crc, b)
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let sl = &*SLICE;
+        let mut crc = self.state;
+        let mut chunks = data.chunks_exact(4);
+        for c in &mut chunks {
+            // crc' = T3[hi^c0] ^ T2[lo^c1] ^ T1[c2] ^ T0[c3]: four
+            // independent loads per 4 bytes (slicing-by-4).
+            crc = sl[3][((crc >> 8) as u8 ^ c[0]) as usize]
+                ^ sl[2][((crc & 0xFF) as u8 ^ c[1]) as usize]
+                ^ sl[1][c[2] as usize]
+                ^ sl[0][c[3] as usize];
+        }
+        let table = &*TABLE;
+        for &b in chunks.remainder() {
+            crc = Self::step_t(table, crc, b);
+        }
+        self.state = crc;
+    }
+
+    /// Feed one pixel, honoring its wire width (8/16/24 bpp -> 1/2/3
+    /// bytes, most-significant byte first, as the serial HDL shifts it).
+    #[inline]
+    pub fn update_pixel(&mut self, pixel: u32, bits: u32) {
+        debug_assert!(matches!(bits, 8 | 16 | 24));
+        let mut crc = self.state;
+        if bits == 24 {
+            crc = Self::step(crc, (pixel >> 16) as u8);
+        }
+        if bits >= 16 {
+            crc = Self::step(crc, (pixel >> 8) as u8);
+        }
+        crc = Self::step(crc, pixel as u8);
+        self.state = crc;
+    }
+
+    /// Bulk pixel-stream CRC (the Tx/Rx hot path): one table deref, one
+    /// state load/store for the whole stream.
+    pub fn update_pixels(&mut self, pixels: &[u32], bits: u32) {
+        debug_assert!(matches!(bits, 8 | 16 | 24));
+        let table = &*TABLE; // hoist the Lazy deref out of the loop
+        let mut crc = self.state;
+        match bits {
+            8 => {
+                let sl = &*SLICE;
+                let mut quads = pixels.chunks_exact(4);
+                for q in &mut quads {
+                    crc = sl[3][((crc >> 8) as u8 ^ q[0] as u8) as usize]
+                        ^ sl[2][((crc & 0xFF) as u8 ^ q[1] as u8) as usize]
+                        ^ sl[1][q[2] as u8 as usize]
+                        ^ sl[0][q[3] as u8 as usize];
+                }
+                for &px in quads.remainder() {
+                    crc = Self::step_t(table, crc, px as u8);
+                }
+            }
+            16 => {
+                let sl = &*SLICE;
+                let mut pairs = pixels.chunks_exact(2);
+                for p in &mut pairs {
+                    let (a, b) = (p[0], p[1]);
+                    crc = sl[3][((crc >> 8) as u8 ^ (a >> 8) as u8) as usize]
+                        ^ sl[2][((crc & 0xFF) as u8 ^ a as u8) as usize]
+                        ^ sl[1][(b >> 8) as u8 as usize]
+                        ^ sl[0][b as u8 as usize];
+                }
+                for &px in pairs.remainder() {
+                    crc = Self::step_t(table, crc, (px >> 8) as u8);
+                    crc = Self::step_t(table, crc, px as u8);
+                }
+            }
+            _ => {
+                for &px in pixels {
+                    crc = Self::step_t(table, crc, (px >> 16) as u8);
+                    crc = Self::step_t(table, crc, (px >> 8) as u8);
+                    crc = Self::step_t(table, crc, px as u8);
+                }
+            }
+        }
+        self.state = crc;
+    }
+
+    pub fn finish(&self) -> u16 {
+        self.state
+    }
+
+    /// One-shot convenience over a byte slice.
+    pub fn checksum(data: &[u8]) -> u16 {
+        let mut c = Crc16Xmodem::new();
+        c.update(data);
+        c.finish()
+    }
+
+    /// Bit-serial reference implementation (the HDL LFSR); used by tests
+    /// to pin the table-driven version.
+    pub fn checksum_bitwise(data: &[u8]) -> u16 {
+        let mut crc: u16 = 0;
+        for &b in data {
+            crc ^= (b as u16) << 8;
+            for _ in 0..8 {
+                crc = if crc & 0x8000 != 0 {
+                    (crc << 1) ^ POLY
+                } else {
+                    crc << 1
+                };
+            }
+        }
+        crc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn published_check_value() {
+        // CRC-16/XMODEM("123456789") = 0x31C3 (CRC catalogue check value).
+        assert_eq!(Crc16Xmodem::checksum(b"123456789"), 0x31C3);
+    }
+
+    #[test]
+    fn empty_input_is_zero() {
+        assert_eq!(Crc16Xmodem::checksum(b""), 0x0000);
+    }
+
+    #[test]
+    fn table_matches_bitwise_on_random_data() {
+        let mut rng = Rng::new(42);
+        for len in [1usize, 7, 64, 1000] {
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            assert_eq!(
+                Crc16Xmodem::checksum(&data),
+                Crc16Xmodem::checksum_bitwise(&data),
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_equals_oneshot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut c = Crc16Xmodem::new();
+        c.update(&data[..10]);
+        c.update(&data[10..]);
+        assert_eq!(c.finish(), Crc16Xmodem::checksum(data));
+    }
+
+    #[test]
+    fn pixel_feeding_matches_byte_feeding() {
+        // 16bpp pixel 0xABCD == bytes [0xAB, 0xCD].
+        let mut a = Crc16Xmodem::new();
+        a.update_pixel(0xABCD, 16);
+        assert_eq!(a.finish(), Crc16Xmodem::checksum(&[0xAB, 0xCD]));
+
+        let mut b = Crc16Xmodem::new();
+        b.update_pixel(0x123456, 24);
+        assert_eq!(b.finish(), Crc16Xmodem::checksum(&[0x12, 0x34, 0x56]));
+
+        let mut c = Crc16Xmodem::new();
+        c.update_pixel(0x7F, 8);
+        assert_eq!(c.finish(), Crc16Xmodem::checksum(&[0x7F]));
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let mut rng = Rng::new(7);
+        let mut data = vec![0u8; 512];
+        rng.fill_bytes(&mut data);
+        let clean = Crc16Xmodem::checksum(&data);
+        for trial in 0..32 {
+            let i = rng.range_usize(0, data.len() - 1);
+            let bit = rng.range_usize(0, 7);
+            data[i] ^= 1 << bit;
+            assert_ne!(Crc16Xmodem::checksum(&data), clean, "trial {trial}");
+            data[i] ^= 1 << bit; // restore
+        }
+    }
+}
+
+#[cfg(test)]
+mod bulk_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bulk_pixels_matches_per_pixel() {
+        let mut rng = Rng::new(11);
+        for bits in [8u32, 16, 24] {
+            let mask = (1u64 << bits) as u32 - 1;
+            let pixels: Vec<u32> =
+                (0..4096).map(|_| rng.next_u32() & mask).collect();
+            let mut a = Crc16Xmodem::new();
+            a.update_pixels(&pixels, bits);
+            let mut b = Crc16Xmodem::new();
+            for &px in &pixels {
+                b.update_pixel(px, bits);
+            }
+            assert_eq!(a.finish(), b.finish(), "bits={bits}");
+        }
+    }
+}

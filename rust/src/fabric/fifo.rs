@@ -1,0 +1,293 @@
+//! Pixel/word FIFOs: the buffering elements of the paper's CIF/LCD design.
+//!
+//! [`SyncFifo`] is a single-clock FIFO with occupancy tracking (the image
+//! buffers and pixel FIFOs of Fig. 2). [`CdcFifo`] adds the paper's
+//! clock-domain-crossing behaviour ("our FPGA design uses FIFOs capable of
+//! clock domain crossing, allowing different clocks to be employed for the
+//! CIF and LCD modules"): items written in the producer domain become
+//! visible to the consumer only after a 2-flop gray-pointer synchronizer
+//! delay in the consumer's clock.
+
+use crate::error::{Error, Result};
+use crate::fabric::clock::{ClockDomain, SimTime};
+use std::collections::VecDeque;
+
+/// Single-clock FIFO with high-water-mark statistics.
+#[derive(Clone, Debug)]
+pub struct SyncFifo<T> {
+    name: &'static str,
+    capacity: usize,
+    items: VecDeque<T>,
+    /// Highest occupancy ever observed (for buffer-sizing reports).
+    pub high_water: usize,
+    /// Counts of rejected operations (flow-control pressure metrics).
+    pub overflow_attempts: u64,
+    pub underflow_attempts: u64,
+}
+
+impl<T> SyncFifo<T> {
+    pub fn new(name: &'static str, capacity: usize) -> SyncFifo<T> {
+        assert!(capacity > 0, "fifo {name} needs capacity");
+        SyncFifo {
+            name,
+            capacity,
+            items: VecDeque::with_capacity(capacity),
+            high_water: 0,
+            overflow_attempts: 0,
+            underflow_attempts: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() == self.capacity
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.items.len()
+    }
+
+    /// Push; error on overflow (an unflow-controlled HDL bug).
+    pub fn push(&mut self, item: T) -> Result<()> {
+        if self.is_full() {
+            self.overflow_attempts += 1;
+            return Err(Error::Fifo {
+                name: self.name,
+                kind: "overflow",
+                capacity: self.capacity,
+            });
+        }
+        self.items.push_back(item);
+        self.high_water = self.high_water.max(self.items.len());
+        Ok(())
+    }
+
+    /// Push, returning false when full (flow-controlled producer).
+    pub fn try_push(&mut self, item: T) -> bool {
+        if self.is_full() {
+            self.overflow_attempts += 1;
+            return false;
+        }
+        self.items.push_back(item);
+        self.high_water = self.high_water.max(self.items.len());
+        true
+    }
+
+    pub fn pop(&mut self) -> Result<T> {
+        match self.items.pop_front() {
+            Some(v) => Ok(v),
+            None => {
+                self.underflow_attempts += 1;
+                Err(Error::Fifo {
+                    name: self.name,
+                    kind: "underflow",
+                    capacity: self.capacity,
+                })
+            }
+        }
+    }
+
+    pub fn try_pop(&mut self) -> Option<T> {
+        let v = self.items.pop_front();
+        if v.is_none() {
+            self.underflow_attempts += 1;
+        }
+        v
+    }
+
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+}
+
+/// Dual-clock FIFO: write side in `wr_clk`, read side in `rd_clk`.
+///
+/// Transaction-level CDC model: an item pushed at write-domain time `t_w`
+/// becomes readable at the first read-domain edge at or after
+/// `t_w + 2 / f_rd` (two synchronizer flops). Occupancy (for *full*
+/// detection) is conservative on the write side symmetrically.
+#[derive(Clone, Debug)]
+pub struct CdcFifo<T> {
+    inner: SyncFifo<(SimTime, T)>,
+    pub wr_clk: ClockDomain,
+    pub rd_clk: ClockDomain,
+}
+
+impl<T> CdcFifo<T> {
+    pub fn new(
+        name: &'static str,
+        capacity: usize,
+        wr_clk: ClockDomain,
+        rd_clk: ClockDomain,
+    ) -> CdcFifo<T> {
+        CdcFifo {
+            inner: SyncFifo::new(name, capacity),
+            wr_clk,
+            rd_clk,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.inner.is_full()
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.inner.high_water
+    }
+
+    /// Push at write-domain time `now`.
+    pub fn push(&mut self, now: SimTime, item: T) -> Result<()> {
+        let visible = self
+            .rd_clk
+            .next_edge(now + self.rd_clk.cycles(2));
+        self.inner.push((visible, item))
+    }
+
+    /// Pop at read-domain time `now`; `None` if empty *or* the head item
+    /// has not yet crossed the synchronizer.
+    pub fn pop(&mut self, now: SimTime) -> Option<T> {
+        match self.inner.items.front() {
+            Some((visible, _)) if *visible <= now => {
+                self.inner.items.pop_front().map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Earliest read-domain time at which the head item becomes readable.
+    pub fn head_ready_at(&self) -> Option<SimTime> {
+        self.inner.items.front().map(|(t, _)| *t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    #[test]
+    fn sync_fifo_order_preserved() {
+        let mut f = SyncFifo::new("t", 4);
+        for i in 0..4 {
+            f.push(i).unwrap();
+        }
+        assert!(f.is_full());
+        for i in 0..4 {
+            assert_eq!(f.pop().unwrap(), i);
+        }
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn sync_fifo_overflow_and_underflow() {
+        let mut f = SyncFifo::new("t", 1);
+        f.push(1u32).unwrap();
+        assert!(f.push(2).is_err());
+        assert_eq!(f.overflow_attempts, 1);
+        f.pop().unwrap();
+        assert!(f.pop().is_err());
+        assert_eq!(f.underflow_attempts, 1);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = SyncFifo::new("t", 8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        for _ in 0..5 {
+            f.pop().unwrap();
+        }
+        f.push(0).unwrap();
+        assert_eq!(f.high_water, 5);
+    }
+
+    #[test]
+    fn prop_fifo_is_order_preserving_queue() {
+        check("fifo preserves order under random ops", 64, |g: &mut Gen| {
+            let mut model: std::collections::VecDeque<u32> = Default::default();
+            let mut fifo = SyncFifo::new("prop", 16);
+            for _ in 0..g.int_in(1, 200) {
+                if g.bool() {
+                    let v = g.u32();
+                    let ok = fifo.try_push(v);
+                    if model.len() < 16 {
+                        if !ok {
+                            return false;
+                        }
+                        model.push_back(v);
+                    } else if ok {
+                        return false;
+                    }
+                } else {
+                    let got = fifo.try_pop();
+                    let want = model.pop_front();
+                    if got != want {
+                        return false;
+                    }
+                }
+                if fifo.len() != model.len() {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn cdc_item_invisible_until_synchronized() {
+        let wr = ClockDomain::new(50.0e6); // 20 ns
+        let rd = ClockDomain::new(25.0e6); // 40 ns
+        let mut f = CdcFifo::new("cdc", 8, wr, rd);
+        let t0 = SimTime(0);
+        f.push(t0, 99u32).unwrap();
+        // 2 read cycles = 80 ns: not readable before.
+        assert_eq!(f.pop(SimTime(79_999)), None);
+        assert_eq!(f.pop(SimTime(80_000)), Some(99));
+    }
+
+    #[test]
+    fn cdc_respects_read_clock_edges() {
+        let wr = ClockDomain::new(100.0e6);
+        let rd = ClockDomain::new(30.0e6); // period 33333 ps
+        let mut f = CdcFifo::new("cdc", 8, wr, rd);
+        f.push(SimTime(10_000), 1u8).unwrap();
+        let ready = f.head_ready_at().unwrap();
+        // Ready time must lie on a read-domain edge.
+        assert_eq!(ready.0 % rd.period().0, 0);
+        assert!(ready >= SimTime(10_000) + rd.cycles(2));
+    }
+
+    #[test]
+    fn cdc_keeps_fifo_semantics_per_domain() {
+        let clk = ClockDomain::new(50.0e6);
+        let mut f = CdcFifo::new("cdc", 2, clk, clk);
+        f.push(SimTime(0), 1u32).unwrap();
+        f.push(SimTime(0), 2u32).unwrap();
+        assert!(f.is_full());
+        assert!(f.push(SimTime(0), 3u32).is_err());
+        let late = SimTime(1_000_000);
+        assert_eq!(f.pop(late), Some(1));
+        assert_eq!(f.pop(late), Some(2));
+        assert_eq!(f.pop(late), None);
+    }
+}

@@ -1,0 +1,19 @@
+//! FPGA fabric primitives: the simulated HDL building blocks of the
+//! paper's CIF/LCD interface design (Fig. 2).
+//!
+//! Everything here is *transaction-level with cycle accounting*: data moves
+//! through the same components the VHDL instantiates (FIFOs, width FSMs,
+//! CRC, register files) and every component reports how many cycles of its
+//! clock domain an operation consumed; `clock` converts cycles to
+//! simulated time.
+
+pub mod bus;
+pub mod clock;
+pub mod crc16;
+pub mod fifo;
+pub mod regs;
+pub mod width;
+
+pub use clock::{ClockDomain, SimTime};
+pub use crc16::Crc16Xmodem;
+pub use fifo::{CdcFifo, SyncFifo};

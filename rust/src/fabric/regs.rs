@@ -1,0 +1,187 @@
+//! Control & status registers of the CIF/LCD interface (paper §III-A):
+//! "control registers ... are written at runtime to configure the frame
+//! dimensions and the pixel bit-width. Moreover, status registers are
+//! updated at runtime when an input/output frame is transmitted/received
+//! ... such as the CRC results of both directions and the total number of
+//! frames transmitted/received."
+//!
+//! The register file is addressable like the real memory-mapped block so
+//! the supervisor-side control software (coordinator) reads/writes it the
+//! way the GR716 would over the FPGA's internal bus.
+
+use crate::error::{Error, Result};
+use crate::util::image::PixelFormat;
+
+/// Word addresses of the register block (one per 32-bit register).
+pub mod addr {
+    pub const CTRL_WIDTH: u32 = 0x00;
+    pub const CTRL_HEIGHT: u32 = 0x01;
+    pub const CTRL_BPP: u32 = 0x02;
+    pub const CTRL_ENABLE: u32 = 0x03;
+    pub const STAT_FRAMES_TX: u32 = 0x10;
+    pub const STAT_FRAMES_RX: u32 = 0x11;
+    pub const STAT_CRC_LAST_TX: u32 = 0x12;
+    pub const STAT_CRC_LAST_RX: u32 = 0x13;
+    pub const STAT_CRC_OK: u32 = 0x14;
+    pub const STAT_CRC_ERR: u32 = 0x15;
+    pub const STAT_FIFO_HIGH_WATER: u32 = 0x16;
+}
+
+/// The CIF/LCD register block.
+#[derive(Clone, Debug, Default)]
+pub struct InterfaceRegs {
+    pub width: u32,
+    pub height: u32,
+    pub bpp: u32,
+    pub enabled: bool,
+    pub frames_tx: u32,
+    pub frames_rx: u32,
+    pub crc_last_tx: u32,
+    pub crc_last_rx: u32,
+    pub crc_ok: u32,
+    pub crc_err: u32,
+    pub fifo_high_water: u32,
+}
+
+impl InterfaceRegs {
+    /// Configure geometry (host writes the control registers).
+    pub fn configure(&mut self, width: usize, height: usize, format: PixelFormat) {
+        self.width = width as u32;
+        self.height = height as u32;
+        self.bpp = format.bits();
+        self.enabled = true;
+    }
+
+    pub fn format(&self) -> Result<PixelFormat> {
+        match self.bpp {
+            8 => Ok(PixelFormat::Bpp8),
+            16 => Ok(PixelFormat::Bpp16),
+            24 => Ok(PixelFormat::Bpp24),
+            other => Err(Error::Config(format!("bpp register holds {other}"))),
+        }
+    }
+
+    /// Memory-mapped read.
+    pub fn read(&self, a: u32) -> Result<u32> {
+        use addr::*;
+        Ok(match a {
+            CTRL_WIDTH => self.width,
+            CTRL_HEIGHT => self.height,
+            CTRL_BPP => self.bpp,
+            CTRL_ENABLE => self.enabled as u32,
+            STAT_FRAMES_TX => self.frames_tx,
+            STAT_FRAMES_RX => self.frames_rx,
+            STAT_CRC_LAST_TX => self.crc_last_tx,
+            STAT_CRC_LAST_RX => self.crc_last_rx,
+            STAT_CRC_OK => self.crc_ok,
+            STAT_CRC_ERR => self.crc_err,
+            STAT_FIFO_HIGH_WATER => self.fifo_high_water,
+            other => {
+                return Err(Error::Config(format!(
+                    "read of unmapped register {other:#x}"
+                )))
+            }
+        })
+    }
+
+    /// Memory-mapped write; status registers are read-only to the bus.
+    pub fn write(&mut self, a: u32, v: u32) -> Result<()> {
+        use addr::*;
+        match a {
+            CTRL_WIDTH => self.width = v,
+            CTRL_HEIGHT => self.height = v,
+            CTRL_BPP => {
+                if !matches!(v, 8 | 16 | 24) {
+                    return Err(Error::Config(format!("bpp {v} unsupported")));
+                }
+                self.bpp = v;
+            }
+            CTRL_ENABLE => self.enabled = v != 0,
+            STAT_FRAMES_TX..=STAT_FIFO_HIGH_WATER => {
+                return Err(Error::Config(format!(
+                    "write to read-only status register {a:#x}"
+                )));
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "write to unmapped register {other:#x}"
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Hardware-side status update after a transmitted frame.
+    pub fn note_tx(&mut self, crc: u16) {
+        self.frames_tx = self.frames_tx.wrapping_add(1);
+        self.crc_last_tx = crc as u32;
+    }
+
+    /// Hardware-side status update after a received frame.
+    pub fn note_rx(&mut self, crc: u16, ok: bool) {
+        self.frames_rx = self.frames_rx.wrapping_add(1);
+        self.crc_last_rx = crc as u32;
+        if ok {
+            self.crc_ok = self.crc_ok.wrapping_add(1);
+        } else {
+            self.crc_err = self.crc_err.wrapping_add(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configure_then_read_back() {
+        let mut r = InterfaceRegs::default();
+        r.configure(1024, 768, PixelFormat::Bpp16);
+        assert_eq!(r.read(addr::CTRL_WIDTH).unwrap(), 1024);
+        assert_eq!(r.read(addr::CTRL_HEIGHT).unwrap(), 768);
+        assert_eq!(r.read(addr::CTRL_BPP).unwrap(), 16);
+        assert_eq!(r.format().unwrap(), PixelFormat::Bpp16);
+    }
+
+    #[test]
+    fn status_registers_read_only() {
+        let mut r = InterfaceRegs::default();
+        assert!(r.write(addr::STAT_FRAMES_TX, 5).is_err());
+        assert!(r.write(addr::STAT_CRC_ERR, 1).is_err());
+    }
+
+    #[test]
+    fn bpp_write_validated() {
+        let mut r = InterfaceRegs::default();
+        assert!(r.write(addr::CTRL_BPP, 12).is_err());
+        r.write(addr::CTRL_BPP, 24).unwrap();
+        assert_eq!(r.format().unwrap(), PixelFormat::Bpp24);
+    }
+
+    #[test]
+    fn unmapped_addresses_rejected() {
+        let mut r = InterfaceRegs::default();
+        assert!(r.read(0x99).is_err());
+        assert!(r.write(0x99, 0).is_err());
+    }
+
+    #[test]
+    fn tx_rx_counters_and_crc_history() {
+        let mut r = InterfaceRegs::default();
+        r.note_tx(0xAAAA);
+        r.note_tx(0xBBBB);
+        r.note_rx(0xBBBB, true);
+        r.note_rx(0x1234, false);
+        assert_eq!(r.read(addr::STAT_FRAMES_TX).unwrap(), 2);
+        assert_eq!(r.read(addr::STAT_FRAMES_RX).unwrap(), 2);
+        assert_eq!(r.read(addr::STAT_CRC_LAST_TX).unwrap(), 0xBBBB);
+        assert_eq!(r.read(addr::STAT_CRC_OK).unwrap(), 1);
+        assert_eq!(r.read(addr::STAT_CRC_ERR).unwrap(), 1);
+    }
+
+    #[test]
+    fn default_format_is_error_until_configured() {
+        let r = InterfaceRegs::default();
+        assert!(r.format().is_err());
+    }
+}

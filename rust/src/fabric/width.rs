@@ -1,0 +1,162 @@
+//! Width-conversion FSMs (paper Fig. 2): the CIF FSM converts 32-bit bus
+//! words into 8/16/24-bit wire pixels; the LCD FSM performs the inverse.
+//!
+//! Packing convention (little-endian within the word, matching the VHDL):
+//! * 8 bpp : word = px0 | px1<<8 | px2<<16 | px3<<24  (4 px/word)
+//! * 16 bpp: word = px0 | px1<<16                      (2 px/word)
+//! * 24 bpp: word = px0 (bits 23:0; 31:24 unused)      (1 px/word)
+
+use crate::error::{Error, Result};
+use crate::util::image::PixelFormat;
+
+/// 32-bit words -> pixels (CIF direction).
+pub fn unpack_words(words: &[u32], format: PixelFormat, n_pixels: usize) -> Result<Vec<u32>> {
+    let ppw = format.pixels_per_word();
+    let needed = n_pixels.div_ceil(ppw);
+    if words.len() < needed {
+        return Err(Error::Geometry(format!(
+            "{n_pixels} px at {}bpp need {needed} words, got {}",
+            format.bits(),
+            words.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(n_pixels);
+    'outer: for &w in words {
+        match format {
+            PixelFormat::Bpp8 => {
+                for i in 0..4 {
+                    out.push((w >> (8 * i)) & 0xFF);
+                    if out.len() == n_pixels {
+                        break 'outer;
+                    }
+                }
+            }
+            PixelFormat::Bpp16 => {
+                for i in 0..2 {
+                    out.push((w >> (16 * i)) & 0xFFFF);
+                    if out.len() == n_pixels {
+                        break 'outer;
+                    }
+                }
+            }
+            PixelFormat::Bpp24 => {
+                out.push(w & 0x00FF_FFFF);
+                if out.len() == n_pixels {
+                    break 'outer;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Pixels -> 32-bit words (LCD direction). The final partial word is
+/// zero-padded in its unused lanes, as the HDL register would hold zeros.
+pub fn pack_words(pixels: &[u32], format: PixelFormat) -> Result<Vec<u32>> {
+    let max = format.max_value();
+    if let Some(&bad) = pixels.iter().find(|&&p| p > max) {
+        return Err(Error::Geometry(format!(
+            "pixel {bad:#x} exceeds {}bpp",
+            format.bits()
+        )));
+    }
+    let ppw = format.pixels_per_word();
+    let mut out = Vec::with_capacity(pixels.len().div_ceil(ppw));
+    match format {
+        PixelFormat::Bpp8 => {
+            for chunk in pixels.chunks(4) {
+                let mut w = 0u32;
+                for (i, &p) in chunk.iter().enumerate() {
+                    w |= p << (8 * i);
+                }
+                out.push(w);
+            }
+        }
+        PixelFormat::Bpp16 => {
+            for chunk in pixels.chunks(2) {
+                let mut w = 0u32;
+                for (i, &p) in chunk.iter().enumerate() {
+                    w |= p << (16 * i);
+                }
+                out.push(w);
+            }
+        }
+        PixelFormat::Bpp24 => {
+            out.extend(pixels.iter().copied());
+        }
+    }
+    Ok(out)
+}
+
+/// Words the FSM consumes/produces for `n_pixels` at `format`.
+pub fn words_for_pixels(n_pixels: usize, format: PixelFormat) -> usize {
+    n_pixels.div_ceil(format.pixels_per_word())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    #[test]
+    fn unpack_8bpp_le_order() {
+        let px = unpack_words(&[0xDDCCBBAA], PixelFormat::Bpp8, 4).unwrap();
+        assert_eq!(px, vec![0xAA, 0xBB, 0xCC, 0xDD]);
+    }
+
+    #[test]
+    fn unpack_16bpp() {
+        let px = unpack_words(&[0xBEEF_F00D], PixelFormat::Bpp16, 2).unwrap();
+        assert_eq!(px, vec![0xF00D, 0xBEEF]);
+    }
+
+    #[test]
+    fn unpack_24bpp_masks_top_byte() {
+        let px = unpack_words(&[0xFF123456], PixelFormat::Bpp24, 1).unwrap();
+        assert_eq!(px, vec![0x123456]);
+    }
+
+    #[test]
+    fn unpack_partial_final_word() {
+        let px = unpack_words(&[0x04030201, 0x00000005], PixelFormat::Bpp8, 5).unwrap();
+        assert_eq!(px, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn unpack_rejects_short_input() {
+        assert!(unpack_words(&[0], PixelFormat::Bpp8, 5).is_err());
+    }
+
+    #[test]
+    fn pack_rejects_oversized_pixel() {
+        assert!(pack_words(&[0x1FF], PixelFormat::Bpp8).is_err());
+    }
+
+    #[test]
+    fn words_for_pixels_rounding() {
+        assert_eq!(words_for_pixels(5, PixelFormat::Bpp8), 2);
+        assert_eq!(words_for_pixels(4, PixelFormat::Bpp8), 1);
+        assert_eq!(words_for_pixels(3, PixelFormat::Bpp16), 2);
+        assert_eq!(words_for_pixels(3, PixelFormat::Bpp24), 3);
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip_all_formats() {
+        check("pack/unpack roundtrip", 96, |g: &mut Gen| {
+            let format = *g.choose(&[
+                PixelFormat::Bpp8,
+                PixelFormat::Bpp16,
+                PixelFormat::Bpp24,
+            ]);
+            let n = g.int_in(1, 300);
+            let max = format.max_value();
+            let pixels: Vec<u32> =
+                (0..n).map(|_| g.u32() & max).collect();
+            let words = pack_words(&pixels, format).unwrap();
+            if words.len() != words_for_pixels(n, format) {
+                return false;
+            }
+            unpack_words(&words, format, n).unwrap() == pixels
+        });
+    }
+}

@@ -1,0 +1,135 @@
+//! FPGA device capacity tables.
+
+use crate::fpga::resources::ResourceCount;
+
+/// An FPGA device's primitive capacities.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u64,
+    pub dffs: u64,
+    pub dsps: u64,
+    /// RAMB36 equivalents.
+    pub brams: u64,
+}
+
+impl Device {
+    /// Kintex UltraScale XCKU060 — the HPCB framing FPGA. Capacities as
+    /// cited in the paper's Table I footnote: "331K LUTs, 663K DFFs,
+    /// 2.7K DSPs, 1K RAMBs".
+    pub fn xcku060() -> Device {
+        Device {
+            name: "XCKU060",
+            luts: 331_680,
+            dffs: 663_360,
+            dsps: 2_760,
+            brams: 1_080,
+        }
+    }
+
+    /// Virtex-7 XC7VX485T — the lab prototyping FPGA (paper §II).
+    pub fn xc7vx485t() -> Device {
+        Device {
+            name: "XC7VX485T",
+            luts: 303_600,
+            dffs: 607_200,
+            dsps: 2_800,
+            brams: 1_030,
+        }
+    }
+
+    /// Zynq-7020 — the comparison SoC FPGA of paper §IV / ref [17].
+    pub fn zynq7020() -> Device {
+        Device {
+            name: "Zynq-7020",
+            luts: 53_200,
+            dffs: 106_400,
+            dsps: 220,
+            brams: 140,
+        }
+    }
+
+    /// Utilization percentages of `used` on this device.
+    pub fn utilization(&self, used: &ResourceCount) -> Utilization {
+        Utilization {
+            lut_pct: 100.0 * used.luts as f64 / self.luts as f64,
+            dff_pct: 100.0 * used.dffs as f64 / self.dffs as f64,
+            dsp_pct: 100.0 * used.dsps as f64 / self.dsps as f64,
+            bram_pct: 100.0 * used.brams as f64 / self.brams as f64,
+        }
+    }
+
+    /// Whether a design fits at all.
+    pub fn fits(&self, used: &ResourceCount) -> bool {
+        used.luts <= self.luts
+            && used.dffs <= self.dffs
+            && used.dsps <= self.dsps
+            && used.brams <= self.brams
+    }
+}
+
+/// Percent utilization per primitive class.
+#[derive(Clone, Copy, Debug)]
+pub struct Utilization {
+    pub lut_pct: f64,
+    pub dff_pct: f64,
+    pub dsp_pct: f64,
+    pub bram_pct: f64,
+}
+
+impl Utilization {
+    /// Format a Table-I-style row (the paper reports "<1%" style figures;
+    /// we print one decimal).
+    pub fn row(&self) -> String {
+        format!(
+            "{:>5.1}% {:>5.1}% {:>5.1}% {:>5.1}%",
+            self.lut_pct, self.dff_pct, self.dsp_pct, self.bram_pct
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xcku060_matches_paper_footnote() {
+        let d = Device::xcku060();
+        assert_eq!(d.luts, 331_680);
+        assert_eq!(d.dsps, 2_760);
+        assert_eq!(d.brams, 1_080);
+    }
+
+    #[test]
+    fn utilization_math() {
+        let d = Device::xcku060();
+        let used = ResourceCount {
+            luts: 33_168,
+            dffs: 6_634,
+            dsps: 27,
+            brams: 108,
+        };
+        let u = d.utilization(&used);
+        assert!((u.lut_pct - 10.0).abs() < 0.01);
+        assert!((u.dff_pct - 1.0).abs() < 0.01);
+        assert!((u.dsp_pct - 0.978).abs() < 0.01);
+        assert!((u.bram_pct - 10.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn fits_detects_overflow() {
+        let d = Device::zynq7020();
+        assert!(d.fits(&ResourceCount {
+            luts: 50_000,
+            dffs: 100_000,
+            dsps: 200,
+            brams: 100
+        }));
+        assert!(!d.fits(&ResourceCount {
+            luts: 60_000,
+            dffs: 0,
+            dsps: 0,
+            brams: 0
+        }));
+    }
+}

@@ -1,0 +1,15 @@
+//! FPGA device models and HDL resource estimation — regenerates paper
+//! Table I ("FPGA resource utilization of the CIF/LCD interface and other
+//! designs").
+//!
+//! [`resources`] provides a primitive-level estimator (FIFOs -> RAMB,
+//! FSMs/datapaths -> LUT/DFF, MACs -> DSP); [`designs`] composes the four
+//! Table I designs from those primitives; [`device`] holds the Kintex
+//! UltraScale XCKU060 (and comparison devices') capacities.
+
+pub mod designs;
+pub mod device;
+pub mod resources;
+
+pub use device::Device;
+pub use resources::ResourceCount;

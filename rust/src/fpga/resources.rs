@@ -1,0 +1,232 @@
+//! Primitive-level FPGA resource estimation.
+//!
+//! Each helper returns the LUT/DFF/DSP/BRAM cost of one structural
+//! primitive, using standard Xilinx UltraScale mapping rules (36 Kb
+//! RAMB36, SRL-based small FIFOs, DSP48E2 MACs). `designs` composes these
+//! into the paper's Table I designs; constants are calibrated at those
+//! design points and scale with the primitive parameters.
+
+use std::ops::{Add, AddAssign, Mul};
+
+/// Aggregate primitive counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResourceCount {
+    pub luts: u64,
+    pub dffs: u64,
+    pub dsps: u64,
+    /// RAMB36 equivalents.
+    pub brams: u64,
+}
+
+impl Add for ResourceCount {
+    type Output = ResourceCount;
+    fn add(self, o: ResourceCount) -> ResourceCount {
+        ResourceCount {
+            luts: self.luts + o.luts,
+            dffs: self.dffs + o.dffs,
+            dsps: self.dsps + o.dsps,
+            brams: self.brams + o.brams,
+        }
+    }
+}
+
+impl AddAssign for ResourceCount {
+    fn add_assign(&mut self, o: ResourceCount) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<u64> for ResourceCount {
+    type Output = ResourceCount;
+    fn mul(self, n: u64) -> ResourceCount {
+        ResourceCount {
+            luts: self.luts * n,
+            dffs: self.dffs * n,
+            dsps: self.dsps * n,
+            brams: self.brams * n,
+        }
+    }
+}
+
+const RAMB36_BITS: u64 = 36 * 1024;
+
+/// Block-RAM FIFO: `width` bits x `depth` entries.
+pub fn fifo_bram(width: u64, depth: u64) -> ResourceCount {
+    let bits = width * depth;
+    let addr = 64 - (depth.max(2) - 1).leading_zeros() as u64;
+    ResourceCount {
+        luts: 60 + width / 2 + 2 * addr,
+        dffs: 20 + width / 2 + 2 * addr,
+        dsps: 0,
+        brams: bits.div_ceil(RAMB36_BITS),
+    }
+}
+
+/// Small distributed-RAM (SRL) FIFO.
+pub fn fifo_dist(width: u64, depth: u64) -> ResourceCount {
+    ResourceCount {
+        luts: width * depth.div_ceil(32) + 20,
+        dffs: 24 + width,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// Finite state machine with `states` states over a `width`-bit datapath.
+pub fn fsm(states: u64, width: u64) -> ResourceCount {
+    ResourceCount {
+        luts: 6 * states + 3 * width,
+        dffs: states + width,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// Byte-parallel CRC-16 (XMODEM) engine processing `bytes_per_cycle`.
+pub fn crc16(bytes_per_cycle: u64) -> ResourceCount {
+    ResourceCount {
+        luts: 50 * bytes_per_cycle,
+        dffs: 16 + 8 * bytes_per_cycle,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// `width`-bit counter.
+pub fn counter(width: u64) -> ResourceCount {
+    ResourceCount {
+        luts: width,
+        dffs: width,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// Memory-mapped register file of `n` 32-bit registers.
+pub fn regfile(n: u64) -> ResourceCount {
+    ResourceCount {
+        luts: 4 * n + 30,
+        dffs: 32 * n,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// 2-flop CDC synchronizer over `width` bits.
+pub fn cdc_sync(width: u64) -> ResourceCount {
+    ResourceCount {
+        luts: 0,
+        dffs: 2 * width,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// `n` DSP48 multiply-accumulate slices with pipeline registers.
+pub fn mac_dsp(n: u64) -> ResourceCount {
+    ResourceCount {
+        luts: 10 * n,
+        dffs: 20 * n,
+        dsps: n,
+        brams: 0,
+    }
+}
+
+/// LUT-fabric multiplier (`a_bits` x `b_bits`) — used when a design
+/// deliberately avoids DSPs (the CCSDS-123 implementation of [16] uses
+/// only 0.2% DSPs).
+pub fn mult_lut(a_bits: u64, b_bits: u64) -> ResourceCount {
+    ResourceCount {
+        luts: a_bits * b_bits,
+        dffs: a_bits + b_bits,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// AXI-style 32-bit bus slave with burst support (address decode,
+/// handshake, byte lanes).
+pub fn bus_slave() -> ResourceCount {
+    ResourceCount {
+        luts: 450,
+        dffs: 180,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// Generic control/glue logic sized in LUTs (datapath muxing, validity
+/// pipelines); DFFs follow at roughly 25 %.
+pub fn glue(luts: u64) -> ResourceCount {
+    ResourceCount {
+        luts,
+        dffs: luts / 4,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// Pure pipeline/re-timing register banks (high-Fmax designs insert
+/// these between every datapath stage).
+pub fn pipeline(dffs: u64) -> ResourceCount {
+    ResourceCount {
+        luts: 0,
+        dffs,
+        dsps: 0,
+        brams: 0,
+    }
+}
+
+/// On-chip sample/line storage of `bits` total.
+pub fn bram_store(bits: u64) -> ResourceCount {
+    ResourceCount {
+        luts: 30,
+        dffs: 20,
+        dsps: 0,
+        brams: bits.div_ceil(RAMB36_BITS),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_bram_counts_ramb36() {
+        // 32b x 1024 = 32 Kb -> 1 RAMB36.
+        assert_eq!(fifo_bram(32, 1024).brams, 1);
+        // 32b x 2048 = 64 Kb -> 2.
+        assert_eq!(fifo_bram(32, 2048).brams, 2);
+    }
+
+    #[test]
+    fn arithmetic_ops() {
+        let a = ResourceCount {
+            luts: 1,
+            dffs: 2,
+            dsps: 3,
+            brams: 4,
+        };
+        let b = a + a;
+        assert_eq!(b.luts, 2);
+        assert_eq!(b * 3, ResourceCount { luts: 6, dffs: 12, dsps: 18, brams: 24 });
+    }
+
+    #[test]
+    fn dsp_slices_counted() {
+        assert_eq!(mac_dsp(55).dsps, 55);
+    }
+
+    #[test]
+    fn bram_store_rounds_up() {
+        assert_eq!(bram_store(1).brams, 1);
+        assert_eq!(bram_store(36 * 1024 + 1).brams, 2);
+    }
+
+    #[test]
+    fn mult_lut_uses_no_dsp() {
+        let m = mult_lut(16, 14);
+        assert_eq!(m.dsps, 0);
+        assert_eq!(m.luts, 224);
+    }
+}

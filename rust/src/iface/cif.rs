@@ -1,0 +1,247 @@
+//! FPGA CIF module (Tx toward the VPU) — paper Fig. 2, upper half.
+//!
+//! Dataflow: the host/instrument fills the **CIF image buffer** (32-bit
+//! words over the internal bus); the **CIF FSM** converts words to wire
+//! pixels; the **pixel FIFO** decouples FSM and Tx clocks; **CIF Tx**
+//! shifts pixels out with hsync/vsync framing; the **CRC** component
+//! appends CRC-16/XMODEM as the last line.
+//!
+//! Feasibility rules (derived in DESIGN.md §4 and validated against the
+//! paper's §IV loopback results):
+//! * streaming works when the internal bus can refill the image buffer at
+//!   least as fast as the Tx drains it; otherwise the whole frame must fit
+//!   in the image buffer (this is what limits 100 MHz operation to 64x64
+//!   16-bit frames with the reduced 8 KiB buffer).
+
+use crate::config::IfaceConfig;
+use crate::error::{Error, Result};
+use crate::fabric::bus::Bus;
+use crate::fabric::clock::{ClockDomain, SimTime};
+use crate::fabric::regs::InterfaceRegs;
+use crate::fabric::width;
+use crate::iface::signals::WireFrame;
+use crate::iface::timing;
+use crate::util::image::Frame;
+
+/// Result of transmitting one frame.
+#[derive(Clone, Debug)]
+pub struct TxReport {
+    /// Time the last CRC-line pixel left the Tx.
+    pub done_at: SimTime,
+    /// Pure wire time (excludes bus fill when streaming).
+    pub wire_time: SimTime,
+    /// Words the host pushed over the internal bus.
+    pub words_filled: usize,
+    /// Whether the frame streamed (vs store-and-forward).
+    pub streamed: bool,
+    pub crc: u16,
+}
+
+/// The CIF interface block on the FPGA.
+pub struct CifModule {
+    pub cfg: IfaceConfig,
+    pub clock: ClockDomain,
+    pub regs: InterfaceRegs,
+    pub bus: Bus,
+    /// Peak image-buffer occupancy (words) across all frames.
+    pub buffer_high_water: usize,
+}
+
+impl CifModule {
+    pub fn new(cfg: IfaceConfig, bus: Bus) -> Result<CifModule> {
+        cfg.validate()?;
+        Ok(CifModule {
+            clock: ClockDomain::new(cfg.pixel_clock_hz),
+            cfg,
+            regs: InterfaceRegs::default(),
+            bus,
+            buffer_high_water: 0,
+        })
+    }
+
+    /// Host-visible pixel rate of the internal bus at `format` (px/s).
+    fn bus_pixel_rate(&self, frame: &Frame) -> f64 {
+        let words = width::words_for_pixels(frame.pixels(), frame.format);
+        let t = self
+            .bus
+            .cfg
+            .clock
+            .cycles(self.bus.burst_cycles(words))
+            .as_secs();
+        frame.pixels() as f64 / t
+    }
+
+    /// Transmit one frame starting at `now`. Errors if the configuration
+    /// cannot sustain it (the paper's infeasible operating points).
+    pub fn send_frame(&mut self, frame: &Frame, now: SimTime) -> Result<(WireFrame, TxReport)> {
+        if !self.regs.enabled
+            || self.regs.width as usize != frame.width
+            || self.regs.height as usize != frame.height
+            || self.regs.format()? != frame.format
+        {
+            return Err(Error::Geometry(format!(
+                "CIF registers ({}x{} {}bpp, enabled={}) do not match frame {}x{} {}bpp",
+                self.regs.width,
+                self.regs.height,
+                self.regs.bpp,
+                self.regs.enabled,
+                frame.width,
+                frame.height,
+                frame.format.bits()
+            )));
+        }
+
+        let words = width::words_for_pixels(frame.pixels(), frame.format);
+        let can_stream = self.bus_pixel_rate(frame) >= self.cfg.pixel_clock_hz;
+        if !can_stream && words > self.cfg.image_buffer_words {
+            return Err(Error::Config(format!(
+                "CIF at {:.0} MHz cannot stream {}x{}@{}bpp (bus {:.1} Mpx/s < \
+                 pixel clock) and frame ({} words) exceeds image buffer ({} words)",
+                self.cfg.pixel_clock_hz / 1e6,
+                frame.width,
+                frame.height,
+                frame.format.bits(),
+                self.bus_pixel_rate(frame) / 1e6,
+                words,
+                self.cfg.image_buffer_words
+            )));
+        }
+
+        // Bus fill: streamed frames overlap fill with Tx; buffered frames
+        // pay the fill latency up front.
+        let fill_time = self.bus.transfer(words);
+        let occupancy = if can_stream {
+            words.min(self.cfg.image_buffer_words)
+        } else {
+            words
+        };
+        self.buffer_high_water = self.buffer_high_water.max(occupancy);
+
+        let wire = WireFrame::from_frame(frame);
+        let wire_time = timing::frame_time(
+            &self.clock,
+            frame.width,
+            frame.height,
+            self.cfg.porch_cycles_per_line,
+        );
+        let start = if can_stream {
+            // Tx starts once the first burst has landed (pipeline fill);
+            // modelled as one max-burst transfer.
+            now + self
+                .bus
+                .cfg
+                .clock
+                .cycles(self.bus.burst_cycles(self.bus.cfg.max_burst))
+        } else {
+            now + fill_time
+        };
+        let done_at = start + wire_time;
+
+        let crc = crate::iface::signals::extract_crc(&wire.crc_line, frame.format);
+        self.regs.note_tx(crc);
+        self.regs.fifo_high_water = self.buffer_high_water as u32;
+
+        Ok((
+            wire,
+            TxReport {
+                done_at,
+                wire_time,
+                words_filled: words,
+                streamed: can_stream,
+                crc,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IfaceConfig;
+    use crate::fabric::bus::{Bus, BusConfig};
+    use crate::util::image::PixelFormat;
+    use crate::util::rng::Rng;
+
+    fn module(cfg: IfaceConfig) -> CifModule {
+        CifModule::new(cfg, Bus::new(BusConfig::default_50mhz())).unwrap()
+    }
+
+    fn frame(w: usize, h: usize, fmt: PixelFormat, seed: u64) -> Frame {
+        let mut rng = Rng::new(seed);
+        Frame::from_data(
+            w,
+            h,
+            fmt,
+            (0..w * h).map(|_| rng.next_u32() & fmt.max_value()).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rejects_unconfigured_registers() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        let f = frame(8, 8, PixelFormat::Bpp8, 1);
+        assert!(m.send_frame(&f, SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn rejects_geometry_mismatch() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(16, 16, PixelFormat::Bpp8);
+        let f = frame(8, 8, PixelFormat::Bpp8, 1);
+        assert!(m.send_frame(&f, SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn paper_point_2048_8bpp_at_50mhz_works() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(2048, 2048, PixelFormat::Bpp8);
+        let f = frame(2048, 2048, PixelFormat::Bpp8, 2);
+        let (wire, rep) = m.send_frame(&f, SimTime::ZERO).unwrap();
+        assert!((rep.wire_time.as_ms() - 85.0).abs() < 0.5);
+        assert!(rep.streamed);
+        assert_eq!(wire.payload, f.data);
+        assert_eq!(m.regs.frames_tx, 1);
+    }
+
+    #[test]
+    fn paper_point_64x64_16bpp_at_100mhz_works() {
+        let mut m = module(IfaceConfig::reduced_100mhz(100.0e6));
+        m.regs.configure(64, 64, PixelFormat::Bpp16);
+        let f = frame(64, 64, PixelFormat::Bpp16, 3);
+        let (_, rep) = m.send_frame(&f, SimTime::ZERO).unwrap();
+        // 16bpp at 100 MHz cannot stream over the 50 MHz bus: buffered.
+        assert!(!rep.streamed);
+        assert_eq!(rep.words_filled, 2048); // exactly fills the 8 KiB buffer
+    }
+
+    #[test]
+    fn paper_point_128x128_16bpp_at_100mhz_fails() {
+        let mut m = module(IfaceConfig::reduced_100mhz(100.0e6));
+        m.regs.configure(128, 128, PixelFormat::Bpp16);
+        let f = frame(128, 128, PixelFormat::Bpp16, 4);
+        assert!(m.send_frame(&f, SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn wire_crc_matches_payload() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(32, 16, PixelFormat::Bpp16);
+        let f = frame(32, 16, PixelFormat::Bpp16, 5);
+        let (wire, rep) = m.send_frame(&f, SimTime::ZERO).unwrap();
+        assert_eq!(
+            crate::iface::signals::payload_crc(&wire.payload, f.format),
+            rep.crc
+        );
+        assert!(wire.to_frame().is_ok());
+    }
+
+    #[test]
+    fn buffered_frame_pays_fill_latency() {
+        let mut fast = module(IfaceConfig::reduced_100mhz(100.0e6));
+        fast.regs.configure(64, 64, PixelFormat::Bpp16);
+        let f = frame(64, 64, PixelFormat::Bpp16, 6);
+        let (_, rep) = fast.send_frame(&f, SimTime::ZERO).unwrap();
+        assert!(rep.done_at > rep.wire_time);
+    }
+}

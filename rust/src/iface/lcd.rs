@@ -1,0 +1,218 @@
+//! FPGA LCD module (Rx from the VPU) — paper Fig. 2, lower half.
+//!
+//! Dataflow: **LCD Rx** samples one pixel per clock using the VPU-driven
+//! hsync/vsync; pixels land in the **LCD pixel FIFO**; the **LCD FSM**
+//! widens 8/16/24-bit pixels into 32-bit words and writes the **LCD image
+//! buffer**, which the host later drains over the internal bus. The CRC of
+//! the received payload is recomputed and compared against the appended
+//! CRC line; status registers record the result.
+//!
+//! Store-and-forward rule: the host reads the image buffer only after the
+//! frame completes (status-register handshake), so a received frame must
+//! fit in the LCD image buffer — this is the "FPGA memory resources"
+//! limit that kept the paper's 16-bit loopback at <= 1024x1024.
+
+use crate::config::IfaceConfig;
+use crate::error::{Error, Result};
+use crate::fabric::bus::Bus;
+use crate::fabric::clock::{ClockDomain, SimTime};
+use crate::fabric::regs::InterfaceRegs;
+use crate::fabric::width;
+use crate::iface::signals::{self, WireFrame};
+use crate::iface::timing;
+use crate::util::image::Frame;
+
+/// Result of receiving one frame.
+#[derive(Clone, Debug)]
+pub struct RxReport {
+    /// Time the frame was fully in the image buffer (incl. CRC check).
+    pub done_at: SimTime,
+    /// Wire time of the reception itself.
+    pub wire_time: SimTime,
+    /// Time for the host to drain the image buffer afterwards.
+    pub drain_time: SimTime,
+    pub crc_ok: bool,
+    pub crc: u16,
+}
+
+/// The LCD interface block on the FPGA.
+pub struct LcdModule {
+    pub cfg: IfaceConfig,
+    pub clock: ClockDomain,
+    pub regs: InterfaceRegs,
+    pub bus: Bus,
+    pub buffer_high_water: usize,
+}
+
+impl LcdModule {
+    pub fn new(cfg: IfaceConfig, bus: Bus) -> Result<LcdModule> {
+        cfg.validate()?;
+        Ok(LcdModule {
+            clock: ClockDomain::new(cfg.pixel_clock_hz),
+            cfg,
+            regs: InterfaceRegs::default(),
+            bus,
+            buffer_high_water: 0,
+        })
+    }
+
+    /// Receive one wire frame starting at `now`; returns the reassembled
+    /// frame (words widened back to pixels) and timing/CRC report.
+    ///
+    /// A CRC failure still produces the frame (the buffer holds whatever
+    /// arrived) but flags it — mirroring hardware, where software decides
+    /// whether to drop the frame based on the status register.
+    pub fn receive_frame(
+        &mut self,
+        wire: &WireFrame,
+        now: SimTime,
+    ) -> Result<(Frame, RxReport)> {
+        if !self.regs.enabled
+            || self.regs.width as usize != wire.width
+            || self.regs.height as usize != wire.height
+            || self.regs.format()? != wire.format
+        {
+            return Err(Error::Geometry(format!(
+                "LCD registers ({}x{} {}bpp, enabled={}) do not match wire frame \
+                 {}x{} {}bpp",
+                self.regs.width,
+                self.regs.height,
+                self.regs.bpp,
+                self.regs.enabled,
+                wire.width,
+                wire.height,
+                wire.format.bits()
+            )));
+        }
+
+        let words = width::words_for_pixels(wire.payload.len(), wire.format);
+        if words > self.cfg.image_buffer_words {
+            return Err(Error::Config(format!(
+                "LCD image buffer ({} words) cannot hold {}x{}@{}bpp frame \
+                 ({} words): store-and-forward reception requires the full frame",
+                self.cfg.image_buffer_words,
+                wire.width,
+                wire.height,
+                wire.format.bits(),
+                words
+            )));
+        }
+        self.buffer_high_water = self.buffer_high_water.max(words);
+
+        // FSM widen/narrow roundtrip: pixels -> words (buffer) -> pixels.
+        let packed = width::pack_words(&wire.payload, wire.format)?;
+        let unpacked = width::unpack_words(&packed, wire.format, wire.payload.len())?;
+
+        let computed = signals::payload_crc(&unpacked, wire.format);
+        let received = signals::extract_crc(&wire.crc_line, wire.format);
+        let crc_ok = computed == received;
+
+        let wire_time = timing::frame_time(
+            &self.clock,
+            wire.width,
+            wire.height,
+            self.cfg.porch_cycles_per_line,
+        );
+        let drain_time = self.bus.transfer(words);
+
+        self.regs.note_rx(received, crc_ok);
+        self.regs.fifo_high_water = self.buffer_high_water as u32;
+
+        let frame = Frame::from_data(wire.width, wire.height, wire.format, unpacked)?;
+        Ok((
+            frame,
+            RxReport {
+                done_at: now + wire_time,
+                wire_time,
+                drain_time,
+                crc_ok,
+                crc: received,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::bus::{Bus, BusConfig};
+    use crate::util::image::PixelFormat;
+    use crate::util::rng::Rng;
+
+    fn module(cfg: IfaceConfig) -> LcdModule {
+        LcdModule::new(cfg, Bus::new(BusConfig::default_50mhz())).unwrap()
+    }
+
+    fn wire(w: usize, h: usize, fmt: PixelFormat, seed: u64) -> WireFrame {
+        let mut rng = Rng::new(seed);
+        let f = Frame::from_data(
+            w,
+            h,
+            fmt,
+            (0..w * h).map(|_| rng.next_u32() & fmt.max_value()).collect(),
+        )
+        .unwrap();
+        WireFrame::from_frame(&f)
+    }
+
+    #[test]
+    fn clean_reception_roundtrips_data() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(64, 32, PixelFormat::Bpp24);
+        let w = wire(64, 32, PixelFormat::Bpp24, 1);
+        let (frame, rep) = m.receive_frame(&w, SimTime::ZERO).unwrap();
+        assert!(rep.crc_ok);
+        assert_eq!(frame.data, w.payload);
+        assert_eq!(m.regs.crc_ok, 1);
+    }
+
+    #[test]
+    fn corrupted_frame_flags_crc_error() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(64, 32, PixelFormat::Bpp16);
+        let mut w = wire(64, 32, PixelFormat::Bpp16, 2);
+        w.corrupt_bit(17, 5);
+        let (_, rep) = m.receive_frame(&w, SimTime::ZERO).unwrap();
+        assert!(!rep.crc_ok);
+        assert_eq!(m.regs.crc_err, 1);
+    }
+
+    #[test]
+    fn paper_point_16bpp_2048_overflows_buffer() {
+        // "Due to the FPGA memory resources, we transmitted without errors
+        //  16-bit frames with up to 1024x1024 size."
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(2048, 2048, PixelFormat::Bpp16);
+        let w = wire(2048, 2048, PixelFormat::Bpp16, 3);
+        assert!(m.receive_frame(&w, SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn paper_point_16bpp_1024_fits() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(1024, 1024, PixelFormat::Bpp16);
+        let w = wire(1024, 1024, PixelFormat::Bpp16, 4);
+        let (_, rep) = m.receive_frame(&w, SimTime::ZERO).unwrap();
+        assert!(rep.crc_ok);
+        assert!((rep.wire_time.as_ms() - 21.0).abs() < 0.6);
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(32, 32, PixelFormat::Bpp8);
+        let w = wire(16, 16, PixelFormat::Bpp8, 5);
+        assert!(m.receive_frame(&w, SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn drain_time_accounted() {
+        let mut m = module(IfaceConfig::paper_50mhz());
+        m.regs.configure(256, 256, PixelFormat::Bpp8);
+        let w = wire(256, 256, PixelFormat::Bpp8, 6);
+        let (_, rep) = m.receive_frame(&w, SimTime::ZERO).unwrap();
+        // 16K words at ~50 MHz with burst overhead: several hundred us.
+        assert!(rep.drain_time.as_us() > 100.0);
+        assert!(rep.drain_time < rep.wire_time);
+    }
+}

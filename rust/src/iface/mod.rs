@@ -1,0 +1,22 @@
+//! The CIF/LCD interface pair (paper §II, §III-A): the FPGA-side modules
+//! that move frames to and from the VPU, with CRC integrity, width
+//! conversion, image buffering, and per-line timing.
+//!
+//! * [`cif`] — FPGA **CIF Tx**: image buffer -> FSM -> pixel FIFO -> Tx,
+//!   CRC-16/XMODEM appended as the last line of the frame.
+//! * [`lcd`] — FPGA **LCD Rx**: Rx -> pixel FIFO -> FSM -> image buffer,
+//!   CRC checked, status registers updated.
+//! * [`signals`] — the wire-level frame representation shared with the
+//!   VPU-side drivers.
+//! * [`timing`] — transfer-time model (pixel clock + line porches).
+//! * [`loopback`] — the paper's §IV loopback functional test harness.
+
+pub mod cif;
+pub mod lcd;
+pub mod loopback;
+pub mod signals;
+pub mod timing;
+
+pub use cif::CifModule;
+pub use lcd::LcdModule;
+pub use signals::WireFrame;

@@ -1,0 +1,185 @@
+//! Wire-level frame representation shared by the FPGA modules and the
+//! VPU-side drivers.
+//!
+//! A transmitted frame is `height` payload lines followed by one extra
+//! line carrying the CRC-16/XMODEM of the payload ("a CRC component
+//! appends the calculated CRC-16/XMODEM to the last line of the frame to
+//! be transmitted", §III-A). Each line is framed by `hsync`; the whole
+//! frame by `vsync` — at transaction level those appear as the per-line
+//! porch overhead in [`super::timing`].
+
+use crate::error::{Error, Result};
+use crate::fabric::crc16::Crc16Xmodem;
+use crate::util::image::{Frame, PixelFormat};
+
+/// A frame as it appears on the CIF/LCD parallel bus.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireFrame {
+    pub width: usize,
+    pub height: usize,
+    pub format: PixelFormat,
+    /// Payload pixels, row-major, `width * height` entries.
+    pub payload: Vec<u32>,
+    /// The appended CRC line (`width` pixels; CRC packed into the first
+    /// pixel(s), rest zero).
+    pub crc_line: Vec<u32>,
+}
+
+/// Compute the payload CRC the way the HDL shifts it out: row-major
+/// pixels, most-significant byte of each pixel first.
+pub fn payload_crc(payload: &[u32], format: PixelFormat) -> u16 {
+    let mut crc = Crc16Xmodem::new();
+    crc.update_pixels(payload, format.bits());
+    crc.finish()
+}
+
+/// Pack a 16-bit CRC into the first pixel(s) of a CRC line.
+///
+/// At 8 bpp the CRC needs two pixels (hi byte, lo byte); at 16/24 bpp it
+/// fits in the first pixel.
+pub fn make_crc_line(crc: u16, width: usize, format: PixelFormat) -> Vec<u32> {
+    let mut line = vec![0u32; width];
+    match format {
+        PixelFormat::Bpp8 => {
+            line[0] = (crc >> 8) as u32;
+            if width > 1 {
+                line[1] = (crc & 0xFF) as u32;
+            }
+        }
+        PixelFormat::Bpp16 | PixelFormat::Bpp24 => {
+            line[0] = crc as u32;
+        }
+    }
+    line
+}
+
+/// Recover the CRC value from a received CRC line.
+pub fn extract_crc(line: &[u32], format: PixelFormat) -> u16 {
+    match format {
+        PixelFormat::Bpp8 => {
+            let hi = *line.first().unwrap_or(&0) as u16;
+            let lo = *line.get(1).unwrap_or(&0) as u16;
+            (hi << 8) | (lo & 0xFF)
+        }
+        PixelFormat::Bpp16 | PixelFormat::Bpp24 => {
+            (*line.first().unwrap_or(&0) & 0xFFFF) as u16
+        }
+    }
+}
+
+impl WireFrame {
+    /// Build the wire form of a frame (Tx side: compute + append CRC).
+    pub fn from_frame(frame: &Frame) -> WireFrame {
+        let crc = payload_crc(&frame.data, frame.format);
+        WireFrame {
+            width: frame.width,
+            height: frame.height,
+            format: frame.format,
+            payload: frame.data.clone(),
+            crc_line: make_crc_line(crc, frame.width, frame.format),
+        }
+    }
+
+    /// Validate CRC and strip wire framing (Rx side).
+    pub fn to_frame(&self) -> Result<Frame> {
+        let computed = payload_crc(&self.payload, self.format);
+        let received = extract_crc(&self.crc_line, self.format);
+        if computed != received {
+            return Err(Error::CrcMismatch { computed, received });
+        }
+        Frame::from_data(
+            self.width,
+            self.height,
+            self.format,
+            self.payload.clone(),
+        )
+    }
+
+    /// Wire pixels transmitted, including the CRC line.
+    pub fn wire_pixels(&self) -> usize {
+        self.width * (self.height + 1)
+    }
+
+    /// Lines transmitted, including the CRC line.
+    pub fn wire_lines(&self) -> usize {
+        self.height + 1
+    }
+
+    /// Flip one payload bit (fault injection for integrity tests).
+    pub fn corrupt_bit(&mut self, pixel_idx: usize, bit: u32) {
+        let mask = 1u32 << (bit % self.format.bits());
+        let idx = pixel_idx % self.payload.len();
+        self.payload[idx] ^= mask;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn random_frame(seed: u64, w: usize, h: usize, fmt: PixelFormat) -> Frame {
+        let mut rng = Rng::new(seed);
+        let data = (0..w * h).map(|_| rng.next_u32() & fmt.max_value()).collect();
+        Frame::from_data(w, h, fmt, data).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_clean_frame() {
+        for fmt in [PixelFormat::Bpp8, PixelFormat::Bpp16, PixelFormat::Bpp24] {
+            let f = random_frame(1, 16, 8, fmt);
+            let wire = WireFrame::from_frame(&f);
+            assert_eq!(wire.wire_lines(), 9);
+            let back = wire.to_frame().unwrap();
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let f = random_frame(2, 32, 32, PixelFormat::Bpp16);
+        let mut wire = WireFrame::from_frame(&f);
+        wire.corrupt_bit(100, 3);
+        match wire.to_frame() {
+            Err(Error::CrcMismatch { .. }) => {}
+            other => panic!("expected CRC mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crc_line_packing_8bpp_uses_two_pixels() {
+        let line = make_crc_line(0xBEEF, 4, PixelFormat::Bpp8);
+        assert_eq!(line, vec![0xBE, 0xEF, 0, 0]);
+        assert_eq!(extract_crc(&line, PixelFormat::Bpp8), 0xBEEF);
+    }
+
+    #[test]
+    fn crc_line_packing_16bpp_single_pixel() {
+        let line = make_crc_line(0x1234, 3, PixelFormat::Bpp16);
+        assert_eq!(line, vec![0x1234, 0, 0]);
+        assert_eq!(extract_crc(&line, PixelFormat::Bpp16), 0x1234);
+    }
+
+    #[test]
+    fn prop_wire_roundtrip_and_single_bit_detection() {
+        check("wireframe roundtrip + fault detect", 48, |g: &mut Gen| {
+            let fmt = *g.choose(&[
+                PixelFormat::Bpp8,
+                PixelFormat::Bpp16,
+                PixelFormat::Bpp24,
+            ]);
+            let w = g.int_in(2, 32);
+            let h = g.int_in(1, 32);
+            let data: Vec<u32> =
+                (0..w * h).map(|_| g.u32() & fmt.max_value()).collect();
+            let frame = Frame::from_data(w, h, fmt, data).unwrap();
+            let mut wire = WireFrame::from_frame(&frame);
+            if wire.to_frame().is_err() {
+                return false;
+            }
+            wire.corrupt_bit(g.int_in(0, w * h - 1), g.u32() % 8);
+            wire.to_frame().is_err()
+        });
+    }
+}

@@ -1,0 +1,100 @@
+//! Frame transfer timing: one pixel per clock, plus per-line porch
+//! (hsync blanking) overhead.
+//!
+//! Calibration (DESIGN.md §4): `porch = 27` pixel clocks per line makes a
+//! 2048x2048 8bpp frame (plus CRC line) take 85.03 ms at 50 MHz and a
+//! 1024x1024 frame 21.5 ms — the paper's Table II CIF/LCD columns (85 ms
+//! and 21 ms). Multi-channel frames (the CNN's RGB input) are transmitted
+//! as successive planes, i.e. `channels` full frames.
+
+use crate::fabric::clock::{ClockDomain, SimTime};
+
+/// Pixel clocks to transfer a W x H frame including its CRC line.
+pub fn frame_cycles(width: usize, height: usize, porch: usize) -> u64 {
+    // height payload lines + 1 CRC line, each `width + porch` clocks.
+    (height as u64 + 1) * (width as u64 + porch as u64)
+}
+
+/// Transfer time of one frame at `clock`.
+pub fn frame_time(
+    clock: &ClockDomain,
+    width: usize,
+    height: usize,
+    porch: usize,
+) -> SimTime {
+    clock.cycles(frame_cycles(width, height, porch))
+}
+
+/// Transfer time for a multi-plane (channel) frame.
+pub fn planes_time(
+    clock: &ClockDomain,
+    width: usize,
+    height: usize,
+    channels: usize,
+    porch: usize,
+) -> SimTime {
+    clock.cycles(frame_cycles(width, height, porch) * channels as u64)
+}
+
+/// Effective throughput in frames/s for back-to-back transfers.
+pub fn frames_per_second(
+    clock: &ClockDomain,
+    width: usize,
+    height: usize,
+    porch: usize,
+) -> f64 {
+    1.0 / frame_time(clock, width, height, porch).as_secs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PORCH: usize = 27;
+
+    #[test]
+    fn paper_4mpixel_8bpp_is_85ms() {
+        let clk = ClockDomain::new(50.0e6);
+        let t = frame_time(&clk, 2048, 2048, PORCH);
+        assert!((t.as_ms() - 85.0).abs() < 0.5, "{} ms", t.as_ms());
+    }
+
+    #[test]
+    fn paper_1mpixel_is_21ms() {
+        let clk = ClockDomain::new(50.0e6);
+        let t = frame_time(&clk, 1024, 1024, PORCH);
+        assert!((t.as_ms() - 21.0).abs() < 0.6, "{} ms", t.as_ms());
+    }
+
+    #[test]
+    fn paper_rgb_1mpixel_is_63ms() {
+        // CNN input: "1MP RGB, 16bpp ... 63ms" = 3 planes of ~21 ms.
+        let clk = ClockDomain::new(50.0e6);
+        let t = planes_time(&clk, 1024, 1024, 3, PORCH);
+        assert!((t.as_ms() - 63.0).abs() < 2.0, "{} ms", t.as_ms());
+    }
+
+    #[test]
+    fn paper_intro_20_9ms_without_porch() {
+        // §II: "transmit a 1024x1024 frame in 20.9ms" (raw pixel count).
+        let clk = ClockDomain::new(50.0e6);
+        let t = clk.cycles(1024 * 1024);
+        assert!((t.as_ms() - 20.97).abs() < 0.05);
+    }
+
+    #[test]
+    fn loopback_48fps_claim() {
+        // §V: "48 FPS for 1MPixel image transfers".
+        let clk = ClockDomain::new(50.0e6);
+        let fps = frames_per_second(&clk, 1024, 1024, PORCH);
+        assert!((fps - 46.5).abs() < 2.0, "fps {fps}");
+    }
+
+    #[test]
+    fn tiny_frame_dominated_by_porch() {
+        let clk = ClockDomain::new(100.0e6);
+        let t = frame_time(&clk, 64, 64, PORCH);
+        // 65 lines * 91 clocks = 5915 clocks @ 100 MHz = 59.15 us.
+        assert!((t.as_us() - 59.15).abs() < 0.01, "{} us", t.as_us());
+    }
+}

@@ -1,0 +1,40 @@
+//! # spacecodesign — FPGA & VPU co-processing for space applications
+//!
+//! A full-system reproduction of V. Leon et al., *"FPGA & VPU Co-Processing
+//! in Space Applications: Development and Testing with DSP/AI Benchmarks"*
+//! (ICECS 2021), on a simulated testbed (see DESIGN.md for the hardware
+//! substitution map).
+//!
+//! The crate is the L3 layer of a three-layer stack:
+//!
+//! * **L1/L2 (build time)**: the DSP/AI benchmarks are Pallas kernels
+//!   composed into JAX graphs, AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)**: a cycle-accounted simulation of the FPGA framing
+//!   processor (CIF/LCD interface HDL, FIFOs, CRC), a timing/power model of
+//!   the Myriad2 VPU (2×LEON, 12×SHAVE, DMA, CMX/DRAM), and the system
+//!   coordinator implementing the paper's Unmasked/Masked I/O modes.
+//!   Benchmark *numerics* are real: the coordinator executes the AOT
+//!   artifacts through the PJRT CPU client (`runtime`).
+//!
+//! Layout follows DESIGN.md §8; every paper table/figure has a bench
+//! target under `rust/benches/`.
+
+pub mod config;
+pub mod error;
+pub mod util;
+
+pub mod fabric;
+pub mod iface;
+pub mod vpu;
+
+pub mod compress;
+pub mod dsp;
+pub mod render;
+pub mod cnn;
+
+pub mod fpga;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_model;
+
+pub use error::{Error, Result};

@@ -1,0 +1,300 @@
+//! `spacecodesign` CLI — the leader entrypoint for the simulated
+//! FPGA + VPU co-processor testbed.
+//!
+//! Subcommands regenerate the paper's experiments:
+//!
+//! ```text
+//! spacecodesign table1               # FPGA resource utilization
+//! spacecodesign table2 [--frames N]  # full-system Table II
+//! spacecodesign speedups             # LEON vs 12xSHAVE (§IV text)
+//! spacecodesign fig5                 # power + FPS/W + comparators
+//! spacecodesign loopback             # §IV interface feasibility sweep
+//! spacecodesign run --bench NAME     # one benchmark, with validation
+//! spacecodesign compress [...]       # CCSDS-123 downlink demo
+//! spacecodesign report               # everything above
+//! ```
+//!
+//! (Hand-rolled argument parsing: clap is not in the offline vendor set,
+//! DESIGN.md §9.)
+
+use spacecodesign::compress::{self, Cube};
+use spacecodesign::coordinator::comparators;
+use spacecodesign::coordinator::{report, Benchmark, CoProcessor};
+use spacecodesign::fpga::{designs, Device};
+use spacecodesign::iface::loopback;
+use spacecodesign::util::rng::Rng;
+use spacecodesign::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let r = match cmd {
+        "table1" => table1(),
+        "table2" => table2(flag_usize(&args, "--frames").unwrap_or(32), seed(&args)),
+        "speedups" => speedups(seed(&args)),
+        "fig5" => fig5(seed(&args)),
+        "loopback" => run_loopback(),
+        "run" => run_one(&args),
+        "compress" => run_compress(&args),
+        "report" => report_all(seed(&args)),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+spacecodesign — FPGA & VPU co-processing testbed (ICECS 2021 reproduction)
+
+USAGE: spacecodesign <COMMAND> [--seed N] [--frames N]
+
+COMMANDS:
+  table1     FPGA resource utilization (paper Table I)
+  table2     full-system benchmark table (paper Table II)
+  speedups   LEON baseline vs 12xSHAVE speedups (paper §IV)
+  fig5       power consumption + FPS/W comparisons (paper Fig. 5)
+  loopback   CIF/LCD interface feasibility sweep (paper §IV)
+  run        one benchmark end-to-end: --bench binning|conv3|conv7|conv13|render|cnn
+  compress   CCSDS-123 compression demo: [--bands Z] [--rows Y] [--cols X]
+  report     all of the above
+";
+
+fn seed(args: &[String]) -> u64 {
+    flag_usize(args, "--seed").unwrap_or(42) as u64
+}
+
+fn flag_usize(args: &[String], name: &str) -> Option<usize> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+}
+
+fn flag_str<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn table1() -> Result<()> {
+    println!(
+        "== Table I: FPGA resource utilization ({}) ==",
+        Device::xcku060().name
+    );
+    let dev = Device::xcku060();
+    let rows = [
+        (
+            "CIF/LCD Interface",
+            designs::cif_lcd_interface(1024, 1024),
+            "1% / 0.3% / 0.3% / 0.6%",
+        ),
+        (
+            "CCSDS-123 680x512x224 16bpp",
+            designs::ccsds123(680, 512, 224, 16, 1),
+            "11% / 6% / 0.2% / 6%",
+        ),
+        (
+            "FIR Filter 64-tap 16bpp",
+            designs::fir_filter(64, 16),
+            "0.5% / 0.5% / 2% / 0%",
+        ),
+        (
+            "Harris Corner Det. 1024x32",
+            designs::harris(1024, 32),
+            "2% / 2% / 2% / 6%",
+        ),
+    ];
+    println!(
+        "{:<30} {:>26}   {:>8} {:>8} {:>6} {:>6}   paper (LUT/DFF/DSP/RAMB)",
+        "Design", "LUT%  DFF%  DSP%  RAMB%", "LUT", "DFF", "DSP", "RAMB"
+    );
+    for (name, r, paper) in rows {
+        let u = dev.utilization(&r);
+        println!(
+            "{:<30} {}   {:>8} {:>8} {:>6} {:>6}   {}",
+            name,
+            u.row(),
+            r.luts,
+            r.dffs,
+            r.dsps,
+            r.brams,
+            paper
+        );
+    }
+    Ok(())
+}
+
+fn table2(frames: usize, seed: u64) -> Result<()> {
+    println!("== Table II: FPGA & VPU co-processing, CIF/LCD @ 50 MHz ==");
+    let mut cp = CoProcessor::with_defaults()?;
+    println!("{}", report::table2_header());
+    let mut runs = Vec::new();
+    for bench in Benchmark::table2() {
+        let (run, masked) = cp.run_both_modes(bench, seed, frames)?;
+        println!("{}", report::table2_row(&run, &masked));
+        runs.push(run);
+    }
+    println!("\nValidation:");
+    for run in &runs {
+        println!("{}", report::validation_row(run));
+    }
+    Ok(())
+}
+
+fn speedups(seed: u64) -> Result<()> {
+    println!("== Speedups vs LEON baseline (paper §IV) ==");
+    let mut cp = CoProcessor::with_defaults()?;
+    for bench in Benchmark::table2() {
+        let run = cp.run_unmasked(bench, seed)?;
+        println!("{}", report::speedup_row(&run));
+    }
+    Ok(())
+}
+
+fn fig5(seed: u64) -> Result<()> {
+    println!("== Fig. 5: VPU power per benchmark + FPS/W comparisons ==");
+    let mut cp = CoProcessor::with_defaults()?;
+    let mut cnn_point = None;
+    for bench in Benchmark::table2() {
+        let run = cp.run_unmasked(bench, seed)?;
+        let leon_p = cp.power.leon_power(bench.kind());
+        let leon_fpsw = 1.0 / run.t_leon.as_secs() / leon_p;
+        println!(
+            "{:<22} SHAVE {:.2} W ({:>8.1} proc-FPS/W)   LEON {:.2} W ({:>7.2} proc-FPS/W)   ratio {:>5.1}x",
+            run.bench.name(),
+            run.power_w,
+            run.fps_per_watt(),
+            leon_p,
+            leon_fpsw,
+            run.fps_per_watt() / leon_fpsw,
+        );
+        if bench == Benchmark::CnnShip {
+            cnn_point = Some(comparators::vpu_point(
+                1.0 / run.t_proc.as_secs(),
+                run.power_w,
+            ));
+        }
+    }
+    if let Some(vpu) = cnn_point {
+        println!("\nCNN FPS/W vs cited devices (§IV):");
+        for d in [
+            vpu,
+            comparators::zynq7020_cnn(),
+            comparators::jetson_nano_cnn(),
+        ] {
+            println!(
+                "  {:<32} {:>6.2} FPS @ {:>4.2} W = {:>6.2} FPS/W",
+                d.device,
+                d.fps,
+                d.watts,
+                d.fps_per_watt()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_loopback() -> Result<()> {
+    println!("== CIF/LCD loopback feasibility (paper §IV) ==");
+    for (name, r) in loopback::paper_sweep() {
+        match r {
+            Ok(rep) => println!(
+                "  {name:<28} OK   total {}  cif {}  lcd {}  intact={} crc={}",
+                rep.total, rep.cif_time, rep.lcd_time, rep.data_intact, rep.crc_ok
+            ),
+            Err(e) => println!("  {name:<28} INFEASIBLE: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn parse_bench(name: &str) -> Option<Benchmark> {
+    Some(match name {
+        "binning" => Benchmark::Binning,
+        "conv3" => Benchmark::Conv { k: 3 },
+        "conv5" => Benchmark::Conv { k: 5 },
+        "conv7" => Benchmark::Conv { k: 7 },
+        "conv9" => Benchmark::Conv { k: 9 },
+        "conv11" => Benchmark::Conv { k: 11 },
+        "conv13" => Benchmark::Conv { k: 13 },
+        "render" => Benchmark::Render,
+        "cnn" => Benchmark::CnnShip,
+        _ => return None,
+    })
+}
+
+fn run_one(args: &[String]) -> Result<()> {
+    let name = flag_str(args, "--bench").unwrap_or("conv3");
+    let Some(bench) = parse_bench(name) else {
+        eprintln!("unknown benchmark '{name}'");
+        std::process::exit(2);
+    };
+    let mut cp = CoProcessor::with_defaults()?;
+    let (run, masked) = cp.run_both_modes(bench, seed(args), 32)?;
+    println!("{}", report::table2_header());
+    println!("{}", report::table2_row(&run, &masked));
+    println!("{}", report::validation_row(&run));
+    println!("{}", report::speedup_row(&run));
+    Ok(())
+}
+
+fn run_compress(args: &[String]) -> Result<()> {
+    let bands = flag_usize(args, "--bands").unwrap_or(32);
+    let rows = flag_usize(args, "--rows").unwrap_or(64);
+    let cols = flag_usize(args, "--cols").unwrap_or(64);
+    println!("== CCSDS-123 lossless compression ({bands}x{rows}x{cols}, 16bpp) ==");
+    let mut rng = Rng::new(7);
+    let n = bands * rows * cols;
+    let mut base = vec![0f64; rows * cols];
+    for (i, b) in base.iter_mut().enumerate() {
+        let (y, x) = (i / cols, i % cols);
+        *b = 3000.0 + 1500.0 * (x as f64 * 0.07).sin() + 900.0 * (y as f64 * 0.05).cos();
+    }
+    let mut data = vec![0u16; n];
+    for z in 0..bands {
+        let gain = 1.0 + 0.4 * ((z as f64) * 0.12).sin();
+        for i in 0..rows * cols {
+            data[z * rows * cols + i] =
+                (base[i] * gain + 40.0 * rng.normal()).clamp(0.0, 65535.0) as u16;
+        }
+    }
+    let cube = Cube::new(bands, rows, cols, data)?;
+    let t0 = std::time::Instant::now();
+    let (bits, stats) = compress::compress(&cube, compress::Params::default())?;
+    let dt = t0.elapsed().as_secs_f64();
+    let back = compress::decompress(&bits)?;
+    println!(
+        "  in {} B  out {} B  ratio {:.2}x  {:.2} bits/sample  {:.2} Msamples/s  roundtrip {}",
+        stats.in_bytes,
+        stats.out_bytes,
+        stats.ratio,
+        stats.bits_per_sample,
+        cube.samples() as f64 / dt / 1e6,
+        if back == cube { "EXACT" } else { "FAILED" }
+    );
+    Ok(())
+}
+
+fn report_all(seed: u64) -> Result<()> {
+    table1()?;
+    println!();
+    table2(32, seed)?;
+    println!();
+    speedups(seed)?;
+    println!();
+    fig5(seed)?;
+    println!();
+    run_loopback()?;
+    println!();
+    run_compress(&[])
+}

@@ -1,0 +1,243 @@
+//! Camera model + triangle setup — the **exact f32 mirror** of
+//! `python/compile/model.py::project_triangles`. Change both or neither:
+//! the host groundtruth must agree with the AOT artifact to float
+//! precision.
+//!
+//! Convention (as in model.py): camera at `t`, looking along its local
+//! -z axis. `c = R @ (v - t)` with `R = Rz @ Ry @ Rx`; screen
+//! `x = f*c.x/z' + W/2`, `y = f*c.y/z' + H/2` with `z' = -c.z`; the
+//! per-vertex depth channel is the euclidean camera distance `|c|`.
+
+use crate::render::mesh::Mesh;
+
+/// Intrinsics shared with model.py.
+pub const FOCAL_SCALE: f32 = 1.1;
+pub const ZNEAR: f32 = 0.1;
+
+/// 6-DoF pose: (rx, ry, rz, tx, ty, tz) — the paper's "6x1 vector" CIF
+/// payload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pose {
+    pub rx: f32,
+    pub ry: f32,
+    pub rz: f32,
+    pub tx: f32,
+    pub ty: f32,
+    pub tz: f32,
+}
+
+impl Pose {
+    pub fn from_slice(v: &[f32]) -> Pose {
+        Pose {
+            rx: v[0],
+            ry: v[1],
+            rz: v[2],
+            tx: v[3],
+            ty: v[4],
+            tz: v[5],
+        }
+    }
+
+    pub fn to_array(self) -> [f32; 6] {
+        [self.rx, self.ry, self.rz, self.tx, self.ty, self.tz]
+    }
+}
+
+/// R = Rz @ Ry @ Rx (row-major 3x3), matching model.py::euler_to_matrix.
+pub fn euler_to_matrix(rx: f32, ry: f32, rz: f32) -> [[f32; 3]; 3] {
+    let (sx, cx) = rx.sin_cos();
+    let (sy, cy) = ry.sin_cos();
+    let (sz, cz) = rz.sin_cos();
+    let rmx = [[1.0, 0.0, 0.0], [0.0, cx, -sx], [0.0, sx, cx]];
+    let rmy = [[cy, 0.0, sy], [0.0, 1.0, 0.0], [-sy, 0.0, cy]];
+    let rmz = [[cz, -sz, 0.0], [sz, cz, 0.0], [0.0, 0.0, 1.0]];
+    matmul3(&rmz, &matmul3(&rmy, &rmx))
+}
+
+fn matmul3(a: &[[f32; 3]; 3], b: &[[f32; 3]; 3]) -> [[f32; 3]; 3] {
+    let mut out = [[0f32; 3]; 3];
+    for (i, row) in out.iter_mut().enumerate() {
+        for (j, cell) in row.iter_mut().enumerate() {
+            *cell = a[i][0] * b[0][j] + a[i][1] * b[1][j] + a[i][2] * b[2][j];
+        }
+    }
+    out
+}
+
+/// Screen-space triangle rows (x0,y0,x1,y1,x2,y2,d0,d1,d2), padded with
+/// zero rows to `n_tris` — the same tensor the AOT render graph builds.
+pub fn project_triangles(
+    pose: &Pose,
+    mesh: &Mesh,
+    width: usize,
+    height: usize,
+    n_tris: usize,
+) -> Vec<[f32; 9]> {
+    assert!(mesh.faces.len() <= n_tris, "mesh exceeds triangle budget");
+    let rot = euler_to_matrix(pose.rx, pose.ry, pose.rz);
+    let t = [pose.tx, pose.ty, pose.tz];
+    let focal = FOCAL_SCALE * width as f32;
+
+    // Per-vertex camera-space data.
+    let mut sx = Vec::with_capacity(mesh.verts.len());
+    let mut sy = Vec::with_capacity(mesh.verts.len());
+    let mut dist = Vec::with_capacity(mesh.verts.len());
+    let mut zp = Vec::with_capacity(mesh.verts.len());
+    for v in &mesh.verts {
+        let d = [v[0] - t[0], v[1] - t[1], v[2] - t[2]];
+        // model.py computes cam = (v - t) @ rot.T, i.e. cam_i = rot_i . d.
+        let c = [
+            rot[0][0] * d[0] + rot[0][1] * d[1] + rot[0][2] * d[2],
+            rot[1][0] * d[0] + rot[1][1] * d[1] + rot[1][2] * d[2],
+            rot[2][0] * d[0] + rot[2][1] * d[1] + rot[2][2] * d[2],
+        ];
+        let z = -c[2];
+        let safe_z = if z > ZNEAR { z } else { 1.0 };
+        sx.push(focal * c[0] / safe_z + width as f32 * 0.5);
+        sy.push(focal * c[1] / safe_z + height as f32 * 0.5);
+        dist.push((c[0] * c[0] + c[1] * c[1] + c[2] * c[2]).sqrt());
+        zp.push(z);
+    }
+
+    let mut out = vec![[0f32; 9]; n_tris];
+    for (i, f) in mesh.faces.iter().enumerate() {
+        let (a, b, c) = (f[0] as usize, f[1] as usize, f[2] as usize);
+        let valid = zp[a] > ZNEAR && zp[b] > ZNEAR && zp[c] > ZNEAR;
+        if valid {
+            out[i] = [
+                sx[a], sy[a], sx[b], sy[b], sx[c], sy[c], dist[a], dist[b], dist[c],
+            ];
+        }
+    }
+    out
+}
+
+/// Per-band rasterization effort for the VPU cost model: for each of
+/// `n_bands` horizontal bands, sum over triangles of the pixel area of
+/// the triangle's bbox clipped to the band (the work a bbox-walking
+/// rasterizer does).
+pub fn band_bbox_px(
+    tris: &[[f32; 9]],
+    width: usize,
+    height: usize,
+    n_bands: usize,
+) -> Vec<u64> {
+    let bh = height / n_bands;
+    let mut out = vec![0u64; n_bands];
+    for t in tris {
+        if t.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let xs = [t[0], t[2], t[4]];
+        let ys = [t[1], t[3], t[5]];
+        let x0 = xs.iter().cloned().fold(f32::MAX, f32::min).max(0.0) as usize;
+        let x1 = (xs.iter().cloned().fold(f32::MIN, f32::max).min(width as f32 - 1.0))
+            as usize;
+        let y0 = ys.iter().cloned().fold(f32::MAX, f32::min).max(0.0) as usize;
+        let y1 = (ys.iter().cloned().fold(f32::MIN, f32::max).min(height as f32 - 1.0))
+            as usize;
+        if x1 < x0 || y1 < y0 {
+            continue;
+        }
+        let w = (x1 - x0 + 1) as u64;
+        for (band, px) in out.iter_mut().enumerate() {
+            let by0 = band * bh;
+            let by1 = by0 + bh - 1;
+            let oy0 = y0.max(by0);
+            let oy1 = y1.min(by1);
+            if oy1 >= oy0 {
+                *px += w * (oy1 - oy0 + 1) as u64;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_pose() -> Pose {
+        Pose {
+            rx: 0.0,
+            ry: 0.0,
+            rz: 0.0,
+            tx: 0.0,
+            ty: 0.0,
+            tz: 3.0,
+        }
+    }
+
+    #[test]
+    fn identity_rotation_is_identity_matrix() {
+        let r = euler_to_matrix(0.0, 0.0, 0.0);
+        for (i, row) in r.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_matrix_is_orthonormal() {
+        let r = euler_to_matrix(0.3, -0.5, 1.1);
+        for i in 0..3 {
+            for j in 0..3 {
+                let dot: f32 = (0..3).map(|k| r[i][k] * r[j][k]).sum();
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "row {i}.{j}: {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn centered_model_projects_to_screen_center() {
+        let mesh = Mesh::octahedron();
+        let tris = project_triangles(&default_pose(), &mesh, 128, 128, 8);
+        let live: Vec<_> = tris.iter().filter(|t| t.iter().any(|&v| v != 0.0)).collect();
+        assert_eq!(live.len(), 8);
+        let mean_x: f32 =
+            live.iter().map(|t| (t[0] + t[2] + t[4]) / 3.0).sum::<f32>() / 8.0;
+        assert!((mean_x - 64.0).abs() < 2.0, "mean_x {mean_x}");
+        // Depths ~ distance 2..4 (unit octahedron at 3).
+        for t in &live {
+            for &d in &t[6..9] {
+                assert!((1.9..4.1).contains(&d), "depth {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn behind_camera_culled() {
+        let mesh = Mesh::octahedron();
+        let pose = Pose {
+            tz: -3.0,
+            ..default_pose()
+        };
+        let tris = project_triangles(&pose, &mesh, 128, 128, 8);
+        assert!(tris.iter().all(|t| t.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn band_bbox_concentrated_in_middle() {
+        let mesh = Mesh::octahedron();
+        let tris = project_triangles(&default_pose(), &mesh, 128, 128, 8);
+        let bands = band_bbox_px(&tris, 128, 128, 8);
+        let total: u64 = bands.iter().sum();
+        assert!(total > 0);
+        // Centered model: outer bands see nothing, middle bands the most.
+        assert_eq!(bands[0], 0);
+        assert_eq!(bands[7], 0);
+        // The two middle bands carry more than their 2/8 proportional
+        // share of bbox work.
+        let mid = bands[3] + bands[4];
+        assert!(mid * 4 > total, "middle share {mid}/{total}");
+    }
+
+    #[test]
+    fn degenerate_rows_skipped_in_bbox() {
+        let tris = vec![[0f32; 9]; 4];
+        assert!(band_bbox_px(&tris, 64, 64, 4).iter().all(|&b| b == 0));
+    }
+}

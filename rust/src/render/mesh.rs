@@ -1,0 +1,158 @@
+//! Triangle-mesh container + the `mesh_*.bin` interchange format written
+//! by `python/compile/datasets.py` (the same model the AOT render
+//! artifact bakes in as constants).
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// An indexed triangle mesh.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mesh {
+    pub verts: Vec<[f32; 3]>,
+    pub faces: Vec<[u32; 3]>,
+}
+
+impl Mesh {
+    /// Parse the binary format: magic "MESH", u32 V, u32 F (LE), then
+    /// V*3 f32 vertices, then F*3 u32 face indices.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Mesh> {
+        let err = |msg: &str| Error::ArtifactParse {
+            path: "<mesh bytes>".into(),
+            msg: msg.into(),
+        };
+        if bytes.len() < 12 || &bytes[..4] != b"MESH" {
+            return Err(err("bad magic"));
+        }
+        let v = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let f = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let need = 12 + v * 12 + f * 12;
+        if bytes.len() != need {
+            return Err(err(&format!(
+                "size mismatch: {} bytes for V={v} F={f} (need {need})",
+                bytes.len()
+            )));
+        }
+        let mut verts = Vec::with_capacity(v);
+        let mut off = 12;
+        for _ in 0..v {
+            let mut vert = [0f32; 3];
+            for c in vert.iter_mut() {
+                *c = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+            verts.push(vert);
+        }
+        let mut faces = Vec::with_capacity(f);
+        for _ in 0..f {
+            let mut face = [0u32; 3];
+            for c in face.iter_mut() {
+                *c = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+            if face.iter().any(|&i| i as usize >= v) {
+                return Err(err("face index out of range"));
+            }
+            faces.push(face);
+        }
+        Ok(Mesh { verts, faces })
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Mesh> {
+        let bytes = std::fs::read(&path).map_err(|e| Error::ArtifactParse {
+            path: path.as_ref().display().to_string(),
+            msg: e.to_string(),
+        })?;
+        Mesh::from_bytes(&bytes)
+    }
+
+    /// Serialize back to the interchange format (for tests/tools).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.verts.len() * 12 + self.faces.len() * 12);
+        out.extend_from_slice(b"MESH");
+        out.extend_from_slice(&(self.verts.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.faces.len() as u32).to_le_bytes());
+        for v in &self.verts {
+            for c in v {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        for f in &self.faces {
+            for c in f {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// A deterministic octahedron (unit radius) for tests that must not
+    /// depend on artifact files.
+    pub fn octahedron() -> Mesh {
+        Mesh {
+            verts: vec![
+                [1.0, 0.0, 0.0],
+                [-1.0, 0.0, 0.0],
+                [0.0, 1.0, 0.0],
+                [0.0, -1.0, 0.0],
+                [0.0, 0.0, 1.0],
+                [0.0, 0.0, -1.0],
+            ],
+            faces: vec![
+                [0, 2, 4],
+                [2, 1, 4],
+                [1, 3, 4],
+                [3, 0, 4],
+                [2, 0, 5],
+                [1, 2, 5],
+                [3, 1, 5],
+                [0, 3, 5],
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let m = Mesh::octahedron();
+        let bytes = m.to_bytes();
+        let back = Mesh::from_bytes(&bytes).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Mesh::from_bytes(b"XXXX\0\0\0\0\0\0\0\0").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut bytes = Mesh::octahedron().to_bytes();
+        bytes.pop();
+        assert!(Mesh::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_face() {
+        let mut m = Mesh::octahedron();
+        m.faces[0] = [0, 1, 99];
+        assert!(Mesh::from_bytes(&m.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn loads_aot_mesh_if_built() {
+        let dir = crate::config::default_artifacts_dir();
+        let path = format!("{dir}/mesh_320.bin");
+        if std::path::Path::new(&path).exists() {
+            let m = Mesh::load(&path).unwrap();
+            assert_eq!(m.faces.len(), 320);
+            // Bumpy unit sphere: vertex norms near 1.
+            for v in &m.verts {
+                let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+                assert!((0.5..1.5).contains(&n), "norm {n}");
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Depth rendering substrate (paper §III-C, benchmark 3).
+//!
+//! The host-side groundtruth (and LEON-baseline algorithm) for the Depth
+//! Rendering benchmark: triangle mesh + 6-DoF pose -> 1024x1024 16-bit
+//! depth image.
+//!
+//! [`camera`] mirrors the L2 projection graph in `python/compile/model.py`
+//! **bit-for-bit in f32** (same rotation composition, same intrinsics,
+//! same culling rule); [`raster`] mirrors the Pallas kernel's edge-function
+//! rasterization. Together they let the host validate what comes back
+//! over the LCD interface against an independent implementation.
+
+pub mod camera;
+pub mod mesh;
+pub mod raster;
+
+pub use camera::{project_triangles, Pose};
+pub use mesh::Mesh;
+pub use raster::{depth_render, BACKGROUND_DEPTH};

@@ -1,0 +1,168 @@
+//! Scalar rasterizing depth renderer — the f32 mirror of the Pallas
+//! kernel in `python/compile/kernels/render.py` (same edge functions,
+//! same inside test, same depth interpolation), used as host groundtruth
+//! and as the LEON-baseline algorithm.
+//!
+//! The kernel evaluates every pixel against every triangle; this scalar
+//! version walks each triangle's bounding box (what the paper's LEON/
+//! SHAVE code does). The two are equivalent: pixels outside the bbox
+//! cannot be inside the triangle.
+
+pub const BACKGROUND_DEPTH: f32 = 1.0e9;
+
+/// Rasterize screen-space triangles (x0,y0,x1,y1,x2,y2,d0,d1,d2) into an
+/// (height x width) z-buffer of camera distances.
+pub fn depth_render(tris: &[[f32; 9]], width: usize, height: usize) -> Vec<f32> {
+    let mut z = vec![BACKGROUND_DEPTH; width * height];
+    for t in tris {
+        let [x0, y0, x1, y1, x2, y2, d0, d1, d2] = *t;
+        let area = (x1 - x0) * (y2 - y0) - (y1 - y0) * (x2 - x0);
+        if area.abs() <= 1e-12 {
+            continue; // degenerate / padding row
+        }
+        // Clipped bounding box (pixel centers at +0.5).
+        let xs_min = x0.min(x1).min(x2);
+        let xs_max = x0.max(x1).max(x2);
+        let ys_min = y0.min(y1).min(y2);
+        let ys_max = y0.max(y1).max(y2);
+        let bx0 = (xs_min - 0.5).floor().max(0.0) as usize;
+        let bx1 = (xs_max + 0.5).ceil().min(width as f32 - 1.0) as usize;
+        let by0 = (ys_min - 0.5).floor().max(0.0) as usize;
+        let by1 = (ys_max + 0.5).ceil().min(height as f32 - 1.0) as usize;
+        if bx1 < bx0 || by1 < by0 {
+            continue;
+        }
+        for py in by0..=by1 {
+            let ys = py as f32 + 0.5;
+            for px in bx0..=bx1 {
+                let xs = px as f32 + 0.5;
+                // Same edge functions as the kernel.
+                let w0 = (x2 - x1) * (ys - y1) - (y2 - y1) * (xs - x1);
+                let w1 = (x0 - x2) * (ys - y2) - (y0 - y2) * (xs - x2);
+                let w2 = (x1 - x0) * (ys - y0) - (y1 - y0) * (xs - x0);
+                let inside = (w0 >= 0.0 && w1 >= 0.0 && w2 >= 0.0 && area > 1e-12)
+                    || (w0 <= 0.0 && w1 <= 0.0 && w2 <= 0.0 && area < -1e-12);
+                if !inside {
+                    continue;
+                }
+                let depth = (w0 * d0 + w1 * d1 + w2 * d2) / area;
+                let cell = &mut z[py * width + px];
+                if depth < *cell {
+                    *cell = depth;
+                }
+            }
+        }
+    }
+    z
+}
+
+/// Depth image -> 16-bit frame pixels: d_pix = min(d, dmax)/dmax * 65535.
+/// Background maps to 65535 (the paper encodes distance; far = bright).
+pub fn depth_to_u16(z: &[f32], dmax: f32) -> Vec<u32> {
+    z.iter()
+        .map(|&d| {
+            let clamped = d.min(dmax).max(0.0);
+            ((clamped / dmax) * 65535.0).round() as u32
+        })
+        .collect()
+}
+
+/// Covered (non-background) pixel count — drives the content-dependence
+/// analysis of the render benchmark.
+pub fn coverage(z: &[f32]) -> usize {
+    z.iter().filter(|&&d| d < BACKGROUND_DEPTH / 2.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::render::camera::{project_triangles, Pose};
+    use crate::render::mesh::Mesh;
+
+    #[test]
+    fn single_triangle_covers_expected_area() {
+        let tris = vec![[4.0, 4.0, 60.0, 4.0, 4.0, 60.0, 2.0, 2.0, 2.0]];
+        let z = depth_render(&tris, 64, 64);
+        let n = coverage(&z);
+        assert!((1000..2000).contains(&n), "covered {n}");
+        for &d in z.iter().filter(|&&d| d < 1e8) {
+            assert!((d - 2.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn zbuffer_keeps_nearest() {
+        let far = [0.0, 0.0, 63.0, 0.0, 0.0, 63.0, 9.0, 9.0, 9.0];
+        let near = [0.0, 0.0, 63.0, 0.0, 0.0, 63.0, 4.0, 4.0, 4.0];
+        let z = depth_render(&[far, near], 64, 64);
+        for &d in z.iter().filter(|&&d| d < 1e8) {
+            assert!((d - 4.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn padding_rows_render_nothing() {
+        let z = depth_render(&[[0f32; 9]; 16], 32, 32);
+        assert_eq!(coverage(&z), 0);
+    }
+
+    #[test]
+    fn winding_independent() {
+        let ccw = [4.0, 4.0, 60.0, 4.0, 32.0, 60.0, 1.0, 2.0, 3.0];
+        let cw = [4.0, 4.0, 32.0, 60.0, 60.0, 4.0, 1.0, 3.0, 2.0];
+        let z1 = depth_render(&[ccw], 64, 64);
+        let z2 = depth_render(&[cw], 64, 64);
+        for (a, b) in z1.iter().zip(&z2) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn octahedron_renders_centered_blob() {
+        let mesh = Mesh::octahedron();
+        let pose = Pose {
+            rx: 0.0,
+            ry: 0.0,
+            rz: 0.0,
+            tx: 0.0,
+            ty: 0.0,
+            tz: 3.0,
+        };
+        let tris = project_triangles(&pose, &mesh, 128, 128, 8);
+        let z = depth_render(&tris, 128, 128);
+        let n = coverage(&z);
+        assert!(n > 1000, "coverage {n}");
+        // Center pixel hit, near distance 2 (unit octahedron at z=3).
+        let center = z[64 * 128 + 64];
+        assert!((1.8..2.6).contains(&center), "center depth {center}");
+        // Corner background.
+        assert_eq!(z[0], BACKGROUND_DEPTH);
+    }
+
+    #[test]
+    fn depth_quantization_maps_range() {
+        let z = vec![0.0, 2.5, 5.0, BACKGROUND_DEPTH];
+        let q = depth_to_u16(&z, 5.0);
+        assert_eq!(q, vec![0, 32768, 65535, 65535]);
+    }
+
+    #[test]
+    fn content_dependence_of_coverage() {
+        // Closer camera -> bigger on screen -> more covered pixels.
+        let mesh = Mesh::octahedron();
+        let near = Pose {
+            rx: 0.0,
+            ry: 0.0,
+            rz: 0.0,
+            tx: 0.0,
+            ty: 0.0,
+            tz: 2.0,
+        };
+        let far = Pose { tz: 5.0, ..near };
+        let t_near = project_triangles(&near, &mesh, 128, 128, 8);
+        let t_far = project_triangles(&far, &mesh, 128, 128, 8);
+        let c_near = coverage(&depth_render(&t_near, 128, 128));
+        let c_far = coverage(&depth_render(&t_far, 128, 128));
+        assert!(c_near > 3 * c_far, "{c_near} vs {c_far}");
+    }
+}

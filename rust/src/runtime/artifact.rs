@@ -1,0 +1,230 @@
+//! Artifact manifest: the machine-readable index `python/compile/aot.py`
+//! writes next to the HLO text files.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled benchmark variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form benchmark metadata (bench kind, k, grid, mesh file...).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+}
+
+/// The parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_tensor(v: &Json, path: &str) -> Result<TensorSpec> {
+    let err = |msg: &str| Error::ArtifactParse {
+        path: path.to_string(),
+        msg: msg.to_string(),
+    };
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err("tensor missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| err("non-numeric dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = v
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| err("tensor missing dtype"))?
+        .to_string();
+    if dtype != "f32" {
+        return Err(err(&format!("unsupported dtype {dtype}")));
+    }
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let path = dir.join("manifest.json").display().to_string();
+        let err = |msg: String| Error::ArtifactParse {
+            path: path.clone(),
+            msg,
+        };
+        let root = Json::parse(text).map_err(|e| err(e.to_string()))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| err("missing version".into()))?;
+        if version != 1 {
+            return Err(err(format!("unsupported manifest version {version}")));
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("missing artifacts array".into()))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err("artifact missing name".into()))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err(format!("artifact {name} missing file")))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err(format!("{name}: missing inputs")))?
+                .iter()
+                .map(|t| parse_tensor(t, &path))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err(format!("{name}: missing outputs")))?
+                .iter()
+                .map(|t| parse_tensor(t, &path))
+                .collect::<Result<Vec<_>>>()?;
+            let meta = match a.get("meta") {
+                Some(Json::Obj(m)) => m.clone(),
+                _ => BTreeMap::new(),
+            };
+            if artifacts
+                .insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name: name.clone(),
+                        file,
+                        inputs,
+                        outputs,
+                        meta,
+                    },
+                )
+                .is_some()
+            {
+                return Err(err(format!("duplicate artifact '{name}'")));
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| Error::ArtifactParse {
+            path: path.display().to_string(),
+            msg: format!("{e} (run `make artifacts` first)"),
+        })?;
+        Manifest::parse(dir, &text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::UnknownArtifact(name.to_string()))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t", "file": "t.hlo.txt",
+             "inputs": [{"shape": [4, 4], "dtype": "f32"}],
+             "outputs": [{"shape": [2, 2], "dtype": "f32"}],
+             "meta": {"bench": "binning", "h": 4}}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.get("t").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 4]);
+        assert_eq!(a.inputs[0].numel(), 16);
+        assert_eq!(a.meta_str("bench"), Some("binning"));
+        assert_eq!(a.meta_usize("h"), Some(4));
+        assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/t.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(matches!(
+            m.get("nope"),
+            Err(Error::UnknownArtifact(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = PathBuf::from(crate::config::default_artifacts_dir());
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for required in [
+                "binning_2048",
+                "binning_256",
+                "conv_1024_k3",
+                "conv_1024_k13",
+                "render_1024",
+                "cnn_frame_1024",
+                "cnn_patch_b1",
+            ] {
+                let a = m.get(required).unwrap();
+                assert!(m.hlo_path(a).exists(), "{required} file missing");
+            }
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! PJRT execution wrapper around the `xla` crate.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: HLO **text** ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` -> `execute`. Executables are compiled lazily
+//! and cached per artifact name; compilation happens once per process.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::Manifest;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// The CPU PJRT runtime with a compiled-executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative wallclock spent inside `execute` (profiling aid).
+    pub exec_wallclock: std::time::Duration,
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Open the runtime over an artifacts directory.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            executables: HashMap::new(),
+            exec_wallclock: std::time::Duration::ZERO,
+            executions: 0,
+        })
+    }
+
+    /// Open at the default artifacts location.
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::open(Path::new(&crate::config::default_artifacts_dir()))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::ArtifactParse {
+                path: path.display().to_string(),
+                msg: "non-utf8 path".into(),
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` on f32 inputs (row-major, shapes from the
+    /// manifest). Returns the f32 outputs (ours all have exactly one).
+    pub fn execute(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.prepare(name)?;
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Validation(format!(
+                "{name}: {} inputs supplied, artifact takes {}",
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, tspec) in inputs.iter().zip(&spec.inputs) {
+            if data.len() != tspec.numel() {
+                return Err(Error::Validation(format!(
+                    "{name}: input length {} != shape {:?}",
+                    data.len(),
+                    tspec.shape
+                )));
+            }
+            let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).expect("prepared above");
+        let t0 = std::time::Instant::now();
+        let mut result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.exec_wallclock += t0.elapsed();
+        self.executions += 1;
+
+        // aot.py lowers with return_tuple=True: unpack the result tuple.
+        let tuple = result.decompose_tuple()?;
+        if tuple.len() != spec.outputs.len() {
+            return Err(Error::Validation(format!(
+                "{name}: {} outputs returned, manifest says {}",
+                tuple.len(),
+                spec.outputs.len()
+            )));
+        }
+        let mut outs = Vec::with_capacity(tuple.len());
+        for (lit, tspec) in tuple.into_iter().zip(&spec.outputs) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != tspec.numel() {
+                return Err(Error::Validation(format!(
+                    "{name}: output length {} != shape {:?}",
+                    v.len(),
+                    tspec.shape
+                )));
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+
+    /// Names of all loadable artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` to have run; they are the
+    //! core numerics bridge tests (python-Pallas -> HLO -> rust-PJRT).
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = crate::config::default_artifacts_dir();
+        if !Path::new(&dir).join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::open(Path::new(&dir)).unwrap())
+    }
+
+    #[test]
+    fn binning_small_matches_scalar_groundtruth() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..256 * 256).map(|_| rng.next_f32()).collect();
+        let out = rt.execute("binning_256", &[&x]).unwrap();
+        let gt = crate::dsp::binning::binning_f32(&x, 256, 256).unwrap();
+        assert_eq!(out[0].len(), 128 * 128);
+        for (a, b) in out[0].iter().zip(&gt) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn conv_small_matches_scalar_groundtruth() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..128 * 128).map(|_| rng.next_f32()).collect();
+        let k: Vec<f32> = (0..9).map(|_| rng.next_f32() / 9.0).collect();
+        let out = rt.execute("conv_128_k3", &[&x, &k]).unwrap();
+        let gt = crate::dsp::conv::conv2d_f32(&x, 128, 128, &k, 3).unwrap();
+        for (i, (a, b)) in out[0].iter().zip(&gt).enumerate() {
+            assert!((a - b).abs() < 1e-4, "px {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn render_small_matches_scalar_groundtruth() {
+        let Some(mut rt) = runtime() else { return };
+        let spec = rt.manifest.get("render_128").unwrap().clone();
+        let mesh_file = spec.meta_str("mesh_file").unwrap().to_string();
+        let n_tris = spec.meta_usize("n_tris").unwrap();
+        let mesh = crate::render::Mesh::load(rt.manifest.dir.join(mesh_file)).unwrap();
+        let pose = crate::render::Pose {
+            rx: 0.1,
+            ry: -0.2,
+            rz: 0.05,
+            tx: 0.1,
+            ty: -0.1,
+            tz: 3.0,
+        };
+        let out = rt.execute("render_128", &[&pose.to_array()]).unwrap();
+        let tris = crate::render::project_triangles(&pose, &mesh, 128, 128, n_tris);
+        let gt = crate::render::depth_render(&tris, 128, 128);
+        // Edge pixels may differ (float seams); interior must agree.
+        let mut mismatches = 0usize;
+        for (a, b) in out[0].iter().zip(&gt) {
+            if (a - b).abs() > 1e-2 {
+                mismatches += 1;
+            }
+        }
+        let frac = mismatches as f64 / gt.len() as f64;
+        assert!(frac < 0.005, "mismatch fraction {frac}");
+        // And the model must actually be visible.
+        assert!(crate::render::raster::coverage(&gt) > 500);
+    }
+
+    #[test]
+    fn cnn_patch_matches_scalar_groundtruth() {
+        let Some(mut rt) = runtime() else { return };
+        let dir = crate::config::default_artifacts_dir();
+        let weights =
+            crate::cnn::Weights::load(format!("{dir}/cnn_weights.bin")).unwrap();
+        let chips = crate::cnn::ships::ship_chips(1, 128, 77);
+        let chip = &chips[0];
+        let out = rt.execute("cnn_patch_b1", &[&chip.fm.data]).unwrap();
+        let gt = crate::cnn::cnn_forward(&weights, &chip.fm).unwrap();
+        // fp16-quantized weights both sides; logits agree loosely but
+        // argmax must match.
+        assert_eq!(out[0].len(), 2);
+        let pjrt_label = (out[0][1] > out[0][0]) as usize;
+        let gt_label = (gt[1] > gt[0]) as usize;
+        assert_eq!(pjrt_label, gt_label);
+        for (a, b) in out[0].iter().zip(&gt) {
+            assert!((a - b).abs() < 0.05 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn execute_validates_input_arity_and_shape() {
+        let Some(mut rt) = runtime() else { return };
+        let x = vec![0f32; 10];
+        assert!(rt.execute("binning_256", &[&x]).is_err()); // wrong size
+        let ok = vec![0f32; 256 * 256];
+        assert!(rt.execute("binning_256", &[&ok, &ok]).is_err()); // arity
+    }
+
+    #[test]
+    fn executable_cache_reused() {
+        let Some(mut rt) = runtime() else { return };
+        let x = vec![0.5f32; 256 * 256];
+        rt.execute("binning_256", &[&x]).unwrap();
+        let n = rt.executions;
+        rt.execute("binning_256", &[&x]).unwrap();
+        assert_eq!(rt.executions, n + 1);
+        assert_eq!(rt.executables.len(), 1);
+    }
+}

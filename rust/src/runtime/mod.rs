@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client — the *numerics engine* standing in for the
+//! SHAVE cores (DESIGN.md §2).
+//!
+//! Python never runs on this path: `make artifacts` produced HLO text at
+//! build time; here the `xla` crate parses, compiles (once, cached) and
+//! executes it.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::Runtime;

@@ -1,0 +1,228 @@
+//! Frame containers + PGM/PPM I/O for debugging and examples.
+//!
+//! The co-processor moves *frames*: width x height pixels at a configured
+//! bit depth (the paper's CIF/LCD support 8/16/24 bpp). Pixels are stored
+//! widened to u32 so one container serves all depths; the fabric layer is
+//! responsible for honoring the configured [`PixelFormat`] on the wire.
+
+use crate::error::{Error, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Wire pixel formats supported by the CIF/LCD interfaces (paper §II).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PixelFormat {
+    /// 8-bit grayscale (4 pixels per 32-bit bus word).
+    Bpp8,
+    /// 16-bit (2 pixels per word) — depth maps, RGB565, fp16 payloads.
+    Bpp16,
+    /// 24-bit RGB (1 pixel per word, top byte unused).
+    Bpp24,
+}
+
+impl PixelFormat {
+    pub fn bits(self) -> u32 {
+        match self {
+            PixelFormat::Bpp8 => 8,
+            PixelFormat::Bpp16 => 16,
+            PixelFormat::Bpp24 => 24,
+        }
+    }
+
+    /// Pixels carried per 32-bit internal bus word (paper Fig. 2 FSM).
+    pub fn pixels_per_word(self) -> usize {
+        match self {
+            PixelFormat::Bpp8 => 4,
+            PixelFormat::Bpp16 => 2,
+            PixelFormat::Bpp24 => 1,
+        }
+    }
+
+    pub fn max_value(self) -> u32 {
+        (1u64 << self.bits()) as u32 - 1
+    }
+
+    /// Payload bytes of a W x H frame at this depth (byte-packed storage).
+    pub fn frame_bytes(self, w: usize, h: usize) -> usize {
+        w * h * self.bits() as usize / 8
+    }
+}
+
+/// A frame in flight through the co-processor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub width: usize,
+    pub height: usize,
+    pub format: PixelFormat,
+    /// Row-major pixels, each widened to u32 (masked to `format.bits()`).
+    pub data: Vec<u32>,
+}
+
+impl Frame {
+    pub fn new(width: usize, height: usize, format: PixelFormat) -> Frame {
+        Frame {
+            width,
+            height,
+            format,
+            data: vec![0; width * height],
+        }
+    }
+
+    pub fn from_data(
+        width: usize,
+        height: usize,
+        format: PixelFormat,
+        data: Vec<u32>,
+    ) -> Result<Frame> {
+        if data.len() != width * height {
+            return Err(Error::Geometry(format!(
+                "{}x{} frame needs {} pixels, got {}",
+                width,
+                height,
+                width * height,
+                data.len()
+            )));
+        }
+        let max = format.max_value();
+        if let Some(bad) = data.iter().find(|&&p| p > max) {
+            return Err(Error::Geometry(format!(
+                "pixel {bad:#x} exceeds {}bpp",
+                format.bits()
+            )));
+        }
+        Ok(Frame {
+            width,
+            height,
+            format,
+            data,
+        })
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+
+    pub fn get(&self, x: usize, y: usize) -> u32 {
+        self.data[y * self.width + x]
+    }
+
+    pub fn set(&mut self, x: usize, y: usize, v: u32) {
+        debug_assert!(v <= self.format.max_value());
+        self.data[y * self.width + x] = v;
+    }
+
+    /// f32 view in [0, 1] — the conversion applied before feeding the VPU
+    /// artifacts (the paper converts 8-bit inputs to FP on the VPU).
+    pub fn to_f32_normalized(&self) -> Vec<f32> {
+        let scale = 1.0 / self.format.max_value() as f32;
+        self.data.iter().map(|&p| p as f32 * scale).collect()
+    }
+
+    /// Quantize a f32 image in [0, 1] into a frame at `format` depth.
+    pub fn from_f32_normalized(
+        width: usize,
+        height: usize,
+        format: PixelFormat,
+        vals: &[f32],
+    ) -> Result<Frame> {
+        if vals.len() != width * height {
+            return Err(Error::Geometry(format!(
+                "expected {} values, got {}",
+                width * height,
+                vals.len()
+            )));
+        }
+        let max = format.max_value() as f32;
+        let data = vals
+            .iter()
+            .map(|&v| (v.clamp(0.0, 1.0) * max).round() as u32)
+            .collect();
+        Ok(Frame {
+            width,
+            height,
+            format,
+            data,
+        })
+    }
+
+    /// Write as binary PGM (8/16 bpp) — quick-look debugging output.
+    pub fn write_pgm<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        let maxval = self.format.max_value().min(65535);
+        writeln!(f, "P5\n{} {}\n{}", self.width, self.height, maxval)?;
+        if maxval < 256 {
+            let bytes: Vec<u8> = self.data.iter().map(|&p| p as u8).collect();
+            f.write_all(&bytes)?;
+        } else {
+            let mut bytes = Vec::with_capacity(self.pixels() * 2);
+            for &p in &self.data {
+                bytes.extend_from_slice(&(p.min(65535) as u16).to_be_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixels_per_word_match_paper_fsm() {
+        assert_eq!(PixelFormat::Bpp8.pixels_per_word(), 4);
+        assert_eq!(PixelFormat::Bpp16.pixels_per_word(), 2);
+        assert_eq!(PixelFormat::Bpp24.pixels_per_word(), 1);
+    }
+
+    #[test]
+    fn frame_rejects_wrong_length() {
+        assert!(Frame::from_data(4, 4, PixelFormat::Bpp8, vec![0; 15]).is_err());
+    }
+
+    #[test]
+    fn frame_rejects_out_of_range_pixels() {
+        assert!(Frame::from_data(1, 1, PixelFormat::Bpp8, vec![256]).is_err());
+        assert!(Frame::from_data(1, 1, PixelFormat::Bpp16, vec![65536]).is_err());
+        assert!(Frame::from_data(1, 1, PixelFormat::Bpp24, vec![1 << 24]).is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip_8bpp() {
+        let vals = vec![0.0, 0.5, 1.0, 0.25];
+        let f = Frame::from_f32_normalized(2, 2, PixelFormat::Bpp8, &vals).unwrap();
+        assert_eq!(f.data, vec![0, 128, 255, 64]);
+        let back = f.to_f32_normalized();
+        for (a, b) in back.iter().zip(&vals) {
+            assert!((a - b).abs() < 1.0 / 254.0, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut f = Frame::new(3, 2, PixelFormat::Bpp16);
+        f.set(2, 1, 4096);
+        assert_eq!(f.get(2, 1), 4096);
+        assert_eq!(f.get(0, 0), 0);
+    }
+
+    #[test]
+    fn frame_bytes_by_format() {
+        assert_eq!(PixelFormat::Bpp8.frame_bytes(1024, 1024), 1 << 20);
+        assert_eq!(PixelFormat::Bpp16.frame_bytes(1024, 1024), 2 << 20);
+        assert_eq!(PixelFormat::Bpp24.frame_bytes(1024, 1024), 3 << 20);
+    }
+
+    #[test]
+    fn pgm_write_smoke() {
+        let dir = std::env::temp_dir().join("spacecodesign_test_pgm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = Frame::from_data(2, 2, PixelFormat::Bpp8, vec![0, 85, 170, 255])
+            .unwrap();
+        let path = dir.join("t.pgm");
+        f.write_pgm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(&bytes[bytes.len() - 4..], &[0, 85, 170, 255]);
+    }
+}

@@ -1,0 +1,38 @@
+//! Small self-contained utilities.
+//!
+//! The offline build image vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (`serde`, `proptest`,
+//! `criterion`, `rand`) are unavailable; this module provides the minimal
+//! replacements the rest of the crate needs (DESIGN.md §9).
+
+pub mod image;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+
+/// Format a simulated time in seconds with an adaptive unit.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1}ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.1}us", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.1}ms", seconds * 1e3)
+    } else {
+        format!("{:.2}s", seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.5e-9), "2.5ns");
+        assert_eq!(fmt_time(3.0e-5), "30.0us");
+        assert_eq!(fmt_time(0.0209), "20.9ms");
+        assert_eq!(fmt_time(1.5), "1.50s");
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal property-testing harness (offline replacement for `proptest`,
+//! DESIGN.md §9).
+//!
+//! A property is a closure over a [`Gen`] (seeded case generator). The
+//! runner executes `cases` seeds; on failure it re-runs the failing seed
+//! with progressively smaller `size` hints (a crude but effective shrink)
+//! and reports the smallest failing configuration.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the libxla_extension rpath)
+//! use spacecodesign::util::propcheck::{check, Gen};
+//! check("reverse twice is identity", 64, |g: &mut Gen| {
+//!     let v: Vec<u32> = g.vec(0..=64, |g| g.u32());
+//!     let mut r = v.clone();
+//!     r.reverse();
+//!     r.reverse();
+//!     v == r
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Seeded case generator with a `size` hint that the shrinker reduces.
+pub struct Gen {
+    rng: Rng,
+    /// Size multiplier in (0, 1]; shrink passes re-run with smaller values.
+    pub size: f64,
+    /// Human-readable log of the values drawn (reported on failure).
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+            trace: Vec::new(),
+        }
+    }
+
+    fn scaled(&self, hi: usize, lo: usize) -> usize {
+        let span = (hi - lo) as f64 * self.size;
+        lo + span.round() as usize
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        let v = self.rng.next_u32();
+        self.trace.push(format!("u32={v}"));
+        v
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.trace.push(format!("u64={v}"));
+        v
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        let v = self.rng.next_f32();
+        self.trace.push(format!("f32={v}"));
+        v
+    }
+
+    /// Integer in [lo, hi] whose upper bound shrinks with `size`.
+    pub fn int_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = self.scaled(hi, lo).max(lo);
+        let v = self.rng.range_usize(lo, hi_eff);
+        self.trace.push(format!("int[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, hi);
+        self.trace.push(format!("f64[{lo},{hi}]={v:.4}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.bool(0.5);
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    /// Vector whose length is drawn from `len` (shrunk by `size`).
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        mut item: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.int_in(*len.start(), *len.end());
+        (0..n).map(|_| item(self)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        let i = self.rng.range_usize(0, items.len() - 1);
+        self.trace.push(format!("choose#{i}"));
+        &items[i]
+    }
+
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.rng.fill_bytes(&mut v);
+        self.trace.push(format!("bytes[{len}]"));
+        v
+    }
+}
+
+/// Run `prop` over `cases` seeded generators; panic (with the smallest
+/// failing trace found) if any case returns false.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen) -> bool) {
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed, 1.0);
+        if prop(&mut g) {
+            continue;
+        }
+        // Shrink: retry the same seed at smaller sizes, keep smallest fail.
+        let mut best = g.trace.clone();
+        for step in 1..=8 {
+            let size = 1.0 - step as f64 / 9.0;
+            let mut gs = Gen::new(seed, size);
+            if !prop(&mut gs) {
+                best = gs.trace.clone();
+            }
+        }
+        panic!(
+            "property '{name}' failed (case {case}, seed {seed:#x}).\n\
+             smallest failing draw trace: {best:?}"
+        );
+    }
+}
+
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("tautology", 32, |_g| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_trace() {
+        check("always false", 8, |g| {
+            let _ = g.int_in(0, 100);
+            false
+        });
+    }
+
+    #[test]
+    fn shrink_reduces_drawn_bounds() {
+        // At size 0.1 the effective upper bound of int_in(0, 1000) is 100.
+        for seed in 0..32 {
+            let mut g_small = Gen::new(seed, 0.1);
+            assert!(g_small.int_in(0, 1000) <= 100);
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_seed() {
+        let mut a = Gen::new(9, 1.0);
+        let mut b = Gen::new(9, 1.0);
+        assert_eq!(a.u64(), b.u64());
+        assert_eq!(a.int_in(0, 50), b.int_in(0, 50));
+    }
+}

@@ -1,0 +1,149 @@
+//! Measurement statistics + a tiny wallclock bench harness.
+//!
+//! `criterion` is not available offline (DESIGN.md §9); the bench binaries
+//! under `rust/benches/` use [`bench`] instead: warmup, fixed sample count,
+//! median / p95 / mean reporting.
+
+use std::time::Instant;
+
+/// Summary statistics over a sample set (times in seconds).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std_dev: f64,
+}
+
+impl Summary {
+    pub fn from_samples(mut samples: Vec<f64>) -> Summary {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / n as f64;
+        Summary {
+            n,
+            mean,
+            median: percentile_sorted(&samples, 50.0),
+            p95: percentile_sorted(&samples, 95.0),
+            min: samples[0],
+            max: samples[n - 1],
+            std_dev: var.sqrt(),
+        }
+    }
+}
+
+/// Percentile over a pre-sorted slice (nearest-rank with interpolation).
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Measure `f` wallclock: `warmup` throwaway runs then `samples` timed runs.
+pub fn bench<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from_samples(times)
+}
+
+/// Render a bench row: `name  median  p95  (n)`.
+pub fn bench_row(name: &str, s: &Summary) -> String {
+    format!(
+        "{name:<36} median {:>10}  p95 {:>10}  mean {:>10}  n={}",
+        crate::util::fmt_time(s.median),
+        crate::util::fmt_time(s.p95),
+        crate::util::fmt_time(s.mean),
+        s.n
+    )
+}
+
+/// Online mean/max accumulator for simulator metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Accumulator {
+    pub fn push(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_samples() {
+        let s = Summary::from_samples(vec![3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn bench_runs_requested_samples() {
+        let mut count = 0usize;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn accumulator_tracks_extremes() {
+        let mut a = Accumulator::default();
+        for v in [2.0, -1.0, 5.0] {
+            a.push(v);
+        }
+        assert_eq!(a.min, -1.0);
+        assert_eq!(a.max, 5.0);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,344 @@
+//! Cycle-cost models for the four benchmarks, on SHAVEs and on the LEON
+//! baseline.
+//!
+//! # Calibration methodology (DESIGN.md §4–5)
+//!
+//! We cannot run the vendor toolchain, so per-element cycle counts are
+//! *calibrated once* against the paper's own measurements and then used
+//! predictively for every other workload shape the benches sweep:
+//!
+//! * SHAVE aggregate cycles/element are fixed by Table II's VPU-processing
+//!   column (binning 3 ms, conv 8/29/114 ms for K=3/7/13, render 164 ms,
+//!   CNN 658 ms) at 12 SHAVEs x 600 MHz.
+//! * Conv sizes the paper does not report (K=5/9/11) interpolate the
+//!   quadratic-in-K fit through the three measured points.
+//! * LEON scalar factors are fixed by the paper's reported speedups
+//!   (binning 14x, conv up to 75x, render 10–16x content-dependent, CNN
+//!   projected >100x because LEON lacks 16-bit FP and runs the fp32
+//!   model).
+//!
+//! The render model is *content-dependent by construction*: its cost is a
+//! function of the actual projected triangle bounding boxes per band, so
+//! different poses/meshes reproduce the paper's 10–16x speedup spread.
+
+use crate::config::VpuConfig;
+use crate::fabric::clock::SimTime;
+
+/// Benchmark identity (paper §III-C).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BenchKind {
+    /// 2x2 stride-2 averaging binning.
+    Binning,
+    /// K x K floating-point convolution.
+    Conv { k: usize },
+    /// Triangle-mesh depth rendering.
+    Render,
+    /// 6-layer CNN ship detection (per 128x128 patch).
+    Cnn,
+}
+
+/// Workload shape parameters the cost model needs.
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    /// Output elements (pixels / logits).
+    pub out_elems: usize,
+    /// Input elements (pixels, all channels).
+    pub in_elems: usize,
+    /// Render only: per-band rasterization effort — for each band, the
+    /// total bbox pixel tests Σ_tri bbox_rows_in_band x bbox_width.
+    pub band_bbox_px: Vec<u64>,
+    /// Render only: triangle count (per-band setup cost).
+    pub n_tris: usize,
+    /// CNN only: number of 128x128 patches.
+    pub patches: usize,
+}
+
+// ---------------------------------------------------------------------------
+// SHAVE aggregate cycles/element (12-core lane-cycle totals; see module doc)
+// ---------------------------------------------------------------------------
+
+/// Binning: 3 ms for 1 MPixel output => 3e-3 * 12 * 600e6 / 2^20.
+/// (DRAM-bandwidth-bound: ~4 input bytes + 1 output byte per element.)
+pub const SHAVE_CPE_BINNING: f64 = 20.6;
+
+/// Conv cycles/output-pixel as a function of K: quadratic fit through the
+/// measured K=3 (8 ms -> 54.9), K=7 (29 ms -> 199.1), K=13 (114 ms ->
+/// 782.5) points: cpe(K) = 75.2 - 25.11 K + 6.114 K^2.
+pub fn shave_cpe_conv(k: usize) -> f64 {
+    let kf = k as f64;
+    75.2 - 25.11 * kf + 6.114 * kf * kf
+}
+
+/// Render: cycles per bbox pixel test (barycentric + z-compare, SIMD) and
+/// per-triangle-per-band setup. Calibrated so the reference mesh/pose
+/// (320-face asteroid at ~3 model radii: ~3.1 MPixel of bbox tests on
+/// 1024^2) lands at ~164 ms.
+pub const SHAVE_CP_BBOX_TEST: f64 = 375.0;
+pub const SHAVE_CP_TRI_SETUP: f64 = 110.0;
+
+/// CNN: aggregate cycles per MAC (fp16 SIMD). The 64-patch dynamic
+/// schedule puts ceil(64/12)=6 patches on the busiest SHAVE (a 12.5 %
+/// imbalance over ideal), so the per-MAC cost is calibrated such that
+/// the *scheduled makespan* — not the ideal parallel time — reproduces
+/// Table II's 658 ms: 658 ms * (64/6 patches) / 985.7 MMAC * 600 MHz.
+pub const SHAVE_CP_MAC: f64 = 4.276;
+
+/// MACs of one 128x128x3 patch through the 6-layer network.
+pub fn cnn_macs_per_patch() -> u64 {
+    let conv = |hw: u64, cin: u64, cout: u64| hw * hw * 9 * cin * cout;
+    conv(128, 3, 8) + conv(64, 8, 16) + conv(32, 16, 32) + conv(16, 32, 32)
+        + 2048 * 57
+        + 57 * 2
+}
+
+// ---------------------------------------------------------------------------
+// LEON scalar factors (single core @230 MHz; see module doc)
+// ---------------------------------------------------------------------------
+
+/// t_leon = total_shave_cycles * sigma / f_leon. sigma < 1 means the
+/// scalar per-element cycle count is below the SHAVE lane-cycle aggregate
+/// (true for memory-bound kernels where SHAVEs stall on DRAM too).
+pub fn leon_sigma(kind: BenchKind) -> f64 {
+    match kind {
+        // 14x speedup: "mainly comes from the parallelization to 12 cores
+        // (LEON has to scan the entire 4MP image)".
+        BenchKind::Binning => 0.447,
+        // Speedup grows with arithmetic intensity up to 75x at K=13
+        // ("up to 75x ... due to increased computational complexity").
+        BenchKind::Conv { k } => {
+            // Fit through 35x @K=3 and 75x @K=13 (linear in K).
+            let speedup = 35.0 + (k as f64 - 3.0) * 4.0;
+            speedup / AGG_FACTOR
+        }
+        // 10-16x content-dependent; sigma fixed, spread comes from the
+        // band-level content entering the cost formula.
+        BenchKind::Render => 0.415,
+        // Projected "more than 2 orders of magnitude": LEON runs fp32
+        // (no fp16 support) scalar code.
+        BenchKind::Cnn => 4.79,
+    }
+}
+
+/// speedup = sigma * (12 * 600 MHz / 230 MHz) = sigma * 31.3.
+pub const AGG_FACTOR: f64 = 12.0 * 600.0 / 230.0;
+
+// ---------------------------------------------------------------------------
+// The model
+// ---------------------------------------------------------------------------
+
+/// Per-benchmark timing model over a [`VpuConfig`].
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub vpu: VpuConfig,
+}
+
+impl CostModel {
+    pub fn new(vpu: VpuConfig) -> CostModel {
+        CostModel { vpu }
+    }
+
+    /// Total SHAVE lane-cycles for the workload (before scheduling).
+    pub fn shave_total_cycles(&self, kind: BenchKind, w: &Workload) -> f64 {
+        match kind {
+            BenchKind::Binning => SHAVE_CPE_BINNING * w.out_elems as f64,
+            BenchKind::Conv { k } => shave_cpe_conv(k) * w.out_elems as f64,
+            BenchKind::Render => {
+                let bbox: u64 = w.band_bbox_px.iter().sum();
+                SHAVE_CP_BBOX_TEST * bbox as f64
+                    + SHAVE_CP_TRI_SETUP
+                        * (w.n_tris * w.band_bbox_px.len().max(1)) as f64
+            }
+            BenchKind::Cnn => {
+                SHAVE_CP_MAC * (cnn_macs_per_patch() * w.patches as u64) as f64
+            }
+        }
+    }
+
+    /// Per-band cycle costs for the scheduler (uniform split except
+    /// render, which uses real per-band content).
+    pub fn band_cycles(&self, kind: BenchKind, w: &Workload, n_bands: usize) -> Vec<f64> {
+        match kind {
+            BenchKind::Render => {
+                let setup = SHAVE_CP_TRI_SETUP * w.n_tris as f64;
+                w.band_bbox_px
+                    .iter()
+                    .map(|&b| SHAVE_CP_BBOX_TEST * b as f64 + setup)
+                    .collect()
+            }
+            _ => {
+                let total = self.shave_total_cycles(kind, w);
+                vec![total / n_bands as f64; n_bands]
+            }
+        }
+    }
+
+    /// Ideal (perfect-parallel) SHAVE processing time.
+    pub fn shave_time_ideal(&self, kind: BenchKind, w: &Workload) -> SimTime {
+        let cycles = self.shave_total_cycles(kind, w);
+        SimTime::from_secs(
+            cycles / (self.vpu.n_shaves as f64 * self.vpu.shave_clock_hz),
+        )
+    }
+
+    /// LEON single-core baseline time.
+    pub fn leon_time(&self, kind: BenchKind, w: &Workload) -> SimTime {
+        let cycles = self.shave_total_cycles(kind, w) * leon_sigma(kind);
+        SimTime::from_secs(cycles / self.vpu.leon_clock_hz)
+    }
+
+    /// Speedup of the ideal SHAVE implementation over LEON.
+    pub fn speedup(&self, kind: BenchKind, w: &Workload) -> f64 {
+        self.leon_time(kind, w).as_secs()
+            / self.shave_time_ideal(kind, w).as_secs()
+    }
+}
+
+/// Standard Table II workloads.
+pub mod workloads {
+    use super::Workload;
+
+    /// Binning: 2048x2048 8bpp in, 1024x1024 out.
+    pub fn binning_4mp() -> Workload {
+        Workload {
+            out_elems: 1024 * 1024,
+            in_elems: 2048 * 2048,
+            ..Default::default()
+        }
+    }
+
+    /// Conv: 1024x1024 in/out.
+    pub fn conv_1mp() -> Workload {
+        Workload {
+            out_elems: 1024 * 1024,
+            in_elems: 1024 * 1024,
+            ..Default::default()
+        }
+    }
+
+    /// CNN: 1 MPixel RGB frame = 64 patches.
+    pub fn cnn_1mp() -> Workload {
+        Workload {
+            out_elems: 64 * 2,
+            in_elems: 1024 * 1024 * 3,
+            patches: 64,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::VpuConfig;
+
+    fn model() -> CostModel {
+        CostModel::new(VpuConfig::myriad2())
+    }
+
+    #[test]
+    fn binning_matches_table_ii_3ms() {
+        let t = model().shave_time_ideal(BenchKind::Binning, &workloads::binning_4mp());
+        assert!((t.as_ms() - 3.0).abs() < 0.1, "{} ms", t.as_ms());
+    }
+
+    #[test]
+    fn conv_matches_table_ii_all_measured_k() {
+        let m = model();
+        let w = workloads::conv_1mp();
+        for (k, expect_ms) in [(3, 8.0), (7, 29.0), (13, 114.0)] {
+            let t = m.shave_time_ideal(BenchKind::Conv { k }, &w);
+            assert!(
+                (t.as_ms() - expect_ms).abs() / expect_ms < 0.03,
+                "K={k}: {} ms vs {expect_ms}",
+                t.as_ms()
+            );
+        }
+    }
+
+    #[test]
+    fn conv_interpolated_k_monotonic() {
+        let m = model();
+        let w = workloads::conv_1mp();
+        let mut last = 0.0;
+        for k in [3, 5, 7, 9, 11, 13] {
+            let t = m.shave_time_ideal(BenchKind::Conv { k }, &w).as_ms();
+            assert!(t > last, "K={k} {t} !> {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn cnn_matches_table_ii_658ms_scheduled() {
+        // The Table II figure is the *scheduled* makespan: 64 patches on
+        // 12 SHAVEs puts 6 on the busiest core (12.5% over ideal).
+        let m = model();
+        let w = workloads::cnn_1mp();
+        let bands = m.band_cycles(BenchKind::Cnn, &w, 64);
+        let t = crate::vpu::scheduler::dynamic_makespan(&bands, 12, 600.0e6);
+        assert!((t.as_ms() - 658.0).abs() / 658.0 < 0.03, "{} ms", t.as_ms());
+        // Ideal parallel time is correspondingly lower.
+        let ideal = m.shave_time_ideal(BenchKind::Cnn, &w);
+        assert!(ideal < t);
+    }
+
+    #[test]
+    fn cnn_macs_magnitude() {
+        let m = cnn_macs_per_patch();
+        assert!(
+            (15_000_000..16_000_000).contains(&m),
+            "{m} MACs/patch"
+        );
+    }
+
+    #[test]
+    fn binning_speedup_is_papers_14x() {
+        let s = model().speedup(BenchKind::Binning, &workloads::binning_4mp());
+        assert!((s - 14.0).abs() < 0.5, "speedup {s}");
+    }
+
+    #[test]
+    fn conv_speedup_up_to_75x() {
+        let m = model();
+        let w = workloads::conv_1mp();
+        let s3 = m.speedup(BenchKind::Conv { k: 3 }, &w);
+        let s13 = m.speedup(BenchKind::Conv { k: 13 }, &w);
+        assert!((s3 - 35.0).abs() < 2.0, "s3 {s3}");
+        assert!((s13 - 75.0).abs() < 2.0, "s13 {s13}");
+        assert!(s3 < s13);
+    }
+
+    #[test]
+    fn cnn_speedup_over_two_orders() {
+        let s = model().speedup(BenchKind::Cnn, &workloads::cnn_1mp());
+        assert!(s > 100.0, "speedup {s}");
+    }
+
+    #[test]
+    fn render_cost_depends_on_content() {
+        let m = model();
+        let sparse = Workload {
+            out_elems: 1 << 20,
+            band_bbox_px: vec![10_000; 32],
+            n_tris: 320,
+            ..Default::default()
+        };
+        let dense = Workload {
+            out_elems: 1 << 20,
+            band_bbox_px: vec![60_000; 32],
+            n_tris: 320,
+            ..Default::default()
+        };
+        let ts = m.shave_time_ideal(BenchKind::Render, &sparse);
+        let td = m.shave_time_ideal(BenchKind::Render, &dense);
+        assert!(td.as_secs() > 3.0 * ts.as_secs());
+    }
+
+    #[test]
+    fn leon_time_scales_with_sigma() {
+        let m = model();
+        let w = workloads::binning_4mp();
+        let leon = m.leon_time(BenchKind::Binning, &w);
+        // LEON binning ~42 ms (3 ms x 14).
+        assert!((leon.as_ms() - 42.0).abs() < 2.0, "{} ms", leon.as_ms());
+    }
+}

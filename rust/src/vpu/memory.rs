@@ -1,0 +1,170 @@
+//! VPU memory map: DRAM frame buffers + the 2 MB CMX scratchpad
+//! (paper Fig. 3: camera buffers and inference I/O live in DRAM; the
+//! SHAVE working sets — bands, Z-buffer — live in CMX).
+//!
+//! A bump allocator with explicit regions is enough for the simulator:
+//! the co-processor's allocation pattern is static per benchmark (the
+//! paper's firmware allocates at init), and what we care about is
+//! *capacity feasibility* — e.g. the conv band + halo must fit per-SHAVE
+//! CMX slices, and Masked mode needs double frame buffers in DRAM.
+
+use crate::error::{Error, Result};
+
+/// One allocation in a memory pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Region {
+    pub name: String,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// Fixed-capacity memory pool (DRAM or CMX).
+#[derive(Clone, Debug)]
+pub struct MemoryPool {
+    pub name: &'static str,
+    pub capacity: usize,
+    regions: Vec<Region>,
+    cursor: usize,
+    pub high_water: usize,
+}
+
+impl MemoryPool {
+    pub fn new(name: &'static str, capacity: usize) -> MemoryPool {
+        MemoryPool {
+            name,
+            capacity,
+            regions: Vec::new(),
+            cursor: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Allocate `bytes` (64-byte aligned, as the DMA requires).
+    pub fn alloc(&mut self, name: &str, bytes: usize) -> Result<Region> {
+        let aligned = bytes.div_ceil(64) * 64;
+        if self.cursor + aligned > self.capacity {
+            return Err(Error::Config(format!(
+                "{}: allocation '{}' of {} B exceeds capacity ({} of {} B used)",
+                self.name, name, bytes, self.cursor, self.capacity
+            )));
+        }
+        let region = Region {
+            name: name.to_string(),
+            offset: self.cursor,
+            bytes: aligned,
+        };
+        self.cursor += aligned;
+        self.high_water = self.high_water.max(self.cursor);
+        self.regions.push(region.clone());
+        Ok(region)
+    }
+
+    /// Free everything (benchmark teardown).
+    pub fn reset(&mut self) {
+        self.regions.clear();
+        self.cursor = 0;
+    }
+
+    pub fn used(&self) -> usize {
+        self.cursor
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.cursor
+    }
+
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+}
+
+/// The Myriad2 memory system.
+#[derive(Clone, Debug)]
+pub struct VpuMemory {
+    pub dram: MemoryPool,
+    pub cmx: MemoryPool,
+}
+
+impl VpuMemory {
+    pub fn myriad2(cmx_bytes: usize) -> VpuMemory {
+        VpuMemory {
+            // 512 MB LPDDR on the Myriad2 dev platform.
+            dram: MemoryPool::new("DRAM", 512 * 1024 * 1024),
+            cmx: MemoryPool::new("CMX", cmx_bytes),
+        }
+    }
+
+    /// CMX bytes available to each SHAVE (the 2 MB is sliced per core).
+    pub fn cmx_slice_per_shave(&self, n_shaves: usize) -> usize {
+        self.cmx.capacity / n_shaves
+    }
+
+    /// Feasibility: a conv band of `width` px f32 with `k`/2 halo rows
+    /// (input) + output band must fit one SHAVE's CMX slice when staged.
+    pub fn conv_band_fits(
+        &self,
+        width: usize,
+        band_rows: usize,
+        k: usize,
+        n_shaves: usize,
+    ) -> bool {
+        let halo = k / 2;
+        let in_bytes = (band_rows + 2 * halo) * (width + 2 * halo) * 4;
+        let out_bytes = band_rows * width * 4;
+        in_bytes + out_bytes <= self.cmx_slice_per_shave(n_shaves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_capacity() {
+        let mut p = MemoryPool::new("t", 1024);
+        let a = p.alloc("a", 100).unwrap();
+        assert_eq!(a.offset, 0);
+        assert_eq!(a.bytes, 128); // 64-aligned
+        let b = p.alloc("b", 64).unwrap();
+        assert_eq!(b.offset, 128);
+        assert!(p.alloc("too big", 2000).is_err());
+    }
+
+    #[test]
+    fn reset_frees_everything() {
+        let mut p = MemoryPool::new("t", 256);
+        p.alloc("a", 256).unwrap();
+        assert!(p.alloc("b", 1).is_err());
+        p.reset();
+        assert!(p.alloc("b", 1).is_ok());
+        assert_eq!(p.high_water, 256); // high-water survives reset
+    }
+
+    #[test]
+    fn masked_mode_double_buffers_fit_dram() {
+        // Masked mode: in/out frames double-buffered (4 MPixel 8bpp in,
+        // 1 MPixel out) — trivially fits 512 MB DRAM.
+        let mut m = VpuMemory::myriad2(2 * 1024 * 1024);
+        for i in 0..2 {
+            m.dram.alloc(&format!("in{i}"), 4 << 20).unwrap();
+            m.dram.alloc(&format!("out{i}"), 1 << 20).unwrap();
+        }
+        assert!(m.dram.used() <= m.dram.capacity);
+    }
+
+    #[test]
+    fn cmx_slices_per_shave() {
+        let m = VpuMemory::myriad2(2 * 1024 * 1024);
+        assert_eq!(m.cmx_slice_per_shave(12), 174_762);
+    }
+
+    #[test]
+    fn conv_band_feasibility_matches_paper_banding() {
+        let m = VpuMemory::myriad2(2 * 1024 * 1024);
+        // 1024-wide f32 band of 8 rows with 13x13 halo: ~113 KB, fits the
+        // ~175 KB per-SHAVE slice.
+        assert!(m.conv_band_fits(1024, 8, 13, 12));
+        // 64-row bands do not fit: the kernel must use narrower bands.
+        assert!(!m.conv_band_fits(1024, 64, 13, 12));
+    }
+}

@@ -1,0 +1,24 @@
+//! Myriad2 VPU model (paper §II, §III-B, Fig. 3).
+//!
+//! The VPU side of the co-processor: 2 general-purpose LEON cores, 12
+//! SHAVE vector cores @600 MHz, a DMA engine between DRAM and the 2 MB
+//! CMX scratchpad, and the CamGeneric/LCD driver stacks.
+//!
+//! Division of labour with the rest of the crate:
+//! * **numerics** — executed for real through the AOT Pallas artifacts
+//!   (see `runtime`); this module never computes pixels.
+//! * **time** — [`cost`] provides per-benchmark cycle models calibrated
+//!   against the paper's measured Table II / speedup numbers; [`scheduler`]
+//!   turns per-band costs into makespans on the 12 SHAVEs; [`dma`] and
+//!   [`memory`] account data movement and capacity.
+//! * **power** — [`power`] reproduces Fig. 5 from per-unit activity.
+
+pub mod cost;
+pub mod dma;
+pub mod drivers;
+pub mod memory;
+pub mod power;
+pub mod scheduler;
+
+pub use cost::{BenchKind, CostModel, Workload};
+pub use scheduler::{dynamic_makespan, static_makespan};

@@ -1,0 +1,168 @@
+//! Full-stack integration: host -> FPGA CIF -> VPU (PJRT numerics) ->
+//! FPGA LCD -> host validation, for every Table II row.
+//!
+//! Requires `make artifacts`. These are the repo's primary end-to-end
+//! guarantees: data integrity (CRC + groundtruth) and timing shape
+//! (Table II) through the whole composed system.
+
+use spacecodesign::coordinator::{Benchmark, CoProcessor};
+use spacecodesign::util::image::PixelFormat;
+
+fn coproc() -> Option<CoProcessor> {
+    let dir = spacecodesign::config::default_artifacts_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping integration: artifacts not built");
+        return None;
+    }
+    Some(CoProcessor::with_defaults().expect("coprocessor init"))
+}
+
+/// Paper Table II expectations: (bench, cif ms, vpu ms, lcd ms,
+/// unmasked fps, masked fps).
+fn table2_expectations() -> Vec<(Benchmark, f64, f64, f64, f64, f64)> {
+    vec![
+        (Benchmark::Binning, 85.0, 3.0, 21.0, 9.1, 3.2),
+        (Benchmark::Conv { k: 3 }, 21.0, 8.0, 21.0, 20.0, 8.0),
+        (Benchmark::Conv { k: 7 }, 21.0, 29.0, 21.0, 14.1, 8.0),
+        (Benchmark::Conv { k: 13 }, 21.0, 114.0, 21.0, 6.4, 8.0),
+        (Benchmark::Render, 0.0, 164.0, 21.0, 5.4, 6.1),
+        (Benchmark::CnnShip, 63.0, 658.0, 0.0, 1.4, 1.5),
+    ]
+}
+
+#[test]
+fn table2_full_stack_reproduction() {
+    let Some(mut cp) = coproc() else { return };
+    for (bench, cif_ms, vpu_ms, lcd_ms, unm_fps, msk_fps) in table2_expectations() {
+        let (run, masked) = cp.run_both_modes(bench, 42, 32).expect("run");
+
+        // Data integrity through the full stack.
+        assert!(run.crc_ok, "{bench:?}: CRC failed");
+        assert!(
+            run.validation.pass,
+            "{bench:?}: validation failed ({} mismatches of {}, max_err {})",
+            run.validation.mismatches, run.validation.pixels, run.validation.max_err
+        );
+
+        // Interface times (wire-rate model, +-3%).
+        if cif_ms > 1.0 {
+            let rel = (run.t_cif.as_ms() - cif_ms).abs() / cif_ms;
+            assert!(rel < 0.03, "{bench:?}: CIF {} vs {cif_ms} ms", run.t_cif.as_ms());
+        } else {
+            assert!(run.t_cif.as_ms() < 1.0, "{bench:?}: CIF should be ~0");
+        }
+        if lcd_ms > 1.0 {
+            let rel = (run.t_lcd.as_ms() - lcd_ms).abs() / lcd_ms;
+            assert!(rel < 0.03, "{bench:?}: LCD {} vs {lcd_ms} ms", run.t_lcd.as_ms());
+        }
+
+        // Processing time (cost model; render is content-dependent so
+        // gets a wide band, the calibrated rows a tight one).
+        let tol = if matches!(bench, Benchmark::Render) { 0.45 } else { 0.05 };
+        let rel = (run.t_proc.as_ms() - vpu_ms).abs() / vpu_ms;
+        assert!(
+            rel < tol,
+            "{bench:?}: VPU {} vs {vpu_ms} ms (rel {rel:.3})",
+            run.t_proc.as_ms()
+        );
+
+        // Throughputs (shape: who wins and by how much).
+        let unm_rel = (run.throughput_fps - unm_fps).abs() / unm_fps;
+        assert!(
+            unm_rel < 0.15,
+            "{bench:?}: unmasked {} vs {unm_fps} FPS",
+            run.throughput_fps
+        );
+        let msk_rel = (masked.throughput_fps - msk_fps).abs() / msk_fps;
+        assert!(
+            msk_rel < 0.15,
+            "{bench:?}: masked {} vs {msk_fps} FPS",
+            masked.throughput_fps
+        );
+    }
+}
+
+#[test]
+fn masking_crossover_matches_paper() {
+    // Masking helps proc-heavy benchmarks (conv13, render, cnn) and
+    // hurts I/O-heavy ones (binning, conv3) — the paper's §IV point.
+    let Some(mut cp) = coproc() else { return };
+    let helped = |cp: &mut CoProcessor, b| {
+        let (run, masked) = cp.run_both_modes(b, 7, 32).unwrap();
+        masked.throughput_fps > run.throughput_fps
+    };
+    assert!(!helped(&mut cp, Benchmark::Binning));
+    assert!(!helped(&mut cp, Benchmark::Conv { k: 3 }));
+    assert!(helped(&mut cp, Benchmark::Conv { k: 13 }));
+    assert!(helped(&mut cp, Benchmark::Render));
+    assert!(helped(&mut cp, Benchmark::CnnShip));
+}
+
+#[test]
+fn speedups_match_paper_envelope() {
+    let Some(mut cp) = coproc() else { return };
+    // Binning 14x.
+    let r = cp.run_unmasked(Benchmark::Binning, 1).unwrap();
+    assert!((r.speedup() - 14.0).abs() < 1.0, "binning {}", r.speedup());
+    // Conv grows to ~75x at K=13.
+    let r3 = cp.run_unmasked(Benchmark::Conv { k: 3 }, 1).unwrap();
+    let r13 = cp.run_unmasked(Benchmark::Conv { k: 13 }, 1).unwrap();
+    assert!(r3.speedup() < r13.speedup());
+    assert!((r13.speedup() - 75.0).abs() < 4.0, "conv13 {}", r13.speedup());
+    // Render 10-16x (content-dependent).
+    let rr = cp.run_unmasked(Benchmark::Render, 1).unwrap();
+    assert!(
+        (8.0..=18.0).contains(&rr.speedup()),
+        "render {}",
+        rr.speedup()
+    );
+    // CNN > 2 orders of magnitude (projected).
+    let rc = cp.run_unmasked(Benchmark::CnnShip, 1).unwrap();
+    assert!(rc.speedup() > 100.0, "cnn {}", rc.speedup());
+}
+
+#[test]
+fn render_speedup_is_content_dependent() {
+    let Some(cp) = coproc() else { return };
+    // Different poses -> different band loads -> different makespans.
+    let mut times: Vec<f64> = (0..6)
+        .map(|seed| cp.proc_time(Benchmark::Render, seed).unwrap().as_ms())
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(
+        times[5] > times[0] * 1.05,
+        "render time should vary with pose: {times:?}"
+    );
+}
+
+#[test]
+fn cnn_accuracy_on_fresh_ships() {
+    // Generalization: the Python-trained CNN classifies Rust-generated
+    // chips (different RNG, same distribution) through the full stack.
+    let Some(mut cp) = coproc() else { return };
+    let run = cp.run_unmasked(Benchmark::CnnShip, 123).unwrap();
+    let acc = run.accuracy.expect("cnn reports accuracy");
+    assert!(acc >= 0.9, "accuracy {acc} (paper: 96.8% on its dataset)");
+}
+
+#[test]
+fn validation_pixel_formats_match_table_ii() {
+    let Some(mut cp) = coproc() else { return };
+    let run = cp.run_unmasked(Benchmark::Render, 5).unwrap();
+    assert_eq!(run.bench.output().format, PixelFormat::Bpp16);
+    // Render depth output really uses the 16-bit range.
+    assert!(run.validation.pixels == 1024 * 1024);
+}
+
+#[test]
+fn power_figures_in_fig5_envelope() {
+    let Some(mut cp) = coproc() else { return };
+    for bench in Benchmark::table2() {
+        let run = cp.run_unmasked(bench, 2).unwrap();
+        assert!(
+            (0.8..=1.0).contains(&run.power_w),
+            "{bench:?}: {} W",
+            run.power_w
+        );
+    }
+}
