@@ -14,6 +14,7 @@ fn main() {
         }
     };
 
+    println!("(host groundtruth kernel backend: {})", cp.backend.name());
     println!("== Fig. 5: power per benchmark (paper: SHAVE 0.8-1.0 W, LEON 0.6-0.7 W) ==\n");
     println!(
         "{:<22} {:>9} {:>9} | {:>13} {:>13} {:>8}",

@@ -1,32 +1,112 @@
 //! Bench: wallclock microbenchmarks of the crate's hot paths — the
-//! targets of the §Perf optimization pass (EXPERIMENTS.md).
+//! targets of the §Perf optimization pass (EXPERIMENTS.md, PERF.md).
 //!
-//! Run: `make artifacts && cargo bench --bench hotpath`
+//! Every row with a two-tier kernel benches **both** backends: the
+//! `[reference]` row is the scalar LEON-baseline tier (the seed
+//! implementation), the unmarked row is the `KernelBackend::Optimized`
+//! tier the engine now runs by default, and the speedup between them is
+//! printed and recorded.
+//!
+//! Machine-readable results land in `BENCH_hotpath.json` (one entry per
+//! row: name / median / p95 / mean / iters, plus `ref_median_s` and
+//! `speedup` for two-tier rows) so future PRs can track the perf
+//! trajectory.
+//!
+//! Run: `cargo bench --bench hotpath` (PJRT rows additionally need
+//! `make artifacts`).
 
+use std::collections::BTreeMap;
+
+use spacecodesign::cnn::layers::FeatureMap;
+use spacecodesign::cnn::weights::Weights;
+use spacecodesign::cnn::{cnn_forward, fast as cnn_fast};
 use spacecodesign::compress::{compress, Cube, Params};
+use spacecodesign::dsp::{binning, conv, fast as dsp_fast};
 use spacecodesign::fabric::crc16::Crc16Xmodem;
 use spacecodesign::fabric::width;
 use spacecodesign::iface::signals::WireFrame;
 use spacecodesign::render;
 use spacecodesign::runtime::Runtime;
 use spacecodesign::util::image::{Frame, PixelFormat};
+use spacecodesign::util::json::Json;
 use spacecodesign::util::rng::Rng;
-use spacecodesign::util::stats::{bench, bench_row};
+use spacecodesign::util::stats::{bench, bench_row, Summary};
+use spacecodesign::KernelBackend;
+
+/// Accumulates rows for BENCH_hotpath.json.
+struct BenchLog {
+    rows: Vec<Json>,
+}
+
+impl BenchLog {
+    fn new() -> BenchLog {
+        BenchLog { rows: Vec::new() }
+    }
+
+    fn entry(name: &str, s: &Summary) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(name.into()));
+        m.insert("median_s".into(), Json::Num(s.median));
+        m.insert("p95_s".into(), Json::Num(s.p95));
+        m.insert("mean_s".into(), Json::Num(s.mean));
+        m.insert("iters".into(), Json::Num(s.n as f64));
+        m
+    }
+
+    /// Single-tier row.
+    fn push(&mut self, name: &str, s: &Summary) {
+        self.rows.push(Json::Obj(Self::entry(name, s)));
+        println!("{}", bench_row(name, s));
+    }
+
+    /// Two-tier row: prints reference + optimized + speedup, records all.
+    fn push_pair(&mut self, name: &str, reference: &Summary, optimized: &Summary) {
+        let speedup = reference.median / optimized.median;
+        let mut m = Self::entry(name, optimized);
+        m.insert("ref_median_s".into(), Json::Num(reference.median));
+        m.insert("speedup".into(), Json::Num(speedup));
+        self.rows.push(Json::Obj(m));
+        println!("{}", bench_row(&format!("{name} [reference]"), reference));
+        println!("{}  ({speedup:.2}x vs reference)", bench_row(name, optimized));
+    }
+
+    fn flush(&self) {
+        let mut top = BTreeMap::new();
+        top.insert("bench".into(), Json::Str("hotpath".into()));
+        top.insert(
+            "backend_default".into(),
+            Json::Str(KernelBackend::from_env().name().into()),
+        );
+        top.insert("rows".into(), Json::Arr(self.rows.clone()));
+        let doc = Json::Obj(top).to_string();
+        match std::fs::write("BENCH_hotpath.json", &doc) {
+            Ok(()) => println!("\nwrote BENCH_hotpath.json ({} rows)", self.rows.len()),
+            Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+        }
+    }
+}
 
 fn main() {
     let mut rng = Rng::new(1);
+    let mut log = BenchLog::new();
+    println!(
+        "kernel backend default: {} (SPACECODESIGN_BACKEND / SPACECODESIGN_WORKERS to override)\n",
+        KernelBackend::from_env().name()
+    );
 
     // --- CRC-16 over a 1 MPixel 8bpp frame -----------------------------
+    // Reference tier = the HDL's bit-serial LFSR; optimized tier = the
+    // slicing-by-16 table engine.
     let mut bytes = vec![0u8; 1 << 20];
     rng.fill_bytes(&mut bytes);
+    let r = bench(1, 4, || {
+        std::hint::black_box(Crc16Xmodem::checksum_bitwise(&bytes));
+    });
     let s = bench(3, 12, || {
         std::hint::black_box(Crc16Xmodem::checksum(&bytes));
     });
-    println!(
-        "{}  ({:.0} MB/s)",
-        bench_row("crc16 1 MiB", &s),
-        1.0 / s.median
-    );
+    log.push_pair("crc16 1 MiB", &r, &s);
+    println!("    ({:.0} MB/s optimized)", 1.0 / s.median);
 
     // --- wire frame build + check (CRC both directions) ----------------
     let frame = Frame::from_data(
@@ -40,35 +120,61 @@ fn main() {
         let wire = WireFrame::from_frame(&frame);
         std::hint::black_box(wire.to_frame().unwrap());
     });
-    println!("{}", bench_row("wireframe roundtrip 1MP 16bpp", &s));
+    log.push("wireframe roundtrip 1MP 16bpp", &s);
 
     // --- width conversion FSM paths -------------------------------------
     let pixels: Vec<u32> = (0..1 << 20).map(|_| rng.next_u32() & 0xFFFF).collect();
+    let r = bench(2, 10, || {
+        let words = width::pack_words_ref(&pixels, PixelFormat::Bpp16).unwrap();
+        std::hint::black_box(
+            width::unpack_words_ref(&words, PixelFormat::Bpp16, pixels.len()).unwrap(),
+        );
+    });
     let s = bench(2, 10, || {
         let words = width::pack_words(&pixels, PixelFormat::Bpp16).unwrap();
         std::hint::black_box(
             width::unpack_words(&words, PixelFormat::Bpp16, pixels.len()).unwrap(),
         );
     });
-    println!("{}", bench_row("width pack+unpack 1 Mpx 16bpp", &s));
+    log.push_pair("width pack+unpack 1 Mpx 16bpp", &r, &s);
 
-    // --- scalar groundtruth kernels -------------------------------------
+    // --- binning: scalar groundtruth vs optimized tier -------------------
     let img: Vec<f32> = (0..1024 * 1024).map(|_| rng.next_f32()).collect();
-    let s = bench(1, 5, || {
-        std::hint::black_box(
-            spacecodesign::dsp::binning::binning_f32(&img, 1024, 1024).unwrap(),
-        );
+    let r = bench(1, 5, || {
+        std::hint::black_box(binning::binning_f32(&img, 1024, 1024).unwrap());
     });
-    println!("{}", bench_row("scalar binning 1MP", &s));
+    let s = bench(1, 5, || {
+        std::hint::black_box(dsp_fast::binning_f32_opt(&img, 1024, 1024).unwrap());
+    });
+    log.push_pair("scalar binning 1MP", &r, &s);
 
+    // --- conv 7x7: scalar groundtruth vs optimized tier ------------------
     let kern: Vec<f32> = (0..49).map(|_| rng.next_f32() / 49.0).collect();
     let small: Vec<f32> = (0..256 * 256).map(|_| rng.next_f32()).collect();
-    let s = bench(1, 5, || {
-        std::hint::black_box(
-            spacecodesign::dsp::conv::conv2d_f32(&small, 256, 256, &kern, 7).unwrap(),
-        );
+    let r = bench(1, 5, || {
+        std::hint::black_box(conv::conv2d_f32(&small, 256, 256, &kern, 7).unwrap());
     });
-    println!("{}", bench_row("scalar conv7 256x256", &s));
+    let s = bench(1, 5, || {
+        std::hint::black_box(dsp_fast::conv2d_f32_opt(&small, 256, 256, &kern, 7).unwrap());
+    });
+    log.push_pair("scalar conv7 256x256", &r, &s);
+
+    // --- CNN forward pass: scalar tier vs optimized tier -----------------
+    let weights = Weights::synthetic_ship(1);
+    let chip = FeatureMap::from_data(
+        128,
+        128,
+        3,
+        (0..128 * 128 * 3).map(|_| rng.next_f32()).collect(),
+    )
+    .unwrap();
+    let r = bench(1, 5, || {
+        std::hint::black_box(cnn_forward(&weights, &chip).unwrap());
+    });
+    let s = bench(1, 5, || {
+        std::hint::black_box(cnn_fast::cnn_forward_opt(&weights, &chip).unwrap());
+    });
+    log.push_pair("cnn forward 128x128x3", &r, &s);
 
     // --- rasterizer ------------------------------------------------------
     let mesh = render::Mesh::octahedron();
@@ -84,9 +190,9 @@ fn main() {
     let s = bench(2, 8, || {
         std::hint::black_box(render::depth_render(&tris, 1024, 1024));
     });
-    println!("{}", bench_row("scalar raster 1MP (8 tris)", &s));
+    log.push("scalar raster 1MP (8 tris)", &s);
 
-    // --- CCSDS-123 compressor -------------------------------------------
+    // --- CCSDS-123 compressor (scratch-buffer predictor) -----------------
     let cube = {
         let mut data = vec![0u16; 16 * 64 * 64];
         for (i, v) in data.iter_mut().enumerate() {
@@ -97,45 +203,48 @@ fn main() {
     let s = bench(2, 8, || {
         std::hint::black_box(compress(&cube, Params::default()).unwrap());
     });
+    log.push("ccsds123 compress 16x64x64", &s);
     println!(
-        "{}  ({:.2} Msamples/s)",
-        bench_row("ccsds123 compress 16x64x64", &s),
+        "    ({:.2} Msamples/s)",
         cube.samples() as f64 / s.median / 1e6
     );
 
     // --- PJRT execution (the real numerics hot path) ---------------------
     let Ok(mut rt) = Runtime::open_default() else {
         eprintln!("(skipping PJRT benches: artifacts not built)");
+        log.flush();
         return;
     };
     let x256: Vec<f32> = (0..256 * 256).map(|_| rng.next_f32()).collect();
     let s = bench(2, 10, || {
         std::hint::black_box(rt.execute("binning_256", &[&x256]).unwrap());
     });
-    println!("{}", bench_row("pjrt binning_256", &s));
+    log.push("pjrt binning_256", &s);
 
     let x1m: Vec<f32> = (0..2048 * 2048).map(|_| rng.next_f32()).collect();
     let s = bench(1, 5, || {
         std::hint::black_box(rt.execute("binning_2048", &[&x1m]).unwrap());
     });
-    println!("{}", bench_row("pjrt binning_2048", &s));
+    log.push("pjrt binning_2048", &s);
 
     let ximg: Vec<f32> = (0..1024 * 1024).map(|_| rng.next_f32()).collect();
     let k13: Vec<f32> = (0..169).map(|_| rng.next_f32() / 169.0).collect();
     let s = bench(1, 3, || {
         std::hint::black_box(rt.execute("conv_1024_k13", &[&ximg, &k13]).unwrap());
     });
-    println!("{}", bench_row("pjrt conv_1024_k13", &s));
+    log.push("pjrt conv_1024_k13", &s);
 
     let pose6 = [0.1f32, -0.2, 0.0, 0.1, 0.0, 3.0];
     let s = bench(1, 3, || {
         std::hint::black_box(rt.execute("render_1024", &[&pose6]).unwrap());
     });
-    println!("{}", bench_row("pjrt render_1024", &s));
+    log.push("pjrt render_1024", &s);
 
-    let chip: Vec<f32> = (0..128 * 128 * 3).map(|_| rng.next_f32()).collect();
+    let chipv: Vec<f32> = (0..128 * 128 * 3).map(|_| rng.next_f32()).collect();
     let s = bench(1, 5, || {
-        std::hint::black_box(rt.execute("cnn_patch_b1", &[&chip]).unwrap());
+        std::hint::black_box(rt.execute("cnn_patch_b1", &[&chipv]).unwrap());
     });
-    println!("{}", bench_row("pjrt cnn_patch_b1", &s));
+    log.push("pjrt cnn_patch_b1", &s);
+
+    log.flush();
 }

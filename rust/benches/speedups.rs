@@ -15,6 +15,7 @@ fn main() {
         }
     };
 
+    println!("(host groundtruth kernel backend: {})", cp.backend.name());
     println!("== speedups vs single LEON (paper: binning 14x, conv up to 75x,");
     println!("   render 10-16x content-dependent, CNN >100x projected) ==\n");
     for bench in Benchmark::table2() {

@@ -16,6 +16,7 @@ fn main() {
         }
     };
 
+    println!("(host groundtruth kernel backend: {})", cp.backend.name());
     println!("== Table II: FPGA & VPU co-processing with CIF/LCD @ 50 MHz ==");
     println!("(paper values: 109/50/71/156/185/721 ms unmasked latency; ");
     println!(" 9.1/20/14.1/6.4/5.4/1.4 FPS unmasked; 3.2/8/8/8/6.1/1.5 FPS masked)\n");

@@ -1,0 +1,215 @@
+//! Optimized (SHAVE-style) CNN inference — the `KernelBackend::Optimized`
+//! tier for the ship-detection benchmark.
+//!
+//! Three restructurings over the scalar [`crate::cnn::layers`] tier:
+//!
+//! * **weight repacking**: HWIO `(3, 3, Cin, Cout)` weights are repacked
+//!   once per layer into tap-major `(tap, Cout, Cin)` so the `ic`
+//!   accumulation reads *contiguous* rows of both the feature map and
+//!   the weights — the reference's `w[base + ic * cout]` gather strides
+//!   by `Cout` and defeats vectorization.
+//! * **row-pointer pooling**: `maxpool2x2` walks two row slices instead
+//!   of recomputing `(y * w + x) * c + ch` per element.
+//! * **ping-pong buffers**: `cnn_forward_opt` reuses two scratch
+//!   feature-map buffers across all four conv/pool stages instead of
+//!   cloning the input chip and allocating per layer.
+//!
+//! Conv rows fan out across cores via [`crate::util::par`]. The scalar
+//! tier stays the groundtruth; `tests/kernel_equivalence.rs` pins the
+//! two to each other (≤1e-5 relative).
+
+use crate::cnn::layers::{dense, FeatureMap};
+use crate::cnn::weights::Weights;
+use crate::error::{Error, Result};
+use crate::util::par;
+use crate::util::par::SPAWN_GRAIN_OPS;
+
+/// Repack HWIO `(3, 3, Cin, Cout)` into tap-major `(tap, Cout, Cin)`:
+/// `packed[(tap * cout + oc) * cin + ic] = w[(tap * cin + ic) * cout + oc]`.
+fn repack_hwio(w: &[f32], cin: usize, cout: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), 9 * cin * cout);
+    let mut packed = vec![0f32; 9 * cout * cin];
+    for tap in 0..9 {
+        for ic in 0..cin {
+            for oc in 0..cout {
+                packed[(tap * cout + oc) * cin + ic] = w[(tap * cin + ic) * cout + oc];
+            }
+        }
+    }
+    packed
+}
+
+/// Core conv kernel on raw NHWC data with pre-packed weights, writing
+/// into a caller-owned buffer (ping-pong reuse across layers).
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_relu_packed(
+    xd: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    packed: &[f32],
+    b: &[f32],
+    cout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xd.len(), h * w * cin);
+    debug_assert_eq!(out.len(), h * w * cout);
+    if h == 0 || w == 0 || cout == 0 {
+        return;
+    }
+    let row_len = w * cout;
+    let min_rows = (SPAWN_GRAIN_OPS / (w * 9 * cin * cout).max(1)).max(1);
+    par::par_row_bands(out, h, row_len, min_rows, |y0, band| {
+        for (r, orow) in band.chunks_exact_mut(row_len).enumerate() {
+            let y = y0 + r;
+            // Clamped tap windows (same term order as the reference:
+            // u-major, v, then ic).
+            let u_lo = usize::from(y == 0);
+            let u_hi = if y + 1 == h { 2 } else { 3 };
+            for xx in 0..w {
+                let v_lo = usize::from(xx == 0);
+                let v_hi = if xx + 1 == w { 2 } else { 3 };
+                let opix = &mut orow[xx * cout..(xx + 1) * cout];
+                for (oc, o) in opix.iter_mut().enumerate() {
+                    let mut acc = b[oc];
+                    for u in u_lo..u_hi {
+                        let yy = y + u - 1;
+                        for v in v_lo..v_hi {
+                            let xv = xx + v - 1;
+                            let xrow = &xd[(yy * w + xv) * cin..][..cin];
+                            let wrow = &packed[((u * 3 + v) * cout + oc) * cin..][..cin];
+                            for ic in 0..cin {
+                                acc += xrow[ic] * wrow[ic];
+                            }
+                        }
+                    }
+                    *o = acc.max(0.0);
+                }
+            }
+        }
+    });
+}
+
+/// Row-pointer 2x2 stride-2 max pool into a caller-owned buffer.
+fn maxpool2x2_packed(xd: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), oh * ow * c);
+    if oh == 0 || ow == 0 || c == 0 {
+        return;
+    }
+    let row_len = w * c;
+    for (oy, orow) in out.chunks_exact_mut(ow * c).enumerate() {
+        let r0 = &xd[(2 * oy) * row_len..][..row_len];
+        let r1 = &xd[(2 * oy + 1) * row_len..][..row_len];
+        for ox in 0..ow {
+            let base = 2 * ox * c;
+            let opix = &mut orow[ox * c..(ox + 1) * c];
+            let (a0, a1) = (&r0[base..base + c], &r0[base + c..base + 2 * c]);
+            let (b0, b1) = (&r1[base..base + c], &r1[base + c..base + 2 * c]);
+            for ch in 0..c {
+                opix[ch] = a0[ch].max(a1[ch]).max(b0[ch]).max(b1[ch]);
+            }
+        }
+    }
+}
+
+/// Optimized twin of [`crate::cnn::layers::conv3x3_relu`].
+pub fn conv3x3_relu_opt(x: &FeatureMap, w: &[f32], b: &[f32], cout: usize) -> FeatureMap {
+    let packed = repack_hwio(w, x.c, cout);
+    let mut out = FeatureMap::new(x.h, x.w, cout);
+    conv3x3_relu_packed(&x.data, x.h, x.w, x.c, &packed, b, cout, &mut out.data);
+    out
+}
+
+/// Optimized twin of [`crate::cnn::layers::maxpool2x2`]. Bit-exact.
+pub fn maxpool2x2_opt(x: &FeatureMap) -> FeatureMap {
+    let mut out = FeatureMap::new(x.h / 2, x.w / 2, x.c);
+    maxpool2x2_packed(&x.data, x.h, x.w, x.c, &mut out.data);
+    out
+}
+
+/// Optimized twin of [`crate::cnn::layers::cnn_forward`]: same 6-layer
+/// network, ping-pong scratch buffers, no input clone.
+pub fn cnn_forward_opt(weights: &Weights, chip: &FeatureMap) -> Result<[f32; 2]> {
+    if chip.h != 128 || chip.w != 128 || chip.c != 3 {
+        return Err(Error::Geometry(format!(
+            "ship CNN expects 128x128x3 chips, got {}x{}x{}",
+            chip.h, chip.w, chip.c
+        )));
+    }
+    let (mut h, mut w, mut cin) = (chip.h, chip.w, chip.c);
+    let mut conv_buf: Vec<f32> = Vec::new();
+    let mut pool_buf: Vec<f32> = Vec::new();
+    for i in 0..4 {
+        let wt = weights.get(&format!("conv{i}_w"))?;
+        let bt = weights.get(&format!("conv{i}_b"))?;
+        let cout = *wt.dims.last().unwrap();
+        let packed = repack_hwio(&wt.data, cin, cout);
+        conv_buf.resize(h * w * cout, 0.0);
+        {
+            let src: &[f32] = if i == 0 { &chip.data } else { &pool_buf };
+            conv3x3_relu_packed(src, h, w, cin, &packed, &bt.data, cout, &mut conv_buf);
+        }
+        pool_buf.resize((h / 2) * (w / 2) * cout, 0.0);
+        maxpool2x2_packed(&conv_buf, h, w, cout, &mut pool_buf);
+        h /= 2;
+        w /= 2;
+        cin = cout;
+    }
+    let fc0w = weights.get("fc0_w")?;
+    let fc0b = weights.get("fc0_b")?;
+    let hidden = dense(&pool_buf, &fc0w.data, &fc0b.data, 57, true);
+    let fc1w = weights.get("fc1_w")?;
+    let fc1b = weights.get("fc1_b")?;
+    let logits = dense(&hidden, &fc1w.data, &fc1b.data, 2, false);
+    Ok([logits[0], logits[1]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::layers;
+    use crate::util::rng::Rng;
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-5 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn random_fm(rng: &mut Rng, h: usize, w: usize, c: usize) -> FeatureMap {
+        FeatureMap::from_data(h, w, c, (0..h * w * c).map(|_| rng.next_f32() - 0.5).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn conv_matches_reference_including_borders() {
+        let mut rng = Rng::new(11);
+        let shapes = [(6usize, 7usize, 3usize, 4usize), (1, 9, 2, 3), (5, 1, 4, 2), (1, 1, 1, 1)];
+        for (h, w, cin, cout) in shapes {
+            let x = random_fm(&mut rng, h, w, cin);
+            let wts: Vec<f32> = (0..9 * cin * cout).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..cout).map(|_| rng.next_f32() - 0.5).collect();
+            let r = layers::conv3x3_relu(&x, &wts, &b, cout);
+            let o = conv3x3_relu_opt(&x, &wts, &b, cout);
+            assert!(
+                r.data.iter().zip(&o.data).all(|(&a, &bb)| close(a, bb)),
+                "{h}x{w} {cin}->{cout}"
+            );
+        }
+    }
+
+    #[test]
+    fn maxpool_bit_exact() {
+        let mut rng = Rng::new(12);
+        for (h, w, c) in [(8usize, 8usize, 3usize), (9, 7, 2), (2, 2, 5), (1, 4, 2)] {
+            let x = random_fm(&mut rng, h, w, c);
+            assert_eq!(layers::maxpool2x2(&x).data, maxpool2x2_opt(&x).data, "{h}x{w}x{c}");
+        }
+    }
+
+    #[test]
+    fn forward_rejects_wrong_chip_size() {
+        let w = Weights::default();
+        let chip = FeatureMap::new(64, 64, 3);
+        assert!(cnn_forward_opt(&w, &chip).is_err());
+    }
+}

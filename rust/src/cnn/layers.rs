@@ -140,10 +140,11 @@ pub fn cnn_forward(weights: &Weights, chip: &FeatureMap) -> Result<[f32; 2]> {
     Ok([logits[0], logits[1]])
 }
 
-/// Argmax classification.
+/// Argmax classification on the scalar tier (delegates to the
+/// backend-dispatched [`crate::cnn::classify`] so the argmax rule
+/// lives in one place).
 pub fn classify(weights: &Weights, chip: &FeatureMap) -> Result<usize> {
-    let l = cnn_forward(weights, chip)?;
-    Ok(if l[1] > l[0] { 1 } else { 0 })
+    crate::cnn::classify(crate::KernelBackend::Reference, weights, chip)
 }
 
 #[cfg(test)]

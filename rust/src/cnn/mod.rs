@@ -7,9 +7,39 @@
 //! by `python/compile/train_cnn.py`; [`ships`] generates synthetic
 //! ship/sea chips matching the training distribution.
 
+//! [`fast`] is the `KernelBackend::Optimized` twin of [`layers`]
+//! (repacked weights, row-pointer pooling, ping-pong buffers, row
+//! fan-out); [`forward`]/[`classify`] dispatch between the two tiers.
+
+pub mod fast;
 pub mod layers;
 pub mod ships;
 pub mod weights;
 
 pub use layers::cnn_forward;
 pub use weights::Weights;
+
+use crate::error::Result;
+use crate::KernelBackend;
+
+/// Backend-dispatched full 6-layer forward pass.
+pub fn forward(
+    backend: KernelBackend,
+    weights: &Weights,
+    chip: &layers::FeatureMap,
+) -> Result<[f32; 2]> {
+    match backend {
+        KernelBackend::Reference => layers::cnn_forward(weights, chip),
+        KernelBackend::Optimized => fast::cnn_forward_opt(weights, chip),
+    }
+}
+
+/// Backend-dispatched argmax classification.
+pub fn classify(
+    backend: KernelBackend,
+    weights: &Weights,
+    chip: &layers::FeatureMap,
+) -> Result<usize> {
+    let l = forward(backend, weights, chip)?;
+    Ok(usize::from(l[1] > l[0]))
+}

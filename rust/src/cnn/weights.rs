@@ -94,6 +94,35 @@ impl Weights {
         Weights::from_bytes(&bytes)
     }
 
+    /// Random weights with the trained 6-layer architecture's exact
+    /// shapes — lets benches and equivalence tests exercise the full
+    /// forward pass without `make artifacts`. Deterministic per seed.
+    pub fn synthetic_ship(seed: u64) -> Weights {
+        let dims: [(&str, Vec<usize>); 12] = [
+            ("conv0_w", vec![3, 3, 3, 8]),
+            ("conv0_b", vec![8]),
+            ("conv1_w", vec![3, 3, 8, 16]),
+            ("conv1_b", vec![16]),
+            ("conv2_w", vec![3, 3, 16, 32]),
+            ("conv2_b", vec![32]),
+            ("conv3_w", vec![3, 3, 32, 32]),
+            ("conv3_b", vec![32]),
+            ("fc0_w", vec![2048, 57]),
+            ("fc0_b", vec![57]),
+            ("fc1_w", vec![57, 2]),
+            ("fc1_b", vec![2]),
+        ];
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut tensors = BTreeMap::new();
+        for (name, dims) in dims {
+            let numel: usize = dims.iter().product();
+            let data: Vec<f32> =
+                (0..numel).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+            tensors.insert(name.to_string(), Tensor { dims, data });
+        }
+        Weights { tensors }
+    }
+
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)

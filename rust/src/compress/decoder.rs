@@ -59,6 +59,8 @@ pub fn decompress(bytes: &[u8]) -> Result<Cube> {
 
     let mut data = Vec::with_capacity(bands * rows * cols);
     let mut planes: Vec<Vec<i64>> = Vec::new();
+    // Reused per-sample scratch, mirroring the encoder (lock-step).
+    let mut diffs: Vec<i64> = Vec::with_capacity(params.pred_bands);
 
     for _z in 0..bands {
         let mut plane = vec![0i64; rows * cols];
@@ -79,12 +81,12 @@ pub fn decompress(bytes: &[u8]) -> Result<Cube> {
                     plane[0] = r.read_bits(params.dynamic_range)? as i64;
                     continue;
                 }
-                let pr = pred.predict(&plane, &prev_refs, cols, y, x);
+                let s_hat = pred.predict_into(&plane, &prev_refs, cols, y, x, &mut diffs);
                 let k = gr.k();
                 let delta =
                     decode_delta(&mut r, k, params.unary_limit, params.dynamic_range)?;
-                let err = unmap_residual(delta, pr.s_hat, smin, smax);
-                let s = pr.s_hat + err;
+                let err = unmap_residual(delta, s_hat, smin, smax);
+                let s = s_hat + err;
                 if s < smin || s > smax {
                     return Err(Error::Ccsds(format!(
                         "reconstructed sample {s} out of range at y={y} x={x}"
@@ -92,7 +94,7 @@ pub fn decompress(bytes: &[u8]) -> Result<Cube> {
                 }
                 plane[y * cols + x] = s;
                 gr.update(delta);
-                pred.update(err, &pr.diffs);
+                pred.update(err, &diffs);
             }
         }
         data.extend(plane.iter().map(|&s| s as u16));

@@ -101,6 +101,9 @@ pub fn compress(cube: &Cube, params: Params) -> Result<(Vec<u8>, CompressStats)>
     let cols = cube.cols;
     let mut escapes = 0u64;
     let mut planes: Vec<Vec<i64>> = Vec::new();
+    // Scratch for the per-sample central local differences, reused
+    // across the whole cube (predict_into clears it each call).
+    let mut diffs: Vec<i64> = Vec::with_capacity(params.pred_bands);
 
     for z in 0..cube.bands {
         let plane = cube.plane_i64(z);
@@ -130,16 +133,16 @@ pub fn compress(cube: &Cube, params: Params) -> Result<(Vec<u8>, CompressStats)>
                     w.write_bits(s as u64, params.dynamic_range);
                     continue;
                 }
-                let pr = pred.predict(&plane, &prev_refs, cols, y, x);
-                let err = s - pr.s_hat;
-                let delta = map_residual(err, pr.s_hat, smin, smax);
+                let s_hat = pred.predict_into(&plane, &prev_refs, cols, y, x, &mut diffs);
+                let err = s - s_hat;
+                let delta = map_residual(err, s_hat, smin, smax);
                 let k = gr.k();
                 if (delta >> k) >= params.unary_limit as u64 {
                     escapes += 1;
                 }
                 encode_delta(&mut w, delta, k, params.unary_limit, params.dynamic_range);
                 gr.update(delta);
-                pred.update(err, &pr.diffs);
+                pred.update(err, &diffs);
             }
         }
         planes.push(plane);

@@ -80,6 +80,10 @@ impl Predictor {
     /// `cur_plane` holds the reconstructed samples of the current band so
     /// far (values at earlier raster positions are valid); `prev_planes`
     /// holds up to P previous bands, most recent first.
+    ///
+    /// Convenience wrapper over [`Predictor::predict_into`] that
+    /// allocates the diff vector; the encoder/decoder hot loops call
+    /// `predict_into` with a reused scratch buffer instead.
     pub fn predict(
         &self,
         cur_plane: &[i64],
@@ -88,35 +92,48 @@ impl Predictor {
         y: usize,
         x: usize,
     ) -> Prediction {
+        let mut diffs = Vec::with_capacity(self.params.pred_bands);
+        let s_hat = self.predict_into(cur_plane, prev_planes, cols, y, x, &mut diffs);
+        Prediction { s_hat, diffs }
+    }
+
+    /// Allocation-free core of [`Predictor::predict`]: writes the
+    /// central local differences into `diffs` (cleared first) and
+    /// returns the predicted sample. Threading one scratch vector
+    /// through the per-sample loop removes a heap allocation per cube
+    /// sample — the dominant cost of the seed encoder.
+    pub fn predict_into(
+        &self,
+        cur_plane: &[i64],
+        prev_planes: &[&[i64]],
+        cols: usize,
+        y: usize,
+        x: usize,
+        diffs: &mut Vec<i64>,
+    ) -> i64 {
+        diffs.clear();
         let (smin, smax, mid) = sample_bounds(self.params.dynamic_range);
         let omega = self.params.omega;
+        let n_pred = prev_planes.len().min(self.params.pred_bands);
 
         // First sample of the band: previous-band sample or mid-scale.
         if y == 0 && x == 0 {
-            let s_hat = prev_planes
+            diffs.resize(n_pred, 0);
+            return prev_planes
                 .first()
                 .map(|p| p[0])
                 .unwrap_or(mid)
                 .clamp(smin, smax);
-            return Prediction {
-                s_hat,
-                diffs: vec![0; prev_planes.len().min(self.params.pred_bands)],
-            };
         }
 
         let sigma = local_sum(cur_plane, cols, y, x);
-        let n_pred = prev_planes.len().min(self.params.pred_bands);
 
         if n_pred == 0 {
             // Band 0: purely spatial prediction sigma/4.
-            return Prediction {
-                s_hat: (sigma >> 2).clamp(smin, smax),
-                diffs: vec![],
-            };
+            return (sigma >> 2).clamp(smin, smax);
         }
 
         // Central local differences of the previous bands at (y, x).
-        let mut diffs = Vec::with_capacity(n_pred);
         let mut d_hat: i64 = 0;
         for (i, plane) in prev_planes.iter().take(n_pred).enumerate() {
             let s_prev = plane[y * cols + x];
@@ -127,8 +144,7 @@ impl Predictor {
         }
 
         // s_hat = (d_hat + sigma * 2^Omega) / 2^(Omega+2), clamped.
-        let s_hat = ((d_hat + (sigma << omega)) >> (omega + 2)).clamp(smin, smax);
-        Prediction { s_hat, diffs }
+        ((d_hat + (sigma << omega)) >> (omega + 2)).clamp(smin, smax)
     }
 
     /// Sign-algorithm weight update after observing the true sample.
@@ -224,6 +240,24 @@ mod tests {
         let pr = pred.predict(&cur, &[&prev], 4, 2, 2);
         // sigma = 4*500; d_prev = 0 -> s_hat = 500.
         assert_eq!(pr.s_hat, 500);
+    }
+
+    #[test]
+    fn predict_into_matches_predict_with_dirty_scratch() {
+        let params = Params::default();
+        let pred = Predictor::new_band(params);
+        let cur: Vec<i64> = (0..16).map(|i| 100 + i * 7).collect();
+        let prev: Vec<i64> = (0..16).map(|i| 90 + i * 5).collect();
+        let prev2: Vec<i64> = (0..16).map(|i| 80 + i * 3).collect();
+        let mut scratch = vec![999i64; 7]; // deliberately dirty
+        for y in 0..4 {
+            for x in 0..4 {
+                let pr = pred.predict(&cur, &[&prev, &prev2], 4, y, x);
+                let s = pred.predict_into(&cur, &[&prev, &prev2], 4, y, x, &mut scratch);
+                assert_eq!(pr.s_hat, s, "({y},{x})");
+                assert_eq!(pr.diffs, scratch, "({y},{x})");
+            }
+        }
     }
 
     #[test]

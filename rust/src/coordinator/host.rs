@@ -11,6 +11,7 @@ use crate::error::{Error, Result};
 use crate::render::{self, Mesh, Pose};
 use crate::util::image::{Frame, PixelFormat};
 use crate::util::rng::Rng;
+use crate::KernelBackend;
 
 /// Far-plane used to quantize render depths to 16 bpp.
 pub const RENDER_DEPTH_MAX: f32 = 8.0;
@@ -66,11 +67,28 @@ fn random_u8_frame(w: usize, h: usize, seed: u64) -> Frame {
     .unwrap()
 }
 
+/// Build the work item for one benchmark execution with the default
+/// kernel backend (see [`make_work_with`]).
+pub fn make_work(
+    bench: Benchmark,
+    seed: u64,
+    mesh: Option<&Mesh>,
+    weights: Option<&crate::cnn::Weights>,
+) -> Result<WorkItem> {
+    make_work_with(KernelBackend::default(), bench, seed, mesh, weights)
+}
+
 /// Build the work item for one benchmark execution.
+///
+/// `backend` selects the kernel tier for the host-side expected-output
+/// computation: `Optimized` by default (the tiers are pinned to each
+/// other by the equivalence property tests), `Reference` to force the
+/// scalar groundtruth for strict pinning runs.
 ///
 /// `mesh` is required for [`Benchmark::Render`] (the same model baked
 /// into the artifact); `weights` for [`Benchmark::CnnShip`].
-pub fn make_work(
+pub fn make_work_with(
+    backend: KernelBackend,
     bench: Benchmark,
     seed: u64,
     mesh: Option<&Mesh>,
@@ -81,7 +99,7 @@ pub fn make_work(
             let io = bench.input();
             let frame = random_u8_frame(io.width, io.height, seed);
             let norm = frame.to_f32_normalized();
-            let gt = crate::dsp::binning::binning_f32(&norm, io.height, io.width)?;
+            let gt = crate::dsp::binning2x2(backend, &norm, io.height, io.width)?;
             let out = bench.output();
             let expected =
                 Frame::from_f32_normalized(out.width, out.height, out.format, &gt)?;
@@ -98,7 +116,7 @@ pub fn make_work(
             let frame = random_u8_frame(io.width, io.height, seed);
             let norm = frame.to_f32_normalized();
             let kern = conv_kernel(k, seed);
-            let gt = crate::dsp::conv::conv2d_f32(&norm, io.height, io.width, &kern, k)?;
+            let gt = crate::dsp::conv2d(backend, &norm, io.height, io.width, &kern, k)?;
             let out = bench.output();
             let expected =
                 Frame::from_f32_normalized(out.width, out.height, out.format, &gt)?;
@@ -179,7 +197,7 @@ pub fn make_work(
                         }
                     }
                     expected_labels
-                        .push(crate::cnn::layers::classify(weights, &chip)? as u32);
+                        .push(crate::cnn::classify(backend, weights, &chip)? as u32);
                 }
             }
             let expected =
@@ -310,6 +328,18 @@ mod tests {
             .filter(|&&p| p < 60000)
             .count();
         assert!(covered > 1000, "covered {covered}");
+    }
+
+    #[test]
+    fn backends_agree_on_expected_frames() {
+        for bench in [Benchmark::Binning, Benchmark::Conv { k: 3 }] {
+            let r = make_work_with(KernelBackend::Reference, bench, 5, None, None).unwrap();
+            let o = make_work_with(KernelBackend::Optimized, bench, 5, None, None).unwrap();
+            // Quantized expectations may differ by at most 1 LSB at
+            // float rounding boundaries; validate() allows exactly that.
+            let v = validate(&r, &o.expected).unwrap();
+            assert!(v.pass, "{bench:?}: {v:?}");
+        }
     }
 
     #[test]

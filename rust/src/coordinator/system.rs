@@ -17,6 +17,7 @@ use crate::vpu::cost::{CostModel, Workload};
 use crate::vpu::drivers::{CamGeneric, LcdDriver};
 use crate::vpu::power::PowerModel;
 use crate::vpu::scheduler;
+use crate::KernelBackend;
 
 /// Result of one Unmasked frame through the full stack.
 #[derive(Clone, Debug)]
@@ -55,6 +56,10 @@ impl FrameRun {
 /// The co-processor testbed.
 pub struct CoProcessor {
     pub cfg: SystemConfig,
+    /// Kernel tier for the host-side groundtruth path (defaults to
+    /// `Optimized`; `SPACECODESIGN_BACKEND=reference` forces the scalar
+    /// tier for strict groundtruth pinning).
+    pub backend: KernelBackend,
     pub runtime: Runtime,
     pub cost: CostModel,
     pub power: PowerModel,
@@ -89,6 +94,7 @@ impl CoProcessor {
         .ok();
 
         Ok(CoProcessor {
+            backend: KernelBackend::from_env(),
             cost: CostModel::new(cfg.vpu),
             power: PowerModel::default(),
             cfg,
@@ -164,7 +170,8 @@ impl CoProcessor {
     /// Run one frame in Unmasked mode: real data through CIF, real
     /// numerics through PJRT, real data back through LCD, validated.
     pub fn run_unmasked(&mut self, bench: Benchmark, seed: u64) -> Result<FrameRun> {
-        let item = host::make_work(
+        let item = host::make_work_with(
+            self.backend,
             bench,
             seed,
             self.mesh_full.as_ref(),

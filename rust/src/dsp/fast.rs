@@ -1,0 +1,218 @@
+//! Optimized (SHAVE-style) DSP kernels — the `KernelBackend::Optimized`
+//! tier for benchmark 1 (binning) and benchmark 2 (convolution).
+//!
+//! Mirrors what the paper's SHAVE kernels do on the Myriad2:
+//!
+//! * **interior/border split**: the interior of the image (where every
+//!   kernel tap is in bounds) runs with *no* per-tap bounds tests, as
+//!   shifted contiguous-slice accumulations that LLVM auto-vectorizes;
+//!   only the thin border frame pays for clamped tap windows.
+//! * **row fan-out**: output rows are split into contiguous bands
+//!   dispatched across cores via [`crate::util::par`], the software
+//!   analogue of the 12-SHAVE band split.
+//!
+//! The scalar twins ([`crate::dsp::conv::conv2d_f32`],
+//! [`crate::dsp::binning::binning_f32`]) stay untouched as groundtruth;
+//! `tests/kernel_equivalence.rs` pins the two tiers to each other.
+
+use crate::error::{Error, Result};
+use crate::util::par;
+use crate::util::par::SPAWN_GRAIN_OPS;
+
+/// Optimized twin of [`crate::dsp::conv::conv2d_f32`]: 'same' 2-D
+/// cross-correlation, zero padding, identical tap order (u-major, then
+/// v) so interior sums accumulate in the same order as the reference.
+pub fn conv2d_f32_opt(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    k: usize,
+) -> Result<Vec<f32>> {
+    if input.len() != h * w {
+        return Err(Error::Geometry("input size mismatch".into()));
+    }
+    if kernel.len() != k * k || k % 2 == 0 {
+        return Err(Error::Geometry(format!("kernel must be odd square, got {k}")));
+    }
+    let mut out = vec![0f32; h * w];
+    if h == 0 || w == 0 {
+        return Ok(out);
+    }
+    let min_rows = (SPAWN_GRAIN_OPS / (w * k * k).max(1)).max(1);
+    par::par_row_bands(&mut out, h, w, min_rows, |y0, band| {
+        conv2d_rows(input, h, w, kernel, k, y0, band);
+    });
+    Ok(out)
+}
+
+/// Compute output rows `y0 ..` into `band` (`band.len() / w` rows).
+fn conv2d_rows(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    k: usize,
+    y0: usize,
+    band: &mut [f32],
+) {
+    let p = k / 2;
+    for (r, out_row) in band.chunks_exact_mut(w).enumerate() {
+        let y = y0 + r;
+        // Interior requires the kernel to fit both vertically at this
+        // row and horizontally somewhere in the row.
+        if w >= k && y >= p && y + p < h {
+            conv2d_border_cols(input, h, w, kernel, k, y, 0, p, out_row);
+            conv2d_border_cols(input, h, w, kernel, k, y, w - p, w, out_row);
+            // Interior columns p .. w-p: every tap in bounds. For each
+            // kernel tap (u, v), the contributing input samples form one
+            // contiguous slice of the row y+u-p, shifted by v — a pure
+            // slice-times-scalar accumulation the vectorizer handles.
+            let mid = &mut out_row[p..w - p];
+            let width = mid.len(); // == w - k + 1
+            for u in 0..k {
+                let in_row = &input[(y + u - p) * w..][..w];
+                let krow = &kernel[u * k..][..k];
+                for (v, &kv) in krow.iter().enumerate() {
+                    let src = &in_row[v..v + width];
+                    for (o, &s) in mid.iter_mut().zip(src) {
+                        *o += kv * s;
+                    }
+                }
+            }
+        } else {
+            conv2d_border_cols(input, h, w, kernel, k, y, 0, w, out_row);
+        }
+    }
+}
+
+/// Border pixels: clamp the tap window once per pixel instead of
+/// bounds-testing every tap (the reference's per-tap `if`).
+#[allow(clippy::too_many_arguments)]
+fn conv2d_border_cols(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    k: usize,
+    y: usize,
+    x_lo: usize,
+    x_hi: usize,
+    out_row: &mut [f32],
+) {
+    let p = k / 2;
+    let u_lo = p.saturating_sub(y);
+    let u_hi = k.min(h + p - y);
+    for x in x_lo..x_hi {
+        let v_lo = p.saturating_sub(x);
+        let v_hi = k.min(w + p - x);
+        let mut acc = 0f32;
+        for u in u_lo..u_hi {
+            let in_row = &input[(y + u - p) * w..][..w];
+            let krow = &kernel[u * k..][..k];
+            for v in v_lo..v_hi {
+                acc += in_row[x + v - p] * krow[v];
+            }
+        }
+        out_row[x] = acc;
+    }
+}
+
+/// Optimized twin of [`crate::dsp::binning::binning_f32`]: 2x2 averaging
+/// with the same association order `(a + b + c + d) * 0.25`, restructured
+/// to row-pair slices and fanned out across cores. Bit-exact with the
+/// reference.
+pub fn binning_f32_opt(input: &[f32], h: usize, w: usize) -> Result<Vec<f32>> {
+    if h % 2 != 0 || w % 2 != 0 || input.len() != h * w {
+        return Err(Error::Geometry(format!(
+            "binning needs even HxW matching data; got {h}x{w}, {} samples",
+            input.len()
+        )));
+    }
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0f32; oh * ow];
+    if oh == 0 || ow == 0 {
+        return Ok(out);
+    }
+    let min_rows = (SPAWN_GRAIN_OPS / w.max(1)).max(1);
+    par::par_row_bands(&mut out, oh, ow, min_rows, |oy0, band| {
+        for (r, orow) in band.chunks_exact_mut(ow).enumerate() {
+            let y = (oy0 + r) * 2;
+            let r0 = &input[y * w..][..w];
+            let r1 = &input[(y + 1) * w..][..w];
+            for (ox, o) in orow.iter_mut().enumerate() {
+                let x = 2 * ox;
+                *o = (r0[x] + r0[x + 1] + r1[x] + r1[x + 1]) * 0.25;
+            }
+        }
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{binning, conv};
+    use crate::util::rng::Rng;
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-5 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        let mut rng = Rng::new(1);
+        let input: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+        let mut k = vec![0f32; 9];
+        k[4] = 1.0;
+        let out = conv2d_f32_opt(&input, 8, 8, &k, 3).unwrap();
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn matches_reference_on_interior_and_border() {
+        let mut rng = Rng::new(7);
+        for (h, w, k) in [(16usize, 16usize, 5usize), (9, 31, 7), (12, 8, 3)] {
+            let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32() - 0.5).collect();
+            let kern: Vec<f32> = (0..k * k).map(|_| rng.next_f32() - 0.5).collect();
+            let r = conv::conv2d_f32(&input, h, w, &kern, k).unwrap();
+            let o = conv2d_f32_opt(&input, h, w, &kern, k).unwrap();
+            assert!(
+                r.iter().zip(&o).all(|(&a, &b)| close(a, b)),
+                "{h}x{w} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_kernel_larger_than_image() {
+        let mut rng = Rng::new(3);
+        for (h, w, k) in [(1usize, 5usize, 7usize), (5, 1, 7), (2, 2, 13), (1, 1, 3)] {
+            let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32()).collect();
+            let kern: Vec<f32> = (0..k * k).map(|_| rng.next_f32()).collect();
+            let r = conv::conv2d_f32(&input, h, w, &kern, k).unwrap();
+            let o = conv2d_f32_opt(&input, h, w, &kern, k).unwrap();
+            assert!(
+                r.iter().zip(&o).all(|(&a, &b)| close(a, b)),
+                "{h}x{w} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_geometry_like_reference() {
+        assert!(conv2d_f32_opt(&[0.0; 16], 4, 4, &[0.0; 16], 4).is_err());
+        assert!(conv2d_f32_opt(&[0.0; 15], 4, 4, &[0.0; 9], 3).is_err());
+    }
+
+    #[test]
+    fn binning_bit_exact_with_reference() {
+        let mut rng = Rng::new(9);
+        let (h, w) = (64, 96);
+        let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32()).collect();
+        let r = binning::binning_f32(&input, h, w).unwrap();
+        let o = binning_f32_opt(&input, h, w).unwrap();
+        assert_eq!(r, o);
+        assert!(binning_f32_opt(&[0.0; 6], 2, 3).is_err());
+    }
+}

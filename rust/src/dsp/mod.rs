@@ -10,7 +10,39 @@
 //!   output the host validates LCD frames against and (b) embody the
 //!   LEON-side implementations whose timing `vpu::cost` models.
 
+//! * **Optimized twins** ([`fast`]): the `KernelBackend::Optimized` tier
+//!   — interior/border split, contiguous auto-vectorized inner loops and
+//!   multi-core row fan-out — dispatched via [`conv2d`] / [`binning2x2`]
+//!   and pinned to the scalar tier by `tests/kernel_equivalence.rs`.
+
 pub mod binning;
 pub mod conv;
+pub mod fast;
 pub mod fir;
 pub mod harris;
+
+use crate::error::Result;
+use crate::KernelBackend;
+
+/// Backend-dispatched 'same' 2-D convolution (benchmark 2).
+pub fn conv2d(
+    backend: KernelBackend,
+    input: &[f32],
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    k: usize,
+) -> Result<Vec<f32>> {
+    match backend {
+        KernelBackend::Reference => conv::conv2d_f32(input, h, w, kernel, k),
+        KernelBackend::Optimized => fast::conv2d_f32_opt(input, h, w, kernel, k),
+    }
+}
+
+/// Backend-dispatched 2x2 averaging binning (benchmark 1).
+pub fn binning2x2(backend: KernelBackend, input: &[f32], h: usize, w: usize) -> Result<Vec<f32>> {
+    match backend {
+        KernelBackend::Reference => binning::binning_f32(input, h, w),
+        KernelBackend::Optimized => fast::binning_f32_opt(input, h, w),
+    }
+}

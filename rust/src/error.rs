@@ -1,5 +1,6 @@
 //! Crate-wide error type.
 
+use crate::runtime::xla_shim as xla;
 use thiserror::Error;
 
 /// All failure modes surfaced by the library.

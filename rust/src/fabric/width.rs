@@ -10,6 +10,11 @@ use crate::error::{Error, Result};
 use crate::util::image::PixelFormat;
 
 /// 32-bit words -> pixels (CIF direction).
+///
+/// Bulk path: full words unpack through fixed-lane `chunks_exact` loops
+/// (no per-pixel length test, auto-vectorizable); only the final partial
+/// word runs the per-lane tail. Pinned to [`unpack_words_ref`] by
+/// `tests/kernel_equivalence.rs`.
 pub fn unpack_words(words: &[u32], format: PixelFormat, n_pixels: usize) -> Result<Vec<u32>> {
     let ppw = format.pixels_per_word();
     let needed = n_pixels.div_ceil(ppw);
@@ -20,7 +25,55 @@ pub fn unpack_words(words: &[u32], format: PixelFormat, n_pixels: usize) -> Resu
             words.len()
         )));
     }
+    let mut out = vec![0u32; n_pixels];
+    match format {
+        PixelFormat::Bpp8 => {
+            let full = n_pixels / 4;
+            for (px, &w) in out.chunks_exact_mut(4).zip(words) {
+                px[0] = w & 0xFF;
+                px[1] = (w >> 8) & 0xFF;
+                px[2] = (w >> 16) & 0xFF;
+                px[3] = w >> 24;
+            }
+            for (i, px) in out[full * 4..].iter_mut().enumerate() {
+                *px = (words[full] >> (8 * i)) & 0xFF;
+            }
+        }
+        PixelFormat::Bpp16 => {
+            let full = n_pixels / 2;
+            for (px, &w) in out.chunks_exact_mut(2).zip(words) {
+                px[0] = w & 0xFFFF;
+                px[1] = w >> 16;
+            }
+            if n_pixels % 2 == 1 {
+                out[n_pixels - 1] = words[full] & 0xFFFF;
+            }
+        }
+        PixelFormat::Bpp24 => {
+            for (px, &w) in out.iter_mut().zip(words) {
+                *px = w & 0x00FF_FFFF;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Reference twin of [`unpack_words`]: the FSM-faithful lane-by-lane
+/// loop (one pixel per FSM step, exactly as the HDL shifts them out).
+pub fn unpack_words_ref(words: &[u32], format: PixelFormat, n_pixels: usize) -> Result<Vec<u32>> {
+    let ppw = format.pixels_per_word();
+    let needed = n_pixels.div_ceil(ppw);
+    if words.len() < needed {
+        return Err(Error::Geometry(format!(
+            "{n_pixels} px at {}bpp need {needed} words, got {}",
+            format.bits(),
+            words.len()
+        )));
+    }
     let mut out = Vec::with_capacity(n_pixels);
+    if n_pixels == 0 {
+        return Ok(out);
+    }
     'outer: for &w in words {
         match format {
             PixelFormat::Bpp8 => {
@@ -52,7 +105,51 @@ pub fn unpack_words(words: &[u32], format: PixelFormat, n_pixels: usize) -> Resu
 
 /// Pixels -> 32-bit words (LCD direction). The final partial word is
 /// zero-padded in its unused lanes, as the HDL register would hold zeros.
+///
+/// Bulk path: full words assemble through fixed-lane `chunks_exact`
+/// loops; the partial tail (if any) is built separately. Pinned to
+/// [`pack_words_ref`] by `tests/kernel_equivalence.rs`.
 pub fn pack_words(pixels: &[u32], format: PixelFormat) -> Result<Vec<u32>> {
+    let max = format.max_value();
+    if let Some(&bad) = pixels.iter().find(|&&p| p > max) {
+        return Err(Error::Geometry(format!(
+            "pixel {bad:#x} exceeds {}bpp",
+            format.bits()
+        )));
+    }
+    let ppw = format.pixels_per_word();
+    let mut out = vec![0u32; pixels.len().div_ceil(ppw)];
+    match format {
+        PixelFormat::Bpp8 => {
+            for (w, px) in out.iter_mut().zip(pixels.chunks_exact(4)) {
+                *w = px[0] | (px[1] << 8) | (px[2] << 16) | (px[3] << 24);
+            }
+            let full = pixels.len() / 4;
+            if pixels.len() % 4 != 0 {
+                let mut tail = 0u32;
+                for (i, &p) in pixels[full * 4..].iter().enumerate() {
+                    tail |= p << (8 * i);
+                }
+                out[full] = tail;
+            }
+        }
+        PixelFormat::Bpp16 => {
+            for (w, px) in out.iter_mut().zip(pixels.chunks_exact(2)) {
+                *w = px[0] | (px[1] << 16);
+            }
+            if pixels.len() % 2 == 1 {
+                out[pixels.len() / 2] = pixels[pixels.len() - 1];
+            }
+        }
+        PixelFormat::Bpp24 => {
+            out.copy_from_slice(pixels);
+        }
+    }
+    Ok(out)
+}
+
+/// Reference twin of [`pack_words`]: the FSM-faithful per-lane loop.
+pub fn pack_words_ref(pixels: &[u32], format: PixelFormat) -> Result<Vec<u32>> {
     let max = format.max_value();
     if let Some(&bad) = pixels.iter().find(|&&p| p > max) {
         return Err(Error::Geometry(format!(

@@ -23,6 +23,63 @@ pub mod config;
 pub mod error;
 pub mod util;
 
+/// Which kernel tier executes the DSP/CNN hot paths.
+///
+/// The crate keeps **two implementations of every hot kernel**, mirroring
+/// the paper's LEON-vs-SHAVE split:
+///
+/// * [`KernelBackend::Reference`] — the scalar LEON-baseline code
+///   (`dsp::conv`, `dsp::binning`, `cnn::layers`). Simple, obviously
+///   correct, and the pinned groundtruth.
+/// * [`KernelBackend::Optimized`] — the SHAVE-style tier (`dsp::fast`,
+///   `cnn::fast`): interior/border split to remove per-tap bounds
+///   checks, contiguous inner loops that LLVM auto-vectorizes, and
+///   multi-core row fan-out via [`util::par`] (the software analogue of
+///   the 12-SHAVE band split).
+///
+/// `tests/kernel_equivalence.rs` pins `Optimized == Reference` on
+/// randomized inputs (exact for integer/CRC/width kernels, ≤1e-5
+/// relative for f32 conv/CNN).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelBackend {
+    /// Scalar LEON-baseline kernels — the pinned groundtruth.
+    Reference,
+    /// Interior/border-split, auto-vectorized, multi-core fan-out tier.
+    #[default]
+    Optimized,
+}
+
+impl KernelBackend {
+    /// Select from `SPACECODESIGN_BACKEND` (case-insensitive
+    /// `reference`/`ref` forces the scalar tier, `optimized`/`opt` the
+    /// fast tier), defaulting to [`KernelBackend::Optimized`]. An
+    /// unrecognized value warns on stderr rather than silently running
+    /// the wrong tier in a strict-pinning run.
+    pub fn from_env() -> KernelBackend {
+        match std::env::var("SPACECODESIGN_BACKEND") {
+            Ok(v) => match v.to_ascii_lowercase().as_str() {
+                "reference" | "ref" => KernelBackend::Reference,
+                "optimized" | "opt" => KernelBackend::Optimized,
+                other => {
+                    eprintln!(
+                        "warning: unrecognized SPACECODESIGN_BACKEND='{other}', \
+                         using the default (optimized)"
+                    );
+                    KernelBackend::Optimized
+                }
+            },
+            Err(_) => KernelBackend::Optimized,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Reference => "reference",
+            KernelBackend::Optimized => "optimized",
+        }
+    }
+}
+
 pub mod fabric;
 pub mod iface;
 pub mod vpu;

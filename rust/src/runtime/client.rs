@@ -7,6 +7,7 @@
 
 use crate::error::{Error, Result};
 use crate::runtime::artifact::Manifest;
+use crate::runtime::xla_shim as xla;
 use std::collections::HashMap;
 use std::path::Path;
 

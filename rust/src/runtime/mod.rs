@@ -8,6 +8,7 @@
 
 pub mod artifact;
 pub mod client;
+pub mod xla_shim;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
 pub use client::Runtime;

@@ -7,6 +7,7 @@
 
 pub mod image;
 pub mod json;
+pub mod par;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

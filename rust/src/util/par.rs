@@ -1,0 +1,130 @@
+//! Scoped-thread row fan-out — the software analogue of the paper's
+//! 12-SHAVE work split, where each SHAVE owns a contiguous band of image
+//! rows (§III-C: "the image is split into bands distributed to the
+//! SHAVEs").
+//!
+//! `std::thread::scope` lets the worker closures borrow the caller's
+//! input slices directly (no `Arc`, no allocation); each worker receives
+//! a disjoint `chunks_mut` band of the output, so the split is safe by
+//! construction. Small workloads run inline — a thread spawn costs more
+//! than a few thousand multiply-accumulates.
+
+use std::sync::OnceLock;
+
+/// Minimum scalar ops (multiply-accumulates, pixel reads, …) a worker
+/// band must amortize before [`par_row_bands`] callers should let it
+/// spawn a thread; shared by the dsp/cnn fast tiers so the grain is
+/// tuned in one place.
+pub const SPAWN_GRAIN_OPS: usize = 1 << 15;
+
+/// Worker cap: `min(12, available cores)` — 12 mirroring the Myriad2's
+/// SHAVE count — overridable via `SPACECODESIGN_WORKERS` (1 disables
+/// fan-out entirely).
+pub fn max_workers() -> usize {
+    static WORKERS: OnceLock<usize> = OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        if let Some(n) = std::env::var("SPACECODESIGN_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            return n.max(1);
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        cores.min(12)
+    })
+}
+
+/// Split `out` (`rows` rows of `row_len` elements) into contiguous row
+/// bands and run `body(first_row, band)` on each band, one scoped thread
+/// per band.
+///
+/// Runs inline (single call on the current thread) when fan-out is not
+/// worthwhile: one worker available, an empty output, or fewer than
+/// `min_rows` rows per would-be worker (`min_rows` is the caller's
+/// grain: the row count below which a band is cheaper than a spawn).
+pub fn par_row_bands<T, F>(out: &mut [T], rows: usize, row_len: usize, min_rows: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_len);
+    let workers = max_workers().min(rows / min_rows.max(1)).max(1);
+    if workers == 1 || rows == 0 || row_len == 0 {
+        body(0, out);
+        return;
+    }
+    let band_rows = rows.div_ceil(workers);
+    let chunk_len = band_rows * row_len;
+    std::thread::scope(|s| {
+        let body = &body;
+        for (i, band) in out.chunks_mut(chunk_len).enumerate() {
+            s.spawn(move || body(i * band_rows, band));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Fill each row with its global row index, in parallel, and check
+    /// the result matches a serial fill.
+    fn fill_and_check(rows: usize, row_len: usize, min_rows: usize) {
+        let mut out = vec![usize::MAX; rows * row_len];
+        par_row_bands(&mut out, rows, row_len, min_rows, |y0, band| {
+            for (r, row) in band.chunks_mut(row_len.max(1)).enumerate() {
+                for v in row.iter_mut() {
+                    *v = y0 + r;
+                }
+            }
+        });
+        for y in 0..rows {
+            for x in 0..row_len {
+                assert_eq!(out[y * row_len + x], y, "row {y} col {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_bands_cover_all_rows() {
+        fill_and_check(240, 17, 1); // forces the threaded path
+    }
+
+    #[test]
+    fn inline_path_small_workload() {
+        fill_and_check(3, 5, 64); // min_rows > rows -> inline
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        fill_and_check(0, 8, 1);
+        fill_and_check(1, 1, 1);
+        fill_and_check(13, 1, 1); // rows not divisible by workers
+    }
+
+    #[test]
+    fn worker_cap_respected() {
+        // >= 1 always; <= 12 unless SPACECODESIGN_WORKERS overrides.
+        assert!(max_workers() >= 1);
+        if std::env::var("SPACECODESIGN_WORKERS").is_err() {
+            assert!(max_workers() <= 12);
+        }
+    }
+
+    #[test]
+    fn bands_are_disjoint_and_complete() {
+        let counter = AtomicUsize::new(0);
+        let mut out = vec![0u8; 96 * 4];
+        par_row_bands(&mut out, 96, 4, 1, |_, band| {
+            counter.fetch_add(band.len(), Ordering::Relaxed);
+            for v in band.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 96 * 4);
+        assert!(out.iter().all(|&v| v == 1), "every element touched once");
+    }
+}
