@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over BENCH_hotpath.json (ISSUE 2).
+
+Compares the fresh bench run against the baseline artifact downloaded
+from the latest run on main, and fails (exit 1) if any row's optimized
+median regressed by more than --threshold (default 20%).
+
+Rules:
+  * Rows are matched by name; rows present on only one side are
+    reported but never fail the gate (new/renamed benches must be able
+    to land).
+  * Sub-millisecond rows additionally need an absolute regression of
+    --abs-floor seconds (default 0.5 ms) before failing — CI wallclock
+    noise on microsecond rows would otherwise flake the gate.
+  * A missing/unreadable baseline passes with a notice (first run on a
+    branch, expired artifact).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return None, str(e)
+    rows = {}
+    for row in doc.get("rows", []):
+        name, median = row.get("name"), row.get("median_s")
+        if isinstance(name, str) and isinstance(median, (int, float)) and median > 0:
+            rows[name] = float(median)
+    return rows, None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="BENCH_hotpath.json from main")
+    ap.add_argument("fresh", help="BENCH_hotpath.json from this run")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative regression that fails the gate (0.20 = +20%%)")
+    ap.add_argument("--abs-floor", type=float, default=0.0005,
+                    help="minimum absolute regression in seconds to fail")
+    args = ap.parse_args()
+
+    base, err = load_rows(args.baseline)
+    if base is None or not base:
+        print(f"no usable baseline ({err or 'no rows'}) — gate passes vacuously")
+        return 0
+    fresh, err = load_rows(args.fresh)
+    if fresh is None:
+        print(f"fresh bench results unreadable: {err}", file=sys.stderr)
+        return 1
+
+    if not fresh:
+        print("fresh bench results contain no rows — bench binary broke", file=sys.stderr)
+        return 1
+    gone = [n for n in base if n not in fresh]
+    if len(gone) * 2 > len(base):
+        print(f"{len(gone)}/{len(base)} baseline rows vanished from the fresh run "
+              f"({', '.join(sorted(gone)[:6])}…) — a bench section silently skipped?",
+              file=sys.stderr)
+        return 1
+
+    regressions = []
+    width = max(len(n) for n in sorted(set(base) | set(fresh)))
+    print(f"{'row':<{width}}  {'baseline':>12}  {'fresh':>12}  {'delta':>8}")
+    for name in sorted(set(base) | set(fresh)):
+        if name not in base:
+            print(f"{name:<{width}}  {'—':>12}  {fresh[name]:>12.6f}  {'new':>8}")
+            continue
+        if name not in fresh:
+            print(f"{name:<{width}}  {base[name]:>12.6f}  {'—':>12}  {'gone':>8}")
+            continue
+        b, f = base[name], fresh[name]
+        delta = (f - b) / b
+        # Sub-millisecond rows get the absolute-noise exemption; any
+        # row at millisecond scale fails on the relative threshold alone.
+        noise_exempt = b < 1e-3 and (f - b) <= args.abs_floor
+        flag = ""
+        if delta > args.threshold and not noise_exempt:
+            regressions.append((name, b, f, delta))
+            flag = "  <-- REGRESSION"
+        print(f"{name:<{width}}  {b:>12.6f}  {f:>12.6f}  {delta:>+7.1%}{flag}")
+
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed more than "
+              f"{args.threshold:.0%} (sub-ms rows exempt below "
+              f"{args.abs_floor*1e3:.1f} ms absolute):",
+              file=sys.stderr)
+        for name, b, f, delta in regressions:
+            print(f"  {name}: {b:.6f}s -> {f:.6f}s ({delta:+.1%})", file=sys.stderr)
+        return 1
+    print("\nno perf regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,10 +10,16 @@
 //! Machine-readable results land in `BENCH_hotpath.json` (one entry per
 //! row: name / median / p95 / mean / iters, plus `ref_median_s` and
 //! `speedup` for two-tier rows) so future PRs can track the perf
-//! trajectory.
+//! trajectory — CI compares this file against the previous run from
+//! `main` and fails on >20% regressions (`.github/scripts/compare_bench.py`).
 //!
-//! Run: `cargo bench --bench hotpath` (PJRT rows additionally need
-//! `make artifacts`).
+//! The `exec *` rows run through PJRT when `make artifacts` has been
+//! run and the `xla` bindings are linked, and through the native kernel
+//! engine otherwise (the `engine` field records which). The `stream
+//! conv3 N=*` rows measure the three-stage streaming pipeline's
+//! wallclock throughput on both kernel backends.
+//!
+//! Run: `cargo bench --bench hotpath`.
 
 use std::collections::BTreeMap;
 
@@ -21,6 +27,7 @@ use spacecodesign::cnn::layers::FeatureMap;
 use spacecodesign::cnn::weights::Weights;
 use spacecodesign::cnn::{cnn_forward, fast as cnn_fast};
 use spacecodesign::compress::{compress, Cube, Params};
+use spacecodesign::coordinator::{stream, Benchmark, CoProcessor, StreamOptions};
 use spacecodesign::dsp::{binning, conv, fast as dsp_fast};
 use spacecodesign::fabric::crc16::Crc16Xmodem;
 use spacecodesign::fabric::width;
@@ -36,11 +43,16 @@ use spacecodesign::KernelBackend;
 /// Accumulates rows for BENCH_hotpath.json.
 struct BenchLog {
     rows: Vec<Json>,
+    /// Which execution engine ran the `exec *` rows ("pjrt"/"native").
+    engine: String,
 }
 
 impl BenchLog {
     fn new() -> BenchLog {
-        BenchLog { rows: Vec::new() }
+        BenchLog {
+            rows: Vec::new(),
+            engine: "unavailable".into(),
+        }
     }
 
     fn entry(name: &str, s: &Summary) -> BTreeMap<String, Json> {
@@ -77,6 +89,7 @@ impl BenchLog {
             "backend_default".into(),
             Json::Str(KernelBackend::from_env().name().into()),
         );
+        top.insert("engine".into(), Json::Str(self.engine.clone()));
         top.insert("rows".into(), Json::Arr(self.rows.clone()));
         let doc = Json::Obj(top).to_string();
         match std::fs::write("BENCH_hotpath.json", &doc) {
@@ -209,42 +222,90 @@ fn main() {
         cube.samples() as f64 / s.median / 1e6
     );
 
-    // --- PJRT execution (the real numerics hot path) ---------------------
+    // --- Artifact execution (the real numerics hot path) -----------------
+    // PJRT when the bindings + artifacts are present, the native kernel
+    // engine otherwise (the "engine" field in the JSON says which ran).
     let Ok(mut rt) = Runtime::open_default() else {
-        eprintln!("(skipping PJRT benches: artifacts not built)");
+        eprintln!("(skipping execution benches: runtime failed to open)");
         log.flush();
         return;
     };
+    log.engine = rt.engine_name().into();
+    println!("\nexecution engine: {}", rt.engine_name());
     let x256: Vec<f32> = (0..256 * 256).map(|_| rng.next_f32()).collect();
     let s = bench(2, 10, || {
         std::hint::black_box(rt.execute("binning_256", &[&x256]).unwrap());
     });
-    log.push("pjrt binning_256", &s);
+    log.push("exec binning_256", &s);
 
     let x1m: Vec<f32> = (0..2048 * 2048).map(|_| rng.next_f32()).collect();
     let s = bench(1, 5, || {
         std::hint::black_box(rt.execute("binning_2048", &[&x1m]).unwrap());
     });
-    log.push("pjrt binning_2048", &s);
+    log.push("exec binning_2048", &s);
 
     let ximg: Vec<f32> = (0..1024 * 1024).map(|_| rng.next_f32()).collect();
     let k13: Vec<f32> = (0..169).map(|_| rng.next_f32() / 169.0).collect();
     let s = bench(1, 3, || {
         std::hint::black_box(rt.execute("conv_1024_k13", &[&ximg, &k13]).unwrap());
     });
-    log.push("pjrt conv_1024_k13", &s);
+    log.push("exec conv_1024_k13", &s);
 
     let pose6 = [0.1f32, -0.2, 0.0, 0.1, 0.0, 3.0];
     let s = bench(1, 3, || {
         std::hint::black_box(rt.execute("render_1024", &[&pose6]).unwrap());
     });
-    log.push("pjrt render_1024", &s);
+    log.push("exec render_1024", &s);
 
     let chipv: Vec<f32> = (0..128 * 128 * 3).map(|_| rng.next_f32()).collect();
     let s = bench(1, 5, || {
         std::hint::black_box(rt.execute("cnn_patch_b1", &[&chipv]).unwrap());
     });
-    log.push("pjrt cnn_patch_b1", &s);
+    log.push("exec cnn_patch_b1", &s);
+
+    // --- batched CNN execution: 64 serial b1 calls vs one b64 call -------
+    let per = 128 * 128 * 3;
+    let batchv: Vec<f32> = (0..64 * per).map(|_| rng.next_f32()).collect();
+    let serial = bench(1, 3, || {
+        for chunk in batchv.chunks_exact(per) {
+            std::hint::black_box(rt.execute("cnn_patch_b1", &[chunk]).unwrap());
+        }
+    });
+    let batched = bench(1, 3, || {
+        std::hint::black_box(rt.execute_batched("cnn_patch_b64", 64, &[&batchv]).unwrap());
+    });
+    log.push_pair("exec cnn_patch x64 (serial vs b64)", &serial, &batched);
+
+    // --- streaming pipeline throughput (frames/s, both backends) --------
+    match CoProcessor::with_defaults() {
+        Err(e) => eprintln!("(skipping stream benches: {e})"),
+        Ok(mut cp) => {
+            for n in [1usize, 8, 64] {
+                let opts = StreamOptions {
+                    bench: Benchmark::Conv { k: 3 },
+                    frames: n,
+                    seed: 42,
+                    depth: 1,
+                };
+                // 1 warmup + 3 samples: the median (middle sample) has
+                // to be stable enough for the CI perf gate.
+                let sweep = |cp: &mut CoProcessor, backend| {
+                    cp.backend = backend;
+                    bench(1, 3, || {
+                        std::hint::black_box(stream::run(cp, &opts).unwrap());
+                    })
+                };
+                let r = sweep(&mut cp, KernelBackend::Reference);
+                let o = sweep(&mut cp, KernelBackend::Optimized);
+                log.push_pair(&format!("stream conv3 N={n}"), &r, &o);
+                println!(
+                    "    ({:.1} ref / {:.1} opt frames/s wallclock)",
+                    n as f64 / r.median,
+                    n as f64 / o.median
+                );
+            }
+        }
+    }
 
     log.flush();
 }

@@ -63,12 +63,9 @@ fn main() {
             // proc_time used dynamic; reconstruct bands via cost model.
             // (render bands depend on pose; use proc_time as the dynamic
             // reference and compute static with the same band vector).
-            let mesh_dir = cp.runtime.manifest.dir.clone();
-            let spec = cp.runtime.manifest.get("render_1024").unwrap();
-            let mesh = spacecodesign::render::Mesh::load(
-                mesh_dir.join(spec.meta_str("mesh_file").unwrap()),
-            )
-            .unwrap();
+            let mesh =
+                spacecodesign::runtime::native::manifest_mesh(&cp.runtime.manifest)
+                    .expect("render mesh");
             let pose = spacecodesign::coordinator::host::render_pose(seed);
             let tris = spacecodesign::render::project_triangles(
                 &pose, &mesh, 1024, 1024, mesh.faces.len(),

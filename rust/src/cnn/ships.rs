@@ -130,6 +130,28 @@ pub fn ship_frame(grid: usize, patch: usize, seed: u64) -> (Vec<f32>, Vec<bool>)
     (frame, labels)
 }
 
+/// Copy patch `(gy, gx)` of an interleaved-RGB `side x side` frame into
+/// `chip` (which must be `patch x patch x 3`). This is the LEON
+/// splitter: the host groundtruth (`coordinator::host`) and the native
+/// artifact engine (`runtime::native`) both extract through this one
+/// function so their per-patch inputs are bit-identical.
+pub fn extract_chip_into(
+    frame: &[f32],
+    side: usize,
+    patch: usize,
+    gy: usize,
+    gx: usize,
+    chip: &mut FeatureMap,
+) {
+    debug_assert_eq!(chip.data.len(), patch * patch * 3);
+    debug_assert_eq!(frame.len(), side * side * 3);
+    for y in 0..patch {
+        let src = (((gy * patch + y) * side) + gx * patch) * 3;
+        let dst = y * patch * 3;
+        chip.data[dst..dst + patch * 3].copy_from_slice(&frame[src..src + patch * 3]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +202,17 @@ mod tests {
             ship_avg > sea_avg + 0.1,
             "ship {ship_avg} vs sea {sea_avg}"
         );
+    }
+
+    #[test]
+    fn extract_chip_inverts_frame_tiling() {
+        let (frame, _) = ship_frame(2, 64, 13);
+        let chips = ship_chips(4, 64, 13);
+        let mut got = FeatureMap::new(64, 64, 3);
+        for (i, chip) in chips.iter().enumerate() {
+            extract_chip_into(&frame, 128, 64, i / 2, i % 2, &mut got);
+            assert_eq!(got.data, chip.fm.data, "patch {i}");
+        }
     }
 
     #[test]

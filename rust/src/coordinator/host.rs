@@ -183,19 +183,16 @@ pub fn make_work_with(
                     planes[c].data[px] as f32 / 65535.0
                 })
                 .collect();
-            // Groundtruth: scalar CNN on each dequantized patch.
+            // Groundtruth: scalar CNN on each dequantized patch,
+            // extracted through the same splitter the native engine
+            // uses so both sides see bit-identical patch inputs.
+            let mut chip = crate::cnn::layers::FeatureMap::new(patch, patch, 3);
             let mut expected_labels = Vec::with_capacity(grid * grid);
             for gy in 0..grid {
                 for gx in 0..grid {
-                    let mut chip = crate::cnn::layers::FeatureMap::new(patch, patch, 3);
-                    for y in 0..patch {
-                        for x in 0..patch {
-                            for c in 0..3 {
-                                chip.data[(y * patch + x) * 3 + c] = dequant
-                                    [(((gy * patch + y) * side) + gx * patch + x) * 3 + c];
-                            }
-                        }
-                    }
+                    crate::cnn::ships::extract_chip_into(
+                        &dequant, side, patch, gy, gx, &mut chip,
+                    );
                     expected_labels
                         .push(crate::cnn::classify(backend, weights, &chip)? as u32);
                 }

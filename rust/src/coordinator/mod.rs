@@ -10,7 +10,11 @@
 //!   with real numerics through the PJRT runtime.
 //! * [`pipeline`] — the Masked-mode discrete-event pipeline simulation
 //!   (double-buffered, LEON0 = I/O, LEON1 = compute).
-//! * [`report`] — Table II / speedup / Fig. 5 formatting.
+//! * [`stream`] — the streaming multi-frame pipeline: the three frame
+//!   stages (CIF ingest, VPU execute, LCD egress) overlapped on worker
+//!   threads for sustained-traffic sweeps, with per-stage utilization
+//!   reported alongside the Masked DES prediction.
+//! * [`report`] — Table II / speedup / Fig. 5 / stream formatting.
 //! * [`comparators`] — the cited Zynq-7020 / Jetson Nano comparison
 //!   models of §IV.
 
@@ -19,8 +23,10 @@ pub mod comparators;
 pub mod host;
 pub mod pipeline;
 pub mod report;
+pub mod stream;
 pub mod system;
 
 pub use benchmarks::Benchmark;
 pub use pipeline::{simulate_masked, MaskedResult, MaskedTiming};
+pub use stream::{StreamOptions, StreamResult};
 pub use system::{CoProcessor, FrameRun};

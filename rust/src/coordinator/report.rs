@@ -76,14 +76,15 @@ pub fn speedup_row(run: &FrameRun) -> String {
     )
 }
 
-/// Validation summary line.
+/// Validation summary line (includes the real `Runtime::execute`
+/// wallclock of the frame, so runs show where host time actually went).
 pub fn validation_row(run: &FrameRun) -> String {
     let acc = run
         .accuracy
         .map(|a| format!(", accuracy {:.1}%", a * 100.0))
         .unwrap_or_default();
     format!(
-        "{:<22} crc={} validated={} ({} px, {} mismatches, max_err {}{})",
+        "{:<22} crc={} validated={} ({} px, {} mismatches, max_err {}{}) exec {}",
         run.bench.name(),
         if run.crc_ok { "ok" } else { "FAIL" },
         if run.validation.pass { "pass" } else { "FAIL" },
@@ -91,7 +92,46 @@ pub fn validation_row(run: &FrameRun) -> String {
         run.validation.mismatches,
         run.validation.max_err,
         acc,
+        crate::util::fmt_time(run.t_exec_wall.as_secs_f64()),
     )
+}
+
+/// Multi-line summary of a streaming sweep: measured pipeline numbers,
+/// per-stage utilization, and the Masked DES prediction side by side.
+pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
+    let valid = r
+        .runs
+        .iter()
+        .filter(|run| run.crc_ok && run.validation.pass)
+        .count();
+    let stage_names = ["CIF ingest ", "VPU execute", "LCD egress "];
+    let mut out = format!(
+        "-- stream {} x{} [{}] --\n\
+         wallclock {:.3}s  {:.2} frames/s  (exec {:.3}s over {} frames)\n\
+         sim: unmasked {:.1} FPS  masked-DES {:.1} FPS ({} frames)\n",
+        r.bench.name(),
+        r.frames,
+        r.backend.name(),
+        r.wall.as_secs_f64(),
+        r.wall_fps,
+        r.exec_wall.as_secs_f64(),
+        r.frames,
+        r.runs[0].throughput_fps,
+        r.masked.throughput_fps,
+        r.masked.frames,
+    );
+    for (i, name) in stage_names.iter().enumerate() {
+        out.push_str(&format!(
+            "  {name} busy {:>9}  util {:>5.1}%\n",
+            crate::util::fmt_time(r.stage_busy[i].as_secs_f64()),
+            r.stage_util[i] * 100.0,
+        ));
+    }
+    out.push_str(&format!(
+        "  validation {valid}/{} pass",
+        r.runs.len()
+    ));
+    out
 }
 
 #[cfg(test)]
@@ -118,6 +158,7 @@ mod tests {
             accuracy: None,
             power_w: 0.95,
             t_leon: SimTime::from_ms(280.0),
+            t_exec_wall: std::time::Duration::from_millis(3),
         }
     }
 
@@ -150,9 +191,47 @@ mod tests {
     }
 
     #[test]
-    fn validation_row_reports_pass() {
+    fn validation_row_reports_pass_and_exec_wallclock() {
         let row = validation_row(&dummy_run());
         assert!(row.contains("crc=ok"));
         assert!(row.contains("validated=pass"));
+        assert!(row.contains("exec 3"), "{row}");
+    }
+
+    #[test]
+    fn stream_summary_reports_stages_and_des() {
+        use crate::coordinator::stream::StreamResult;
+        use crate::coordinator::Benchmark;
+        use std::time::Duration;
+        let masked = MaskedResult {
+            first_latency: SimTime::from_ms(300.0),
+            avg_latency: SimTime::from_ms(336.0),
+            period: SimTime::from_ms(126.0),
+            throughput_fps: 7.9,
+            frames: 8,
+        };
+        let r = StreamResult {
+            bench: Benchmark::Conv { k: 3 },
+            backend: crate::KernelBackend::Optimized,
+            frames: 2,
+            wall: Duration::from_millis(100),
+            wall_fps: 20.0,
+            stage_busy: [
+                Duration::from_millis(60),
+                Duration::from_millis(30),
+                Duration::from_millis(10),
+            ],
+            stage_util: [0.6, 0.3, 0.1],
+            exec_wall: Duration::from_millis(25),
+            masked,
+            runs: vec![dummy_run(), dummy_run()],
+        };
+        let s = stream_summary(&r);
+        assert!(s.contains("CIF ingest"), "{s}");
+        assert!(s.contains("VPU execute"), "{s}");
+        assert!(s.contains("LCD egress"), "{s}");
+        assert!(s.contains("60.0%"), "{s}");
+        assert!(s.contains("masked-DES 7.9 FPS"), "{s}");
+        assert!(s.contains("validation 2/2 pass"), "{s}");
     }
 }

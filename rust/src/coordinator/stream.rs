@@ -1,0 +1,428 @@
+//! Streaming multi-frame pipeline — sustained traffic through the
+//! testbed, with the three stages of the paper's Masked mode running
+//! concurrently on real threads:
+//!
+//! * **CIF ingest** — host workload generation + groundtruth + the CIF
+//!   wire transfer of frame n+1,
+//! * **VPU execute** — artifact numerics (PJRT or native) + cost-model
+//!   timing of frame n,
+//! * **LCD egress** — output conversion, LCD wire transfer and host
+//!   validation of frame n-1.
+//!
+//! Stage hand-off uses `util::par::pipeline3` with bounded queues
+//! (depth 1 = the VPU's double-buffered DRAM slots). Alongside the
+//! wallclock numbers the result carries the Masked-mode DES prediction
+//! (`simulate_masked`) for the same frame count, so the measured
+//! pipeline can be compared against the paper's §IV timing model, plus
+//! per-stage busy time/utilization to show where the paper's "masking"
+//! headroom actually is.
+//!
+//! The single-frame Unmasked path (`CoProcessor::run_unmasked`) is
+//! built from the same three stage implementations run back-to-back, so
+//! streamed frames and one-shot frames are bit-identical per seed.
+
+use crate::config::{SystemConfig, VpuConfig};
+use crate::coordinator::benchmarks::Benchmark;
+use crate::coordinator::host::{self, WorkItem};
+use crate::coordinator::pipeline::{simulate_masked, MaskedResult, MaskedTiming};
+use crate::coordinator::system::{CoProcessor, FrameRun};
+use crate::error::{Error, Result};
+use crate::fabric::clock::SimTime;
+use crate::iface::{CifModule, LcdModule};
+use crate::render::Mesh;
+use crate::runtime::Runtime;
+use crate::util::image::Frame;
+use crate::util::par;
+use crate::vpu::cost::{workloads, CostModel, Workload};
+use crate::vpu::drivers::{CamGeneric, LcdDriver};
+use crate::vpu::power::PowerModel;
+use crate::vpu::scheduler;
+use crate::KernelBackend;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Configuration of one streaming sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOptions {
+    pub bench: Benchmark,
+    /// Frames in the sweep; frame i uses seed `seed + i`.
+    pub frames: usize,
+    pub seed: u64,
+    /// Bounded queue depth between adjacent stages (1 = strict double
+    /// buffering like the VPU's DRAM slots).
+    pub depth: usize,
+}
+
+impl StreamOptions {
+    pub fn new(bench: Benchmark, frames: usize) -> StreamOptions {
+        StreamOptions {
+            bench,
+            frames,
+            seed: 42,
+            depth: 1,
+        }
+    }
+}
+
+/// Outcome of a streaming sweep: per-frame results plus pipeline-level
+/// wallclock and utilization measurements.
+#[derive(Debug)]
+pub struct StreamResult {
+    pub bench: Benchmark,
+    pub backend: KernelBackend,
+    pub frames: usize,
+    /// Wallclock of the whole sweep (all stages overlapped).
+    pub wall: Duration,
+    /// Measured pipeline throughput, frames per wallclock second.
+    pub wall_fps: f64,
+    /// Busy wallclock per stage: [CIF ingest, VPU execute, LCD egress].
+    pub stage_busy: [Duration; 3],
+    /// stage_busy / wall — how saturated each stage was (the widest bar
+    /// is the pipeline bottleneck).
+    pub stage_util: [f64; 3],
+    /// Total wallclock inside `Runtime::execute` across the sweep.
+    pub exec_wall: Duration,
+    /// The Masked-mode DES prediction for the same per-frame timings
+    /// (simulated time, not wallclock; over `max(frames, 8)` frames).
+    pub masked: MaskedResult,
+    pub runs: Vec<FrameRun>,
+}
+
+impl StreamResult {
+    /// True when every frame passed CRC and groundtruth validation.
+    pub fn all_valid(&self) -> bool {
+        self.runs.iter().all(|r| r.crc_ok && r.validation.pass)
+    }
+}
+
+/// Stage 1 state: the host side + CIF input path.
+pub(crate) struct IngestStage {
+    pub(crate) cif: CifModule,
+    pub(crate) cam: CamGeneric,
+    pub(crate) mesh: Option<Mesh>,
+    pub(crate) weights: Option<crate::cnn::Weights>,
+}
+
+/// Stage 3 state: the LCD output path.
+pub(crate) struct EgressStage {
+    pub(crate) lcd: LcdModule,
+    pub(crate) lcd_drv: LcdDriver,
+}
+
+/// A frame after ingest: the work item plus its simulated-time costs.
+pub(crate) struct StreamJob {
+    pub(crate) item: WorkItem,
+    pub(crate) t_cif: SimTime,
+    pub(crate) t_proc: SimTime,
+    pub(crate) t_leon: SimTime,
+}
+
+/// A frame after VPU execution.
+pub(crate) struct ExecutedJob {
+    pub(crate) job: StreamJob,
+    pub(crate) outputs: Vec<Vec<f32>>,
+    /// Real wallclock spent inside `Runtime::execute` for this frame.
+    pub(crate) exec_wall: Duration,
+}
+
+/// Cost-model workload for a benchmark (render uses the real projected
+/// content of this seed's pose).
+pub(crate) fn workload_of(
+    mesh: Option<&Mesh>,
+    bench: Benchmark,
+    seed: u64,
+) -> Result<Workload> {
+    Ok(match bench {
+        Benchmark::Binning => workloads::binning_4mp(),
+        Benchmark::Conv { .. } => workloads::conv_1mp(),
+        Benchmark::CnnShip => workloads::cnn_1mp(),
+        Benchmark::Render => {
+            let mesh = mesh.ok_or_else(|| {
+                Error::Config("render mesh not loaded (run `make artifacts`)".into())
+            })?;
+            let out = bench.output();
+            let pose = host::render_pose(seed);
+            let tris = crate::render::project_triangles(
+                &pose,
+                mesh,
+                out.width,
+                out.height,
+                mesh.faces.len(),
+            );
+            let (n_bands, _) = bench.bands();
+            Workload {
+                out_elems: out.width * out.height,
+                in_elems: 6,
+                band_bbox_px: crate::render::camera::band_bbox_px(
+                    &tris, out.width, out.height, n_bands,
+                ),
+                n_tris: mesh.faces.len(),
+                patches: 0,
+            }
+        }
+    })
+}
+
+/// Scheduled SHAVE makespan of an already-priced workload.
+pub(crate) fn makespan_of(
+    cost: &CostModel,
+    vpu: &VpuConfig,
+    bench: Benchmark,
+    w: &Workload,
+) -> SimTime {
+    let (n_bands, dynamic) = bench.bands();
+    let bands = cost.band_cycles(bench.kind(), w, n_bands);
+    if dynamic {
+        scheduler::dynamic_makespan(&bands, vpu.n_shaves, vpu.shave_clock_hz)
+    } else {
+        scheduler::static_makespan(&bands, vpu.n_shaves, vpu.shave_clock_hz)
+    }
+}
+
+/// Scheduled SHAVE processing time for one frame.
+pub(crate) fn proc_time_of(
+    cost: &CostModel,
+    vpu: &VpuConfig,
+    mesh: Option<&Mesh>,
+    bench: Benchmark,
+    seed: u64,
+) -> Result<SimTime> {
+    let w = workload_of(mesh, bench, seed)?;
+    Ok(makespan_of(cost, vpu, bench, &w))
+}
+
+/// Masked-mode phase timings derived from an Unmasked frame.
+pub(crate) fn masked_timing_of(cfg: &SystemConfig, run: &FrameRun) -> MaskedTiming {
+    let copy_rate = cfg.vpu.dram_copy_mpx_per_s;
+    let in_px = run.bench.input().mpixels() * (1 << 20) as f64;
+    let out_px = run.bench.output().mpixels() * (1 << 20) as f64;
+    MaskedTiming {
+        t_cif: run.t_cif,
+        t_cifbuf: SimTime::from_secs(in_px / copy_rate),
+        t_proc: run.t_proc,
+        t_lcdbuf: SimTime::from_secs(out_px / copy_rate),
+        t_lcd: run.t_lcd,
+    }
+}
+
+impl IngestStage {
+    /// Generate frame `seed`, push it over CIF into the VPU, and price
+    /// its processing with the cost model.
+    pub(crate) fn run(
+        &mut self,
+        backend: KernelBackend,
+        cost: &CostModel,
+        vpu: &VpuConfig,
+        bench: Benchmark,
+        seed: u64,
+    ) -> Result<StreamJob> {
+        let item = host::make_work_with(
+            backend,
+            bench,
+            seed,
+            self.mesh.as_ref(),
+            self.weights.as_ref(),
+        )?;
+
+        // --- CIF: host -> FPGA -> VPU (per plane) --------------------
+        let mut t_cif = SimTime::ZERO;
+        let mut planes = 0usize;
+        for plane in &item.input_frames {
+            self.cif.regs.configure(plane.width, plane.height, plane.format);
+            let (wire, tx) = self.cif.send_frame(plane, SimTime::ZERO)?;
+            let (_got, _t_rx) = self.cam.receive(&wire, SimTime::ZERO)?;
+            t_cif += tx.wire_time;
+            planes += 1;
+        }
+        debug_assert_eq!(planes, bench.input().channels);
+
+        let w = workload_of(self.mesh.as_ref(), bench, seed)?;
+        let t_proc = makespan_of(cost, vpu, bench, &w);
+        let t_leon = cost.leon_time(bench.kind(), &w);
+        Ok(StreamJob {
+            item,
+            t_cif,
+            t_proc,
+            t_leon,
+        })
+    }
+}
+
+/// Stage 2: run the frame's artifact through the runtime.
+pub(crate) fn execute_job(rt: &mut Runtime, job: StreamJob) -> Result<ExecutedJob> {
+    let inputs: Vec<&[f32]> = job.item.pjrt_inputs.iter().map(|v| v.as_slice()).collect();
+    let wall0 = rt.exec_wallclock;
+    let outputs = rt.execute(&job.item.bench.artifact(), &inputs)?;
+    let exec_wall = rt.exec_wallclock.saturating_sub(wall0);
+    Ok(ExecutedJob {
+        job,
+        outputs,
+        exec_wall,
+    })
+}
+
+impl EgressStage {
+    /// Convert the artifact outputs to the LCD frame, push it back to
+    /// the host, and validate against the groundtruth.
+    pub(crate) fn run(&mut self, power: &PowerModel, ex: ExecutedJob) -> Result<FrameRun> {
+        let ExecutedJob {
+            job,
+            outputs,
+            exec_wall,
+        } = ex;
+        let bench = job.item.bench;
+        let out_io = bench.output();
+        let (out_frame, accuracy) = match bench {
+            Benchmark::Binning | Benchmark::Conv { .. } => (
+                Frame::from_f32_normalized(
+                    out_io.width,
+                    out_io.height,
+                    out_io.format,
+                    &outputs[0],
+                )?,
+                None,
+            ),
+            Benchmark::Render => {
+                let data = crate::render::raster::depth_to_u16(
+                    &outputs[0],
+                    host::RENDER_DEPTH_MAX,
+                );
+                (
+                    Frame::from_data(out_io.width, out_io.height, out_io.format, data)?,
+                    None,
+                )
+            }
+            Benchmark::CnnShip => {
+                let logits = &outputs[0]; // (64, 2)
+                let labels: Vec<u32> = logits
+                    .chunks_exact(2)
+                    .map(|l| (l[1] > l[0]) as u32)
+                    .collect();
+                let acc = labels
+                    .iter()
+                    .zip(&job.item.labels)
+                    .filter(|(&p, &t)| (p == 1) == t)
+                    .count() as f64
+                    / labels.len() as f64;
+                (
+                    Frame::from_data(out_io.width, out_io.height, out_io.format, labels)?,
+                    Some(acc),
+                )
+            }
+        };
+
+        // --- LCD: VPU -> FPGA -> host --------------------------------
+        self.lcd
+            .regs
+            .configure(out_frame.width, out_frame.height, out_frame.format);
+        let (wire_back, _t_tx) = self.lcd_drv.send(&out_frame, SimTime::ZERO);
+        let (received, rx) = self.lcd.receive_frame(&wire_back, SimTime::ZERO)?;
+        let t_lcd = rx.wire_time;
+
+        // --- Host validation -----------------------------------------
+        let validation = host::validate(&job.item, &received)?;
+        let latency = job.t_cif + job.t_proc + t_lcd;
+
+        Ok(FrameRun {
+            bench,
+            t_cif: job.t_cif,
+            t_proc: job.t_proc,
+            t_lcd,
+            latency,
+            throughput_fps: 1.0 / latency.as_secs(),
+            crc_ok: rx.crc_ok,
+            validation,
+            accuracy,
+            power_w: power.shave_power(bench.kind()),
+            t_leon: job.t_leon,
+            t_exec_wall: exec_wall,
+        })
+    }
+}
+
+/// Run a streaming multi-frame sweep with the three stages overlapped.
+pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
+    if opts.frames == 0 {
+        return Err(Error::Config("stream needs at least one frame".into()));
+    }
+    cp.runtime.set_kernel_backend(cp.backend);
+    let backend = cp.backend;
+    let bench = opts.bench;
+    let n = opts.frames;
+    let CoProcessor {
+        cfg,
+        runtime,
+        cost,
+        power,
+        ingest,
+        egress,
+        ..
+    } = cp;
+    let cfg: &SystemConfig = cfg;
+    let cost: &CostModel = cost;
+    let power: &PowerModel = power;
+
+    // Per-stage busy wallclock, accumulated from inside each stage's
+    // thread (nanoseconds; the pipeline overlaps them).
+    let busy = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+    let timed = |slot: &AtomicU64, t0: Instant| {
+        slot.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    };
+
+    let t_start = Instant::now();
+    let results: Vec<Result<FrameRun>> = par::pipeline3(
+        n,
+        opts.depth,
+        |i| {
+            let t0 = Instant::now();
+            let job = ingest.run(backend, cost, &cfg.vpu, bench, opts.seed.wrapping_add(i as u64));
+            timed(&busy[0], t0);
+            job
+        },
+        |_, job: Result<StreamJob>| {
+            let job = job?;
+            let t0 = Instant::now();
+            let ex = execute_job(runtime, job);
+            timed(&busy[1], t0);
+            ex
+        },
+        |_, ex: Result<ExecutedJob>| {
+            let ex = ex?;
+            let t0 = Instant::now();
+            let run = egress.run(power, ex);
+            timed(&busy[2], t0);
+            run
+        },
+    );
+    let wall = t_start.elapsed();
+
+    let mut runs = Vec::with_capacity(n);
+    for r in results {
+        runs.push(r?);
+    }
+    let masked = simulate_masked(&masked_timing_of(cfg, &runs[0]), n.max(8));
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    let stage_busy = [
+        Duration::from_nanos(busy[0].load(Ordering::Relaxed)),
+        Duration::from_nanos(busy[1].load(Ordering::Relaxed)),
+        Duration::from_nanos(busy[2].load(Ordering::Relaxed)),
+    ];
+    let stage_util = [
+        stage_busy[0].as_secs_f64() / wall_s,
+        stage_busy[1].as_secs_f64() / wall_s,
+        stage_busy[2].as_secs_f64() / wall_s,
+    ];
+    let exec_wall = runs.iter().map(|r| r.t_exec_wall).sum();
+    Ok(StreamResult {
+        bench,
+        backend,
+        frames: n,
+        wall,
+        wall_fps: n as f64 / wall_s,
+        stage_busy,
+        stage_util,
+        exec_wall,
+        masked,
+        runs,
+    })
+}

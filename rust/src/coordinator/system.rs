@@ -1,22 +1,26 @@
 //! The assembled testbed: Host PC <-> FPGA (CIF/LCD) <-> VPU, with real
-//! numerics through the PJRT runtime and simulated time through the
+//! numerics through the artifact runtime and simulated time through the
 //! fabric/VPU models.
+//!
+//! The frame path is built from the three stage implementations in
+//! `coordinator::stream` (CIF ingest, VPU execute, LCD egress):
+//! [`CoProcessor::run_unmasked`] runs them back-to-back for one frame;
+//! `stream::run` overlaps them on worker threads for sustained
+//! multi-frame sweeps.
 
 use crate::config::SystemConfig;
 use crate::coordinator::benchmarks::Benchmark;
-use crate::coordinator::host::{self, Validation};
+use crate::coordinator::host::Validation;
 use crate::coordinator::pipeline::{simulate_masked, MaskedResult, MaskedTiming};
-use crate::error::{Error, Result};
+use crate::coordinator::stream::{self, EgressStage, IngestStage};
+use crate::error::Result;
 use crate::fabric::bus::{Bus, BusConfig};
 use crate::fabric::clock::SimTime;
 use crate::iface::{CifModule, LcdModule};
-use crate::render::Mesh;
-use crate::runtime::Runtime;
-use crate::util::image::Frame;
-use crate::vpu::cost::{CostModel, Workload};
+use crate::runtime::{native, Runtime};
+use crate::vpu::cost::CostModel;
 use crate::vpu::drivers::{CamGeneric, LcdDriver};
 use crate::vpu::power::PowerModel;
-use crate::vpu::scheduler;
 use crate::KernelBackend;
 
 /// Result of one Unmasked frame through the full stack.
@@ -40,6 +44,9 @@ pub struct FrameRun {
     pub power_w: f64,
     /// LEON-baseline processing time (for the speedup table).
     pub t_leon: SimTime,
+    /// Real wallclock spent inside `Runtime::execute` for this frame
+    /// (host-machine profiling, distinct from the simulated `t_proc`).
+    pub t_exec_wall: std::time::Duration,
 }
 
 impl FrameRun {
@@ -56,19 +63,17 @@ impl FrameRun {
 /// The co-processor testbed.
 pub struct CoProcessor {
     pub cfg: SystemConfig,
-    /// Kernel tier for the host-side groundtruth path (defaults to
+    /// Kernel tier for the host-side groundtruth path — and, on the
+    /// native execution engine, for the artifact numerics too (the two
+    /// are kept in sync so validation is exact). Defaults to
     /// `Optimized`; `SPACECODESIGN_BACKEND=reference` forces the scalar
-    /// tier for strict groundtruth pinning).
+    /// tier for strict groundtruth pinning.
     pub backend: KernelBackend,
     pub runtime: Runtime,
     pub cost: CostModel,
     pub power: PowerModel,
-    cif: CifModule,
-    lcd: LcdModule,
-    cam: CamGeneric,
-    lcd_drv: LcdDriver,
-    mesh_full: Option<Mesh>,
-    weights: Option<crate::cnn::Weights>,
+    pub(crate) ingest: IngestStage,
+    pub(crate) egress: EgressStage,
 }
 
 impl CoProcessor {
@@ -81,17 +86,18 @@ impl CoProcessor {
         let lcd_drv =
             LcdDriver::new(cfg.lcd.pixel_clock_hz, cfg.lcd.porch_cycles_per_line);
 
-        // Load the render mesh + CNN weights if their artifacts exist.
-        let mesh_full = runtime
-            .manifest
-            .get("render_1024")
-            .ok()
-            .and_then(|spec| spec.meta_str("mesh_file").map(String::from))
-            .and_then(|f| Mesh::load(runtime.manifest.dir.join(f)).ok());
-        let weights = crate::cnn::Weights::load(
-            runtime.manifest.dir.join("cnn_weights.bin"),
-        )
-        .ok();
+        // Render mesh + CNN weights for the host groundtruth path:
+        // clone the native engine's already-resolved copies so both
+        // sides are guaranteed identical without re-reading the files;
+        // under PJRT (no native engine) resolve from the manifest.
+        let mesh = runtime
+            .native_mesh()
+            .cloned()
+            .or_else(|| native::manifest_mesh(&runtime.manifest));
+        let weights = runtime
+            .native_weights()
+            .cloned()
+            .or_else(|| native::manifest_weights(&runtime.manifest));
 
         Ok(CoProcessor {
             backend: KernelBackend::from_env(),
@@ -99,12 +105,13 @@ impl CoProcessor {
             power: PowerModel::default(),
             cfg,
             runtime,
-            cif,
-            lcd,
-            cam,
-            lcd_drv,
-            mesh_full,
-            weights,
+            ingest: IngestStage {
+                cif,
+                cam,
+                mesh,
+                weights,
+            },
+            egress: EgressStage { lcd, lcd_drv },
         })
     }
 
@@ -112,171 +119,38 @@ impl CoProcessor {
         CoProcessor::new(SystemConfig::paper())
     }
 
-    /// Build the cost-model workload for a benchmark (render uses the
-    /// real projected content of this seed's pose).
-    fn workload(&self, bench: Benchmark, seed: u64) -> Result<Workload> {
-        use crate::vpu::cost::workloads;
-        Ok(match bench {
-            Benchmark::Binning => workloads::binning_4mp(),
-            Benchmark::Conv { .. } => workloads::conv_1mp(),
-            Benchmark::CnnShip => workloads::cnn_1mp(),
-            Benchmark::Render => {
-                let mesh = self.mesh_full.as_ref().ok_or_else(|| {
-                    Error::Config("render mesh not loaded (run `make artifacts`)".into())
-                })?;
-                let out = bench.output();
-                let pose = host::render_pose(seed);
-                let tris = crate::render::project_triangles(
-                    &pose,
-                    mesh,
-                    out.width,
-                    out.height,
-                    mesh.faces.len(),
-                );
-                let (n_bands, _) = bench.bands();
-                Workload {
-                    out_elems: out.width * out.height,
-                    in_elems: 6,
-                    band_bbox_px: crate::render::camera::band_bbox_px(
-                        &tris, out.width, out.height, n_bands,
-                    ),
-                    n_tris: mesh.faces.len(),
-                    patches: 0,
-                }
-            }
-        })
-    }
-
     /// Scheduled SHAVE processing time for one frame.
     pub fn proc_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
-        let w = self.workload(bench, seed)?;
-        let (n_bands, dynamic) = bench.bands();
-        let bands = self.cost.band_cycles(bench.kind(), &w, n_bands);
-        let f = self.cfg.vpu.shave_clock_hz;
-        let n = self.cfg.vpu.n_shaves;
-        Ok(if dynamic {
-            scheduler::dynamic_makespan(&bands, n, f)
-        } else {
-            scheduler::static_makespan(&bands, n, f)
-        })
+        stream::proc_time_of(
+            &self.cost,
+            &self.cfg.vpu,
+            self.ingest.mesh.as_ref(),
+            bench,
+            seed,
+        )
     }
 
     /// LEON baseline time for the speedup comparison.
     pub fn leon_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
-        let w = self.workload(bench, seed)?;
+        let w = stream::workload_of(self.ingest.mesh.as_ref(), bench, seed)?;
         Ok(self.cost.leon_time(bench.kind(), &w))
     }
 
     /// Run one frame in Unmasked mode: real data through CIF, real
-    /// numerics through PJRT, real data back through LCD, validated.
+    /// numerics through the runtime, real data back through LCD,
+    /// validated — the three stream stages run back-to-back.
     pub fn run_unmasked(&mut self, bench: Benchmark, seed: u64) -> Result<FrameRun> {
-        let item = host::make_work_with(
-            self.backend,
-            bench,
-            seed,
-            self.mesh_full.as_ref(),
-            self.weights.as_ref(),
-        )?;
-
-        // --- CIF: host -> FPGA -> VPU (per plane) --------------------
-        let in_io = bench.input();
-        let mut t_cif = SimTime::ZERO;
-        let mut vpu_frames = Vec::new();
-        for plane in &item.input_frames {
-            self.cif.regs.configure(plane.width, plane.height, plane.format);
-            let (wire, tx) = self.cif.send_frame(plane, SimTime::ZERO)?;
-            let (got, _t_rx) = self.cam.receive(&wire, SimTime::ZERO)?;
-            t_cif += tx.wire_time;
-            vpu_frames.push(got);
-        }
-        debug_assert_eq!(vpu_frames.len(), in_io.channels);
-
-        // --- VPU processing: numerics (PJRT) + time (cost model) -----
-        let inputs: Vec<&[f32]> = item.pjrt_inputs.iter().map(|v| v.as_slice()).collect();
-        let outputs = self.runtime.execute(&bench.artifact(), &inputs)?;
-        let t_proc = self.proc_time(bench, seed)?;
-        let t_leon = self.leon_time(bench, seed)?;
-
-        // --- Convert the artifact output to the LCD frame ------------
-        let out_io = bench.output();
-        let (out_frame, accuracy) = match bench {
-            Benchmark::Binning | Benchmark::Conv { .. } => (
-                Frame::from_f32_normalized(
-                    out_io.width,
-                    out_io.height,
-                    out_io.format,
-                    &outputs[0],
-                )?,
-                None,
-            ),
-            Benchmark::Render => {
-                let data = crate::render::raster::depth_to_u16(
-                    &outputs[0],
-                    host::RENDER_DEPTH_MAX,
-                );
-                (
-                    Frame::from_data(out_io.width, out_io.height, out_io.format, data)?,
-                    None,
-                )
-            }
-            Benchmark::CnnShip => {
-                let logits = &outputs[0]; // (64, 2)
-                let labels: Vec<u32> = logits
-                    .chunks_exact(2)
-                    .map(|l| (l[1] > l[0]) as u32)
-                    .collect();
-                let acc = labels
-                    .iter()
-                    .zip(&item.labels)
-                    .filter(|(&p, &t)| (p == 1) == t)
-                    .count() as f64
-                    / labels.len() as f64;
-                (
-                    Frame::from_data(out_io.width, out_io.height, out_io.format, labels)?,
-                    Some(acc),
-                )
-            }
-        };
-
-        // --- LCD: VPU -> FPGA -> host ---------------------------------
-        self.lcd
-            .regs
-            .configure(out_frame.width, out_frame.height, out_frame.format);
-        let (wire_back, _t_tx) = self.lcd_drv.send(&out_frame, SimTime::ZERO);
-        let (received, rx) = self.lcd.receive_frame(&wire_back, SimTime::ZERO)?;
-        let t_lcd = rx.wire_time;
-
-        // --- Host validation ------------------------------------------
-        let validation = host::validate(&item, &received)?;
-        let latency = t_cif + t_proc + t_lcd;
-
-        Ok(FrameRun {
-            bench,
-            t_cif,
-            t_proc,
-            t_lcd,
-            latency,
-            throughput_fps: 1.0 / latency.as_secs(),
-            crc_ok: rx.crc_ok,
-            validation,
-            accuracy,
-            power_w: self.power.shave_power(bench.kind()),
-            t_leon,
-        })
+        self.runtime.set_kernel_backend(self.backend);
+        let job = self
+            .ingest
+            .run(self.backend, &self.cost, &self.cfg.vpu, bench, seed)?;
+        let ex = stream::execute_job(&mut self.runtime, job)?;
+        self.egress.run(&self.power, ex)
     }
 
     /// Masked-mode phase timings derived from an Unmasked run.
     pub fn masked_timing(&self, run: &FrameRun) -> MaskedTiming {
-        let copy_rate = self.cfg.vpu.dram_copy_mpx_per_s;
-        let in_px = run.bench.input().mpixels() * (1 << 20) as f64;
-        let out_px = run.bench.output().mpixels() * (1 << 20) as f64;
-        MaskedTiming {
-            t_cif: run.t_cif,
-            t_cifbuf: SimTime::from_secs(in_px / copy_rate),
-            t_proc: run.t_proc,
-            t_lcdbuf: SimTime::from_secs(out_px / copy_rate),
-            t_lcd: run.t_lcd,
-        }
+        stream::masked_timing_of(&self.cfg, run)
     }
 
     /// Run Unmasked once (real data) + Masked DES over `n_frames`.

@@ -19,11 +19,11 @@
 
 use spacecodesign::compress::{self, Cube};
 use spacecodesign::coordinator::comparators;
-use spacecodesign::coordinator::{report, Benchmark, CoProcessor};
+use spacecodesign::coordinator::{report, stream, Benchmark, CoProcessor, StreamOptions};
 use spacecodesign::fpga::{designs, Device};
 use spacecodesign::iface::loopback;
 use spacecodesign::util::rng::Rng;
-use spacecodesign::Result;
+use spacecodesign::{KernelBackend, Result};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -35,6 +35,7 @@ fn main() {
         "fig5" => fig5(seed(&args)),
         "loopback" => run_loopback(),
         "run" => run_one(&args),
+        "stream" => run_stream(&args),
         "compress" => run_compress(&args),
         "report" => report_all(seed(&args)),
         "help" | "--help" | "-h" => {
@@ -64,6 +65,9 @@ COMMANDS:
   fig5       power consumption + FPS/W comparisons (paper Fig. 5)
   loopback   CIF/LCD interface feasibility sweep (paper §IV)
   run        one benchmark end-to-end: --bench binning|conv3|conv7|conv13|render|cnn
+  stream     N-frame streaming pipeline sweep on both kernel backends:
+             [--bench NAME] [--frames N] [--depth D] — reports per-stage
+             (CIF/VPU/LCD) utilization vs the Masked DES prediction
   compress   CCSDS-123 compression demo: [--bands Z] [--rows Y] [--cols X]
   report     all of the above
 ";
@@ -248,6 +252,33 @@ fn run_one(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn run_stream(args: &[String]) -> Result<()> {
+    let name = flag_str(args, "--bench").unwrap_or("conv3");
+    let Some(bench) = parse_bench(name) else {
+        eprintln!("unknown benchmark '{name}'");
+        std::process::exit(2);
+    };
+    let frames = flag_usize(args, "--frames").unwrap_or(8);
+    let depth = flag_usize(args, "--depth").unwrap_or(1);
+    println!(
+        "== Streaming frame pipeline: {} x{frames} frames (depth {depth}) ==",
+        bench.name()
+    );
+    let mut cp = CoProcessor::with_defaults()?;
+    let opts = StreamOptions {
+        bench,
+        frames,
+        seed: seed(args),
+        depth,
+    };
+    for backend in [KernelBackend::Reference, KernelBackend::Optimized] {
+        cp.backend = backend;
+        let r = stream::run(&mut cp, &opts)?;
+        println!("{}", report::stream_summary(&r));
+    }
+    Ok(())
+}
+
 fn run_compress(args: &[String]) -> Result<()> {
     let bands = flag_usize(args, "--bands").unwrap_or(32);
     let rows = flag_usize(args, "--rows").unwrap_or(64);
@@ -295,6 +326,8 @@ fn report_all(seed: u64) -> Result<()> {
     fig5(seed)?;
     println!();
     run_loopback()?;
+    println!();
+    run_stream(&["--seed".into(), seed.to_string()])?;
     println!();
     run_compress(&[])
 }

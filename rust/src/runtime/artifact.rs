@@ -46,6 +46,9 @@ impl ArtifactSpec {
 pub struct Manifest {
     pub dir: PathBuf,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// True when this is the synthesized [`Manifest::builtin`] spec set
+    /// (no `manifest.json` on disk) rather than an aot.py product.
+    pub builtin: bool,
 }
 
 fn parse_tensor(v: &Json, path: &str) -> Result<TensorSpec> {
@@ -139,7 +142,77 @@ impl Manifest {
         Ok(Manifest {
             dir: dir.to_path_buf(),
             artifacts,
+            builtin: false,
         })
+    }
+
+    /// Synthesize the known artifact spec set without a `manifest.json`.
+    ///
+    /// The shapes mirror exactly what `python/compile/aot.py` emits for
+    /// the paper's six Table II rows, plus the batched `cnn_patch_b64`
+    /// variant (64 patches per CNN frame, paper §III-C). There are no
+    /// HLO files behind these specs — they are executable only through
+    /// the native kernel engine (`runtime::native`), which is also the
+    /// fallback when the PJRT client itself is unavailable.
+    pub fn builtin(dir: &Path) -> Manifest {
+        fn tensor(shape: &[usize]) -> TensorSpec {
+            TensorSpec {
+                shape: shape.to_vec(),
+                dtype: "f32".into(),
+            }
+        }
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: &str,
+                       inputs: &[&[usize]],
+                       outputs: &[&[usize]],
+                       meta: &[(&str, Json)]| {
+            artifacts.insert(
+                name.to_string(),
+                ArtifactSpec {
+                    name: name.to_string(),
+                    file: format!("{name}.hlo.txt"),
+                    inputs: inputs.iter().map(|s| tensor(s)).collect(),
+                    outputs: outputs.iter().map(|s| tensor(s)).collect(),
+                    meta: meta
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), v.clone()))
+                        .collect(),
+                },
+            );
+        };
+        add("binning_256", &[&[256, 256]], &[&[128, 128]], &[]);
+        add("binning_2048", &[&[2048, 2048]], &[&[1024, 1024]], &[]);
+        add("conv_128_k3", &[&[128, 128], &[3, 3]], &[&[128, 128]], &[]);
+        for k in [3usize, 5, 7, 9, 11, 13] {
+            add(
+                &format!("conv_1024_k{k}"),
+                &[&[1024, 1024], &[k, k]],
+                &[&[1024, 1024]],
+                &[],
+            );
+        }
+        let render_meta = [
+            ("builtin_mesh", Json::Str("octahedron".into())),
+            ("n_tris", Json::Num(8.0)),
+        ];
+        add("render_128", &[&[6]], &[&[128, 128]], &render_meta);
+        add("render_1024", &[&[6]], &[&[1024, 1024]], &render_meta);
+        add("cnn_patch_b1", &[&[128, 128, 3]], &[&[2]], &[]);
+        add(
+            "cnn_patch_b64",
+            &[&[64, 128, 128, 3]],
+            &[&[64, 2]],
+            &[
+                ("batch", Json::Num(64.0)),
+                ("scalar_artifact", Json::Str("cnn_patch_b1".into())),
+            ],
+        );
+        add("cnn_frame_1024", &[&[1024, 1024, 3]], &[&[64, 2]], &[]);
+        Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            builtin: true,
+        }
     }
 
     pub fn load(dir: &Path) -> Result<Manifest> {
@@ -206,6 +279,29 @@ mod tests {
     fn rejects_non_f32() {
         let bad = SAMPLE.replace("\"f32\"", "\"f64\"");
         assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_covers_table2_and_batch() {
+        let m = Manifest::builtin(Path::new("/tmp/none"));
+        assert!(m.builtin);
+        for name in [
+            "binning_2048",
+            "conv_1024_k3",
+            "conv_1024_k13",
+            "render_1024",
+            "cnn_frame_1024",
+            "cnn_patch_b1",
+            "cnn_patch_b64",
+        ] {
+            assert!(m.get(name).is_ok(), "{name} missing from builtin set");
+        }
+        let b64 = m.get("cnn_patch_b64").unwrap();
+        assert_eq!(b64.meta_usize("batch"), Some(64));
+        assert_eq!(b64.inputs[0].numel(), 64 * 128 * 128 * 3);
+        assert_eq!(b64.outputs[0].numel(), 64 * 2);
+        // Parsed manifests are never marked builtin.
+        assert!(!Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap().builtin);
     }
 
     #[test]

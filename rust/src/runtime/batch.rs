@@ -1,0 +1,87 @@
+//! Batched, allocation-reusing execution planning.
+//!
+//! [`ExecutionPlan`] is the per-[`Runtime`](crate::runtime::Runtime)
+//! cache that makes repeated executes allocation-free on the input
+//! side: instead of building a fresh `Literal::vec1` per call (the seed
+//! behaviour), the plan keeps one literal set per artifact and refills
+//! it in place with `Literal::copy_from` (mirrored in
+//! `runtime::xla_shim`). The ROADMAP names this — together with the
+//! batched `cnn_patch_bN` artifact — as the next PJRT-side hot-path
+//! tier after PR 1's kernel work.
+//!
+//! [`scalar_twin`] supports the graceful path for manifests that
+//! predate the batched artifacts: `Runtime::execute_batched` falls back
+//! to slicing the batch and running the `_b1` artifact per item, so
+//! callers get identical results either way (pinned bit-for-bit by
+//! `tests/kernel_equivalence.rs`).
+
+use crate::error::Result;
+use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::xla_shim as xla;
+use std::collections::HashMap;
+
+/// Per-artifact input literal cache, reused across execute calls.
+#[derive(Default)]
+pub struct ExecutionPlan {
+    literals: HashMap<String, Vec<xla::Literal>>,
+}
+
+impl ExecutionPlan {
+    pub fn new() -> ExecutionPlan {
+        ExecutionPlan::default()
+    }
+
+    /// The input literals for `spec`, created on first use and refilled
+    /// in place on every later call. Callers must have validated input
+    /// arity and lengths against the spec already.
+    pub fn input_literals(
+        &mut self,
+        spec: &ArtifactSpec,
+        inputs: &[&[f32]],
+    ) -> Result<&[xla::Literal]> {
+        if let Some(lits) = self.literals.get_mut(&spec.name) {
+            for (lit, data) in lits.iter_mut().zip(inputs) {
+                lit.copy_from(data)?;
+            }
+        } else {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, tspec) in inputs.iter().zip(&spec.inputs) {
+                let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+                lits.push(xla::Literal::vec1(data).reshape(&dims)?);
+            }
+            self.literals.insert(spec.name.clone(), lits);
+        }
+        Ok(&self.literals[&spec.name])
+    }
+
+    /// Number of artifacts with a cached literal set.
+    pub fn cached_artifacts(&self) -> usize {
+        self.literals.len()
+    }
+}
+
+/// Name of the single-item artifact behind a batched one:
+/// `cnn_patch_b64` with batch 64 → `cnn_patch_b1`. `None` when `name`
+/// does not carry the `_b{batch}` suffix convention.
+pub fn scalar_twin(name: &str, batch: usize) -> Option<String> {
+    name.strip_suffix(&format!("_b{batch}"))
+        .map(|stem| format!("{stem}_b1"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_twin_follows_suffix_convention() {
+        assert_eq!(scalar_twin("cnn_patch_b64", 64).as_deref(), Some("cnn_patch_b1"));
+        assert_eq!(scalar_twin("cnn_patch_b8", 8).as_deref(), Some("cnn_patch_b1"));
+        assert_eq!(scalar_twin("cnn_patch_b64", 32), None);
+        assert_eq!(scalar_twin("binning_2048", 64), None);
+    }
+
+    #[test]
+    fn plan_starts_empty() {
+        assert_eq!(ExecutionPlan::new().cached_artifacts(), 0);
+    }
+}

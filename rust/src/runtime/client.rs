@@ -1,35 +1,83 @@
-//! PJRT execution wrapper around the `xla` crate.
+//! Execution wrapper around the artifact set: PJRT when the `xla`
+//! bindings are available, the native kernel engine otherwise.
 //!
-//! Pattern follows /opt/xla-example/load_hlo.rs: HLO **text** ->
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `PjRtClient::compile` -> `execute`. Executables are compiled lazily
-//! and cached per artifact name; compilation happens once per process.
+//! The PJRT pattern follows /opt/xla-example/load_hlo.rs: HLO **text**
+//! -> `HloModuleProto::from_text_file` -> `XlaComputation::from_proto`
+//! -> `PjRtClient::compile` -> `execute`. Executables are compiled
+//! lazily and cached per artifact name; input literals are cached and
+//! refilled in place per artifact (`runtime::batch::ExecutionPlan`), so
+//! steady-state executes allocate nothing on the input side.
+//!
+//! When the PJRT client cannot open (the offline `xla_shim` build) the
+//! runtime degrades to `runtime::native` — same artifact names, same
+//! call sites, numerics from the crate's own tiered kernels. When even
+//! `manifest.json` is absent the manifest degrades to the synthesized
+//! builtin spec set, so the full coordinator stack stays runnable.
 
 use crate::error::{Error, Result};
-use crate::runtime::artifact::Manifest;
+use crate::runtime::artifact::{ArtifactSpec, Manifest};
+use crate::runtime::batch::{self, ExecutionPlan};
+use crate::runtime::native::NativeEngine;
 use crate::runtime::xla_shim as xla;
+use crate::KernelBackend;
 use std::collections::HashMap;
 use std::path::Path;
 
-/// The CPU PJRT runtime with a compiled-executable cache.
+/// The execution backend behind [`Runtime`].
+enum Engine {
+    Pjrt {
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    },
+    Native(Box<NativeEngine>),
+}
+
+/// The artifact runtime with compiled-executable and input-buffer caches.
 pub struct Runtime {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Cumulative wallclock spent inside `execute` (profiling aid).
+    engine: Engine,
+    plan: ExecutionPlan,
+    /// Cumulative wallclock spent inside `execute` (profiling aid,
+    /// surfaced per frame as `FrameRun::t_exec_wall`).
     pub exec_wallclock: std::time::Duration,
     pub executions: u64,
 }
 
 impl Runtime {
-    /// Open the runtime over an artifacts directory.
+    /// Open the runtime over an artifacts directory. Falls back to the
+    /// builtin manifest when `manifest.json` is absent, and to the
+    /// native kernel engine when the PJRT client cannot open; a present
+    /// but malformed manifest is still a hard error.
     pub fn open(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(dir)?
+        } else {
+            Manifest::builtin(dir)
+        };
+        // A builtin manifest has no HLO files behind it, so it is only
+        // executable natively — even when the PJRT client would open.
+        let engine = if manifest.builtin {
+            eprintln!(
+                "note: no manifest.json; using the builtin artifact set \
+                 on the native kernel engine"
+            );
+            Engine::Native(Box::new(NativeEngine::new(&manifest)))
+        } else {
+            match xla::PjRtClient::cpu() {
+                Ok(client) => Engine::Pjrt {
+                    client,
+                    executables: HashMap::new(),
+                },
+                Err(e) => {
+                    eprintln!("note: PJRT unavailable ({e}); using the native kernel engine");
+                    Engine::Native(Box::new(NativeEngine::new(&manifest)))
+                }
+            }
+        };
         Ok(Runtime {
             manifest,
-            client,
-            executables: HashMap::new(),
+            engine,
+            plan: ExecutionPlan::new(),
             exec_wallclock: std::time::Duration::ZERO,
             executions: 0,
         })
@@ -41,33 +89,73 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.engine {
+            Engine::Pjrt { client, .. } => client.platform_name(),
+            Engine::Native(_) => "native-cpu".into(),
+        }
     }
 
-    /// Compile (or fetch cached) an artifact's executable.
-    pub fn prepare(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
-            return Ok(());
+    /// `"pjrt"` or `"native"`.
+    pub fn engine_name(&self) -> &'static str {
+        match &self.engine {
+            Engine::Pjrt { .. } => "pjrt",
+            Engine::Native(_) => "native",
         }
-        let spec = self.manifest.get(name)?.clone();
-        let path = self.manifest.hlo_path(&spec);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::ArtifactParse {
-                path: path.display().to_string(),
-                msg: "non-utf8 path".into(),
-            })?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.executables.insert(name.to_string(), exe);
-        Ok(())
+    }
+
+    /// Select the kernel tier of the native engine (no-op under PJRT,
+    /// whose artifacts bake their numerics in). The coordinator syncs
+    /// this with its own `backend` so host groundtruth and native
+    /// execution always run the same tier.
+    pub fn set_kernel_backend(&mut self, backend: KernelBackend) {
+        if let Engine::Native(native) = &mut self.engine {
+            native.set_backend(backend);
+        }
+    }
+
+    /// Compile (or fetch cached) an artifact's executable. A no-op on
+    /// the native engine beyond checking the artifact exists.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        let spec = self.manifest.get(name)?;
+        match &mut self.engine {
+            Engine::Native(_) => Ok(()),
+            Engine::Pjrt { client, executables } => {
+                if executables.contains_key(name) {
+                    return Ok(());
+                }
+                let path = self.manifest.hlo_path(spec);
+                let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(
+                    || Error::ArtifactParse {
+                        path: path.display().to_string(),
+                        msg: "non-utf8 path".into(),
+                    },
+                )?)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                executables.insert(name.to_string(), exe);
+                Ok(())
+            }
+        }
     }
 
     /// Execute artifact `name` on f32 inputs (row-major, shapes from the
-    /// manifest). Returns the f32 outputs (ours all have exactly one).
+    /// manifest). Returns the f32 outputs.
     pub fn execute(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::new();
+        self.execute_into(name, inputs, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Runtime::execute`] into a caller-owned output buffer (cleared
+    /// first) — the allocation-reusing hot path of the stream pipeline.
+    pub fn execute_into(
+        &mut self,
+        name: &str,
+        inputs: &[&[f32]],
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
         self.prepare(name)?;
-        let spec = self.manifest.get(name)?.clone();
+        let spec = self.manifest.get(name)?;
         if inputs.len() != spec.inputs.len() {
             return Err(Error::Validation(format!(
                 "{name}: {} inputs supplied, artifact takes {}",
@@ -75,7 +163,6 @@ impl Runtime {
                 spec.inputs.len()
             )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (data, tspec) in inputs.iter().zip(&spec.inputs) {
             if data.len() != tspec.numel() {
                 return Err(Error::Validation(format!(
@@ -84,28 +171,32 @@ impl Runtime {
                     tspec.shape
                 )));
             }
-            let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data).reshape(&dims)?;
-            literals.push(lit);
         }
-        let exe = self.executables.get(name).expect("prepared above");
         let t0 = std::time::Instant::now();
-        let mut result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        match &mut self.engine {
+            Engine::Native(native) => native.execute(spec, inputs, out)?,
+            Engine::Pjrt { executables, .. } => {
+                let literals = self.plan.input_literals(spec, inputs)?;
+                let exe = executables.get(name).expect("prepared above");
+                let mut result = exe.execute::<xla::Literal>(literals)?[0][0].to_literal_sync()?;
+                // aot.py lowers with return_tuple=True: unpack the tuple.
+                let tuple = result.decompose_tuple()?;
+                out.clear();
+                for lit in tuple {
+                    out.push(lit.to_vec::<f32>()?);
+                }
+            }
+        }
         self.exec_wallclock += t0.elapsed();
         self.executions += 1;
-
-        // aot.py lowers with return_tuple=True: unpack the result tuple.
-        let tuple = result.decompose_tuple()?;
-        if tuple.len() != spec.outputs.len() {
+        if out.len() != spec.outputs.len() {
             return Err(Error::Validation(format!(
                 "{name}: {} outputs returned, manifest says {}",
-                tuple.len(),
+                out.len(),
                 spec.outputs.len()
             )));
         }
-        let mut outs = Vec::with_capacity(tuple.len());
-        for (lit, tspec) in tuple.into_iter().zip(&spec.outputs) {
-            let v = lit.to_vec::<f32>()?;
+        for (v, tspec) in out.iter().zip(&spec.outputs) {
             if v.len() != tspec.numel() {
                 return Err(Error::Validation(format!(
                     "{name}: output length {} != shape {:?}",
@@ -113,9 +204,98 @@ impl Runtime {
                     tspec.shape
                 )));
             }
-            outs.push(v);
+        }
+        Ok(())
+    }
+
+    /// Execute a batched artifact over `batch` items.
+    ///
+    /// When the manifest carries `name` (e.g. the builtin
+    /// `cnn_patch_b64`) this is one batched execute. When it does not
+    /// (older artifact sets), the call transparently falls back to the
+    /// scalar `_b1` twin, slicing every input into `batch` equal chunks
+    /// and concatenating the per-item outputs — results are identical
+    /// either way (pinned in `tests/kernel_equivalence.rs`).
+    pub fn execute_batched(
+        &mut self,
+        name: &str,
+        batch: usize,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        if batch == 0 {
+            return Err(Error::Validation(format!("{name}: batch must be >= 1")));
+        }
+        if let Ok(spec) = self.manifest.get(name) {
+            if let Some(b) = spec.meta_usize("batch") {
+                if b != batch {
+                    return Err(Error::Validation(format!(
+                        "{name}: batch {batch} requested, artifact is b{b}"
+                    )));
+                }
+            }
+            return self.execute(name, inputs);
+        }
+        let scalar = batch::scalar_twin(name, batch)
+            .ok_or_else(|| Error::UnknownArtifact(name.to_string()))?;
+        let sspec: ArtifactSpec = self.manifest.get(&scalar)?.clone();
+        for (data, tspec) in inputs.iter().zip(&sspec.inputs) {
+            if data.len() != batch * tspec.numel() {
+                return Err(Error::Validation(format!(
+                    "{name}: input length {} != {batch} x {:?}",
+                    data.len(),
+                    tspec.shape
+                )));
+            }
+        }
+        let mut outs: Vec<Vec<f32>> = sspec
+            .outputs
+            .iter()
+            .map(|t| Vec::with_capacity(batch * t.numel()))
+            .collect();
+        let mut item_out = Vec::new();
+        for b in 0..batch {
+            let item_inputs: Vec<&[f32]> = inputs
+                .iter()
+                .zip(&sspec.inputs)
+                .map(|(data, t)| &data[b * t.numel()..(b + 1) * t.numel()])
+                .collect();
+            self.execute_into(&scalar, &item_inputs, &mut item_out)?;
+            for (acc, v) in outs.iter_mut().zip(&item_out) {
+                acc.extend_from_slice(v);
+            }
         }
         Ok(outs)
+    }
+
+    /// The native engine's resolved render mesh (None under PJRT).
+    pub fn native_mesh(&self) -> Option<&crate::render::Mesh> {
+        match &self.engine {
+            Engine::Native(native) => native.mesh(),
+            Engine::Pjrt { .. } => None,
+        }
+    }
+
+    /// The native engine's resolved CNN weights (None under PJRT).
+    pub fn native_weights(&self) -> Option<&crate::cnn::Weights> {
+        match &self.engine {
+            Engine::Native(native) => native.weights(),
+            Engine::Pjrt { .. } => None,
+        }
+    }
+
+    /// Number of PJRT executables compiled so far (0 on the native
+    /// engine, which has nothing to compile).
+    pub fn compiled_count(&self) -> usize {
+        match &self.engine {
+            Engine::Pjrt { executables, .. } => executables.len(),
+            Engine::Native(_) => 0,
+        }
+    }
+
+    /// Number of artifacts with a cached input-literal set
+    /// (PJRT path only; see `runtime::batch::ExecutionPlan`).
+    pub fn cached_input_sets(&self) -> usize {
+        self.plan.cached_artifacts()
     }
 
     /// Names of all loadable artifacts.
@@ -126,11 +306,11 @@ impl Runtime {
 
 #[cfg(test)]
 mod tests {
-    //! These tests require `make artifacts` to have run; they are the
-    //! core numerics bridge tests (python-Pallas -> HLO -> rust-PJRT).
     use super::*;
     use crate::util::rng::Rng;
 
+    /// Runtime over the real artifacts (None if `make artifacts` never
+    /// ran — those tests skip, exactly as before).
     fn runtime() -> Option<Runtime> {
         let dir = crate::config::default_artifacts_dir();
         if !Path::new(&dir).join("manifest.json").exists() {
@@ -138,6 +318,57 @@ mod tests {
             return None;
         }
         Some(Runtime::open(Path::new(&dir)).unwrap())
+    }
+
+    /// Runtime over a directory with no artifacts at all: builtin
+    /// manifest + (under the shim) the native engine.
+    fn native_runtime() -> Runtime {
+        Runtime::open(Path::new("target/__no_artifacts_client_test__")).unwrap()
+    }
+
+    #[test]
+    fn open_without_artifacts_uses_builtin_manifest() {
+        let rt = native_runtime();
+        assert!(rt.manifest.builtin);
+        // The crate builds against xla_shim, so the engine must have
+        // degraded to native (repointing to real bindings flips this).
+        assert_eq!(rt.engine_name(), "native");
+        assert_eq!(rt.platform(), "native-cpu");
+        assert!(rt.artifact_names().contains(&"cnn_patch_b64".to_string()));
+    }
+
+    #[test]
+    fn native_binning_executes_and_counts() {
+        let mut rt = native_runtime();
+        let x = vec![0.5f32; 256 * 256];
+        let out = rt.execute("binning_256", &[&x]).unwrap();
+        assert_eq!(out[0].len(), 128 * 128);
+        assert!(out[0].iter().all(|&v| (v - 0.5).abs() < 1e-6));
+        assert_eq!(rt.executions, 1);
+        let out2 = rt.execute("binning_256", &[&x]).unwrap();
+        assert_eq!(out, out2);
+        assert_eq!(rt.executions, 2);
+    }
+
+    #[test]
+    fn native_execute_validates_arity_and_shape() {
+        let mut rt = native_runtime();
+        let short = vec![0f32; 10];
+        assert!(rt.execute("binning_256", &[&short]).is_err());
+        let ok = vec![0f32; 256 * 256];
+        assert!(rt.execute("binning_256", &[&ok, &ok]).is_err());
+        assert!(rt.execute("no_such_artifact", &[&ok]).is_err());
+    }
+
+    #[test]
+    fn execute_batched_validates_batch_and_lengths() {
+        let mut rt = native_runtime();
+        let x = vec![0f32; 64 * 128 * 128 * 3];
+        assert!(rt.execute_batched("cnn_patch_b64", 0, &[&x]).is_err());
+        // Batch size must match the artifact's baked-in batch.
+        assert!(rt.execute_batched("cnn_patch_b64", 32, &[&x[..32 * 128 * 128 * 3]]).is_err());
+        // Fallback path rejects non-multiple input lengths.
+        assert!(rt.execute_batched("cnn_patch_b4", 4, &[&x[..7]]).is_err());
     }
 
     #[test]
@@ -219,15 +450,6 @@ mod tests {
     }
 
     #[test]
-    fn execute_validates_input_arity_and_shape() {
-        let Some(mut rt) = runtime() else { return };
-        let x = vec![0f32; 10];
-        assert!(rt.execute("binning_256", &[&x]).is_err()); // wrong size
-        let ok = vec![0f32; 256 * 256];
-        assert!(rt.execute("binning_256", &[&ok, &ok]).is_err()); // arity
-    }
-
-    #[test]
     fn executable_cache_reused() {
         let Some(mut rt) = runtime() else { return };
         let x = vec![0.5f32; 256 * 256];
@@ -235,6 +457,11 @@ mod tests {
         let n = rt.executions;
         rt.execute("binning_256", &[&x]).unwrap();
         assert_eq!(rt.executions, n + 1);
-        assert_eq!(rt.executables.len(), 1);
+        // One artifact executed twice -> exactly one compiled executable
+        // and one cached input-literal set on the PJRT engine (the
+        // native engine compiles and caches nothing).
+        let expect = usize::from(rt.engine_name() == "pjrt");
+        assert_eq!(rt.compiled_count(), expect);
+        assert_eq!(rt.cached_input_sets(), expect);
     }
 }

@@ -1,14 +1,24 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
-//! the CPU PJRT client — the *numerics engine* standing in for the
-//! SHAVE cores (DESIGN.md §2).
+//! Artifact runtime: loads the AOT HLO-text artifacts and executes them
+//! — the *numerics engine* standing in for the SHAVE cores
+//! (DESIGN.md §2).
 //!
-//! Python never runs on this path: `make artifacts` produced HLO text at
-//! build time; here the `xla` crate parses, compiles (once, cached) and
-//! executes it.
+//! Python never runs on this path: `make artifacts` produced HLO text
+//! at build time; the `xla` crate parses, compiles (once, cached) and
+//! executes it through the CPU PJRT client. On builds without the
+//! bindings (the offline `xla_shim` image) — or checkouts without
+//! artifacts at all — execution degrades to [`native`], which runs the
+//! same artifact names through the crate's own tiered kernels, and the
+//! manifest degrades to a synthesized builtin spec set. [`batch`] holds
+//! the input-buffer cache and the batched-execution (`cnn_patch_b64`)
+//! plumbing.
 
 pub mod artifact;
+pub mod batch;
 pub mod client;
+pub mod native;
 pub mod xla_shim;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use batch::ExecutionPlan;
 pub use client::Runtime;
+pub use native::NativeEngine;

@@ -1,0 +1,280 @@
+//! Native artifact execution — the fallback numerics engine behind
+//! [`Runtime`](crate::runtime::Runtime) when the PJRT client is
+//! unavailable (the offline `xla_shim` build) or `make artifacts` never
+//! ran.
+//!
+//! The engine interprets an [`ArtifactSpec`] and runs the crate's own
+//! tiered kernels (`dsp`, `render`, `cnn`) on it, honouring the
+//! [`KernelBackend`] selector. Because the host groundtruth path
+//! (`coordinator::host`) calls the *same* kernels at the *same* tier,
+//! frame validation through the full CIF→VPU→LCD stack is exact on this
+//! path — which is what lets the streaming pipeline and the CI backend
+//! matrix run end-to-end on machines without the `xla` crate.
+//!
+//! Batched artifacts (`cnn_patch_bN`) run each item through the same
+//! per-patch forward pass used by the `_b1` artifact, so the batched
+//! output is bit-for-bit identical to N serial calls (pinned by
+//! `tests/kernel_equivalence.rs`); the win is the per-call overhead
+//! (spec lookup, validation, output allocation) paid once per batch.
+
+use crate::cnn::{self, layers::FeatureMap, ships, Weights};
+use crate::error::{Error, Result};
+use crate::render::{self, Mesh, Pose};
+use crate::runtime::artifact::{ArtifactSpec, Manifest};
+use crate::KernelBackend;
+
+/// Seed of the deterministic synthetic CNN weights used when no
+/// `cnn_weights.bin` exists (builtin-manifest runs). Host groundtruth
+/// and native execution must agree on it — both load through
+/// [`manifest_weights`].
+pub const BUILTIN_WEIGHTS_SEED: u64 = 2021;
+
+/// CNN patch side expected by the `cnn_frame_*` splitter (paper §III-C:
+/// 64 patches of 128x128 per 1 MPixel frame).
+const PATCH: usize = 128;
+
+/// Resolve the render mesh an artifact set bakes in: the `mesh_file`
+/// the real manifest points at, else the named builtin mesh of the
+/// synthesized spec set.
+pub fn manifest_mesh(manifest: &Manifest) -> Option<Mesh> {
+    for name in ["render_1024", "render_128"] {
+        let Ok(spec) = manifest.get(name) else { continue };
+        if let Some(f) = spec.meta_str("mesh_file") {
+            if let Ok(m) = Mesh::load(manifest.dir.join(f)) {
+                return Some(m);
+            }
+        }
+        if spec.meta_str("builtin_mesh") == Some("octahedron") {
+            return Some(Mesh::octahedron());
+        }
+    }
+    None
+}
+
+/// Resolve the CNN weights for an artifact set: the trained
+/// `cnn_weights.bin` next to the manifest when present, else (builtin
+/// spec set only) the deterministic synthetic parameter set.
+pub fn manifest_weights(manifest: &Manifest) -> Option<Weights> {
+    if let Ok(w) = Weights::load(manifest.dir.join("cnn_weights.bin")) {
+        return Some(w);
+    }
+    manifest
+        .builtin
+        .then(|| Weights::synthetic_ship(BUILTIN_WEIGHTS_SEED))
+}
+
+/// The native kernel engine with its reusable scratch state.
+pub struct NativeEngine {
+    backend: KernelBackend,
+    mesh: Option<Mesh>,
+    weights: Option<Weights>,
+    /// Reused patch buffer for the CNN artifacts (no per-patch alloc).
+    chip: FeatureMap,
+}
+
+impl NativeEngine {
+    pub fn new(manifest: &Manifest) -> NativeEngine {
+        NativeEngine {
+            backend: KernelBackend::from_env(),
+            mesh: manifest_mesh(manifest),
+            weights: manifest_weights(manifest),
+            chip: FeatureMap::new(PATCH, PATCH, 3),
+        }
+    }
+
+    pub fn set_backend(&mut self, backend: KernelBackend) {
+        self.backend = backend;
+    }
+
+    pub fn backend(&self) -> KernelBackend {
+        self.backend
+    }
+
+    /// The resolved render mesh (shared with the coordinator so host
+    /// groundtruth and native execution never diverge).
+    pub fn mesh(&self) -> Option<&Mesh> {
+        self.mesh.as_ref()
+    }
+
+    /// The resolved CNN weights.
+    pub fn weights(&self) -> Option<&Weights> {
+        self.weights.as_ref()
+    }
+
+    fn ensure_chip(&mut self, h: usize, w: usize, c: usize) {
+        if self.chip.h != h || self.chip.w != w || self.chip.c != c {
+            self.chip = FeatureMap::new(h, w, c);
+        }
+    }
+
+    fn require_weights(&self) -> Result<&Weights> {
+        self.weights.as_ref().ok_or_else(|| {
+            Error::Config(
+                "native CNN execution needs cnn_weights.bin (run `make artifacts`)".into(),
+            )
+        })
+    }
+
+    /// Execute `spec` on validated inputs, writing the outputs into
+    /// `out` (cleared first; one `Vec<f32>` per artifact output).
+    pub fn execute(
+        &mut self,
+        spec: &ArtifactSpec,
+        inputs: &[&[f32]],
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        out.clear();
+        let name = spec.name.as_str();
+        if name.starts_with("binning_") {
+            let (h, w) = plane_dims(spec, 0)?;
+            out.push(crate::dsp::binning2x2(self.backend, inputs[0], h, w)?);
+        } else if name.starts_with("conv_") {
+            let (h, w) = plane_dims(spec, 0)?;
+            let (k, _) = plane_dims(spec, 1)?;
+            out.push(crate::dsp::conv2d(self.backend, inputs[0], h, w, inputs[1], k)?);
+        } else if name.starts_with("render_") {
+            let mesh = self.mesh.as_ref().ok_or_else(|| {
+                Error::Config("native render execution needs the artifact mesh".into())
+            })?;
+            let oshape = &spec.outputs[0].shape;
+            let (h, w) = (oshape[0], oshape[1]);
+            let n_tris = spec.meta_usize("n_tris").unwrap_or(mesh.faces.len());
+            let pose = Pose::from_slice(inputs[0]);
+            let tris = render::project_triangles(&pose, mesh, w, h, n_tris);
+            out.push(render::depth_render(&tris, w, h));
+        } else if let Some(suffix) = name.strip_prefix("cnn_patch_b") {
+            let batch: usize = suffix.parse().map_err(|_| {
+                Error::UnknownArtifact(format!("{name} (bad batch suffix)"))
+            })?;
+            let shape = &spec.inputs[0].shape;
+            let (h, w, c) = match shape.len() {
+                3 => (shape[0], shape[1], shape[2]),
+                4 => (shape[1], shape[2], shape[3]),
+                _ => {
+                    return Err(Error::Validation(format!(
+                        "{name}: unexpected input rank {:?}",
+                        shape
+                    )))
+                }
+            };
+            self.ensure_chip(h, w, c);
+            let per = h * w * c;
+            let backend = self.backend;
+            let mut logits = Vec::with_capacity(batch * 2);
+            for item in inputs[0].chunks_exact(per).take(batch) {
+                self.chip.data.copy_from_slice(item);
+                let l = cnn::forward(backend, self.require_weights()?, &self.chip)?;
+                logits.extend_from_slice(&l);
+            }
+            out.push(logits);
+        } else if name.starts_with("cnn_frame_") {
+            let t = &spec.inputs[0];
+            let side = if t.shape.len() == 3 {
+                t.shape[0]
+            } else {
+                (((t.numel() / 3) as f64).sqrt()).round() as usize
+            };
+            if side % PATCH != 0 {
+                return Err(Error::Validation(format!(
+                    "{name}: frame side {side} not a multiple of the {PATCH}px patch"
+                )));
+            }
+            let grid = side / PATCH;
+            self.ensure_chip(PATCH, PATCH, 3);
+            let backend = self.backend;
+            let mut logits = Vec::with_capacity(grid * grid * 2);
+            for gy in 0..grid {
+                for gx in 0..grid {
+                    ships::extract_chip_into(inputs[0], side, PATCH, gy, gx, &mut self.chip);
+                    let l = cnn::forward(backend, self.require_weights()?, &self.chip)?;
+                    logits.extend_from_slice(&l);
+                }
+            }
+            out.push(logits);
+        } else {
+            return Err(Error::UnknownArtifact(format!(
+                "{name} (not executable by the native engine)"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The (rows, cols) of a 2-D input tensor spec.
+fn plane_dims(spec: &ArtifactSpec, input: usize) -> Result<(usize, usize)> {
+    let shape = &spec.inputs[input].shape;
+    if shape.len() != 2 {
+        return Err(Error::Validation(format!(
+            "{}: input {input} expected 2-D, got {:?}",
+            spec.name, shape
+        )));
+    }
+    Ok((shape[0], shape[1]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::path::Path;
+
+    fn engine_and_manifest() -> (NativeEngine, Manifest) {
+        let m = Manifest::builtin(Path::new("/tmp/__native_engine_test__"));
+        (NativeEngine::new(&m), m)
+    }
+
+    #[test]
+    fn binning_matches_direct_kernel_call() {
+        let (mut eng, m) = engine_and_manifest();
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..256 * 256).map(|_| rng.next_f32()).collect();
+        let mut out = Vec::new();
+        eng.execute(m.get("binning_256").unwrap(), &[&x], &mut out).unwrap();
+        let gt = crate::dsp::binning2x2(eng.backend(), &x, 256, 256).unwrap();
+        assert_eq!(out[0], gt);
+    }
+
+    #[test]
+    fn conv_matches_direct_kernel_call() {
+        let (mut eng, m) = engine_and_manifest();
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..128 * 128).map(|_| rng.next_f32()).collect();
+        let k: Vec<f32> = (0..9).map(|_| rng.next_f32() / 9.0).collect();
+        let mut out = Vec::new();
+        eng.execute(m.get("conv_128_k3").unwrap(), &[&x, &k], &mut out).unwrap();
+        let gt = crate::dsp::conv2d(eng.backend(), &x, 128, 128, &k, 3).unwrap();
+        assert_eq!(out[0], gt);
+    }
+
+    #[test]
+    fn render_uses_builtin_octahedron() {
+        let (mut eng, m) = engine_and_manifest();
+        let pose = [0.1f32, -0.2, 0.05, 0.1, -0.1, 3.0];
+        let mut out = Vec::new();
+        eng.execute(m.get("render_128").unwrap(), &[&pose], &mut out).unwrap();
+        assert_eq!(out[0].len(), 128 * 128);
+        let mesh = Mesh::octahedron();
+        let tris =
+            render::project_triangles(&Pose::from_slice(&pose), &mesh, 128, 128, 8);
+        let gt = render::depth_render(&tris, 128, 128);
+        assert_eq!(out[0], gt);
+        assert!(render::raster::coverage(&gt) > 100, "model not visible");
+    }
+
+    #[test]
+    fn unknown_artifact_is_rejected() {
+        let (mut eng, _) = engine_and_manifest();
+        let spec = ArtifactSpec {
+            name: "fft_1024".into(),
+            file: "fft.hlo.txt".into(),
+            inputs: vec![],
+            outputs: vec![],
+            meta: Default::default(),
+        };
+        let mut out = Vec::new();
+        assert!(matches!(
+            eng.execute(&spec, &[], &mut out),
+            Err(Error::UnknownArtifact(_))
+        ));
+    }
+}

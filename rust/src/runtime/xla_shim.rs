@@ -82,6 +82,15 @@ impl Literal {
         unavailable()
     }
 
+    /// Refill an existing literal's buffer in place (the reuse path of
+    /// `runtime::batch::ExecutionPlan` — no fresh `vec1` allocation per
+    /// execute). The real `xla` crate exposes this as an in-place copy
+    /// on the underlying buffer; repointing the alias needs a one-line
+    /// adapter here.
+    pub fn copy_from(&mut self, _data: &[f32]) -> Result<(), Error> {
+        unavailable()
+    }
+
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         unavailable()
     }

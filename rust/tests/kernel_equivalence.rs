@@ -11,6 +11,7 @@ use spacecodesign::compress::{compress, decompress, Cube, Params};
 use spacecodesign::dsp::{binning, conv, fast as dsp_fast};
 use spacecodesign::fabric::crc16::Crc16Xmodem;
 use spacecodesign::fabric::width;
+use spacecodesign::runtime::Runtime;
 use spacecodesign::util::image::PixelFormat;
 use spacecodesign::util::propcheck::{check, Gen};
 use spacecodesign::util::rng::Rng;
@@ -175,6 +176,81 @@ fn prop_width_bulk_matches_reference_fsm() {
         let un_ref = width::unpack_words_ref(&packed_ref, format, n).unwrap();
         un == un_ref && un == pixels
     });
+}
+
+/// Runtime over a directory with no artifacts: builtin manifest + (on
+/// the shim build) the native engine. Pinned to the Optimized tier so
+/// the pin runs the fast path regardless of `SPACECODESIGN_BACKEND`.
+fn shim_runtime(tag: &str) -> Runtime {
+    let dir = format!("target/__equivalence_{tag}__");
+    let mut rt = Runtime::open(std::path::Path::new(&dir)).unwrap();
+    rt.set_kernel_backend(KernelBackend::Optimized);
+    rt
+}
+
+#[test]
+fn execute_batched_cnn_b64_matches_64_serial_b1_bitexact() {
+    // ISSUE 2 pin: the batched `cnn_patch_b64` path must reproduce 64
+    // serial `cnn_patch_b1` calls bit-for-bit on the shim path.
+    let mut rt = shim_runtime("b64");
+    let per = 128 * 128 * 3;
+    let mut rng = Rng::new(0xBA7C);
+    let batch: Vec<f32> = (0..64 * per).map(|_| rng.next_f32()).collect();
+    let batched = rt.execute_batched("cnn_patch_b64", 64, &[&batch]).unwrap();
+    assert_eq!(batched.len(), 1);
+    assert_eq!(batched[0].len(), 64 * 2);
+    for (i, chunk) in batch.chunks_exact(per).enumerate() {
+        let serial = rt.execute("cnn_patch_b1", &[chunk]).unwrap();
+        assert_eq!(serial[0].len(), 2);
+        assert_eq!(
+            serial[0][0].to_bits(),
+            batched[0][2 * i].to_bits(),
+            "patch {i} logit 0"
+        );
+        assert_eq!(
+            serial[0][1].to_bits(),
+            batched[0][2 * i + 1].to_bits(),
+            "patch {i} logit 1"
+        );
+    }
+}
+
+#[test]
+fn execute_batched_scalar_fallback_matches_serial_bitexact() {
+    // A batch size with no registered artifact (`cnn_patch_b4`) takes
+    // the scalar-fallback path; it must agree with serial calls too.
+    let mut rt = shim_runtime("fallback");
+    assert!(rt.manifest.get("cnn_patch_b4").is_err());
+    let per = 128 * 128 * 3;
+    let mut rng = Rng::new(0xFA11);
+    let batch: Vec<f32> = (0..4 * per).map(|_| rng.next_f32()).collect();
+    let out = rt.execute_batched("cnn_patch_b4", 4, &[&batch]).unwrap();
+    assert_eq!(out[0].len(), 4 * 2);
+    for (i, chunk) in batch.chunks_exact(per).enumerate() {
+        let serial = rt.execute("cnn_patch_b1", &[chunk]).unwrap();
+        assert_eq!(serial[0][0].to_bits(), out[0][2 * i].to_bits(), "patch {i}");
+        assert_eq!(serial[0][1].to_bits(), out[0][2 * i + 1].to_bits(), "patch {i}");
+    }
+}
+
+#[test]
+fn cnn_frame_artifact_matches_per_patch_classification() {
+    // The frame-level artifact is the batched splitter: its 64 logit
+    // pairs must match per-patch forwards on the extracted chips.
+    let mut rt = shim_runtime("frame");
+    let side = 1024usize;
+    let (frame, _labels) = spacecodesign::cnn::ships::ship_frame(8, 128, 99);
+    let out = rt.execute("cnn_frame_1024", &[&frame]).unwrap();
+    assert_eq!(out[0].len(), 64 * 2);
+    let mut chip = FeatureMap::new(128, 128, 3);
+    for (i, pair) in out[0].chunks_exact(2).enumerate().step_by(13) {
+        spacecodesign::cnn::ships::extract_chip_into(
+            &frame, side, 128, i / 8, i % 8, &mut chip,
+        );
+        let direct = rt.execute("cnn_patch_b1", &[&chip.data]).unwrap();
+        assert_eq!(direct[0][0].to_bits(), pair[0].to_bits(), "patch {i}");
+        assert_eq!(direct[0][1].to_bits(), pair[1].to_bits(), "patch {i}");
+    }
 }
 
 #[test]

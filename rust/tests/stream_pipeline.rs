@@ -1,0 +1,103 @@
+//! Streaming-pipeline integration (ISSUE 2): multi-frame sweeps through
+//! the three-stage (CIF ingest -> VPU execute -> LCD egress) pipeline,
+//! on the native execution path so they run without `make artifacts`.
+
+use spacecodesign::config::SystemConfig;
+use spacecodesign::coordinator::{stream, Benchmark, CoProcessor, StreamOptions};
+use spacecodesign::KernelBackend;
+
+/// CoProcessor pinned to a directory without artifacts: builtin
+/// manifest + native engine, deterministic regardless of what the
+/// checkout has built.
+fn native_coproc(tag: &str) -> CoProcessor {
+    let mut cfg = SystemConfig::paper();
+    cfg.artifacts_dir = format!("target/__stream_{tag}__");
+    CoProcessor::new(cfg).expect("native coprocessor")
+}
+
+fn opts(bench: Benchmark, frames: usize, seed: u64) -> StreamOptions {
+    StreamOptions {
+        bench,
+        frames,
+        seed,
+        depth: 1,
+    }
+}
+
+#[test]
+fn stream_conv3_validates_every_frame_and_reports_stages() {
+    let mut cp = native_coproc("conv3");
+    let r = stream::run(&mut cp, &opts(Benchmark::Conv { k: 3 }, 5, 9)).unwrap();
+    assert_eq!(r.runs.len(), 5);
+    assert!(r.all_valid(), "stream frames must pass CRC + groundtruth");
+    assert!(r.wall_fps > 0.0);
+    assert!(r.exec_wall.as_nanos() > 0, "execute wallclock must be surfaced");
+    for (i, util) in r.stage_util.iter().enumerate() {
+        assert!(
+            (0.0..=1.05).contains(util),
+            "stage {i} utilization {util} out of range"
+        );
+        assert!(r.stage_busy[i].as_nanos() > 0, "stage {i} never ran");
+    }
+    // Per-frame exec wallclock flows into the per-frame results too.
+    assert!(r.runs.iter().any(|run| run.t_exec_wall.as_nanos() > 0));
+    // DES prediction rides along for comparison.
+    assert_eq!(r.masked.frames, 8, "DES padded to a steady-state window");
+    assert!(r.masked.throughput_fps > 0.0);
+}
+
+#[test]
+fn stream_frames_match_one_shot_unmasked_runs() {
+    // Pipelining changes wallclock, not results: every streamed frame
+    // must carry exactly the simulated timings + validation of the
+    // equivalent one-shot run with the same seed.
+    let bench = Benchmark::Conv { k: 3 };
+    let mut cp = native_coproc("pin_stream");
+    let r = stream::run(&mut cp, &opts(bench, 3, 21)).unwrap();
+    let mut cp2 = native_coproc("pin_oneshot");
+    for (i, streamed) in r.runs.iter().enumerate() {
+        let one = cp2.run_unmasked(bench, 21 + i as u64).unwrap();
+        assert_eq!(streamed.t_cif, one.t_cif, "frame {i} CIF time");
+        assert_eq!(streamed.t_proc, one.t_proc, "frame {i} proc time");
+        assert_eq!(streamed.t_lcd, one.t_lcd, "frame {i} LCD time");
+        assert_eq!(streamed.crc_ok, one.crc_ok);
+        assert_eq!(streamed.validation.mismatches, one.validation.mismatches);
+        assert_eq!(streamed.validation.pass, one.validation.pass);
+    }
+}
+
+#[test]
+fn stream_single_frame_works() {
+    let mut cp = native_coproc("single");
+    let r = stream::run(&mut cp, &opts(Benchmark::Conv { k: 3 }, 1, 4)).unwrap();
+    assert_eq!(r.frames, 1);
+    assert!(r.all_valid());
+}
+
+#[test]
+fn stream_zero_frames_is_an_error() {
+    let mut cp = native_coproc("zero");
+    assert!(stream::run(&mut cp, &opts(Benchmark::Conv { k: 3 }, 0, 4)).is_err());
+}
+
+#[test]
+fn stream_runs_on_both_backends() {
+    // The CI matrix exercises each tier process-wide; this pins both
+    // tiers in one process through the same CoProcessor.
+    let mut cp = native_coproc("backends");
+    for backend in [KernelBackend::Reference, KernelBackend::Optimized] {
+        cp.backend = backend;
+        let r = stream::run(&mut cp, &opts(Benchmark::Conv { k: 3 }, 2, 7)).unwrap();
+        assert_eq!(r.backend, backend);
+        assert!(r.all_valid(), "{backend:?} stream failed validation");
+    }
+}
+
+#[test]
+fn stream_render_uses_builtin_mesh() {
+    let mut cp = native_coproc("render");
+    let r = stream::run(&mut cp, &opts(Benchmark::Render, 2, 5)).unwrap();
+    assert!(r.all_valid());
+    // Render validation really inspected a full 1 MPixel depth frame.
+    assert_eq!(r.runs[0].validation.pixels, 1024 * 1024);
+}
