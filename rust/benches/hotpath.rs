@@ -172,6 +172,25 @@ fn main() {
     });
     log.push_pair("scalar conv7 256x256", &r, &s);
 
+    // --- spawn overhead: 256 small conv calls per iteration --------------
+    // Small kernels repeated at frame rate are where per-call fan-out
+    // overhead shows: the old scoped-thread fan-out paid a full thread
+    // spawn/join on every call, the persistent pool (ISSUE 3) only
+    // enqueues band descriptors to already-parked workers.
+    let k3: Vec<f32> = (0..9).map(|_| rng.next_f32() / 9.0).collect();
+    let tiny: Vec<f32> = (0..64 * 64).map(|_| rng.next_f32()).collect();
+    let r = bench(1, 5, || {
+        for _ in 0..256 {
+            std::hint::black_box(conv::conv2d_f32(&tiny, 64, 64, &k3, 3).unwrap());
+        }
+    });
+    let s = bench(1, 5, || {
+        for _ in 0..256 {
+            std::hint::black_box(dsp_fast::conv2d_f32_opt(&tiny, 64, 64, &k3, 3).unwrap());
+        }
+    });
+    log.push_pair("spawn overhead conv3 64x64 x256", &r, &s);
+
     // --- CNN forward pass: scalar tier vs optimized tier -----------------
     let weights = Weights::synthetic_ship(1);
     let chip = FeatureMap::from_data(
@@ -275,6 +294,29 @@ fn main() {
         std::hint::black_box(rt.execute_batched("cnn_patch_b64", 64, &[&batchv]).unwrap());
     });
     log.push_pair("exec cnn_patch x64 (serial vs b64)", &serial, &batched);
+
+    // --- multi-frame CNN execution: 4 serial frames vs one b4 call -------
+    // Both sides fan their patches across the worker pool; the delta is
+    // the per-call runtime overhead the batched artifact amortizes.
+    if rt.manifest.get("cnn_frame_b4").is_ok() {
+        let plane = 1024 * 1024 * 3;
+        let framev: Vec<f32> = (0..plane).map(|_| rng.next_f32()).collect();
+        let mut batch4: Vec<f32> = Vec::with_capacity(4 * plane);
+        for _ in 0..4 {
+            batch4.extend_from_slice(&framev);
+        }
+        let serial = bench(1, 3, || {
+            for _ in 0..4 {
+                std::hint::black_box(rt.execute("cnn_frame_1024", &[&framev]).unwrap());
+            }
+        });
+        let batched = bench(1, 3, || {
+            std::hint::black_box(rt.execute_batched("cnn_frame_b4", 4, &[&batch4]).unwrap());
+        });
+        log.push_pair("exec cnn_frame x4 (serial vs b4)", &serial, &batched);
+    } else {
+        eprintln!("(skipping cnn_frame b4 bench: artifact set predates it)");
+    }
 
     // --- streaming pipeline throughput (frames/s, both backends) --------
     match CoProcessor::with_defaults() {

@@ -22,7 +22,7 @@ use crate::cnn::layers::{dense, FeatureMap};
 use crate::cnn::weights::Weights;
 use crate::error::{Error, Result};
 use crate::util::par;
-use crate::util::par::SPAWN_GRAIN_OPS;
+use crate::util::par::GRAIN_OPS;
 
 /// Repack HWIO `(3, 3, Cin, Cout)` into tap-major `(tap, Cout, Cin)`:
 /// `packed[(tap * cout + oc) * cin + ic] = w[(tap * cin + ic) * cout + oc]`.
@@ -58,7 +58,7 @@ fn conv3x3_relu_packed(
         return;
     }
     let row_len = w * cout;
-    let min_rows = (SPAWN_GRAIN_OPS / (w * 9 * cin * cout).max(1)).max(1);
+    let min_rows = (GRAIN_OPS / (w * 9 * cin * cout).max(1)).max(1);
     par::par_row_bands(out, h, row_len, min_rows, |y0, band| {
         for (r, orow) in band.chunks_exact_mut(row_len).enumerate() {
             let y = y0 + r;

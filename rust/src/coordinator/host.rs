@@ -9,6 +9,7 @@
 use crate::coordinator::benchmarks::Benchmark;
 use crate::error::{Error, Result};
 use crate::render::{self, Mesh, Pose};
+use crate::util::arena::FrameArena;
 use crate::util::image::{Frame, PixelFormat};
 use crate::util::rng::Rng;
 use crate::KernelBackend;
@@ -56,15 +57,11 @@ pub fn render_pose(seed: u64) -> Pose {
     }
 }
 
-fn random_u8_frame(w: usize, h: usize, seed: u64) -> Frame {
+fn random_u8_frame(w: usize, h: usize, seed: u64, arena: &FrameArena) -> Frame {
     let mut rng = Rng::new(seed);
-    Frame::from_data(
-        w,
-        h,
-        PixelFormat::Bpp8,
-        (0..w * h).map(|_| rng.next_u32() & 0xFF).collect(),
-    )
-    .unwrap()
+    let mut data = arena.take_u32(w * h);
+    data.extend((0..w * h).map(|_| rng.next_u32() & 0xFF));
+    Frame::from_data(w, h, PixelFormat::Bpp8, data).unwrap()
 }
 
 /// Build the work item for one benchmark execution with the default
@@ -78,6 +75,18 @@ pub fn make_work(
     make_work_with(KernelBackend::default(), bench, seed, mesh, weights)
 }
 
+/// Build the work item for one benchmark execution with a throwaway
+/// buffer arena (see [`make_work_in`]).
+pub fn make_work_with(
+    backend: KernelBackend,
+    bench: Benchmark,
+    seed: u64,
+    mesh: Option<&Mesh>,
+    weights: Option<&crate::cnn::Weights>,
+) -> Result<WorkItem> {
+    make_work_in(backend, bench, seed, mesh, weights, &FrameArena::new())
+}
+
 /// Build the work item for one benchmark execution.
 ///
 /// `backend` selects the kernel tier for the host-side expected-output
@@ -87,22 +96,37 @@ pub fn make_work(
 ///
 /// `mesh` is required for [`Benchmark::Render`] (the same model baked
 /// into the artifact); `weights` for [`Benchmark::CnnShip`].
-pub fn make_work_with(
+///
+/// `arena` supplies the frame-sized buffers (input planes, normalized
+/// f32 copies, expected frames). The streaming coordinator passes its
+/// recycling arena — the egress stage returns each frame's buffers
+/// there, so steady-state ingest allocates nothing frame-sized; one-shot
+/// callers pass a fresh arena and get plain allocations. Buffer origin
+/// never changes content: arena and non-arena work items are identical.
+pub fn make_work_in(
     backend: KernelBackend,
     bench: Benchmark,
     seed: u64,
     mesh: Option<&Mesh>,
     weights: Option<&crate::cnn::Weights>,
+    arena: &FrameArena,
 ) -> Result<WorkItem> {
     match bench {
         Benchmark::Binning => {
             let io = bench.input();
-            let frame = random_u8_frame(io.width, io.height, seed);
-            let norm = frame.to_f32_normalized();
+            let frame = random_u8_frame(io.width, io.height, seed, arena);
+            let mut norm = arena.take_f32(frame.pixels());
+            frame.to_f32_normalized_into(&mut norm);
             let gt = crate::dsp::binning2x2(backend, &norm, io.height, io.width)?;
             let out = bench.output();
-            let expected =
-                Frame::from_f32_normalized(out.width, out.height, out.format, &gt)?;
+            let expected = Frame::from_f32_normalized_in(
+                out.width,
+                out.height,
+                out.format,
+                &gt,
+                arena.take_u32(out.width * out.height),
+            )?;
+            arena.recycle_f32(gt);
             Ok(WorkItem {
                 bench,
                 input_frames: vec![frame],
@@ -113,13 +137,20 @@ pub fn make_work_with(
         }
         Benchmark::Conv { k } => {
             let io = bench.input();
-            let frame = random_u8_frame(io.width, io.height, seed);
-            let norm = frame.to_f32_normalized();
+            let frame = random_u8_frame(io.width, io.height, seed, arena);
+            let mut norm = arena.take_f32(frame.pixels());
+            frame.to_f32_normalized_into(&mut norm);
             let kern = conv_kernel(k, seed);
             let gt = crate::dsp::conv2d(backend, &norm, io.height, io.width, &kern, k)?;
             let out = bench.output();
-            let expected =
-                Frame::from_f32_normalized(out.width, out.height, out.format, &gt)?;
+            let expected = Frame::from_f32_normalized_in(
+                out.width,
+                out.height,
+                out.format,
+                &gt,
+                arena.take_u32(out.width * out.height),
+            )?;
+            arena.recycle_f32(gt);
             Ok(WorkItem {
                 bench,
                 input_frames: vec![frame],
@@ -141,6 +172,7 @@ pub fn make_work_with(
                 render::project_triangles(&pose, mesh, out.width, out.height, mesh.faces.len());
             let z = render::depth_render(&tris, out.width, out.height);
             let data = render::raster::depth_to_u16(&z, RENDER_DEPTH_MAX);
+            arena.recycle_f32(z);
             let expected = Frame::from_data(out.width, out.height, out.format, data)?;
             let pose_frame = Frame::from_data(
                 6,
@@ -171,18 +203,19 @@ pub fn make_work_with(
             // for the artifact — the groundtruth sees the same rounding.
             let mut planes = Vec::with_capacity(3);
             for c in 0..3 {
-                let plane: Vec<u32> = (0..side * side)
-                    .map(|i| (frame_f32[i * 3 + c] * 65535.0).round() as u32)
-                    .collect();
+                let mut plane = arena.take_u32(side * side);
+                plane.extend(
+                    (0..side * side).map(|i| (frame_f32[i * 3 + c] * 65535.0).round() as u32),
+                );
                 planes.push(Frame::from_data(side, side, PixelFormat::Bpp16, plane)?);
             }
-            let dequant: Vec<f32> = (0..side * side * 3)
-                .map(|i| {
-                    let c = i % 3;
-                    let px = i / 3;
-                    planes[c].data[px] as f32 / 65535.0
-                })
-                .collect();
+            arena.recycle_f32(frame_f32);
+            let mut dequant = arena.take_f32(side * side * 3);
+            dequant.extend((0..side * side * 3).map(|i| {
+                let c = i % 3;
+                let px = i / 3;
+                planes[c].data[px] as f32 / 65535.0
+            }));
             // Groundtruth: scalar CNN on each dequantized patch,
             // extracted through the same splitter the native engine
             // uses so both sides see bit-identical patch inputs.

@@ -128,6 +128,12 @@ pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
         ));
     }
     out.push_str(&format!(
+        "  arena: {} buffer takes, {} recycled ({:.0}% reuse)\n",
+        r.arena.reused + r.arena.allocated,
+        r.arena.reused,
+        r.arena.reuse_ratio() * 100.0,
+    ));
+    out.push_str(&format!(
         "  validation {valid}/{} pass",
         r.runs.len()
     ));
@@ -223,6 +229,10 @@ mod tests {
             ],
             stage_util: [0.6, 0.3, 0.1],
             exec_wall: Duration::from_millis(25),
+            arena: crate::util::arena::ArenaStats {
+                reused: 9,
+                allocated: 3,
+            },
             masked,
             runs: vec![dummy_run(), dummy_run()],
         };
@@ -232,6 +242,7 @@ mod tests {
         assert!(s.contains("LCD egress"), "{s}");
         assert!(s.contains("60.0%"), "{s}");
         assert!(s.contains("masked-DES 7.9 FPS"), "{s}");
+        assert!(s.contains("arena: 12 buffer takes, 9 recycled (75% reuse)"), "{s}");
         assert!(s.contains("validation 2/2 pass"), "{s}");
     }
 }

@@ -31,6 +31,7 @@ use crate::fabric::clock::SimTime;
 use crate::iface::{CifModule, LcdModule};
 use crate::render::Mesh;
 use crate::runtime::Runtime;
+use crate::util::arena::{ArenaStats, FrameArena};
 use crate::util::image::Frame;
 use crate::util::par;
 use crate::vpu::cost::{workloads, CostModel, Workload};
@@ -82,6 +83,10 @@ pub struct StreamResult {
     pub stage_util: [f64; 3],
     /// Total wallclock inside `Runtime::execute` across the sweep.
     pub exec_wall: Duration,
+    /// Frame-buffer arena traffic during this sweep (takes served from
+    /// the freelist vs fresh allocations) — steady state should be
+    /// nearly all reuse.
+    pub arena: ArenaStats,
     /// The Masked-mode DES prediction for the same per-frame timings
     /// (simulated time, not wallclock; over `max(frames, 8)` frames).
     pub masked: MaskedResult,
@@ -208,6 +213,11 @@ pub(crate) fn masked_timing_of(cfg: &SystemConfig, run: &FrameRun) -> MaskedTimi
 impl IngestStage {
     /// Generate frame `seed`, push it over CIF into the VPU, and price
     /// its processing with the cost model.
+    ///
+    /// `arena` feeds every frame-sized buffer on this path (work-item
+    /// planes, wire payloads) and gets the VPU-side DRAM copy back
+    /// immediately — with the egress stage recycling its side too,
+    /// steady-state ingest allocates nothing frame-sized.
     pub(crate) fn run(
         &mut self,
         backend: KernelBackend,
@@ -215,22 +225,28 @@ impl IngestStage {
         vpu: &VpuConfig,
         bench: Benchmark,
         seed: u64,
+        arena: &FrameArena,
     ) -> Result<StreamJob> {
-        let item = host::make_work_with(
+        let item = host::make_work_in(
             backend,
             bench,
             seed,
             self.mesh.as_ref(),
             self.weights.as_ref(),
+            arena,
         )?;
 
         // --- CIF: host -> FPGA -> VPU (per plane) --------------------
+        // The wire payload comes from the arena, moves into the VPU-side
+        // frame (`receive_owned`), and is recycled straight back.
         let mut t_cif = SimTime::ZERO;
         let mut planes = 0usize;
         for plane in &item.input_frames {
             self.cif.regs.configure(plane.width, plane.height, plane.format);
-            let (wire, tx) = self.cif.send_frame(plane, SimTime::ZERO)?;
-            let (_got, _t_rx) = self.cam.receive(&wire, SimTime::ZERO)?;
+            let payload = arena.take_u32(plane.pixels());
+            let (wire, tx) = self.cif.send_frame_with(plane, SimTime::ZERO, payload)?;
+            let (got, _t_rx) = self.cam.receive_owned(wire, SimTime::ZERO)?;
+            arena.recycle_u32(got.data);
             t_cif += tx.wire_time;
             planes += 1;
         }
@@ -264,7 +280,17 @@ pub(crate) fn execute_job(rt: &mut Runtime, job: StreamJob) -> Result<ExecutedJo
 impl EgressStage {
     /// Convert the artifact outputs to the LCD frame, push it back to
     /// the host, and validate against the groundtruth.
-    pub(crate) fn run(&mut self, power: &PowerModel, ex: ExecutedJob) -> Result<FrameRun> {
+    ///
+    /// This is where the frame's buffers come home: after validation,
+    /// every frame-sized allocation the frame carried (input planes,
+    /// normalized copies, expected/received frames, wire payload,
+    /// artifact outputs) is recycled into `arena` for the next ingest.
+    pub(crate) fn run(
+        &mut self,
+        power: &PowerModel,
+        ex: ExecutedJob,
+        arena: &FrameArena,
+    ) -> Result<FrameRun> {
         let ExecutedJob {
             job,
             outputs,
@@ -274,11 +300,12 @@ impl EgressStage {
         let out_io = bench.output();
         let (out_frame, accuracy) = match bench {
             Benchmark::Binning | Benchmark::Conv { .. } => (
-                Frame::from_f32_normalized(
+                Frame::from_f32_normalized_in(
                     out_io.width,
                     out_io.height,
                     out_io.format,
                     &outputs[0],
+                    arena.take_u32(out_io.width * out_io.height),
                 )?,
                 None,
             ),
@@ -312,16 +339,32 @@ impl EgressStage {
         };
 
         // --- LCD: VPU -> FPGA -> host --------------------------------
+        // The VPU output frame *moves* onto the wire (LCDQueueFrame
+        // queues the DRAM buffer; it does not copy it).
         self.lcd
             .regs
             .configure(out_frame.width, out_frame.height, out_frame.format);
-        let (wire_back, _t_tx) = self.lcd_drv.send(&out_frame, SimTime::ZERO);
+        let (wire_back, _t_tx) = self.lcd_drv.send_owned(out_frame, SimTime::ZERO);
         let (received, rx) = self.lcd.receive_frame(&wire_back, SimTime::ZERO)?;
         let t_lcd = rx.wire_time;
 
         // --- Host validation -----------------------------------------
         let validation = host::validate(&job.item, &received)?;
         let latency = job.t_cif + job.t_proc + t_lcd;
+
+        // --- Buffer recycling (frame done; DMA slots go back) --------
+        arena.recycle_u32(wire_back.payload);
+        arena.recycle_u32(received.data);
+        for plane in job.item.input_frames {
+            arena.recycle_u32(plane.data);
+        }
+        arena.recycle_u32(job.item.expected.data);
+        for buf in job.item.pjrt_inputs {
+            arena.recycle_f32(buf);
+        }
+        for buf in outputs {
+            arena.recycle_f32(buf);
+        }
 
         Ok(FrameRun {
             bench,
@@ -356,11 +399,14 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         power,
         ingest,
         egress,
+        arena,
         ..
     } = cp;
     let cfg: &SystemConfig = cfg;
     let cost: &CostModel = cost;
     let power: &PowerModel = power;
+    let arena: &FrameArena = arena;
+    let stats0 = arena.stats();
 
     // Per-stage busy wallclock, accumulated from inside each stage's
     // thread (nanoseconds; the pipeline overlaps them).
@@ -375,7 +421,14 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         opts.depth,
         |i| {
             let t0 = Instant::now();
-            let job = ingest.run(backend, cost, &cfg.vpu, bench, opts.seed.wrapping_add(i as u64));
+            let job = ingest.run(
+                backend,
+                cost,
+                &cfg.vpu,
+                bench,
+                opts.seed.wrapping_add(i as u64),
+                arena,
+            );
             timed(&busy[0], t0);
             job
         },
@@ -389,7 +442,7 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         |_, ex: Result<ExecutedJob>| {
             let ex = ex?;
             let t0 = Instant::now();
-            let run = egress.run(power, ex);
+            let run = egress.run(power, ex, arena);
             timed(&busy[2], t0);
             run
         },
@@ -413,6 +466,7 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         stage_busy[2].as_secs_f64() / wall_s,
     ];
     let exec_wall = runs.iter().map(|r| r.t_exec_wall).sum();
+    let s1 = arena.stats();
     Ok(StreamResult {
         bench,
         backend,
@@ -422,6 +476,10 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         stage_busy,
         stage_util,
         exec_wall,
+        arena: ArenaStats {
+            reused: s1.reused - stats0.reused,
+            allocated: s1.allocated - stats0.allocated,
+        },
         masked,
         runs,
     })

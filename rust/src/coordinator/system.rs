@@ -18,6 +18,7 @@ use crate::fabric::bus::{Bus, BusConfig};
 use crate::fabric::clock::SimTime;
 use crate::iface::{CifModule, LcdModule};
 use crate::runtime::{native, Runtime};
+use crate::util::arena::FrameArena;
 use crate::vpu::cost::CostModel;
 use crate::vpu::drivers::{CamGeneric, LcdDriver};
 use crate::vpu::power::PowerModel;
@@ -72,6 +73,11 @@ pub struct CoProcessor {
     pub runtime: Runtime,
     pub cost: CostModel,
     pub power: PowerModel,
+    /// Frame-buffer arena shared by the ingest/egress stages: egress
+    /// recycles each frame's buffers, ingest picks them back up —
+    /// steady-state frame traffic allocates nothing frame-sized (the
+    /// VPU's fixed DMA-slot discipline).
+    pub arena: FrameArena,
     pub(crate) ingest: IngestStage,
     pub(crate) egress: EgressStage,
 }
@@ -103,6 +109,7 @@ impl CoProcessor {
             backend: KernelBackend::from_env(),
             cost: CostModel::new(cfg.vpu),
             power: PowerModel::default(),
+            arena: FrameArena::new(),
             cfg,
             runtime,
             ingest: IngestStage {
@@ -141,11 +148,16 @@ impl CoProcessor {
     /// validated — the three stream stages run back-to-back.
     pub fn run_unmasked(&mut self, bench: Benchmark, seed: u64) -> Result<FrameRun> {
         self.runtime.set_kernel_backend(self.backend);
-        let job = self
-            .ingest
-            .run(self.backend, &self.cost, &self.cfg.vpu, bench, seed)?;
+        let job = self.ingest.run(
+            self.backend,
+            &self.cost,
+            &self.cfg.vpu,
+            bench,
+            seed,
+            &self.arena,
+        )?;
         let ex = stream::execute_job(&mut self.runtime, job)?;
-        self.egress.run(&self.power, ex)
+        self.egress.run(&self.power, ex, &self.arena)
     }
 
     /// Masked-mode phase timings derived from an Unmasked run.

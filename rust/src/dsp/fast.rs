@@ -8,8 +8,9 @@
 //!   shifted contiguous-slice accumulations that LLVM auto-vectorizes;
 //!   only the thin border frame pays for clamped tap windows.
 //! * **row fan-out**: output rows are split into contiguous bands
-//!   dispatched across cores via [`crate::util::par`], the software
-//!   analogue of the 12-SHAVE band split.
+//!   dispatched onto the resident worker pool of [`crate::util::par`],
+//!   the software analogue of the 12-SHAVE band split (no per-call
+//!   thread spawn; band descriptors go to already-parked workers).
 //!
 //! The scalar twins ([`crate::dsp::conv::conv2d_f32`],
 //! [`crate::dsp::binning::binning_f32`]) stay untouched as groundtruth;
@@ -17,7 +18,7 @@
 
 use crate::error::{Error, Result};
 use crate::util::par;
-use crate::util::par::SPAWN_GRAIN_OPS;
+use crate::util::par::GRAIN_OPS;
 
 /// Optimized twin of [`crate::dsp::conv::conv2d_f32`]: 'same' 2-D
 /// cross-correlation, zero padding, identical tap order (u-major, then
@@ -39,7 +40,7 @@ pub fn conv2d_f32_opt(
     if h == 0 || w == 0 {
         return Ok(out);
     }
-    let min_rows = (SPAWN_GRAIN_OPS / (w * k * k).max(1)).max(1);
+    let min_rows = (GRAIN_OPS / (w * k * k).max(1)).max(1);
     par::par_row_bands(&mut out, h, w, min_rows, |y0, band| {
         conv2d_rows(input, h, w, kernel, k, y0, band);
     });
@@ -134,7 +135,7 @@ pub fn binning_f32_opt(input: &[f32], h: usize, w: usize) -> Result<Vec<f32>> {
     if oh == 0 || ow == 0 {
         return Ok(out);
     }
-    let min_rows = (SPAWN_GRAIN_OPS / w.max(1)).max(1);
+    let min_rows = (GRAIN_OPS / w.max(1)).max(1);
     par::par_row_bands(&mut out, oh, ow, min_rows, |oy0, band| {
         for (r, orow) in band.chunks_exact_mut(ow).enumerate() {
             let y = (oy0 + r) * 2;

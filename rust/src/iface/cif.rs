@@ -74,6 +74,19 @@ impl CifModule {
     /// Transmit one frame starting at `now`. Errors if the configuration
     /// cannot sustain it (the paper's infeasible operating points).
     pub fn send_frame(&mut self, frame: &Frame, now: SimTime) -> Result<(WireFrame, TxReport)> {
+        self.send_frame_with(frame, now, Vec::new())
+    }
+
+    /// [`CifModule::send_frame`] building the wire payload in a recycled
+    /// buffer (cleared first; capacity reused) — the arena path of the
+    /// streaming coordinator, so steady-state ingest allocates no
+    /// frame-sized wire buffers.
+    pub fn send_frame_with(
+        &mut self,
+        frame: &Frame,
+        now: SimTime,
+        payload: Vec<u32>,
+    ) -> Result<(WireFrame, TxReport)> {
         if !self.regs.enabled
             || self.regs.width as usize != frame.width
             || self.regs.height as usize != frame.height
@@ -117,7 +130,7 @@ impl CifModule {
         };
         self.buffer_high_water = self.buffer_high_water.max(occupancy);
 
-        let wire = WireFrame::from_frame(frame);
+        let wire = WireFrame::from_frame_with(frame, payload);
         let wire_time = timing::frame_time(
             &self.clock,
             frame.width,

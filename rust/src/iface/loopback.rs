@@ -62,9 +62,13 @@ pub fn run_loopback(
 
     // VPU echo: CamGeneric receives, LCDQueueFrame retransmits the same
     // payload (the paper's loopback firmware). The wire frame is
-    // regenerated VPU-side, so the CRC is recomputed there too.
-    let echoed = wire_out.to_frame()?;
-    let wire_back = crate::iface::signals::WireFrame::from_frame(&echoed);
+    // regenerated VPU-side, so the CRC is recomputed there too — but
+    // the payload itself *moves* through the echo (`into_frame` +
+    // `from_frame_owned`): like the firmware, which queues the received
+    // DRAM buffer straight back out, the echo is allocation-free per
+    // frame.
+    let echoed = wire_out.into_frame()?;
+    let wire_back = crate::iface::signals::WireFrame::from_frame_owned(echoed);
 
     let (received, rx) = lcd.receive_frame(&wire_back, tx.done_at)?;
 

@@ -69,14 +69,42 @@ pub fn extract_crc(line: &[u32], format: PixelFormat) -> u16 {
 
 impl WireFrame {
     /// Build the wire form of a frame (Tx side: compute + append CRC).
+    /// Borrowing constructor — the caller keeps the frame; the payload
+    /// is copied (into a fresh allocation; see [`WireFrame::from_frame_with`]
+    /// for the recycled-buffer variant and [`WireFrame::from_frame_owned`]
+    /// for the move).
     pub fn from_frame(frame: &Frame) -> WireFrame {
+        WireFrame::from_frame_with(frame, Vec::new())
+    }
+
+    /// [`WireFrame::from_frame`] copying the payload into a recycled
+    /// buffer (cleared first; capacity reused) — the arena path of the
+    /// streaming coordinator.
+    pub fn from_frame_with(frame: &Frame, mut payload: Vec<u32>) -> WireFrame {
+        payload.clear();
+        payload.extend_from_slice(&frame.data);
+        let crc = payload_crc(&payload, frame.format);
+        WireFrame {
+            width: frame.width,
+            height: frame.height,
+            format: frame.format,
+            payload,
+            crc_line: make_crc_line(crc, frame.width, frame.format),
+        }
+    }
+
+    /// Build the wire form by **moving** the frame's payload onto the
+    /// wire — no copy at all. The DMA-handoff analogue: the VPU's
+    /// loopback/egress firmware queues the received DRAM buffer for
+    /// transmission rather than duplicating it.
+    pub fn from_frame_owned(frame: Frame) -> WireFrame {
         let crc = payload_crc(&frame.data, frame.format);
         WireFrame {
             width: frame.width,
             height: frame.height,
             format: frame.format,
-            payload: frame.data.clone(),
             crc_line: make_crc_line(crc, frame.width, frame.format),
+            payload: frame.data,
         }
     }
 
@@ -93,6 +121,18 @@ impl WireFrame {
             self.format,
             self.payload.clone(),
         )
+    }
+
+    /// [`WireFrame::to_frame`] by value: validate CRC and **move** the
+    /// payload into the returned frame instead of cloning it. On a CRC
+    /// mismatch the (corrupt) payload is dropped with the wire frame.
+    pub fn into_frame(self) -> Result<Frame> {
+        let computed = payload_crc(&self.payload, self.format);
+        let received = extract_crc(&self.crc_line, self.format);
+        if computed != received {
+            return Err(Error::CrcMismatch { computed, received });
+        }
+        Frame::from_data(self.width, self.height, self.format, self.payload)
     }
 
     /// Wire pixels transmitted, including the CRC line.
@@ -134,6 +174,27 @@ mod tests {
             let back = wire.to_frame().unwrap();
             assert_eq!(back, f);
         }
+    }
+
+    #[test]
+    fn owned_and_recycled_constructors_match_borrowing_one() {
+        let f = random_frame(7, 24, 12, PixelFormat::Bpp16);
+        let borrowed = WireFrame::from_frame(&f);
+        let with_buf = WireFrame::from_frame_with(&f, vec![9u32; 1000]);
+        let owned = WireFrame::from_frame_owned(f.clone());
+        assert_eq!(borrowed, with_buf);
+        assert_eq!(borrowed, owned);
+        // into_frame moves the payload back out, bit-identical.
+        let back = owned.into_frame().unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn into_frame_rejects_corruption_like_to_frame() {
+        let f = random_frame(8, 16, 16, PixelFormat::Bpp8);
+        let mut wire = WireFrame::from_frame(&f);
+        wire.corrupt_bit(33, 2);
+        assert!(matches!(wire.into_frame(), Err(Error::CrcMismatch { .. })));
     }
 
     #[test]

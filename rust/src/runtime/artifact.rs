@@ -208,6 +208,20 @@ impl Manifest {
             ],
         );
         add("cnn_frame_1024", &[&[1024, 1024, 3]], &[&[64, 2]], &[]);
+        // Multi-frame CNN artifacts (ISSUE 3): `cnn_frame_b1` is the
+        // scalar twin the `_b{N}` fallback convention resolves to,
+        // `cnn_frame_b4` classifies 4 full frames (4 x 64 patches) in
+        // one call — fanned across the worker pool by the native engine.
+        add("cnn_frame_b1", &[&[1024, 1024, 3]], &[&[64, 2]], &[]);
+        add(
+            "cnn_frame_b4",
+            &[&[4, 1024, 1024, 3]],
+            &[&[256, 2]],
+            &[
+                ("batch", Json::Num(4.0)),
+                ("scalar_artifact", Json::Str("cnn_frame_b1".into())),
+            ],
+        );
         Manifest {
             dir: dir.to_path_buf(),
             artifacts,
@@ -291,6 +305,8 @@ mod tests {
             "conv_1024_k13",
             "render_1024",
             "cnn_frame_1024",
+            "cnn_frame_b1",
+            "cnn_frame_b4",
             "cnn_patch_b1",
             "cnn_patch_b64",
         ] {
@@ -300,6 +316,10 @@ mod tests {
         assert_eq!(b64.meta_usize("batch"), Some(64));
         assert_eq!(b64.inputs[0].numel(), 64 * 128 * 128 * 3);
         assert_eq!(b64.outputs[0].numel(), 64 * 2);
+        let fb4 = m.get("cnn_frame_b4").unwrap();
+        assert_eq!(fb4.meta_usize("batch"), Some(4));
+        assert_eq!(fb4.inputs[0].shape, vec![4, 1024, 1024, 3]);
+        assert_eq!(fb4.outputs[0].numel(), 4 * 64 * 2);
         // Parsed manifests are never marked builtin.
         assert!(!Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap().builtin);
     }

@@ -61,8 +61,9 @@ impl ExecutionPlan {
 }
 
 /// Name of the single-item artifact behind a batched one:
-/// `cnn_patch_b64` with batch 64 → `cnn_patch_b1`. `None` when `name`
-/// does not carry the `_b{batch}` suffix convention.
+/// `cnn_patch_b64` with batch 64 → `cnn_patch_b1`, `cnn_frame_b4` with
+/// batch 4 → `cnn_frame_b1`. `None` when `name` does not carry the
+/// `_b{batch}` suffix convention.
 pub fn scalar_twin(name: &str, batch: usize) -> Option<String> {
     name.strip_suffix(&format!("_b{batch}"))
         .map(|stem| format!("{stem}_b1"))
@@ -76,6 +77,7 @@ mod tests {
     fn scalar_twin_follows_suffix_convention() {
         assert_eq!(scalar_twin("cnn_patch_b64", 64).as_deref(), Some("cnn_patch_b1"));
         assert_eq!(scalar_twin("cnn_patch_b8", 8).as_deref(), Some("cnn_patch_b1"));
+        assert_eq!(scalar_twin("cnn_frame_b4", 4).as_deref(), Some("cnn_frame_b1"));
         assert_eq!(scalar_twin("cnn_patch_b64", 32), None);
         assert_eq!(scalar_twin("binning_2048", 64), None);
     }

@@ -211,10 +211,12 @@ impl Runtime {
     /// Execute a batched artifact over `batch` items.
     ///
     /// When the manifest carries `name` (e.g. the builtin
-    /// `cnn_patch_b64`) this is one batched execute. When it does not
-    /// (older artifact sets), the call transparently falls back to the
-    /// scalar `_b1` twin, slicing every input into `batch` equal chunks
-    /// and concatenating the per-item outputs — results are identical
+    /// `cnn_patch_b64` or the multi-frame `cnn_frame_b4`) this is one
+    /// batched execute — on the native engine the items fan out across
+    /// the resident worker pool. When it does not (older artifact
+    /// sets), the call transparently falls back to the scalar `_b1`
+    /// twin, slicing every input into `batch` equal chunks and
+    /// concatenating the per-item outputs — results are identical
     /// either way (pinned in `tests/kernel_equivalence.rs`).
     pub fn execute_batched(
         &mut self,
@@ -335,6 +337,7 @@ mod tests {
         assert_eq!(rt.engine_name(), "native");
         assert_eq!(rt.platform(), "native-cpu");
         assert!(rt.artifact_names().contains(&"cnn_patch_b64".to_string()));
+        assert!(rt.artifact_names().contains(&"cnn_frame_b4".to_string()));
     }
 
     #[test]

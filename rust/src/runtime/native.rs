@@ -11,17 +11,25 @@
 //! path — which is what lets the streaming pipeline and the CI backend
 //! matrix run end-to-end on machines without the `xla` crate.
 //!
-//! Batched artifacts (`cnn_patch_bN`) run each item through the same
-//! per-patch forward pass used by the `_b1` artifact, so the batched
-//! output is bit-for-bit identical to N serial calls (pinned by
-//! `tests/kernel_equivalence.rs`); the win is the per-call overhead
-//! (spec lookup, validation, output allocation) paid once per batch.
+//! Batched artifacts (`cnn_patch_bN`, `cnn_frame_bN`) run each item
+//! through the same per-patch forward pass used by the `_b1` artifact
+//! and **fan the patches across the resident worker pool**
+//! (`util::par::par_items`): every patch is an independent forward
+//! pass, so the fan-out is bit-for-bit identical to N serial calls
+//! (pinned by `tests/kernel_equivalence.rs`). The pool is
+//! nesting-aware, so the per-patch conv layers inside each worker run
+//! inline instead of oversubscribing. Wins: per-call overhead (spec
+//! lookup, validation, output allocation) paid once per batch, plus
+//! true multi-core patch parallelism — the software analogue of the
+//! paper's 12 SHAVEs each classifying their own patches.
 
 use crate::cnn::{self, layers::FeatureMap, ships, Weights};
 use crate::error::{Error, Result};
 use crate::render::{self, Mesh, Pose};
 use crate::runtime::artifact::{ArtifactSpec, Manifest};
+use crate::util::par;
 use crate::KernelBackend;
+use std::sync::Mutex;
 
 /// Seed of the deterministic synthetic CNN weights used when no
 /// `cnn_weights.bin` exists (builtin-manifest runs). Host groundtruth
@@ -157,22 +165,42 @@ impl NativeEngine {
                     )))
                 }
             };
-            self.ensure_chip(h, w, c);
             let per = h * w * c;
-            let backend = self.backend;
-            let mut logits = Vec::with_capacity(batch * 2);
-            for item in inputs[0].chunks_exact(per).take(batch) {
-                self.chip.data.copy_from_slice(item);
-                let l = cnn::forward(backend, self.require_weights()?, &self.chip)?;
-                logits.extend_from_slice(&l);
+            // The name's batch suffix and the spec shape must agree —
+            // a rank-3 spec behind a `_bN` name would otherwise send
+            // out-of-bounds patch offsets into the fan-out below.
+            if inputs[0].len() != batch * per {
+                return Err(Error::Validation(format!(
+                    "{name}: input carries {} samples, batch {batch} x {:?} needs {}",
+                    inputs[0].len(),
+                    shape,
+                    batch * per
+                )));
             }
-            out.push(logits);
+            if batch == 1 {
+                // Single-patch hot path: reuse the engine's scratch chip.
+                self.ensure_chip(h, w, c);
+                self.chip.data.copy_from_slice(&inputs[0][..per]);
+                let l = cnn::forward(self.backend, self.require_weights()?, &self.chip)?;
+                out.push(l.to_vec());
+            } else {
+                let input = inputs[0];
+                let mut logits = vec![0f32; batch * 2];
+                run_patches(
+                    self.backend,
+                    self.require_weights()?,
+                    &mut logits,
+                    (h, w, c),
+                    |p, chip| chip.data.copy_from_slice(&input[p * per..][..per]),
+                )?;
+                out.push(logits);
+            }
         } else if name.starts_with("cnn_frame_") {
             let t = &spec.inputs[0];
-            let side = if t.shape.len() == 3 {
-                t.shape[0]
-            } else {
-                (((t.numel() / 3) as f64).sqrt()).round() as usize
+            let (nframes, side) = match t.shape.len() {
+                4 => (t.shape[0], t.shape[1]),
+                3 => (1, t.shape[0]),
+                _ => (1, (((t.numel() / 3) as f64).sqrt()).round() as usize),
             };
             if side % PATCH != 0 {
                 return Err(Error::Validation(format!(
@@ -180,16 +208,29 @@ impl NativeEngine {
                 )));
             }
             let grid = side / PATCH;
-            self.ensure_chip(PATCH, PATCH, 3);
-            let backend = self.backend;
-            let mut logits = Vec::with_capacity(grid * grid * 2);
-            for gy in 0..grid {
-                for gx in 0..grid {
-                    ships::extract_chip_into(inputs[0], side, PATCH, gy, gx, &mut self.chip);
-                    let l = cnn::forward(backend, self.require_weights()?, &self.chip)?;
-                    logits.extend_from_slice(&l);
-                }
+            let per_frame = grid * grid;
+            let plane = side * side * 3;
+            let input = inputs[0];
+            if input.len() != nframes * plane {
+                return Err(Error::Validation(format!(
+                    "{name}: input carries {} samples, {nframes} frame(s) of side \
+                     {side} need {}",
+                    input.len(),
+                    nframes * plane
+                )));
             }
+            let mut logits = vec![0f32; nframes * per_frame * 2];
+            run_patches(
+                self.backend,
+                self.require_weights()?,
+                &mut logits,
+                (PATCH, PATCH, 3),
+                |p, chip| {
+                    let (f, rem) = (p / per_frame, p % per_frame);
+                    let frame = &input[f * plane..][..plane];
+                    ships::extract_chip_into(frame, side, PATCH, rem / grid, rem % grid, chip);
+                },
+            )?;
             out.push(logits);
         } else {
             return Err(Error::UnknownArtifact(format!(
@@ -197,6 +238,55 @@ impl NativeEngine {
             )));
         }
         Ok(())
+    }
+}
+
+/// Fan independent patch forward passes across the resident worker
+/// pool: `fill(patch_index, chip)` loads each chip and the patch's
+/// logit pair lands in `logits[2 * patch ..]` (`logits.len() / 2`
+/// patches total). Each executing thread reuses a thread-local scratch
+/// chip (pool workers are resident, so steady-state batches allocate
+/// nothing patch-sized) and patches never share state; the first
+/// kernel error (if any) aborts the remaining patches of its band and
+/// is returned. Bit-exact with a serial loop — each patch is an
+/// independent forward pass, and nested conv fan-out inside a band
+/// runs inline.
+fn run_patches<F>(
+    backend: KernelBackend,
+    weights: &Weights,
+    logits: &mut [f32],
+    (h, w, c): (usize, usize, usize),
+    fill: F,
+) -> Result<()>
+where
+    F: Fn(usize, &mut FeatureMap) + Sync,
+{
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<FeatureMap> =
+            std::cell::RefCell::new(FeatureMap::new(0, 0, 0));
+    }
+    let err: Mutex<Option<Error>> = Mutex::new(None);
+    par::par_items(logits, 2, 1, |p0, band| {
+        SCRATCH.with(|cell| {
+            let mut chip = cell.borrow_mut();
+            if chip.h != h || chip.w != w || chip.c != c {
+                *chip = FeatureMap::new(h, w, c);
+            }
+            for (j, pair) in band.chunks_exact_mut(2).enumerate() {
+                fill(p0 + j, &mut chip);
+                match cnn::forward(backend, weights, &chip) {
+                    Ok(l) => pair.copy_from_slice(&l),
+                    Err(e) => {
+                        err.lock().unwrap().get_or_insert(e);
+                        return;
+                    }
+                }
+            }
+        });
+    });
+    match err.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
 }
 
@@ -259,6 +349,31 @@ mod tests {
         let gt = render::depth_render(&tris, 128, 128);
         assert_eq!(out[0], gt);
         assert!(render::raster::coverage(&gt) > 100, "model not visible");
+    }
+
+    #[test]
+    fn batched_patch_name_with_scalar_shape_is_rejected() {
+        // A `_b4` name over a rank-3 (single-patch) spec must fail
+        // validation instead of panicking inside the patch fan-out.
+        use crate::runtime::artifact::TensorSpec;
+        let (mut eng, _) = engine_and_manifest();
+        let spec = ArtifactSpec {
+            name: "cnn_patch_b4".into(),
+            file: "x.hlo.txt".into(),
+            inputs: vec![TensorSpec {
+                shape: vec![128, 128, 3],
+                dtype: "f32".into(),
+            }],
+            outputs: vec![TensorSpec {
+                shape: vec![4, 2],
+                dtype: "f32".into(),
+            }],
+            meta: Default::default(),
+        };
+        let x = vec![0f32; 128 * 128 * 3];
+        let mut out = Vec::new();
+        let got = eng.execute(&spec, &[&x], &mut out);
+        assert!(matches!(&got, Err(Error::Validation(_))), "{got:?}");
     }
 
     #[test]

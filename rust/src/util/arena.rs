@@ -1,0 +1,218 @@
+//! Frame-buffer arena — a small freelist of pixel/sample buffers
+//! recycled across pipeline iterations, the software analogue of the
+//! VPU's fixed DMA frame slots (the Myriad2 does not malloc a DRAM
+//! buffer per frame; it cycles the same double-buffered slots).
+//!
+//! The streaming coordinator allocates multi-megabyte payloads at every
+//! hop (host frame, normalized f32 plane, CIF wire payload, LCD output
+//! frame); with the arena, the egress stage returns each frame's
+//! buffers after validation and the ingest stage picks them back up on
+//! the next iteration — steady-state streaming allocates nothing
+//! frame-sized. Buffers are handed out **cleared** (`len == 0`) with
+//! their capacity intact; callers `extend`/fill them.
+//!
+//! The arena is `Sync` (mutex-guarded freelists) so the three pipeline
+//! stages can share one instance across their threads: recycling is
+//! cross-stage by design — egress feeds ingest.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Buffers smaller than this are dropped instead of recycled — tiny
+/// vectors (conv kernels, pose arrays) would pollute the freelist
+/// without ever saving a meaningful allocation.
+const MIN_RECYCLE_ELEMS: usize = 1 << 10;
+
+/// Freelist depth per element type; beyond this, recycled buffers are
+/// simply dropped (bounds worst-case memory to a few frames per type,
+/// like the VPU's fixed slot count — a depth-1 pipeline keeps at most
+/// ~5 frame-sized buffers per type in flight).
+const MAX_FREE: usize = 8;
+
+/// Running reuse counters (how often a take was served from the
+/// freelist vs. a fresh allocation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Takes served by a recycled buffer.
+    pub reused: usize,
+    /// Takes that fell through to a fresh allocation.
+    pub allocated: usize,
+}
+
+impl ArenaStats {
+    /// Fraction of takes served without allocating (0 when idle).
+    pub fn reuse_ratio(&self) -> f64 {
+        let total = self.reused + self.allocated;
+        if total == 0 {
+            0.0
+        } else {
+            self.reused as f64 / total as f64
+        }
+    }
+}
+
+/// The recycling arena: one freelist per element type.
+#[derive(Debug, Default)]
+pub struct FrameArena {
+    u32s: Mutex<Vec<Vec<u32>>>,
+    f32s: Mutex<Vec<Vec<f32>>>,
+    reused: AtomicUsize,
+    allocated: AtomicUsize,
+}
+
+impl FrameArena {
+    pub fn new() -> FrameArena {
+        FrameArena::default()
+    }
+
+    /// A cleared `u32` buffer with capacity for at least `len` elements
+    /// — the smallest sufficient recycled buffer when one fits, freshly
+    /// allocated otherwise.
+    pub fn take_u32(&self, len: usize) -> Vec<u32> {
+        take(&self.u32s, len, &self.reused, &self.allocated)
+    }
+
+    /// Return a `u32` buffer to the freelist (dropped when tiny or the
+    /// freelist is full).
+    pub fn recycle_u32(&self, buf: Vec<u32>) {
+        recycle(&self.u32s, buf);
+    }
+
+    /// A cleared `f32` buffer with capacity for at least `len` elements.
+    pub fn take_f32(&self, len: usize) -> Vec<f32> {
+        take(&self.f32s, len, &self.reused, &self.allocated)
+    }
+
+    /// Return an `f32` buffer to the freelist.
+    pub fn recycle_f32(&self, buf: Vec<f32>) {
+        recycle(&self.f32s, buf);
+    }
+
+    /// Reuse counters since construction.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            reused: self.reused.load(Ordering::Relaxed),
+            allocated: self.allocated.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn take<T>(
+    free: &Mutex<Vec<Vec<T>>>,
+    len: usize,
+    reused: &AtomicUsize,
+    allocated: &AtomicUsize,
+) -> Vec<T> {
+    let mut list = free.lock().unwrap();
+    // Best fit: the smallest buffer that covers the request, so a tiny
+    // take (a pose line) never steals a multi-megapixel frame slot
+    // from the next frame-sized take.
+    let fit = list
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| b.capacity() >= len)
+        .min_by_key(|(_, b)| b.capacity())
+        .map(|(i, _)| i);
+    if let Some(i) = fit {
+        let mut buf = list.swap_remove(i);
+        drop(list);
+        buf.clear();
+        reused.fetch_add(1, Ordering::Relaxed);
+        return buf;
+    }
+    drop(list);
+    allocated.fetch_add(1, Ordering::Relaxed);
+    Vec::with_capacity(len)
+}
+
+fn recycle<T>(free: &Mutex<Vec<Vec<T>>>, buf: Vec<T>) {
+    if buf.capacity() < MIN_RECYCLE_ELEMS {
+        return;
+    }
+    let mut list = free.lock().unwrap();
+    if list.len() < MAX_FREE {
+        list.push(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_take_reuses_capacity() {
+        let a = FrameArena::new();
+        let mut b = a.take_u32(4096);
+        assert_eq!(b.len(), 0);
+        assert!(b.capacity() >= 4096);
+        b.extend(0..4096u32);
+        a.recycle_u32(b);
+        let b2 = a.take_u32(4096);
+        assert_eq!(b2.len(), 0, "recycled buffers come back cleared");
+        assert!(b2.capacity() >= 4096);
+        let s = a.stats();
+        assert_eq!((s.reused, s.allocated), (1, 1));
+        assert!((s.reuse_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn undersized_buffers_are_not_handed_out() {
+        let a = FrameArena::new();
+        a.recycle_f32(Vec::with_capacity(2048));
+        let big = a.take_f32(1 << 20);
+        assert!(big.capacity() >= 1 << 20);
+        assert_eq!(a.stats().reused, 0, "2048-cap buffer must not serve 1M take");
+        // The small one is still there for a small take.
+        assert!(a.take_f32(1024).capacity() >= 1024);
+        assert_eq!(a.stats().reused, 1);
+    }
+
+    #[test]
+    fn tiny_buffers_and_overflow_are_dropped() {
+        let a = FrameArena::new();
+        a.recycle_u32(Vec::with_capacity(16)); // below MIN_RECYCLE_ELEMS
+        let _ = a.take_u32(8);
+        assert_eq!(a.stats().reused, 0, "tiny recycles are dropped");
+        for _ in 0..(MAX_FREE + 8) {
+            a.recycle_u32(Vec::with_capacity(MIN_RECYCLE_ELEMS));
+        }
+        let mut held = Vec::new();
+        for _ in 0..(MAX_FREE + 8) {
+            held.push(a.take_u32(MIN_RECYCLE_ELEMS));
+        }
+        drop(held);
+        assert_eq!(a.stats().reused, MAX_FREE, "freelist depth is bounded");
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let a = FrameArena::new();
+        a.recycle_u32(Vec::with_capacity(1 << 20));
+        a.recycle_u32(Vec::with_capacity(2048));
+        let small = a.take_u32(1024);
+        assert!(small.capacity() < 1 << 20, "tiny take must not steal the frame slot");
+        let big = a.take_u32(1 << 20);
+        assert!(big.capacity() >= 1 << 20);
+        let s = a.stats();
+        assert_eq!((s.reused, s.allocated), (2, 0));
+    }
+
+    #[test]
+    fn arena_is_shareable_across_threads() {
+        let a = FrameArena::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..32 {
+                        let mut b = a.take_u32(4096);
+                        b.resize(4096, 7u32);
+                        a.recycle_u32(b);
+                    }
+                });
+            }
+        });
+        let s = a.stats();
+        assert_eq!(s.reused + s.allocated, 4 * 32);
+        assert!(s.reused > 0, "threads must actually share the freelist");
+    }
+}

@@ -114,8 +114,18 @@ impl Frame {
     /// f32 view in [0, 1] — the conversion applied before feeding the VPU
     /// artifacts (the paper converts 8-bit inputs to FP on the VPU).
     pub fn to_f32_normalized(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.to_f32_normalized_into(&mut out);
+        out
+    }
+
+    /// [`Frame::to_f32_normalized`] into a caller-supplied buffer
+    /// (cleared first) — the arena-recycling path of the streaming
+    /// coordinator.
+    pub fn to_f32_normalized_into(&self, out: &mut Vec<f32>) {
         let scale = 1.0 / self.format.max_value() as f32;
-        self.data.iter().map(|&p| p as f32 * scale).collect()
+        out.clear();
+        out.extend(self.data.iter().map(|&p| p as f32 * scale));
     }
 
     /// Quantize a f32 image in [0, 1] into a frame at `format` depth.
@@ -125,6 +135,20 @@ impl Frame {
         format: PixelFormat,
         vals: &[f32],
     ) -> Result<Frame> {
+        Frame::from_f32_normalized_in(width, height, format, vals, Vec::new())
+    }
+
+    /// [`Frame::from_f32_normalized`] quantizing into a recycled pixel
+    /// buffer (cleared first; its capacity is reused). Both entry
+    /// points share this quantization, so arena and non-arena frames
+    /// are bit-identical.
+    pub fn from_f32_normalized_in(
+        width: usize,
+        height: usize,
+        format: PixelFormat,
+        vals: &[f32],
+        mut data: Vec<u32>,
+    ) -> Result<Frame> {
         if vals.len() != width * height {
             return Err(Error::Geometry(format!(
                 "expected {} values, got {}",
@@ -133,10 +157,10 @@ impl Frame {
             )));
         }
         let max = format.max_value() as f32;
-        let data = vals
-            .iter()
-            .map(|&v| (v.clamp(0.0, 1.0) * max).round() as u32)
-            .collect();
+        data.clear();
+        for &v in vals {
+            data.push((v.clamp(0.0, 1.0) * max).round() as u32);
+        }
         Ok(Frame {
             width,
             height,

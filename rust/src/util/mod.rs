@@ -5,6 +5,7 @@
 //! `criterion`, `rand`) are unavailable; this module provides the minimal
 //! replacements the rest of the crate needs (DESIGN.md §9).
 
+pub mod arena;
 pub mod image;
 pub mod json;
 pub mod par;

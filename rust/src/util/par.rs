@@ -1,26 +1,69 @@
-//! Scoped-thread row fan-out — the software analogue of the paper's
-//! 12-SHAVE work split, where each SHAVE owns a contiguous band of image
-//! rows (§III-C: "the image is split into bands distributed to the
-//! SHAVEs").
+//! Persistent SHAVE-style worker pool — the software analogue of the
+//! paper's 12 resident SHAVEs, where each SHAVE owns a contiguous band
+//! of image rows (§III-C: "the image is split into bands distributed to
+//! the SHAVEs").
 //!
-//! `std::thread::scope` lets the worker closures borrow the caller's
-//! input slices directly (no `Arc`, no allocation); each worker receives
-//! a disjoint `chunks_mut` band of the output, so the split is safe by
-//! construction. Small workloads run inline — a thread spawn costs more
-//! than a few thousand multiply-accumulates.
+//! Earlier revisions paid a full `std::thread::scope` spawn/join on
+//! every kernel call; the Myriad2 instead keeps its SHAVEs resident and
+//! DMA-feeds them band descriptors. [`par_row_bands`] / [`par_items`]
+//! now do the same in software: `max_workers() - 1` long-lived threads
+//! park on a shared injector queue, each call enqueues band descriptors
+//! (lifetime-erased closures guarded by a completion barrier), and the
+//! calling thread runs one band itself and then helps drain the queue
+//! until its scope completes. Workers borrow the caller's slices
+//! directly — the scope does not return until every band has run,
+//! which is what makes the lifetime erasure sound.
+//!
+//! The pool is **nesting-aware**: a thread that is already executing
+//! pool work (a resident worker, or a caller running its own band) runs
+//! any nested fan-out inline instead of re-entering the injector — no
+//! oversubscription, no deadlock, and bit-identical results (every band
+//! body computes rows/items independently, so the split never changes
+//! per-row arithmetic).
 
-use std::sync::OnceLock;
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Minimum scalar ops (multiply-accumulates, pixel reads, …) a worker
 /// band must amortize before [`par_row_bands`] callers should let it
-/// spawn a thread; shared by the dsp/cnn fast tiers so the grain is
-/// tuned in one place.
-pub const SPAWN_GRAIN_OPS: usize = 1 << 15;
+/// leave the calling thread; shared by the dsp/cnn fast tiers so the
+/// grain is tuned in one place. Half the old thread-spawn grain: a pool
+/// dispatch is a queue push + condvar wake (~1 µs), not a thread spawn
+/// (~50 µs), so finer-grained fan-out is now profitable.
+pub const GRAIN_OPS: usize = 1 << 14;
+
+/// Test-visible worker-count override (0 = none). [`max_workers`] caches
+/// the `SPACECODESIGN_WORKERS` env var in a `OnceLock` on first use, so
+/// tests that need a specific count after that must go through
+/// [`set_max_workers`] instead of the environment.
+static WORKER_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override [`max_workers`] at runtime (tests, embedders): `n >= 1`
+/// forces that count for subsequent fan-out decisions, `0` clears the
+/// override and restores the cached env/cores default.
+///
+/// Safe at any point: resident pool threads are sized once (at first
+/// fan-out) from the then-current count, but correctness never depends
+/// on pool size — the calling thread always helps drain its own scope,
+/// so a count larger than the resident pool still completes, and every
+/// band body is split-invariant (bit-identical results for any count).
+pub fn set_max_workers(n: usize) {
+    WORKER_OVERRIDE.store(n, Ordering::Relaxed);
+}
 
 /// Worker cap: `min(12, available cores)` — 12 mirroring the Myriad2's
 /// SHAVE count — overridable via `SPACECODESIGN_WORKERS` (1 disables
-/// fan-out entirely).
+/// fan-out entirely). The env var is read **once** and cached in a
+/// `OnceLock`; setting it after the first call has no effect (tests use
+/// [`set_max_workers`], which always wins over the cache).
 pub fn max_workers() -> usize {
+    let forced = WORKER_OVERRIDE.load(Ordering::Relaxed);
+    if forced != 0 {
+        return forced;
+    }
     static WORKERS: OnceLock<usize> = OnceLock::new();
     *WORKERS.get_or_init(|| {
         if let Some(n) = std::env::var("SPACECODESIGN_WORKERS")
@@ -36,33 +79,223 @@ pub fn max_workers() -> usize {
     })
 }
 
+thread_local! {
+    /// True while this thread is executing pool work (resident workers
+    /// always; callers while running their own band / draining).
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is already executing pool work — nested
+/// fan-out calls check this and run inline instead of oversubscribing.
+pub fn on_pool_worker() -> bool {
+    IN_POOL.with(|f| f.get())
+}
+
+/// Completion barrier for one scoped fan-out: counts outstanding band
+/// jobs and stows the first panic payload for re-raising on the caller.
+struct ScopeState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// One queued band descriptor. `run`'s true lifetime is the caller's
+/// borrow scope; [`scope_run`] erases it to `'static` and guarantees the
+/// borrow outlives the job by blocking until `pending` reaches zero.
+struct Job {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    scope: Arc<ScopeState>,
+}
+
+/// The shared injector the resident workers park on.
+struct Injector {
+    queue: Mutex<VecDeque<Job>>,
+    work: Condvar,
+}
+
+impl Injector {
+    fn try_pop(&self) -> Option<Job> {
+        self.queue.lock().unwrap().pop_front()
+    }
+}
+
+/// The process-wide pool: `max_workers() - 1` resident threads (the
+/// calling thread is the remaining lane), spawned lazily on first use.
+fn injector() -> &'static Arc<Injector> {
+    static POOL: OnceLock<Arc<Injector>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let inj = Arc::new(Injector {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+        });
+        for i in 0..max_workers().saturating_sub(1) {
+            let inj = Arc::clone(&inj);
+            std::thread::Builder::new()
+                .name(format!("shave-{i}"))
+                .spawn(move || worker_loop(&inj))
+                .expect("spawn pool worker");
+        }
+        inj
+    })
+}
+
+fn worker_loop(inj: &Injector) {
+    IN_POOL.with(|f| f.set(true));
+    loop {
+        let job = {
+            let mut q = inj.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = inj.work.wait(q).unwrap();
+            }
+        };
+        run_job(job);
+    }
+}
+
+/// Run one job, routing a panic into its scope instead of killing the
+/// resident worker; always decrements the scope's pending count.
+fn run_job(job: Job) {
+    let Job { run, scope } = job;
+    if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run)) {
+        scope.panic.lock().unwrap().get_or_insert(payload);
+    }
+    let mut pending = scope.pending.lock().unwrap();
+    *pending -= 1;
+    if *pending == 0 {
+        scope.done.notify_all();
+    }
+}
+
+/// A lifetime-bound band descriptor handed to [`scope_run`].
+type BandJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// Submit `jobs` to the pool, run `local` on the calling thread, then
+/// help drain the injector until every submitted job has completed.
+/// Panics from any band (including `local`) are re-raised here only
+/// after the barrier clears.
+///
+/// Safety of the lifetime erasure: the closures borrow from the caller
+/// (`'env`), and this function does not return — or unwind — before
+/// `pending == 0`, so no job can outlive the borrows it captured.
+fn scope_run<'env>(jobs: Vec<BandJob<'env>>, local: impl FnOnce()) {
+    let scope = Arc::new(ScopeState {
+        pending: Mutex::new(jobs.len()),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    let inj = injector();
+    {
+        let mut q = inj.queue.lock().unwrap();
+        for run in jobs {
+            // SAFETY: see the function doc — the barrier below outlives
+            // every job, so 'env strictly outlives each erased closure.
+            let run = unsafe { std::mem::transmute::<BandJob<'env>, BandJob<'static>>(run) };
+            q.push_back(Job {
+                run,
+                scope: Arc::clone(&scope),
+            });
+        }
+    }
+    inj.work.notify_all();
+
+    // The caller is one of the SHAVE lanes: run its own band, then keep
+    // pulling queued jobs (its own or other scopes') until this scope's
+    // barrier clears — so completion never depends on pool size. A
+    // panicking local band must NOT unwind before the barrier (queued
+    // jobs still borrow the caller's frame), so it is caught here and
+    // re-raised after the drain.
+    let was = IN_POOL.with(|f| f.replace(true));
+    let local_panic = std::panic::catch_unwind(std::panic::AssertUnwindSafe(local)).err();
+    loop {
+        if *scope.pending.lock().unwrap() == 0 {
+            break;
+        }
+        match inj.try_pop() {
+            Some(job) => run_job(job),
+            None => {
+                let mut pending = scope.pending.lock().unwrap();
+                while *pending != 0 {
+                    pending = scope.done.wait(pending).unwrap();
+                }
+                break;
+            }
+        }
+    }
+    IN_POOL.with(|f| f.set(was));
+
+    if let Some(payload) = local_panic {
+        std::panic::resume_unwind(payload);
+    }
+    if let Some(payload) = scope.panic.lock().unwrap().take() {
+        std::panic::resume_unwind(payload);
+    }
+}
+
 /// Split `out` (`rows` rows of `row_len` elements) into contiguous row
-/// bands and run `body(first_row, band)` on each band, one scoped thread
-/// per band.
+/// bands and run `body(first_row, band)` on each band — one band on the
+/// calling thread, the rest on the resident pool.
 ///
 /// Runs inline (single call on the current thread) when fan-out is not
-/// worthwhile: one worker available, an empty output, or fewer than
+/// worthwhile: one worker available, an empty output, fewer than
 /// `min_rows` rows per would-be worker (`min_rows` is the caller's
-/// grain: the row count below which a band is cheaper than a spawn).
+/// grain: the row count below which a band is cheaper than a pool
+/// dispatch), or when the current thread is already pool work (nested
+/// fan-out).
 pub fn par_row_bands<T, F>(out: &mut [T], rows: usize, row_len: usize, min_rows: usize, body: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
     debug_assert_eq!(out.len(), rows * row_len);
-    let workers = max_workers().min(rows / min_rows.max(1)).max(1);
+    let workers = if on_pool_worker() {
+        1
+    } else {
+        max_workers().min(rows / min_rows.max(1)).max(1)
+    };
     if workers == 1 || rows == 0 || row_len == 0 {
         body(0, out);
         return;
     }
     let band_rows = rows.div_ceil(workers);
     let chunk_len = band_rows * row_len;
-    std::thread::scope(|s| {
-        let body = &body;
-        for (i, band) in out.chunks_mut(chunk_len).enumerate() {
-            s.spawn(move || body(i * band_rows, band));
-        }
-    });
+    let body = &body;
+    let mut bands = out.chunks_mut(chunk_len);
+    let first = bands.next().expect("rows > 0");
+    let jobs: Vec<BandJob<'_>> = bands
+        .enumerate()
+        .map(|(i, band)| {
+            let job: BandJob<'_> = Box::new(move || body((i + 1) * band_rows, band));
+            job
+        })
+        .collect();
+    scope_run(jobs, || body(0, first));
+}
+
+/// Item-level sibling of [`par_row_bands`]: split `out` into fixed-
+/// stride records of `per_item` elements ("items": a logit pair, a
+/// patch slot, a frame) and fan contiguous item ranges across the pool
+/// as `body(first_item, chunk)` where `chunk` covers
+/// `chunk.len() / per_item` items. `min_items` is the per-worker grain.
+///
+/// `out.len()` must be a multiple of `per_item` (checked in all build
+/// profiles — a trailing partial item would silently go unwritten
+/// otherwise). Same inline rules and nesting behaviour as
+/// [`par_row_bands`].
+pub fn par_items<T, F>(out: &mut [T], per_item: usize, min_items: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let items = if per_item == 0 { 0 } else { out.len() / per_item };
+    assert!(
+        per_item == 0 || out.len() == items * per_item,
+        "par_items: out.len() {} is not a multiple of per_item {per_item}",
+        out.len()
+    );
+    par_row_bands(out, items, per_item, min_items, body);
 }
 
 /// Run `n` sequence items through a three-stage pipeline with bounded
@@ -128,6 +361,14 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
+    /// Serializes the tests that set or observe the process-global
+    /// worker override, so `set_max_workers` from one test cannot flip
+    /// a sibling onto an unintended inline/pooled path mid-run.
+    fn override_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Fill each row with its global row index, in parallel, and check
     /// the result matches a serial fill.
     fn fill_and_check(rows: usize, row_len: usize, min_rows: usize) {
@@ -148,7 +389,8 @@ mod tests {
 
     #[test]
     fn parallel_bands_cover_all_rows() {
-        fill_and_check(240, 17, 1); // forces the threaded path
+        let _guard = override_lock(); // keep the pooled path pooled
+        fill_and_check(240, 17, 1);
     }
 
     #[test]
@@ -165,11 +407,110 @@ mod tests {
 
     #[test]
     fn worker_cap_respected() {
-        // >= 1 always; <= 12 unless SPACECODESIGN_WORKERS overrides.
+        let _guard = override_lock();
         assert!(max_workers() >= 1);
-        if std::env::var("SPACECODESIGN_WORKERS").is_err() {
+        // The min(12, cores) SHAVE cap holds whenever neither the env
+        // var nor a runtime override is in play.
+        if WORKER_OVERRIDE.load(Ordering::Relaxed) == 0
+            && std::env::var("SPACECODESIGN_WORKERS").is_err()
+        {
             assert!(max_workers() <= 12);
         }
+    }
+
+    #[test]
+    fn par_items_covers_all_items() {
+        let mut out = vec![0usize; 37 * 2];
+        par_items(&mut out, 2, 1, |i0, chunk| {
+            for (j, pair) in chunk.chunks_exact_mut(2).enumerate() {
+                pair[0] = i0 + j;
+                pair[1] = (i0 + j) * 10;
+            }
+        });
+        for (i, pair) in out.chunks_exact(2).enumerate() {
+            assert_eq!(pair, &[i, i * 10], "item {i}");
+        }
+    }
+
+    #[test]
+    fn nested_fanout_runs_inline_without_deadlock() {
+        // A band body that itself fans out must complete (inline) and
+        // produce the same rows as the serial fill.
+        let mut out = vec![0usize; 64 * 8];
+        par_row_bands(&mut out, 64, 8, 1, |y0, band| {
+            let rows = band.len() / 8;
+            // Nested call: must not re-enter the injector.
+            par_row_bands(band, rows, 8, 1, |y1, inner| {
+                for (r, row) in inner.chunks_exact_mut(8).enumerate() {
+                    for v in row.iter_mut() {
+                        *v = y0 + y1 + r;
+                    }
+                }
+            });
+        });
+        for (y, row) in out.chunks_exact(8).enumerate() {
+            assert!(row.iter().all(|&v| v == y), "row {y}");
+        }
+        assert!(!on_pool_worker(), "caller flag restored after the scope");
+    }
+
+    #[test]
+    fn many_concurrent_scopes_stay_disjoint() {
+        // Stress: several caller threads share the injector at once;
+        // every scope must see exactly its own rows filled.
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                s.spawn(move || {
+                    for round in 0..4usize {
+                        let rows = 60 + t + round;
+                        let mut out = vec![usize::MAX; rows * 5];
+                        par_row_bands(&mut out, rows, 5, 1, |y0, band| {
+                            for (r, row) in band.chunks_exact_mut(5).enumerate() {
+                                for v in row.iter_mut() {
+                                    *v = (t << 16) + y0 + r;
+                                }
+                            }
+                        });
+                        for (y, row) in out.chunks_exact(5).enumerate() {
+                            assert!(
+                                row.iter().all(|&v| v == (t << 16) + y),
+                                "caller {t} round {round} row {y}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn worker_override_wins_and_clears() {
+        let _guard = override_lock();
+        set_max_workers(3);
+        assert_eq!(max_workers(), 3);
+        fill_and_check(30, 4, 1); // odd band count: 3 workers over 30 rows
+        set_max_workers(1);
+        assert_eq!(max_workers(), 1);
+        fill_and_check(30, 4, 1); // forced inline
+        set_max_workers(0);
+        assert!(max_workers() >= 1);
+    }
+
+    #[test]
+    fn band_panic_propagates_to_caller() {
+        let _guard = override_lock(); // pooled path must stay pooled
+        // Every band panics, so on a multi-core host both the
+        // local-band catch AND the worker-side stow-and-re-raise path
+        // (run_job -> ScopeState::panic) are exercised.
+        let result = std::panic::catch_unwind(|| {
+            let mut out = vec![0u8; 128 * 4];
+            par_row_bands(&mut out, 128, 4, 1, |y0, _band| {
+                panic!("band {y0} exploded");
+            });
+        });
+        assert!(result.is_err(), "panic must cross the pool barrier");
+        // The pool must still be usable afterwards.
+        fill_and_check(96, 3, 1);
     }
 
     #[test]

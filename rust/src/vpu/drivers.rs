@@ -49,6 +49,23 @@ impl CamGeneric {
         self.frames_received += 1;
         Ok((frame, now + t + DRIVER_OVERHEAD))
     }
+
+    /// [`CamGeneric::receive`] consuming the wire frame: the payload
+    /// **moves** into the returned DRAM frame instead of being cloned —
+    /// the DMA-descriptor handoff of the real CamGeneric driver, and the
+    /// zero-copy path of the streaming coordinator.
+    pub fn receive_owned(&mut self, wire: WireFrame, now: SimTime) -> Result<(Frame, SimTime)> {
+        let t = timing::frame_time(&self.clock, wire.width, wire.height, self.porch);
+        let frame = match wire.into_frame() {
+            Ok(f) => f,
+            Err(e) => {
+                self.crc_errors += 1;
+                return Err(e);
+            }
+        };
+        self.frames_received += 1;
+        Ok((frame, now + t + DRIVER_OVERHEAD))
+    }
 }
 
 /// VPU LCD transmit path.
@@ -72,6 +89,16 @@ impl LcdDriver {
     pub fn send(&mut self, frame: &Frame, now: SimTime) -> (WireFrame, SimTime) {
         let wire = WireFrame::from_frame(frame);
         let t = timing::frame_time(&self.clock, frame.width, frame.height, self.porch);
+        self.frames_sent += 1;
+        (wire, now + t + DRIVER_OVERHEAD)
+    }
+
+    /// [`LcdDriver::send`] consuming the frame: the DRAM payload
+    /// **moves** onto the wire (LCDQueueFrame queues the buffer, it
+    /// does not copy it) — the zero-copy egress path.
+    pub fn send_owned(&mut self, frame: Frame, now: SimTime) -> (WireFrame, SimTime) {
+        let t = timing::frame_time(&self.clock, frame.width, frame.height, self.porch);
+        let wire = WireFrame::from_frame_owned(frame);
         self.frames_sent += 1;
         (wire, now + t + DRIVER_OVERHEAD)
     }
@@ -107,6 +134,34 @@ mod tests {
         assert!(t2 > t1);
         assert_eq!(cam.frames_received, 1);
         assert_eq!(lcd.frames_sent, 1);
+    }
+
+    #[test]
+    fn owned_roundtrip_matches_borrowing_roundtrip() {
+        let f = frame(64, 64, 7);
+        let wire = WireFrame::from_frame(&f);
+        let mut cam = CamGeneric::new(50.0e6, 27);
+        let (rx_ref, t_ref) = cam.receive(&wire, SimTime::ZERO).unwrap();
+        let (rx_own, t_own) = cam.receive_owned(wire, SimTime::ZERO).unwrap();
+        assert_eq!(rx_ref, rx_own);
+        assert_eq!(t_ref, t_own);
+        assert_eq!(cam.frames_received, 2);
+        let mut lcd = LcdDriver::new(50.0e6, 27);
+        let (w_ref, _) = lcd.send(&rx_ref, SimTime::ZERO);
+        let (w_own, _) = lcd.send_owned(rx_own, SimTime::ZERO);
+        assert_eq!(w_ref, w_own);
+        assert_eq!(lcd.frames_sent, 2);
+    }
+
+    #[test]
+    fn corrupted_wire_counted_and_rejected_owned() {
+        let f = frame(32, 32, 9);
+        let mut wire = WireFrame::from_frame(&f);
+        wire.corrupt_bit(5, 1);
+        let mut cam = CamGeneric::new(50.0e6, 27);
+        assert!(cam.receive_owned(wire, SimTime::ZERO).is_err());
+        assert_eq!(cam.crc_errors, 1);
+        assert_eq!(cam.frames_received, 0);
     }
 
     #[test]

@@ -234,6 +234,53 @@ fn execute_batched_scalar_fallback_matches_serial_bitexact() {
 }
 
 #[test]
+fn pool_stress_concurrent_callers_stay_bitexact() {
+    // ISSUE 3: many threads share the persistent worker pool at once;
+    // every caller's fan-out must stay disjoint (each result identical
+    // to the serial reference) and the pool must not deadlock.
+    let mut rng = Rng::new(0x500C);
+    let (h, w, k) = (96usize, 80usize, 3usize);
+    let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32() - 0.5).collect();
+    let kern: Vec<f32> = (0..k * k).map(|_| rng.next_f32() - 0.5).collect();
+    let serial = conv::conv2d_f32(&input, h, w, &kern, k).unwrap();
+    let binned_serial = binning::binning_f32(&input, h, w).unwrap();
+    std::thread::scope(|s| {
+        for t in 0..8 {
+            let (input, kern, serial, binned_serial) = (&input, &kern, &serial, &binned_serial);
+            s.spawn(move || {
+                for round in 0..6 {
+                    let o = dsp_fast::conv2d_f32_opt(input, h, w, kern, k).unwrap();
+                    assert!(all_close(serial, &o), "caller {t} round {round}");
+                    let b = dsp_fast::binning_f32_opt(input, h, w).unwrap();
+                    assert_eq!(binned_serial, &b, "caller {t} round {round} binning");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn pool_nested_reentry_runs_inline_and_matches_serial() {
+    // A band body that calls back into an optimized kernel re-enters
+    // the pool; the nested fan-out must run inline (no deadlock, no
+    // oversubscription) and produce the usual pinned results.
+    let mut rng = Rng::new(0x4E57);
+    let (h, w, k) = (64usize, 64usize, 3usize);
+    let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32() - 0.5).collect();
+    let kern: Vec<f32> = (0..k * k).map(|_| rng.next_f32() - 0.5).collect();
+    let serial = conv::conv2d_f32(&input, h, w, &kern, k).unwrap();
+    let mut firsts = vec![0f32; 4];
+    spacecodesign::util::par::par_row_bands(&mut firsts, 4, 1, 1, |_, band| {
+        for slot in band.iter_mut() {
+            let o = dsp_fast::conv2d_f32_opt(&input, h, w, &kern, k).unwrap();
+            assert!(all_close(&serial, &o), "nested conv diverged");
+            *slot = o[0];
+        }
+    });
+    assert!(firsts.iter().all(|&v| close(v, serial[0])));
+}
+
+#[test]
 fn cnn_frame_artifact_matches_per_patch_classification() {
     // The frame-level artifact is the batched splitter: its 64 logit
     // pairs must match per-patch forwards on the extracted chips.
@@ -250,6 +297,33 @@ fn cnn_frame_artifact_matches_per_patch_classification() {
         let direct = rt.execute("cnn_patch_b1", &[&chip.data]).unwrap();
         assert_eq!(direct[0][0].to_bits(), pair[0].to_bits(), "patch {i}");
         assert_eq!(direct[0][1].to_bits(), pair[1].to_bits(), "patch {i}");
+    }
+}
+
+#[test]
+fn cnn_frame_b4_matches_4_serial_frames_bitexact() {
+    // ISSUE 3 pin: the multi-frame `cnn_frame_b4` artifact (patches
+    // fanned across the worker pool) must reproduce 4 serial
+    // `cnn_frame_1024` executes bit-for-bit.
+    let mut rt = shim_runtime("frame_b4");
+    let plane = 1024 * 1024 * 3;
+    let mut frames: Vec<Vec<f32>> = Vec::with_capacity(4);
+    let mut batch: Vec<f32> = Vec::with_capacity(4 * plane);
+    for seed in [51u64, 52, 53, 54] {
+        let (frame, _labels) = spacecodesign::cnn::ships::ship_frame(8, 128, seed);
+        batch.extend_from_slice(&frame);
+        frames.push(frame);
+    }
+    let out = rt.execute_batched("cnn_frame_b4", 4, &[&batch]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), 4 * 64 * 2);
+    for (f, frame) in frames.iter().enumerate() {
+        let serial = rt.execute("cnn_frame_1024", &[frame.as_slice()]).unwrap();
+        assert_eq!(serial[0].len(), 64 * 2);
+        let got = &out[0][f * 64 * 2..(f + 1) * 64 * 2];
+        for (i, (a, b)) in serial[0].iter().zip(got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "frame {f} logit {i}");
+        }
     }
 }
 

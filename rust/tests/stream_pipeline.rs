@@ -67,6 +67,20 @@ fn stream_frames_match_one_shot_unmasked_runs() {
 }
 
 #[test]
+fn stream_recycles_frame_buffers() {
+    // ISSUE 3: the egress stage returns each frame's buffers to the
+    // arena and ingest picks them back up — after the pipeline warms
+    // up, takes must be served from the freelist, and recycling must
+    // never change results.
+    let mut cp = native_coproc("arena");
+    let r = stream::run(&mut cp, &opts(Benchmark::Conv { k: 3 }, 6, 11)).unwrap();
+    assert!(r.all_valid(), "arena recycling must not corrupt frames");
+    let s = r.arena;
+    assert!(s.reused + s.allocated > 0, "stream must draw from the arena");
+    assert!(s.reused > 0, "steady-state frames must hit the freelist: {s:?}");
+}
+
+#[test]
 fn stream_single_frame_works() {
     let mut cp = native_coproc("single");
     let r = stream::run(&mut cp, &opts(Benchmark::Conv { k: 3 }, 1, 4)).unwrap();
