@@ -13,6 +13,9 @@ fn main() {
             return;
         }
     };
+    // Paper-table numbers assume clean wires: keep any env-enabled
+    // fault plan (SPACECODESIGN_FAULT_SEED) out of this bench.
+    cp.faults = None;
 
     println!("(host groundtruth kernel backend: {})", cp.backend.name());
     println!("== Fig. 5: power per benchmark (paper: SHAVE 0.8-1.0 W, LEON 0.6-0.7 W) ==\n");
@@ -43,6 +46,7 @@ fn main() {
 
     println!("\n== §IV device comparisons (CNN ship detection) ==");
     let mut cp2 = CoProcessor::with_defaults().unwrap();
+    cp2.faults = None;
     let cnn_run = cp2.run_unmasked(Benchmark::CnnShip, 42).unwrap();
     let vpu = comparators::vpu_point(1.0 / cnn_run.t_proc.as_secs(), cnn_run.power_w);
     for d in [

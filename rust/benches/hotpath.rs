@@ -322,6 +322,10 @@ fn main() {
     match CoProcessor::with_defaults() {
         Err(e) => eprintln!("(skipping stream benches: {e})"),
         Ok(mut cp) => {
+            // The gated rows must measure the fault-free fast path even
+            // when SPACECODESIGN_FAULT_SEED is set in the environment
+            // (injection is benched separately, in the row below).
+            cp.faults = None;
             for n in [1usize, 8, 64] {
                 let opts = StreamOptions {
                     bench: Benchmark::Conv { k: 3 },
@@ -346,6 +350,26 @@ fn main() {
                     n as f64 / o.median
                 );
             }
+
+            // --- streaming under injected wire faults (ISSUE 4) ------
+            // New row (the gate never fails on new rows): shows what a
+            // 30% fault rate costs in retransmissions + containment.
+            // The unchanged fault-free rows above are the proof that
+            // the machinery costs nothing when disabled.
+            use spacecodesign::iface::fault::{FaultConfig, FaultPlan};
+            cp.backend = KernelBackend::Optimized;
+            cp.faults = Some(FaultPlan::new(FaultConfig::new(42, 0.3)));
+            let opts = StreamOptions {
+                bench: Benchmark::Conv { k: 3 },
+                frames: 8,
+                seed: 42,
+                depth: 1,
+            };
+            let s = bench(1, 3, || {
+                std::hint::black_box(stream::run(&mut cp, &opts).unwrap());
+            });
+            log.push("stream conv3 N=8 (inject 0.3)", &s);
+            cp.faults = None;
         }
     }
 

@@ -14,6 +14,9 @@ fn main() {
             return;
         }
     };
+    // Paper-table numbers assume clean wires: keep any env-enabled
+    // fault plan (SPACECODESIGN_FAULT_SEED) out of this bench.
+    cp.faults = None;
 
     println!("(host groundtruth kernel backend: {})", cp.backend.name());
     println!("== speedups vs single LEON (paper: binning 14x, conv up to 75x,");

@@ -15,6 +15,9 @@ fn main() {
             return;
         }
     };
+    // Paper-table numbers assume clean wires: keep any env-enabled
+    // fault plan (SPACECODESIGN_FAULT_SEED) out of this bench.
+    cp.faults = None;
 
     println!("(host groundtruth kernel backend: {})", cp.backend.name());
     println!("== Table II: FPGA & VPU co-processing with CIF/LCD @ 50 MHz ==");

@@ -243,6 +243,21 @@ pub fn make_work_in(
     }
 }
 
+/// Return every frame-sized buffer a [`WorkItem`] carries to `arena` —
+/// the error-containment path (ISSUE 4): a frame that fails mid-stage
+/// (CRC budget exhausted, runtime error, geometry violation) must hand
+/// its DMA slots back just like a frame that completes, or a fault
+/// storm would defeat the zero-copy freelist.
+pub fn recycle_work_item(item: WorkItem, arena: &FrameArena) {
+    for plane in item.input_frames {
+        arena.recycle_u32(plane.data);
+    }
+    arena.recycle_u32(item.expected.data);
+    for buf in item.pjrt_inputs {
+        arena.recycle_f32(buf);
+    }
+}
+
 /// Validation outcome for one received frame.
 #[derive(Clone, Debug)]
 pub struct Validation {

@@ -148,7 +148,9 @@ pub fn simulate_masked(t: &MaskedTiming, n_frames: usize) -> MaskedResult {
         first_latency,
         avg_latency,
         period,
-        throughput_fps: 1.0 / period.as_secs(),
+        // rate_hz: a degenerate (all-zero) timing reports 0 FPS rather
+        // than leaking a non-finite value into reports/JSON.
+        throughput_fps: period.rate_hz(),
         frames: n_frames,
     }
 }
@@ -252,6 +254,22 @@ mod tests {
                 r.period.as_secs()
             );
         }
+    }
+
+    #[test]
+    fn degenerate_all_zero_timing_terminates_with_finite_fps() {
+        // An all-failed fault sweep feeds zero timings; the DES must
+        // terminate and the throughput must stay finite (0, not inf).
+        let t = MaskedTiming {
+            t_cif: SimTime::ZERO,
+            t_cifbuf: SimTime::ZERO,
+            t_proc: SimTime::ZERO,
+            t_lcdbuf: SimTime::ZERO,
+            t_lcd: SimTime::ZERO,
+        };
+        let r = simulate_masked(&t, 8);
+        assert_eq!(r.throughput_fps, 0.0);
+        assert!(r.avg_latency.as_secs() == 0.0);
     }
 
     #[test]

@@ -77,14 +77,20 @@ pub fn speedup_row(run: &FrameRun) -> String {
 }
 
 /// Validation summary line (includes the real `Runtime::execute`
-/// wallclock of the frame, so runs show where host time actually went).
+/// wallclock of the frame, so runs show where host time actually went;
+/// CRC-triggered retransmissions show up when fault injection is on).
 pub fn validation_row(run: &FrameRun) -> String {
     let acc = run
         .accuracy
         .map(|a| format!(", accuracy {:.1}%", a * 100.0))
         .unwrap_or_default();
+    let retx = if run.retransmits > 0 {
+        format!(" retx {}", run.retransmits)
+    } else {
+        String::new()
+    };
     format!(
-        "{:<22} crc={} validated={} ({} px, {} mismatches, max_err {}{}) exec {}",
+        "{:<22} crc={} validated={} ({} px, {} mismatches, max_err {}{}) exec {}{}",
         run.bench.name(),
         if run.crc_ok { "ok" } else { "FAIL" },
         if run.validation.pass { "pass" } else { "FAIL" },
@@ -93,17 +99,20 @@ pub fn validation_row(run: &FrameRun) -> String {
         run.validation.max_err,
         acc,
         crate::util::fmt_time(run.t_exec_wall.as_secs_f64()),
+        retx,
     )
 }
 
 /// Multi-line summary of a streaming sweep: measured pipeline numbers,
-/// per-stage utilization, and the Masked DES prediction side by side.
+/// per-stage utilization, the Masked DES prediction, and — under fault
+/// injection — the wire-fault/retransmission/containment counters.
 pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
     let valid = r
         .runs
         .iter()
         .filter(|run| run.crc_ok && run.validation.pass)
         .count();
+    let unmasked_fps = r.runs.first().map_or(0.0, |run| run.throughput_fps);
     let stage_names = ["CIF ingest ", "VPU execute", "LCD egress "];
     let mut out = format!(
         "-- stream {} x{} [{}] --\n\
@@ -116,7 +125,7 @@ pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
         r.wall_fps,
         r.exec_wall.as_secs_f64(),
         r.frames,
-        r.runs[0].throughput_fps,
+        unmasked_fps,
         r.masked.throughput_fps,
         r.masked.frames,
     );
@@ -133,9 +142,24 @@ pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
         r.arena.reused,
         r.arena.reuse_ratio() * 100.0,
     ));
+    if r.faults.transfers > 0 {
+        out.push_str(&format!(
+            "  faults: {}/{} transfers hit ({} flips, {} crc, {} trunc-lines, \
+             {} stuck), {} retransmits, {} unrecovered\n",
+            r.faults.faulted,
+            r.faults.transfers,
+            r.faults.payload_flips,
+            r.faults.crc_corruptions,
+            r.faults.truncated_lines,
+            r.faults.stuck_pixels,
+            r.faults.retransmits,
+            r.faults.unrecovered,
+        ));
+    }
     out.push_str(&format!(
-        "  validation {valid}/{} pass",
-        r.runs.len()
+        "  validation {valid}/{} pass, {} frame errors",
+        r.runs.len(),
+        r.frame_errors.len(),
     ));
     out
 }
@@ -165,6 +189,7 @@ mod tests {
             power_w: 0.95,
             t_leon: SimTime::from_ms(280.0),
             t_exec_wall: std::time::Duration::from_millis(3),
+            retransmits: 0,
         }
     }
 
@@ -235,6 +260,9 @@ mod tests {
             },
             masked,
             runs: vec![dummy_run(), dummy_run()],
+            frame_errors: vec![],
+            retransmits: 0,
+            faults: crate::iface::fault::FaultStats::default(),
         };
         let s = stream_summary(&r);
         assert!(s.contains("CIF ingest"), "{s}");
@@ -243,6 +271,75 @@ mod tests {
         assert!(s.contains("60.0%"), "{s}");
         assert!(s.contains("masked-DES 7.9 FPS"), "{s}");
         assert!(s.contains("arena: 12 buffer takes, 9 recycled (75% reuse)"), "{s}");
-        assert!(s.contains("validation 2/2 pass"), "{s}");
+        assert!(s.contains("validation 2/2 pass, 0 frame errors"), "{s}");
+        assert!(
+            !s.contains("faults:"),
+            "fault line only appears under injection: {s}"
+        );
+    }
+
+    #[test]
+    fn stream_summary_surfaces_faults_and_frame_errors() {
+        use crate::coordinator::stream::{FrameError, StreamResult};
+        use crate::coordinator::Benchmark;
+        use crate::iface::fault::FaultStats;
+        use std::time::Duration;
+        let masked = MaskedResult {
+            first_latency: SimTime::from_ms(300.0),
+            avg_latency: SimTime::from_ms(336.0),
+            period: SimTime::from_ms(126.0),
+            throughput_fps: 7.9,
+            frames: 8,
+        };
+        let r = StreamResult {
+            bench: Benchmark::Conv { k: 3 },
+            backend: crate::KernelBackend::Optimized,
+            frames: 3,
+            wall: Duration::from_millis(100),
+            wall_fps: 20.0,
+            stage_busy: [Duration::from_millis(10); 3],
+            stage_util: [0.1; 3],
+            exec_wall: Duration::from_millis(25),
+            arena: crate::util::arena::ArenaStats {
+                reused: 9,
+                allocated: 3,
+            },
+            masked,
+            runs: vec![dummy_run(), dummy_run()],
+            frame_errors: vec![FrameError {
+                frame: 1,
+                seed: 43,
+                error: crate::error::Error::Unrecovered {
+                    attempts: 6,
+                    computed: 0x1234,
+                    received: 0x4321,
+                },
+            }],
+            retransmits: 7,
+            faults: FaultStats {
+                transfers: 12,
+                faulted: 5,
+                payload_flips: 4,
+                crc_corruptions: 1,
+                truncated_lines: 0,
+                stuck_pixels: 0,
+                retransmits: 7,
+                unrecovered: 1,
+            },
+        };
+        let s = stream_summary(&r);
+        assert!(s.contains("faults: 5/12 transfers hit"), "{s}");
+        assert!(s.contains("7 retransmits, 1 unrecovered"), "{s}");
+        assert!(s.contains("validation 2/2 pass, 1 frame errors"), "{s}");
+    }
+
+    #[test]
+    fn validation_row_shows_retransmits_only_when_nonzero() {
+        let clean = validation_row(&dummy_run());
+        assert!(!clean.contains("retx"), "{clean}");
+        let mut faulted = dummy_run();
+        faulted.retransmits = 3;
+        let row = validation_row(&faulted);
+        assert!(row.contains("retx 3"), "{row}");
     }
 }

@@ -28,6 +28,8 @@ use crate::coordinator::pipeline::{simulate_masked, MaskedResult, MaskedTiming};
 use crate::coordinator::system::{CoProcessor, FrameRun};
 use crate::error::{Error, Result};
 use crate::fabric::clock::SimTime;
+use crate::iface::fault::{FaultPlan, FaultStats, Hop};
+use crate::iface::lcd::RxReport;
 use crate::iface::{CifModule, LcdModule};
 use crate::render::Mesh;
 use crate::runtime::Runtime;
@@ -65,6 +67,18 @@ impl StreamOptions {
     }
 }
 
+/// One frame that failed mid-sweep. The sweep keeps going (per-frame
+/// error containment, ISSUE 4): the failure is recorded here and the
+/// frame's arena buffers were recycled by whichever stage it died in.
+#[derive(Debug)]
+pub struct FrameError {
+    /// Position of the frame in the sweep (0-based).
+    pub frame: usize,
+    /// The frame's seed (`opts.seed + frame`).
+    pub seed: u64,
+    pub error: Error,
+}
+
 /// Outcome of a streaming sweep: per-frame results plus pipeline-level
 /// wallclock and utilization measurements.
 #[derive(Debug)]
@@ -74,14 +88,18 @@ pub struct StreamResult {
     pub frames: usize,
     /// Wallclock of the whole sweep (all stages overlapped).
     pub wall: Duration,
-    /// Measured pipeline throughput, frames per wallclock second.
+    /// Measured pipeline throughput: frames actually *delivered*
+    /// (`runs.len()`, not attempts) per wallclock second — a sweep
+    /// that contains failures does not get credit for them.
     pub wall_fps: f64,
     /// Busy wallclock per stage: [CIF ingest, VPU execute, LCD egress].
     pub stage_busy: [Duration; 3],
     /// stage_busy / wall — how saturated each stage was (the widest bar
     /// is the pipeline bottleneck).
     pub stage_util: [f64; 3],
-    /// Total wallclock inside `Runtime::execute` across the sweep.
+    /// Total wallclock inside `Runtime::execute` across the sweep's
+    /// *delivered* frames (a frame contained as an error after it
+    /// executed is in `stage_busy[1]` but not here).
     pub exec_wall: Duration,
     /// Frame-buffer arena traffic during this sweep (takes served from
     /// the freelist vs fresh allocations) — steady state should be
@@ -90,13 +108,27 @@ pub struct StreamResult {
     /// The Masked-mode DES prediction for the same per-frame timings
     /// (simulated time, not wallclock; over `max(frames, 8)` frames).
     pub masked: MaskedResult,
+    /// Successfully completed frames, in sweep order.
     pub runs: Vec<FrameRun>,
+    /// Frames that failed (CRC budget exhausted, runtime error, ...) —
+    /// contained per frame instead of aborting the sweep.
+    pub frame_errors: Vec<FrameError>,
+    /// CRC-triggered retransmissions across the sweep, failed frames
+    /// included. A *delivered* frame's resend wire time is inside its
+    /// `t_cif`/`t_lcd`; a failed frame's accumulated timing is
+    /// discarded with it (only this counter and `faults` remember it).
+    pub retransmits: u64,
+    /// Wire-fault injection counters for this sweep (all zero when no
+    /// fault plan is active).
+    pub faults: FaultStats,
 }
 
 impl StreamResult {
-    /// True when every frame passed CRC and groundtruth validation.
+    /// True when every frame completed and passed CRC and groundtruth
+    /// validation.
     pub fn all_valid(&self) -> bool {
-        self.runs.iter().all(|r| r.crc_ok && r.validation.pass)
+        self.frame_errors.is_empty()
+            && self.runs.iter().all(|r| r.crc_ok && r.validation.pass)
     }
 }
 
@@ -117,9 +149,14 @@ pub(crate) struct EgressStage {
 /// A frame after ingest: the work item plus its simulated-time costs.
 pub(crate) struct StreamJob {
     pub(crate) item: WorkItem,
+    /// The frame's seed — also the fault plan's frame key, so streamed
+    /// and one-shot runs draw identical faults.
+    pub(crate) seed: u64,
     pub(crate) t_cif: SimTime,
     pub(crate) t_proc: SimTime,
     pub(crate) t_leon: SimTime,
+    /// CRC-triggered CIF resends already paid for in `t_cif`.
+    pub(crate) retransmits: u32,
 }
 
 /// A frame after VPU execution.
@@ -218,6 +255,13 @@ impl IngestStage {
     /// planes, wire payloads) and gets the VPU-side DRAM copy back
     /// immediately — with the egress stage recycling its side too,
     /// steady-state ingest allocates nothing frame-sized.
+    ///
+    /// With a fault plan, each plane transfer may be corrupted in
+    /// transit; a flagged CRC triggers bounded retransmission (each
+    /// resend's wire time lands in `t_cif`), and an exhausted budget
+    /// is a per-frame error — the item's buffers are recycled before
+    /// returning, so the failure leaks nothing.
+    #[allow(clippy::too_many_arguments)] // the stage's real wiring
     pub(crate) fn run(
         &mut self,
         backend: KernelBackend,
@@ -226,6 +270,7 @@ impl IngestStage {
         bench: Benchmark,
         seed: u64,
         arena: &FrameArena,
+        faults: Option<&FaultPlan>,
     ) -> Result<StreamJob> {
         let item = host::make_work_in(
             backend,
@@ -236,60 +281,151 @@ impl IngestStage {
             arena,
         )?;
 
-        // --- CIF: host -> FPGA -> VPU (per plane) --------------------
-        // The wire payload comes from the arena, moves into the VPU-side
-        // frame (`receive_owned`), and is recycled straight back.
-        let mut t_cif = SimTime::ZERO;
-        let mut planes = 0usize;
-        for plane in &item.input_frames {
-            self.cif.regs.configure(plane.width, plane.height, plane.format);
-            let payload = arena.take_u32(plane.pixels());
-            let (wire, tx) = self.cif.send_frame_with(plane, SimTime::ZERO, payload)?;
-            let (got, _t_rx) = self.cam.receive_owned(wire, SimTime::ZERO)?;
-            arena.recycle_u32(got.data);
-            t_cif += tx.wire_time;
-            planes += 1;
-        }
-        debug_assert_eq!(planes, bench.input().channels);
+        let (t_cif, retransmits) = match self.cif_hop(&item, seed, arena, faults) {
+            Ok(v) => v,
+            Err(e) => {
+                host::recycle_work_item(item, arena);
+                return Err(e);
+            }
+        };
 
-        let w = workload_of(self.mesh.as_ref(), bench, seed)?;
+        let w = match workload_of(self.mesh.as_ref(), bench, seed) {
+            Ok(w) => w,
+            Err(e) => {
+                host::recycle_work_item(item, arena);
+                return Err(e);
+            }
+        };
         let t_proc = makespan_of(cost, vpu, bench, &w);
         let t_leon = cost.leon_time(bench.kind(), &w);
         Ok(StreamJob {
             item,
+            seed,
             t_cif,
             t_proc,
             t_leon,
+            retransmits,
         })
+    }
+
+    /// CIF: host -> FPGA -> VPU, per plane, with CRC-triggered bounded
+    /// retransmission when a fault plan is active. The wire payload
+    /// comes from the arena, moves into the VPU-side frame
+    /// (`receive_owned`), and is recycled straight back.
+    fn cif_hop(
+        &mut self,
+        item: &WorkItem,
+        seed: u64,
+        arena: &FrameArena,
+        faults: Option<&FaultPlan>,
+    ) -> Result<(SimTime, u32)> {
+        let mut t_cif = SimTime::ZERO;
+        let mut retransmits = 0u32;
+        let budget = faults.map_or(0, |f| f.max_retransmits());
+        for (p, plane) in item.input_frames.iter().enumerate() {
+            self.cif.regs.configure(plane.width, plane.height, plane.format);
+            let mut attempt = 0u32;
+            loop {
+                let payload = arena.take_u32(plane.pixels());
+                let (mut wire, tx) =
+                    self.cif.send_frame_with(plane, SimTime::ZERO, payload)?;
+                if let Some(f) = faults {
+                    f.corrupt(Hop::CifTx, seed, p, attempt, &mut wire);
+                }
+                let rx = self.cam.receive_owned(wire, SimTime::ZERO)?;
+                t_cif += tx.wire_time;
+                // The DRAM copy goes straight back to the arena — on a
+                // flagged CRC it held corrupt data anyway (the real
+                // firmware drops the slot and re-arms the descriptor).
+                arena.recycle_u32(rx.frame.data);
+                if rx.crc_ok {
+                    break;
+                }
+                let Some(f) = faults else {
+                    // No plan, yet the wire corrupted data: a real bug,
+                    // not an injected upset — surface it strictly.
+                    return Err(Error::CrcMismatch {
+                        computed: rx.computed,
+                        received: rx.received,
+                    });
+                };
+                if attempt >= budget {
+                    f.note_unrecovered();
+                    return Err(Error::Unrecovered {
+                        attempts: attempt + 1,
+                        computed: rx.computed,
+                        received: rx.received,
+                    });
+                }
+                attempt += 1;
+                retransmits += 1;
+                f.note_retransmit();
+            }
+        }
+        debug_assert_eq!(
+            item.input_frames.len(),
+            item.bench.input().channels
+        );
+        Ok((t_cif, retransmits))
     }
 }
 
-/// Stage 2: run the frame's artifact through the runtime.
-pub(crate) fn execute_job(rt: &mut Runtime, job: StreamJob) -> Result<ExecutedJob> {
-    let inputs: Vec<&[f32]> = job.item.pjrt_inputs.iter().map(|v| v.as_slice()).collect();
+/// Stage 2: run the frame's artifact through the runtime. An execution
+/// failure is contained per frame: the job's buffers are recycled into
+/// `arena` before the error propagates, so a failed frame costs the
+/// freelist nothing.
+pub(crate) fn execute_job(
+    rt: &mut Runtime,
+    job: StreamJob,
+    arena: &FrameArena,
+) -> Result<ExecutedJob> {
     let wall0 = rt.exec_wallclock;
-    let outputs = rt.execute(&job.item.bench.artifact(), &inputs)?;
+    let result = {
+        let inputs: Vec<&[f32]> =
+            job.item.pjrt_inputs.iter().map(|v| v.as_slice()).collect();
+        rt.execute(&job.item.bench.artifact(), &inputs)
+    };
     let exec_wall = rt.exec_wallclock.saturating_sub(wall0);
-    Ok(ExecutedJob {
-        job,
-        outputs,
-        exec_wall,
-    })
+    match result {
+        Ok(outputs) => Ok(ExecutedJob {
+            job,
+            outputs,
+            exec_wall,
+        }),
+        Err(e) => {
+            host::recycle_work_item(job.item, arena);
+            Err(e)
+        }
+    }
+}
+
+/// Recycle a frame's work item + artifact outputs — the one list of
+/// frame-owned buffers, shared by the success path and every contained
+/// error path (a failure must not defeat the zero-copy freelist).
+fn recycle_frame_buffers(item: WorkItem, outputs: Vec<Vec<f32>>, arena: &FrameArena) {
+    host::recycle_work_item(item, arena);
+    for buf in outputs {
+        arena.recycle_f32(buf);
+    }
 }
 
 impl EgressStage {
     /// Convert the artifact outputs to the LCD frame, push it back to
     /// the host, and validate against the groundtruth.
     ///
-    /// This is where the frame's buffers come home: after validation,
-    /// every frame-sized allocation the frame carried (input planes,
-    /// normalized copies, expected/received frames, wire payload,
-    /// artifact outputs) is recycled into `arena` for the next ingest.
+    /// This is where the frame's buffers come home: after validation —
+    /// or on *any* error path — every frame-sized allocation the frame
+    /// carried (input planes, normalized copies, expected/received
+    /// frames, wire payload, artifact outputs) is recycled into `arena`
+    /// for the next ingest. With a fault plan, the LCD transfer may be
+    /// corrupted in transit and retried within the retransmission
+    /// budget (each resend's wire time lands in `t_lcd`).
     pub(crate) fn run(
         &mut self,
         power: &PowerModel,
         ex: ExecutedJob,
         arena: &FrameArena,
+        faults: Option<&FaultPlan>,
     ) -> Result<FrameRun> {
         let ExecutedJob {
             job,
@@ -298,26 +434,38 @@ impl EgressStage {
         } = ex;
         let bench = job.item.bench;
         let out_io = bench.output();
-        let (out_frame, accuracy) = match bench {
-            Benchmark::Binning | Benchmark::Conv { .. } => (
+        let built = match bench {
+            // Take the arena buffer only once the geometry is known
+            // good: a failing constructor consumes (and drops) the
+            // buffer it was given, which would quietly shrink the
+            // freelist on a contained error. The mismatch branch goes
+            // through the allocating twin for the identical error.
+            Benchmark::Binning | Benchmark::Conv { .. }
+                if outputs[0].len() == out_io.width * out_io.height =>
+            {
                 Frame::from_f32_normalized_in(
                     out_io.width,
                     out_io.height,
                     out_io.format,
                     &outputs[0],
                     arena.take_u32(out_io.width * out_io.height),
-                )?,
-                None,
-            ),
+                )
+                .map(|f| (f, None))
+            }
+            Benchmark::Binning | Benchmark::Conv { .. } => Frame::from_f32_normalized(
+                out_io.width,
+                out_io.height,
+                out_io.format,
+                &outputs[0],
+            )
+            .map(|f| (f, None)),
             Benchmark::Render => {
                 let data = crate::render::raster::depth_to_u16(
                     &outputs[0],
                     host::RENDER_DEPTH_MAX,
                 );
-                (
-                    Frame::from_data(out_io.width, out_io.height, out_io.format, data)?,
-                    None,
-                )
+                Frame::from_data(out_io.width, out_io.height, out_io.format, data)
+                    .map(|f| (f, None))
             }
             Benchmark::CnnShip => {
                 let logits = &outputs[0]; // (64, 2)
@@ -331,40 +479,73 @@ impl EgressStage {
                     .filter(|(&p, &t)| (p == 1) == t)
                     .count() as f64
                     / labels.len() as f64;
-                (
-                    Frame::from_data(out_io.width, out_io.height, out_io.format, labels)?,
-                    Some(acc),
-                )
+                Frame::from_data(out_io.width, out_io.height, out_io.format, labels)
+                    .map(|f| (f, Some(acc)))
+            }
+        };
+        let (out_frame, accuracy) = match built {
+            Ok(v) => v,
+            Err(e) => {
+                recycle_frame_buffers(job.item, outputs, arena);
+                return Err(e);
             }
         };
 
         // --- LCD: VPU -> FPGA -> host --------------------------------
-        // The VPU output frame *moves* onto the wire (LCDQueueFrame
-        // queues the DRAM buffer; it does not copy it).
         self.lcd
             .regs
             .configure(out_frame.width, out_frame.height, out_frame.format);
-        let (wire_back, _t_tx) = self.lcd_drv.send_owned(out_frame, SimTime::ZERO);
-        let (received, rx) = self.lcd.receive_frame(&wire_back, SimTime::ZERO)?;
-        let t_lcd = rx.wire_time;
+        let hop = match faults {
+            // Faulted path, only for frames the plan actually targets:
+            // the DRAM frame survives each send (the firmware keeps
+            // the queued buffer until delivery is confirmed), so a
+            // flagged CRC can trigger resends.
+            Some(f) if f.targets(Hop::LcdTx, job.seed) => {
+                let r = self.lcd_hop(f, &out_frame, job.seed, arena);
+                arena.recycle_u32(out_frame.data);
+                r
+            }
+            // Fault-free fast path, untouched — also taken by frames
+            // an active plan never targets, so injection costs those
+            // frames nothing: the VPU output frame *moves* onto the
+            // wire (LCDQueueFrame queues the DRAM buffer; it does not
+            // copy it).
+            other => {
+                if let Some(f) = other {
+                    f.note_transfer();
+                }
+                let (wire_back, _t_tx) =
+                    self.lcd_drv.send_owned(out_frame, SimTime::ZERO);
+                let r = self.lcd.receive_frame(&wire_back, SimTime::ZERO);
+                arena.recycle_u32(wire_back.payload);
+                r.map(|(received, rx)| {
+                    let t = rx.wire_time;
+                    (received, rx, t, 0u32)
+                })
+            }
+        };
+        let (received, rx, t_lcd, lcd_retransmits) = match hop {
+            Ok(v) => v,
+            Err(e) => {
+                recycle_frame_buffers(job.item, outputs, arena);
+                return Err(e);
+            }
+        };
 
         // --- Host validation -----------------------------------------
-        let validation = host::validate(&job.item, &received)?;
+        let validation = match host::validate(&job.item, &received) {
+            Ok(v) => v,
+            Err(e) => {
+                arena.recycle_u32(received.data);
+                recycle_frame_buffers(job.item, outputs, arena);
+                return Err(e);
+            }
+        };
         let latency = job.t_cif + job.t_proc + t_lcd;
 
         // --- Buffer recycling (frame done; DMA slots go back) --------
-        arena.recycle_u32(wire_back.payload);
         arena.recycle_u32(received.data);
-        for plane in job.item.input_frames {
-            arena.recycle_u32(plane.data);
-        }
-        arena.recycle_u32(job.item.expected.data);
-        for buf in job.item.pjrt_inputs {
-            arena.recycle_f32(buf);
-        }
-        for buf in outputs {
-            arena.recycle_f32(buf);
-        }
+        recycle_frame_buffers(job.item, outputs, arena);
 
         Ok(FrameRun {
             bench,
@@ -372,14 +553,60 @@ impl EgressStage {
             t_proc: job.t_proc,
             t_lcd,
             latency,
-            throughput_fps: 1.0 / latency.as_secs(),
+            throughput_fps: latency.rate_hz(),
             crc_ok: rx.crc_ok,
             validation,
             accuracy,
             power_w: power.shave_power(bench.kind()),
             t_leon: job.t_leon,
             t_exec_wall: exec_wall,
+            retransmits: job.retransmits + lcd_retransmits,
         })
+    }
+
+    /// The LCD transfer under fault injection: borrow-send from the
+    /// still-queued DRAM frame, corrupt in transit per the plan, and
+    /// retry on a flagged CRC within the retransmission budget. Every
+    /// wire payload and rejected Rx buffer is recycled here; the
+    /// caller owns `out_frame` and the success-path `received` frame.
+    fn lcd_hop(
+        &mut self,
+        f: &FaultPlan,
+        out_frame: &Frame,
+        seed: u64,
+        arena: &FrameArena,
+    ) -> Result<(Frame, RxReport, SimTime, u32)> {
+        let budget = f.max_retransmits();
+        let mut t_lcd = SimTime::ZERO;
+        let mut attempt = 0u32;
+        let mut retransmits = 0u32;
+        loop {
+            let (mut wire_back, _t_tx) = self.lcd_drv.send_with(
+                out_frame,
+                SimTime::ZERO,
+                arena.take_u32(out_frame.pixels()),
+            );
+            f.corrupt(Hop::LcdTx, seed, 0, attempt, &mut wire_back);
+            let r = self.lcd.receive_frame(&wire_back, SimTime::ZERO);
+            arena.recycle_u32(wire_back.payload);
+            let (received, rx) = r?;
+            t_lcd += rx.wire_time;
+            if rx.crc_ok {
+                return Ok((received, rx, t_lcd, retransmits));
+            }
+            arena.recycle_u32(received.data);
+            if attempt >= budget {
+                f.note_unrecovered();
+                return Err(Error::Unrecovered {
+                    attempts: attempt + 1,
+                    computed: rx.crc_computed,
+                    received: rx.crc,
+                });
+            }
+            attempt += 1;
+            retransmits += 1;
+            f.note_retransmit();
+        }
     }
 }
 
@@ -400,13 +627,16 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         ingest,
         egress,
         arena,
+        faults,
         ..
     } = cp;
     let cfg: &SystemConfig = cfg;
     let cost: &CostModel = cost;
     let power: &PowerModel = power;
     let arena: &FrameArena = arena;
+    let faults: Option<&FaultPlan> = faults.as_ref();
     let stats0 = arena.stats();
+    let fstats0 = faults.map(|f| f.stats()).unwrap_or_default();
 
     // Per-stage busy wallclock, accumulated from inside each stage's
     // thread (nanoseconds; the pipeline overlaps them).
@@ -428,6 +658,7 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
                 bench,
                 opts.seed.wrapping_add(i as u64),
                 arena,
+                faults,
             );
             timed(&busy[0], t0);
             job
@@ -435,25 +666,50 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         |_, job: Result<StreamJob>| {
             let job = job?;
             let t0 = Instant::now();
-            let ex = execute_job(runtime, job);
+            let ex = execute_job(runtime, job, arena);
             timed(&busy[1], t0);
             ex
         },
         |_, ex: Result<ExecutedJob>| {
             let ex = ex?;
             let t0 = Instant::now();
-            let run = egress.run(power, ex, arena);
+            let run = egress.run(power, ex, arena, faults);
             timed(&busy[2], t0);
             run
         },
     );
     let wall = t_start.elapsed();
 
+    // Per-frame error containment (ISSUE 4): a failed frame is
+    // recorded — its buffers were already recycled by the stage it
+    // died in — and the sweep's remaining frames stand on their own.
     let mut runs = Vec::with_capacity(n);
-    for r in results {
-        runs.push(r?);
+    let mut frame_errors = Vec::new();
+    for (i, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(run) => runs.push(run),
+            Err(error) => frame_errors.push(FrameError {
+                frame: i,
+                seed: opts.seed.wrapping_add(i as u64),
+                error,
+            }),
+        }
     }
-    let masked = simulate_masked(&masked_timing_of(cfg, &runs[0]), n.max(8));
+    let masked = match runs.first() {
+        Some(r0) => simulate_masked(&masked_timing_of(cfg, r0), n.max(8)),
+        // Every frame failed: a degenerate (all-zero) timing keeps the
+        // result shape intact; `rate_hz` reports it as 0 FPS.
+        None => simulate_masked(
+            &MaskedTiming {
+                t_cif: SimTime::ZERO,
+                t_cifbuf: SimTime::ZERO,
+                t_proc: SimTime::ZERO,
+                t_lcdbuf: SimTime::ZERO,
+                t_lcd: SimTime::ZERO,
+            },
+            n.max(8),
+        ),
+    };
     let wall_s = wall.as_secs_f64().max(1e-9);
     let stage_busy = [
         Duration::from_nanos(busy[0].load(Ordering::Relaxed)),
@@ -467,12 +723,15 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
     ];
     let exec_wall = runs.iter().map(|r| r.t_exec_wall).sum();
     let s1 = arena.stats();
+    let fstats = faults
+        .map(|f| f.stats().since(fstats0))
+        .unwrap_or_default();
     Ok(StreamResult {
         bench,
         backend,
         frames: n,
         wall,
-        wall_fps: n as f64 / wall_s,
+        wall_fps: runs.len() as f64 / wall_s,
         stage_busy,
         stage_util,
         exec_wall,
@@ -482,5 +741,8 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         },
         masked,
         runs,
+        frame_errors,
+        retransmits: fstats.retransmits,
+        faults: fstats,
     })
 }

@@ -16,6 +16,7 @@ use crate::coordinator::stream::{self, EgressStage, IngestStage};
 use crate::error::Result;
 use crate::fabric::bus::{Bus, BusConfig};
 use crate::fabric::clock::SimTime;
+use crate::iface::fault::FaultPlan;
 use crate::iface::{CifModule, LcdModule};
 use crate::runtime::{native, Runtime};
 use crate::util::arena::FrameArena;
@@ -48,16 +49,30 @@ pub struct FrameRun {
     /// Real wallclock spent inside `Runtime::execute` for this frame
     /// (host-machine profiling, distinct from the simulated `t_proc`).
     pub t_exec_wall: std::time::Duration,
+    /// CRC-triggered wire retransmissions this frame paid for (their
+    /// resend time is already inside `t_cif`/`t_lcd`; nonzero only
+    /// under fault injection).
+    pub retransmits: u32,
 }
 
 impl FrameRun {
     pub fn speedup(&self) -> f64 {
-        self.t_leon.as_secs() / self.t_proc.as_secs()
+        if self.t_proc == SimTime::ZERO {
+            0.0
+        } else {
+            self.t_leon.as_secs() / self.t_proc.as_secs()
+        }
     }
 
     pub fn fps_per_watt(&self) -> f64 {
-        // Processing-rate per Watt (the paper's Fig. 5 comparison metric).
-        1.0 / self.t_proc.as_secs() / self.power_w
+        // Processing-rate per Watt (the paper's Fig. 5 comparison
+        // metric); guarded so degenerate timings report 0 instead of
+        // leaking a non-finite value into reports/JSON.
+        if self.power_w <= 0.0 {
+            0.0
+        } else {
+            self.t_proc.rate_hz() / self.power_w
+        }
     }
 }
 
@@ -78,6 +93,13 @@ pub struct CoProcessor {
     /// steady-state frame traffic allocates nothing frame-sized (the
     /// VPU's fixed DMA-slot discipline).
     pub arena: FrameArena,
+    /// Optional wire-fault injection plan (ISSUE 4): seeded upsets on
+    /// the CIF/LCD hops with CRC-triggered bounded retransmission.
+    /// `None` (the default) leaves the fault-free fast path untouched.
+    /// Enabled by `SPACECODESIGN_FAULT_SEED` (+ optional
+    /// `SPACECODESIGN_FAULT_RATE`) or set directly (the `stream
+    /// --inject` CLI flag does).
+    pub faults: Option<FaultPlan>,
     pub(crate) ingest: IngestStage,
     pub(crate) egress: EgressStage,
 }
@@ -110,6 +132,7 @@ impl CoProcessor {
             cost: CostModel::new(cfg.vpu),
             power: PowerModel::default(),
             arena: FrameArena::new(),
+            faults: FaultPlan::from_env(),
             cfg,
             runtime,
             ingest: IngestStage {
@@ -148,6 +171,7 @@ impl CoProcessor {
     /// validated — the three stream stages run back-to-back.
     pub fn run_unmasked(&mut self, bench: Benchmark, seed: u64) -> Result<FrameRun> {
         self.runtime.set_kernel_backend(self.backend);
+        let faults = self.faults.as_ref();
         let job = self.ingest.run(
             self.backend,
             &self.cost,
@@ -155,9 +179,10 @@ impl CoProcessor {
             bench,
             seed,
             &self.arena,
+            faults,
         )?;
-        let ex = stream::execute_job(&mut self.runtime, job)?;
-        self.egress.run(&self.power, ex, &self.arena)
+        let ex = stream::execute_job(&mut self.runtime, job, &self.arena)?;
+        self.egress.run(&self.power, ex, &self.arena, faults)
     }
 
     /// Masked-mode phase timings derived from an Unmasked run.

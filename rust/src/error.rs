@@ -19,6 +19,19 @@ pub enum Error {
     #[error("CRC mismatch: computed {computed:#06x}, received {received:#06x}")]
     CrcMismatch { computed: u16, received: u16 },
 
+    /// A wire transfer kept failing CRC after exhausting its bounded
+    /// retransmission budget (sustained fault conditions, ISSUE 4) —
+    /// contained as a per-frame error by the streaming coordinator.
+    #[error(
+        "unrecovered wire fault after {attempts} attempts: \
+         computed {computed:#06x}, received {received:#06x}"
+    )]
+    Unrecovered {
+        attempts: u32,
+        computed: u16,
+        received: u16,
+    },
+
     /// Frame geometry does not match the configured interface registers.
     #[error("frame geometry mismatch: {0}")]
     Geometry(String),

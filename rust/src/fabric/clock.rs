@@ -41,6 +41,17 @@ impl SimTime {
         SimTime(self.0.max(other.0))
     }
 
+    /// Events per second for a per-event duration (`1 / as_secs()`),
+    /// `0.0` for a zero duration — degenerate latencies must not leak
+    /// non-finite values into reports or `util::json` output.
+    pub fn rate_hz(self) -> f64 {
+        if self.0 == 0 {
+            0.0
+        } else {
+            1.0 / self.as_secs()
+        }
+    }
+
     pub fn saturating_sub(self, other: SimTime) -> SimTime {
         SimTime(self.0.saturating_sub(other.0))
     }
@@ -146,6 +157,13 @@ mod tests {
     fn simtime_conversions() {
         assert_eq!(SimTime::from_ms(21.0).as_ms(), 21.0);
         assert!((SimTime::from_us(3.5).as_secs() - 3.5e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rate_hz_finite_even_for_zero_duration() {
+        assert_eq!(SimTime::ZERO.rate_hz(), 0.0);
+        assert!((SimTime::from_ms(50.0).rate_hz() - 20.0).abs() < 1e-9);
+        assert!(SimTime::ZERO.rate_hz().is_finite());
     }
 
     #[test]

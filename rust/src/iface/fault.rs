@@ -1,0 +1,518 @@
+//! Deterministic wire-fault injection (ISSUE 4).
+//!
+//! The paper's transfer matrix (§IV) is reported "error-free", but the
+//! whole point of the CRC-16/XMODEM line (§III-A) is the non-error-free
+//! case: radiation-induced upsets on the CIF/LCD parallel buses. The
+//! companion work on the same COTS stack (arXiv 2506.12971) and MPAI
+//! (arXiv 2409.12258) both evaluate with *injected* upsets plus
+//! contained recovery; this module brings that scenario axis here.
+//!
+//! A [`FaultPlan`] is a pure function of `(seed, hop, frame, plane,
+//! attempt)` — no interior RNG state — so injection is deterministic
+//! regardless of pipeline thread interleaving, and a streamed sweep
+//! sees bit-identical faults to the equivalent one-shot frames. The
+//! plan corrupts [`WireFrame`]s *in transit* (after the Tx side sealed
+//! the CRC line), which is exactly what the CRC exists to catch:
+//!
+//! * **payload bit flips** — 1–3 single-bit upsets in random pixels;
+//! * **CRC-line corruption** — a bit flip in the packed CRC itself
+//!   (payload intact, but the frame still must be flagged);
+//! * **dropped/truncated lines** — the Rx FIFO loses the tail of the
+//!   frame; the FSM pads the image buffer with zeros, so geometry is
+//!   preserved and the corruption is a CRC failure, not a size error;
+//! * **stuck pixels** — one pixel forced to all-zeros or full-scale
+//!   (may coincide with the transmitted value: a benign upset).
+//!
+//! The fault-free fast path is untouched: every hook in the
+//! coordinator is behind `Option<&FaultPlan>`, and `None` follows the
+//! exact pre-ISSUE-4 code path (same moves, same allocations).
+//!
+//! Counters are atomics so the plan can be shared by the three
+//! pipeline stages; [`FaultPlan::stats`] snapshots them and
+//! [`FaultStats::since`] yields per-sweep deltas.
+
+use crate::iface::signals::{self, WireFrame};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Which wire hop a transfer crosses. Each hop draws from its own
+/// fault stream, so an upset on the CIF input bus is independent of
+/// the LCD output bus for the same frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hop {
+    /// Host/FPGA -> VPU (CIF Tx wire, received by `CamGeneric`).
+    CifTx,
+    /// VPU -> FPGA/host (LCD wire, received by `LcdModule`).
+    LcdTx,
+}
+
+impl Hop {
+    fn id(self) -> u64 {
+        match self {
+            Hop::CifTx => 1,
+            Hop::LcdTx => 2,
+        }
+    }
+}
+
+/// Knobs of one fault plan. All draws derive from `seed`; rates are
+/// probabilities in `[0, 1]`; kind weights are relative (they need not
+/// sum to 1 — zero total disables injection entirely).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// Per-frame rate: probability a frame is under upset conditions
+    /// at a given hop. Drawn once per `(hop, frame)` — planes and
+    /// retransmissions of an unaffected frame are never touched, so
+    /// unaffected frames stay bit-exact with a fault-free run.
+    pub frame_rate: f64,
+    /// Per-plane rate: probability each plane transfer of a faulted
+    /// frame is corrupted, re-rolled independently per transmission
+    /// attempt (transient upsets) — so bounded retransmission recovers
+    /// unless the upset persists across the whole budget.
+    pub plane_rate: f64,
+    /// Relative weight of payload bit flips.
+    pub w_payload_flip: f64,
+    /// Relative weight of CRC-line corruption.
+    pub w_crc_corrupt: f64,
+    /// Relative weight of dropped/truncated lines.
+    pub w_truncate: f64,
+    /// Relative weight of stuck pixels.
+    pub w_stuck: f64,
+    /// Retransmission budget per plane transfer: a CRC failure
+    /// triggers up to this many resends before the frame is declared
+    /// unrecoverable and contained as a per-frame error.
+    pub max_retransmits: u32,
+}
+
+impl FaultConfig {
+    /// A plan with the default fault mix: `rate` of frames upset,
+    /// mostly-transient corruption (25% per retry), 5-deep
+    /// retransmission budget.
+    pub fn new(seed: u64, rate: f64) -> FaultConfig {
+        FaultConfig {
+            seed,
+            frame_rate: rate,
+            plane_rate: 0.25,
+            w_payload_flip: 0.55,
+            w_crc_corrupt: 0.2,
+            w_truncate: 0.15,
+            w_stuck: 0.1,
+            max_retransmits: 5,
+        }
+    }
+}
+
+/// Running injection counters (all monotonic; see [`FaultStats::since`]
+/// for per-sweep deltas).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Wire transfers inspected by the plan (attempts included).
+    pub transfers: u64,
+    /// Transfers that took at least one fault event.
+    pub faulted: u64,
+    pub payload_flips: u64,
+    pub crc_corruptions: u64,
+    /// Lines lost to truncation (not events: a 2-line drop counts 2).
+    pub truncated_lines: u64,
+    pub stuck_pixels: u64,
+    /// CRC-triggered resends issued by the recovery loops.
+    pub retransmits: u64,
+    /// Transfers that exhausted the retransmission budget.
+    pub unrecovered: u64,
+}
+
+impl FaultStats {
+    /// Field-wise delta against an earlier snapshot.
+    pub fn since(self, before: FaultStats) -> FaultStats {
+        FaultStats {
+            transfers: self.transfers - before.transfers,
+            faulted: self.faulted - before.faulted,
+            payload_flips: self.payload_flips - before.payload_flips,
+            crc_corruptions: self.crc_corruptions - before.crc_corruptions,
+            truncated_lines: self.truncated_lines - before.truncated_lines,
+            stuck_pixels: self.stuck_pixels - before.stuck_pixels,
+            retransmits: self.retransmits - before.retransmits,
+            unrecovered: self.unrecovered - before.unrecovered,
+        }
+    }
+}
+
+/// A seeded wire-fault plan plus its running counters. Shareable
+/// across pipeline threads (`Sync`: config is immutable, counters are
+/// atomics); all fault decisions are pure functions of the draw key.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    transfers: AtomicU64,
+    faulted: AtomicU64,
+    payload_flips: AtomicU64,
+    crc_corruptions: AtomicU64,
+    truncated_lines: AtomicU64,
+    stuck_pixels: AtomicU64,
+    retransmits: AtomicU64,
+    unrecovered: AtomicU64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig::new(0, 0.0)
+    }
+}
+
+/// Mix the draw key into a sub-seed (sentinel `u64::MAX` plane/attempt
+/// marks the frame-level draw; real planes/attempts are small).
+fn sub_seed(seed: u64, hop: Hop, frame: u64, plane: u64, attempt: u64) -> u64 {
+    let mut h = seed ^ 0xA076_1D64_78BD_642F;
+    for v in [hop.id(), frame, plane, attempt] {
+        h = (h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .rotate_left(27)
+            .wrapping_mul(0x2545_F491_4F6C_DD1D);
+    }
+    h
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan {
+            cfg,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// The environment-driven plan: `SPACECODESIGN_FAULT_SEED=<u64>`
+    /// enables injection (the CI fault leg), with an optional
+    /// `SPACECODESIGN_FAULT_RATE=<f64>` frame rate (default 0.02).
+    pub fn from_env() -> Option<FaultPlan> {
+        let seed = std::env::var("SPACECODESIGN_FAULT_SEED")
+            .ok()?
+            .parse::<u64>()
+            .ok()?;
+        let rate = std::env::var("SPACECODESIGN_FAULT_RATE")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(0.02);
+        Some(FaultPlan::new(FaultConfig::new(seed, rate)))
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Retransmission budget per plane transfer.
+    pub fn max_retransmits(&self) -> u32 {
+        self.cfg.max_retransmits
+    }
+
+    /// Record a CRC-triggered resend (called by the recovery loops;
+    /// the resend's wire time lands in the caller's `t_cif`/`t_lcd`).
+    pub fn note_retransmit(&self) {
+        self.retransmits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a transfer that exhausted its retransmission budget.
+    pub fn note_unrecovered(&self) {
+        self.unrecovered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            transfers: self.transfers.load(Ordering::Relaxed),
+            faulted: self.faulted.load(Ordering::Relaxed),
+            payload_flips: self.payload_flips.load(Ordering::Relaxed),
+            crc_corruptions: self.crc_corruptions.load(Ordering::Relaxed),
+            truncated_lines: self.truncated_lines.load(Ordering::Relaxed),
+            stuck_pixels: self.stuck_pixels.load(Ordering::Relaxed),
+            retransmits: self.retransmits.load(Ordering::Relaxed),
+            unrecovered: self.unrecovered.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Whether the plan targets `frame` at `hop` at all — the
+    /// frame-level draw, shared by every plane and attempt of the
+    /// frame. Callers may route untargeted frames through the
+    /// zero-copy fast path: [`FaultPlan::corrupt`] is a no-op for
+    /// them by construction (it re-evaluates this same draw).
+    pub fn targets(&self, hop: Hop, frame: u64) -> bool {
+        let c = &self.cfg;
+        let total = c.w_payload_flip + c.w_crc_corrupt + c.w_truncate + c.w_stuck;
+        if c.frame_rate <= 0.0 || total <= 0.0 {
+            return false;
+        }
+        Rng::new(sub_seed(c.seed, hop, frame, u64::MAX, u64::MAX)).bool(c.frame_rate)
+    }
+
+    /// Count a wire transfer that bypassed [`FaultPlan::corrupt`]
+    /// (the untargeted-frame fast path), so `stats().transfers` keeps
+    /// meaning "transfers inspected by the plan".
+    pub fn note_transfer(&self) {
+        self.transfers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Maybe corrupt `wire` in transit over `hop`. `frame` is the
+    /// frame's seed/key (identical between streamed and one-shot
+    /// runs), `plane` the plane index within the frame, `attempt` the
+    /// transmission attempt (0 = first send). Returns whether a fault
+    /// was injected.
+    pub fn corrupt(
+        &self,
+        hop: Hop,
+        frame: u64,
+        plane: usize,
+        attempt: u32,
+        wire: &mut WireFrame,
+    ) -> bool {
+        self.transfers.fetch_add(1, Ordering::Relaxed);
+        // Frame-level draw: planes/attempts of an unaffected frame
+        // share it, so they are never touched.
+        if wire.payload.is_empty() || !self.targets(hop, frame) {
+            return false;
+        }
+        let c = &self.cfg;
+        let total = c.w_payload_flip + c.w_crc_corrupt + c.w_truncate + c.w_stuck;
+        // Plane/attempt-level draw: transient — re-rolled per resend.
+        let mut rng =
+            Rng::new(sub_seed(c.seed, hop, frame, plane as u64, attempt as u64));
+        if !rng.bool(c.plane_rate) {
+            return false;
+        }
+        self.faulted.fetch_add(1, Ordering::Relaxed);
+
+        let mut pick = rng.next_f64() * total;
+        if pick < c.w_payload_flip {
+            let flips = 1 + rng.range_usize(0, 2);
+            for _ in 0..flips {
+                let idx = rng.range_usize(0, wire.payload.len() - 1);
+                let bit = rng.next_u32() % wire.format.bits();
+                wire.payload[idx] ^= 1 << bit;
+            }
+            self.payload_flips.fetch_add(flips as u64, Ordering::Relaxed);
+            return true;
+        }
+        pick -= c.w_payload_flip;
+        if pick < c.w_crc_corrupt {
+            let cur = signals::extract_crc(&wire.crc_line, wire.format);
+            let bit = rng.next_u32() % 16;
+            wire.crc_line =
+                signals::make_crc_line(cur ^ (1u16 << bit), wire.width, wire.format);
+            self.crc_corruptions.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        pick -= c.w_crc_corrupt;
+        if pick < c.w_truncate {
+            // The Rx loses the tail of the frame; the FSM pads the
+            // image buffer with zeros (geometry preserved, CRC fails).
+            let lines = 1 + rng.range_usize(0, 1);
+            let lost = (lines * wire.width).min(wire.payload.len());
+            let n = wire.payload.len();
+            for v in &mut wire.payload[n - lost..] {
+                *v = 0;
+            }
+            self.truncated_lines
+                .fetch_add(lines as u64, Ordering::Relaxed);
+            return true;
+        }
+        let idx = rng.range_usize(0, wire.payload.len() - 1);
+        wire.payload[idx] = if rng.bool(0.5) {
+            wire.format.max_value()
+        } else {
+            0
+        };
+        self.stuck_pixels.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::image::{Frame, PixelFormat};
+
+    fn wire(seed: u64) -> WireFrame {
+        let mut rng = Rng::new(seed);
+        let f = Frame::from_data(
+            16,
+            8,
+            PixelFormat::Bpp16,
+            (0..16 * 8).map(|_| rng.next_u32() & 0xFFFF).collect(),
+        )
+        .unwrap();
+        WireFrame::from_frame(&f)
+    }
+
+    fn always(seed: u64) -> FaultConfig {
+        FaultConfig {
+            frame_rate: 1.0,
+            plane_rate: 1.0,
+            ..FaultConfig::new(seed, 1.0)
+        }
+    }
+
+    #[test]
+    fn zero_rate_never_corrupts() {
+        let plan = FaultPlan::new(FaultConfig::new(7, 0.0));
+        for i in 0..64u64 {
+            let mut w = wire(i);
+            let before = w.clone();
+            assert!(!plan.corrupt(Hop::CifTx, i, 0, 0, &mut w));
+            assert_eq!(w, before);
+        }
+        let s = plan.stats();
+        assert_eq!(s.transfers, 64);
+        assert_eq!(s.faulted, 0);
+    }
+
+    #[test]
+    fn full_rate_corrupts_and_crc_detects() {
+        let plan = FaultPlan::new(always(3));
+        let mut detected = 0;
+        for i in 0..32u64 {
+            let mut w = wire(i);
+            assert!(plan.corrupt(Hop::CifTx, i, 0, 0, &mut w));
+            if !w.check_crc().ok() {
+                detected += 1;
+            }
+        }
+        // Stuck pixels may coincide with the transmitted value and
+        // truncation of an already-zero tail is benign; everything
+        // else must be caught by the CRC.
+        assert!(detected >= 28, "only {detected}/32 faults detected");
+        assert_eq!(plan.stats().faulted, 32);
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_order_independent() {
+        let a = FaultPlan::new(always(11));
+        let b = FaultPlan::new(always(11));
+        let mut wa: Vec<WireFrame> = (0..8).map(wire).collect();
+        let mut wb: Vec<WireFrame> = (0..8).map(wire).collect();
+        for (i, w) in wa.iter_mut().enumerate() {
+            a.corrupt(Hop::LcdTx, i as u64, 0, 0, w);
+        }
+        for (i, w) in wb.iter_mut().enumerate().rev() {
+            b.corrupt(Hop::LcdTx, i as u64, 0, 0, w);
+        }
+        assert_eq!(wa, wb, "call order must not change the injected faults");
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn hops_planes_and_attempts_draw_independently() {
+        let plan = FaultPlan::new(always(5));
+        let (mut w1, mut w2, mut w3, mut w4) = (wire(1), wire(1), wire(1), wire(1));
+        plan.corrupt(Hop::CifTx, 9, 0, 0, &mut w1);
+        plan.corrupt(Hop::LcdTx, 9, 0, 0, &mut w2);
+        plan.corrupt(Hop::CifTx, 9, 1, 0, &mut w3);
+        plan.corrupt(Hop::CifTx, 9, 0, 1, &mut w4);
+        // With overwhelming probability the four independent draws
+        // differ somewhere; all equal would mean the key is ignored.
+        assert!(
+            !(w1 == w2 && w1 == w3 && w1 == w4),
+            "hop/plane/attempt must feed the draw key"
+        );
+    }
+
+    #[test]
+    fn unaffected_frames_are_untouched_at_any_plane_or_attempt() {
+        let plan = FaultPlan::new(FaultConfig {
+            frame_rate: 0.5,
+            plane_rate: 1.0,
+            ..FaultConfig::new(21, 0.5)
+        });
+        // Find a frame the plan does not target...
+        let clean = (0..64u64)
+            .find(|&i| {
+                let mut w = wire(i);
+                !plan.corrupt(Hop::CifTx, i, 0, 0, &mut w)
+            })
+            .expect("rate 0.5 must leave some frame clean");
+        // ...then every plane and attempt of it must stay clean too.
+        for plane in 0..3 {
+            for attempt in 0..4 {
+                let mut w = wire(clean);
+                let before = w.clone();
+                assert!(!plan.corrupt(Hop::CifTx, clean, plane, attempt, &mut w));
+                assert_eq!(w, before);
+            }
+        }
+    }
+
+    #[test]
+    fn single_kind_weights_select_that_kind() {
+        let base = always(13);
+        let cases = [
+            (
+                FaultConfig {
+                    w_payload_flip: 1.0,
+                    w_crc_corrupt: 0.0,
+                    w_truncate: 0.0,
+                    w_stuck: 0.0,
+                    ..base
+                },
+                "flip",
+            ),
+            (
+                FaultConfig {
+                    w_payload_flip: 0.0,
+                    w_crc_corrupt: 1.0,
+                    w_truncate: 0.0,
+                    w_stuck: 0.0,
+                    ..base
+                },
+                "crc",
+            ),
+            (
+                FaultConfig {
+                    w_payload_flip: 0.0,
+                    w_crc_corrupt: 0.0,
+                    w_truncate: 1.0,
+                    w_stuck: 0.0,
+                    ..base
+                },
+                "truncate",
+            ),
+        ];
+        for (cfg, kind) in cases {
+            let plan = FaultPlan::new(cfg);
+            let mut w = wire(2);
+            let before = w.clone();
+            assert!(plan.corrupt(Hop::CifTx, 4, 0, 0, &mut w));
+            let s = plan.stats();
+            match kind {
+                "flip" => {
+                    assert!(s.payload_flips > 0);
+                    assert_eq!(w.crc_line, before.crc_line);
+                    assert_ne!(w.payload, before.payload);
+                }
+                "crc" => {
+                    assert_eq!(s.crc_corruptions, 1);
+                    assert_eq!(w.payload, before.payload, "payload intact");
+                    assert_ne!(w.crc_line, before.crc_line);
+                }
+                _ => {
+                    assert!(s.truncated_lines > 0);
+                    assert_eq!(w.payload.len(), before.payload.len());
+                    let zeros = w.payload.iter().rev().take_while(|&&v| v == 0).count();
+                    assert!(zeros >= w.width, "tail lines zeroed");
+                }
+            }
+            assert!(!w.check_crc().ok(), "{kind} fault must trip the CRC");
+        }
+    }
+
+    #[test]
+    fn stats_since_computes_deltas() {
+        let plan = FaultPlan::new(always(1));
+        let mut w = wire(0);
+        plan.corrupt(Hop::CifTx, 0, 0, 0, &mut w);
+        let snap = plan.stats();
+        let mut w2 = wire(1);
+        plan.corrupt(Hop::CifTx, 1, 0, 0, &mut w2);
+        plan.note_retransmit();
+        let d = plan.stats().since(snap);
+        assert_eq!(d.transfers, 1);
+        assert_eq!(d.faulted, 1);
+        assert_eq!(d.retransmits, 1);
+    }
+}

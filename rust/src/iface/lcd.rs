@@ -32,7 +32,11 @@ pub struct RxReport {
     /// Time for the host to drain the image buffer afterwards.
     pub drain_time: SimTime,
     pub crc_ok: bool,
+    /// CRC carried by the received CRC line.
     pub crc: u16,
+    /// CRC recomputed over the received payload (equals `crc` iff
+    /// `crc_ok`; the pair feeds CRC-mismatch diagnostics upstream).
+    pub crc_computed: u16,
 }
 
 /// The LCD interface block on the FPGA.
@@ -127,6 +131,7 @@ impl LcdModule {
                 drain_time,
                 crc_ok,
                 crc: received,
+                crc_computed: computed,
             },
         ))
     }

@@ -12,6 +12,7 @@ use crate::error::Result;
 use crate::fabric::bus::{Bus, BusConfig};
 use crate::fabric::clock::SimTime;
 use crate::iface::cif::CifModule;
+use crate::iface::fault::{FaultPlan, Hop};
 use crate::iface::lcd::LcdModule;
 use crate::util::image::{Frame, PixelFormat};
 use crate::util::rng::Rng;
@@ -29,7 +30,11 @@ pub struct LoopbackReport {
     pub cif_time: SimTime,
     pub lcd_time: SimTime,
     pub data_intact: bool,
+    /// CRC verdict of the LCD (return) leg.
     pub crc_ok: bool,
+    /// CRC verdict of the CIF (outbound) leg, checked by the VPU echo
+    /// firmware before it re-queues the payload.
+    pub vpu_crc_ok: bool,
 }
 
 /// Run one loopback: random frame out via CIF, echoed by the VPU, back
@@ -41,6 +46,22 @@ pub fn run_loopback(
     height: usize,
     format: PixelFormat,
     seed: u64,
+) -> Result<LoopbackReport> {
+    run_loopback_with(cif_cfg, lcd_cfg, width, height, format, seed, None)
+}
+
+/// [`run_loopback`] with optional wire-fault injection on both legs.
+/// The echo follows the unified report-and-recover CRC policy: a
+/// corrupted outbound frame is still echoed (and flagged), so the host
+/// observes end-to-end what the faults did rather than an abort.
+pub fn run_loopback_with(
+    cif_cfg: IfaceConfig,
+    lcd_cfg: IfaceConfig,
+    width: usize,
+    height: usize,
+    format: PixelFormat,
+    seed: u64,
+    faults: Option<&FaultPlan>,
 ) -> Result<LoopbackReport> {
     let mut cif = CifModule::new(cif_cfg, Bus::new(BusConfig::default_50mhz()))?;
     let mut lcd = LcdModule::new(lcd_cfg, Bus::new(BusConfig::default_50mhz()))?;
@@ -58,17 +79,23 @@ pub fn run_loopback(
     )?;
 
     let t0 = SimTime::ZERO;
-    let (wire_out, tx) = cif.send_frame(&frame, t0)?;
+    let (mut wire_out, tx) = cif.send_frame(&frame, t0)?;
+    if let Some(f) = faults {
+        f.corrupt(Hop::CifTx, seed, 0, 0, &mut wire_out);
+    }
 
     // VPU echo: CamGeneric receives, LCDQueueFrame retransmits the same
     // payload (the paper's loopback firmware). The wire frame is
     // regenerated VPU-side, so the CRC is recomputed there too — but
-    // the payload itself *moves* through the echo (`into_frame` +
-    // `from_frame_owned`): like the firmware, which queues the received
-    // DRAM buffer straight back out, the echo is allocation-free per
-    // frame.
-    let echoed = wire_out.into_frame()?;
-    let wire_back = crate::iface::signals::WireFrame::from_frame_owned(echoed);
+    // the payload itself *moves* through the echo (`into_frame_reported`
+    // + `from_frame_owned`): like the firmware, which queues the
+    // received DRAM buffer straight back out, the echo is
+    // allocation-free per frame.
+    let (echoed, cam_check) = wire_out.into_frame_reported()?;
+    let mut wire_back = crate::iface::signals::WireFrame::from_frame_owned(echoed);
+    if let Some(f) = faults {
+        f.corrupt(Hop::LcdTx, seed, 0, 0, &mut wire_back);
+    }
 
     let (received, rx) = lcd.receive_frame(&wire_back, tx.done_at)?;
 
@@ -83,6 +110,7 @@ pub fn run_loopback(
         lcd_time: rx.wire_time,
         data_intact: received.data == frame.data,
         crc_ok: rx.crc_ok,
+        vpu_crc_ok: cam_check.ok(),
     })
 }
 
@@ -150,6 +178,41 @@ mod tests {
             let rep = r.unwrap();
             assert!(rep.data_intact && rep.crc_ok);
         }
+    }
+
+    #[test]
+    fn faulted_loopback_is_flagged_not_aborted() {
+        use crate::iface::fault::{FaultConfig, FaultPlan};
+        let cfg = IfaceConfig::paper_50mhz();
+        // Payload flips only, every frame: the upset must surface as
+        // flags + payload mismatch, never as an Err abort.
+        let plan = FaultPlan::new(FaultConfig {
+            frame_rate: 1.0,
+            plane_rate: 1.0,
+            w_payload_flip: 1.0,
+            w_crc_corrupt: 0.0,
+            w_truncate: 0.0,
+            w_stuck: 0.0,
+            ..FaultConfig::new(77, 1.0)
+        });
+        let r = run_loopback_with(
+            cfg,
+            cfg,
+            64,
+            64,
+            PixelFormat::Bpp16,
+            7,
+            Some(&plan),
+        )
+        .expect("faulted loopback must complete");
+        assert!(!r.data_intact, "flips must corrupt the echo");
+        assert!(
+            !r.vpu_crc_ok || !r.crc_ok,
+            "at least one leg must flag the corruption"
+        );
+        // Fault-free control with the same seed stays clean.
+        let clean = run_loopback(cfg, cfg, 64, 64, PixelFormat::Bpp16, 7).unwrap();
+        assert!(clean.data_intact && clean.crc_ok && clean.vpu_crc_ok);
     }
 
     #[test]

@@ -10,13 +10,17 @@
 //!   VPU-side drivers.
 //! * [`timing`] — transfer-time model (pixel clock + line porches).
 //! * [`loopback`] — the paper's §IV loopback functional test harness.
+//! * [`fault`] — deterministic wire-fault injection (seeded upsets on
+//!   the CIF/LCD hops) for the error-contained recovery paths.
 
 pub mod cif;
+pub mod fault;
 pub mod lcd;
 pub mod loopback;
 pub mod signals;
 pub mod timing;
 
 pub use cif::CifModule;
+pub use fault::FaultPlan;
 pub use lcd::LcdModule;
 pub use signals::WireFrame;

@@ -36,14 +36,20 @@ pub fn payload_crc(payload: &[u32], format: PixelFormat) -> u16 {
 /// Pack a 16-bit CRC into the first pixel(s) of a CRC line.
 ///
 /// At 8 bpp the CRC needs two pixels (hi byte, lo byte); at 16/24 bpp it
-/// fits in the first pixel.
+/// fits in the first pixel. The degenerate width-1 8 bpp geometry packs
+/// both bytes into the single CRC-line slot (the HDL shifts the CRC out
+/// over two pixel periods on a one-column frame) — earlier revisions
+/// silently dropped the low byte on Tx, so any 1-pixel-wide 8 bpp frame
+/// whose CRC low byte was nonzero failed validation spuriously.
 pub fn make_crc_line(crc: u16, width: usize, format: PixelFormat) -> Vec<u32> {
     let mut line = vec![0u32; width];
     match format {
         PixelFormat::Bpp8 => {
-            line[0] = (crc >> 8) as u32;
             if width > 1 {
+                line[0] = (crc >> 8) as u32;
                 line[1] = (crc & 0xFF) as u32;
+            } else {
+                line[0] = crc as u32;
             }
         }
         PixelFormat::Bpp16 | PixelFormat::Bpp24 => {
@@ -53,16 +59,45 @@ pub fn make_crc_line(crc: u16, width: usize, format: PixelFormat) -> Vec<u32> {
     line
 }
 
-/// Recover the CRC value from a received CRC line.
+/// Recover the CRC value from a received CRC line (symmetric with
+/// [`make_crc_line`] for every geometry, including width 1 at 8 bpp).
 pub fn extract_crc(line: &[u32], format: PixelFormat) -> u16 {
     match format {
         PixelFormat::Bpp8 => {
-            let hi = *line.first().unwrap_or(&0) as u16;
-            let lo = *line.get(1).unwrap_or(&0) as u16;
-            (hi << 8) | (lo & 0xFF)
+            if line.len() > 1 {
+                let hi = line[0] as u16;
+                let lo = line[1] as u16;
+                (hi << 8) | (lo & 0xFF)
+            } else {
+                (*line.first().unwrap_or(&0) & 0xFFFF) as u16
+            }
         }
         PixelFormat::Bpp16 | PixelFormat::Bpp24 => {
             (*line.first().unwrap_or(&0) & 0xFFFF) as u16
+        }
+    }
+}
+
+/// Outcome of comparing a wire frame's recomputed payload CRC against
+/// the CRC carried on its CRC line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrcCheck {
+    /// CRC recomputed over the received payload.
+    pub computed: u16,
+    /// CRC carried by the CRC line.
+    pub received: u16,
+}
+
+impl CrcCheck {
+    pub fn ok(self) -> bool {
+        self.computed == self.received
+    }
+
+    /// The strict-policy error for a failed check.
+    pub fn to_error(self) -> Error {
+        Error::CrcMismatch {
+            computed: self.computed,
+            received: self.received,
         }
     }
 }
@@ -108,31 +143,60 @@ impl WireFrame {
         }
     }
 
-    /// Validate CRC and strip wire framing (Rx side).
-    pub fn to_frame(&self) -> Result<Frame> {
-        let computed = payload_crc(&self.payload, self.format);
-        let received = extract_crc(&self.crc_line, self.format);
-        if computed != received {
-            return Err(Error::CrcMismatch { computed, received });
+    /// Recompute the payload CRC and compare it against the CRC line.
+    pub fn check_crc(&self) -> CrcCheck {
+        CrcCheck {
+            computed: payload_crc(&self.payload, self.format),
+            received: extract_crc(&self.crc_line, self.format),
         }
-        Frame::from_data(
+    }
+
+    /// Rx with the unified report-and-recover CRC policy (ISSUE 4):
+    /// the frame is always reassembled from whatever arrived — the
+    /// hardware image buffer holds the payload regardless — and the
+    /// CRC verdict rides along for software to act on (drop, accept,
+    /// or request retransmission). `Err` only for geometry violations.
+    pub fn to_frame_reported(&self) -> Result<(Frame, CrcCheck)> {
+        let check = self.check_crc();
+        let frame = Frame::from_data(
             self.width,
             self.height,
             self.format,
             self.payload.clone(),
-        )
+        )?;
+        Ok((frame, check))
+    }
+
+    /// [`WireFrame::to_frame_reported`] by value: the payload **moves**
+    /// into the returned frame instead of being cloned.
+    pub fn into_frame_reported(self) -> Result<(Frame, CrcCheck)> {
+        let check = self.check_crc();
+        let frame =
+            Frame::from_data(self.width, self.height, self.format, self.payload)?;
+        Ok((frame, check))
+    }
+
+    /// Validate CRC and strip wire framing (Rx side) — the strict
+    /// policy: a CRC mismatch is an error and the frame is dropped.
+    pub fn to_frame(&self) -> Result<Frame> {
+        let (frame, check) = self.to_frame_reported()?;
+        if check.ok() {
+            Ok(frame)
+        } else {
+            Err(check.to_error())
+        }
     }
 
     /// [`WireFrame::to_frame`] by value: validate CRC and **move** the
     /// payload into the returned frame instead of cloning it. On a CRC
     /// mismatch the (corrupt) payload is dropped with the wire frame.
     pub fn into_frame(self) -> Result<Frame> {
-        let computed = payload_crc(&self.payload, self.format);
-        let received = extract_crc(&self.crc_line, self.format);
-        if computed != received {
-            return Err(Error::CrcMismatch { computed, received });
+        let (frame, check) = self.into_frame_reported()?;
+        if check.ok() {
+            Ok(frame)
+        } else {
+            Err(check.to_error())
         }
-        Frame::from_data(self.width, self.height, self.format, self.payload)
     }
 
     /// Wire pixels transmitted, including the CRC line.
@@ -216,6 +280,54 @@ mod tests {
     }
 
     #[test]
+    fn crc_line_packing_8bpp_width1_keeps_low_byte() {
+        // ISSUE 4 regression: the low byte used to be dropped on Tx.
+        let line = make_crc_line(0xBEEF, 1, PixelFormat::Bpp8);
+        assert_eq!(extract_crc(&line, PixelFormat::Bpp8), 0xBEEF);
+    }
+
+    #[test]
+    fn width1_8bpp_frames_roundtrip() {
+        for (h, seed) in [(1usize, 3u64), (3, 4), (8, 5), (17, 6)] {
+            let f = random_frame(seed, 1, h, PixelFormat::Bpp8);
+            let wire = WireFrame::from_frame(&f);
+            assert_eq!(
+                wire.to_frame().expect("1-wide 8bpp frame must pass CRC"),
+                f
+            );
+        }
+    }
+
+    #[test]
+    fn prop_crc_line_roundtrip_all_formats_narrow_widths() {
+        check("crc line pack/extract roundtrip", 96, |g: &mut Gen| {
+            let fmt = *g.choose(&[
+                PixelFormat::Bpp8,
+                PixelFormat::Bpp16,
+                PixelFormat::Bpp24,
+            ]);
+            let w = g.int_in(1, 4);
+            let crc = (g.u32() & 0xFFFF) as u16;
+            extract_crc(&make_crc_line(crc, w, fmt), fmt) == crc
+        });
+    }
+
+    #[test]
+    fn reported_rx_returns_frame_and_verdict_both_ways() {
+        let f = random_frame(12, 8, 8, PixelFormat::Bpp16);
+        let clean = WireFrame::from_frame(&f);
+        let (got, check) = clean.to_frame_reported().unwrap();
+        assert!(check.ok());
+        assert_eq!(got, f);
+        let mut bad = WireFrame::from_frame(&f);
+        bad.corrupt_bit(7, 1);
+        let (got, check) = bad.into_frame_reported().unwrap();
+        assert!(!check.ok(), "flip must be flagged");
+        assert_ne!(got, f, "report-and-recover hands back what arrived");
+        assert!(matches!(check.to_error(), Error::CrcMismatch { .. }));
+    }
+
+    #[test]
     fn crc_line_packing_16bpp_single_pixel() {
         let line = make_crc_line(0x1234, 3, PixelFormat::Bpp16);
         assert_eq!(line, vec![0x1234, 0, 0]);
@@ -230,7 +342,7 @@ mod tests {
                 PixelFormat::Bpp16,
                 PixelFormat::Bpp24,
             ]);
-            let w = g.int_in(2, 32);
+            let w = g.int_in(1, 32);
             let h = g.int_in(1, 32);
             let data: Vec<u32> =
                 (0..w * h).map(|_| g.u32() & fmt.max_value()).collect();

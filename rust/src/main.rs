@@ -21,6 +21,7 @@ use spacecodesign::compress::{self, Cube};
 use spacecodesign::coordinator::comparators;
 use spacecodesign::coordinator::{report, stream, Benchmark, CoProcessor, StreamOptions};
 use spacecodesign::fpga::{designs, Device};
+use spacecodesign::iface::fault::{FaultConfig, FaultPlan};
 use spacecodesign::iface::loopback;
 use spacecodesign::util::rng::Rng;
 use spacecodesign::{KernelBackend, Result};
@@ -67,7 +68,9 @@ COMMANDS:
   run        one benchmark end-to-end: --bench binning|conv3|conv7|conv13|render|cnn
   stream     N-frame streaming pipeline sweep on both kernel backends:
              [--bench NAME] [--frames N] [--depth D] — reports per-stage
-             (CIF/VPU/LCD) utilization vs the Masked DES prediction
+             (CIF/VPU/LCD) utilization vs the Masked DES prediction;
+             [--inject RATE] [--fault-seed N] adds seeded wire faults
+             with CRC-triggered retransmission + per-frame containment
   compress   CCSDS-123 compression demo: [--bands Z] [--rows Y] [--cols X]
   report     all of the above
 ";
@@ -88,6 +91,24 @@ fn flag_str<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .map(String::as_str)
+}
+
+/// `--flag 0.25` -> Some(0.25); bare `--flag` (end of args or another
+/// flag follows) -> Some(default); flag absent -> None. A value that
+/// is present but unparseable is an error, not a silent default.
+fn flag_f64_or(args: &[String], name: &str, default: f64) -> Option<f64> {
+    let i = args.iter().position(|a| a == name)?;
+    match args.get(i + 1) {
+        None => Some(default),
+        Some(v) if v.starts_with("--") => Some(default),
+        Some(v) => match v.parse() {
+            Ok(rate) => Some(rate),
+            Err(_) => {
+                eprintln!("invalid value '{v}' for {name}");
+                std::process::exit(2);
+            }
+        },
+    }
 }
 
 fn table1() -> Result<()> {
@@ -212,9 +233,17 @@ fn run_loopback() -> Result<()> {
     println!("== CIF/LCD loopback feasibility (paper §IV) ==");
     for (name, r) in loopback::paper_sweep() {
         match r {
+            // Both legs' CRC verdicts are printed: the echo re-seals
+            // whatever it received, so only vpu_crc flags an outbound
+            // (CIF) corruption under the report-and-recover policy.
             Ok(rep) => println!(
-                "  {name:<28} OK   total {}  cif {}  lcd {}  intact={} crc={}",
-                rep.total, rep.cif_time, rep.lcd_time, rep.data_intact, rep.crc_ok
+                "  {name:<28} OK   total {}  cif {}  lcd {}  intact={} vpu_crc={} crc={}",
+                rep.total,
+                rep.cif_time,
+                rep.lcd_time,
+                rep.data_intact,
+                rep.vpu_crc_ok,
+                rep.crc_ok
             ),
             Err(e) => println!("  {name:<28} INFEASIBLE: {e}"),
         }
@@ -265,16 +294,41 @@ fn run_stream(args: &[String]) -> Result<()> {
         bench.name()
     );
     let mut cp = CoProcessor::with_defaults()?;
+    // `--fault-seed N` alone enables injection at the default rate —
+    // silently ignoring a fault flag the user typed would be worse.
+    let inject = flag_f64_or(args, "--inject", 0.05)
+        .or_else(|| flag_usize(args, "--fault-seed").map(|_| 0.05));
+    if let Some(rate) = inject {
+        let fault_seed = flag_usize(args, "--fault-seed")
+            .map(|v| v as u64)
+            .unwrap_or_else(|| seed(args));
+        println!("fault injection: frame rate {rate}, seed {fault_seed}");
+        cp.faults = Some(FaultPlan::new(FaultConfig::new(fault_seed, rate)));
+    }
     let opts = StreamOptions {
         bench,
         frames,
         seed: seed(args),
         depth,
     };
+    // A zero-rate plan can never inject, so it must not suppress the
+    // nonzero exit for genuine frame failures below.
+    let injecting = cp
+        .faults
+        .as_ref()
+        .is_some_and(|f| f.config().frame_rate > 0.0);
     for backend in [KernelBackend::Reference, KernelBackend::Optimized] {
         cp.backend = backend;
         let r = stream::run(&mut cp, &opts)?;
         println!("{}", report::stream_summary(&r));
+        // Contained per-frame failures are expected output under fault
+        // injection; without it they are real bugs and the process
+        // must exit nonzero like it did when the sweep aborted.
+        if !injecting {
+            if let Some(fe) = r.frame_errors.into_iter().next() {
+                return Err(fe.error);
+            }
+        }
     }
     Ok(())
 }

@@ -76,7 +76,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no Inf/NaN token; degrade to null rather
+                    // than emit unparseable output.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -355,6 +359,15 @@ mod tests {
     fn parses_escapes_and_unicode() {
         let v = Json::parse(r#""aA\t""#).unwrap();
         assert_eq!(v.as_str(), Some("aA\t"));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        let doc = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NAN)]).to_string();
+        assert!(Json::parse(&doc).is_ok(), "output must stay parseable: {doc}");
     }
 
     #[test]

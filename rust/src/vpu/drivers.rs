@@ -12,6 +12,22 @@ use crate::iface::signals::WireFrame;
 use crate::iface::timing;
 use crate::util::image::Frame;
 
+/// Outcome of one CamGeneric reception: the reassembled DRAM frame plus
+/// the CRC verdict. This is the unified report-and-recover CRC policy
+/// (ISSUE 4): like the FPGA LCD module, the driver hands software
+/// whatever arrived and *flags* it — drop/accept/retransmit decisions
+/// belong to the coordinator, not the Rx path.
+#[derive(Clone, Debug)]
+pub struct CamRx {
+    pub frame: Frame,
+    pub done_at: SimTime,
+    pub crc_ok: bool,
+    /// CRC recomputed over the received payload.
+    pub computed: u16,
+    /// CRC carried by the wire frame's CRC line.
+    pub received: u16,
+}
+
 /// LEON-side driver overhead per frame (interrupt handling, descriptor
 /// setup) — microseconds, negligible against 21 ms transfers but modelled
 /// for completeness.
@@ -36,35 +52,47 @@ impl CamGeneric {
         }
     }
 
-    /// CIF Rx: wire -> DRAM frame. Returns the frame and completion time.
-    pub fn receive(&mut self, wire: &WireFrame, now: SimTime) -> Result<(Frame, SimTime)> {
+    /// CIF Rx: wire -> DRAM frame. Always yields the frame (whatever
+    /// arrived — the DMA descriptor filled the DRAM buffer regardless)
+    /// with the CRC verdict flagged in the returned [`CamRx`]; `Err`
+    /// only for geometry violations. Earlier revisions hard-errored on
+    /// a CRC mismatch while the LCD side tolerated-and-reported; the
+    /// policy is now report-and-recover on both ends.
+    pub fn receive(&mut self, wire: &WireFrame, now: SimTime) -> Result<CamRx> {
         let t = timing::frame_time(&self.clock, wire.width, wire.height, self.porch);
-        let frame = match wire.to_frame() {
-            Ok(f) => f,
-            Err(e) => {
-                self.crc_errors += 1;
-                return Err(e);
-            }
-        };
-        self.frames_received += 1;
-        Ok((frame, now + t + DRIVER_OVERHEAD))
+        let (frame, check) = wire.to_frame_reported()?;
+        self.note(check.ok());
+        Ok(CamRx {
+            frame,
+            done_at: now + t + DRIVER_OVERHEAD,
+            crc_ok: check.ok(),
+            computed: check.computed,
+            received: check.received,
+        })
     }
 
     /// [`CamGeneric::receive`] consuming the wire frame: the payload
     /// **moves** into the returned DRAM frame instead of being cloned —
     /// the DMA-descriptor handoff of the real CamGeneric driver, and the
     /// zero-copy path of the streaming coordinator.
-    pub fn receive_owned(&mut self, wire: WireFrame, now: SimTime) -> Result<(Frame, SimTime)> {
+    pub fn receive_owned(&mut self, wire: WireFrame, now: SimTime) -> Result<CamRx> {
         let t = timing::frame_time(&self.clock, wire.width, wire.height, self.porch);
-        let frame = match wire.into_frame() {
-            Ok(f) => f,
-            Err(e) => {
-                self.crc_errors += 1;
-                return Err(e);
-            }
-        };
+        let (frame, check) = wire.into_frame_reported()?;
+        self.note(check.ok());
+        Ok(CamRx {
+            frame,
+            done_at: now + t + DRIVER_OVERHEAD,
+            crc_ok: check.ok(),
+            computed: check.computed,
+            received: check.received,
+        })
+    }
+
+    fn note(&mut self, crc_ok: bool) {
         self.frames_received += 1;
-        Ok((frame, now + t + DRIVER_OVERHEAD))
+        if !crc_ok {
+            self.crc_errors += 1;
+        }
     }
 }
 
@@ -102,6 +130,22 @@ impl LcdDriver {
         self.frames_sent += 1;
         (wire, now + t + DRIVER_OVERHEAD)
     }
+
+    /// [`LcdDriver::send`] copying the payload into a recycled buffer —
+    /// the retransmission path: the DRAM frame must survive the send so
+    /// a CRC-failed transfer can be re-queued, but the wire copy still
+    /// comes from the arena instead of a fresh allocation.
+    pub fn send_with(
+        &mut self,
+        frame: &Frame,
+        now: SimTime,
+        payload: Vec<u32>,
+    ) -> (WireFrame, SimTime) {
+        let t = timing::frame_time(&self.clock, frame.width, frame.height, self.porch);
+        let wire = WireFrame::from_frame_with(frame, payload);
+        self.frames_sent += 1;
+        (wire, now + t + DRIVER_OVERHEAD)
+    }
 }
 
 #[cfg(test)]
@@ -126,12 +170,13 @@ mod tests {
         let f = frame(64, 64, 1);
         let wire = WireFrame::from_frame(&f);
         let mut cam = CamGeneric::new(50.0e6, 27);
-        let (rx, t1) = cam.receive(&wire, SimTime::ZERO).unwrap();
-        assert_eq!(rx, f);
+        let rx = cam.receive(&wire, SimTime::ZERO).unwrap();
+        assert_eq!(rx.frame, f);
+        assert!(rx.crc_ok);
         let mut lcd = LcdDriver::new(50.0e6, 27);
-        let (wire2, t2) = lcd.send(&rx, t1);
+        let (wire2, t2) = lcd.send(&rx.frame, rx.done_at);
         assert!(wire2.to_frame().is_ok());
-        assert!(t2 > t1);
+        assert!(t2 > rx.done_at);
         assert_eq!(cam.frames_received, 1);
         assert_eq!(lcd.frames_sent, 1);
     }
@@ -141,38 +186,55 @@ mod tests {
         let f = frame(64, 64, 7);
         let wire = WireFrame::from_frame(&f);
         let mut cam = CamGeneric::new(50.0e6, 27);
-        let (rx_ref, t_ref) = cam.receive(&wire, SimTime::ZERO).unwrap();
-        let (rx_own, t_own) = cam.receive_owned(wire, SimTime::ZERO).unwrap();
-        assert_eq!(rx_ref, rx_own);
-        assert_eq!(t_ref, t_own);
+        let rx_ref = cam.receive(&wire, SimTime::ZERO).unwrap();
+        let rx_own = cam.receive_owned(wire, SimTime::ZERO).unwrap();
+        assert_eq!(rx_ref.frame, rx_own.frame);
+        assert_eq!(rx_ref.done_at, rx_own.done_at);
         assert_eq!(cam.frames_received, 2);
         let mut lcd = LcdDriver::new(50.0e6, 27);
-        let (w_ref, _) = lcd.send(&rx_ref, SimTime::ZERO);
-        let (w_own, _) = lcd.send_owned(rx_own, SimTime::ZERO);
+        let (w_ref, _) = lcd.send(&rx_ref.frame, SimTime::ZERO);
+        let (w_own, _) = lcd.send_owned(rx_own.frame, SimTime::ZERO);
         assert_eq!(w_ref, w_own);
         assert_eq!(lcd.frames_sent, 2);
     }
 
     #[test]
-    fn corrupted_wire_counted_and_rejected_owned() {
+    fn send_with_recycled_buffer_matches_send() {
+        let f = frame(48, 16, 11);
+        let mut lcd = LcdDriver::new(50.0e6, 27);
+        let (w_ref, t_ref) = lcd.send(&f, SimTime::ZERO);
+        let (w_buf, t_buf) = lcd.send_with(&f, SimTime::ZERO, vec![7u32; 4096]);
+        assert_eq!(w_ref, w_buf);
+        assert_eq!(t_ref, t_buf);
+        assert_eq!(lcd.frames_sent, 2);
+    }
+
+    #[test]
+    fn corrupted_wire_flagged_not_rejected_owned() {
+        // Unified report-and-recover policy (ISSUE 4): the corrupt
+        // frame is still delivered, flagged, and counted.
         let f = frame(32, 32, 9);
         let mut wire = WireFrame::from_frame(&f);
         wire.corrupt_bit(5, 1);
         let mut cam = CamGeneric::new(50.0e6, 27);
-        assert!(cam.receive_owned(wire, SimTime::ZERO).is_err());
+        let rx = cam.receive_owned(wire, SimTime::ZERO).unwrap();
+        assert!(!rx.crc_ok);
+        assert_ne!(rx.computed, rx.received);
+        assert_ne!(rx.frame, f, "what arrived, not what was sent");
         assert_eq!(cam.crc_errors, 1);
-        assert_eq!(cam.frames_received, 0);
+        assert_eq!(cam.frames_received, 1);
     }
 
     #[test]
-    fn corrupted_wire_counted_and_rejected() {
+    fn corrupted_wire_flagged_not_rejected() {
         let f = frame(32, 32, 2);
         let mut wire = WireFrame::from_frame(&f);
         wire.corrupt_bit(5, 1);
         let mut cam = CamGeneric::new(50.0e6, 27);
-        assert!(cam.receive(&wire, SimTime::ZERO).is_err());
+        let rx = cam.receive(&wire, SimTime::ZERO).unwrap();
+        assert!(!rx.crc_ok);
         assert_eq!(cam.crc_errors, 1);
-        assert_eq!(cam.frames_received, 0);
+        assert_eq!(cam.frames_received, 1);
     }
 
     #[test]
@@ -180,7 +242,7 @@ mod tests {
         let f = frame(1024, 1024, 3);
         let wire = WireFrame::from_frame(&f);
         let mut cam = CamGeneric::new(50.0e6, 27);
-        let (_, t) = cam.receive(&wire, SimTime::ZERO).unwrap();
-        assert!((t.as_ms() - 21.6).abs() < 0.2, "{} ms", t.as_ms());
+        let rx = cam.receive(&wire, SimTime::ZERO).unwrap();
+        assert!((rx.done_at.as_ms() - 21.6).abs() < 0.2, "{} ms", rx.done_at.as_ms());
     }
 }

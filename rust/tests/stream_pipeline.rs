@@ -8,11 +8,16 @@ use spacecodesign::KernelBackend;
 
 /// CoProcessor pinned to a directory without artifacts: builtin
 /// manifest + native engine, deterministic regardless of what the
-/// checkout has built.
+/// checkout has built. Fault injection is pinned OFF so these pins
+/// hold under the CI fault leg for any seed/rate choice — the faulted
+/// equivalents (incl. the stream==one-shot pin under injection) live
+/// in `tests/fault_injection.rs` with explicit plans.
 fn native_coproc(tag: &str) -> CoProcessor {
     let mut cfg = SystemConfig::paper();
     cfg.artifacts_dir = format!("target/__stream_{tag}__");
-    CoProcessor::new(cfg).expect("native coprocessor")
+    let mut cp = CoProcessor::new(cfg).expect("native coprocessor");
+    cp.faults = None;
+    cp
 }
 
 fn opts(bench: Benchmark, frames: usize, seed: u64) -> StreamOptions {
