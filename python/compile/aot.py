@@ -128,6 +128,17 @@ def main() -> None:
     add("cnn_frame_1024", model.make_cnn_frame(params, grid=CNN_GRID),
         {"bench": "cnn", "h": CNN_GRID * 128, "w": CNN_GRID * 128,
          "grid": CNN_GRID, "patch": 128})
+    # Batched multi-frame artifacts (ROADMAP item from PR 3): the
+    # native engine already executes these spec names from the builtin
+    # manifest; emitting the HLO here lights the same names up on the
+    # PJRT path. Shapes/meta mirror Manifest::builtin exactly —
+    # `cnn_frame_b1` is the scalar twin `execute_batched`'s fallback
+    # convention resolves `cnn_frame_b{N}` to on older artifact sets.
+    add("cnn_frame_b1", model.make_cnn_frames(params, 1, grid=CNN_GRID),
+        {"bench": "cnn_frame", "batch": 1, "grid": CNN_GRID, "patch": 128})
+    add("cnn_frame_b4", model.make_cnn_frames(params, 4, grid=CNN_GRID),
+        {"bench": "cnn_frame", "batch": 4, "grid": CNN_GRID, "patch": 128,
+         "scalar_artifact": "cnn_frame_b1"})
     add("cnn_patch_b1", model.make_cnn_patches(params, 1),
         {"bench": "cnn_patch", "batch": 1, "patch": 128})
     add("cnn_patch_b16", model.make_cnn_patches(params, 16),

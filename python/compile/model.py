@@ -161,3 +161,27 @@ def make_cnn_frame(params: dict, grid: int = 8, patch: int = 128):
         return kcnn.cnn_forward(q, patches)
 
     return fn, (jax.ShapeDtypeStruct((side, side, 3), jnp.float32),)
+
+
+def make_cnn_frames(params: dict, frames: int, grid: int = 8, patch: int = 128):
+    """Batched full-frame inference (the `cnn_frame_b{N}` artifacts):
+    (frames, side, side, 3) RGB frames -> (frames * grid^2, 2) logits.
+
+    Frame-major, then the same row-major patch split as
+    `make_cnn_frame` per frame — the exact order the Rust native
+    engine's splitter (`ships::extract_chip_into` over rank-4 input)
+    produces, so the PJRT and native paths serve bit-compatible batched
+    artifacts.
+    """
+    q = quantize_fp16(params)
+    side = grid * patch
+
+    def fn(batch):
+        patches = (
+            batch.reshape(frames, grid, patch, grid, patch, 3)
+            .transpose(0, 1, 3, 2, 4, 5)
+            .reshape(frames * grid * grid, patch, patch, 3)
+        )
+        return kcnn.cnn_forward(q, patches)
+
+    return fn, (jax.ShapeDtypeStruct((frames, side, side, 3), jnp.float32),)

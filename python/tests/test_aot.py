@@ -59,6 +59,33 @@ def test_cnn_patch_artifact_shapes(tmp_path):
     assert entry["outputs"] == [{"shape": [2, 2], "dtype": "f32"}]
 
 
+def test_cnn_frames_artifact_shapes(tmp_path):
+    """The batched `cnn_frame_b{N}` graph: F frames of (grid*patch)^2 RGB
+    in, F*grid^2 logit pairs out (small grid keeps lowering fast)."""
+    params = init_params()
+    fn, specs = model.make_cnn_frames(params, 2, grid=1, patch=128)
+    entry = aot.build_artifact("cnn_frames_test", fn, specs, str(tmp_path), {})
+    assert entry["inputs"] == [{"shape": [2, 128, 128, 3], "dtype": "f32"}]
+    assert entry["outputs"] == [{"shape": [2, 2], "dtype": "f32"}]
+
+
+def test_cnn_frames_splitter_matches_per_frame_graph():
+    """The batched splitter must classify each frame exactly like the
+    single-frame graph: frame-major, row-major patches within a frame."""
+    params = init_params()
+    grid, patch = 2, 128
+    side = grid * patch
+    fn1, _ = model.make_cnn_frame(params, grid=grid, patch=patch)
+    fnb, _ = model.make_cnn_frames(params, 2, grid=grid, patch=patch)
+    rng = np.random.RandomState(7)
+    frames = jnp.asarray(rng.rand(2, side, side, 3).astype(np.float32))
+    batched = np.asarray(fnb(frames))
+    per_frame = np.concatenate(
+        [np.asarray(fn1(frames[i])) for i in range(2)], axis=0
+    )
+    np.testing.assert_allclose(batched, per_frame, rtol=1e-6, atol=1e-6)
+
+
 def test_manifest_is_valid_json_when_present():
     """If `make artifacts` has run, the manifest must satisfy the schema
     the Rust loader assumes."""

@@ -26,7 +26,7 @@ fn main() {
     let mut cnn_fpsw = 0.0;
     for bench in Benchmark::table2() {
         let run = cp.run_unmasked(bench, 42).expect("run");
-        let leon_w = cp.power.leon_power(bench.kind());
+        let leon_w = cp.power().leon_power(bench.kind());
         let shave_fpsw = run.fps_per_watt();
         let leon_fpsw = 1.0 / run.t_leon.as_secs() / leon_w;
         println!(

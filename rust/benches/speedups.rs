@@ -57,7 +57,7 @@ fn main() {
 
     println!("\n== scheduling: static vs dynamic bands for render ==");
     use spacecodesign::vpu::{cost::BenchKind, scheduler};
-    let cm = &cp.cost;
+    let cm = cp.cost();
     for seed in [1u64, 4, 7] {
         // Rebuild the workload through the public path.
         let t_dyn = cp.proc_time(Benchmark::Render, seed).unwrap();
@@ -66,9 +66,10 @@ fn main() {
             // proc_time used dynamic; reconstruct bands via cost model.
             // (render bands depend on pose; use proc_time as the dynamic
             // reference and compute static with the same band vector).
-            let mesh =
-                spacecodesign::runtime::native::manifest_mesh(&cp.runtime.manifest)
-                    .expect("render mesh");
+            let mesh = spacecodesign::runtime::native::manifest_mesh(
+                &cp.nodes[0].runtime.manifest,
+            )
+            .expect("render mesh");
             let pose = spacecodesign::coordinator::host::render_pose(seed);
             let tris = spacecodesign::render::project_triangles(
                 &pose, &mesh, 1024, 1024, mesh.faces.len(),

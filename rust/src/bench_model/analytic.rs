@@ -28,6 +28,19 @@ pub fn masked_throughput(t: &MaskedTiming) -> f64 {
     1.0 / masked_period(t).as_secs()
 }
 
+/// System-level Masked throughput of a sharded topology (ISSUE 5):
+/// `vpus` independent nodes, each behind its own CIF/LCD link pair,
+/// each running the double-buffered pipeline on its share of the frame
+/// stream. The nodes share nothing on the frame path (per-node links,
+/// runtimes, DRAM), so the system rate is the per-node rate times the
+/// node count — the closed-form twin of
+/// `coordinator::pipeline::merge_masked` over N identical nodes, and
+/// the scaling model the MPAI follow-up's multi-accelerator
+/// architecture targets.
+pub fn sharded_masked_throughput(t: &MaskedTiming, vpus: usize) -> f64 {
+    vpus as f64 * masked_throughput(t)
+}
+
 /// Reconstruction of the paper's (typographically corrupted) footnote-2
 /// latency formula: `2 * max(t_proc, chain) + (chain - t_LCDbuf)`.
 /// This reproduces the paper's Masked latency column exactly for the
@@ -131,6 +144,29 @@ mod tests {
             let l = r.avg_latency.as_secs();
             assert!(l >= 1.4 * p && l <= 3.2 * p, "latency {l} vs period {p}");
         }
+    }
+
+    #[test]
+    fn sharded_throughput_matches_merged_des() {
+        use crate::coordinator::pipeline::merge_masked;
+        // The closed form (N x per-node FPS) must agree with the DES
+        // merge of N identical per-node simulations.
+        let t = timing(21.0, 42.0, 8.0, 42.0, 21.0); // conv3
+        for vpus in [1usize, 2, 4] {
+            let analytic = sharded_masked_throughput(&t, vpus);
+            let per_node = simulate_masked(&t, 32);
+            let nodes = vec![per_node; vpus];
+            let merged = merge_masked(&nodes);
+            let rel = (merged.throughput_fps - analytic).abs() / analytic;
+            assert!(
+                rel < 0.02,
+                "vpus={vpus}: DES merge {} vs analytic {analytic}",
+                merged.throughput_fps
+            );
+        }
+        // And 4 nodes really are 4x one node.
+        let one = sharded_masked_throughput(&t, 1);
+        assert_eq!(sharded_masked_throughput(&t, 4), 4.0 * one);
     }
 
     #[test]

@@ -6,14 +6,18 @@
 //!   ("Our Host PC is responsible for transferring the I/O data to/from
 //!   the FPGA and validating the results via comparisons to groundtruth
 //!   data").
-//! * [`system`] — the FPGA + VPU testbed; Unmasked-mode frame execution
+//! * [`system`] — the FPGA + VPU testbed as an N-node topology
+//!   (`CoProcessor` over `Vec<VpuNode>`); Unmasked-mode frame execution
 //!   with real numerics through the PJRT runtime.
 //! * [`pipeline`] — the Masked-mode discrete-event pipeline simulation
-//!   (double-buffered, LEON0 = I/O, LEON1 = compute).
-//! * [`stream`] — the streaming multi-frame pipeline: the three frame
-//!   stages (CIF ingest, VPU execute, LCD egress) overlapped on worker
-//!   threads for sustained-traffic sweeps, with per-stage utilization
-//!   reported alongside the Masked DES prediction.
+//!   (double-buffered, LEON0 = I/O, LEON1 = compute), plus the
+//!   per-node-to-system merge (`merge_masked`).
+//! * [`stream`] — the streaming multi-frame pipeline: a dispatch stage
+//!   routes frames across the VPU nodes (round-robin or least-loaded),
+//!   and each node overlaps its three frame stages (CIF ingest, VPU
+//!   execute, LCD egress) on worker threads for sustained-traffic
+//!   sweeps, with per-stage utilization reported alongside the Masked
+//!   DES prediction.
 //! * [`report`] — Table II / speedup / Fig. 5 / stream formatting.
 //! * [`comparators`] — the cited Zynq-7020 / Jetson Nano comparison
 //!   models of §IV.
@@ -27,6 +31,6 @@ pub mod stream;
 pub mod system;
 
 pub use benchmarks::Benchmark;
-pub use pipeline::{simulate_masked, MaskedResult, MaskedTiming};
+pub use pipeline::{merge_masked, simulate_masked, MaskedResult, MaskedTiming};
 pub use stream::{StreamOptions, StreamResult};
-pub use system::{CoProcessor, FrameRun};
+pub use system::{CoProcessor, FrameRun, VpuNode};

@@ -53,6 +53,57 @@ pub struct MaskedResult {
     pub frames: usize,
 }
 
+/// Merge per-node Masked-DES results into the system-level figure
+/// (ISSUE 5): N independent VPU nodes each run the paper's
+/// double-buffered pipeline on their dispatched share, so system
+/// throughput is the sum of node throughputs, system latency the
+/// frame-weighted mean (a frame's latency does not change because a
+/// sibling node exists), and the system period the inverse of the
+/// summed rate. One node merges to itself; an empty slice (a sweep
+/// where every frame failed) merges to the all-zero result.
+pub fn merge_masked(nodes: &[MaskedResult]) -> MaskedResult {
+    match nodes {
+        [] => MaskedResult {
+            first_latency: SimTime::ZERO,
+            avg_latency: SimTime::ZERO,
+            period: SimTime::ZERO,
+            throughput_fps: 0.0,
+            frames: 0,
+        },
+        [one] => one.clone(),
+        many => {
+            let frames: usize = many.iter().map(|m| m.frames).sum();
+            let fps: f64 = many.iter().map(|m| m.throughput_fps).sum();
+            let lat_sum: f64 = many
+                .iter()
+                .map(|m| m.avg_latency.as_secs() * m.frames as f64)
+                .sum();
+            let avg_latency = if frames == 0 {
+                SimTime::ZERO
+            } else {
+                SimTime::from_secs(lat_sum / frames as f64)
+            };
+            let first_latency = many
+                .iter()
+                .map(|m| m.first_latency)
+                .min()
+                .unwrap_or(SimTime::ZERO);
+            let period = if fps > 0.0 {
+                SimTime::from_secs(1.0 / fps)
+            } else {
+                SimTime::ZERO
+            };
+            MaskedResult {
+                first_latency,
+                avg_latency,
+                period,
+                throughput_fps: fps,
+                frames,
+            }
+        }
+    }
+}
+
 /// Simulate `n_frames` through the double-buffered masked pipeline.
 ///
 /// LEON0 greedily executes whichever I/O op (input chain of frame j,
@@ -277,5 +328,64 @@ mod tests {
         let fast = simulate_masked(&conv_timing(8.0), 32).throughput_fps;
         let slow = simulate_masked(&conv_timing(400.0), 32).throughput_fps;
         assert!(fast >= slow);
+    }
+
+    #[test]
+    fn merge_masked_sums_homogeneous_nodes() {
+        // Four identical nodes: 4x the throughput, same latency.
+        let one = simulate_masked(&conv_timing(29.0), 32);
+        let four = vec![one.clone(); 4];
+        let merged = merge_masked(&four);
+        assert!(
+            (merged.throughput_fps - 4.0 * one.throughput_fps).abs()
+                < 1e-9 * one.throughput_fps,
+            "{} vs 4 x {}",
+            merged.throughput_fps,
+            one.throughput_fps
+        );
+        assert_eq!(merged.frames, 4 * one.frames);
+        assert_eq!(merged.avg_latency, one.avg_latency);
+        assert_eq!(merged.first_latency, one.first_latency);
+        // Period is the system inter-completion gap: a quarter.
+        assert!(
+            (merged.period.as_secs() - one.period.as_secs() / 4.0).abs()
+                < 1e-6 * one.period.as_secs()
+        );
+    }
+
+    #[test]
+    fn merge_masked_identity_and_empty() {
+        let one = simulate_masked(&conv_timing(8.0), 16);
+        let same = merge_masked(std::slice::from_ref(&one));
+        assert_eq!(same.throughput_fps, one.throughput_fps);
+        assert_eq!(same.period, one.period);
+        assert_eq!(same.frames, one.frames);
+        let none = merge_masked(&[]);
+        assert_eq!(none.throughput_fps, 0.0);
+        assert_eq!(none.frames, 0);
+    }
+
+    #[test]
+    fn merge_masked_weights_latency_by_frames() {
+        let a = MaskedResult {
+            first_latency: SimTime::from_ms(100.0),
+            avg_latency: SimTime::from_ms(100.0),
+            period: SimTime::from_ms(50.0),
+            throughput_fps: 20.0,
+            frames: 30,
+        };
+        let b = MaskedResult {
+            first_latency: SimTime::from_ms(200.0),
+            avg_latency: SimTime::from_ms(400.0),
+            period: SimTime::from_ms(100.0),
+            throughput_fps: 10.0,
+            frames: 10,
+        };
+        let m = merge_masked(&[a, b]);
+        // (100*30 + 400*10) / 40 = 175 ms.
+        assert!((m.avg_latency.as_ms() - 175.0).abs() < 1e-6, "{}", m.avg_latency);
+        assert_eq!(m.throughput_fps, 30.0);
+        assert_eq!(m.first_latency, SimTime::from_ms(100.0));
+        assert_eq!(m.frames, 40);
     }
 }

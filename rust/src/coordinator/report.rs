@@ -103,9 +103,30 @@ pub fn validation_row(run: &FrameRun) -> String {
     )
 }
 
+/// Per-(node, direction) wire-fault counter rows (ISSUE 5 satellite) —
+/// rendered into Table II's fault appendix and the stream summary,
+/// one indented line per hop the plan touched.
+pub fn hop_fault_rows(rows: &[crate::iface::fault::HopFaultStats]) -> String {
+    let mut out = String::new();
+    for h in rows {
+        out.push_str(&format!(
+            "  node {} {}: {}/{} transfers hit, {} retransmits, {} unrecovered\n",
+            h.hop.node(),
+            h.hop.name(),
+            h.stats.faulted,
+            h.stats.transfers,
+            h.stats.retransmits,
+            h.stats.unrecovered,
+        ));
+    }
+    out
+}
+
 /// Multi-line summary of a streaming sweep: measured pipeline numbers,
-/// per-stage utilization, the Masked DES prediction, and — under fault
-/// injection — the wire-fault/retransmission/containment counters.
+/// per-stage utilization, the Masked DES prediction (per node and, on
+/// a multi-node topology, merged to the system level with the dispatch
+/// shares), and — under fault injection — the per-node
+/// wire-fault/retransmission/containment counters.
 pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
     let valid = r
         .runs
@@ -129,6 +150,21 @@ pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
         r.masked.throughput_fps,
         r.masked.frames,
     );
+    if r.vpus > 1 {
+        let shares: Vec<String> = r
+            .per_node_frames
+            .iter()
+            .enumerate()
+            .map(|(i, n)| format!("n{i}:{n}"))
+            .collect();
+        out.push_str(&format!(
+            "  topology: {} nodes [{}]  dispatch {}  system masked-DES {:.1} FPS\n",
+            r.vpus,
+            r.sched.name(),
+            shares.join(" "),
+            r.masked_system.throughput_fps,
+        ));
+    }
     for (i, name) in stage_names.iter().enumerate() {
         out.push_str(&format!(
             "  {name} busy {:>9}  util {:>5.1}%\n",
@@ -155,6 +191,7 @@ pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
             r.faults.retransmits,
             r.faults.unrecovered,
         ));
+        out.push_str(&hop_fault_rows(&r.hop_faults));
     }
     out.push_str(&format!(
         "  validation {valid}/{} pass, {} frame errors",
@@ -173,6 +210,7 @@ mod tests {
     fn dummy_run() -> FrameRun {
         FrameRun {
             bench: Benchmark::Conv { k: 3 },
+            node: 0,
             t_cif: SimTime::from_ms(21.0),
             t_proc: SimTime::from_ms(8.0),
             t_lcd: SimTime::from_ms(21.0),
@@ -245,6 +283,9 @@ mod tests {
             bench: Benchmark::Conv { k: 3 },
             backend: crate::KernelBackend::Optimized,
             frames: 2,
+            vpus: 1,
+            sched: crate::vpu::scheduler::SchedPolicy::RoundRobin,
+            per_node_frames: vec![2],
             wall: Duration::from_millis(100),
             wall_fps: 20.0,
             stage_busy: [
@@ -258,11 +299,13 @@ mod tests {
                 reused: 9,
                 allocated: 3,
             },
+            masked_system: masked.clone(),
             masked,
             runs: vec![dummy_run(), dummy_run()],
             frame_errors: vec![],
             retransmits: 0,
             faults: crate::iface::fault::FaultStats::default(),
+            hop_faults: vec![],
         };
         let s = stream_summary(&r);
         assert!(s.contains("CIF ingest"), "{s}");
@@ -275,6 +318,10 @@ mod tests {
         assert!(
             !s.contains("faults:"),
             "fault line only appears under injection: {s}"
+        );
+        assert!(
+            !s.contains("topology:"),
+            "topology line only appears with vpus > 1: {s}"
         );
     }
 
@@ -291,10 +338,24 @@ mod tests {
             throughput_fps: 7.9,
             frames: 8,
         };
+        let hop = |hop, faulted, transfers, retx| crate::iface::fault::HopFaultStats {
+            hop,
+            stats: FaultStats {
+                transfers,
+                faulted,
+                retransmits: retx,
+                ..FaultStats::default()
+            },
+        };
+        let mut run1 = dummy_run();
+        run1.node = 1;
         let r = StreamResult {
             bench: Benchmark::Conv { k: 3 },
             backend: crate::KernelBackend::Optimized,
             frames: 3,
+            vpus: 2,
+            sched: crate::vpu::scheduler::SchedPolicy::LeastLoaded,
+            per_node_frames: vec![2, 1],
             wall: Duration::from_millis(100),
             wall_fps: 20.0,
             stage_busy: [Duration::from_millis(10); 3],
@@ -304,8 +365,15 @@ mod tests {
                 reused: 9,
                 allocated: 3,
             },
+            masked_system: MaskedResult {
+                first_latency: SimTime::from_ms(300.0),
+                avg_latency: SimTime::from_ms(336.0),
+                period: SimTime::from_ms(63.0),
+                throughput_fps: 15.8,
+                frames: 16,
+            },
             masked,
-            runs: vec![dummy_run(), dummy_run()],
+            runs: vec![dummy_run(), run1],
             frame_errors: vec![FrameError {
                 frame: 1,
                 seed: 43,
@@ -326,11 +394,43 @@ mod tests {
                 retransmits: 7,
                 unrecovered: 1,
             },
+            hop_faults: vec![
+                hop(crate::iface::fault::Hop::Cif(0), 3, 8, 5),
+                hop(crate::iface::fault::Hop::Cif(1), 2, 4, 2),
+            ],
         };
         let s = stream_summary(&r);
         assert!(s.contains("faults: 5/12 transfers hit"), "{s}");
         assert!(s.contains("7 retransmits, 1 unrecovered"), "{s}");
         assert!(s.contains("validation 2/2 pass, 1 frame errors"), "{s}");
+        // Topology line: node count, policy, dispatch shares, system DES.
+        assert!(s.contains("topology: 2 nodes [lld]"), "{s}");
+        assert!(s.contains("n0:2 n1:1"), "{s}");
+        assert!(s.contains("system masked-DES 15.8 FPS"), "{s}");
+        // Per-hop attribution rows.
+        assert!(s.contains("node 0 cif: 3/8 transfers hit, 5 retransmits"), "{s}");
+        assert!(s.contains("node 1 cif: 2/4 transfers hit, 2 retransmits"), "{s}");
+    }
+
+    #[test]
+    fn hop_fault_rows_render_per_node() {
+        use crate::iface::fault::{FaultStats, Hop, HopFaultStats};
+        let row = HopFaultStats {
+            hop: Hop::Lcd(3),
+            stats: FaultStats {
+                transfers: 9,
+                faulted: 2,
+                retransmits: 4,
+                unrecovered: 1,
+                ..FaultStats::default()
+            },
+        };
+        let s = hop_fault_rows(&[row]);
+        assert!(
+            s.contains("node 3 lcd: 2/9 transfers hit, 4 retransmits, 1 unrecovered"),
+            "{s}"
+        );
+        assert!(hop_fault_rows(&[]).is_empty());
     }
 
     #[test]

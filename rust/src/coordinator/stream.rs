@@ -1,47 +1,55 @@
 //! Streaming multi-frame pipeline — sustained traffic through the
-//! testbed, with the three stages of the paper's Masked mode running
-//! concurrently on real threads:
+//! testbed, with a dispatch stage routing frames across the VPU
+//! topology (ISSUE 5) and, per node, the three stages of the paper's
+//! Masked mode running concurrently on real threads:
 //!
+//! * **dispatch** — the framing processor's routing decision: which
+//!   node ingests frame i, per the configured [`SchedPolicy`]
+//!   (round-robin or least-outstanding-frames);
 //! * **CIF ingest** — host workload generation + groundtruth + the CIF
-//!   wire transfer of frame n+1,
+//!   wire transfer of frame n+1 into the node,
 //! * **VPU execute** — artifact numerics (PJRT or native) + cost-model
 //!   timing of frame n,
 //! * **LCD egress** — output conversion, LCD wire transfer and host
 //!   validation of frame n-1.
 //!
-//! Stage hand-off uses `util::par::pipeline3` with bounded queues
-//! (depth 1 = the VPU's double-buffered DRAM slots). Alongside the
+//! Each node runs its own three-stage lane over bounded queues
+//! (depth 1 = the VPU's double-buffered DRAM slots), so an N-node
+//! topology streams N frames genuinely concurrently. Alongside the
 //! wallclock numbers the result carries the Masked-mode DES prediction
-//! (`simulate_masked`) for the same frame count, so the measured
-//! pipeline can be compared against the paper's §IV timing model, plus
-//! per-stage busy time/utilization to show where the paper's "masking"
-//! headroom actually is.
+//! (`simulate_masked`) per node, merged into a system-level
+//! throughput (`masked_system`), so the measured pipeline can be
+//! compared against the paper's §IV timing model scaled the way the
+//! MPAI follow-up scales accelerators.
 //!
 //! The single-frame Unmasked path (`CoProcessor::run_unmasked`) is
-//! built from the same three stage implementations run back-to-back, so
-//! streamed frames and one-shot frames are bit-identical per seed.
+//! built from the same stage implementations run back-to-back on
+//! node 0, so streamed frames and one-shot frames are bit-identical
+//! per seed — on any topology size, because fault draws and numerics
+//! are node-independent by construction.
 
 use crate::config::{SystemConfig, VpuConfig};
 use crate::coordinator::benchmarks::Benchmark;
 use crate::coordinator::host::{self, WorkItem};
-use crate::coordinator::pipeline::{simulate_masked, MaskedResult, MaskedTiming};
-use crate::coordinator::system::{CoProcessor, FrameRun};
+use crate::coordinator::pipeline::{merge_masked, simulate_masked, MaskedResult, MaskedTiming};
+use crate::coordinator::system::{CoProcessor, FrameRun, VpuNode};
 use crate::error::{Error, Result};
 use crate::fabric::clock::SimTime;
-use crate::iface::fault::{FaultPlan, FaultStats, Hop};
+use crate::iface::fault::{self, FaultPlan, FaultStats, Hop, HopFaultStats};
 use crate::iface::lcd::RxReport;
 use crate::iface::{CifModule, LcdModule};
 use crate::render::Mesh;
 use crate::runtime::Runtime;
 use crate::util::arena::{ArenaStats, FrameArena};
 use crate::util::image::Frame;
-use crate::util::par;
 use crate::vpu::cost::{workloads, CostModel, Workload};
 use crate::vpu::drivers::{CamGeneric, LcdDriver};
 use crate::vpu::power::PowerModel;
-use crate::vpu::scheduler;
+use crate::vpu::scheduler::{self, SchedPolicy};
 use crate::KernelBackend;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Configuration of one streaming sweep.
@@ -51,9 +59,12 @@ pub struct StreamOptions {
     /// Frames in the sweep; frame i uses seed `seed + i`.
     pub frames: usize,
     pub seed: u64,
-    /// Bounded queue depth between adjacent stages (1 = strict double
-    /// buffering like the VPU's DRAM slots).
+    /// Bounded queue depth between adjacent stages of each node lane
+    /// (1 = strict double buffering like the VPU's DRAM slots).
     pub depth: usize,
+    /// Frame-dispatch policy across the VPU nodes (ignored on a
+    /// single-node topology, where both policies degenerate to FIFO).
+    pub sched: SchedPolicy,
 }
 
 impl StreamOptions {
@@ -63,6 +74,7 @@ impl StreamOptions {
             frames,
             seed: 42,
             depth: 1,
+            sched: SchedPolicy::RoundRobin,
         }
     }
 }
@@ -86,28 +98,45 @@ pub struct StreamResult {
     pub bench: Benchmark,
     pub backend: KernelBackend,
     pub frames: usize,
+    /// VPU nodes the sweep dispatched across.
+    pub vpus: usize,
+    /// The dispatch policy that routed frames to nodes.
+    pub sched: SchedPolicy,
+    /// Frames *dispatched* to each node (failed frames included —
+    /// this is the load the dispatcher placed, not the yield).
+    pub per_node_frames: Vec<usize>,
     /// Wallclock of the whole sweep (all stages overlapped).
     pub wall: Duration,
     /// Measured pipeline throughput: frames actually *delivered*
     /// (`runs.len()`, not attempts) per wallclock second — a sweep
     /// that contains failures does not get credit for them.
     pub wall_fps: f64,
-    /// Busy wallclock per stage: [CIF ingest, VPU execute, LCD egress].
+    /// Busy wallclock per stage kind, summed across the node lanes:
+    /// [CIF ingest, VPU execute, LCD egress].
     pub stage_busy: [Duration; 3],
-    /// stage_busy / wall — how saturated each stage was (the widest bar
-    /// is the pipeline bottleneck).
+    /// stage_busy / wall — how saturated each stage kind was. On a
+    /// multi-node topology the same stage runs once per node, so a
+    /// value above 1.0 means the topology genuinely overlapped that
+    /// stage across nodes.
     pub stage_util: [f64; 3],
     /// Total wallclock inside `Runtime::execute` across the sweep's
     /// *delivered* frames (a frame contained as an error after it
     /// executed is in `stage_busy[1]` but not here).
     pub exec_wall: Duration,
-    /// Frame-buffer arena traffic during this sweep (takes served from
-    /// the freelist vs fresh allocations) — steady state should be
-    /// nearly all reuse.
+    /// Frame-buffer arena traffic during this sweep, aggregated across
+    /// every node's arena (takes served from the freelists vs fresh
+    /// allocations) — steady state should be nearly all reuse.
     pub arena: ArenaStats,
-    /// The Masked-mode DES prediction for the same per-frame timings
-    /// (simulated time, not wallclock; over `max(frames, 8)` frames).
+    /// The Masked-mode DES prediction for a single node running the
+    /// whole sweep (simulated time, not wallclock; over
+    /// `max(frames, 8)` frames) — the paper's Table II column,
+    /// unchanged by the topology.
     pub masked: MaskedResult,
+    /// The per-node Masked DES predictions merged into the
+    /// system-level figure: each node simulated over its dispatched
+    /// share, throughputs summed (`pipeline::merge_masked`). Equals
+    /// `masked` on a single-node topology.
+    pub masked_system: MaskedResult,
     /// Successfully completed frames, in sweep order.
     pub runs: Vec<FrameRun>,
     /// Frames that failed (CRC budget exhausted, runtime error, ...) —
@@ -118,9 +147,12 @@ pub struct StreamResult {
     /// `t_cif`/`t_lcd`; a failed frame's accumulated timing is
     /// discarded with it (only this counter and `faults` remember it).
     pub retransmits: u64,
-    /// Wire-fault injection counters for this sweep (all zero when no
-    /// fault plan is active).
+    /// Wire-fault injection counters for this sweep, all hops summed
+    /// (all zero when no fault plan is active).
     pub faults: FaultStats,
+    /// The same counters attributed per (node, direction) — Table II's
+    /// fault appendix rows (ISSUE 5 satellite; empty without faults).
+    pub hop_faults: Vec<HopFaultStats>,
 }
 
 impl StreamResult {
@@ -130,9 +162,24 @@ impl StreamResult {
         self.frame_errors.is_empty()
             && self.runs.iter().all(|r| r.crc_ok && r.validation.pass)
     }
+
+    /// Frames *delivered* by each node (the yield, vs
+    /// `per_node_frames`' placed load).
+    pub fn delivered_per_node(&self) -> Vec<usize> {
+        let mut v = vec![0usize; self.vpus];
+        for r in &self.runs {
+            if r.node < v.len() {
+                v[r.node] += 1;
+            }
+        }
+        v
+    }
 }
 
-/// Stage 1 state: the host side + CIF input path.
+/// Stage 1 state: the host side + one node's CIF input path. The
+/// node's topology index lives on the driver instance (`cam.node`) —
+/// the frame draws its fault-plan hop id from the hardware it actually
+/// passes through.
 pub(crate) struct IngestStage {
     pub(crate) cif: CifModule,
     pub(crate) cam: CamGeneric,
@@ -140,7 +187,8 @@ pub(crate) struct IngestStage {
     pub(crate) weights: Option<crate::cnn::Weights>,
 }
 
-/// Stage 3 state: the LCD output path.
+/// Stage 3 state: one node's LCD output path. The topology index lives
+/// on the driver instance (`lcd_drv.node`).
 pub(crate) struct EgressStage {
     pub(crate) lcd: LcdModule,
     pub(crate) lcd_drv: LcdDriver,
@@ -247,9 +295,21 @@ pub(crate) fn masked_timing_of(cfg: &SystemConfig, run: &FrameRun) -> MaskedTimi
     }
 }
 
+/// The all-zero timing a node with no delivered frames contributes
+/// (`rate_hz` reports it as 0 FPS).
+fn zero_timing() -> MaskedTiming {
+    MaskedTiming {
+        t_cif: SimTime::ZERO,
+        t_cifbuf: SimTime::ZERO,
+        t_proc: SimTime::ZERO,
+        t_lcdbuf: SimTime::ZERO,
+        t_lcd: SimTime::ZERO,
+    }
+}
+
 impl IngestStage {
-    /// Generate frame `seed`, push it over CIF into the VPU, and price
-    /// its processing with the cost model.
+    /// Generate frame `seed`, push it over CIF into this node, and
+    /// price its processing with the cost model.
     ///
     /// `arena` feeds every frame-sized buffer on this path (work-item
     /// planes, wire payloads) and gets the VPU-side DRAM copy back
@@ -308,9 +368,9 @@ impl IngestStage {
         })
     }
 
-    /// CIF: host -> FPGA -> VPU, per plane, with CRC-triggered bounded
-    /// retransmission when a fault plan is active. The wire payload
-    /// comes from the arena, moves into the VPU-side frame
+    /// CIF: host -> FPGA -> this node, per plane, with CRC-triggered
+    /// bounded retransmission when a fault plan is active. The wire
+    /// payload comes from the arena, moves into the VPU-side frame
     /// (`receive_owned`), and is recycled straight back.
     fn cif_hop(
         &mut self,
@@ -319,6 +379,7 @@ impl IngestStage {
         arena: &FrameArena,
         faults: Option<&FaultPlan>,
     ) -> Result<(SimTime, u32)> {
+        let hop = Hop::Cif(self.cam.node);
         let mut t_cif = SimTime::ZERO;
         let mut retransmits = 0u32;
         let budget = faults.map_or(0, |f| f.max_retransmits());
@@ -330,7 +391,7 @@ impl IngestStage {
                 let (mut wire, tx) =
                     self.cif.send_frame_with(plane, SimTime::ZERO, payload)?;
                 if let Some(f) = faults {
-                    f.corrupt(Hop::CifTx, seed, p, attempt, &mut wire);
+                    f.corrupt(hop, seed, p, attempt, &mut wire);
                 }
                 let rx = self.cam.receive_owned(wire, SimTime::ZERO)?;
                 t_cif += tx.wire_time;
@@ -350,7 +411,7 @@ impl IngestStage {
                     });
                 };
                 if attempt >= budget {
-                    f.note_unrecovered();
+                    f.note_unrecovered(hop);
                     return Err(Error::Unrecovered {
                         attempts: attempt + 1,
                         computed: rx.computed,
@@ -359,7 +420,7 @@ impl IngestStage {
                 }
                 attempt += 1;
                 retransmits += 1;
-                f.note_retransmit();
+                f.note_retransmit(hop);
             }
         }
         debug_assert_eq!(
@@ -370,10 +431,10 @@ impl IngestStage {
     }
 }
 
-/// Stage 2: run the frame's artifact through the runtime. An execution
-/// failure is contained per frame: the job's buffers are recycled into
-/// `arena` before the error propagates, so a failed frame costs the
-/// freelist nothing.
+/// Stage 2: run the frame's artifact through the node's runtime. An
+/// execution failure is contained per frame: the job's buffers are
+/// recycled into `arena` before the error propagates, so a failed
+/// frame costs the freelist nothing.
 pub(crate) fn execute_job(
     rt: &mut Runtime,
     job: StreamJob,
@@ -492,15 +553,16 @@ impl EgressStage {
         };
 
         // --- LCD: VPU -> FPGA -> host --------------------------------
+        let hop = Hop::Lcd(self.lcd_drv.node);
         self.lcd
             .regs
             .configure(out_frame.width, out_frame.height, out_frame.format);
-        let hop = match faults {
+        let hop_result = match faults {
             // Faulted path, only for frames the plan actually targets:
             // the DRAM frame survives each send (the firmware keeps
             // the queued buffer until delivery is confirmed), so a
             // flagged CRC can trigger resends.
-            Some(f) if f.targets(Hop::LcdTx, job.seed) => {
+            Some(f) if f.targets(hop, job.seed) => {
                 let r = self.lcd_hop(f, &out_frame, job.seed, arena);
                 arena.recycle_u32(out_frame.data);
                 r
@@ -512,7 +574,7 @@ impl EgressStage {
             // copy it).
             other => {
                 if let Some(f) = other {
-                    f.note_transfer();
+                    f.note_transfer(hop);
                 }
                 let (wire_back, _t_tx) =
                     self.lcd_drv.send_owned(out_frame, SimTime::ZERO);
@@ -524,7 +586,7 @@ impl EgressStage {
                 })
             }
         };
-        let (received, rx, t_lcd, lcd_retransmits) = match hop {
+        let (received, rx, t_lcd, lcd_retransmits) = match hop_result {
             Ok(v) => v,
             Err(e) => {
                 recycle_frame_buffers(job.item, outputs, arena);
@@ -549,6 +611,7 @@ impl EgressStage {
 
         Ok(FrameRun {
             bench,
+            node: self.lcd_drv.node,
             t_cif: job.t_cif,
             t_proc: job.t_proc,
             t_lcd,
@@ -576,6 +639,7 @@ impl EgressStage {
         seed: u64,
         arena: &FrameArena,
     ) -> Result<(Frame, RxReport, SimTime, u32)> {
+        let hop = Hop::Lcd(self.lcd_drv.node);
         let budget = f.max_retransmits();
         let mut t_lcd = SimTime::ZERO;
         let mut attempt = 0u32;
@@ -586,7 +650,7 @@ impl EgressStage {
                 SimTime::ZERO,
                 arena.take_u32(out_frame.pixels()),
             );
-            f.corrupt(Hop::LcdTx, seed, 0, attempt, &mut wire_back);
+            f.corrupt(hop, seed, 0, attempt, &mut wire_back);
             let r = self.lcd.receive_frame(&wire_back, SimTime::ZERO);
             arena.recycle_u32(wire_back.payload);
             let (received, rx) = r?;
@@ -596,7 +660,7 @@ impl EgressStage {
             }
             arena.recycle_u32(received.data);
             if attempt >= budget {
-                f.note_unrecovered();
+                f.note_unrecovered(hop);
                 return Err(Error::Unrecovered {
                     attempts: attempt + 1,
                     computed: rx.crc_computed,
@@ -605,79 +669,247 @@ impl EgressStage {
             }
             attempt += 1;
             retransmits += 1;
-            f.note_retransmit();
+            f.note_retransmit(hop);
         }
     }
 }
 
-/// Run a streaming multi-frame sweep with the three stages overlapped.
+/// The dispatch stage's shared state: hands each node lane its next
+/// frame index per the policy.
+///
+/// Round-robin needs no shared state at all (frame `i` -> node
+/// `i % N`, each lane walks its own arithmetic sequence), which is
+/// what makes it bit-deterministic. Least-loaded gates each take on
+/// the lane being (one of) the nodes with the fewest outstanding
+/// frames, so an idle node always wins the next frame — no node can
+/// starve, even when another node is stuck retransmitting through a
+/// fault storm.
+struct Dispatcher {
+    frames: usize,
+    nodes: usize,
+    policy: SchedPolicy,
+    state: Mutex<LldState>,
+    ready: Condvar,
+}
+
+#[derive(Debug)]
+struct LldState {
+    next: usize,
+    outstanding: Vec<usize>,
+    dispatched: Vec<usize>,
+}
+
+impl Dispatcher {
+    fn new(frames: usize, nodes: usize, policy: SchedPolicy) -> Dispatcher {
+        Dispatcher {
+            frames,
+            nodes,
+            policy,
+            state: Mutex::new(LldState {
+                next: 0,
+                outstanding: vec![0; nodes],
+                dispatched: vec![0; nodes],
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// The next frame for `lane` (`k` = how many the lane already
+    /// took), or `None` when the sweep is exhausted for it.
+    fn next(&self, lane: usize, k: usize) -> Option<usize> {
+        match self.policy {
+            SchedPolicy::RoundRobin => {
+                let i = lane + k * self.nodes;
+                (i < self.frames).then_some(i)
+            }
+            SchedPolicy::LeastLoaded => {
+                let mut s = self.state.lock().unwrap();
+                loop {
+                    if s.next >= self.frames {
+                        return None;
+                    }
+                    let min = *s.outstanding.iter().min().expect("nodes >= 1");
+                    if s.outstanding[lane] == min {
+                        let i = s.next;
+                        s.next += 1;
+                        s.outstanding[lane] += 1;
+                        s.dispatched[lane] += 1;
+                        drop(s);
+                        // A take can make another waiting lane the new
+                        // minimum (it isn't, but it can tie) — wake the
+                        // waiters to re-check.
+                        self.ready.notify_all();
+                        return Some(i);
+                    }
+                    // Bounded wait: completions notify, but a stalled
+                    // peer must not wedge the dispatcher — re-check
+                    // periodically and the policy degrades to greedy
+                    // pull instead of deadlocking.
+                    let wait = Duration::from_millis(50);
+                    let (guard, timeout) = self.ready.wait_timeout(s, wait).unwrap();
+                    s = guard;
+                    if timeout.timed_out() && s.next < self.frames {
+                        let i = s.next;
+                        s.next += 1;
+                        s.outstanding[lane] += 1;
+                        s.dispatched[lane] += 1;
+                        return Some(i);
+                    }
+                }
+            }
+        }
+    }
+
+    /// A frame dispatched to `lane` finished (delivered or contained).
+    fn complete(&self, lane: usize) {
+        if self.policy == SchedPolicy::LeastLoaded {
+            let mut s = self.state.lock().unwrap();
+            s.outstanding[lane] -= 1;
+            drop(s);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Frames dispatched to each node over the whole sweep.
+    fn dispatched(&self) -> Vec<usize> {
+        match self.policy {
+            SchedPolicy::RoundRobin => (0..self.nodes)
+                .map(|l| scheduler::rr_share(self.frames, self.nodes, l))
+                .collect(),
+            SchedPolicy::LeastLoaded => self.state.lock().unwrap().dispatched.clone(),
+        }
+    }
+}
+
+/// Run a streaming multi-frame sweep: the dispatch stage routes frames
+/// across the topology, and each node overlaps its three stages on
+/// worker threads.
 pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
     if opts.frames == 0 {
         return Err(Error::Config("stream needs at least one frame".into()));
     }
-    cp.runtime.set_kernel_backend(cp.backend);
     let backend = cp.backend;
     let bench = opts.bench;
     let n = opts.frames;
     let CoProcessor {
         cfg,
-        runtime,
-        cost,
-        power,
-        ingest,
-        egress,
-        arena,
+        nodes,
         faults,
         ..
     } = cp;
     let cfg: &SystemConfig = cfg;
-    let cost: &CostModel = cost;
-    let power: &PowerModel = power;
-    let arena: &FrameArena = arena;
     let faults: Option<&FaultPlan> = faults.as_ref();
-    let stats0 = arena.stats();
+    let n_nodes = nodes.len();
+    let depth = opts.depth.max(1);
+    for node in nodes.iter_mut() {
+        node.runtime.set_kernel_backend(backend);
+    }
+    let arena_stats0: Vec<ArenaStats> = nodes.iter().map(|v| v.arena.stats()).collect();
     let fstats0 = faults.map(|f| f.stats()).unwrap_or_default();
+    let hop_stats0 = faults.map(|f| f.per_hop_stats()).unwrap_or_default();
 
     // Per-stage busy wallclock, accumulated from inside each stage's
-    // thread (nanoseconds; the pipeline overlaps them).
+    // thread across all node lanes (nanoseconds; everything overlaps).
     let busy = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
     let timed = |slot: &AtomicU64, t0: Instant| {
         slot.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     };
 
+    let dispatch = Dispatcher::new(n, n_nodes, opts.sched);
+    let mut slots: Vec<Option<Result<FrameRun>>> = (0..n).map(|_| None).collect();
+
     let t_start = Instant::now();
-    let results: Vec<Result<FrameRun>> = par::pipeline3(
-        n,
-        opts.depth,
-        |i| {
-            let t0 = Instant::now();
-            let job = ingest.run(
-                backend,
+    std::thread::scope(|s| {
+        let (tx_res, rx_res) = mpsc::channel::<(usize, Result<FrameRun>)>();
+        for node in nodes.iter_mut() {
+            let VpuNode {
+                index,
+                runtime,
                 cost,
-                &cfg.vpu,
-                bench,
-                opts.seed.wrapping_add(i as u64),
+                power,
                 arena,
-                faults,
-            );
-            timed(&busy[0], t0);
-            job
-        },
-        |_, job: Result<StreamJob>| {
-            let job = job?;
-            let t0 = Instant::now();
-            let ex = execute_job(runtime, job, arena);
-            timed(&busy[1], t0);
-            ex
-        },
-        |_, ex: Result<ExecutedJob>| {
-            let ex = ex?;
-            let t0 = Instant::now();
-            let run = egress.run(power, ex, arena, faults);
-            timed(&busy[2], t0);
-            run
-        },
-    );
+                ingest,
+                egress,
+            } = node;
+            let lane = *index;
+            let cost: &CostModel = cost;
+            let power: &PowerModel = power;
+            let arena: &FrameArena = arena;
+            let dispatch = &dispatch;
+            let busy = &busy;
+            let timed = &timed;
+            let (tx1, rx1) = mpsc::sync_channel::<(usize, Result<StreamJob>)>(depth);
+            let (tx2, rx2) = mpsc::sync_channel::<(usize, Result<ExecutedJob>)>(depth);
+            let tx_res = tx_res.clone();
+
+            // Lane stage 1: dispatch + host generation + CIF ingest.
+            s.spawn(move || {
+                let mut k = 0usize;
+                while let Some(i) = dispatch.next(lane, k) {
+                    k += 1;
+                    let t0 = Instant::now();
+                    let job = ingest.run(
+                        backend,
+                        cost,
+                        &cfg.vpu,
+                        bench,
+                        opts.seed.wrapping_add(i as u64),
+                        arena,
+                        faults,
+                    );
+                    timed(&busy[0], t0);
+                    // Receiver gone (downstream panic): stop producing.
+                    if tx1.send((i, job)).is_err() {
+                        break;
+                    }
+                }
+            });
+
+            // Lane stage 2: VPU execute on this node's runtime.
+            s.spawn(move || {
+                while let Ok((i, job)) = rx1.recv() {
+                    let r = match job {
+                        Ok(job) => {
+                            let t0 = Instant::now();
+                            let ex = execute_job(runtime, job, arena);
+                            timed(&busy[1], t0);
+                            ex
+                        }
+                        Err(e) => Err(e),
+                    };
+                    if tx2.send((i, r)).is_err() {
+                        break;
+                    }
+                }
+            });
+
+            // Lane stage 3: LCD egress + validation + completion.
+            s.spawn(move || {
+                while let Ok((i, ex)) = rx2.recv() {
+                    let r = match ex {
+                        Ok(ex) => {
+                            let t0 = Instant::now();
+                            let run = egress.run(power, ex, arena, faults);
+                            timed(&busy[2], t0);
+                            run
+                        }
+                        Err(e) => Err(e),
+                    };
+                    dispatch.complete(lane);
+                    if tx_res.send((i, r)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx_res);
+        // Collector: ends when every lane's sender is gone — exactly n
+        // messages in a healthy sweep, fewer only if a lane panicked
+        // (the scope join below re-raises that panic).
+        while let Ok((i, r)) = rx_res.recv() {
+            slots[i] = Some(r);
+        }
+    });
     let wall = t_start.elapsed();
 
     // Per-frame error containment (ISSUE 4): a failed frame is
@@ -685,7 +917,8 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
     // died in — and the sweep's remaining frames stand on their own.
     let mut runs = Vec::with_capacity(n);
     let mut frame_errors = Vec::new();
-    for (i, r) in results.into_iter().enumerate() {
+    for (i, slot) in slots.into_iter().enumerate() {
+        let r = slot.expect("every dispatched frame reports a result");
         match r {
             Ok(run) => runs.push(run),
             Err(error) => frame_errors.push(FrameError {
@@ -695,21 +928,31 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
             }),
         }
     }
+    let per_node_frames = dispatch.dispatched();
+
+    // The paper's single-node Masked DES, from the sweep's first
+    // delivered frame (unchanged by the topology)...
     let masked = match runs.first() {
         Some(r0) => simulate_masked(&masked_timing_of(cfg, r0), n.max(8)),
         // Every frame failed: a degenerate (all-zero) timing keeps the
         // result shape intact; `rate_hz` reports it as 0 FPS.
-        None => simulate_masked(
-            &MaskedTiming {
-                t_cif: SimTime::ZERO,
-                t_cifbuf: SimTime::ZERO,
-                t_proc: SimTime::ZERO,
-                t_lcdbuf: SimTime::ZERO,
-                t_lcd: SimTime::ZERO,
-            },
-            n.max(8),
-        ),
+        None => simulate_masked(&zero_timing(), n.max(8)),
     };
+    // ...and the system-level merge: each node's DES over its
+    // dispatched share, throughputs summed.
+    let per_node_masked: Vec<MaskedResult> = (0..n_nodes)
+        .filter(|&lane| per_node_frames[lane] > 0)
+        .map(|lane| {
+            let timing = runs
+                .iter()
+                .find(|r| r.node == lane)
+                .map(|r| masked_timing_of(cfg, r))
+                .unwrap_or_else(zero_timing);
+            simulate_masked(&timing, per_node_frames[lane].max(8))
+        })
+        .collect();
+    let masked_system = merge_masked(&per_node_masked);
+
     let wall_s = wall.as_secs_f64().max(1e-9);
     let stage_busy = [
         Duration::from_nanos(busy[0].load(Ordering::Relaxed)),
@@ -722,27 +965,41 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         stage_busy[2].as_secs_f64() / wall_s,
     ];
     let exec_wall = runs.iter().map(|r| r.t_exec_wall).sum();
-    let s1 = arena.stats();
+    let arena = nodes
+        .iter()
+        .zip(&arena_stats0)
+        .fold(ArenaStats::default(), |acc, (node, s0)| {
+            let s1 = node.arena.stats();
+            ArenaStats {
+                reused: acc.reused + (s1.reused - s0.reused),
+                allocated: acc.allocated + (s1.allocated - s0.allocated),
+            }
+        });
     let fstats = faults
         .map(|f| f.stats().since(fstats0))
+        .unwrap_or_default();
+    let hop_faults = faults
+        .map(|f| fault::hop_deltas(&f.per_hop_stats(), &hop_stats0))
         .unwrap_or_default();
     Ok(StreamResult {
         bench,
         backend,
         frames: n,
+        vpus: n_nodes,
+        sched: opts.sched,
+        per_node_frames,
         wall,
         wall_fps: runs.len() as f64 / wall_s,
         stage_busy,
         stage_util,
         exec_wall,
-        arena: ArenaStats {
-            reused: s1.reused - stats0.reused,
-            allocated: s1.allocated - stats0.allocated,
-        },
+        arena,
         masked,
+        masked_system,
         runs,
         frame_errors,
         retransmits: fstats.retransmits,
         faults: fstats,
+        hop_faults,
     })
 }

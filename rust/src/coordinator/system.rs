@@ -1,19 +1,28 @@
-//! The assembled testbed: Host PC <-> FPGA (CIF/LCD) <-> VPU, with real
-//! numerics through the artifact runtime and simulated time through the
-//! fabric/VPU models.
+//! The assembled testbed: Host PC <-> FPGA (CIF/LCD) <-> N VPU nodes,
+//! with real numerics through the artifact runtime and simulated time
+//! through the fabric/VPU models.
+//!
+//! ISSUE 5 generalized the point-to-point datapath into a topology: the
+//! FPGA framing processor now drives [`VpuNode`]s — each owning its own
+//! CIF/LCD link pair, driver state, execution runtime, cost/power model
+//! and frame-buffer arena — mirroring the MPAI follow-up work, which
+//! scales the paper's co-processing architecture to multiple
+//! accelerators. One node reproduces the paper's evaluated system
+//! exactly; `SPACECODESIGN_VPUS` / `stream --vpus N` add nodes.
 //!
 //! The frame path is built from the three stage implementations in
 //! `coordinator::stream` (CIF ingest, VPU execute, LCD egress):
-//! [`CoProcessor::run_unmasked`] runs them back-to-back for one frame;
-//! `stream::run` overlaps them on worker threads for sustained
-//! multi-frame sweeps.
+//! [`CoProcessor::run_unmasked`] runs them back-to-back on node 0 for
+//! one frame; `stream::run` dispatches frames across all nodes and
+//! overlaps the stages on worker threads for sustained multi-frame
+//! sweeps.
 
 use crate::config::SystemConfig;
 use crate::coordinator::benchmarks::Benchmark;
 use crate::coordinator::host::Validation;
 use crate::coordinator::pipeline::{simulate_masked, MaskedResult, MaskedTiming};
 use crate::coordinator::stream::{self, EgressStage, IngestStage};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::fabric::bus::{Bus, BusConfig};
 use crate::fabric::clock::SimTime;
 use crate::iface::fault::FaultPlan;
@@ -29,6 +38,10 @@ use crate::KernelBackend;
 #[derive(Clone, Debug)]
 pub struct FrameRun {
     pub bench: Benchmark,
+    /// Topology index of the VPU node that processed this frame
+    /// (always 0 for one-shot runs; the stream dispatcher's choice for
+    /// streamed frames).
+    pub node: usize,
     /// CIF input transfer time (all planes).
     pub t_cif: SimTime,
     /// VPU processing time (scheduled makespan).
@@ -76,43 +89,46 @@ impl FrameRun {
     }
 }
 
-/// The co-processor testbed.
-pub struct CoProcessor {
-    pub cfg: SystemConfig,
-    /// Kernel tier for the host-side groundtruth path — and, on the
-    /// native execution engine, for the artifact numerics too (the two
-    /// are kept in sync so validation is exact). Defaults to
-    /// `Optimized`; `SPACECODESIGN_BACKEND=reference` forces the scalar
-    /// tier for strict groundtruth pinning.
-    pub backend: KernelBackend,
+/// One VPU of the topology: the Myriad2 plus the pair of FPGA interface
+/// blocks wired to it — everything a frame needs once the dispatcher
+/// has routed it here.
+///
+/// Nodes are homogeneous (same `SystemConfig`) but fully independent at
+/// runtime: separate execution runtimes (a VPU's firmware is its own),
+/// separate driver/interface state, separate cost/power models and
+/// separate frame-buffer arenas, so N nodes stream N frames genuinely
+/// concurrently with no shared locks on the frame path.
+pub struct VpuNode {
+    /// Topology index — also the node's fault-plan hop id
+    /// (`Hop::Cif(index)` / `Hop::Lcd(index)`).
+    pub index: usize,
+    /// This node's execution engine (PJRT or native). Per node so the
+    /// execute stages of different nodes run concurrently; under PJRT
+    /// each node compiles its own executables (a VPU flashes its own
+    /// firmware), which costs memory proportional to the node count.
     pub runtime: Runtime,
     pub cost: CostModel,
     pub power: PowerModel,
-    /// Frame-buffer arena shared by the ingest/egress stages: egress
-    /// recycles each frame's buffers, ingest picks them back up —
+    /// Frame-buffer arena shared by this node's ingest/egress stages:
+    /// egress recycles each frame's buffers, ingest picks them back up —
     /// steady-state frame traffic allocates nothing frame-sized (the
-    /// VPU's fixed DMA-slot discipline).
+    /// VPU's fixed DMA-slot discipline). Per node: a node's DMA slots
+    /// are its own DRAM.
     pub arena: FrameArena,
-    /// Optional wire-fault injection plan (ISSUE 4): seeded upsets on
-    /// the CIF/LCD hops with CRC-triggered bounded retransmission.
-    /// `None` (the default) leaves the fault-free fast path untouched.
-    /// Enabled by `SPACECODESIGN_FAULT_SEED` (+ optional
-    /// `SPACECODESIGN_FAULT_RATE`) or set directly (the `stream
-    /// --inject` CLI flag does).
-    pub faults: Option<FaultPlan>,
     pub(crate) ingest: IngestStage,
     pub(crate) egress: EgressStage,
 }
 
-impl CoProcessor {
-    pub fn new(cfg: SystemConfig) -> Result<CoProcessor> {
-        cfg.validate()?;
+impl VpuNode {
+    /// Build node `index` of the topology.
+    fn new(index: usize, cfg: &SystemConfig) -> Result<VpuNode> {
         let runtime = Runtime::open(std::path::Path::new(&cfg.artifacts_dir))?;
         let cif = CifModule::new(cfg.cif, Bus::new(BusConfig::default_50mhz()))?;
         let lcd = LcdModule::new(cfg.lcd, Bus::new(BusConfig::default_50mhz()))?;
-        let cam = CamGeneric::new(cfg.cif.pixel_clock_hz, cfg.cif.porch_cycles_per_line);
+        let cam =
+            CamGeneric::for_node(index, cfg.cif.pixel_clock_hz, cfg.cif.porch_cycles_per_line);
         let lcd_drv =
-            LcdDriver::new(cfg.lcd.pixel_clock_hz, cfg.lcd.porch_cycles_per_line);
+            LcdDriver::for_node(index, cfg.lcd.pixel_clock_hz, cfg.lcd.porch_cycles_per_line);
 
         // Render mesh + CNN weights for the host groundtruth path:
         // clone the native engine's already-resolved copies so both
@@ -127,13 +143,11 @@ impl CoProcessor {
             .cloned()
             .or_else(|| native::manifest_weights(&runtime.manifest));
 
-        Ok(CoProcessor {
-            backend: KernelBackend::from_env(),
+        Ok(VpuNode {
+            index,
             cost: CostModel::new(cfg.vpu),
             power: PowerModel::default(),
             arena: FrameArena::new(),
-            faults: FaultPlan::from_env(),
-            cfg,
             runtime,
             ingest: IngestStage {
                 cif,
@@ -144,17 +158,100 @@ impl CoProcessor {
             egress: EgressStage { lcd, lcd_drv },
         })
     }
+}
+
+/// The co-processor testbed.
+pub struct CoProcessor {
+    pub cfg: SystemConfig,
+    /// Kernel tier for the host-side groundtruth path — and, on the
+    /// native execution engine, for the artifact numerics too (the two
+    /// are kept in sync so validation is exact). Defaults to
+    /// `Optimized`; `SPACECODESIGN_BACKEND=reference` forces the scalar
+    /// tier for strict groundtruth pinning.
+    pub backend: KernelBackend,
+    /// The VPU topology. Node 0 is the paper's evaluated system and
+    /// serves every one-shot path; `stream::run` dispatches across all
+    /// of them.
+    pub nodes: Vec<VpuNode>,
+    /// Optional wire-fault injection plan (ISSUE 4): seeded upsets on
+    /// the CIF/LCD hops with CRC-triggered bounded retransmission.
+    /// `None` (the default) leaves the fault-free fast path untouched.
+    /// Enabled by `SPACECODESIGN_FAULT_SEED` (+ optional
+    /// `SPACECODESIGN_FAULT_RATE`) or set directly (the `stream
+    /// --inject` CLI flag does). Shared by every node; counters
+    /// attribute per node via the hop ids.
+    pub faults: Option<FaultPlan>,
+}
+
+/// Topology size from `SPACECODESIGN_VPUS` (default 1, the paper's
+/// point-to-point system). Read per construction, not cached — tests
+/// and the CLI override via [`CoProcessor::with_vpus`] anyway.
+pub fn vpus_from_env() -> usize {
+    std::env::var("SPACECODESIGN_VPUS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.clamp(1, MAX_VPUS))
+        .unwrap_or(1)
+}
+
+/// Upper bound on the topology size — each node owns a runtime and an
+/// arena, so an absurd count would be a resource bug, not a sweep.
+pub const MAX_VPUS: usize = 32;
+
+impl CoProcessor {
+    /// Build the testbed with the topology size from the environment
+    /// (`SPACECODESIGN_VPUS`, default 1).
+    pub fn new(cfg: SystemConfig) -> Result<CoProcessor> {
+        CoProcessor::with_vpus(cfg, vpus_from_env())
+    }
+
+    /// Build the testbed with an explicit number of VPU nodes.
+    pub fn with_vpus(cfg: SystemConfig, vpus: usize) -> Result<CoProcessor> {
+        cfg.validate()?;
+        if vpus == 0 || vpus > MAX_VPUS {
+            return Err(Error::Config(format!(
+                "topology needs 1..={MAX_VPUS} VPU nodes, got {vpus}"
+            )));
+        }
+        let mut nodes = Vec::with_capacity(vpus);
+        for i in 0..vpus {
+            nodes.push(VpuNode::new(i, &cfg)?);
+        }
+        Ok(CoProcessor {
+            backend: KernelBackend::from_env(),
+            faults: FaultPlan::from_env(),
+            cfg,
+            nodes,
+        })
+    }
 
     pub fn with_defaults() -> Result<CoProcessor> {
         CoProcessor::new(SystemConfig::paper())
     }
 
+    /// Number of VPU nodes in the topology.
+    pub fn vpus(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Node 0's cost model (nodes are homogeneous, so this is *the*
+    /// cost model for timing questions that predate the topology).
+    pub fn cost(&self) -> &CostModel {
+        &self.nodes[0].cost
+    }
+
+    /// Node 0's power model.
+    pub fn power(&self) -> &PowerModel {
+        &self.nodes[0].power
+    }
+
     /// Scheduled SHAVE processing time for one frame.
     pub fn proc_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
+        let node = &self.nodes[0];
         stream::proc_time_of(
-            &self.cost,
+            &node.cost,
             &self.cfg.vpu,
-            self.ingest.mesh.as_ref(),
+            node.ingest.mesh.as_ref(),
             bench,
             seed,
         )
@@ -162,27 +259,37 @@ impl CoProcessor {
 
     /// LEON baseline time for the speedup comparison.
     pub fn leon_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
-        let w = stream::workload_of(self.ingest.mesh.as_ref(), bench, seed)?;
-        Ok(self.cost.leon_time(bench.kind(), &w))
+        let node = &self.nodes[0];
+        let w = stream::workload_of(node.ingest.mesh.as_ref(), bench, seed)?;
+        Ok(node.cost.leon_time(bench.kind(), &w))
     }
 
     /// Run one frame in Unmasked mode: real data through CIF, real
     /// numerics through the runtime, real data back through LCD,
-    /// validated — the three stream stages run back-to-back.
+    /// validated — the three stream stages run back-to-back on node 0
+    /// (the paper's point-to-point system, whatever the topology size).
     pub fn run_unmasked(&mut self, bench: Benchmark, seed: u64) -> Result<FrameRun> {
-        self.runtime.set_kernel_backend(self.backend);
-        let faults = self.faults.as_ref();
-        let job = self.ingest.run(
-            self.backend,
-            &self.cost,
-            &self.cfg.vpu,
+        let CoProcessor {
+            backend,
+            nodes,
+            faults,
+            cfg,
+            ..
+        } = self;
+        let node = &mut nodes[0];
+        node.runtime.set_kernel_backend(*backend);
+        let faults = faults.as_ref();
+        let job = node.ingest.run(
+            *backend,
+            &node.cost,
+            &cfg.vpu,
             bench,
             seed,
-            &self.arena,
+            &node.arena,
             faults,
         )?;
-        let ex = stream::execute_job(&mut self.runtime, job, &self.arena)?;
-        self.egress.run(&self.power, ex, &self.arena, faults)
+        let ex = stream::execute_job(&mut node.runtime, job, &node.arena)?;
+        node.egress.run(&node.power, ex, &node.arena, faults)
     }
 
     /// Masked-mode phase timings derived from an Unmasked run.
@@ -220,5 +327,12 @@ mod tests {
         let cnn_in = Benchmark::CnnShip.input().mpixels() * (1 << 20) as f64;
         let t = cnn_in / copy;
         assert!((t - 0.126).abs() < 0.002, "RGB MPixel copy {t}s");
+    }
+
+    #[test]
+    fn zero_or_oversized_topologies_are_rejected() {
+        let cfg = SystemConfig::paper();
+        assert!(CoProcessor::with_vpus(cfg.clone(), 0).is_err());
+        assert!(CoProcessor::with_vpus(cfg, MAX_VPUS + 1).is_err());
     }
 }

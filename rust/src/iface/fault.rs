@@ -27,30 +27,75 @@
 //! coordinator is behind `Option<&FaultPlan>`, and `None` follows the
 //! exact pre-ISSUE-4 code path (same moves, same allocations).
 //!
-//! Counters are atomics so the plan can be shared by the three
-//! pipeline stages; [`FaultPlan::stats`] snapshots them and
-//! [`FaultStats::since`] yields per-sweep deltas.
+//! Counters are atomics so the plan can be shared by the pipeline
+//! stages of every VPU node; [`FaultPlan::stats`] snapshots the
+//! plan-wide totals, [`FaultPlan::per_hop_stats`] the per-(node,
+//! direction) attribution (ISSUE 5), and [`FaultStats::since`] /
+//! [`hop_deltas`] yield per-sweep deltas.
 
 use crate::iface::signals::{self, WireFrame};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Which wire hop a transfer crosses. Each hop draws from its own
-/// fault stream, so an upset on the CIF input bus is independent of
-/// the LCD output bus for the same frame.
+/// Which wire hop a transfer crosses, tagged with the VPU node the hop
+/// belongs to (ISSUE 5: the datapath now drives N nodes, each behind
+/// its own CIF/LCD link pair).
+///
+/// The CIF and LCD directions draw from independent fault streams. The
+/// node index is **attribution only**: fault *draws* are keyed by the
+/// hop kind + frame, never the node, so a frame draws bit-identical
+/// upsets wherever the dispatcher routes it — round-robin over N nodes
+/// reproduces the single-node sweep frame for frame, and streamed runs
+/// stay pinned to their one-shot (node-0) equivalents. Per-node
+/// *counters* ([`FaultPlan::per_hop_stats`]) are what the index feeds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Hop {
-    /// Host/FPGA -> VPU (CIF Tx wire, received by `CamGeneric`).
-    CifTx,
-    /// VPU -> FPGA/host (LCD wire, received by `LcdModule`).
-    LcdTx,
+    /// Host/FPGA -> VPU node (CIF Tx wire, received by `CamGeneric`).
+    Cif(usize),
+    /// VPU node -> FPGA/host (LCD wire, received by `LcdModule`).
+    Lcd(usize),
 }
 
 impl Hop {
-    fn id(self) -> u64 {
+    /// Draw-key id of the hop *kind* — deliberately node-independent
+    /// (and equal to the pre-topology ids, so existing fault seeds draw
+    /// the same upsets).
+    fn kind_id(self) -> u64 {
         match self {
-            Hop::CifTx => 1,
-            Hop::LcdTx => 2,
+            Hop::Cif(_) => 1,
+            Hop::Lcd(_) => 2,
+        }
+    }
+
+    /// The VPU node this hop serves.
+    pub fn node(self) -> usize {
+        match self {
+            Hop::Cif(n) | Hop::Lcd(n) => n,
+        }
+    }
+
+    /// Direction label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Hop::Cif(_) => "cif",
+            Hop::Lcd(_) => "lcd",
+        }
+    }
+
+    /// Dense per-hop counter slot: two hops per node.
+    fn slot(self) -> usize {
+        match self {
+            Hop::Cif(n) => 2 * n,
+            Hop::Lcd(n) => 2 * n + 1,
+        }
+    }
+
+    /// Inverse of [`Hop::slot`].
+    fn from_slot(slot: usize) -> Hop {
+        if slot % 2 == 0 {
+            Hop::Cif(slot / 2)
+        } else {
+            Hop::Lcd(slot / 2)
         }
     }
 }
@@ -136,6 +181,52 @@ impl FaultStats {
             unrecovered: self.unrecovered - before.unrecovered,
         }
     }
+
+    /// Field-wise accumulation (per-hop bookkeeping).
+    fn add(&mut self, d: FaultStats) {
+        self.transfers += d.transfers;
+        self.faulted += d.faulted;
+        self.payload_flips += d.payload_flips;
+        self.crc_corruptions += d.crc_corruptions;
+        self.truncated_lines += d.truncated_lines;
+        self.stuck_pixels += d.stuck_pixels;
+        self.retransmits += d.retransmits;
+        self.unrecovered += d.unrecovered;
+    }
+
+    /// True when every counter is zero (used to prune empty hop rows).
+    pub fn is_zero(&self) -> bool {
+        *self == FaultStats::default()
+    }
+}
+
+/// One node-hop's injection counters — what Table II's fault appendix
+/// and the stream summary render per node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HopFaultStats {
+    pub hop: Hop,
+    pub stats: FaultStats,
+}
+
+/// Per-hop deltas between two [`FaultPlan::per_hop_stats`] snapshots
+/// (matched by hop; hops absent from `before` count from zero). Rows
+/// whose delta is all-zero are dropped.
+pub fn hop_deltas(after: &[HopFaultStats], before: &[HopFaultStats]) -> Vec<HopFaultStats> {
+    after
+        .iter()
+        .map(|a| {
+            let b = before
+                .iter()
+                .find(|b| b.hop == a.hop)
+                .map(|b| b.stats)
+                .unwrap_or_default();
+            HopFaultStats {
+                hop: a.hop,
+                stats: a.stats.since(b),
+            }
+        })
+        .filter(|h| !h.stats.is_zero())
+        .collect()
 }
 
 /// A seeded wire-fault plan plus its running counters. Shareable
@@ -152,6 +243,11 @@ pub struct FaultPlan {
     stuck_pixels: AtomicU64,
     retransmits: AtomicU64,
     unrecovered: AtomicU64,
+    /// Per-(node, direction) counters, indexed by [`Hop::slot`] and
+    /// grown on demand — the plan does not know the topology size at
+    /// construction. Updates are per plane transfer (low frequency), so
+    /// a mutex is cheaper than a resizable atomic structure.
+    per_hop: std::sync::Mutex<Vec<FaultStats>>,
 }
 
 impl Default for FaultConfig {
@@ -161,10 +257,12 @@ impl Default for FaultConfig {
 }
 
 /// Mix the draw key into a sub-seed (sentinel `u64::MAX` plane/attempt
-/// marks the frame-level draw; real planes/attempts are small).
+/// marks the frame-level draw; real planes/attempts are small). The
+/// hop enters as its *kind* id only: a frame's draws are a function of
+/// the frame, not of which VPU node carried it.
 fn sub_seed(seed: u64, hop: Hop, frame: u64, plane: u64, attempt: u64) -> u64 {
     let mut h = seed ^ 0xA076_1D64_78BD_642F;
-    for v in [hop.id(), frame, plane, attempt] {
+    for v in [hop.kind_id(), frame, plane, attempt] {
         h = (h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15))
             .rotate_left(27)
             .wrapping_mul(0x2545_F491_4F6C_DD1D);
@@ -204,18 +302,32 @@ impl FaultPlan {
         self.cfg.max_retransmits
     }
 
-    /// Record a CRC-triggered resend (called by the recovery loops;
-    /// the resend's wire time lands in the caller's `t_cif`/`t_lcd`).
-    pub fn note_retransmit(&self) {
-        self.retransmits.fetch_add(1, Ordering::Relaxed);
+    /// Record a CRC-triggered resend over `hop` (called by the recovery
+    /// loops; the resend's wire time lands in the caller's
+    /// `t_cif`/`t_lcd`).
+    pub fn note_retransmit(&self, hop: Hop) {
+        self.apply(
+            hop,
+            FaultStats {
+                retransmits: 1,
+                ..FaultStats::default()
+            },
+        );
     }
 
-    /// Record a transfer that exhausted its retransmission budget.
-    pub fn note_unrecovered(&self) {
-        self.unrecovered.fetch_add(1, Ordering::Relaxed);
+    /// Record a transfer over `hop` that exhausted its retransmission
+    /// budget.
+    pub fn note_unrecovered(&self, hop: Hop) {
+        self.apply(
+            hop,
+            FaultStats {
+                unrecovered: 1,
+                ..FaultStats::default()
+            },
+        );
     }
 
-    /// Snapshot the counters.
+    /// Snapshot the plan-wide counters (all hops summed).
     pub fn stats(&self) -> FaultStats {
         FaultStats {
             transfers: self.transfers.load(Ordering::Relaxed),
@@ -227,6 +339,42 @@ impl FaultPlan {
             retransmits: self.retransmits.load(Ordering::Relaxed),
             unrecovered: self.unrecovered.load(Ordering::Relaxed),
         }
+    }
+
+    /// Snapshot the per-(node, direction) counters, one row per hop the
+    /// plan has seen, in slot order (node 0 CIF, node 0 LCD, node 1
+    /// CIF, ...). Diff two snapshots with [`hop_deltas`].
+    pub fn per_hop_stats(&self) -> Vec<HopFaultStats> {
+        self.per_hop
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(slot, &stats)| HopFaultStats {
+                hop: Hop::from_slot(slot),
+                stats,
+            })
+            .collect()
+    }
+
+    /// Fold one transfer's counter delta into the plan-wide atomics and
+    /// the hop's per-node row — the single bookkeeping path, so the two
+    /// views can never drift apart.
+    fn apply(&self, hop: Hop, d: FaultStats) {
+        self.transfers.fetch_add(d.transfers, Ordering::Relaxed);
+        self.faulted.fetch_add(d.faulted, Ordering::Relaxed);
+        self.payload_flips.fetch_add(d.payload_flips, Ordering::Relaxed);
+        self.crc_corruptions.fetch_add(d.crc_corruptions, Ordering::Relaxed);
+        self.truncated_lines.fetch_add(d.truncated_lines, Ordering::Relaxed);
+        self.stuck_pixels.fetch_add(d.stuck_pixels, Ordering::Relaxed);
+        self.retransmits.fetch_add(d.retransmits, Ordering::Relaxed);
+        self.unrecovered.fetch_add(d.unrecovered, Ordering::Relaxed);
+        let mut per_hop = self.per_hop.lock().unwrap();
+        let slot = hop.slot();
+        if per_hop.len() <= slot {
+            per_hop.resize(slot + 1, FaultStats::default());
+        }
+        per_hop[slot].add(d);
     }
 
     /// Whether the plan targets `frame` at `hop` at all — the
@@ -243,18 +391,26 @@ impl FaultPlan {
         Rng::new(sub_seed(c.seed, hop, frame, u64::MAX, u64::MAX)).bool(c.frame_rate)
     }
 
-    /// Count a wire transfer that bypassed [`FaultPlan::corrupt`]
-    /// (the untargeted-frame fast path), so `stats().transfers` keeps
-    /// meaning "transfers inspected by the plan".
-    pub fn note_transfer(&self) {
-        self.transfers.fetch_add(1, Ordering::Relaxed);
+    /// Count a wire transfer over `hop` that bypassed
+    /// [`FaultPlan::corrupt`] (the untargeted-frame fast path), so
+    /// `stats().transfers` keeps meaning "transfers inspected by the
+    /// plan".
+    pub fn note_transfer(&self, hop: Hop) {
+        self.apply(
+            hop,
+            FaultStats {
+                transfers: 1,
+                ..FaultStats::default()
+            },
+        );
     }
 
     /// Maybe corrupt `wire` in transit over `hop`. `frame` is the
     /// frame's seed/key (identical between streamed and one-shot
     /// runs), `plane` the plane index within the frame, `attempt` the
     /// transmission attempt (0 = first send). Returns whether a fault
-    /// was injected.
+    /// was injected. The draw ignores `hop`'s node index (see [`Hop`]);
+    /// the counters honour it.
     pub fn corrupt(
         &self,
         hop: Hop,
@@ -263,7 +419,26 @@ impl FaultPlan {
         attempt: u32,
         wire: &mut WireFrame,
     ) -> bool {
-        self.transfers.fetch_add(1, Ordering::Relaxed);
+        let mut d = FaultStats {
+            transfers: 1,
+            ..FaultStats::default()
+        };
+        let injected = self.corrupt_inner(hop, frame, plane, attempt, wire, &mut d);
+        self.apply(hop, d);
+        injected
+    }
+
+    /// The draw + corruption body of [`FaultPlan::corrupt`], recording
+    /// what it did into `d` (applied once by the caller).
+    fn corrupt_inner(
+        &self,
+        hop: Hop,
+        frame: u64,
+        plane: usize,
+        attempt: u32,
+        wire: &mut WireFrame,
+        d: &mut FaultStats,
+    ) -> bool {
         // Frame-level draw: planes/attempts of an unaffected frame
         // share it, so they are never touched.
         if wire.payload.is_empty() || !self.targets(hop, frame) {
@@ -277,7 +452,7 @@ impl FaultPlan {
         if !rng.bool(c.plane_rate) {
             return false;
         }
-        self.faulted.fetch_add(1, Ordering::Relaxed);
+        d.faulted = 1;
 
         let mut pick = rng.next_f64() * total;
         if pick < c.w_payload_flip {
@@ -287,7 +462,7 @@ impl FaultPlan {
                 let bit = rng.next_u32() % wire.format.bits();
                 wire.payload[idx] ^= 1 << bit;
             }
-            self.payload_flips.fetch_add(flips as u64, Ordering::Relaxed);
+            d.payload_flips = flips as u64;
             return true;
         }
         pick -= c.w_payload_flip;
@@ -296,7 +471,7 @@ impl FaultPlan {
             let bit = rng.next_u32() % 16;
             wire.crc_line =
                 signals::make_crc_line(cur ^ (1u16 << bit), wire.width, wire.format);
-            self.crc_corruptions.fetch_add(1, Ordering::Relaxed);
+            d.crc_corruptions = 1;
             return true;
         }
         pick -= c.w_crc_corrupt;
@@ -309,8 +484,7 @@ impl FaultPlan {
             for v in &mut wire.payload[n - lost..] {
                 *v = 0;
             }
-            self.truncated_lines
-                .fetch_add(lines as u64, Ordering::Relaxed);
+            d.truncated_lines = lines as u64;
             return true;
         }
         let idx = rng.range_usize(0, wire.payload.len() - 1);
@@ -319,7 +493,7 @@ impl FaultPlan {
         } else {
             0
         };
-        self.stuck_pixels.fetch_add(1, Ordering::Relaxed);
+        d.stuck_pixels = 1;
         true
     }
 }
@@ -355,7 +529,7 @@ mod tests {
         for i in 0..64u64 {
             let mut w = wire(i);
             let before = w.clone();
-            assert!(!plan.corrupt(Hop::CifTx, i, 0, 0, &mut w));
+            assert!(!plan.corrupt(Hop::Cif(0), i, 0, 0, &mut w));
             assert_eq!(w, before);
         }
         let s = plan.stats();
@@ -369,7 +543,7 @@ mod tests {
         let mut detected = 0;
         for i in 0..32u64 {
             let mut w = wire(i);
-            assert!(plan.corrupt(Hop::CifTx, i, 0, 0, &mut w));
+            assert!(plan.corrupt(Hop::Cif(0), i, 0, 0, &mut w));
             if !w.check_crc().ok() {
                 detected += 1;
             }
@@ -388,10 +562,10 @@ mod tests {
         let mut wa: Vec<WireFrame> = (0..8).map(wire).collect();
         let mut wb: Vec<WireFrame> = (0..8).map(wire).collect();
         for (i, w) in wa.iter_mut().enumerate() {
-            a.corrupt(Hop::LcdTx, i as u64, 0, 0, w);
+            a.corrupt(Hop::Lcd(0), i as u64, 0, 0, w);
         }
         for (i, w) in wb.iter_mut().enumerate().rev() {
-            b.corrupt(Hop::LcdTx, i as u64, 0, 0, w);
+            b.corrupt(Hop::Lcd(0), i as u64, 0, 0, w);
         }
         assert_eq!(wa, wb, "call order must not change the injected faults");
         assert_eq!(a.stats(), b.stats());
@@ -401,10 +575,10 @@ mod tests {
     fn hops_planes_and_attempts_draw_independently() {
         let plan = FaultPlan::new(always(5));
         let (mut w1, mut w2, mut w3, mut w4) = (wire(1), wire(1), wire(1), wire(1));
-        plan.corrupt(Hop::CifTx, 9, 0, 0, &mut w1);
-        plan.corrupt(Hop::LcdTx, 9, 0, 0, &mut w2);
-        plan.corrupt(Hop::CifTx, 9, 1, 0, &mut w3);
-        plan.corrupt(Hop::CifTx, 9, 0, 1, &mut w4);
+        plan.corrupt(Hop::Cif(0), 9, 0, 0, &mut w1);
+        plan.corrupt(Hop::Lcd(0), 9, 0, 0, &mut w2);
+        plan.corrupt(Hop::Cif(0), 9, 1, 0, &mut w3);
+        plan.corrupt(Hop::Cif(0), 9, 0, 1, &mut w4);
         // With overwhelming probability the four independent draws
         // differ somewhere; all equal would mean the key is ignored.
         assert!(
@@ -424,7 +598,7 @@ mod tests {
         let clean = (0..64u64)
             .find(|&i| {
                 let mut w = wire(i);
-                !plan.corrupt(Hop::CifTx, i, 0, 0, &mut w)
+                !plan.corrupt(Hop::Cif(0), i, 0, 0, &mut w)
             })
             .expect("rate 0.5 must leave some frame clean");
         // ...then every plane and attempt of it must stay clean too.
@@ -432,7 +606,7 @@ mod tests {
             for attempt in 0..4 {
                 let mut w = wire(clean);
                 let before = w.clone();
-                assert!(!plan.corrupt(Hop::CifTx, clean, plane, attempt, &mut w));
+                assert!(!plan.corrupt(Hop::Cif(0), clean, plane, attempt, &mut w));
                 assert_eq!(w, before);
             }
         }
@@ -477,7 +651,7 @@ mod tests {
             let plan = FaultPlan::new(cfg);
             let mut w = wire(2);
             let before = w.clone();
-            assert!(plan.corrupt(Hop::CifTx, 4, 0, 0, &mut w));
+            assert!(plan.corrupt(Hop::Cif(0), 4, 0, 0, &mut w));
             let s = plan.stats();
             match kind {
                 "flip" => {
@@ -505,14 +679,85 @@ mod tests {
     fn stats_since_computes_deltas() {
         let plan = FaultPlan::new(always(1));
         let mut w = wire(0);
-        plan.corrupt(Hop::CifTx, 0, 0, 0, &mut w);
+        plan.corrupt(Hop::Cif(0), 0, 0, 0, &mut w);
         let snap = plan.stats();
         let mut w2 = wire(1);
-        plan.corrupt(Hop::CifTx, 1, 0, 0, &mut w2);
-        plan.note_retransmit();
+        plan.corrupt(Hop::Cif(0), 1, 0, 0, &mut w2);
+        plan.note_retransmit(Hop::Cif(0));
         let d = plan.stats().since(snap);
         assert_eq!(d.transfers, 1);
         assert_eq!(d.faulted, 1);
         assert_eq!(d.retransmits, 1);
+    }
+
+    #[test]
+    fn draws_are_node_independent() {
+        // ISSUE 5: the node index must not feed the draw key — a frame
+        // corrupts identically whichever VPU node carries it, so
+        // round-robin dispatch over N nodes reproduces the single-node
+        // sweep bit for bit.
+        let plan = FaultPlan::new(always(19));
+        for frame in 0..16u64 {
+            let (mut w0, mut w3) = (wire(frame), wire(frame));
+            let hit0 = plan.corrupt(Hop::Cif(0), frame, 0, 0, &mut w0);
+            let hit3 = plan.corrupt(Hop::Cif(3), frame, 0, 0, &mut w3);
+            assert_eq!(hit0, hit3, "frame {frame} targeting diverged");
+            assert_eq!(w0, w3, "frame {frame} corruption diverged across nodes");
+            assert_eq!(
+                plan.targets(Hop::Lcd(0), frame),
+                plan.targets(Hop::Lcd(7), frame)
+            );
+        }
+    }
+
+    #[test]
+    fn per_hop_counters_attribute_by_node_and_direction() {
+        let plan = FaultPlan::new(always(23));
+        let mut w = wire(2);
+        plan.corrupt(Hop::Cif(0), 2, 0, 0, &mut w);
+        let mut w = wire(2);
+        plan.corrupt(Hop::Cif(1), 2, 0, 0, &mut w);
+        plan.note_retransmit(Hop::Lcd(1));
+        plan.note_transfer(Hop::Lcd(0));
+        let rows = plan.per_hop_stats();
+        assert_eq!(rows.len(), 4, "slots node0 cif/lcd + node1 cif/lcd");
+        let find = |hop: Hop| rows.iter().find(|r| r.hop == hop).unwrap().stats;
+        assert_eq!(find(Hop::Cif(0)).transfers, 1);
+        assert_eq!(find(Hop::Cif(1)).transfers, 1);
+        assert_eq!(find(Hop::Cif(0)).faulted, 1);
+        assert_eq!(find(Hop::Lcd(1)).retransmits, 1);
+        assert_eq!(find(Hop::Lcd(0)).transfers, 1);
+        assert_eq!(find(Hop::Lcd(0)).retransmits, 0);
+        // The per-hop rows sum to the plan-wide totals.
+        let mut sum = FaultStats::default();
+        for r in &rows {
+            sum.add(r.stats);
+        }
+        assert_eq!(sum, plan.stats());
+    }
+
+    #[test]
+    fn hop_deltas_subtracts_and_prunes_zero_rows() {
+        let plan = FaultPlan::new(always(29));
+        let mut w = wire(4);
+        plan.corrupt(Hop::Cif(0), 4, 0, 0, &mut w);
+        let before = plan.per_hop_stats();
+        plan.note_retransmit(Hop::Lcd(1));
+        let after = plan.per_hop_stats();
+        let d = hop_deltas(&after, &before);
+        // Only the LCD hop of node 1 changed since the snapshot.
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].hop, Hop::Lcd(1));
+        assert_eq!(d[0].stats.retransmits, 1);
+        assert_eq!(d[0].stats.transfers, 0);
+    }
+
+    #[test]
+    fn hop_slot_roundtrips() {
+        for hop in [Hop::Cif(0), Hop::Lcd(0), Hop::Cif(5), Hop::Lcd(5)] {
+            assert_eq!(Hop::from_slot(hop.slot()), hop);
+        }
+        assert_eq!(Hop::Cif(2).node(), 2);
+        assert_eq!(Hop::Lcd(2).name(), "lcd");
     }
 }

@@ -81,7 +81,7 @@ pub fn run_loopback_with(
     let t0 = SimTime::ZERO;
     let (mut wire_out, tx) = cif.send_frame(&frame, t0)?;
     if let Some(f) = faults {
-        f.corrupt(Hop::CifTx, seed, 0, 0, &mut wire_out);
+        f.corrupt(Hop::Cif(0), seed, 0, 0, &mut wire_out);
     }
 
     // VPU echo: CamGeneric receives, LCDQueueFrame retransmits the same
@@ -94,7 +94,7 @@ pub fn run_loopback_with(
     let (echoed, cam_check) = wire_out.into_frame_reported()?;
     let mut wire_back = crate::iface::signals::WireFrame::from_frame_owned(echoed);
     if let Some(f) = faults {
-        f.corrupt(Hop::LcdTx, seed, 0, 0, &mut wire_back);
+        f.corrupt(Hop::Lcd(0), seed, 0, 0, &mut wire_back);
     }
 
     let (received, rx) = lcd.receive_frame(&wire_back, tx.done_at)?;

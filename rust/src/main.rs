@@ -18,12 +18,15 @@
 //! DESIGN.md §9.)
 
 use spacecodesign::compress::{self, Cube};
+use spacecodesign::config::SystemConfig;
 use spacecodesign::coordinator::comparators;
+use spacecodesign::coordinator::system::vpus_from_env;
 use spacecodesign::coordinator::{report, stream, Benchmark, CoProcessor, StreamOptions};
 use spacecodesign::fpga::{designs, Device};
 use spacecodesign::iface::fault::{FaultConfig, FaultPlan};
 use spacecodesign::iface::loopback;
 use spacecodesign::util::rng::Rng;
+use spacecodesign::vpu::scheduler::SchedPolicy;
 use spacecodesign::{KernelBackend, Result};
 
 fn main() {
@@ -69,6 +72,9 @@ COMMANDS:
   stream     N-frame streaming pipeline sweep on both kernel backends:
              [--bench NAME] [--frames N] [--depth D] — reports per-stage
              (CIF/VPU/LCD) utilization vs the Masked DES prediction;
+             [--vpus N] [--sched rr|lld] dispatches frames across an
+             N-node VPU topology (env: SPACECODESIGN_VPUS; rr =
+             round-robin, lld = least-outstanding-frames);
              [--inject RATE] [--fault-seed N] adds seeded wire faults
              with CRC-triggered retransmission + per-frame containment
   compress   CCSDS-123 compression demo: [--bands Z] [--rows Y] [--cols X]
@@ -173,6 +179,16 @@ fn table2(frames: usize, seed: u64) -> Result<()> {
     for run in &runs {
         println!("{}", report::validation_row(run));
     }
+    // Fault appendix (ISSUE 5 satellite): when an env-enabled plan
+    // injected during these rows, attribute what happened per node and
+    // wire direction.
+    if let Some(plan) = &cp.faults {
+        let rows = plan.per_hop_stats();
+        if rows.iter().any(|h| h.stats.transfers > 0) {
+            println!("\nWire faults (per node/hop):");
+            print!("{}", report::hop_fault_rows(&rows));
+        }
+    }
     Ok(())
 }
 
@@ -192,7 +208,7 @@ fn fig5(seed: u64) -> Result<()> {
     let mut cnn_point = None;
     for bench in Benchmark::table2() {
         let run = cp.run_unmasked(bench, seed)?;
-        let leon_p = cp.power.leon_power(bench.kind());
+        let leon_p = cp.power().leon_power(bench.kind());
         let leon_fpsw = 1.0 / run.t_leon.as_secs() / leon_p;
         println!(
             "{:<22} SHAVE {:.2} W ({:>8.1} proc-FPS/W)   LEON {:.2} W ({:>7.2} proc-FPS/W)   ratio {:>5.1}x",
@@ -289,11 +305,31 @@ fn run_stream(args: &[String]) -> Result<()> {
     };
     let frames = flag_usize(args, "--frames").unwrap_or(8);
     let depth = flag_usize(args, "--depth").unwrap_or(1);
-    println!(
-        "== Streaming frame pipeline: {} x{frames} frames (depth {depth}) ==",
-        bench.name()
-    );
-    let mut cp = CoProcessor::with_defaults()?;
+    let vpus = flag_usize(args, "--vpus").unwrap_or_else(vpus_from_env);
+    let sched = match flag_str(args, "--sched") {
+        None => SchedPolicy::default(),
+        Some(s) => match SchedPolicy::parse(s) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown scheduling policy '{s}' (rr | lld)");
+                std::process::exit(2);
+            }
+        },
+    };
+    if vpus > 1 {
+        println!(
+            "== Streaming frame pipeline: {} x{frames} frames (depth {depth}, \
+             {vpus} VPU nodes, sched {}) ==",
+            bench.name(),
+            sched.name()
+        );
+    } else {
+        println!(
+            "== Streaming frame pipeline: {} x{frames} frames (depth {depth}) ==",
+            bench.name()
+        );
+    }
+    let mut cp = CoProcessor::with_vpus(SystemConfig::paper(), vpus)?;
     // `--fault-seed N` alone enables injection at the default rate —
     // silently ignoring a fault flag the user typed would be worse.
     let inject = flag_f64_or(args, "--inject", 0.05)
@@ -310,6 +346,7 @@ fn run_stream(args: &[String]) -> Result<()> {
         frames,
         seed: seed(args),
         depth,
+        sched,
     };
     // A zero-rate plan can never inject, so it must not suppress the
     // nonzero exit for genuine frame failures below.

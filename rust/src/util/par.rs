@@ -298,64 +298,6 @@ where
     par_row_bands(out, items, per_item, min_items, body);
 }
 
-/// Run `n` sequence items through a three-stage pipeline with bounded
-/// hand-off queues — the software analogue of the paper's Masked mode,
-/// where CIF reception of frame n+1, SHAVE processing of frame n and
-/// LCD transmission of frame n-1 all overlap.
-///
-/// `stage1` and `stage2` each run on their own scoped thread; `stage3`
-/// runs on the caller's thread. Items flow in order (single thread per
-/// stage, FIFO channels), and `depth` bounds the number of items parked
-/// between adjacent stages (1 = strict double buffering, mirroring the
-/// VPU's one-frame-in-flight DRAM slots). Results are returned in item
-/// order. Stage closures borrow from the caller freely — the scope
-/// joins both workers before returning.
-pub fn pipeline3<X1, X2, X3, S1, S2, S3>(
-    n: usize,
-    depth: usize,
-    mut stage1: S1,
-    mut stage2: S2,
-    mut stage3: S3,
-) -> Vec<X3>
-where
-    X1: Send,
-    X2: Send,
-    S1: FnMut(usize) -> X1 + Send,
-    S2: FnMut(usize, X1) -> X2 + Send,
-    S3: FnMut(usize, X2) -> X3,
-{
-    if n == 0 {
-        return Vec::new();
-    }
-    let depth = depth.max(1);
-    let mut out = Vec::with_capacity(n);
-    std::thread::scope(|s| {
-        let (tx1, rx1) = std::sync::mpsc::sync_channel::<(usize, X1)>(depth);
-        let (tx2, rx2) = std::sync::mpsc::sync_channel::<(usize, X2)>(depth);
-        s.spawn(move || {
-            for i in 0..n {
-                let x = stage1(i);
-                // Receiver gone (downstream panic): stop producing.
-                if tx1.send((i, x)).is_err() {
-                    break;
-                }
-            }
-        });
-        s.spawn(move || {
-            while let Ok((i, x)) = rx1.recv() {
-                let y = stage2(i, x);
-                if tx2.send((i, y)).is_err() {
-                    break;
-                }
-            }
-        });
-        while let Ok((i, y)) = rx2.recv() {
-            out.push(stage3(i, y));
-        }
-    });
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,57 +453,6 @@ mod tests {
         assert!(result.is_err(), "panic must cross the pool barrier");
         // The pool must still be usable afterwards.
         fill_and_check(96, 3, 1);
-    }
-
-    #[test]
-    fn pipeline3_preserves_order_and_composes_stages() {
-        let results = pipeline3(
-            20,
-            2,
-            |i| i * 2,
-            |i, x| {
-                assert_eq!(x, i * 2);
-                x + 1
-            },
-            |i, y| {
-                assert_eq!(y, i * 2 + 1);
-                y * 10
-            },
-        );
-        let expect: Vec<usize> = (0..20).map(|i| (i * 2 + 1) * 10).collect();
-        assert_eq!(results, expect);
-    }
-
-    #[test]
-    fn pipeline3_handles_empty_and_single_item() {
-        assert!(pipeline3(0, 2, |i| i, |_, x: usize| x, |_, x| x).is_empty());
-        assert_eq!(pipeline3(1, 1, |i| i + 7, |_, x| x, |_, x| x), vec![7]);
-    }
-
-    #[test]
-    fn pipeline3_stages_borrow_caller_state() {
-        let mut produced = 0usize;
-        let consumed = AtomicUsize::new(0);
-        let out = pipeline3(
-            8,
-            1,
-            |i| {
-                produced_inc(&mut produced);
-                i
-            },
-            |_, x| x,
-            |_, x| {
-                consumed.fetch_add(1, Ordering::Relaxed);
-                x
-            },
-        );
-        assert_eq!(out.len(), 8);
-        assert_eq!(produced, 8);
-        assert_eq!(consumed.load(Ordering::Relaxed), 8);
-    }
-
-    fn produced_inc(p: &mut usize) {
-        *p += 1;
     }
 
     #[test]

@@ -38,15 +38,27 @@ pub const DRIVER_OVERHEAD: SimTime = SimTime(40_000_000); // 40 us
 pub struct CamGeneric {
     pub clock: ClockDomain,
     pub porch: usize,
+    /// Topology index of the VPU node this driver instance runs on
+    /// (ISSUE 5). The coordinator derives the fault plan's
+    /// `Hop::Cif(node)` id from it — the frame draws its hop from the
+    /// hardware it passes through — and `frames_received`/`crc_errors`
+    /// are per-node by construction.
+    pub node: usize,
     pub frames_received: u64,
     pub crc_errors: u64,
 }
 
 impl CamGeneric {
     pub fn new(pixel_clock_hz: f64, porch: usize) -> CamGeneric {
+        CamGeneric::for_node(0, pixel_clock_hz, porch)
+    }
+
+    /// [`CamGeneric::new`] for a specific VPU node of the topology.
+    pub fn for_node(node: usize, pixel_clock_hz: f64, porch: usize) -> CamGeneric {
         CamGeneric {
             clock: ClockDomain::new(pixel_clock_hz),
             porch,
+            node,
             frames_received: 0,
             crc_errors: 0,
         }
@@ -101,14 +113,24 @@ impl CamGeneric {
 pub struct LcdDriver {
     pub clock: ClockDomain,
     pub porch: usize,
+    /// Topology index of the VPU node this driver instance runs on —
+    /// the source of the fault plan's `Hop::Lcd(node)` id and of
+    /// `FrameRun::node` attribution.
+    pub node: usize,
     pub frames_sent: u64,
 }
 
 impl LcdDriver {
     pub fn new(pixel_clock_hz: f64, porch: usize) -> LcdDriver {
+        LcdDriver::for_node(0, pixel_clock_hz, porch)
+    }
+
+    /// [`LcdDriver::new`] for a specific VPU node of the topology.
+    pub fn for_node(node: usize, pixel_clock_hz: f64, porch: usize) -> LcdDriver {
         LcdDriver {
             clock: ClockDomain::new(pixel_clock_hz),
             porch,
+            node,
             frames_sent: 0,
         }
     }
@@ -235,6 +257,18 @@ mod tests {
         assert!(!rx.crc_ok);
         assert_eq!(cam.crc_errors, 1);
         assert_eq!(cam.frames_received, 1);
+    }
+
+    #[test]
+    fn node_tags_default_zero_and_stick() {
+        let cam = CamGeneric::new(50.0e6, 27);
+        assert_eq!(cam.node, 0);
+        let cam3 = CamGeneric::for_node(3, 50.0e6, 27);
+        assert_eq!(cam3.node, 3);
+        assert_eq!(cam3.clock.freq_hz, cam.clock.freq_hz);
+        let lcd = LcdDriver::for_node(2, 50.0e6, 27);
+        assert_eq!(lcd.node, 2);
+        assert_eq!(LcdDriver::new(50.0e6, 27).node, 0);
     }
 
     #[test]

@@ -21,4 +21,4 @@ pub mod power;
 pub mod scheduler;
 
 pub use cost::{BenchKind, CostModel, Workload};
-pub use scheduler::{dynamic_makespan, static_makespan};
+pub use scheduler::{dynamic_makespan, static_makespan, SchedPolicy};

@@ -1,4 +1,6 @@
-//! Band scheduling across the 12 SHAVEs (paper §III-C).
+//! Scheduling, at both levels of the topology.
+//!
+//! **Band scheduling across the 12 SHAVEs** (paper §III-C):
 //!
 //! * Binning/conv use a **static** split: "we divide the ... input image
 //!   into 36 bands, and each SHAVE is assigned 3 bands" — round-robin
@@ -6,8 +8,59 @@
 //! * Rendering uses the **dynamic** queue: "each SHAVE is dynamically
 //!   assigned a new band to render, upon finishing its previous one" —
 //!   greedy list scheduling, which absorbs content skew.
+//!
+//! **Frame dispatch across N VPU nodes** (ISSUE 5, mirroring the MPAI
+//! follow-up's multi-accelerator scaling): [`SchedPolicy`] selects how
+//! `coordinator::stream`'s dispatch stage routes frames to nodes —
+//! the same static/dynamic split, one level up.
 
 use crate::fabric::clock::SimTime;
+
+/// Frame-dispatch policy across the VPU nodes of the topology.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Static: frame `i` goes to node `i % N`. Fully deterministic —
+    /// with a fixed fault seed, an N-node round-robin sweep carries
+    /// bit-identical per-frame results to the single-node sweep (the
+    /// fault draws are node-independent by construction).
+    #[default]
+    RoundRobin,
+    /// Dynamic: the next frame goes to a node with the fewest
+    /// outstanding (dispatched-but-uncompleted) frames — the greedy
+    /// list scheduler of the SHAVE band queue, one level up. Node
+    /// *attribution* becomes timing-dependent, but per-frame results
+    /// stay seed-deterministic (a frame computes and faults identically
+    /// on every node). No node can starve: an idle node is always a
+    /// minimum and takes the next frame.
+    LeastLoaded,
+}
+
+impl SchedPolicy {
+    /// Parse the CLI spelling (`rr` / `lld`, long forms accepted).
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(SchedPolicy::RoundRobin),
+            "lld" | "least-loaded" | "leastloaded" => Some(SchedPolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicy::RoundRobin => "rr",
+            SchedPolicy::LeastLoaded => "lld",
+        }
+    }
+}
+
+/// Frames the static round-robin assignment hands node `lane` out of
+/// `n_frames` over `n_nodes` (frames `lane, lane + N, lane + 2N, ...`).
+pub fn rr_share(n_frames: usize, n_nodes: usize, lane: usize) -> usize {
+    if lane >= n_nodes || n_frames <= lane {
+        return 0;
+    }
+    (n_frames - lane).div_ceil(n_nodes)
+}
 
 /// Makespan (seconds -> SimTime) of a static round-robin assignment of
 /// `band_cycles` to `n_cores` at `clock_hz`.
@@ -125,6 +178,29 @@ mod tests {
                 && s >= lower - eps
                 && s <= total / F + eps
         });
+    }
+
+    #[test]
+    fn sched_policy_parses_cli_spellings() {
+        assert_eq!(SchedPolicy::parse("rr"), Some(SchedPolicy::RoundRobin));
+        assert_eq!(SchedPolicy::parse("round-robin"), Some(SchedPolicy::RoundRobin));
+        assert_eq!(SchedPolicy::parse("LLD"), Some(SchedPolicy::LeastLoaded));
+        assert_eq!(SchedPolicy::parse("least-loaded"), Some(SchedPolicy::LeastLoaded));
+        assert_eq!(SchedPolicy::parse("fifo"), None);
+        assert_eq!(SchedPolicy::default(), SchedPolicy::RoundRobin);
+        assert_eq!(SchedPolicy::LeastLoaded.name(), "lld");
+    }
+
+    #[test]
+    fn rr_share_partitions_all_frames() {
+        for (frames, nodes) in [(64usize, 1usize), (64, 2), (64, 4), (7, 3), (2, 4), (0, 2)] {
+            let total: usize = (0..nodes).map(|l| rr_share(frames, nodes, l)).sum();
+            assert_eq!(total, frames, "{frames} frames over {nodes} nodes");
+        }
+        assert_eq!(rr_share(7, 3, 0), 3); // frames 0, 3, 6
+        assert_eq!(rr_share(7, 3, 1), 2); // frames 1, 4
+        assert_eq!(rr_share(7, 3, 2), 2); // frames 2, 5
+        assert_eq!(rr_share(2, 4, 3), 0); // more nodes than frames
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Multi-VPU topology integration (ISSUE 5): frame dispatch across N
+//! nodes, scheduler determinism, starvation-freedom under fault
+//! storms, per-node arena aggregation and the system-level Masked DES.
+//!
+//! Runs on the native execution path (builtin manifest) so it needs no
+//! `make artifacts`. Every test pins its own topology size and fault
+//! plan explicitly, so the assertions hold under any CI matrix leg
+//! (`SPACECODESIGN_VPUS`, `SPACECODESIGN_FAULT_SEED`, ...).
+
+use spacecodesign::config::SystemConfig;
+use spacecodesign::coordinator::{stream, Benchmark, CoProcessor, StreamOptions};
+use spacecodesign::iface::fault::{FaultConfig, FaultPlan, Hop};
+use spacecodesign::vpu::scheduler::SchedPolicy;
+
+/// CoProcessor over an explicit topology, pinned to a directory
+/// without artifacts (builtin manifest + native engine) and with fault
+/// injection off unless a test sets its own plan.
+fn coproc(tag: &str, vpus: usize) -> CoProcessor {
+    let mut cfg = SystemConfig::paper();
+    cfg.artifacts_dir = format!("target/__mvpu_{tag}__");
+    let mut cp = CoProcessor::with_vpus(cfg, vpus).expect("native coprocessor");
+    cp.faults = None;
+    cp
+}
+
+fn opts(frames: usize, seed: u64, sched: SchedPolicy) -> StreamOptions {
+    StreamOptions {
+        bench: Benchmark::Conv { k: 3 },
+        frames,
+        seed,
+        depth: 1,
+        sched,
+    }
+}
+
+/// Transient payload-flip plan: every frame faulted, `plane_rate`
+/// chance per attempt (0.5 recovers within the budget, 1.0 never
+/// does).
+fn flips(seed: u64, plane_rate: f64) -> FaultPlan {
+    FaultPlan::new(FaultConfig {
+        frame_rate: 1.0,
+        plane_rate,
+        w_payload_flip: 1.0,
+        w_crc_corrupt: 0.0,
+        w_truncate: 0.0,
+        w_stuck: 0.0,
+        ..FaultConfig::new(seed, 1.0)
+    })
+}
+
+#[test]
+fn rr_vpus2_matches_vpus1_bit_exact() {
+    // The dispatch refactor must not change a single frame: round-robin
+    // over 2 nodes carries exactly the per-frame results of the
+    // single-node sweep (numerics, timings and validation are all
+    // node-independent).
+    let n = 6;
+    let mut one = coproc("rr1", 1);
+    let r1 = stream::run(&mut one, &opts(n, 30, SchedPolicy::RoundRobin)).unwrap();
+    let mut two = coproc("rr2", 2);
+    let r2 = stream::run(&mut two, &opts(n, 30, SchedPolicy::RoundRobin)).unwrap();
+    assert!(r1.all_valid() && r2.all_valid());
+    assert_eq!(r1.runs.len(), n);
+    assert_eq!(r2.runs.len(), n);
+    assert_eq!(r2.vpus, 2);
+    assert_eq!(r2.per_node_frames, vec![3, 3]);
+    for (i, (a, b)) in r1.runs.iter().zip(&r2.runs).enumerate() {
+        assert_eq!(a.t_cif, b.t_cif, "frame {i} CIF time");
+        assert_eq!(a.t_proc, b.t_proc, "frame {i} proc time");
+        assert_eq!(a.t_lcd, b.t_lcd, "frame {i} LCD time");
+        assert_eq!(a.latency, b.latency, "frame {i} latency");
+        assert_eq!(a.validation.mismatches, b.validation.mismatches, "frame {i}");
+        assert_eq!(a.crc_ok, b.crc_ok, "frame {i}");
+        // Attribution is the only difference: frame i on node i % 2.
+        assert_eq!(a.node, 0, "frame {i} single-node attribution");
+        assert_eq!(b.node, i % 2, "frame {i} round-robin attribution");
+    }
+}
+
+#[test]
+fn rr_vpus2_matches_vpus1_under_fixed_fault_seed() {
+    // ISSUE 5 satellite: with a fixed fault seed, round-robin dispatch
+    // across vpus=2 produces the same per-frame results as vpus=1 —
+    // bit-exact pins, including retransmission counts and which frames
+    // fail (fault draws are keyed by hop kind + frame, never the node).
+    let n = 8;
+    let mut one = coproc("fault1", 1);
+    one.faults = Some(flips(17, 0.5));
+    let r1 = stream::run(&mut one, &opts(n, 50, SchedPolicy::RoundRobin)).unwrap();
+    let mut two = coproc("fault2", 2);
+    two.faults = Some(flips(17, 0.5));
+    let r2 = stream::run(&mut two, &opts(n, 50, SchedPolicy::RoundRobin)).unwrap();
+
+    assert!(r1.faults.faulted > 0, "plan must actually inject: {:?}", r1.faults);
+    assert_eq!(r1.faults, r2.faults, "identical plan-wide fault draws");
+    assert_eq!(r1.retransmits, r2.retransmits);
+    assert_eq!(r1.runs.len(), r2.runs.len());
+    for (i, (a, b)) in r1.runs.iter().zip(&r2.runs).enumerate() {
+        assert_eq!(a.t_cif, b.t_cif, "frame {i} CIF time (incl. resends)");
+        assert_eq!(a.t_lcd, b.t_lcd, "frame {i} LCD time (incl. resends)");
+        assert_eq!(a.retransmits, b.retransmits, "frame {i} resend count");
+        assert_eq!(a.validation.pass, b.validation.pass, "frame {i}");
+    }
+    let e1: Vec<usize> = r1.frame_errors.iter().map(|e| e.frame).collect();
+    let e2: Vec<usize> = r2.frame_errors.iter().map(|e| e.frame).collect();
+    assert_eq!(e1, e2, "the same frames must fail on both topologies");
+}
+
+#[test]
+fn least_loaded_never_starves_a_node_under_fault_storm() {
+    // ISSUE 5 satellite: a persistent storm (every attempt corrupted,
+    // every frame burns its whole retransmission budget) must not
+    // starve any node — an idle node is always a dispatch minimum.
+    let n = 12;
+    let mut cp = coproc("storm", 3);
+    cp.faults = Some(flips(9, 1.0));
+    let r = stream::run(&mut cp, &opts(n, 70, SchedPolicy::LeastLoaded)).unwrap();
+    assert_eq!(
+        r.runs.len() + r.frame_errors.len(),
+        n,
+        "every frame accounted for"
+    );
+    assert_eq!(r.frame_errors.len(), n, "storm makes every frame fail");
+    assert_eq!(r.per_node_frames.len(), 3);
+    assert_eq!(r.per_node_frames.iter().sum::<usize>(), n);
+    for (node, &frames) in r.per_node_frames.iter().enumerate() {
+        assert!(frames > 0, "node {node} starved: {:?}", r.per_node_frames);
+    }
+    // The storm is contained per frame and the topology stays usable.
+    cp.faults = None;
+    let after = stream::run(&mut cp, &opts(6, 70, SchedPolicy::LeastLoaded)).unwrap();
+    assert!(after.all_valid(), "datapath intact after the storm");
+}
+
+#[test]
+fn lld_results_stay_seed_deterministic_even_if_attribution_moves() {
+    // Node attribution under least-loaded is timing-dependent, but the
+    // per-frame *results* are not: a frame computes and faults
+    // identically on every node.
+    let n = 6;
+    let mut a = coproc("lldr", 2);
+    let rr = stream::run(&mut a, &opts(n, 90, SchedPolicy::RoundRobin)).unwrap();
+    let mut b = coproc("lldl", 2);
+    let lld = stream::run(&mut b, &opts(n, 90, SchedPolicy::LeastLoaded)).unwrap();
+    assert!(rr.all_valid() && lld.all_valid());
+    assert_eq!(lld.sched, SchedPolicy::LeastLoaded);
+    assert_eq!(lld.per_node_frames.iter().sum::<usize>(), n);
+    for (i, (a, b)) in rr.runs.iter().zip(&lld.runs).enumerate() {
+        assert_eq!(a.t_cif, b.t_cif, "frame {i}");
+        assert_eq!(a.t_proc, b.t_proc, "frame {i}");
+        assert_eq!(a.t_lcd, b.t_lcd, "frame {i}");
+        assert_eq!(a.validation.mismatches, b.validation.mismatches, "frame {i}");
+    }
+}
+
+#[test]
+fn arena_stats_aggregate_across_node_arenas() {
+    // ISSUE 5 satellite: StreamResult::arena must aggregate every
+    // node's arena, and steady-state reuse must survive sharding (each
+    // node warms its own freelist).
+    let n = 16;
+    let mut cp = coproc("arena", 2);
+    let r = stream::run(&mut cp, &opts(n, 11, SchedPolicy::RoundRobin)).unwrap();
+    assert!(r.all_valid());
+    let s = r.arena;
+    assert!(s.reused + s.allocated > 0, "sweep must draw from the arenas");
+    assert!(
+        s.reuse_ratio() > 0.5,
+        "per-node freelists must serve steady-state takes: {s:?}"
+    );
+    // Both nodes really carried traffic.
+    let delivered = r.delivered_per_node();
+    assert_eq!(delivered, vec![8, 8]);
+    // A second sweep on the warm topology is nearly allocation-free.
+    let r2 = stream::run(&mut cp, &opts(n, 11, SchedPolicy::RoundRobin)).unwrap();
+    assert!(
+        r2.arena.reused > r2.arena.allocated,
+        "warm topology must run on recycled buffers: {:?}",
+        r2.arena
+    );
+}
+
+#[test]
+fn masked_system_fps_scales_with_topology() {
+    // The merged Masked DES: N homogeneous nodes -> N x the per-node
+    // throughput (each node simulated over its dispatched share; conv3
+    // frames all carry identical timings).
+    let mut one = coproc("des1", 1);
+    let r1 = stream::run(&mut one, &opts(8, 5, SchedPolicy::RoundRobin)).unwrap();
+    assert_eq!(r1.masked_system.throughput_fps, r1.masked.throughput_fps);
+    let mut four = coproc("des4", 4);
+    let r4 = stream::run(&mut four, &opts(8, 5, SchedPolicy::RoundRobin)).unwrap();
+    let expect = 4.0 * r4.masked.throughput_fps;
+    let rel = (r4.masked_system.throughput_fps - expect).abs() / expect;
+    assert!(
+        rel < 1e-9,
+        "system {} vs 4 x node {}",
+        r4.masked_system.throughput_fps,
+        r4.masked.throughput_fps
+    );
+    // Per-frame latency does not improve by adding nodes.
+    assert_eq!(r4.masked_system.avg_latency, r4.masked.avg_latency);
+}
+
+#[test]
+fn topology_larger_than_sweep_works() {
+    // More nodes than frames: the spare lanes idle out cleanly.
+    let mut cp = coproc("spare", 4);
+    let r = stream::run(&mut cp, &opts(2, 3, SchedPolicy::RoundRobin)).unwrap();
+    assert!(r.all_valid());
+    assert_eq!(r.runs.len(), 2);
+    assert_eq!(r.per_node_frames, vec![1, 1, 0, 0]);
+    assert_eq!(r.runs[0].node, 0);
+    assert_eq!(r.runs[1].node, 1);
+}
+
+#[test]
+fn hop_fault_counters_attribute_per_node() {
+    // ISSUE 5 satellite: the sweep's fault counters split by (node,
+    // direction), and the split sums back to the plan-wide totals.
+    let n = 8;
+    let mut cp = coproc("hops", 2);
+    cp.faults = Some(flips(21, 0.5));
+    let r = stream::run(&mut cp, &opts(n, 40, SchedPolicy::RoundRobin)).unwrap();
+    assert!(r.faults.faulted > 0);
+    assert!(!r.hop_faults.is_empty());
+    let cif_nodes: Vec<usize> = r
+        .hop_faults
+        .iter()
+        .filter(|h| matches!(h.hop, Hop::Cif(_)))
+        .map(|h| h.hop.node())
+        .collect();
+    assert!(
+        cif_nodes.contains(&0) && cif_nodes.contains(&1),
+        "both nodes' CIF hops must appear: {cif_nodes:?}"
+    );
+    let mut transfers = 0u64;
+    let mut resends = 0u64;
+    for h in &r.hop_faults {
+        transfers += h.stats.transfers;
+        resends += h.stats.retransmits;
+    }
+    assert_eq!(transfers, r.faults.transfers, "per-hop transfers sum to total");
+    assert_eq!(resends, r.faults.retransmits, "per-hop resends sum to total");
+}
+
+#[test]
+fn one_shot_runs_stay_on_node_zero() {
+    // run_unmasked is the paper's point-to-point path whatever the
+    // topology size — and stays bit-exact with streamed frames.
+    let mut cp = coproc("oneshot", 3);
+    let one = cp.run_unmasked(Benchmark::Conv { k: 3 }, 77).unwrap();
+    assert_eq!(one.node, 0);
+    let r = stream::run(&mut cp, &opts(1, 77, SchedPolicy::RoundRobin)).unwrap();
+    assert_eq!(r.runs[0].t_cif, one.t_cif);
+    assert_eq!(r.runs[0].t_proc, one.t_proc);
+    assert_eq!(r.runs[0].validation.mismatches, one.validation.mismatches);
+}

@@ -26,6 +26,7 @@ fn opts(bench: Benchmark, frames: usize, seed: u64) -> StreamOptions {
         frames,
         seed,
         depth: 1,
+        sched: spacecodesign::vpu::scheduler::SchedPolicy::RoundRobin,
     }
 }
 
@@ -37,10 +38,14 @@ fn stream_conv3_validates_every_frame_and_reports_stages() {
     assert!(r.all_valid(), "stream frames must pass CRC + groundtruth");
     assert!(r.wall_fps > 0.0);
     assert!(r.exec_wall.as_nanos() > 0, "execute wallclock must be surfaced");
+    // Stage busy sums across node lanes, so the cap scales with the
+    // topology (SPACECODESIGN_VPUS may be set by the CI matrix).
+    let cap = 1.05 * r.vpus as f64;
     for (i, util) in r.stage_util.iter().enumerate() {
         assert!(
-            (0.0..=1.05).contains(util),
-            "stage {i} utilization {util} out of range"
+            (0.0..=cap).contains(util),
+            "stage {i} utilization {util} out of range (vpus {})",
+            r.vpus
         );
         assert!(r.stage_busy[i].as_nanos() > 0, "stage {i} never ran");
     }
