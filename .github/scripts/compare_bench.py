@@ -65,10 +65,12 @@ def main():
         return 1
 
     regressions = []
+    new_rows = []
     width = max(len(n) for n in sorted(set(base) | set(fresh)))
     print(f"{'row':<{width}}  {'baseline':>12}  {'fresh':>12}  {'delta':>8}")
     for name in sorted(set(base) | set(fresh)):
         if name not in base:
+            new_rows.append(name)
             print(f"{name:<{width}}  {'—':>12}  {fresh[name]:>12.6f}  {'new':>8}")
             continue
         if name not in fresh:
@@ -84,6 +86,12 @@ def main():
             regressions.append((name, b, f, delta))
             flag = "  <-- REGRESSION"
         print(f"{name:<{width}}  {b:>12.6f}  {f:>12.6f}  {delta:>+7.1%}{flag}")
+
+    # New rows never gate this run, but they *become* the baseline once
+    # this lands on main — say so explicitly, so a PR that accidentally
+    # renames a tracked row can't slip through as "new + gone".
+    if new_rows:
+        print(f"\n{len(new_rows)} new row(s) set baseline: {', '.join(new_rows)}")
 
     if regressions:
         print(f"\n{len(regressions)} row(s) regressed more than "

@@ -16,8 +16,10 @@
 //! The `exec *` rows run through PJRT when `make artifacts` has been
 //! run and the `xla` bindings are linked, and through the native kernel
 //! engine otherwise (the `engine` field records which). The `stream
-//! conv3 N=*` rows measure the three-stage streaming pipeline's
-//! wallclock throughput on both kernel backends.
+//! conv3 N=*` and `stream ccsds N=*` rows measure the three-stage
+//! streaming pipeline's wallclock throughput on both kernel backends;
+//! `[simd]` rows carry the explicit-lane third tier under their own
+//! names so every gated row keeps its original meaning.
 //!
 //! Run: `cargo bench --bench hotpath`.
 
@@ -122,6 +124,12 @@ fn main() {
     });
     log.push_pair("crc16 1 MiB", &r, &s);
     println!("    ({:.0} MB/s optimized)", 1.0 / s.median);
+    // New row: the widened (32-byte slicing) engine of the simd tier.
+    let v = bench(3, 12, || {
+        std::hint::black_box(Crc16Xmodem::checksum_simd(&bytes));
+    });
+    log.push("crc16 1 MiB [simd]", &v);
+    println!("    ({:.0} MB/s simd)", 1.0 / v.median);
 
     // --- wire frame build + check (CRC both directions) ----------------
     let frame = Frame::from_data(
@@ -162,6 +170,13 @@ fn main() {
         std::hint::black_box(dsp_fast::binning_f32_opt(&img, 1024, 1024).unwrap());
     });
     log.push_pair("scalar binning 1MP", &r, &s);
+    // New row: the explicit 8-lane tier through the public dispatcher.
+    let v = bench(1, 5, || {
+        std::hint::black_box(
+            spacecodesign::dsp::binning2x2(KernelBackend::Simd, &img, 1024, 1024).unwrap(),
+        );
+    });
+    log.push("scalar binning 1MP [simd]", &v);
 
     // --- conv 7x7: scalar groundtruth vs optimized tier ------------------
     let kern: Vec<f32> = (0..49).map(|_| rng.next_f32() / 49.0).collect();
@@ -173,6 +188,13 @@ fn main() {
         std::hint::black_box(dsp_fast::conv2d_f32_opt(&small, 256, 256, &kern, 7).unwrap());
     });
     log.push_pair("scalar conv7 256x256", &r, &s);
+    let v = bench(1, 5, || {
+        std::hint::black_box(
+            spacecodesign::dsp::conv2d(KernelBackend::Simd, &small, 256, 256, &kern, 7)
+                .unwrap(),
+        );
+    });
+    log.push("scalar conv7 256x256 [simd]", &v);
 
     // --- spawn overhead: 256 small conv calls per iteration --------------
     // Small kernels repeated at frame rate are where per-call fan-out
@@ -209,6 +231,12 @@ fn main() {
         std::hint::black_box(cnn_fast::cnn_forward_opt(&weights, &chip).unwrap());
     });
     log.push_pair("cnn forward 128x128x3", &r, &s);
+    let v = bench(1, 5, || {
+        std::hint::black_box(
+            spacecodesign::cnn::forward(KernelBackend::Simd, &weights, &chip).unwrap(),
+        );
+    });
+    log.push("cnn forward 128x128x3 [simd]", &v);
 
     // --- rasterizer ------------------------------------------------------
     let mesh = render::Mesh::octahedron();
@@ -354,6 +382,42 @@ fn main() {
                     "    ({:.1} ref / {:.1} opt frames/s wallclock)",
                     n as f64 / r.median,
                     n as f64 / o.median
+                );
+                // New row: the simd tier on the same sweep. A separate
+                // name keeps the gated two-tier row's meaning unchanged.
+                let v = sweep(&mut cp, KernelBackend::Simd);
+                log.push(&format!("stream conv3 N={n} [simd]"), &v);
+            }
+
+            // --- streaming CCSDS-123 compression (PR 6) --------------
+            // New rows: the band-parallel v2 encoder as a full pipeline
+            // workload (8 CIF planes in, 64-word digest out). The
+            // numerics are integer-exact on every tier; the tiers still
+            // sweep so the rows expose any dispatch-layer regression.
+            for n in [1usize, 8, 64] {
+                let opts = StreamOptions {
+                    bench: Benchmark::Ccsds,
+                    frames: n,
+                    seed: 42,
+                    depth: 1,
+                    sched: SchedPolicy::RoundRobin,
+                };
+                let sweep = |cp: &mut CoProcessor, backend| {
+                    cp.backend = backend;
+                    bench(1, 3, || {
+                        std::hint::black_box(stream::run(cp, &opts).unwrap());
+                    })
+                };
+                let r = sweep(&mut cp, KernelBackend::Reference);
+                let o = sweep(&mut cp, KernelBackend::Optimized);
+                log.push_pair(&format!("stream ccsds N={n}"), &r, &o);
+                let v = sweep(&mut cp, KernelBackend::Simd);
+                log.push(&format!("stream ccsds N={n} [simd]"), &v);
+                println!(
+                    "    ({:.1} ref / {:.1} opt / {:.1} simd frames/s wallclock)",
+                    n as f64 / r.median,
+                    n as f64 / o.median,
+                    n as f64 / v.median
                 );
             }
 

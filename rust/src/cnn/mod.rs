@@ -9,11 +9,15 @@
 
 //! [`fast`] is the `KernelBackend::Optimized` twin of [`layers`]
 //! (repacked weights, row-pointer pooling, ping-pong buffers, row
-//! fan-out); [`forward`]/[`classify`] dispatch between the two tiers.
+//! fan-out) and [`simd`] the `KernelBackend::Simd` twin (eight
+//! output-channel lanes over the unpacked HWIO layout, bit-identical
+//! to the reference); [`forward`]/[`classify`] dispatch between the
+//! tiers.
 
 pub mod fast;
 pub mod layers;
 pub mod ships;
+pub mod simd;
 pub mod weights;
 
 pub use layers::cnn_forward;
@@ -31,6 +35,7 @@ pub fn forward(
     match backend {
         KernelBackend::Reference => layers::cnn_forward(weights, chip),
         KernelBackend::Optimized => fast::cnn_forward_opt(weights, chip),
+        KernelBackend::Simd => simd::cnn_forward_simd(weights, chip),
     }
 }
 

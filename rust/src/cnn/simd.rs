@@ -1,0 +1,244 @@
+//! Explicit-SIMD CNN inference — the `KernelBackend::Simd` tier for the
+//! ship-detection benchmark.
+//!
+//! Vectorizes **across output channels**: the HWIO weight layout keeps
+//! the `Cout` axis innermost (`w[((u*3 + v)*cin + ic)*cout + oc]`), so
+//! eight consecutive `oc` lanes load one contiguous weight block per
+//! `(tap, ic)` term and broadcast the single activation across the
+//! lanes — no repacking pass at all (the Optimized tier's repack exists
+//! to serve its `ic`-contiguous scalar loop; lanes over `oc` make the
+//! original layout the fast one). Every lane replays the scalar
+//! reference's exact accumulation order (`u`, `v`, `ic`;
+//! bias-initialized; multiply-then-add; final `max(0.0)`), so the conv
+//! is **bit-identical to the Reference tier**, not merely ε-close. The
+//! ship net's conv widths (8/16/32/32) are all lane multiples; a
+//! non-multiple `cout` runs its remainder through an identical scalar
+//! tail. Maxpool lanes over the (innermost, contiguous) channel axis
+//! with the reference's `max` order — exact by construction.
+//!
+//! Fallback rule: a conv narrower than one lane block (`cout < 8`) is
+//! all tail — route it to the Optimized tier, which is tuned for
+//! exactly that scalar shape.
+
+use crate::cnn::fast;
+use crate::cnn::layers::{dense, FeatureMap};
+use crate::cnn::weights::Weights;
+use crate::error::{Error, Result};
+use crate::util::lanes::{F32x8, LANES};
+use crate::util::par;
+use crate::util::par::GRAIN_OPS;
+
+/// Core conv kernel on raw NHWC data with **unpacked** HWIO weights,
+/// eight `oc` lanes per step, into a caller-owned buffer.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_relu_lanes(
+    xd: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    wts: &[f32],
+    b: &[f32],
+    cout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xd.len(), h * w * cin);
+    debug_assert_eq!(wts.len(), 9 * cin * cout);
+    debug_assert_eq!(out.len(), h * w * cout);
+    if h == 0 || w == 0 || cout == 0 {
+        return;
+    }
+    let row_len = w * cout;
+    let min_rows = (GRAIN_OPS / (w * 9 * cin * cout).max(1)).max(1);
+    let blocks = cout / LANES;
+    par::par_row_bands(out, h, row_len, min_rows, |y0, band| {
+        for (r, orow) in band.chunks_exact_mut(row_len).enumerate() {
+            let y = y0 + r;
+            let u_lo = usize::from(y == 0);
+            let u_hi = if y + 1 == h { 2 } else { 3 };
+            for xx in 0..w {
+                let v_lo = usize::from(xx == 0);
+                let v_hi = if xx + 1 == w { 2 } else { 3 };
+                let opix = &mut orow[xx * cout..(xx + 1) * cout];
+                for blk in 0..blocks {
+                    let oc0 = blk * LANES;
+                    let mut acc = F32x8::load(&b[oc0..]);
+                    for u in u_lo..u_hi {
+                        let yy = y + u - 1;
+                        for v in v_lo..v_hi {
+                            let xv = xx + v - 1;
+                            let px = (yy * w + xv) * cin;
+                            let base = ((u * 3 + v) * cin) * cout + oc0;
+                            for ic in 0..cin {
+                                acc.acc_scaled(
+                                    xd[px + ic],
+                                    F32x8::load(&wts[base + ic * cout..]),
+                                );
+                            }
+                        }
+                    }
+                    acc.relu().store(&mut opix[oc0..]);
+                }
+                // Scalar oc tail: the reference loop verbatim.
+                for oc in blocks * LANES..cout {
+                    let mut acc = b[oc];
+                    for u in u_lo..u_hi {
+                        let yy = y + u - 1;
+                        for v in v_lo..v_hi {
+                            let xv = xx + v - 1;
+                            let px = (yy * w + xv) * cin;
+                            let base = ((u * 3 + v) * cin) * cout + oc;
+                            for ic in 0..cin {
+                                acc += xd[px + ic] * wts[base + ic * cout];
+                            }
+                        }
+                    }
+                    opix[oc] = acc.max(0.0);
+                }
+            }
+        }
+    });
+}
+
+/// Row-pointer 2x2 stride-2 max pool, channel lanes of eight.
+fn maxpool2x2_lanes(xd: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), oh * ow * c);
+    if oh == 0 || ow == 0 || c == 0 {
+        return;
+    }
+    let row_len = w * c;
+    let blocks = c / LANES;
+    for (oy, orow) in out.chunks_exact_mut(ow * c).enumerate() {
+        let r0 = &xd[(2 * oy) * row_len..][..row_len];
+        let r1 = &xd[(2 * oy + 1) * row_len..][..row_len];
+        for ox in 0..ow {
+            let base = 2 * ox * c;
+            let opix = &mut orow[ox * c..(ox + 1) * c];
+            let (a0, a1) = (&r0[base..base + c], &r0[base + c..base + 2 * c]);
+            let (b0, b1) = (&r1[base..base + c], &r1[base + c..base + 2 * c]);
+            for blk in 0..blocks {
+                let ch0 = blk * LANES;
+                let m = F32x8::load(&a0[ch0..])
+                    .max(F32x8::load(&a1[ch0..]))
+                    .max(F32x8::load(&b0[ch0..]))
+                    .max(F32x8::load(&b1[ch0..]));
+                m.store(&mut opix[ch0..]);
+            }
+            for ch in blocks * LANES..c {
+                opix[ch] = a0[ch].max(a1[ch]).max(b0[ch]).max(b1[ch]);
+            }
+        }
+    }
+}
+
+/// Simd twin of [`crate::cnn::layers::conv3x3_relu`]. Bit-identical to
+/// the reference; `cout < 8` falls back to the Optimized tier.
+pub fn conv3x3_relu_simd(x: &FeatureMap, w: &[f32], b: &[f32], cout: usize) -> FeatureMap {
+    if cout < LANES {
+        return fast::conv3x3_relu_opt(x, w, b, cout);
+    }
+    let mut out = FeatureMap::new(x.h, x.w, cout);
+    conv3x3_relu_lanes(&x.data, x.h, x.w, x.c, w, b, cout, &mut out.data);
+    out
+}
+
+/// Simd twin of [`crate::cnn::layers::maxpool2x2`]. Bit-exact.
+pub fn maxpool2x2_simd(x: &FeatureMap) -> FeatureMap {
+    let mut out = FeatureMap::new(x.h / 2, x.w / 2, x.c);
+    maxpool2x2_lanes(&x.data, x.h, x.w, x.c, &mut out.data);
+    out
+}
+
+/// Simd twin of [`crate::cnn::layers::cnn_forward`]: same 6-layer
+/// network, ping-pong scratch buffers, lane kernels, no weight repack.
+pub fn cnn_forward_simd(weights: &Weights, chip: &FeatureMap) -> Result<[f32; 2]> {
+    if chip.h != 128 || chip.w != 128 || chip.c != 3 {
+        return Err(Error::Geometry(format!(
+            "ship CNN expects 128x128x3 chips, got {}x{}x{}",
+            chip.h, chip.w, chip.c
+        )));
+    }
+    let (mut h, mut w, mut cin) = (chip.h, chip.w, chip.c);
+    let mut conv_buf: Vec<f32> = Vec::new();
+    let mut pool_buf: Vec<f32> = Vec::new();
+    for i in 0..4 {
+        let wt = weights.get(&format!("conv{i}_w"))?;
+        let bt = weights.get(&format!("conv{i}_b"))?;
+        let cout = *wt.dims.last().unwrap();
+        conv_buf.resize(h * w * cout, 0.0);
+        {
+            let src: &[f32] = if i == 0 { &chip.data } else { &pool_buf };
+            conv3x3_relu_lanes(src, h, w, cin, &wt.data, &bt.data, cout, &mut conv_buf);
+        }
+        pool_buf.resize((h / 2) * (w / 2) * cout, 0.0);
+        maxpool2x2_lanes(&conv_buf, h, w, cout, &mut pool_buf);
+        h /= 2;
+        w /= 2;
+        cin = cout;
+    }
+    let fc0w = weights.get("fc0_w")?;
+    let fc0b = weights.get("fc0_b")?;
+    let hidden = dense(&pool_buf, &fc0w.data, &fc0b.data, 57, true);
+    let fc1w = weights.get("fc1_w")?;
+    let fc1b = weights.get("fc1_b")?;
+    let logits = dense(&hidden, &fc1w.data, &fc1b.data, 2, false);
+    Ok([logits[0], logits[1]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::layers;
+    use crate::util::rng::Rng;
+
+    fn random_fm(rng: &mut Rng, h: usize, w: usize, c: usize) -> FeatureMap {
+        FeatureMap::from_data(h, w, c, (0..h * w * c).map(|_| rng.next_f32() - 0.5).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn conv_bit_identical_to_reference_lane_multiple_and_tail() {
+        let mut rng = Rng::new(31);
+        // cout 8 (one block), 16 (two), 11 (block + 3-wide tail).
+        for (h, w, cin, cout) in [(6usize, 7usize, 3usize, 8usize), (5, 4, 2, 16), (4, 5, 3, 11)] {
+            let x = random_fm(&mut rng, h, w, cin);
+            let wts: Vec<f32> = (0..9 * cin * cout).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..cout).map(|_| rng.next_f32() - 0.5).collect();
+            let r = layers::conv3x3_relu(&x, &wts, &b, cout);
+            let s = conv3x3_relu_simd(&x, &wts, &b, cout);
+            for (i, (a, bb)) in r.data.iter().zip(&s.data).enumerate() {
+                assert_eq!(a.to_bits(), bb.to_bits(), "{h}x{w} {cin}->{cout} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_narrow_cout_falls_back() {
+        let mut rng = Rng::new(32);
+        let x = random_fm(&mut rng, 5, 5, 2);
+        let wts: Vec<f32> = (0..9 * 2 * 3).map(|_| rng.next_f32() - 0.5).collect();
+        let b = vec![0.1f32, -0.2, 0.3];
+        let r = layers::conv3x3_relu(&x, &wts, &b, 3);
+        let s = conv3x3_relu_simd(&x, &wts, &b, 3);
+        for (a, bb) in r.data.iter().zip(&s.data) {
+            let tol = 1e-5 * (1.0 + a.abs().max(bb.abs()));
+            assert!((a - bb).abs() <= tol);
+        }
+    }
+
+    #[test]
+    fn maxpool_bit_exact_including_tail_channels() {
+        let mut rng = Rng::new(33);
+        for (h, w, c) in [(8usize, 8usize, 8usize), (6, 4, 16), (4, 6, 13), (2, 2, 3)] {
+            let x = random_fm(&mut rng, h, w, c);
+            assert_eq!(layers::maxpool2x2(&x).data, maxpool2x2_simd(&x).data, "{h}x{w}x{c}");
+        }
+    }
+
+    #[test]
+    fn forward_rejects_wrong_chip_size() {
+        let w = Weights::default();
+        let chip = FeatureMap::new(64, 64, 3);
+        assert!(cnn_forward_simd(&w, &chip).is_err());
+    }
+}

@@ -38,7 +38,11 @@ impl BitWriter {
         self.write_bits(0, 1);
     }
 
-    /// Pad to a byte boundary with zeros and return the buffer.
+    /// Return the byte buffer. The final partial byte (if any) is
+    /// already zero-padded by construction — `write_bits` pushes a zero
+    /// byte before OR-ing bits in — so no flush step exists to forget:
+    /// a stream ending exactly on a byte boundary and one ending mid-
+    /// byte serialize identically up to that boundary.
     pub fn finish(self) -> Vec<u8> {
         self.bytes
     }
@@ -145,6 +149,44 @@ mod tests {
         let bytes = [0xFF, 0xFF];
         let mut r = BitReader::new(&bytes);
         assert!(r.read_unary(8).is_err());
+    }
+
+    #[test]
+    fn finish_with_final_byte_exactly_full() {
+        // No phantom padding byte when the stream ends on a boundary,
+        // and the writer keeps appending correctly past it.
+        let mut w = BitWriter::new();
+        w.write_bits(0xAB, 8);
+        assert_eq!(w.bit_len(), 8);
+        let bytes = w.clone().finish();
+        assert_eq!(bytes, vec![0xAB]);
+        w.write_bits(0xCDEF, 16);
+        assert_eq!(w.finish(), vec![0xAB, 0xCD, 0xEF]);
+
+        // Mid-byte end pads with zeros; boundary end is byte-identical
+        // up to the shared prefix (the flush symmetry the v2 container
+        // leans on when concatenating per-band chunks).
+        let mut a = BitWriter::new();
+        a.write_bits(0b1111_0000, 8);
+        let mut b = BitWriter::new();
+        b.write_bits(0b1111, 4);
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn zero_length_encode_is_empty() {
+        let w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        assert!(w.finish().is_empty());
+        // Reading the empty stream errors instead of inventing bits,
+        // but a zero-bit read is a legal no-op on both sides.
+        let mut r = BitReader::new(&[]);
+        assert_eq!(r.read_bits(0).unwrap(), 0);
+        assert_eq!(r.bits_consumed(), 0);
+        assert!(r.read_bit().is_err());
+        let mut w2 = BitWriter::new();
+        w2.write_bits(0, 0);
+        assert!(w2.finish().is_empty());
     }
 
     #[test]

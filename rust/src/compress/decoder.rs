@@ -3,7 +3,7 @@
 
 use crate::compress::bitio::BitReader;
 use crate::compress::cube::Cube;
-use crate::compress::encoder::{GrState, MAGIC, VERSION};
+use crate::compress::encoder::{GrState, MAGIC, VERSION, VERSION_PARALLEL};
 use crate::compress::predictor::{sample_bounds, unmap_residual, Predictor};
 use crate::compress::Params;
 use crate::error::{Error, Result};
@@ -26,7 +26,52 @@ fn decode_delta(r: &mut BitReader, k: u32, limit: u32, d: u32) -> Result<u64> {
     Ok(((q as u64) << k) | low)
 }
 
-/// Decompress a bitstream produced by [`crate::compress::compress`].
+/// Decode one band's samples from `r` into a fresh plane, mirroring the
+/// encoder's per-band loop in lock-step. `prev_refs` is the raw window
+/// of previous planes, most recent first. Shared by the v1 path (one
+/// continuous reader across bands) and the v2 path (one reader per
+/// byte-aligned chunk).
+fn decode_band(
+    r: &mut BitReader,
+    prev_refs: &[&[i64]],
+    rows: usize,
+    cols: usize,
+    params: Params,
+    smin: i64,
+    smax: i64,
+    diffs: &mut Vec<i64>,
+) -> Result<Vec<i64>> {
+    let mut plane = vec![0i64; rows * cols];
+    let mut pred = Predictor::new_band(params);
+    let mut gr = GrState::new(params.dynamic_range);
+    for y in 0..rows {
+        for x in 0..cols {
+            if y == 0 && x == 0 {
+                // First sample of each band is stored raw (see encoder).
+                plane[0] = r.read_bits(params.dynamic_range)? as i64;
+                continue;
+            }
+            let s_hat = pred.predict_into(&plane, prev_refs, cols, y, x, diffs);
+            let k = gr.k();
+            let delta = decode_delta(r, k, params.unary_limit, params.dynamic_range)?;
+            let err = unmap_residual(delta, s_hat, smin, smax);
+            let s = s_hat + err;
+            if s < smin || s > smax {
+                return Err(Error::Ccsds(format!(
+                    "reconstructed sample {s} out of range at y={y} x={x}"
+                )));
+            }
+            plane[y * cols + x] = s;
+            gr.update(delta);
+            pred.update(err, diffs);
+        }
+    }
+    Ok(plane)
+}
+
+/// Decompress a bitstream produced by [`crate::compress::compress`]
+/// (v1, continuous) or [`crate::compress::compress_parallel`] (v2,
+/// byte-aligned per-band chunks behind an index table).
 pub fn decompress(bytes: &[u8]) -> Result<Cube> {
     let mut r = BitReader::new(bytes);
     let mut magic = [0u8; 4];
@@ -37,7 +82,7 @@ pub fn decompress(bytes: &[u8]) -> Result<Cube> {
         return Err(Error::Ccsds("bad magic".into()));
     }
     let version = r.read_bits(8)? as u8;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_PARALLEL {
         return Err(Error::Ccsds(format!("unsupported version {version}")));
     }
     let bands = r.read_bits(32)? as usize;
@@ -57,46 +102,39 @@ pub fn decompress(bytes: &[u8]) -> Result<Cube> {
     }
     let (smin, smax, _) = sample_bounds(params.dynamic_range);
 
+    // v2: per-band chunk byte lengths follow the shared header fields.
+    let mut chunk_lens: Vec<usize> = Vec::new();
+    if version == VERSION_PARALLEL {
+        for _ in 0..bands {
+            chunk_lens.push(r.read_bits(32)? as usize);
+        }
+    }
+    // Both headers are whole bytes, so this is exact for the v2 slices.
+    let mut offset = r.bits_consumed() / 8;
+
     let mut data = Vec::with_capacity(bands * rows * cols);
     let mut planes: Vec<Vec<i64>> = Vec::new();
     // Reused per-sample scratch, mirroring the encoder (lock-step).
     let mut diffs: Vec<i64> = Vec::with_capacity(params.pred_bands);
 
-    for _z in 0..bands {
-        let mut plane = vec![0i64; rows * cols];
-        let mut pred = Predictor::new_band(params);
-        let mut gr = GrState::new(params.dynamic_range);
+    for z in 0..bands {
         let prev_refs: Vec<&[i64]> = planes
             .iter()
             .rev()
             .take(params.pred_bands)
             .map(|p| p.as_slice())
             .collect();
-
-        for y in 0..rows {
-            for x in 0..cols {
-                if y == 0 && x == 0 {
-                    // First sample of each band is stored raw (see
-                    // encoder).
-                    plane[0] = r.read_bits(params.dynamic_range)? as i64;
-                    continue;
-                }
-                let s_hat = pred.predict_into(&plane, &prev_refs, cols, y, x, &mut diffs);
-                let k = gr.k();
-                let delta =
-                    decode_delta(&mut r, k, params.unary_limit, params.dynamic_range)?;
-                let err = unmap_residual(delta, s_hat, smin, smax);
-                let s = s_hat + err;
-                if s < smin || s > smax {
-                    return Err(Error::Ccsds(format!(
-                        "reconstructed sample {s} out of range at y={y} x={x}"
-                    )));
-                }
-                plane[y * cols + x] = s;
-                gr.update(delta);
-                pred.update(err, &diffs);
-            }
-        }
+        let plane = if version == VERSION {
+            decode_band(&mut r, &prev_refs, rows, cols, params, smin, smax, &mut diffs)?
+        } else {
+            let len = chunk_lens[z];
+            let chunk = bytes
+                .get(offset..offset + len)
+                .ok_or_else(|| Error::Ccsds(format!("band {z} chunk truncated")))?;
+            offset += len;
+            let mut br = BitReader::new(chunk);
+            decode_band(&mut br, &prev_refs, rows, cols, params, smin, smax, &mut diffs)?
+        };
         data.extend(plane.iter().map(|&s| s as u16));
         planes.push(plane);
         if planes.len() > params.pred_bands {
@@ -145,5 +183,21 @@ mod tests {
         };
         let (bits, _) = compress(&cube, params).unwrap();
         assert_eq!(decompress(&bits).unwrap(), cube);
+        // v2 container, same params: identical samples back.
+        let (bits2, _) = crate::compress::compress_parallel(&cube, params).unwrap();
+        assert_eq!(decompress(&bits2).unwrap(), cube);
+    }
+
+    #[test]
+    fn v2_roundtrip_and_truncation_rejected() {
+        let data: Vec<u16> = (0..3 * 9 * 9u32).map(|i| (i * 37 % 5000) as u16).collect();
+        let cube = Cube::new(3, 9, 9, data).unwrap();
+        let (bits, _) = crate::compress::compress_parallel(&cube, Params::default()).unwrap();
+        assert_eq!(decompress(&bits).unwrap(), cube);
+        // Dropping the final chunk's tail must error (out-of-bounds
+        // slice on the last band), not panic.
+        assert!(decompress(&bits[..bits.len() - 1]).is_err());
+        // Chopping into the index table must also error cleanly.
+        assert!(decompress(&bits[..22]).is_err());
     }
 }

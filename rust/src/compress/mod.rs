@@ -26,7 +26,11 @@ pub mod predictor;
 
 pub use cube::Cube;
 pub use decoder::decompress;
-pub use encoder::{compress, CompressStats};
+pub use encoder::{compress, compress_parallel, CompressStats};
+
+use crate::error::{Error, Result};
+use crate::fabric::crc16::Crc16Xmodem;
+use crate::util::rng::Rng;
 
 /// Compression parameters (subset of the standard's).
 #[derive(Clone, Copy, Debug)]
@@ -52,37 +56,96 @@ impl Default for Params {
     }
 }
 
+/// Synthetic AVIRIS-like cube: strong spectral correlation + spatial
+/// texture (the workload class the paper's Table I row targets).
+/// Deterministic in `seed` — the streaming `ccsds` benchmark derives
+/// its per-frame scenes from this, and the host groundtruth and native
+/// engine must generate byte-identical cubes.
+pub fn synthetic_cube(bands: usize, rows: usize, cols: usize, seed: u64) -> Cube {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0u16; bands * rows * cols];
+    // Base spatial image.
+    let mut base = vec![0f64; rows * cols];
+    for y in 0..rows {
+        for x in 0..cols {
+            base[y * cols + x] = 3000.0
+                + 1500.0 * ((x as f64) * 0.07).sin()
+                + 900.0 * ((y as f64) * 0.05).cos()
+                + 120.0 * rng.normal();
+        }
+    }
+    // Per-band gain/offset (smooth spectrum) + small band noise.
+    for z in 0..bands {
+        let gain = 1.0 + 0.4 * ((z as f64) * 0.12).sin();
+        let offset = 400.0 * ((z as f64) * 0.045).cos();
+        for i in 0..rows * cols {
+            let v = base[i] * gain + offset + 40.0 * rng.normal();
+            data[z * rows * cols + i] = v.clamp(0.0, 65535.0) as u16;
+        }
+    }
+    Cube::new(bands, rows, cols, data).unwrap()
+}
+
+/// Fixed digest width of [`stream_digest`] — sized to one 64x1 Bpp24
+/// output frame of the streaming `ccsds` workload.
+pub const DIGEST_LEN: usize = 64;
+
+/// Largest band count the digest's per-band `(length, crc)` pairs can
+/// carry: 4 summary words + 2 words per band must fit [`DIGEST_LEN`].
+pub const DIGEST_MAX_BANDS: usize = (DIGEST_LEN - 4) / 2;
+
+fn clamp24(v: u64) -> u32 {
+    v.min((1 << 24) - 1) as u32
+}
+
+/// Summarize a v2 (band-parallel) bitstream as [`DIGEST_LEN`] words,
+/// each `< 2^24` so the digest survives a Bpp24 LCD frame *and* an
+/// exact f32 round-trip through the AOT datapath:
+///
+/// `[out_bytes, crc16(all), escapes, bands,
+///   len(band 0), crc16(band 0), len(band 1), crc16(band 1), ..., 0...]`
+///
+/// Shared by the stream host (groundtruth frame) and the native engine
+/// (`ccsds_` artifact), so validation is exact-match.
+pub fn stream_digest(bits: &[u8], stats: &CompressStats) -> Result<Vec<u32>> {
+    if bits.len() < encoder::HEADER_BYTES
+        || &bits[..4] != encoder::MAGIC
+        || bits[4] != encoder::VERSION_PARALLEL
+    {
+        return Err(Error::Ccsds("stream digest requires a v2 bitstream".into()));
+    }
+    let bands = u32::from_be_bytes(bits[5..9].try_into().unwrap()) as usize;
+    if bands > DIGEST_MAX_BANDS {
+        return Err(Error::Ccsds(format!(
+            "digest fits {DIGEST_MAX_BANDS} bands, stream has {bands}"
+        )));
+    }
+    let table = encoder::HEADER_BYTES;
+    let mut offset = table + 4 * bands;
+    if bits.len() < offset {
+        return Err(Error::Ccsds("v2 index table truncated".into()));
+    }
+    let mut d = vec![0u32; DIGEST_LEN];
+    d[0] = clamp24(bits.len() as u64);
+    d[1] = Crc16Xmodem::checksum(bits) as u32;
+    d[2] = clamp24(stats.escapes);
+    d[3] = bands as u32;
+    for z in 0..bands {
+        let at = table + 4 * z;
+        let len = u32::from_be_bytes(bits[at..at + 4].try_into().unwrap()) as usize;
+        let chunk = bits
+            .get(offset..offset + len)
+            .ok_or_else(|| Error::Ccsds(format!("band {z} chunk truncated")))?;
+        d[4 + 2 * z] = clamp24(len as u64);
+        d[5 + 2 * z] = Crc16Xmodem::checksum(chunk) as u32;
+        offset += len;
+    }
+    Ok(d)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
-
-    /// Synthetic AVIRIS-like cube: strong spectral correlation + spatial
-    /// texture (the workload class the paper's Table I row targets).
-    pub fn synthetic_cube(bands: usize, rows: usize, cols: usize, seed: u64) -> Cube {
-        let mut rng = Rng::new(seed);
-        let mut data = vec![0u16; bands * rows * cols];
-        // Base spatial image.
-        let mut base = vec![0f64; rows * cols];
-        for y in 0..rows {
-            for x in 0..cols {
-                base[y * cols + x] = 3000.0
-                    + 1500.0 * ((x as f64) * 0.07).sin()
-                    + 900.0 * ((y as f64) * 0.05).cos()
-                    + 120.0 * rng.normal();
-            }
-        }
-        // Per-band gain/offset (smooth spectrum) + small band noise.
-        for z in 0..bands {
-            let gain = 1.0 + 0.4 * ((z as f64) * 0.12).sin();
-            let offset = 400.0 * ((z as f64) * 0.045).cos();
-            for i in 0..rows * cols {
-                let v = base[i] * gain + offset + 40.0 * rng.normal();
-                data[z * rows * cols + i] = v.clamp(0.0, 65535.0) as u16;
-            }
-        }
-        Cube::new(bands, rows, cols, data).unwrap()
-    }
 
     #[test]
     fn roundtrip_small_cube() {
@@ -90,6 +153,42 @@ mod tests {
         let (bits, _stats) = compress(&cube, Params::default()).unwrap();
         let back = decompress(&bits).unwrap();
         assert_eq!(back, cube);
+    }
+
+    #[test]
+    fn parallel_roundtrip_matches_serial_samples() {
+        let cube = synthetic_cube(8, 16, 16, 1);
+        let (v1, s1) = compress(&cube, Params::default()).unwrap();
+        let (v2, s2) = compress_parallel(&cube, Params::default()).unwrap();
+        assert_eq!(decompress(&v1).unwrap(), cube);
+        assert_eq!(decompress(&v2).unwrap(), cube);
+        // Same residual/coder math per band; only container overhead
+        // (byte padding + the index table) separates the sizes.
+        assert_eq!(s1.escapes, s2.escapes);
+        assert!(s2.out_bytes >= s1.out_bytes);
+        assert!(s2.out_bytes - s1.out_bytes <= 4 + 5 * cube.bands);
+    }
+
+    #[test]
+    fn digest_is_stable_and_v2_only() {
+        let cube = synthetic_cube(4, 12, 12, 7);
+        let (v2, stats) = compress_parallel(&cube, Params::default()).unwrap();
+        let d = stream_digest(&v2, &stats).unwrap();
+        assert_eq!(d.len(), DIGEST_LEN);
+        assert_eq!(d[0], v2.len() as u32);
+        assert_eq!(d[3], 4);
+        assert!(d.iter().all(|&w| w < (1 << 24)));
+        assert_eq!(d, stream_digest(&v2, &stats).unwrap());
+        // Per-band words populated, tail zeroed.
+        assert!(d[4] > 0 && d[6] > 0);
+        assert!(d[4 + 2 * 4..].iter().all(|&w| w == 0));
+        // v1 container refused; corrupt payload changes the digest.
+        let (v1, s1) = compress(&cube, Params::default()).unwrap();
+        assert!(stream_digest(&v1, &s1).is_err());
+        let mut bad = v2.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert_ne!(stream_digest(&bad, &stats).unwrap(), d);
     }
 
     #[test]

@@ -15,6 +15,11 @@ pub enum Benchmark {
     Render,
     /// CNN ship detection: 1 MPixel RGB 16bpp in -> 64x1 labels out.
     CnnShip,
+    /// CCSDS-123 compression: 8-band 256x256 16bpp cube in -> 64x1
+    /// 24bpp bitstream digest out. Not a Table II row (the paper runs
+    /// CCSDS-123 on the FPGA, Table I); promoted here to a streamable
+    /// VPU workload exercising the band-parallel encoder.
+    Ccsds,
 }
 
 /// Frame geometry of one transfer direction.
@@ -52,6 +57,7 @@ impl Benchmark {
             Benchmark::Conv { k } => format!("{k}x{k} FP Convolution"),
             Benchmark::Render => "Depth Rendering".into(),
             Benchmark::CnnShip => "CNN Ship Detection".into(),
+            Benchmark::Ccsds => "CCSDS-123 Compression".into(),
         }
     }
 
@@ -61,6 +67,7 @@ impl Benchmark {
             Benchmark::Conv { k } => BenchKind::Conv { k: *k },
             Benchmark::Render => BenchKind::Render,
             Benchmark::CnnShip => BenchKind::Cnn,
+            Benchmark::Ccsds => BenchKind::Ccsds,
         }
     }
 
@@ -71,6 +78,7 @@ impl Benchmark {
             Benchmark::Conv { k } => format!("conv_1024_k{k}"),
             Benchmark::Render => "render_1024".into(),
             Benchmark::CnnShip => "cnn_frame_1024".into(),
+            Benchmark::Ccsds => "ccsds_256_b8".into(),
         }
     }
 
@@ -100,6 +108,13 @@ impl Benchmark {
                 width: 1024,
                 height: 1024,
                 channels: 3,
+                format: PixelFormat::Bpp16,
+            },
+            // One raw 16-bit plane per spectral band.
+            Benchmark::Ccsds => IoSide {
+                width: 256,
+                height: 256,
+                channels: 8,
                 format: PixelFormat::Bpp16,
             },
         }
@@ -132,6 +147,13 @@ impl Benchmark {
                 channels: 1,
                 format: PixelFormat::Bpp16,
             },
+            // 64-word bitstream digest; every word < 2^24 by design.
+            Benchmark::Ccsds => IoSide {
+                width: 64,
+                height: 1,
+                channels: 1,
+                format: PixelFormat::Bpp24,
+            },
         }
     }
 
@@ -143,6 +165,7 @@ impl Benchmark {
             Benchmark::Conv { .. } => (36, false),
             Benchmark::Render => (32, true),
             Benchmark::CnnShip => (64, true), // 64 patches, queued
+            Benchmark::Ccsds => (8, false),   // one static band per plane
         }
     }
 }
@@ -185,5 +208,17 @@ mod tests {
     fn scheduling_policy_matches_paper() {
         assert_eq!(Benchmark::Binning.bands(), (36, false));
         assert!(Benchmark::Render.bands().1, "render uses the dynamic queue");
+    }
+
+    #[test]
+    fn ccsds_is_streamable_but_not_a_table2_row() {
+        assert!(!Benchmark::table2().contains(&Benchmark::Ccsds));
+        let b = Benchmark::Ccsds;
+        assert_eq!(b.artifact(), "ccsds_256_b8");
+        assert_eq!(b.input().channels, 8);
+        assert_eq!(b.input().format, PixelFormat::Bpp16);
+        assert_eq!(b.output().width, 64);
+        assert_eq!(b.output().format, PixelFormat::Bpp24);
+        assert_eq!(b.bands(), (8, false));
     }
 }

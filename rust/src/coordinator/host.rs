@@ -240,6 +240,42 @@ pub fn make_work_in(
                 labels,
             })
         }
+        Benchmark::Ccsds => {
+            let io = bench.input();
+            let plane_px = io.width * io.height;
+            let cube =
+                crate::compress::synthetic_cube(io.channels, io.height, io.width, seed);
+            // One CIF plane of raw 16-bit samples per spectral band.
+            let mut planes = Vec::with_capacity(io.channels);
+            for z in 0..io.channels {
+                let mut plane = arena.take_u32(plane_px);
+                plane.extend(
+                    cube.data[z * plane_px..][..plane_px].iter().map(|&s| s as u32),
+                );
+                planes.push(Frame::from_data(io.width, io.height, PixelFormat::Bpp16, plane)?);
+            }
+            // The artifact consumes the raw samples as f32 (exact: all
+            // values < 2^16 << 2^24).
+            let mut samples = arena.take_f32(cube.data.len());
+            samples.extend(cube.data.iter().map(|&s| s as f32));
+            // Groundtruth digest of the band-parallel (v2) bitstream.
+            // Compression is integer-exact on every kernel tier and for
+            // every worker count, so validation is exact-match.
+            let (bits, stats) = crate::compress::compress_parallel(
+                &cube,
+                crate::compress::Params::default(),
+            )?;
+            let digest = crate::compress::stream_digest(&bits, &stats)?;
+            let out = bench.output();
+            let expected = Frame::from_data(out.width, out.height, out.format, digest)?;
+            Ok(WorkItem {
+                bench,
+                input_frames: planes,
+                pjrt_inputs: vec![samples],
+                expected,
+                labels: vec![],
+            })
+        }
     }
 }
 
@@ -385,6 +421,24 @@ mod tests {
             let v = validate(&r, &o.expected).unwrap();
             assert!(v.pass, "{bench:?}: {v:?}");
         }
+    }
+
+    #[test]
+    fn ccsds_work_item_self_consistent() {
+        let item = make_work(Benchmark::Ccsds, 11, None, None).unwrap();
+        assert_eq!(item.input_frames.len(), 8);
+        assert_eq!(item.input_frames[0].pixels(), 256 * 256);
+        assert_eq!(item.pjrt_inputs[0].len(), 8 * 256 * 256);
+        assert_eq!(item.expected.pixels(), 64);
+        assert_eq!(item.expected.format, PixelFormat::Bpp24);
+        let v = validate(&item, &item.expected.clone()).unwrap();
+        assert!(v.pass);
+        // validate() tolerates +-1 LSB (the image quantization rule);
+        // a corrupted stream-CRC word lands well past that, so flip
+        // bit 1 (diff of 2) and require failure.
+        let mut bad = item.expected.clone();
+        bad.data[1] ^= 0x2;
+        assert!(!validate(&item, &bad).unwrap().pass);
     }
 
     #[test]

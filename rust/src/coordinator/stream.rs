@@ -226,6 +226,7 @@ pub(crate) fn workload_of(
         Benchmark::Binning => workloads::binning_4mp(),
         Benchmark::Conv { .. } => workloads::conv_1mp(),
         Benchmark::CnnShip => workloads::cnn_1mp(),
+        Benchmark::Ccsds => workloads::ccsds_8band(),
         Benchmark::Render => {
             let mesh = mesh.ok_or_else(|| {
                 Error::Config("render mesh not loaded (run `make artifacts`)".into())
@@ -542,6 +543,12 @@ impl EgressStage {
                     / labels.len() as f64;
                 Frame::from_data(out_io.width, out_io.height, out_io.format, labels)
                     .map(|f| (f, Some(acc)))
+            }
+            Benchmark::Ccsds => {
+                // 64 digest words, each an exact integer < 2^24 in f32.
+                let words: Vec<u32> = outputs[0].iter().map(|&v| v as u32).collect();
+                Frame::from_data(out_io.width, out_io.height, out_io.format, words)
+                    .map(|f| (f, None))
             }
         };
         let (out_frame, accuracy) = match built {

@@ -88,9 +88,10 @@ fn conv2d_rows(
 }
 
 /// Border pixels: clamp the tap window once per pixel instead of
-/// bounds-testing every tap (the reference's per-tap `if`).
+/// bounds-testing every tap (the reference's per-tap `if`). Shared with
+/// the Simd tier (`dsp::simd`), which vectorizes only the interior.
 #[allow(clippy::too_many_arguments)]
-fn conv2d_border_cols(
+pub(crate) fn conv2d_border_cols(
     input: &[f32],
     h: usize,
     w: usize,

@@ -14,12 +14,16 @@
 //!   — interior/border split, contiguous auto-vectorized inner loops and
 //!   multi-core row fan-out — dispatched via [`conv2d`] / [`binning2x2`]
 //!   and pinned to the scalar tier by `tests/kernel_equivalence.rs`.
+//! * **Simd twins** ([`simd`]): the `KernelBackend::Simd` tier —
+//!   explicit eight-lane interior blocks over the same tap order,
+//!   falling back to [`fast`] on degenerate shapes; pinned alongside.
 
 pub mod binning;
 pub mod conv;
 pub mod fast;
 pub mod fir;
 pub mod harris;
+pub mod simd;
 
 use crate::error::Result;
 use crate::KernelBackend;
@@ -36,6 +40,7 @@ pub fn conv2d(
     match backend {
         KernelBackend::Reference => conv::conv2d_f32(input, h, w, kernel, k),
         KernelBackend::Optimized => fast::conv2d_f32_opt(input, h, w, kernel, k),
+        KernelBackend::Simd => simd::conv2d_f32_simd(input, h, w, kernel, k),
     }
 }
 
@@ -44,5 +49,6 @@ pub fn binning2x2(backend: KernelBackend, input: &[f32], h: usize, w: usize) -> 
     match backend {
         KernelBackend::Reference => binning::binning_f32(input, h, w),
         KernelBackend::Optimized => fast::binning_f32_opt(input, h, w),
+        KernelBackend::Simd => simd::binning_f32_simd(input, h, w),
     }
 }

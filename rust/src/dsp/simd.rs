@@ -1,0 +1,198 @@
+//! Explicit-SIMD DSP kernels — the `KernelBackend::Simd` tier for
+//! benchmark 1 (binning) and benchmark 2 (convolution).
+//!
+//! Where the Optimized tier trusts the auto-vectorizer, this tier hands
+//! it fixed eight-lane blocks ([`crate::util::lanes::F32x8`]) with the
+//! tap loop fully unrolled per block — the software shape of a SHAVE
+//! 128-bit VLIW inner loop. Per-element operation order is **identical**
+//! to the Optimized interior (tap-major `u` then `v`, multiply-then-add
+//! per tap), so the Simd interior is bit-identical to Optimized and
+//! carries the same ≤1e-5 relative envelope vs the scalar Reference.
+//!
+//! Fallback rule: shapes whose interior is narrower than one lane block
+//! (degenerate strips, `k >= image`) route to the Optimized tier
+//! wholesale — those rows are border-only work the lane kernels cannot
+//! cover, and the Optimized tier is already pinned on them.
+
+use crate::dsp::fast;
+use crate::error::{Error, Result};
+use crate::util::lanes::{F32x8, LANES};
+use crate::util::par;
+use crate::util::par::GRAIN_OPS;
+
+/// Simd twin of [`crate::dsp::conv::conv2d_f32`]: 'same' 2-D
+/// cross-correlation, zero padding, eight output columns per step.
+pub fn conv2d_f32_simd(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    k: usize,
+) -> Result<Vec<f32>> {
+    if input.len() != h * w {
+        return Err(Error::Geometry("input size mismatch".into()));
+    }
+    if kernel.len() != k * k || k % 2 == 0 {
+        return Err(Error::Geometry(format!("kernel must be odd square, got {k}")));
+    }
+    // Interior narrower than one lane block: nothing to vectorize.
+    if w < k || w - k + 1 < LANES {
+        return fast::conv2d_f32_opt(input, h, w, kernel, k);
+    }
+    let mut out = vec![0f32; h * w];
+    if h == 0 {
+        return Ok(out);
+    }
+    let min_rows = (GRAIN_OPS / (w * k * k).max(1)).max(1);
+    par::par_row_bands(&mut out, h, w, min_rows, |y0, band| {
+        conv2d_rows_simd(input, h, w, kernel, k, y0, band);
+    });
+    Ok(out)
+}
+
+/// Compute output rows `y0 ..` into `band`, interior in 8-lane blocks.
+fn conv2d_rows_simd(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    k: usize,
+    y0: usize,
+    band: &mut [f32],
+) {
+    let p = k / 2;
+    for (r, out_row) in band.chunks_exact_mut(w).enumerate() {
+        let y = y0 + r;
+        if y >= p && y + p < h {
+            fast::conv2d_border_cols(input, h, w, kernel, k, y, 0, p, out_row);
+            fast::conv2d_border_cols(input, h, w, kernel, k, y, w - p, w, out_row);
+            let mid = &mut out_row[p..w - p];
+            let width = mid.len(); // == w - k + 1 >= LANES
+            let blocks = width / LANES;
+            for b in 0..blocks {
+                let x0 = b * LANES;
+                let mut acc = F32x8::zero();
+                for u in 0..k {
+                    let in_row = &input[(y + u - p) * w..][..w];
+                    let krow = &kernel[u * k..][..k];
+                    for (v, &kv) in krow.iter().enumerate() {
+                        acc.acc_scaled(kv, F32x8::load(&in_row[v + x0..]));
+                    }
+                }
+                acc.store(&mut mid[x0..]);
+            }
+            // Non-multiple-of-lane-width tail: scalar, same tap order.
+            for x in blocks * LANES..width {
+                let mut acc = 0f32;
+                for u in 0..k {
+                    let in_row = &input[(y + u - p) * w..][..w];
+                    let krow = &kernel[u * k..][..k];
+                    for (v, &kv) in krow.iter().enumerate() {
+                        acc += kv * in_row[v + x];
+                    }
+                }
+                mid[x] = acc;
+            }
+        } else {
+            fast::conv2d_border_cols(input, h, w, kernel, k, y, 0, w, out_row);
+        }
+    }
+}
+
+/// Simd twin of [`crate::dsp::binning::binning_f32`]: 2x2 averaging in
+/// eight-output blocks, same association order
+/// `(a + b + c + d) * 0.25` per lane — bit-exact with the reference.
+pub fn binning_f32_simd(input: &[f32], h: usize, w: usize) -> Result<Vec<f32>> {
+    if h % 2 != 0 || w % 2 != 0 || input.len() != h * w {
+        return Err(Error::Geometry(format!(
+            "binning needs even HxW matching data; got {h}x{w}, {} samples",
+            input.len()
+        )));
+    }
+    let (oh, ow) = (h / 2, w / 2);
+    if ow < LANES {
+        return fast::binning_f32_opt(input, h, w);
+    }
+    let mut out = vec![0f32; oh * ow];
+    let min_rows = (GRAIN_OPS / w.max(1)).max(1);
+    par::par_row_bands(&mut out, oh, ow, min_rows, |oy0, band| {
+        for (r, orow) in band.chunks_exact_mut(ow).enumerate() {
+            let y = (oy0 + r) * 2;
+            let r0 = &input[y * w..][..w];
+            let r1 = &input[(y + 1) * w..][..w];
+            let blocks = ow / LANES;
+            for b in 0..blocks {
+                let ox0 = b * LANES;
+                // Strided pair loads deinterleave the 2x2 quads into
+                // eight independent lanes; the sum association is the
+                // scalar tiers' exactly.
+                let mut lanes = [0f32; LANES];
+                for (i, o) in lanes.iter_mut().enumerate() {
+                    let x = 2 * (ox0 + i);
+                    *o = (r0[x] + r0[x + 1] + r1[x] + r1[x + 1]) * 0.25;
+                }
+                F32x8(lanes).store(&mut orow[ox0..]);
+            }
+            for ox in blocks * LANES..ow {
+                let x = 2 * ox;
+                orow[ox] = (r0[x] + r0[x + 1] + r1[x] + r1[x + 1]) * 0.25;
+            }
+        }
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{binning, conv};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conv_interior_bit_identical_to_optimized() {
+        let mut rng = Rng::new(21);
+        for (h, w, k) in [(16usize, 24usize, 3usize), (9, 31, 7), (20, 13, 5)] {
+            let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32() - 0.5).collect();
+            let kern: Vec<f32> = (0..k * k).map(|_| rng.next_f32() - 0.5).collect();
+            let o = fast::conv2d_f32_opt(&input, h, w, &kern, k).unwrap();
+            let s = conv2d_f32_simd(&input, h, w, &kern, k).unwrap();
+            for (i, (a, b)) in o.iter().zip(&s).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{h}x{w} k={k} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_degenerate_falls_back_and_matches_reference() {
+        let mut rng = Rng::new(4);
+        for (h, w, k) in [(1usize, 5usize, 7usize), (5, 1, 7), (2, 2, 13), (1, 1, 3)] {
+            let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32()).collect();
+            let kern: Vec<f32> = (0..k * k).map(|_| rng.next_f32()).collect();
+            let r = conv::conv2d_f32(&input, h, w, &kern, k).unwrap();
+            let s = conv2d_f32_simd(&input, h, w, &kern, k).unwrap();
+            for (a, b) in r.iter().zip(&s) {
+                let tol = 1e-5 * (1.0 + a.abs().max(b.abs()));
+                assert!((a - b).abs() <= tol, "{h}x{w} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_rejects_bad_geometry() {
+        assert!(conv2d_f32_simd(&[0.0; 16], 4, 4, &[0.0; 16], 4).is_err());
+        assert!(conv2d_f32_simd(&[0.0; 15], 4, 4, &[0.0; 9], 3).is_err());
+    }
+
+    #[test]
+    fn binning_bit_exact_with_reference_including_tail() {
+        let mut rng = Rng::new(5);
+        // ow = 21: two lane blocks + a 5-wide tail; ow = 4: fallback.
+        for (h, w) in [(12usize, 42usize), (6, 8), (64, 96)] {
+            let input: Vec<f32> = (0..h * w).map(|_| rng.next_f32()).collect();
+            let r = binning::binning_f32(&input, h, w).unwrap();
+            let s = binning_f32_simd(&input, h, w).unwrap();
+            assert_eq!(r, s, "{h}x{w}");
+        }
+        assert!(binning_f32_simd(&[0.0; 6], 2, 3).is_err());
+    }
+}

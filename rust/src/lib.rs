@@ -25,8 +25,9 @@ pub mod util;
 
 /// Which kernel tier executes the DSP/CNN hot paths.
 ///
-/// The crate keeps **two implementations of every hot kernel**, mirroring
-/// the paper's LEON-vs-SHAVE split:
+/// The crate keeps **three implementations of every hot kernel**,
+/// mirroring the paper's LEON-vs-SHAVE split (and the SHAVEs' explicit
+/// 128-bit vector ISA on top of plain loop code):
 ///
 /// * [`KernelBackend::Reference`] — the scalar LEON-baseline code
 ///   (`dsp::conv`, `dsp::binning`, `cnn::layers`). Simple, obviously
@@ -36,10 +37,18 @@ pub mod util;
 ///   checks, contiguous inner loops that LLVM auto-vectorizes, and
 ///   multi-core row fan-out via [`util::par`] (the software analogue of
 ///   the 12-SHAVE band split).
+/// * [`KernelBackend::Simd`] — the explicit-vector tier (`dsp::simd`,
+///   `cnn::simd`, the widened CRC slicing kernel): fixed
+///   8-lane `[f32; 8]` structs with unrolled arithmetic
+///   ([`util::lanes`]), stable-toolchain only. Per-kernel fallback to
+///   the Optimized tier on shapes the lane kernels do not cover
+///   (degenerate interiors); lane arithmetic keeps the scalar tiers'
+///   per-element operation order, so the f32 kernels are bit-identical
+///   to Optimized and the integer kernels bit-identical to Reference.
 ///
-/// `tests/kernel_equivalence.rs` pins `Optimized == Reference` on
-/// randomized inputs (exact for integer/CRC/width kernels, ≤1e-5
-/// relative for f32 conv/CNN).
+/// `tests/kernel_equivalence.rs` pins `Optimized == Reference` and
+/// `Simd == Reference` on randomized inputs (exact for
+/// integer/CRC/width kernels, ≤1e-5 relative for f32 conv/CNN).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum KernelBackend {
     /// Scalar LEON-baseline kernels — the pinned groundtruth.
@@ -47,19 +56,24 @@ pub enum KernelBackend {
     /// Interior/border-split, auto-vectorized, multi-core fan-out tier.
     #[default]
     Optimized,
+    /// Explicit fixed-lane vector tier; falls back to `Optimized`
+    /// per-kernel where lanes do not apply.
+    Simd,
 }
 
 impl KernelBackend {
     /// Select from `SPACECODESIGN_BACKEND` (case-insensitive
     /// `reference`/`ref` forces the scalar tier, `optimized`/`opt` the
-    /// fast tier), defaulting to [`KernelBackend::Optimized`]. An
-    /// unrecognized value warns on stderr rather than silently running
-    /// the wrong tier in a strict-pinning run.
+    /// fast tier, `simd` the explicit-lane tier), defaulting to
+    /// [`KernelBackend::Optimized`]. An unrecognized value warns on
+    /// stderr rather than silently running the wrong tier in a
+    /// strict-pinning run.
     pub fn from_env() -> KernelBackend {
         match std::env::var("SPACECODESIGN_BACKEND") {
             Ok(v) => match v.to_ascii_lowercase().as_str() {
                 "reference" | "ref" => KernelBackend::Reference,
                 "optimized" | "opt" => KernelBackend::Optimized,
+                "simd" => KernelBackend::Simd,
                 other => {
                     eprintln!(
                         "warning: unrecognized SPACECODESIGN_BACKEND='{other}', \
@@ -76,6 +90,7 @@ impl KernelBackend {
         match self {
             KernelBackend::Reference => "reference",
             KernelBackend::Optimized => "optimized",
+            KernelBackend::Simd => "simd",
         }
     }
 }

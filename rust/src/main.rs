@@ -68,13 +68,18 @@ COMMANDS:
   speedups   LEON baseline vs 12xSHAVE speedups (paper §IV)
   fig5       power consumption + FPS/W comparisons (paper Fig. 5)
   loopback   CIF/LCD interface feasibility sweep (paper §IV)
-  run        one benchmark end-to-end: --bench binning|conv3|conv7|conv13|render|cnn
+  run        one benchmark end-to-end:
+             --bench binning|conv3|conv7|conv13|render|cnn|ccsds
   stream     N-frame streaming pipeline sweep on both kernel backends:
              [--bench NAME] [--frames N] [--depth D] — reports per-stage
              (CIF/VPU/LCD) utilization vs the Masked DES prediction;
              [--vpus N] [--sched rr|lld] dispatches frames across an
              N-node VPU topology (env: SPACECODESIGN_VPUS; rr =
              round-robin, lld = least-outstanding-frames);
+             [--backend ref|opt|simd] runs one kernel tier instead of
+             the ref+opt sweep; [--workers N] caps the worker pool.
+             Both mirror env vars (SPACECODESIGN_BACKEND,
+             SPACECODESIGN_WORKERS) and the env var wins when set;
              [--inject RATE] [--fault-seed N] adds seeded wire faults
              with CRC-triggered retransmission + per-frame containment
   compress   CCSDS-123 compression demo: [--bands Z] [--rows Y] [--cols X]
@@ -278,6 +283,16 @@ fn parse_bench(name: &str) -> Option<Benchmark> {
         "conv13" => Benchmark::Conv { k: 13 },
         "render" => Benchmark::Render,
         "cnn" => Benchmark::CnnShip,
+        "ccsds" => Benchmark::Ccsds,
+        _ => return None,
+    })
+}
+
+fn parse_backend(name: &str) -> Option<KernelBackend> {
+    Some(match name {
+        "ref" | "reference" => KernelBackend::Reference,
+        "opt" | "optimized" => KernelBackend::Optimized,
+        "simd" => KernelBackend::Simd,
         _ => return None,
     })
 }
@@ -306,6 +321,32 @@ fn run_stream(args: &[String]) -> Result<()> {
     let frames = flag_usize(args, "--frames").unwrap_or(8);
     let depth = flag_usize(args, "--depth").unwrap_or(1);
     let vpus = flag_usize(args, "--vpus").unwrap_or_else(vpus_from_env);
+    // --workers mirrors SPACECODESIGN_WORKERS; the env var wins so a CI
+    // matrix leg's setting can't be overridden by a stray flag.
+    if let Some(w) = flag_usize(args, "--workers") {
+        if std::env::var("SPACECODESIGN_WORKERS").is_ok() {
+            eprintln!("note: SPACECODESIGN_WORKERS is set; ignoring --workers {w}");
+        } else {
+            spacecodesign::util::par::set_max_workers(w);
+        }
+    }
+    // --backend mirrors SPACECODESIGN_BACKEND (env wins, same rule).
+    // An explicit tier replaces the default reference+optimized sweep.
+    let mut backends = vec![KernelBackend::Reference, KernelBackend::Optimized];
+    if std::env::var("SPACECODESIGN_BACKEND").is_ok() {
+        if let Some(b) = flag_str(args, "--backend") {
+            eprintln!("note: SPACECODESIGN_BACKEND is set; ignoring --backend {b}");
+        }
+        backends = vec![KernelBackend::from_env()];
+    } else if let Some(b) = flag_str(args, "--backend") {
+        match parse_backend(b) {
+            Some(k) => backends = vec![k],
+            None => {
+                eprintln!("unknown backend '{b}' (ref | opt | simd)");
+                std::process::exit(2);
+            }
+        }
+    }
     let sched = match flag_str(args, "--sched") {
         None => SchedPolicy::default(),
         Some(s) => match SchedPolicy::parse(s) {
@@ -354,7 +395,16 @@ fn run_stream(args: &[String]) -> Result<()> {
         .faults
         .as_ref()
         .is_some_and(|f| f.config().frame_rate > 0.0);
-    for backend in [KernelBackend::Reference, KernelBackend::Optimized] {
+    println!(
+        "effective settings: backends [{}]  workers {}",
+        backends
+            .iter()
+            .map(|b| b.name())
+            .collect::<Vec<_>>()
+            .join(", "),
+        spacecodesign::util::par::max_workers()
+    );
+    for backend in backends {
         cp.backend = backend;
         let r = stream::run(&mut cp, &opts)?;
         println!("{}", report::stream_summary(&r));
@@ -403,6 +453,17 @@ fn run_compress(args: &[String]) -> Result<()> {
         stats.bits_per_sample,
         cube.samples() as f64 / dt / 1e6,
         if back == cube { "EXACT" } else { "FAILED" }
+    );
+    let t1 = std::time::Instant::now();
+    let (bits2, stats2) = compress::compress_parallel(&cube, compress::Params::default())?;
+    let dt2 = t1.elapsed().as_secs_f64();
+    let back2 = compress::decompress(&bits2)?;
+    println!(
+        "  band-parallel v2: out {} B  ratio {:.2}x  {:.2} Msamples/s  roundtrip {}",
+        stats2.out_bytes,
+        stats2.ratio,
+        cube.samples() as f64 / dt2 / 1e6,
+        if back2 == cube { "EXACT" } else { "FAILED" }
     );
     Ok(())
 }

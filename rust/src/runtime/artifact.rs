@@ -222,6 +222,11 @@ impl Manifest {
                 ("scalar_artifact", Json::Str("cnn_frame_b1".into())),
             ],
         );
+        // CCSDS-123 band-parallel compression: 8-band 256x256 cube of
+        // exact-integer samples in, 64-word bitstream digest out. Native
+        // engine only (no HLO behind it) — compression is integer code
+        // XLA does not express.
+        add("ccsds_256_b8", &[&[8, 256, 256]], &[&[64]], &[]);
         Manifest {
             dir: dir.to_path_buf(),
             artifacts,
@@ -309,9 +314,13 @@ mod tests {
             "cnn_frame_b4",
             "cnn_patch_b1",
             "cnn_patch_b64",
+            "ccsds_256_b8",
         ] {
             assert!(m.get(name).is_ok(), "{name} missing from builtin set");
         }
+        let ccsds = m.get("ccsds_256_b8").unwrap();
+        assert_eq!(ccsds.inputs[0].shape, vec![8, 256, 256]);
+        assert_eq!(ccsds.outputs[0].numel(), 64);
         let b64 = m.get("cnn_patch_b64").unwrap();
         assert_eq!(b64.meta_usize("batch"), Some(64));
         assert_eq!(b64.inputs[0].numel(), 64 * 128 * 128 * 3);

@@ -232,6 +232,28 @@ impl NativeEngine {
                 },
             )?;
             out.push(logits);
+        } else if name.starts_with("ccsds_") {
+            // Band-parallel CCSDS-123: rebuild the u16 cube from the
+            // exact-integer f32 samples, compress with the v2 (chunked)
+            // container, and return the 64-word stream digest. Integer
+            // end to end, so every kernel tier and worker count yields
+            // the same digest as the host groundtruth.
+            let shape = &spec.inputs[0].shape;
+            if shape.len() != 3 {
+                return Err(Error::Validation(format!(
+                    "{name}: input expected 3-D (bands, rows, cols), got {:?}",
+                    shape
+                )));
+            }
+            let (bands, rows, cols) = (shape[0], shape[1], shape[2]);
+            let data: Vec<u16> = inputs[0].iter().map(|&v| v as u16).collect();
+            let cube = crate::compress::Cube::new(bands, rows, cols, data)?;
+            let (bits, stats) = crate::compress::compress_parallel(
+                &cube,
+                crate::compress::Params::default(),
+            )?;
+            let digest = crate::compress::stream_digest(&bits, &stats)?;
+            out.push(digest.iter().map(|&w| w as f32).collect());
         } else {
             return Err(Error::UnknownArtifact(format!(
                 "{name} (not executable by the native engine)"
@@ -349,6 +371,22 @@ mod tests {
         let gt = render::depth_render(&tris, 128, 128);
         assert_eq!(out[0], gt);
         assert!(render::raster::coverage(&gt) > 100, "model not visible");
+    }
+
+    #[test]
+    fn ccsds_matches_direct_compress_call() {
+        let (mut eng, m) = engine_and_manifest();
+        let cube = crate::compress::synthetic_cube(8, 256, 256, 17);
+        let x: Vec<f32> = cube.data.iter().map(|&s| s as f32).collect();
+        let mut out = Vec::new();
+        eng.execute(m.get("ccsds_256_b8").unwrap(), &[&x], &mut out).unwrap();
+        let (bits, stats) =
+            crate::compress::compress_parallel(&cube, crate::compress::Params::default())
+                .unwrap();
+        let gt = crate::compress::stream_digest(&bits, &stats).unwrap();
+        assert_eq!(out[0].len(), crate::compress::DIGEST_LEN);
+        let words: Vec<u32> = out[0].iter().map(|&v| v as u32).collect();
+        assert_eq!(words, gt);
     }
 
     #[test]

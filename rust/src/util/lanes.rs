@@ -1,0 +1,114 @@
+//! Fixed-width lane structs for the explicit-SIMD kernel tier
+//! (`KernelBackend::Simd`).
+//!
+//! The pinned 1.85.0 toolchain has no stable `std::simd`, so the Simd
+//! tier is built on plain `[f32; 8]` lane structs whose operations are
+//! fully unrolled fixed-trip loops — the pattern LLVM reliably lowers
+//! to 256-bit vector code on x86_64 and NEON pairs on aarch64, with a
+//! scalar lowering everywhere else (so no runtime feature detection is
+//! required for correctness; the struct is the *contract* that the
+//! eight lanes are independent).
+//!
+//! Every operation keeps **scalar f32 semantics per lane** — in
+//! particular [`F32x8::acc_scaled`] is a separate multiply then add,
+//! never a fused multiply-add — so a lane kernel that replays the
+//! scalar tier's per-element operation order produces bit-identical
+//! results to that tier.
+
+/// Lane count shared by every Simd-tier kernel (256-bit f32 vectors).
+pub const LANES: usize = 8;
+
+/// Eight independent f32 lanes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    #[inline(always)]
+    pub fn zero() -> F32x8 {
+        F32x8([0.0; LANES])
+    }
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    /// Load the first `LANES` elements of `src` (panics if shorter).
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> F32x8 {
+        let mut v = [0f32; LANES];
+        v.copy_from_slice(&src[..LANES]);
+        F32x8(v)
+    }
+
+    /// Store into the first `LANES` elements of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// `self[i] += s * o[i]` per lane — multiply **then** add (two
+    /// rounding steps, exactly like the scalar tiers; no FMA).
+    #[inline(always)]
+    pub fn acc_scaled(&mut self, s: f32, o: F32x8) {
+        for i in 0..LANES {
+            self.0[i] += s * o.0[i];
+        }
+    }
+
+    /// Lane-wise `self[i] += o[i]`.
+    #[inline(always)]
+    pub fn add_assign(&mut self, o: F32x8) {
+        for i in 0..LANES {
+            self.0[i] += o.0[i];
+        }
+    }
+
+    /// Lane-wise `max` — same semantics as scalar `f32::max`.
+    #[inline(always)]
+    pub fn max(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for i in 0..LANES {
+            v[i] = v[i].max(o.0[i]);
+        }
+        F32x8(v)
+    }
+
+    /// Lane-wise ReLU (`max(0.0)`), matching scalar `f32::max(0.0)`.
+    #[inline(always)]
+    pub fn relu(self) -> F32x8 {
+        self.max(F32x8::zero())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acc_scaled_matches_scalar_sequence() {
+        let mut acc = F32x8::splat(0.5);
+        let src = F32x8([1.0, -2.0, 3.5, 0.0, 1e-3, 7.0, -0.25, 2.0]);
+        acc.acc_scaled(0.3, src);
+        for i in 0..LANES {
+            let mut s = 0.5f32;
+            s += 0.3 * src.0[i];
+            assert_eq!(acc.0[i].to_bits(), s.to_bits(), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn load_store_roundtrip_and_max() {
+        let data = [9.0, -1.0, 2.0, 3.0, -4.0, 5.0, 0.0, 8.0];
+        let v = F32x8::load(&data);
+        let mut out = [0f32; LANES];
+        v.store(&mut out);
+        assert_eq!(out, data);
+        let m = v.max(F32x8::splat(1.5));
+        for i in 0..LANES {
+            assert_eq!(m.0[i], data[i].max(1.5), "lane {i}");
+        }
+        let r = F32x8([-1.0, 2.0, -3.0, 4.0, -5.0, 6.0, -7.0, 0.0]).relu();
+        assert_eq!(r.0, [0.0, 2.0, 0.0, 4.0, 0.0, 6.0, 0.0, 0.0]);
+    }
+}

@@ -8,6 +8,7 @@
 pub mod arena;
 pub mod image;
 pub mod json;
+pub mod lanes;
 pub mod par;
 pub mod propcheck;
 pub mod rng;

@@ -70,6 +70,8 @@ impl PowerModel {
             }
             BenchKind::Render => (0.93, 0.55),
             BenchKind::Cnn => (0.97, 0.70),
+            // Integer predict/code: steady streaming reads, byte writes.
+            BenchKind::Ccsds => (0.90, 0.85),
         };
         Activity {
             leon_duty: 0.25,
@@ -87,6 +89,7 @@ impl PowerModel {
             BenchKind::Conv { .. } => 0.45,
             BenchKind::Render => 0.5,
             BenchKind::Cnn => 0.6,
+            BenchKind::Ccsds => 0.7,
         };
         Activity {
             leon_duty: 1.0,
@@ -120,6 +123,7 @@ mod tests {
             BenchKind::Conv { k: 13 },
             BenchKind::Render,
             BenchKind::Cnn,
+            BenchKind::Ccsds,
         ]
     }
 

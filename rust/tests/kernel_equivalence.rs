@@ -1,14 +1,16 @@
-//! Pins every `KernelBackend::Optimized` kernel to its `Reference` twin
-//! on randomized inputs (ISSUE 1 acceptance): **exact** for the
-//! integer / CRC / width-FSM paths, **≤1e-5 relative** for the f32
-//! conv/CNN paths, across randomized shapes including border-heavy
-//! degenerate images (1xN, Nx1, kernel ≥ image size).
+//! Pins every `KernelBackend::Optimized` and `KernelBackend::Simd`
+//! kernel to its `Reference` twin on randomized inputs (ISSUE 1 + PR 6
+//! acceptance): **exact** for the integer / CRC / width-FSM paths,
+//! **≤1e-5 relative** for the f32 conv/CNN paths, across randomized
+//! shapes including border-heavy degenerate images (1xN, Nx1, kernel ≥
+//! image size) and interiors that are not a multiple of the 8-wide
+//! lane block (the Simd tier's scalar-tail path).
 
 use spacecodesign::cnn::fast as cnn_fast;
 use spacecodesign::cnn::layers::{self, FeatureMap};
 use spacecodesign::cnn::weights::Weights;
 use spacecodesign::compress::{compress, decompress, Cube, Params};
-use spacecodesign::dsp::{binning, conv, fast as dsp_fast};
+use spacecodesign::dsp::{binning, conv, fast as dsp_fast, simd as dsp_simd};
 use spacecodesign::fabric::crc16::Crc16Xmodem;
 use spacecodesign::fabric::width;
 use spacecodesign::runtime::Runtime;
@@ -61,6 +63,39 @@ fn prop_binning_optimized_is_bit_exact() {
 }
 
 #[test]
+fn prop_conv2d_simd_matches_reference() {
+    // Same envelope as the Optimized pin, via the public dispatcher so
+    // the per-kernel fallback rule (interior < 8 lanes -> Optimized) is
+    // exercised too: degenerate strips fall back, wide shapes run the
+    // lane kernel, and widths with `(w - k + 1) % 8 != 0` cover the
+    // scalar tail.
+    check("conv2d simd == ref", 64, |g: &mut Gen| {
+        let (h, w) = image_shape(g);
+        let k = *g.choose(&[1usize, 3, 5, 7, 9, 13]);
+        let input: Vec<f32> = (0..h * w).map(|_| g.f32() - 0.5).collect();
+        let kernel: Vec<f32> = (0..k * k).map(|_| g.f32() - 0.5).collect();
+        let r = conv::conv2d_f32(&input, h, w, &kernel, k).unwrap();
+        let s = dsp::conv2d(KernelBackend::Simd, &input, h, w, &kernel, k).unwrap();
+        all_close(&r, &s)
+    });
+}
+
+#[test]
+fn prop_binning_simd_is_bit_exact() {
+    // The lane kernel keeps the scalar association order, so the Simd
+    // tier is exact, not merely close — including the `ow < 8` fallback
+    // widths and tails where `ow % 8 != 0`.
+    check("binning simd == ref (exact)", 64, |g: &mut Gen| {
+        let h = 2 * (1 + g.int_in(0, 31));
+        let w = 2 * (1 + g.int_in(0, 31));
+        let input: Vec<f32> = (0..h * w).map(|_| g.f32()).collect();
+        let r = binning::binning_f32(&input, h, w).unwrap();
+        let s = dsp::binning2x2(KernelBackend::Simd, &input, h, w).unwrap();
+        r == s
+    });
+}
+
+#[test]
 fn prop_backend_dispatch_routes_both_tiers() {
     // The dispatchers must agree with their direct twins.
     let mut rng = Rng::new(77);
@@ -73,6 +108,22 @@ fn prop_backend_dispatch_routes_both_tiers() {
     let rb = dsp::binning2x2(KernelBackend::Reference, &input, 24, 20).unwrap();
     let ob = dsp::binning2x2(KernelBackend::Optimized, &input, 24, 20).unwrap();
     assert_eq!(rb, ob);
+    // Third tier: the Simd dispatcher arm must hit the lane kernel
+    // (interior 16 >= 8 here) and agree with its direct twin bitwise;
+    // the lane interior replays the Optimized op order, so it also
+    // matches Optimized bit-for-bit on this non-fallback shape.
+    let s = dsp::conv2d(KernelBackend::Simd, &input, 24, 20, &kern, 5).unwrap();
+    let sd = dsp_simd::conv2d_f32_simd(&input, 24, 20, &kern, 5).unwrap();
+    assert_eq!(
+        s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        sd.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        o.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    let sb = dsp::binning2x2(KernelBackend::Simd, &input, 24, 20).unwrap();
+    assert_eq!(rb, sb);
 }
 
 #[test]
@@ -132,6 +183,38 @@ fn cnn_forward_optimized_matches_reference_end_to_end() {
     }
     // Argmax (the downlinked label) must agree exactly.
     assert_eq!(r[1] > r[0], o[1] > o[0]);
+}
+
+#[test]
+fn cnn_forward_simd_matches_reference_bit_for_bit() {
+    // The Simd conv lanes replay the scalar reference's accumulation
+    // order exactly and the dense layers are the shared scalar code, so
+    // the whole forward pass is pinned bitwise, not just ≤1e-5.
+    let weights = Weights::synthetic_ship(123);
+    let mut rng = Rng::new(9);
+    let chip = FeatureMap::from_data(
+        128,
+        128,
+        3,
+        (0..128 * 128 * 3).map(|_| rng.next_f32()).collect(),
+    )
+    .unwrap();
+    let r = layers::cnn_forward(&weights, &chip).unwrap();
+    let s = spacecodesign::cnn::forward(KernelBackend::Simd, &weights, &chip).unwrap();
+    for (i, (a, b)) in r.iter().zip(&s).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i}: {r:?} vs {s:?}");
+    }
+}
+
+#[test]
+fn prop_crc16_simd_matches_bitwise_reference() {
+    // Value-identical across lengths that land on every tail size of
+    // the lane-unrolled slicer, including empty input.
+    check("crc16 simd == bitwise (exact)", 96, |g: &mut Gen| {
+        let len = g.int_in(0, 300);
+        let data = g.bytes(len);
+        Crc16Xmodem::checksum_simd(&data) == Crc16Xmodem::checksum_bitwise(&data)
+    });
 }
 
 #[test]
