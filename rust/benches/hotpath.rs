@@ -31,7 +31,7 @@ use spacecodesign::vpu::scheduler::SchedPolicy;
 use spacecodesign::cnn::weights::Weights;
 use spacecodesign::cnn::{cnn_forward, fast as cnn_fast};
 use spacecodesign::compress::{compress, Cube, Params};
-use spacecodesign::coordinator::{stream, Benchmark, CoProcessor, StreamOptions};
+use spacecodesign::coordinator::{stream, Benchmark, CoProcessor, StreamOptions, TrafficConfig};
 use spacecodesign::dsp::{binning, conv, fast as dsp_fast};
 use spacecodesign::fabric::crc16::Crc16Xmodem;
 use spacecodesign::fabric::width;
@@ -360,13 +360,9 @@ fn main() {
             // (injection is benched separately, in the row below).
             cp.faults = None;
             for n in [1usize, 8, 64] {
-                let opts = StreamOptions {
-                    bench: Benchmark::Conv { k: 3 },
-                    frames: n,
-                    seed: 42,
-                    depth: 1,
-                    sched: SchedPolicy::RoundRobin,
-                };
+                let opts = StreamOptions::builder(Benchmark::Conv { k: 3 })
+                    .frames(n)
+                    .build();
                 // 1 warmup + 3 samples: the median (middle sample) has
                 // to be stable enough for the CI perf gate.
                 let sweep = |cp: &mut CoProcessor, backend| {
@@ -395,13 +391,7 @@ fn main() {
             // numerics are integer-exact on every tier; the tiers still
             // sweep so the rows expose any dispatch-layer regression.
             for n in [1usize, 8, 64] {
-                let opts = StreamOptions {
-                    bench: Benchmark::Ccsds,
-                    frames: n,
-                    seed: 42,
-                    depth: 1,
-                    sched: SchedPolicy::RoundRobin,
-                };
+                let opts = StreamOptions::builder(Benchmark::Ccsds).frames(n).build();
                 let sweep = |cp: &mut CoProcessor, backend| {
                     cp.backend = backend;
                     bench(1, 3, || {
@@ -429,18 +419,28 @@ fn main() {
             use spacecodesign::iface::fault::{FaultConfig, FaultPlan};
             cp.backend = KernelBackend::Optimized;
             cp.faults = Some(FaultPlan::new(FaultConfig::new(42, 0.3)));
-            let opts = StreamOptions {
-                bench: Benchmark::Conv { k: 3 },
-                frames: 8,
-                seed: 42,
-                depth: 1,
-                sched: SchedPolicy::RoundRobin,
-            };
+            let opts = StreamOptions::builder(Benchmark::Conv { k: 3 }).frames(8).build();
             let s = bench(1, 3, || {
                 std::hint::black_box(stream::run(&mut cp, &opts).unwrap());
             });
             log.push("stream conv3 N=8 (inject 0.3)", &s);
             cp.faults = None;
+
+            // --- streaming under stochastic load (ISSUE 7) -----------
+            // New row (non-gating until it lands on main): a seeded
+            // Poisson front end with bounded admission over the same
+            // conv3 sweep — the delta vs `stream conv3 N=64` prices the
+            // traffic harness itself (virtual event loop + queueing),
+            // not the kernels.
+            cp.backend = KernelBackend::Optimized;
+            let opts = StreamOptions::builder(Benchmark::Conv { k: 3 })
+                .sched(SchedPolicy::LeastLoaded)
+                .traffic(TrafficConfig::poisson(Benchmark::Conv { k: 3 }, 64, 12.0))
+                .build();
+            let s = bench(1, 3, || {
+                std::hint::black_box(stream::run(&mut cp, &opts).unwrap());
+            });
+            log.push("stream conv3 N=64 traffic=poisson", &s);
         }
     }
 
@@ -460,13 +460,9 @@ fn main() {
                 Ok(mut cp) => {
                     cp.faults = None;
                     cp.backend = KernelBackend::Optimized;
-                    let opts = StreamOptions {
-                        bench: Benchmark::Conv { k: 3 },
-                        frames: n,
-                        seed: 42,
-                        depth: 1,
-                        sched: SchedPolicy::RoundRobin,
-                    };
+                    let opts = StreamOptions::builder(Benchmark::Conv { k: 3 })
+                        .frames(n)
+                        .build();
                     let s = bench(1, 3, || {
                         std::hint::black_box(stream::run(&mut cp, &opts).unwrap());
                     });

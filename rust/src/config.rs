@@ -135,6 +135,184 @@ impl SystemConfig {
     }
 }
 
+/// Where a resolved runtime setting's value came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SettingSource {
+    /// An explicit CLI flag — highest precedence.
+    Cli,
+    /// A `SPACECODESIGN_*` environment variable.
+    Env,
+    /// The built-in default.
+    Default,
+}
+
+impl SettingSource {
+    /// Lowercase label for the provenance line.
+    pub fn name(self) -> &'static str {
+        match self {
+            SettingSource::Cli => "cli",
+            SettingSource::Env => "env",
+            SettingSource::Default => "default",
+        }
+    }
+}
+
+/// A resolved value tagged with its provenance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Setting<T> {
+    pub value: T,
+    pub source: SettingSource,
+}
+
+impl<T> Setting<T> {
+    /// A value set by a CLI flag.
+    pub fn cli(value: T) -> Setting<T> {
+        Setting { value, source: SettingSource::Cli }
+    }
+
+    /// A value read from the environment.
+    pub fn env(value: T) -> Setting<T> {
+        Setting { value, source: SettingSource::Env }
+    }
+
+    /// The built-in default.
+    pub fn fallback(value: T) -> Setting<T> {
+        Setting { value, source: SettingSource::Default }
+    }
+}
+
+/// CLI-side overrides feeding [`ResolvedConfig::resolve`] — `None`
+/// fields fall through to the environment, then the default.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CliOverrides {
+    pub backend: Option<crate::KernelBackend>,
+    pub workers: Option<usize>,
+    pub vpus: Option<usize>,
+    pub fault_seed: Option<u64>,
+    pub fault_rate: Option<f64>,
+}
+
+/// The one resolved runtime configuration (ISSUE 7 satellite): every
+/// `SPACECODESIGN_BACKEND`/`WORKERS`/`VPUS`/`FAULT_SEED`/`FAULT_RATE`
+/// knob read **once**, with documented precedence **CLI > env >
+/// default**, instead of scattered per-call lookups inside library
+/// code. `main` constructs it once (from its flags) and prints
+/// [`ResolvedConfig::summary`] once per stream run; library callers
+/// with no CLI use [`ResolvedConfig::from_env`].
+#[derive(Clone, Debug)]
+pub struct ResolvedConfig {
+    /// Kernel tier (`SPACECODESIGN_BACKEND`; default `Optimized`).
+    pub backend: Setting<crate::KernelBackend>,
+    /// Worker-pool cap (`SPACECODESIGN_WORKERS`; default `None` =
+    /// auto-size from the core count).
+    pub workers: Setting<Option<usize>>,
+    /// Topology size (`SPACECODESIGN_VPUS`; default 1, clamped to
+    /// `1..=MAX_VPUS` like the historical env read).
+    pub vpus: Setting<usize>,
+    /// Fault-injection seed (`SPACECODESIGN_FAULT_SEED`; default
+    /// `None` = injection off).
+    pub fault_seed: Setting<Option<u64>>,
+    /// Per-frame fault rate (`SPACECODESIGN_FAULT_RATE`; default 0.02,
+    /// mirroring `FaultPlan::from_env`). Only meaningful with a seed.
+    pub fault_rate: Setting<f64>,
+}
+
+impl ResolvedConfig {
+    /// Resolve with CLI overrides: CLI > `SPACECODESIGN_*` env >
+    /// default.
+    pub fn resolve(cli: &CliOverrides) -> ResolvedConfig {
+        Self::resolve_with(cli, |k| std::env::var(k).ok())
+    }
+
+    /// Resolve from the environment alone (library callers, tests).
+    pub fn from_env() -> ResolvedConfig {
+        Self::resolve(&CliOverrides::default())
+    }
+
+    /// The resolution core, with the environment abstracted so tests
+    /// can exercise precedence without mutating process state.
+    fn resolve_with(
+        cli: &CliOverrides,
+        env: impl Fn(&str) -> Option<String>,
+    ) -> ResolvedConfig {
+        let backend = match cli.backend {
+            Some(b) => Setting::cli(b),
+            None => match env("SPACECODESIGN_BACKEND")
+                .and_then(|v| crate::KernelBackend::parse(&v))
+            {
+                Some(b) => Setting::env(b),
+                None => Setting::fallback(crate::KernelBackend::default()),
+            },
+        };
+        let workers = match cli.workers {
+            Some(w) => Setting::cli(Some(w)),
+            None => match env("SPACECODESIGN_WORKERS").and_then(|v| v.parse::<usize>().ok()) {
+                Some(w) => Setting::env(Some(w)),
+                None => Setting::fallback(None),
+            },
+        };
+        let vpus = match cli.vpus {
+            Some(v) => Setting::cli(v),
+            None => match env("SPACECODESIGN_VPUS").and_then(|v| v.parse::<usize>().ok()) {
+                Some(v) => Setting::env(v.clamp(1, crate::coordinator::system::MAX_VPUS)),
+                None => Setting::fallback(1),
+            },
+        };
+        let fault_seed = match cli.fault_seed {
+            Some(s) => Setting::cli(Some(s)),
+            None => match env("SPACECODESIGN_FAULT_SEED").and_then(|v| v.parse::<u64>().ok()) {
+                Some(s) => Setting::env(Some(s)),
+                None => Setting::fallback(None),
+            },
+        };
+        let fault_rate = match cli.fault_rate {
+            Some(r) => Setting::cli(r),
+            None => match env("SPACECODESIGN_FAULT_RATE").and_then(|v| v.parse::<f64>().ok()) {
+                Some(r) => Setting::env(r),
+                None => Setting::fallback(0.02),
+            },
+        };
+        ResolvedConfig { backend, workers, vpus, fault_seed, fault_rate }
+    }
+
+    /// The fault configuration this resolution implies (`None` when no
+    /// seed is set — injection off).
+    pub fn fault_config(&self) -> Option<crate::iface::fault::FaultConfig> {
+        self.fault_seed
+            .value
+            .map(|seed| crate::iface::fault::FaultConfig::new(seed, self.fault_rate.value))
+    }
+
+    /// The fault plan this resolution implies.
+    pub fn fault_plan(&self) -> Option<crate::iface::fault::FaultPlan> {
+        self.fault_config().map(crate::iface::fault::FaultPlan::new)
+    }
+
+    /// One provenance line for the stream summary: every knob's value
+    /// and where it came from.
+    pub fn summary(&self) -> String {
+        let workers = match self.workers.value {
+            Some(n) => n.to_string(),
+            None => "auto".to_string(),
+        };
+        let faults = match self.fault_seed.value {
+            Some(seed) => format!("seed {seed} rate {}", self.fault_rate.value),
+            None => "off".to_string(),
+        };
+        format!(
+            "config: backend {} [{}] | workers {} [{}] | vpus {} [{}] | faults {} [{}]",
+            self.backend.value.name(),
+            self.backend.source.name(),
+            workers,
+            self.workers.source.name(),
+            self.vpus.value,
+            self.vpus.source.name(),
+            faults,
+            self.fault_seed.source.name(),
+        )
+    }
+}
+
 /// Resolve the artifacts directory: $SPACECODESIGN_ARTIFACTS, else
 /// ./artifacts relative to the crate root (where `make artifacts` puts it).
 pub fn default_artifacts_dir() -> String {
@@ -195,5 +373,53 @@ mod tests {
         let v = VpuConfig::myriad2();
         let t = (1024.0 * 1024.0) / v.dram_copy_mpx_per_s;
         assert!((t - 0.042).abs() < 0.001, "copy time {t}");
+    }
+
+    #[test]
+    fn resolved_config_precedence_cli_over_env_over_default() {
+        let env = |k: &str| match k {
+            "SPACECODESIGN_BACKEND" => Some("simd".to_string()),
+            "SPACECODESIGN_VPUS" => Some("4".to_string()),
+            _ => None,
+        };
+        let cli = CliOverrides {
+            backend: Some(crate::KernelBackend::Reference),
+            ..Default::default()
+        };
+        let rc = ResolvedConfig::resolve_with(&cli, env);
+        assert_eq!(rc.backend.value, crate::KernelBackend::Reference);
+        assert_eq!(rc.backend.source, SettingSource::Cli, "CLI beats env");
+        assert_eq!(rc.vpus.value, 4);
+        assert_eq!(rc.vpus.source, SettingSource::Env, "env beats default");
+        assert_eq!(rc.workers.value, None);
+        assert_eq!(rc.workers.source, SettingSource::Default);
+        assert!((rc.fault_rate.value - 0.02).abs() < 1e-12);
+        assert!(rc.fault_config().is_none(), "no seed, no injection");
+    }
+
+    #[test]
+    fn resolved_config_clamps_env_vpus_and_builds_fault_plans() {
+        let env = |k: &str| match k {
+            "SPACECODESIGN_VPUS" => Some("999".to_string()),
+            "SPACECODESIGN_FAULT_SEED" => Some("17".to_string()),
+            "SPACECODESIGN_FAULT_RATE" => Some("0.3".to_string()),
+            _ => None,
+        };
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), env);
+        assert_eq!(rc.vpus.value, crate::coordinator::system::MAX_VPUS);
+        let fc = rc.fault_config().unwrap();
+        assert_eq!(fc.seed, 17);
+        assert!((fc.frame_rate - 0.3).abs() < 1e-12);
+        assert!(rc.fault_plan().is_some());
+    }
+
+    #[test]
+    fn resolved_config_summary_names_every_source() {
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), |_| None);
+        let s = rc.summary();
+        assert!(s.contains("backend optimized [default]"), "{s}");
+        assert!(s.contains("workers auto [default]"), "{s}");
+        assert!(s.contains("vpus 1 [default]"), "{s}");
+        assert!(s.contains("faults off [default]"), "{s}");
     }
 }

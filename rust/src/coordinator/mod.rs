@@ -12,11 +12,17 @@
 //! * [`pipeline`] — the Masked-mode discrete-event pipeline simulation
 //!   (double-buffered, LEON0 = I/O, LEON1 = compute), plus the
 //!   per-node-to-system merge (`merge_masked`).
-//! * [`stream`] — the streaming multi-frame pipeline: a dispatch stage
-//!   routes frames across the VPU nodes (round-robin or least-loaded),
-//!   and each node overlaps its three frame stages (CIF ingest, VPU
-//!   execute, LCD egress) on worker threads for sustained-traffic
-//!   sweeps, with per-stage utilization reported alongside the Masked
+//! * [`traffic`] — the constellation traffic harness (ISSUE 7):
+//!   seeded stochastic arrival processes (Poisson bursts, orbital
+//!   duty cycles), concurrent sensor clients, priority classes,
+//!   bounded admission with drop/degrade policies, and the
+//!   virtual-time event loop that owns every frame's lifecycle.
+//! * [`stream`] — the streaming multi-frame pipeline: the event loop
+//!   schedules frames across the VPU nodes (round-robin or
+//!   earliest-free with priorities), and each node overlaps its three
+//!   frame stages (CIF ingest, VPU execute, LCD egress) on worker
+//!   threads for sustained-traffic sweeps, with per-stage utilization
+//!   and virtual p50/p99/p999 latency reported alongside the Masked
 //!   DES prediction.
 //! * [`report`] — Table II / speedup / Fig. 5 / stream formatting.
 //! * [`comparators`] — the cited Zynq-7020 / Jetson Nano comparison
@@ -29,8 +35,12 @@ pub mod pipeline;
 pub mod report;
 pub mod stream;
 pub mod system;
+pub mod traffic;
 
 pub use benchmarks::Benchmark;
 pub use pipeline::{merge_masked, simulate_masked, MaskedResult, MaskedTiming};
-pub use stream::{StreamOptions, StreamResult};
+pub use stream::{StreamOptions, StreamOptionsBuilder, StreamResult};
 pub use system::{CoProcessor, FrameRun, VpuNode};
+pub use traffic::{
+    AdmitPolicy, ArrivalProcess, SensorClient, TrafficClass, TrafficConfig, TrafficReport,
+};

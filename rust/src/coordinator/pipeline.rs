@@ -45,7 +45,10 @@ pub struct MaskedResult {
     /// First frame completion time.
     pub first_latency: SimTime,
     /// Average per-frame latency in steady state (input-ready to
-    /// LCD-complete, including pipeline queueing).
+    /// LCD-complete, including pipeline queueing). The traffic
+    /// harness prints its virtual p50/p99/p999 sojourn percentiles
+    /// next to this figure — same service model, saturated arrivals
+    /// here vs stochastic arrivals there.
     pub avg_latency: SimTime,
     /// Steady-state inter-completion period.
     pub period: SimTime,

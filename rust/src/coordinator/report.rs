@@ -125,8 +125,10 @@ pub fn hop_fault_rows(rows: &[crate::iface::fault::HopFaultStats]) -> String {
 /// Multi-line summary of a streaming sweep: measured pipeline numbers,
 /// per-stage utilization, the Masked DES prediction (per node and, on
 /// a multi-node topology, merged to the system level with the dispatch
-/// shares), and — under fault injection — the per-node
-/// wire-fault/retransmission/containment counters.
+/// shares), the traffic-harness block when stochastic load was on
+/// (admission counters, virtual p50/p99/p999 sojourn next to the
+/// Masked DES average, per-class lines), and — under fault injection —
+/// the per-node wire-fault/retransmission/containment counters.
 pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
     let valid = r
         .runs
@@ -171,6 +173,35 @@ pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
             crate::util::fmt_time(r.stage_busy[i].as_secs_f64()),
             r.stage_util[i] * 100.0,
         ));
+    }
+    if let Some(t) = &r.traffic {
+        out.push_str(&format!(
+            "  traffic: {} generated, {} served ({} dropped, {} degraded), \
+             {} executed\n",
+            t.generated, t.served, t.dropped, t.degraded, t.executed,
+        ));
+        out.push_str(&format!(
+            "  latency p50 {}  p99 {}  p999 {}  (masked-DES avg {})  \
+             span {:.3}s  {:.1} virtual FPS\n",
+            ms(t.latency.p50),
+            ms(t.latency.p99),
+            ms(t.latency.p999),
+            ms(r.masked.avg_latency),
+            t.span.as_secs(),
+            t.virtual_fps,
+        ));
+        for c in &t.per_class {
+            out.push_str(&format!(
+                "    class {:<8} {} generated, {} served, {} dropped, \
+                 {} degraded, p50 {}\n",
+                c.class.name(),
+                c.generated,
+                c.served,
+                c.dropped,
+                c.degraded,
+                ms(c.p50),
+            ));
+        }
     }
     out.push_str(&format!(
         "  arena: {} buffer takes, {} recycled ({:.0}% reuse)\n",
@@ -306,6 +337,7 @@ mod tests {
             retransmits: 0,
             faults: crate::iface::fault::FaultStats::default(),
             hop_faults: vec![],
+            traffic: None,
         };
         let s = stream_summary(&r);
         assert!(s.contains("CIF ingest"), "{s}");
@@ -322,6 +354,103 @@ mod tests {
         assert!(
             !s.contains("topology:"),
             "topology line only appears with vpus > 1: {s}"
+        );
+        assert!(
+            !s.contains("traffic:"),
+            "traffic block only appears with stochastic load: {s}"
+        );
+    }
+
+    #[test]
+    fn stream_summary_renders_traffic_block() {
+        use crate::coordinator::stream::StreamResult;
+        use crate::coordinator::traffic::{
+            ClassStats, LatencyStats, TrafficClass, TrafficReport,
+        };
+        use crate::coordinator::Benchmark;
+        use std::time::Duration;
+        let masked = MaskedResult {
+            first_latency: SimTime::from_ms(300.0),
+            avg_latency: SimTime::from_ms(336.0),
+            period: SimTime::from_ms(126.0),
+            throughput_fps: 7.9,
+            frames: 8,
+        };
+        let traffic = TrafficReport {
+            generated: 48,
+            served: 41,
+            executed: 6,
+            dropped: 7,
+            degraded: 2,
+            latency: LatencyStats {
+                p50: SimTime::from_ms(52.0),
+                p99: SimTime::from_ms(210.0),
+                p999: SimTime::from_ms(260.0),
+                mean: SimTime::from_ms(80.0),
+                max: SimTime::from_ms(260.0),
+            },
+            span: SimTime::from_secs(4.0),
+            virtual_fps: 10.3,
+            per_class: vec![
+                ClassStats {
+                    class: TrafficClass::Alert,
+                    generated: 8,
+                    served: 8,
+                    dropped: 0,
+                    degraded: 0,
+                    p50: SimTime::from_ms(48.0),
+                },
+                ClassStats {
+                    class: TrafficClass::Bulk,
+                    generated: 40,
+                    served: 33,
+                    dropped: 7,
+                    degraded: 2,
+                    p50: SimTime::from_ms(61.0),
+                },
+            ],
+            fates: vec![],
+        };
+        let r = StreamResult {
+            bench: Benchmark::Conv { k: 3 },
+            backend: crate::KernelBackend::Optimized,
+            frames: 48,
+            vpus: 1,
+            sched: crate::vpu::scheduler::SchedPolicy::LeastLoaded,
+            per_node_frames: vec![41],
+            wall: Duration::from_millis(100),
+            wall_fps: 20.0,
+            stage_busy: [Duration::from_millis(10); 3],
+            stage_util: [0.1; 3],
+            exec_wall: Duration::from_millis(25),
+            arena: crate::util::arena::ArenaStats {
+                reused: 9,
+                allocated: 3,
+            },
+            masked_system: masked.clone(),
+            masked,
+            runs: vec![dummy_run()],
+            frame_errors: vec![],
+            retransmits: 0,
+            faults: crate::iface::fault::FaultStats::default(),
+            hop_faults: vec![],
+            traffic: Some(traffic),
+        };
+        let s = stream_summary(&r);
+        assert!(
+            s.contains("traffic: 48 generated, 41 served (7 dropped, 2 degraded), 6 executed"),
+            "{s}"
+        );
+        assert!(
+            s.contains("latency p50 52ms  p99 210ms  p999 260ms  (masked-DES avg 336ms)"),
+            "{s}"
+        );
+        assert!(s.contains("span 4.000s  10.3 virtual FPS"), "{s}");
+        assert!(s.contains("class alert"), "{s}");
+        assert!(s.contains("class bulk"), "{s}");
+        assert!(
+            s.contains("40 generated, 33 served, 7 dropped, 2 degraded, p50 61ms"),
+            "{s}"
         );
     }
 
@@ -398,6 +527,7 @@ mod tests {
                 hop(crate::iface::fault::Hop::Cif(0), 3, 8, 5),
                 hop(crate::iface::fault::Hop::Cif(1), 2, 4, 2),
             ],
+            traffic: None,
         };
         let s = stream_summary(&r);
         assert!(s.contains("faults: 5/12 transfers hit"), "{s}");

@@ -1,42 +1,58 @@
 //! Streaming multi-frame pipeline — sustained traffic through the
-//! testbed, with a dispatch stage routing frames across the VPU
-//! topology (ISSUE 5) and, per node, the three stages of the paper's
-//! Masked mode running concurrently on real threads:
+//! testbed, redesigned around an event-driven dispatcher (ISSUE 7).
 //!
-//! * **dispatch** — the framing processor's routing decision: which
-//!   node ingests frame i, per the configured [`SchedPolicy`]
-//!   (round-robin or least-outstanding-frames);
-//! * **CIF ingest** — host workload generation + groundtruth + the CIF
-//!   wire transfer of frame n+1 into the node,
-//! * **VPU execute** — artifact numerics (PJRT or native) + cost-model
-//!   timing of frame n,
-//! * **LCD egress** — output conversion, LCD wire transfer and host
-//!   validation of frame n-1.
+//! A sweep now runs in two phases:
 //!
-//! Each node runs its own three-stage lane over bounded queues
-//! (depth 1 = the VPU's double-buffered DRAM slots), so an N-node
-//! topology streams N frames genuinely concurrently. Alongside the
-//! wallclock numbers the result carries the Masked-mode DES prediction
-//! (`simulate_masked`) per node, merged into a system-level
-//! throughput (`masked_system`), so the measured pipeline can be
-//! compared against the paper's §IV timing model scaled the way the
-//! MPAI follow-up scales accelerators.
+//! 1. **Virtual-time event loop** ([`crate::coordinator::traffic`]):
+//!    sensor clients emit frames under seeded arrival processes
+//!    (backlog, Poisson bursts, orbital duty cycles); bounded
+//!    admission queues apply the drop/degrade policy; and the
+//!    dispatcher assigns each admitted frame to a VPU node per the
+//!    configured [`SchedPolicy`] — static round-robin, or
+//!    earliest-free-node with strict priority classes. Every frame's
+//!    lifecycle (arrival → admitted → dispatched → egressed, or
+//!    dropped) is decided here, deterministically, with virtual
+//!    dispatch/egress times priced by the same CIF + SHAVE + LCD
+//!    chain the Masked DES uses.
+//! 2. **Real execution**: per node, the three stages of the paper's
+//!    Masked mode run concurrently on real threads over bounded
+//!    queues (depth 1 = the VPU's double-buffered DRAM slots) —
+//!    **CIF ingest** (host workload generation + groundtruth + wire
+//!    transfer in), **VPU execute** (artifact numerics + cost-model
+//!    timing), **LCD egress** (output conversion, wire transfer out,
+//!    host validation). Each lane executes exactly the frames the
+//!    event loop assigned it, in the scheduled order (a long-soak
+//!    sweep may sample only every k-th frame for real execution).
+//!
+//! With traffic off the schedule degenerates to the legacy fixed
+//! sweep — all frames backlogged at t=0, frame `i` on seed
+//! `seed + i` — so the traffic-off path is bit-exact with the
+//! pre-ISSUE-7 stream on every topology.
+//!
+//! Alongside the wallclock numbers the result carries the Masked-mode
+//! DES prediction (`simulate_masked`) per node, merged into a
+//! system-level throughput (`masked_system`), and — when traffic is
+//! on — a [`TrafficReport`] with per-class accounting and virtual
+//! p50/p99/p999 sojourn latency next to that DES prediction.
 //!
 //! The single-frame Unmasked path (`CoProcessor::run_unmasked`) is
 //! built from the same stage implementations run back-to-back on
 //! node 0, so streamed frames and one-shot frames are bit-identical
-//! per seed — on any topology size, because fault draws and numerics
-//! are node-independent by construction.
+//! per seed — on any topology size and under any dispatch order,
+//! because fault draws and numerics are keyed by frame seed, never by
+//! execution order or node.
 
 use crate::config::{SystemConfig, VpuConfig};
 use crate::coordinator::benchmarks::Benchmark;
 use crate::coordinator::host::{self, WorkItem};
 use crate::coordinator::pipeline::{merge_masked, simulate_masked, MaskedResult, MaskedTiming};
 use crate::coordinator::system::{CoProcessor, FrameRun, VpuNode};
+use crate::coordinator::traffic::{self, TrafficConfig, TrafficReport};
 use crate::error::{Error, Result};
-use crate::fabric::clock::SimTime;
-use crate::iface::fault::{self, FaultPlan, FaultStats, Hop, HopFaultStats};
+use crate::fabric::clock::{ClockDomain, SimTime};
+use crate::iface::fault::{self, FaultConfig, FaultPlan, FaultStats, Hop, HopFaultStats};
 use crate::iface::lcd::RxReport;
+use crate::iface::timing;
 use crate::iface::{CifModule, LcdModule};
 use crate::render::Mesh;
 use crate::runtime::Runtime;
@@ -49,14 +65,25 @@ use crate::vpu::scheduler::{self, SchedPolicy};
 use crate::KernelBackend;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Configuration of one streaming sweep.
-#[derive(Clone, Copy, Debug)]
+/// Configuration of one streaming sweep. Build via
+/// [`StreamOptions::builder`]:
+///
+/// ```
+/// use spacecodesign::coordinator::{Benchmark, StreamOptions};
+/// let opts = StreamOptions::builder(Benchmark::Conv { k: 3 })
+///     .frames(16)
+///     .seed(7)
+///     .build();
+/// assert_eq!(opts.frames, 16);
+/// ```
+#[derive(Clone, Debug)]
 pub struct StreamOptions {
     pub bench: Benchmark,
-    /// Frames in the sweep; frame i uses seed `seed + i`.
+    /// Frames in the sweep when no traffic config is attached; frame i
+    /// uses seed `seed + i`. With a traffic config the clients' frame
+    /// counts rule and this field is ignored.
     pub frames: usize,
     pub seed: u64,
     /// Bounded queue depth between adjacent stages of each node lane
@@ -65,17 +92,118 @@ pub struct StreamOptions {
     /// Frame-dispatch policy across the VPU nodes (ignored on a
     /// single-node topology, where both policies degenerate to FIFO).
     pub sched: SchedPolicy,
+    /// Kernel tier for this sweep (`None` = the `CoProcessor`'s).
+    pub backend: Option<KernelBackend>,
+    /// Worker-pool cap applied at run start via
+    /// `util::par::set_max_workers` (`None` = leave the pool as-is).
+    pub workers: Option<usize>,
+    /// Expected topology size: [`run`] rejects a `CoProcessor` whose
+    /// node count differs (`None` = accept any).
+    pub vpus: Option<usize>,
+    /// Per-sweep fault plan, overriding the `CoProcessor`'s
+    /// (`None` = use the topology's plan, if any).
+    pub fault: Option<FaultConfig>,
+    /// Traffic front end (ISSUE 7): stochastic arrivals, priority
+    /// classes, bounded admission. `None` = the legacy backlog sweep
+    /// of `frames` identical frames.
+    pub traffic: Option<TrafficConfig>,
 }
 
 impl StreamOptions {
-    pub fn new(bench: Benchmark, frames: usize) -> StreamOptions {
-        StreamOptions {
-            bench,
-            frames,
-            seed: 42,
-            depth: 1,
-            sched: SchedPolicy::RoundRobin,
+    /// Start building a sweep configuration for `bench`. Defaults:
+    /// 8 frames, seed 42, stage depth 1, round-robin dispatch, no
+    /// backend/workers/vpus/fault overrides, traffic off.
+    pub fn builder(bench: Benchmark) -> StreamOptionsBuilder {
+        StreamOptionsBuilder {
+            opts: StreamOptions {
+                bench,
+                frames: 8,
+                seed: 42,
+                depth: 1,
+                sched: SchedPolicy::RoundRobin,
+                backend: None,
+                workers: None,
+                vpus: None,
+                fault: None,
+                traffic: None,
+            },
         }
+    }
+
+    /// Legacy positional constructor.
+    #[deprecated(note = "use StreamOptions::builder(bench).frames(n).build()")]
+    pub fn new(bench: Benchmark, frames: usize) -> StreamOptions {
+        StreamOptions::builder(bench).frames(frames).build()
+    }
+}
+
+/// Chainable builder for [`StreamOptions`] — the one configuration
+/// surface for the stream (ISSUE 7 satellite), replacing positional
+/// params plus field pokes.
+#[derive(Clone, Debug)]
+pub struct StreamOptionsBuilder {
+    opts: StreamOptions,
+}
+
+impl StreamOptionsBuilder {
+    /// Frames in the sweep (ignored once a traffic config is set).
+    pub fn frames(mut self, n: usize) -> Self {
+        self.opts.frames = n;
+        self
+    }
+
+    /// Base seed; frame i uses `seed + i`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts.seed = seed;
+        self
+    }
+
+    /// Inter-stage queue depth per node lane.
+    pub fn depth(mut self, depth: usize) -> Self {
+        self.opts.depth = depth;
+        self
+    }
+
+    /// Frame-dispatch policy across the VPU nodes.
+    pub fn sched(mut self, sched: SchedPolicy) -> Self {
+        self.opts.sched = sched;
+        self
+    }
+
+    /// Kernel-tier override for this sweep.
+    pub fn backend(mut self, backend: KernelBackend) -> Self {
+        self.opts.backend = Some(backend);
+        self
+    }
+
+    /// Cap the worker pool for this sweep.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.opts.workers = Some(n);
+        self
+    }
+
+    /// Require a topology of exactly `n` nodes.
+    pub fn vpus(mut self, n: usize) -> Self {
+        self.opts.vpus = Some(n);
+        self
+    }
+
+    /// Per-sweep fault plan override.
+    pub fn fault(mut self, cfg: FaultConfig) -> Self {
+        self.opts.fault = Some(cfg);
+        self
+    }
+
+    /// Attach a traffic front end (stochastic arrivals, classes,
+    /// bounded admission — see [`TrafficConfig`]).
+    pub fn traffic(mut self, cfg: TrafficConfig) -> Self {
+        self.opts.traffic = Some(cfg);
+        self
+    }
+
+    /// Finish building.
+    pub fn build(self) -> StreamOptions {
+        self.opts
     }
 }
 
@@ -153,6 +281,10 @@ pub struct StreamResult {
     /// The same counters attributed per (node, direction) — Table II's
     /// fault appendix rows (ISSUE 5 satellite; empty without faults).
     pub hop_faults: Vec<HopFaultStats>,
+    /// Traffic-harness report (arrival accounting, drops/degrades,
+    /// per-class breakdown, virtual p50/p99/p999 sojourn latency) —
+    /// `Some` only when the sweep ran with a traffic config.
+    pub traffic: Option<TrafficReport>,
 }
 
 impl StreamResult {
@@ -681,123 +813,42 @@ impl EgressStage {
     }
 }
 
-/// The dispatch stage's shared state: hands each node lane its next
-/// frame index per the policy.
-///
-/// Round-robin needs no shared state at all (frame `i` -> node
-/// `i % N`, each lane walks its own arithmetic sequence), which is
-/// what makes it bit-deterministic. Least-loaded gates each take on
-/// the lane being (one of) the nodes with the fewest outstanding
-/// frames, so an idle node always wins the next frame — no node can
-/// starve, even when another node is stuck retransmitting through a
-/// fault storm.
-struct Dispatcher {
-    frames: usize,
-    nodes: usize,
-    policy: SchedPolicy,
-    state: Mutex<LldState>,
-    ready: Condvar,
-}
-
-#[derive(Debug)]
-struct LldState {
-    next: usize,
-    outstanding: Vec<usize>,
-    dispatched: Vec<usize>,
-}
-
-impl Dispatcher {
-    fn new(frames: usize, nodes: usize, policy: SchedPolicy) -> Dispatcher {
-        Dispatcher {
-            frames,
-            nodes,
-            policy,
-            state: Mutex::new(LldState {
-                next: 0,
-                outstanding: vec![0; nodes],
-                dispatched: vec![0; nodes],
-            }),
-            ready: Condvar::new(),
-        }
-    }
-
-    /// The next frame for `lane` (`k` = how many the lane already
-    /// took), or `None` when the sweep is exhausted for it.
-    fn next(&self, lane: usize, k: usize) -> Option<usize> {
-        match self.policy {
-            SchedPolicy::RoundRobin => {
-                let i = lane + k * self.nodes;
-                (i < self.frames).then_some(i)
-            }
-            SchedPolicy::LeastLoaded => {
-                let mut s = self.state.lock().unwrap();
-                loop {
-                    if s.next >= self.frames {
-                        return None;
-                    }
-                    let min = *s.outstanding.iter().min().expect("nodes >= 1");
-                    if s.outstanding[lane] == min {
-                        let i = s.next;
-                        s.next += 1;
-                        s.outstanding[lane] += 1;
-                        s.dispatched[lane] += 1;
-                        drop(s);
-                        // A take can make another waiting lane the new
-                        // minimum (it isn't, but it can tie) — wake the
-                        // waiters to re-check.
-                        self.ready.notify_all();
-                        return Some(i);
-                    }
-                    // Bounded wait: completions notify, but a stalled
-                    // peer must not wedge the dispatcher — re-check
-                    // periodically and the policy degrades to greedy
-                    // pull instead of deadlocking.
-                    let wait = Duration::from_millis(50);
-                    let (guard, timeout) = self.ready.wait_timeout(s, wait).unwrap();
-                    s = guard;
-                    if timeout.timed_out() && s.next < self.frames {
-                        let i = s.next;
-                        s.next += 1;
-                        s.outstanding[lane] += 1;
-                        s.dispatched[lane] += 1;
-                        return Some(i);
-                    }
-                }
-            }
-        }
-    }
-
-    /// A frame dispatched to `lane` finished (delivered or contained).
-    fn complete(&self, lane: usize) {
-        if self.policy == SchedPolicy::LeastLoaded {
-            let mut s = self.state.lock().unwrap();
-            s.outstanding[lane] -= 1;
-            drop(s);
-            self.ready.notify_all();
-        }
-    }
-
-    /// Frames dispatched to each node over the whole sweep.
-    fn dispatched(&self) -> Vec<usize> {
-        match self.policy {
-            SchedPolicy::RoundRobin => (0..self.nodes)
-                .map(|l| scheduler::rr_share(self.frames, self.nodes, l))
-                .collect(),
-            SchedPolicy::LeastLoaded => self.state.lock().unwrap().dispatched.clone(),
-        }
-    }
-}
-
-/// Run a streaming multi-frame sweep: the dispatch stage routes frames
-/// across the topology, and each node overlaps its three stages on
-/// worker threads.
+/// Run a streaming multi-frame sweep: the virtual-time event loop
+/// ([`traffic::build_schedule`]) decides every frame's fate —
+/// admission, node assignment, dispatch order, virtual timings — and
+/// then each node's three-stage lane executes its assigned frames on
+/// worker threads, in exactly the scheduled order.
 pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
-    if opts.frames == 0 {
-        return Err(Error::Config("stream needs at least one frame".into()));
+    if let Some(expect) = opts.vpus {
+        if expect != cp.vpus() {
+            return Err(Error::Config(format!(
+                "stream options expect a {expect}-node topology, this CoProcessor has {}",
+                cp.vpus()
+            )));
+        }
     }
-    let backend = cp.backend;
+    if let Some(w) = opts.workers {
+        crate::util::par::set_max_workers(w);
+    }
+    let backend = opts.backend.unwrap_or(cp.backend);
     let bench = opts.bench;
-    let n = opts.frames;
+    // Traffic off = the legacy fixed sweep, expressed as a backlog
+    // schedule (every frame queued at t=0, unbounded admission, one
+    // standard-class camera) — the degenerate case that keeps the
+    // traffic-off path bit-exact with the pre-ISSUE-7 stream.
+    let backlog;
+    let tcfg: &TrafficConfig = match &opts.traffic {
+        Some(t) => t,
+        None => {
+            if opts.frames == 0 {
+                return Err(Error::Config("stream needs at least one frame".into()));
+            }
+            backlog = TrafficConfig::backlog(bench, opts.frames);
+            &backlog
+        }
+    };
+    tcfg.validate()?;
+    let local_faults = opts.fault.map(FaultPlan::new);
     let CoProcessor {
         cfg,
         nodes,
@@ -805,12 +856,44 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         ..
     } = cp;
     let cfg: &SystemConfig = cfg;
-    let faults: Option<&FaultPlan> = faults.as_ref();
+    let faults: Option<&FaultPlan> = local_faults.as_ref().or(faults.as_ref());
     let n_nodes = nodes.len();
     let depth = opts.depth.max(1);
     for node in nodes.iter_mut() {
         node.runtime.set_kernel_backend(backend);
     }
+
+    // Phase 1 — the event loop. Each frame's virtual service time is
+    // the same fault-free chain the Unmasked path measures (CIF wire
+    // in + scheduled SHAVE makespan + LCD wire out), priced off node
+    // 0's cost model — the topology is homogeneous.
+    let schedule = {
+        let node0 = &nodes[0];
+        let cif_clk = ClockDomain::new(cfg.cif.pixel_clock_hz);
+        let lcd_clk = ClockDomain::new(cfg.lcd.pixel_clock_hz);
+        let service = |b: Benchmark, seed: u64| -> SimTime {
+            let (i, o) = (b.input(), b.output());
+            let t_cif = timing::planes_time(
+                &cif_clk,
+                i.width,
+                i.height,
+                i.channels,
+                cfg.cif.porch_cycles_per_line,
+            );
+            let t_lcd = timing::frame_time(
+                &lcd_clk,
+                o.width,
+                o.height,
+                cfg.lcd.porch_cycles_per_line,
+            );
+            let t_proc =
+                proc_time_of(&node0.cost, &cfg.vpu, node0.ingest.mesh.as_ref(), b, seed)
+                    .unwrap_or(SimTime::ZERO);
+            t_cif + t_proc + t_lcd
+        };
+        traffic::build_schedule(tcfg, opts.seed, n_nodes, opts.sched, service)
+    };
+    let n = schedule.generated;
     let arena_stats0: Vec<ArenaStats> = nodes.iter().map(|v| v.arena.stats()).collect();
     let fstats0 = faults.map(|f| f.stats()).unwrap_or_default();
     let hop_stats0 = faults.map(|f| f.per_hop_stats()).unwrap_or_default();
@@ -822,7 +905,8 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         slot.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     };
 
-    let dispatch = Dispatcher::new(n, n_nodes, opts.sched);
+    // Phase 2 — real execution. `slots` is indexed by global arrival
+    // order; dropped and virtual-only frames leave their slot empty.
     let mut slots: Vec<Option<Result<FrameRun>>> = (0..n).map(|_| None).collect();
 
     let t_start = Instant::now();
@@ -842,31 +926,31 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
             let cost: &CostModel = cost;
             let power: &PowerModel = power;
             let arena: &FrameArena = arena;
-            let dispatch = &dispatch;
+            let lane_frames: &[traffic::ScheduledFrame] = &schedule.per_node[lane];
             let busy = &busy;
             let timed = &timed;
             let (tx1, rx1) = mpsc::sync_channel::<(usize, Result<StreamJob>)>(depth);
             let (tx2, rx2) = mpsc::sync_channel::<(usize, Result<ExecutedJob>)>(depth);
             let tx_res = tx_res.clone();
 
-            // Lane stage 1: dispatch + host generation + CIF ingest.
+            // Lane stage 1: host generation + CIF ingest of this
+            // node's scheduled frames, in dispatch order (a soak
+            // schedule may mark some frames virtual-only).
             s.spawn(move || {
-                let mut k = 0usize;
-                while let Some(i) = dispatch.next(lane, k) {
-                    k += 1;
+                for sf in lane_frames.iter().filter(|f| f.execute) {
                     let t0 = Instant::now();
                     let job = ingest.run(
                         backend,
                         cost,
                         &cfg.vpu,
-                        bench,
-                        opts.seed.wrapping_add(i as u64),
+                        sf.bench,
+                        sf.seed,
                         arena,
                         faults,
                     );
                     timed(&busy[0], t0);
                     // Receiver gone (downstream panic): stop producing.
-                    if tx1.send((i, job)).is_err() {
+                    if tx1.send((sf.index, job)).is_err() {
                         break;
                     }
                 }
@@ -902,7 +986,6 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
                         }
                         Err(e) => Err(e),
                     };
-                    dispatch.complete(lane);
                     if tx_res.send((i, r)).is_err() {
                         break;
                     }
@@ -910,9 +993,9 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
             });
         }
         drop(tx_res);
-        // Collector: ends when every lane's sender is gone — exactly n
-        // messages in a healthy sweep, fewer only if a lane panicked
-        // (the scope join below re-raises that panic).
+        // Collector: ends when every lane's sender is gone — exactly
+        // one message per executed frame in a healthy sweep, fewer
+        // only if a lane panicked (the scope join re-raises that).
         while let Ok((i, r)) = rx_res.recv() {
             slots[i] = Some(r);
         }
@@ -922,20 +1005,23 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
     // Per-frame error containment (ISSUE 4): a failed frame is
     // recorded — its buffers were already recycled by the stage it
     // died in — and the sweep's remaining frames stand on their own.
+    // An empty slot is a frame no lane ran: dropped at admission, or
+    // virtual-only under soak sampling.
     let mut runs = Vec::with_capacity(n);
     let mut frame_errors = Vec::new();
     for (i, slot) in slots.into_iter().enumerate() {
-        let r = slot.expect("every dispatched frame reports a result");
-        match r {
-            Ok(run) => runs.push(run),
-            Err(error) => frame_errors.push(FrameError {
+        match slot {
+            None => {}
+            Some(Ok(run)) => runs.push(run),
+            Some(Err(error)) => frame_errors.push(FrameError {
                 frame: i,
                 seed: opts.seed.wrapping_add(i as u64),
                 error,
             }),
         }
     }
-    let per_node_frames = dispatch.dispatched();
+    let per_node_frames: Vec<usize> =
+        schedule.per_node.iter().map(|v| v.len()).collect();
 
     // The paper's single-node Masked DES, from the sweep's first
     // delivered frame (unchanged by the topology)...
@@ -988,6 +1074,10 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
     let hop_faults = faults
         .map(|f| fault::hop_deltas(&f.per_hop_stats(), &hop_stats0))
         .unwrap_or_default();
+    // The report is user-facing only when the caller asked for
+    // traffic; the legacy sweep keeps its result shape (and summary)
+    // unchanged.
+    let traffic = opts.traffic.as_ref().map(|_| schedule.into_report());
     Ok(StreamResult {
         bench,
         backend,
@@ -1008,5 +1098,6 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         retransmits: fstats.retransmits,
         faults: fstats,
         hop_faults,
+        traffic,
     })
 }

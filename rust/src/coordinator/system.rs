@@ -184,14 +184,10 @@ pub struct CoProcessor {
 }
 
 /// Topology size from `SPACECODESIGN_VPUS` (default 1, the paper's
-/// point-to-point system). Read per construction, not cached — tests
-/// and the CLI override via [`CoProcessor::with_vpus`] anyway.
+/// point-to-point system).
+#[deprecated(note = "resolved centrally by config::ResolvedConfig (vpus knob)")]
 pub fn vpus_from_env() -> usize {
-    std::env::var("SPACECODESIGN_VPUS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .map(|n| n.clamp(1, MAX_VPUS))
-        .unwrap_or(1)
+    crate::config::ResolvedConfig::from_env().vpus.value
 }
 
 /// Upper bound on the topology size — each node owns a runtime and an
@@ -199,15 +195,18 @@ pub fn vpus_from_env() -> usize {
 pub const MAX_VPUS: usize = 32;
 
 impl CoProcessor {
-    /// Build the testbed with the topology size from the environment
-    /// (`SPACECODESIGN_VPUS`, default 1).
-    pub fn new(cfg: SystemConfig) -> Result<CoProcessor> {
-        CoProcessor::with_vpus(cfg, vpus_from_env())
-    }
-
-    /// Build the testbed with an explicit number of VPU nodes.
-    pub fn with_vpus(cfg: SystemConfig, vpus: usize) -> Result<CoProcessor> {
+    /// Build the testbed from a [`crate::config::ResolvedConfig`] —
+    /// the one construction path (ISSUE 7 satellite): backend,
+    /// topology size, and fault plan all come from the resolution
+    /// (CLI > env > default), with no direct env reads here. The
+    /// worker-pool cap is *not* applied — that is a process-wide
+    /// side effect the binary owns (`util::par::set_max_workers`).
+    pub fn from_config(
+        cfg: SystemConfig,
+        rc: &crate::config::ResolvedConfig,
+    ) -> Result<CoProcessor> {
         cfg.validate()?;
+        let vpus = rc.vpus.value;
         if vpus == 0 || vpus > MAX_VPUS {
             return Err(Error::Config(format!(
                 "topology needs 1..={MAX_VPUS} VPU nodes, got {vpus}"
@@ -218,11 +217,26 @@ impl CoProcessor {
             nodes.push(VpuNode::new(i, &cfg)?);
         }
         Ok(CoProcessor {
-            backend: KernelBackend::from_env(),
-            faults: FaultPlan::from_env(),
+            backend: rc.backend.value,
+            faults: rc.fault_plan(),
             cfg,
             nodes,
         })
+    }
+
+    /// Build the testbed with every knob from the environment
+    /// (`SPACECODESIGN_VPUS`/`BACKEND`/`FAULT_*`, via
+    /// `ResolvedConfig::from_env`).
+    pub fn new(cfg: SystemConfig) -> Result<CoProcessor> {
+        CoProcessor::from_config(cfg, &crate::config::ResolvedConfig::from_env())
+    }
+
+    /// Build the testbed with an explicit number of VPU nodes (other
+    /// knobs still resolve from the environment).
+    pub fn with_vpus(cfg: SystemConfig, vpus: usize) -> Result<CoProcessor> {
+        let mut rc = crate::config::ResolvedConfig::from_env();
+        rc.vpus = crate::config::Setting::cli(vpus);
+        CoProcessor::from_config(cfg, &rc)
     }
 
     pub fn with_defaults() -> Result<CoProcessor> {

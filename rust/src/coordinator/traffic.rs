@@ -1,0 +1,1029 @@
+//! Constellation traffic harness (ISSUE 7): stochastic frame arrivals,
+//! priority classes, bounded admission, and the virtual-time event loop
+//! that owns every frame's lifecycle.
+//!
+//! The paper validates the FPGA→VPU datapath with fixed sweeps of
+//! identical frames; a constellation ground segment sees something very
+//! different — bursty sensor downlinks, mixed workload classes, and
+//! overload it must shed deliberately (the dimension MPAI,
+//! arXiv 2409.12258, motivates by mixing accelerator classes under a
+//! shared host). This module is the load-generator front end for
+//! [`crate::coordinator::stream`]: a set of [`SensorClient`]s each
+//! produce frames under a seeded [`ArrivalProcess`]; the event loop in
+//! [`build_schedule`] admits them through bounded per-class queues
+//! ([`AdmitPolicy`] decides what happens when a queue is full),
+//! dispatches them to VPU nodes in virtual time, and records every
+//! frame's fate (arrival → admitted → dispatched → egressed, or
+//! dropped) as a [`FrameFate`].
+//!
+//! Everything here is **pure virtual time** — `SimTime` arithmetic over
+//! the same per-frame service model the Masked DES uses — so the whole
+//! lifecycle is decided deterministically *before* any worker thread
+//! starts. The streaming lanes then execute each node's assigned frames
+//! (optionally sampling one in `execute_every` for long soaks), and the
+//! seeded fault plan stays order-independent because draws are keyed by
+//! frame seed, never by wallclock order (see [`crate::iface::fault`]).
+//!
+//! Determinism contract: the schedule (assignments, drops, degrades,
+//! dispatch/egress times, and hence the p50/p99/p999 report) is a pure
+//! function of `(TrafficConfig, seed, nodes, sched, service model)`.
+//! Frame `i` in global arrival order gets seed `base_seed + i`, exactly
+//! the seed the legacy backlog sweep gave frame `i` — which is what
+//! keeps the traffic-off path bit-exact against the pre-refactor
+//! stream.
+
+use crate::coordinator::benchmarks::Benchmark;
+use crate::error::{Error, Result};
+use crate::fabric::clock::SimTime;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+use crate::vpu::scheduler::SchedPolicy;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Workload priority class, highest first. The dispatcher serves
+/// `Alert` before `Standard` before `Bulk` whenever a node frees up
+/// under [`SchedPolicy::LeastLoaded`]; under static round-robin the
+/// class only labels the frame (assignment is by admission order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TrafficClass {
+    /// Latency-critical chips (e.g. CNN ship alerts).
+    Alert,
+    /// Normal imaging frames.
+    Standard,
+    /// Throughput-bound background work (e.g. CCSDS downlink).
+    Bulk,
+}
+
+impl TrafficClass {
+    /// All classes, highest priority first.
+    pub const ALL: [TrafficClass; 3] =
+        [TrafficClass::Alert, TrafficClass::Standard, TrafficClass::Bulk];
+
+    /// Queue index: 0 = highest priority.
+    pub fn idx(self) -> usize {
+        match self {
+            TrafficClass::Alert => 0,
+            TrafficClass::Standard => 1,
+            TrafficClass::Bulk => 2,
+        }
+    }
+
+    fn from_idx(i: usize) -> TrafficClass {
+        Self::ALL[i]
+    }
+
+    /// Lowercase label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            TrafficClass::Alert => "alert",
+            TrafficClass::Standard => "standard",
+            TrafficClass::Bulk => "bulk",
+        }
+    }
+}
+
+/// How a sensor client emits frames, in virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// All frames queued at t=0 — the legacy fixed-sweep mode.
+    Backlog,
+    /// Seeded Poisson arrivals at `rate_hz` mean events/second;
+    /// each event delivers `burst` back-to-back frames (`burst = 1`
+    /// is a plain Poisson process).
+    Poisson { rate_hz: f64, burst: usize },
+    /// Poisson arrivals gated by an orbital duty cycle: the sensor
+    /// only downlinks during the first `duty` fraction of each
+    /// `period_s`-second orbit; arrivals falling in the off phase
+    /// slip to the start of the next contact window.
+    DutyCycle { period_s: f64, duty: f64, rate_hz: f64 },
+}
+
+/// One traffic source multiplexed onto the topology.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SensorClient {
+    /// Label for reports.
+    pub name: String,
+    /// Workload this client's frames run.
+    pub bench: Benchmark,
+    /// Priority class of every frame from this client.
+    pub class: TrafficClass,
+    /// Arrival process (seeded per client from the sweep seed).
+    pub process: ArrivalProcess,
+    /// Total frames this client generates.
+    pub frames: usize,
+}
+
+/// What to do when an admission queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdmitPolicy {
+    /// Reject the arriving frame.
+    #[default]
+    DropNewest,
+    /// Evict the oldest queued frame to make room.
+    DropOldest,
+    /// Demote the arriving frame to the next lower class with queue
+    /// space; drop it only if every lower queue is also full. Falls
+    /// back to [`AdmitPolicy::DropNewest`] under static round-robin
+    /// (per-node FIFOs have no classes to demote across).
+    Degrade,
+}
+
+impl AdmitPolicy {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<AdmitPolicy> {
+        match s {
+            "newest" | "drop-newest" => Some(AdmitPolicy::DropNewest),
+            "oldest" | "drop-oldest" => Some(AdmitPolicy::DropOldest),
+            "degrade" => Some(AdmitPolicy::Degrade),
+            _ => None,
+        }
+    }
+
+    /// Lowercase label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmitPolicy::DropNewest => "drop-newest",
+            AdmitPolicy::DropOldest => "drop-oldest",
+            AdmitPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// Complete traffic front-end configuration for one stream sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficConfig {
+    /// Concurrent sensor clients (at least one).
+    pub clients: Vec<SensorClient>,
+    /// Bound on each admission queue (per class under `lld`, per node
+    /// under `rr`). `usize::MAX` = unbounded (the legacy backlog).
+    pub queue_depth: usize,
+    /// Overflow behavior when a queue is full.
+    pub policy: AdmitPolicy,
+    /// Soak sampling: the lanes really execute every k-th dispatched
+    /// frame; the rest live only in virtual time. `1` executes all.
+    pub execute_every: usize,
+}
+
+impl TrafficConfig {
+    /// The legacy fixed sweep as a traffic config: one synthetic
+    /// camera, all `frames` queued at t=0, unbounded admission.
+    /// `stream::run` uses this internally when traffic is off.
+    pub fn backlog(bench: Benchmark, frames: usize) -> TrafficConfig {
+        TrafficConfig {
+            clients: vec![SensorClient {
+                name: "camera".into(),
+                bench,
+                class: TrafficClass::Standard,
+                process: ArrivalProcess::Backlog,
+                frames,
+            }],
+            queue_depth: usize::MAX,
+            policy: AdmitPolicy::DropNewest,
+            execute_every: 1,
+        }
+    }
+
+    /// Single Poisson camera at `rate_hz`, standard class, bounded
+    /// admission (depth 8, drop-newest).
+    pub fn poisson(bench: Benchmark, frames: usize, rate_hz: f64) -> TrafficConfig {
+        TrafficConfig {
+            clients: vec![SensorClient {
+                name: "camera".into(),
+                bench,
+                class: TrafficClass::Standard,
+                process: ArrivalProcess::Poisson { rate_hz, burst: 1 },
+                frames,
+            }],
+            queue_depth: 8,
+            policy: AdmitPolicy::DropNewest,
+            execute_every: 1,
+        }
+    }
+
+    /// Three concurrent clients of one benchmark splitting `frames`
+    /// and `rate_hz` across the priority classes (~1:4:1 alert:
+    /// standard:bulk, bursty bulk) — the CLI's `--traffic poisson`.
+    pub fn mixed_poisson(bench: Benchmark, frames: usize, rate_hz: f64) -> TrafficConfig {
+        let alert = (frames / 6).max(1);
+        let bulk = (frames / 6).max(1);
+        let standard = frames.saturating_sub(alert + bulk).max(1);
+        TrafficConfig {
+            clients: vec![
+                SensorClient {
+                    name: "ship-alert".into(),
+                    bench,
+                    class: TrafficClass::Alert,
+                    process: ArrivalProcess::Poisson { rate_hz: rate_hz / 6.0, burst: 1 },
+                    frames: alert,
+                },
+                SensorClient {
+                    name: "imaging".into(),
+                    bench,
+                    class: TrafficClass::Standard,
+                    process: ArrivalProcess::Poisson { rate_hz: rate_hz * 4.0 / 6.0, burst: 1 },
+                    frames: standard,
+                },
+                SensorClient {
+                    name: "downlink".into(),
+                    bench,
+                    class: TrafficClass::Bulk,
+                    process: ArrivalProcess::Poisson { rate_hz: rate_hz / 6.0, burst: 4 },
+                    frames: bulk,
+                },
+            ],
+            queue_depth: 8,
+            policy: AdmitPolicy::DropNewest,
+            execute_every: 1,
+        }
+    }
+
+    /// Single duty-cycled camera: Poisson at `rate_hz` during the
+    /// first `duty` fraction of each `period_s`-second orbit.
+    pub fn duty_cycle(
+        bench: Benchmark,
+        frames: usize,
+        rate_hz: f64,
+        period_s: f64,
+        duty: f64,
+    ) -> TrafficConfig {
+        TrafficConfig {
+            clients: vec![SensorClient {
+                name: "camera".into(),
+                bench,
+                class: TrafficClass::Standard,
+                process: ArrivalProcess::DutyCycle { period_s, duty, rate_hz },
+                frames,
+            }],
+            queue_depth: 8,
+            policy: AdmitPolicy::DropNewest,
+            execute_every: 1,
+        }
+    }
+
+    /// Replace the admission-queue bound.
+    pub fn with_queue_depth(mut self, depth: usize) -> TrafficConfig {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// Replace the overflow policy.
+    pub fn with_policy(mut self, policy: AdmitPolicy) -> TrafficConfig {
+        self.policy = policy;
+        self
+    }
+
+    /// Replace the soak sampling stride.
+    pub fn with_execute_every(mut self, k: usize) -> TrafficConfig {
+        self.execute_every = k;
+        self
+    }
+
+    /// Add another sensor client.
+    pub fn with_client(mut self, client: SensorClient) -> TrafficConfig {
+        self.clients.push(client);
+        self
+    }
+
+    /// Total frames across all clients.
+    pub fn total_frames(&self) -> usize {
+        self.clients.iter().map(|c| c.frames).sum()
+    }
+
+    /// Reject configurations the event loop cannot schedule.
+    pub fn validate(&self) -> Result<()> {
+        if self.total_frames() == 0 {
+            return Err(Error::Config("traffic config generates zero frames".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("traffic queue depth must be at least 1".into()));
+        }
+        if self.execute_every == 0 {
+            return Err(Error::Config("traffic execute_every must be at least 1".into()));
+        }
+        for c in &self.clients {
+            match c.process {
+                ArrivalProcess::Backlog => {}
+                ArrivalProcess::Poisson { rate_hz, burst } => {
+                    if !rate_hz.is_finite() || rate_hz <= 0.0 || burst == 0 {
+                        return Err(Error::Config(format!(
+                            "client '{}': Poisson needs rate_hz > 0 and burst >= 1",
+                            c.name
+                        )));
+                    }
+                }
+                ArrivalProcess::DutyCycle { period_s, duty, rate_hz } => {
+                    if !rate_hz.is_finite()
+                        || rate_hz <= 0.0
+                        || !period_s.is_finite()
+                        || period_s <= 0.0
+                        || duty <= 0.0
+                        || duty > 1.0
+                    {
+                        return Err(Error::Config(format!(
+                            "client '{}': duty cycle needs rate_hz > 0, period_s > 0, 0 < duty <= 1",
+                            c.name
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Terminal lifecycle state of one generated frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FrameOutcome {
+    /// Rejected at admission (or evicted from a full queue) at `at`.
+    Dropped {
+        /// Virtual time of the drop decision.
+        at: SimTime,
+    },
+    /// Dispatched and egressed in virtual time.
+    Served {
+        /// VPU node that served the frame.
+        node: usize,
+        /// Virtual dispatch time (start of CIF reception).
+        dispatch: SimTime,
+        /// Virtual egress time (end of LCD transmission).
+        egress: SimTime,
+        /// Whether the real lanes executed it (soak sampling may
+        /// leave a frame virtual-only).
+        executed: bool,
+    },
+    /// Placeholder while the event loop is running — never present in
+    /// a finished [`Schedule`].
+    Pending,
+}
+
+/// Full per-frame lifecycle record, in global arrival order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrameFate {
+    /// Global arrival index (ties broken by client index, then by the
+    /// client's own emission order).
+    pub index: usize,
+    /// Per-frame seed: `base_seed + index`.
+    pub seed: u64,
+    /// Index into [`TrafficConfig::clients`].
+    pub client: usize,
+    /// Workload of this frame.
+    pub bench: Benchmark,
+    /// Class the frame *arrived* with.
+    pub class: TrafficClass,
+    /// Class the frame was demoted to by [`AdmitPolicy::Degrade`].
+    pub degraded_to: Option<TrafficClass>,
+    /// Virtual arrival time.
+    pub arrival: SimTime,
+    /// How the frame's life ended.
+    pub outcome: FrameOutcome,
+}
+
+impl FrameFate {
+    /// Class the frame was actually queued under.
+    pub fn effective_class(&self) -> TrafficClass {
+        self.degraded_to.unwrap_or(self.class)
+    }
+}
+
+/// One frame as a lane sees it: what to run, under which seed, and
+/// whether to really run it.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduledFrame {
+    /// Global arrival index (slot in the collector).
+    pub index: usize,
+    /// Per-frame seed (`base_seed + index`).
+    pub seed: u64,
+    /// Workload for this frame.
+    pub bench: Benchmark,
+    /// False = virtual-only (soak sampling skipped it).
+    pub execute: bool,
+}
+
+/// Everything the event loop decided: per-frame fates plus the
+/// per-node dispatch order the real lanes will follow.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Per-frame lifecycle records, indexed by global arrival order.
+    pub fates: Vec<FrameFate>,
+    /// Dispatch order per node; lanes execute `execute == true`
+    /// entries in this exact order.
+    pub per_node: Vec<Vec<ScheduledFrame>>,
+    /// Frames generated by all clients.
+    pub generated: usize,
+    /// Frames dispatched to a node (admitted and served).
+    pub served: usize,
+    /// Served frames the lanes really execute.
+    pub executed: usize,
+    /// Frames rejected or evicted at admission.
+    pub dropped: usize,
+    /// Frames demoted by [`AdmitPolicy::Degrade`].
+    pub degraded: usize,
+    /// Virtual makespan (last egress).
+    pub span: SimTime,
+}
+
+/// Latency distribution over served frames (egress − arrival, so
+/// queueing delay is included).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    /// Median sojourn.
+    pub p50: SimTime,
+    /// 99th percentile sojourn.
+    pub p99: SimTime,
+    /// 99.9th percentile sojourn.
+    pub p999: SimTime,
+    /// Mean sojourn.
+    pub mean: SimTime,
+    /// Worst sojourn.
+    pub max: SimTime,
+}
+
+impl LatencyStats {
+    fn from_sojourns(mut s: Vec<f64>) -> LatencyStats {
+        if s.is_empty() {
+            return LatencyStats::default();
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        LatencyStats {
+            p50: SimTime::from_secs(percentile_sorted(&s, 50.0)),
+            p99: SimTime::from_secs(percentile_sorted(&s, 99.0)),
+            p999: SimTime::from_secs(percentile_sorted(&s, 99.9)),
+            mean: SimTime::from_secs(mean),
+            max: SimTime::from_secs(*s.last().unwrap()),
+        }
+    }
+}
+
+/// Per-arrival-class accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassStats {
+    /// The arrival class.
+    pub class: TrafficClass,
+    /// Frames generated with this class.
+    pub generated: usize,
+    /// Frames of this class that were served.
+    pub served: usize,
+    /// Frames of this class dropped at admission.
+    pub dropped: usize,
+    /// Frames of this class demoted to a lower class.
+    pub degraded: usize,
+    /// Median sojourn of this class's served frames.
+    pub p50: SimTime,
+}
+
+/// The traffic-harness summary attached to a `StreamResult` when a
+/// sweep runs with traffic generation on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficReport {
+    /// Frames generated by all clients.
+    pub generated: usize,
+    /// Frames dispatched to a node.
+    pub served: usize,
+    /// Served frames the lanes really executed.
+    pub executed: usize,
+    /// Frames dropped at admission.
+    pub dropped: usize,
+    /// Frames demoted by the degrade policy.
+    pub degraded: usize,
+    /// Sojourn-latency distribution over served frames.
+    pub latency: LatencyStats,
+    /// Virtual makespan (last egress).
+    pub span: SimTime,
+    /// Served frames per virtual second.
+    pub virtual_fps: f64,
+    /// Per-class breakdown, highest priority first (classes with no
+    /// generated frames are omitted).
+    pub per_class: Vec<ClassStats>,
+    /// Full per-frame lifecycle records.
+    pub fates: Vec<FrameFate>,
+}
+
+impl Schedule {
+    /// Fold the finished schedule into the user-facing report.
+    pub fn into_report(self) -> TrafficReport {
+        let sojourns = |pred: &dyn Fn(&FrameFate) -> bool| -> Vec<f64> {
+            self.fates
+                .iter()
+                .filter(|f| pred(f))
+                .filter_map(|f| match f.outcome {
+                    FrameOutcome::Served { egress, .. } => {
+                        Some(egress.saturating_sub(f.arrival).as_secs())
+                    }
+                    _ => None,
+                })
+                .collect()
+        };
+        let latency = LatencyStats::from_sojourns(sojourns(&|_| true));
+        let per_class = TrafficClass::ALL
+            .iter()
+            .filter_map(|&class| {
+                let of_class: Vec<&FrameFate> =
+                    self.fates.iter().filter(|f| f.class == class).collect();
+                if of_class.is_empty() {
+                    return None;
+                }
+                let served = of_class
+                    .iter()
+                    .filter(|f| matches!(f.outcome, FrameOutcome::Served { .. }))
+                    .count();
+                Some(ClassStats {
+                    class,
+                    generated: of_class.len(),
+                    served,
+                    dropped: of_class.len() - served,
+                    degraded: of_class.iter().filter(|f| f.degraded_to.is_some()).count(),
+                    p50: LatencyStats::from_sojourns(sojourns(&|f| f.class == class)).p50,
+                })
+            })
+            .collect();
+        let span_s = self.span.as_secs();
+        TrafficReport {
+            generated: self.generated,
+            served: self.served,
+            executed: self.executed,
+            dropped: self.dropped,
+            degraded: self.degraded,
+            latency,
+            span: self.span,
+            virtual_fps: if span_s > 0.0 { self.served as f64 / span_s } else { 0.0 },
+            per_class,
+            fates: self.fates,
+        }
+    }
+}
+
+/// Generate every client's arrivals and merge them into global
+/// arrival order: sorted by `(time, client index, emission index)`,
+/// so ties (e.g. the whole backlog at t=0) keep a stable, seeded
+/// order. Each client draws from its own RNG stream (`seed` salted by
+/// client index), so adding a client never perturbs another's timeline.
+fn arrivals(cfg: &TrafficConfig, seed: u64) -> Vec<(SimTime, usize)> {
+    let mut all: Vec<(SimTime, usize, usize)> = Vec::with_capacity(cfg.total_frames());
+    for (ci, client) in cfg.clients.iter().enumerate() {
+        let mut rng = Rng::new(seed ^ (ci as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        match client.process {
+            ArrivalProcess::Backlog => {
+                for k in 0..client.frames {
+                    all.push((SimTime::ZERO, ci, k));
+                }
+            }
+            ArrivalProcess::Poisson { rate_hz, burst } => {
+                let burst = burst.max(1);
+                let mut t = 0.0f64;
+                let mut k = 0;
+                while k < client.frames {
+                    t += -(1.0 - rng.next_f64()).ln() / rate_hz;
+                    for _ in 0..burst {
+                        if k >= client.frames {
+                            break;
+                        }
+                        all.push((SimTime::from_secs(t), ci, k));
+                        k += 1;
+                    }
+                }
+            }
+            ArrivalProcess::DutyCycle { period_s, duty, rate_hz } => {
+                let mut t = 0.0f64;
+                for k in 0..client.frames {
+                    t += -(1.0 - rng.next_f64()).ln() / rate_hz;
+                    let phase = t - (t / period_s).floor() * period_s;
+                    if phase >= duty * period_s {
+                        // Off phase: slip to the next contact window.
+                        t += period_s - phase;
+                    }
+                    all.push((SimTime::from_secs(t), ci, k));
+                }
+            }
+        }
+    }
+    all.sort_by_key(|&(t, ci, k)| (t, ci, k));
+    all.into_iter().map(|(t, ci, _)| (t, ci)).collect()
+}
+
+/// Heap event ranks: a node freeing up sorts before an arrival at the
+/// same instant, so a frame arriving exactly at egress time finds the
+/// node idle (and a queued frame beats it to the node — FIFO holds).
+const EV_NODE_FREE: u8 = 0;
+const EV_ARRIVAL: u8 = 1;
+
+struct EventLoop<'a, F: FnMut(Benchmark, u64) -> SimTime> {
+    cfg: &'a TrafficConfig,
+    fates: Vec<FrameFate>,
+    per_node: Vec<Vec<ScheduledFrame>>,
+    /// Dynamic mode: one bounded queue per class, highest first.
+    class_q: [VecDeque<usize>; 3],
+    /// Static mode: one bounded FIFO per node.
+    node_q: Vec<VecDeque<usize>>,
+    node_busy: Vec<bool>,
+    heap: BinaryHeap<Reverse<(SimTime, u8, u64)>>,
+    static_rr: bool,
+    assigned: usize,
+    dispatched: usize,
+    executed: usize,
+    dropped: usize,
+    degraded: usize,
+    span: SimTime,
+    service: F,
+}
+
+impl<F: FnMut(Benchmark, u64) -> SimTime> EventLoop<'_, F> {
+    fn drop_frame(&mut self, i: usize, t: SimTime) {
+        self.fates[i].outcome = FrameOutcome::Dropped { at: t };
+        self.dropped += 1;
+    }
+
+    fn dispatch(&mut self, node: usize, i: usize, t: SimTime) {
+        let (bench, seed) = (self.fates[i].bench, self.fates[i].seed);
+        let egress = t + (self.service)(bench, seed);
+        let execute = self.dispatched % self.cfg.execute_every == 0;
+        self.dispatched += 1;
+        self.executed += execute as usize;
+        self.per_node[node].push(ScheduledFrame { index: i, seed, bench, execute });
+        self.fates[i].outcome =
+            FrameOutcome::Served { node, dispatch: t, egress, executed: execute };
+        self.node_busy[node] = true;
+        self.span = self.span.max(egress);
+        self.heap.push(Reverse((egress, EV_NODE_FREE, node as u64)));
+    }
+
+    /// Static round-robin: frame -> node `assigned % N`, bounded FIFO
+    /// per node, priorities inert (bit-exact with the legacy sweep
+    /// when the queue is unbounded).
+    fn arrive_static(&mut self, i: usize, t: SimTime) {
+        let node = self.assigned % self.node_busy.len();
+        if !self.node_busy[node] {
+            self.assigned += 1;
+            self.dispatch(node, i, t);
+        } else if self.node_q[node].len() < self.cfg.queue_depth {
+            self.assigned += 1;
+            self.node_q[node].push_back(i);
+        } else if self.cfg.policy == AdmitPolicy::DropOldest {
+            let old = self.node_q[node].pop_front().expect("full queue is non-empty");
+            self.drop_frame(old, t);
+            self.assigned += 1;
+            self.node_q[node].push_back(i);
+        } else {
+            self.drop_frame(i, t);
+        }
+    }
+
+    /// Dynamic dispatch: an idle node (lowest index — all idle nodes
+    /// are "earliest free" now) takes the frame immediately;
+    /// otherwise it queues under its class, subject to the bound.
+    fn arrive_dynamic(&mut self, i: usize, t: SimTime) {
+        if let Some(node) = (0..self.node_busy.len()).find(|&n| !self.node_busy[n]) {
+            self.dispatch(node, i, t);
+            return;
+        }
+        let c = self.fates[i].effective_class().idx();
+        if self.class_q[c].len() < self.cfg.queue_depth {
+            self.class_q[c].push_back(i);
+            return;
+        }
+        match self.cfg.policy {
+            AdmitPolicy::DropNewest => self.drop_frame(i, t),
+            AdmitPolicy::DropOldest => {
+                let old = self.class_q[c].pop_front().expect("full queue is non-empty");
+                self.drop_frame(old, t);
+                self.class_q[c].push_back(i);
+            }
+            AdmitPolicy::Degrade => {
+                match (c + 1..TrafficClass::ALL.len())
+                    .find(|&lower| self.class_q[lower].len() < self.cfg.queue_depth)
+                {
+                    Some(lower) => {
+                        self.fates[i].degraded_to = Some(TrafficClass::from_idx(lower));
+                        self.degraded += 1;
+                        self.class_q[lower].push_back(i);
+                    }
+                    None => self.drop_frame(i, t),
+                }
+            }
+        }
+    }
+
+    fn node_free(&mut self, node: usize, t: SimTime) {
+        self.node_busy[node] = false;
+        let next = if self.static_rr {
+            self.node_q[node].pop_front()
+        } else {
+            // Strict priority: drain the highest non-empty class.
+            (0..TrafficClass::ALL.len()).find_map(|c| self.class_q[c].pop_front())
+        };
+        if let Some(i) = next {
+            self.dispatch(node, i, t);
+        }
+    }
+
+    fn run(mut self) -> Schedule {
+        while let Some(Reverse((t, rank, payload))) = self.heap.pop() {
+            match rank {
+                EV_NODE_FREE => self.node_free(payload as usize, t),
+                _ => {
+                    if self.static_rr {
+                        self.arrive_static(payload as usize, t);
+                    } else {
+                        self.arrive_dynamic(payload as usize, t);
+                    }
+                }
+            }
+        }
+        debug_assert!(
+            self.fates.iter().all(|f| f.outcome != FrameOutcome::Pending),
+            "event loop left a frame unresolved"
+        );
+        Schedule {
+            generated: self.fates.len(),
+            served: self.dispatched,
+            executed: self.executed,
+            dropped: self.dropped,
+            degraded: self.degraded,
+            span: self.span,
+            fates: self.fates,
+            per_node: self.per_node,
+        }
+    }
+}
+
+/// Run the virtual-time event loop: generate arrivals, admit, dispatch
+/// to `nodes` lanes under `sched`, and price each frame with the
+/// caller's `service` model (CIF wire + SHAVE processing + LCD wire;
+/// `stream::run` passes the same per-frame chain the Masked DES uses).
+///
+/// The result is a pure function of the inputs — see the module docs
+/// for the determinism contract.
+pub fn build_schedule<F: FnMut(Benchmark, u64) -> SimTime>(
+    cfg: &TrafficConfig,
+    seed: u64,
+    nodes: usize,
+    sched: SchedPolicy,
+    service: F,
+) -> Schedule {
+    let arr = arrivals(cfg, seed);
+    let mut heap = BinaryHeap::with_capacity(arr.len() + nodes);
+    let fates: Vec<FrameFate> = arr
+        .iter()
+        .enumerate()
+        .map(|(i, &(t, ci))| {
+            heap.push(Reverse((t, EV_ARRIVAL, i as u64)));
+            let c = &cfg.clients[ci];
+            FrameFate {
+                index: i,
+                seed: seed.wrapping_add(i as u64),
+                client: ci,
+                bench: c.bench,
+                class: c.class,
+                degraded_to: None,
+                arrival: t,
+                outcome: FrameOutcome::Pending,
+            }
+        })
+        .collect();
+    EventLoop {
+        cfg,
+        fates,
+        per_node: vec![Vec::new(); nodes],
+        class_q: Default::default(),
+        node_q: vec![VecDeque::new(); nodes],
+        node_busy: vec![false; nodes],
+        heap,
+        static_rr: sched == SchedPolicy::RoundRobin,
+        assigned: 0,
+        dispatched: 0,
+        executed: 0,
+        dropped: 0,
+        degraded: 0,
+        span: SimTime::ZERO,
+        service,
+    }
+    .run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv3() -> Benchmark {
+        Benchmark::Conv { k: 3 }
+    }
+
+    /// Constant 50 ms service chain for pure-schedule tests.
+    fn flat_service(_b: Benchmark, _s: u64) -> SimTime {
+        SimTime::from_ms(50.0)
+    }
+
+    #[test]
+    fn backlog_rr_reproduces_legacy_round_robin() {
+        let cfg = TrafficConfig::backlog(conv3(), 7);
+        let s = build_schedule(&cfg, 42, 3, SchedPolicy::RoundRobin, flat_service);
+        assert_eq!(s.generated, 7);
+        assert_eq!(s.served, 7);
+        assert_eq!(s.dropped, 0);
+        let lens: Vec<usize> = s.per_node.iter().map(|v| v.len()).collect();
+        assert_eq!(lens, vec![3, 2, 2]);
+        let node0: Vec<usize> = s.per_node[0].iter().map(|f| f.index).collect();
+        assert_eq!(node0, vec![0, 3, 6], "lane order is i, i+N, i+2N …");
+        assert_eq!(s.per_node[0][1].seed, 42 + 3, "frame seed = base + global index");
+        assert!(s.per_node.iter().flatten().all(|f| f.execute));
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seeded_sorted_and_deterministic() {
+        let cfg = TrafficConfig::poisson(conv3(), 32, 10.0);
+        let a = arrivals(&cfg, 7);
+        let b = arrivals(&cfg, 7);
+        let c = arrivals(&cfg, 8);
+        assert_eq!(a, b, "same seed, same timeline");
+        assert_ne!(a, c, "different seed, different timeline");
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "sorted by arrival time");
+        assert!(a.iter().any(|&(t, _)| t > SimTime::ZERO));
+    }
+
+    #[test]
+    fn poisson_bursts_share_a_timestamp() {
+        let mut cfg = TrafficConfig::poisson(conv3(), 12, 5.0);
+        cfg.clients[0].process = ArrivalProcess::Poisson { rate_hz: 5.0, burst: 4 };
+        let a = arrivals(&cfg, 9);
+        for group in a.chunks(4) {
+            assert!(group.iter().all(|&(t, _)| t == group[0].0), "burst arrives together");
+        }
+    }
+
+    #[test]
+    fn duty_cycle_confines_arrivals_to_contact_windows() {
+        let (period, duty) = (10.0, 0.3);
+        let cfg = TrafficConfig::duty_cycle(conv3(), 64, 8.0, period, duty);
+        for (t, _) in arrivals(&cfg, 21) {
+            let s = t.as_secs();
+            let phase = s - (s / period).floor() * period;
+            assert!(
+                phase <= duty * period + 1e-6,
+                "arrival at {s:.3}s sits in the off phase (phase {phase:.3}s)"
+            );
+        }
+    }
+
+    #[test]
+    fn bounded_queue_drop_newest_rejects_overflow() {
+        let cfg = TrafficConfig::backlog(conv3(), 10).with_queue_depth(2);
+        let s = build_schedule(&cfg, 1, 1, SchedPolicy::LeastLoaded, flat_service);
+        // One frame dispatches into the idle node; two queue; seven drop.
+        assert_eq!(s.served, 3);
+        assert_eq!(s.dropped, 7);
+        let dropped: Vec<usize> = s
+            .fates
+            .iter()
+            .filter(|f| matches!(f.outcome, FrameOutcome::Dropped { .. }))
+            .map(|f| f.index)
+            .collect();
+        assert_eq!(dropped, (3..10).collect::<Vec<_>>(), "drop-newest sheds the tail");
+    }
+
+    #[test]
+    fn drop_oldest_keeps_the_freshest_frames() {
+        let cfg = TrafficConfig::backlog(conv3(), 10)
+            .with_queue_depth(2)
+            .with_policy(AdmitPolicy::DropOldest);
+        let s = build_schedule(&cfg, 1, 1, SchedPolicy::LeastLoaded, flat_service);
+        assert_eq!(s.served, 3);
+        assert_eq!(s.dropped, 7);
+        let served: Vec<usize> = s
+            .fates
+            .iter()
+            .filter(|f| matches!(f.outcome, FrameOutcome::Served { .. }))
+            .map(|f| f.index)
+            .collect();
+        // Frame 0 took the node; the queue ends holding the two newest.
+        assert_eq!(served, vec![0, 8, 9]);
+    }
+
+    #[test]
+    fn degrade_demotes_then_drops() {
+        let alert = SensorClient {
+            name: "alerts".into(),
+            bench: conv3(),
+            class: TrafficClass::Alert,
+            process: ArrivalProcess::Backlog,
+            frames: 8,
+        };
+        let cfg = TrafficConfig {
+            clients: vec![alert],
+            queue_depth: 2,
+            policy: AdmitPolicy::Degrade,
+            execute_every: 1,
+        };
+        let s = build_schedule(&cfg, 3, 1, SchedPolicy::LeastLoaded, flat_service);
+        // 1 dispatched + 2 queued as alert + 2 demoted to standard +
+        // 2 demoted to bulk + 1 dropped once every queue is full.
+        assert_eq!(s.degraded, 4);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.served, 7);
+        let demoted: Vec<TrafficClass> =
+            s.fates.iter().filter_map(|f| f.degraded_to).collect();
+        assert_eq!(
+            demoted,
+            vec![
+                TrafficClass::Standard,
+                TrafficClass::Standard,
+                TrafficClass::Bulk,
+                TrafficClass::Bulk
+            ]
+        );
+    }
+
+    #[test]
+    fn alerts_preempt_queued_bulk() {
+        let bulk = SensorClient {
+            name: "downlink".into(),
+            bench: conv3(),
+            class: TrafficClass::Bulk,
+            process: ArrivalProcess::Backlog,
+            frames: 12,
+        };
+        let alert = SensorClient {
+            name: "ship-alert".into(),
+            bench: conv3(),
+            class: TrafficClass::Alert,
+            process: ArrivalProcess::Backlog,
+            frames: 4,
+        };
+        let cfg = TrafficConfig {
+            clients: vec![bulk, alert],
+            queue_depth: 32,
+            policy: AdmitPolicy::DropNewest,
+            execute_every: 1,
+        };
+        let s = build_schedule(&cfg, 5, 1, SchedPolicy::LeastLoaded, flat_service);
+        assert_eq!(s.dropped, 0);
+        let last_alert = s
+            .fates
+            .iter()
+            .filter(|f| f.class == TrafficClass::Alert)
+            .filter_map(|f| match f.outcome {
+                FrameOutcome::Served { dispatch, .. } => Some(dispatch),
+                _ => None,
+            })
+            .max()
+            .unwrap();
+        let bulk_before = s
+            .fates
+            .iter()
+            .filter(|f| f.class == TrafficClass::Bulk)
+            .filter(|f| match f.outcome {
+                FrameOutcome::Served { dispatch, .. } => dispatch < last_alert,
+                _ => false,
+            })
+            .count();
+        // Only the one bulk frame that grabbed the idle node at t=0 may
+        // precede the alerts; the other 11 wait behind all four.
+        assert!(bulk_before <= 1, "{bulk_before} bulk frames jumped the alert queue");
+    }
+
+    #[test]
+    fn execute_every_samples_the_dispatch_stream() {
+        let cfg = TrafficConfig::backlog(conv3(), 20).with_execute_every(7);
+        let s = build_schedule(&cfg, 11, 2, SchedPolicy::RoundRobin, flat_service);
+        assert_eq!(s.served, 20);
+        assert_eq!(s.executed, 3, "every 7th dispatched frame runs for real");
+        let real: usize =
+            s.per_node.iter().flatten().filter(|f| f.execute).count();
+        assert_eq!(real, s.executed);
+    }
+
+    #[test]
+    fn report_percentiles_are_ordered_and_deterministic() {
+        let cfg = TrafficConfig::poisson(conv3(), 64, 15.0).with_queue_depth(32);
+        let mk = || {
+            build_schedule(&cfg, 13, 1, SchedPolicy::LeastLoaded, flat_service).into_report()
+        };
+        let r = mk();
+        assert_eq!(r, mk(), "schedule and report are pure functions of the inputs");
+        assert_eq!(r.generated, 64);
+        let l = &r.latency;
+        assert!(l.p50 <= l.p99 && l.p99 <= l.p999 && l.p999 <= l.max);
+        assert!(l.p50 >= SimTime::from_ms(49.9), "sojourn includes the service chain");
+        assert!(r.span > SimTime::ZERO);
+        assert!(r.virtual_fps > 0.0);
+        assert_eq!(r.per_class.len(), 1);
+        assert_eq!(r.per_class[0].class, TrafficClass::Standard);
+        assert_eq!(r.per_class[0].generated, 64);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        assert!(TrafficConfig::backlog(conv3(), 0).validate().is_err());
+        assert!(TrafficConfig::backlog(conv3(), 4)
+            .with_queue_depth(0)
+            .validate()
+            .is_err());
+        assert!(TrafficConfig::backlog(conv3(), 4)
+            .with_execute_every(0)
+            .validate()
+            .is_err());
+        assert!(TrafficConfig::poisson(conv3(), 4, 0.0).validate().is_err());
+        assert!(TrafficConfig::duty_cycle(conv3(), 4, 5.0, 10.0, 1.5).validate().is_err());
+        assert!(TrafficConfig::mixed_poisson(conv3(), 24, 12.0).validate().is_ok());
+    }
+}

@@ -11,6 +11,10 @@
 //! attempt)` — no interior RNG state — so injection is deterministic
 //! regardless of pipeline thread interleaving, and a streamed sweep
 //! sees bit-identical faults to the equivalent one-shot frames. The
+//! same key makes draws *order-independent*: the ISSUE 7 event-driven
+//! dispatcher can execute frames out of admission order, route them to
+//! any node, or (in soak mode) skip some entirely without perturbing
+//! any other frame's upsets. The
 //! plan corrupts [`WireFrame`]s *in transit* (after the Tx side sealed
 //! the CRC line), which is exactly what the CRC exists to catch:
 //!

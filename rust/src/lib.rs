@@ -70,19 +70,26 @@ impl KernelBackend {
     /// strict-pinning run.
     pub fn from_env() -> KernelBackend {
         match std::env::var("SPACECODESIGN_BACKEND") {
-            Ok(v) => match v.to_ascii_lowercase().as_str() {
-                "reference" | "ref" => KernelBackend::Reference,
-                "optimized" | "opt" => KernelBackend::Optimized,
-                "simd" => KernelBackend::Simd,
-                other => {
-                    eprintln!(
-                        "warning: unrecognized SPACECODESIGN_BACKEND='{other}', \
-                         using the default (optimized)"
-                    );
-                    KernelBackend::Optimized
-                }
-            },
+            Ok(v) => KernelBackend::parse(&v).unwrap_or_else(|| {
+                eprintln!(
+                    "warning: unrecognized SPACECODESIGN_BACKEND='{v}', \
+                     using the default (optimized)"
+                );
+                KernelBackend::Optimized
+            }),
             Err(_) => KernelBackend::Optimized,
+        }
+    }
+
+    /// Parse a tier name (case-insensitive; `reference`/`ref`,
+    /// `optimized`/`opt`, `simd`) — the one spelling table shared by
+    /// the env var, the CLI flag, and `config::ResolvedConfig`.
+    pub fn parse(s: &str) -> Option<KernelBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "reference" | "ref" => Some(KernelBackend::Reference),
+            "optimized" | "opt" => Some(KernelBackend::Optimized),
+            "simd" => Some(KernelBackend::Simd),
+            _ => None,
         }
     }
 

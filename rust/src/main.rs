@@ -18,12 +18,13 @@
 //! DESIGN.md §9.)
 
 use spacecodesign::compress::{self, Cube};
-use spacecodesign::config::SystemConfig;
+use spacecodesign::config::{CliOverrides, ResolvedConfig, SettingSource, SystemConfig};
 use spacecodesign::coordinator::comparators;
-use spacecodesign::coordinator::system::vpus_from_env;
-use spacecodesign::coordinator::{report, stream, Benchmark, CoProcessor, StreamOptions};
+use spacecodesign::coordinator::{
+    report, stream, AdmitPolicy, ArrivalProcess, Benchmark, CoProcessor, StreamOptions,
+    TrafficConfig,
+};
 use spacecodesign::fpga::{designs, Device};
-use spacecodesign::iface::fault::{FaultConfig, FaultPlan};
 use spacecodesign::iface::loopback;
 use spacecodesign::util::rng::Rng;
 use spacecodesign::vpu::scheduler::SchedPolicy;
@@ -70,18 +71,26 @@ COMMANDS:
   loopback   CIF/LCD interface feasibility sweep (paper §IV)
   run        one benchmark end-to-end:
              --bench binning|conv3|conv7|conv13|render|cnn|ccsds
-  stream     N-frame streaming pipeline sweep on both kernel backends:
+  stream     N-frame streaming pipeline sweep:
              [--bench NAME] [--frames N] [--depth D] — reports per-stage
              (CIF/VPU/LCD) utilization vs the Masked DES prediction;
              [--vpus N] [--sched rr|lld] dispatches frames across an
-             N-node VPU topology (env: SPACECODESIGN_VPUS; rr =
-             round-robin, lld = least-outstanding-frames);
+             N-node VPU topology (rr = static round-robin, lld =
+             earliest-free-node with priority classes);
              [--backend ref|opt|simd] runs one kernel tier instead of
              the ref+opt sweep; [--workers N] caps the worker pool.
-             Both mirror env vars (SPACECODESIGN_BACKEND,
-             SPACECODESIGN_WORKERS) and the env var wins when set;
+             Every knob resolves CLI > env > default (env vars:
+             SPACECODESIGN_BACKEND, _WORKERS, _VPUS, _FAULT_SEED,
+             _FAULT_RATE); the resolved settings print once per run;
              [--inject RATE] [--fault-seed N] adds seeded wire faults
-             with CRC-triggered retransmission + per-frame containment
+             with CRC-triggered retransmission + per-frame containment;
+             [--traffic poisson|duty|off] turns on the constellation
+             traffic harness — seeded stochastic arrivals across
+             priority classes with bounded admission — tuned by
+             [--rate HZ] [--burst B] [--queue-depth D]
+             [--drop newest|oldest|degrade] [--execute-every K];
+             lld becomes the default dispatcher and the summary adds
+             virtual p50/p99/p999 sojourn latency vs the Masked DES
   compress   CCSDS-123 compression demo: [--bands Z] [--rows Y] [--cols X]
   report     all of the above
 ";
@@ -288,15 +297,6 @@ fn parse_bench(name: &str) -> Option<Benchmark> {
     })
 }
 
-fn parse_backend(name: &str) -> Option<KernelBackend> {
-    Some(match name {
-        "ref" | "reference" => KernelBackend::Reference,
-        "opt" | "optimized" => KernelBackend::Optimized,
-        "simd" => KernelBackend::Simd,
-        _ => return None,
-    })
-}
-
 fn run_one(args: &[String]) -> Result<()> {
     let name = flag_str(args, "--bench").unwrap_or("conv3");
     let Some(bench) = parse_bench(name) else {
@@ -320,34 +320,83 @@ fn run_stream(args: &[String]) -> Result<()> {
     };
     let frames = flag_usize(args, "--frames").unwrap_or(8);
     let depth = flag_usize(args, "--depth").unwrap_or(1);
-    let vpus = flag_usize(args, "--vpus").unwrap_or_else(vpus_from_env);
-    // --workers mirrors SPACECODESIGN_WORKERS; the env var wins so a CI
-    // matrix leg's setting can't be overridden by a stray flag.
-    if let Some(w) = flag_usize(args, "--workers") {
-        if std::env::var("SPACECODESIGN_WORKERS").is_ok() {
-            eprintln!("note: SPACECODESIGN_WORKERS is set; ignoring --workers {w}");
-        } else {
-            spacecodesign::util::par::set_max_workers(w);
+
+    // One resolution point for every backend/workers/vpus/fault knob
+    // (ISSUE 7 satellite): CLI > env > default. This flips the old
+    // "env wins" rule — a typed flag now always beats the ambient CI
+    // matrix leg, which sets env vars and passes no flags.
+    let backend_flag = flag_str(args, "--backend").map(|b| match KernelBackend::parse(b) {
+        Some(k) => k,
+        None => {
+            eprintln!("unknown backend '{b}' (ref | opt | simd)");
+            std::process::exit(2);
         }
+    });
+    // `--fault-seed N` alone enables injection at the default rate, and
+    // `--inject RATE` alone seeds the plan from the run seed — silently
+    // ignoring a fault flag the user typed would be worse.
+    let inject = flag_f64_or(args, "--inject", 0.05);
+    let fault_seed = flag_usize(args, "--fault-seed")
+        .map(|v| v as u64)
+        .or_else(|| inject.map(|_| seed(args)));
+    let rc = ResolvedConfig::resolve(&CliOverrides {
+        backend: backend_flag,
+        workers: flag_usize(args, "--workers"),
+        vpus: flag_usize(args, "--vpus"),
+        fault_seed,
+        fault_rate: inject,
+    });
+    if let Some(w) = rc.workers.value {
+        spacecodesign::util::par::set_max_workers(w);
     }
-    // --backend mirrors SPACECODESIGN_BACKEND (env wins, same rule).
-    // An explicit tier replaces the default reference+optimized sweep.
-    let mut backends = vec![KernelBackend::Reference, KernelBackend::Optimized];
-    if std::env::var("SPACECODESIGN_BACKEND").is_ok() {
-        if let Some(b) = flag_str(args, "--backend") {
-            eprintln!("note: SPACECODESIGN_BACKEND is set; ignoring --backend {b}");
-        }
-        backends = vec![KernelBackend::from_env()];
-    } else if let Some(b) = flag_str(args, "--backend") {
-        match parse_backend(b) {
-            Some(k) => backends = vec![k],
-            None => {
-                eprintln!("unknown backend '{b}' (ref | opt | simd)");
-                std::process::exit(2);
+    // An explicit tier (flag or env) replaces the default ref+opt sweep.
+    let backends = if rc.backend.source == SettingSource::Default {
+        vec![KernelBackend::Reference, KernelBackend::Optimized]
+    } else {
+        vec![rc.backend.value]
+    };
+
+    let traffic = match flag_str(args, "--traffic") {
+        None | Some("off") => None,
+        Some(kind) => {
+            let rate = flag_f64_or(args, "--rate", 12.0).unwrap_or(12.0);
+            let mut t = match kind {
+                "poisson" => TrafficConfig::mixed_poisson(bench, frames, rate),
+                "duty" => TrafficConfig::duty_cycle(bench, frames, rate, 2.0, 0.4),
+                other => {
+                    eprintln!("unknown traffic mode '{other}' (poisson | duty | off)");
+                    std::process::exit(2);
+                }
+            };
+            if let Some(b) = flag_usize(args, "--burst") {
+                for c in &mut t.clients {
+                    if let ArrivalProcess::Poisson { ref mut burst, .. } = c.process {
+                        *burst = b.max(1);
+                    }
+                }
             }
+            if let Some(d) = flag_usize(args, "--queue-depth") {
+                t = t.with_queue_depth(d);
+            }
+            if let Some(p) = flag_str(args, "--drop") {
+                match AdmitPolicy::parse(p) {
+                    Some(policy) => t = t.with_policy(policy),
+                    None => {
+                        eprintln!("unknown drop policy '{p}' (newest | oldest | degrade)");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            if let Some(k) = flag_usize(args, "--execute-every") {
+                t = t.with_execute_every(k);
+            }
+            Some(t)
         }
-    }
+    };
+    // Stochastic load defaults to the priority-aware dispatcher; an
+    // explicit --sched always wins.
     let sched = match flag_str(args, "--sched") {
+        None if traffic.is_some() => SchedPolicy::LeastLoaded,
         None => SchedPolicy::default(),
         Some(s) => match SchedPolicy::parse(s) {
             Some(p) => p,
@@ -357,7 +406,20 @@ fn run_stream(args: &[String]) -> Result<()> {
             }
         },
     };
-    if vpus > 1 {
+
+    let vpus = rc.vpus.value;
+    if let Some(t) = &traffic {
+        println!(
+            "== Streaming frame pipeline: {} x{} frames under stochastic load \
+             ({} clients, queue depth {}, {}, {vpus} VPU nodes, sched {}) ==",
+            bench.name(),
+            t.total_frames(),
+            t.clients.len(),
+            t.queue_depth,
+            t.policy.name(),
+            sched.name()
+        );
+    } else if vpus > 1 {
         println!(
             "== Streaming frame pipeline: {} x{frames} frames (depth {depth}, \
              {vpus} VPU nodes, sched {}) ==",
@@ -370,40 +432,23 @@ fn run_stream(args: &[String]) -> Result<()> {
             bench.name()
         );
     }
-    let mut cp = CoProcessor::with_vpus(SystemConfig::paper(), vpus)?;
-    // `--fault-seed N` alone enables injection at the default rate —
-    // silently ignoring a fault flag the user typed would be worse.
-    let inject = flag_f64_or(args, "--inject", 0.05)
-        .or_else(|| flag_usize(args, "--fault-seed").map(|_| 0.05));
-    if let Some(rate) = inject {
-        let fault_seed = flag_usize(args, "--fault-seed")
-            .map(|v| v as u64)
-            .unwrap_or_else(|| seed(args));
-        println!("fault injection: frame rate {rate}, seed {fault_seed}");
-        cp.faults = Some(FaultPlan::new(FaultConfig::new(fault_seed, rate)));
+    println!("{}", rc.summary());
+    if backends.len() > 1 {
+        println!("(no backend pinned: sweeping reference + optimized)");
     }
-    let opts = StreamOptions {
-        bench,
-        frames,
-        seed: seed(args),
-        depth,
-        sched,
-    };
+    let mut cp = CoProcessor::from_config(SystemConfig::paper(), &rc)?;
     // A zero-rate plan can never inject, so it must not suppress the
     // nonzero exit for genuine frame failures below.
-    let injecting = cp
-        .faults
-        .as_ref()
-        .is_some_and(|f| f.config().frame_rate > 0.0);
-    println!(
-        "effective settings: backends [{}]  workers {}",
-        backends
-            .iter()
-            .map(|b| b.name())
-            .collect::<Vec<_>>()
-            .join(", "),
-        spacecodesign::util::par::max_workers()
-    );
+    let injecting = rc.fault_config().is_some_and(|f| f.frame_rate > 0.0);
+    let mut builder = StreamOptions::builder(bench)
+        .frames(frames)
+        .seed(seed(args))
+        .depth(depth)
+        .sched(sched);
+    if let Some(t) = traffic {
+        builder = builder.traffic(t);
+    }
+    let opts = builder.build();
     for backend in backends {
         cp.backend = backend;
         let r = stream::run(&mut cp, &opts)?;

@@ -17,21 +17,28 @@
 use crate::fabric::clock::SimTime;
 
 /// Frame-dispatch policy across the VPU nodes of the topology.
+///
+/// Since ISSUE 7 both policies are decided by the virtual-time event
+/// loop in `coordinator::traffic` *before* any worker thread starts, so
+/// node attribution is deterministic for both — a pure function of the
+/// traffic config, seed and service model, never of wallclock timing.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SchedPolicy {
-    /// Static: frame `i` goes to node `i % N`. Fully deterministic —
-    /// with a fixed fault seed, an N-node round-robin sweep carries
-    /// bit-identical per-frame results to the single-node sweep (the
-    /// fault draws are node-independent by construction).
+    /// Static: admitted frame `i` goes to node `i % N` (with traffic
+    /// off, admission order is frame order — the legacy assignment,
+    /// bit-exact against pre-ISSUE-7 sweeps). With a fixed fault seed,
+    /// an N-node round-robin sweep carries bit-identical per-frame
+    /// results to the single-node sweep (the fault draws are
+    /// node-independent by construction).
     #[default]
     RoundRobin,
-    /// Dynamic: the next frame goes to a node with the fewest
-    /// outstanding (dispatched-but-uncompleted) frames — the greedy
-    /// list scheduler of the SHAVE band queue, one level up. Node
-    /// *attribution* becomes timing-dependent, but per-frame results
-    /// stay seed-deterministic (a frame computes and faults identically
-    /// on every node). No node can starve: an idle node is always a
-    /// minimum and takes the next frame.
+    /// Dynamic: when a node frees up in virtual time it takes the
+    /// highest-priority queued frame (alert before standard before
+    /// bulk; lowest-index idle node wins ties) — the greedy list
+    /// scheduler of the SHAVE band queue, one level up. Per-frame
+    /// results stay seed-deterministic (a frame computes and faults
+    /// identically on every node). No node can starve: an idle node
+    /// always takes the next admitted frame.
     LeastLoaded,
 }
 

@@ -23,13 +23,10 @@ fn coproc(tag: &str, faults: Option<FaultPlan>) -> CoProcessor {
 }
 
 fn opts(frames: usize, seed: u64) -> StreamOptions {
-    StreamOptions {
-        bench: Benchmark::Conv { k: 3 },
-        frames,
-        seed,
-        depth: 1,
-        sched: spacecodesign::vpu::scheduler::SchedPolicy::RoundRobin,
-    }
+    StreamOptions::builder(Benchmark::Conv { k: 3 })
+        .frames(frames)
+        .seed(seed)
+        .build()
 }
 
 /// A plan that hits every frame with payload flips only; `plane_rate`

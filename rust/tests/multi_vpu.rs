@@ -24,13 +24,11 @@ fn coproc(tag: &str, vpus: usize) -> CoProcessor {
 }
 
 fn opts(frames: usize, seed: u64, sched: SchedPolicy) -> StreamOptions {
-    StreamOptions {
-        bench: Benchmark::Conv { k: 3 },
-        frames,
-        seed,
-        depth: 1,
-        sched,
-    }
+    StreamOptions::builder(Benchmark::Conv { k: 3 })
+        .frames(frames)
+        .seed(seed)
+        .sched(sched)
+        .build()
 }
 
 /// Transient payload-flip plan: every frame faulted, `plane_rate`
@@ -134,8 +132,9 @@ fn least_loaded_never_starves_a_node_under_fault_storm() {
 
 #[test]
 fn lld_results_stay_seed_deterministic_even_if_attribution_moves() {
-    // Node attribution under least-loaded is timing-dependent, but the
-    // per-frame *results* are not: a frame computes and faults
+    // Node attribution under least-loaded is decided by the virtual-time
+    // event loop (deterministic since ISSUE 7), but the per-frame
+    // *results* never depended on it: a frame computes and faults
     // identically on every node.
     let n = 6;
     let mut a = coproc("lldr", 2);

@@ -21,13 +21,31 @@ fn native_coproc(tag: &str) -> CoProcessor {
 }
 
 fn opts(bench: Benchmark, frames: usize, seed: u64) -> StreamOptions {
-    StreamOptions {
-        bench,
-        frames,
-        seed,
-        depth: 1,
-        sched: spacecodesign::vpu::scheduler::SchedPolicy::RoundRobin,
-    }
+    StreamOptions::builder(bench).frames(frames).seed(seed).build()
+}
+
+#[test]
+fn deprecated_new_shim_matches_builder_defaults() {
+    // ISSUE 7 satellite: the deprecated constructor keeps old callers
+    // compiling with exactly the builder's defaults.
+    #[allow(deprecated)]
+    let legacy = StreamOptions::new(Benchmark::Conv { k: 3 }, 5);
+    let built = StreamOptions::builder(Benchmark::Conv { k: 3 }).frames(5).build();
+    assert_eq!(legacy.frames, built.frames);
+    assert_eq!(legacy.seed, built.seed);
+    assert_eq!(legacy.depth, built.depth);
+    assert_eq!(legacy.sched, built.sched);
+    assert_eq!(legacy.backend, built.backend);
+    assert_eq!(legacy.workers, built.workers);
+    assert_eq!(legacy.vpus, built.vpus);
+    assert!(legacy.traffic.is_none() && built.traffic.is_none());
+}
+
+#[test]
+fn traffic_off_run_reports_no_traffic_block() {
+    let mut cp = native_coproc("notraffic");
+    let r = stream::run(&mut cp, &opts(Benchmark::Conv { k: 3 }, 2, 8)).unwrap();
+    assert!(r.traffic.is_none(), "backlog sweeps carry no TrafficReport");
 }
 
 #[test]

@@ -1,0 +1,340 @@
+//! Constellation traffic harness integration (ISSUE 7): the
+//! event-driven stream dispatcher under stochastic load — seeded
+//! Poisson arrivals, priority classes, bounded admission with
+//! drop/degrade policies, soak sampling, and fault-plan
+//! order-independence under out-of-order dispatch.
+//!
+//! Runs on the native execution path (builtin manifest) so it needs no
+//! `make artifacts`. Every test pins its own topology, traffic config
+//! and (where relevant) fault plan explicitly, so the assertions hold
+//! under any CI matrix leg.
+
+use spacecodesign::config::SystemConfig;
+use spacecodesign::coordinator::traffic::{FrameOutcome, SensorClient, TrafficClass};
+use spacecodesign::coordinator::{
+    stream, ArrivalProcess, Benchmark, CoProcessor, StreamOptions, TrafficConfig,
+};
+use spacecodesign::fabric::clock::SimTime;
+use spacecodesign::iface::fault::FaultConfig;
+use spacecodesign::vpu::scheduler::SchedPolicy;
+
+fn conv3() -> Benchmark {
+    Benchmark::Conv { k: 3 }
+}
+
+/// CoProcessor over an explicit topology, pinned to a directory
+/// without artifacts (builtin manifest + native engine) and with fault
+/// injection off unless a test sets its own plan.
+fn coproc(tag: &str, vpus: usize) -> CoProcessor {
+    let mut cfg = SystemConfig::paper();
+    cfg.artifacts_dir = format!("target/__traffic_{tag}__");
+    let mut cp = CoProcessor::with_vpus(cfg, vpus).expect("native coprocessor");
+    cp.faults = None;
+    cp
+}
+
+/// Every-frame payload-flip plan; `plane_rate` 0.5 recovers most
+/// frames within the retransmission budget.
+fn flips(seed: u64) -> FaultConfig {
+    FaultConfig {
+        frame_rate: 1.0,
+        plane_rate: 0.5,
+        w_payload_flip: 1.0,
+        w_crc_corrupt: 0.0,
+        w_truncate: 0.0,
+        w_stuck: 0.0,
+        ..FaultConfig::new(seed, 1.0)
+    }
+}
+
+#[test]
+fn poisson_latency_percentiles_pin_against_masked_des() {
+    // ISSUE 7 acceptance: seeded Poisson load on one node, soak
+    // sampling every 8th dispatch, and the virtual sojourn percentiles
+    // reported next to the Masked DES prediction.
+    let opts = StreamOptions::builder(conv3())
+        .seed(5)
+        .sched(SchedPolicy::LeastLoaded)
+        .traffic(
+            TrafficConfig::poisson(conv3(), 48, 10.0)
+                .with_queue_depth(48) // holds every frame: drops impossible
+                .with_execute_every(8),
+        )
+        .build();
+    let mut cp = coproc("pin", 1);
+    let r = stream::run(&mut cp, &opts).unwrap();
+    assert_eq!(r.frames, 48, "generated frames rule, not opts.frames");
+    let tr = r.traffic.as_ref().expect("traffic run carries a report");
+    assert_eq!(tr.generated, 48);
+    assert_eq!(tr.dropped, 0, "a 48-deep queue cannot overflow 48 frames");
+    assert_eq!(tr.served, 48);
+    assert_eq!(tr.executed, 6, "every 8th of 48 dispatches runs for real");
+    assert_eq!(r.runs.len(), tr.executed, "lanes ran exactly the sampled frames");
+    assert!(r.all_valid(), "sampled frames must pass CRC + groundtruth");
+    // Percentiles are ordered and sit in the physically meaningful
+    // band: a conv3 frame's fault-free service chain alone is ~50 ms,
+    // so the median sojourn cannot be below it...
+    let l = &tr.latency;
+    assert!(l.p50 <= l.p99 && l.p99 <= l.p999 && l.p999 <= l.max, "{l:?}");
+    assert!(l.p50 >= SimTime::from_ms(40.0), "p50 {:?} below service time", l.p50);
+    // ...and at 10 Hz against a ~20 Hz service rate, the median sits
+    // well under the Masked DES average (which prices the saturated
+    // pipeline, DRAM buffer copies and queueing included).
+    assert!(
+        l.p50 < r.masked.avg_latency,
+        "p50 {:?} vs masked avg {:?}",
+        l.p50,
+        r.masked.avg_latency
+    );
+    assert!(tr.virtual_fps > 0.0);
+    // The whole report is a pure function of (config, seed, service
+    // model): a second sweep reproduces it exactly.
+    let mut cp2 = coproc("pin2", 1);
+    let r2 = stream::run(&mut cp2, &opts).unwrap();
+    assert_eq!(r2.traffic.as_ref(), Some(tr), "TrafficReport must be deterministic");
+}
+
+#[test]
+fn bounded_queue_drops_are_deterministic_and_counted() {
+    // 10 backlogged frames into a single node behind a 2-deep queue:
+    // one dispatches immediately, two queue, seven drop (drop-newest).
+    let opts = StreamOptions::builder(conv3())
+        .seed(3)
+        .traffic(TrafficConfig::backlog(conv3(), 10).with_queue_depth(2))
+        .build();
+    let mut cp = coproc("drops", 1);
+    let r = stream::run(&mut cp, &opts).unwrap();
+    let tr = r.traffic.as_ref().unwrap();
+    assert_eq!(tr.generated, 10);
+    assert_eq!(tr.served, 3);
+    assert_eq!(tr.dropped, 7);
+    let dropped: Vec<usize> = tr
+        .fates
+        .iter()
+        .filter(|f| matches!(f.outcome, FrameOutcome::Dropped { .. }))
+        .map(|f| f.index)
+        .collect();
+    assert_eq!(dropped, (3..10).collect::<Vec<_>>(), "newest arrivals shed");
+    assert_eq!(r.runs.len(), tr.executed, "only served frames execute");
+    assert!(r.all_valid());
+
+    // Seeded Poisson bursts overflow the same bound: each 6-frame
+    // burst lands on a node that can hold at most 1 + 2 of them.
+    let bursty = TrafficConfig {
+        clients: vec![SensorClient {
+            name: "burst-cam".into(),
+            bench: conv3(),
+            class: TrafficClass::Standard,
+            process: ArrivalProcess::Poisson { rate_hz: 40.0, burst: 6 },
+            frames: 18,
+        }],
+        queue_depth: 2,
+        policy: Default::default(),
+        execute_every: 1,
+    };
+    let opts2 = StreamOptions::builder(conv3())
+        .seed(11)
+        .sched(SchedPolicy::LeastLoaded)
+        .traffic(bursty)
+        .build();
+    let mut a = coproc("burst_a", 1);
+    let ra = stream::run(&mut a, &opts2).unwrap();
+    let ta = ra.traffic.as_ref().unwrap();
+    assert!(ta.dropped > 0, "a 6-frame burst must overflow a 2-deep queue");
+    assert_eq!(ta.served + ta.dropped, 18);
+    assert_eq!(ra.runs.len(), ta.executed);
+    // Same seed, same drops — frame for frame.
+    let mut b = coproc("burst_b", 1);
+    let rb = stream::run(&mut b, &opts2).unwrap();
+    assert_eq!(rb.traffic.as_ref(), Some(ta), "drop pattern must be seeded");
+}
+
+#[test]
+fn alerts_preempt_queued_bulk_frames() {
+    // 12 bulk + 4 alert frames backlogged at t=0 on one node: the
+    // first bulk frame grabs the idle node before the alerts exist in
+    // the queue, but every later dispatch must prefer alerts.
+    let t = TrafficConfig {
+        clients: vec![
+            SensorClient {
+                name: "downlink".into(),
+                bench: conv3(),
+                class: TrafficClass::Bulk,
+                process: ArrivalProcess::Backlog,
+                frames: 12,
+            },
+            SensorClient {
+                name: "ship-alert".into(),
+                bench: conv3(),
+                class: TrafficClass::Alert,
+                process: ArrivalProcess::Backlog,
+                frames: 4,
+            },
+        ],
+        queue_depth: 32,
+        policy: Default::default(),
+        // Keep the real-execution side light: the ordering pin lives
+        // entirely in the virtual schedule.
+        execute_every: 8,
+    };
+    let opts = StreamOptions::builder(conv3())
+        .seed(6)
+        .sched(SchedPolicy::LeastLoaded)
+        .traffic(t)
+        .build();
+    let mut cp = coproc("classes", 1);
+    let r = stream::run(&mut cp, &opts).unwrap();
+    let tr = r.traffic.as_ref().unwrap();
+    assert_eq!(tr.generated, 16);
+    assert_eq!(tr.dropped, 0, "a 32-deep queue holds the whole backlog");
+    let dispatch_of = |f: &spacecodesign::coordinator::traffic::FrameFate| match f.outcome {
+        FrameOutcome::Served { dispatch, .. } => dispatch,
+        _ => panic!("undropped frame must be served: {f:?}"),
+    };
+    let last_alert = tr
+        .fates
+        .iter()
+        .filter(|f| f.class == TrafficClass::Alert)
+        .map(dispatch_of)
+        .max()
+        .unwrap();
+    let bulk_before = tr
+        .fates
+        .iter()
+        .filter(|f| f.class == TrafficClass::Bulk && dispatch_of(f) < last_alert)
+        .count();
+    assert!(
+        bulk_before <= 1,
+        "only the head-start bulk frame may beat the alerts: {bulk_before}"
+    );
+    // Priority shows up in the class medians too: alerts wait less.
+    let p50_of = |c: TrafficClass| {
+        tr.per_class
+            .iter()
+            .find(|s| s.class == c)
+            .map(|s| s.p50)
+            .expect("class generated frames")
+    };
+    assert!(
+        p50_of(TrafficClass::Alert) < p50_of(TrafficClass::Bulk),
+        "alert p50 {:?} !< bulk p50 {:?}",
+        p50_of(TrafficClass::Alert),
+        p50_of(TrafficClass::Bulk)
+    );
+}
+
+#[test]
+fn soak_samples_execution_and_keeps_allocation_flat() {
+    // Long-soak mode: 10k virtual frames, real execution sampled every
+    // 500th dispatch — the lanes see ~20 frames while the report
+    // accounts for all 10 000, and the arena stays on its freelist.
+    let opts = StreamOptions::builder(conv3())
+        .seed(13)
+        .sched(SchedPolicy::LeastLoaded)
+        .traffic(
+            TrafficConfig::poisson(conv3(), 10_000, 15.0)
+                .with_queue_depth(64)
+                .with_execute_every(500),
+        )
+        .build();
+    let mut cp = coproc("soak", 1);
+    let r = stream::run(&mut cp, &opts).unwrap();
+    let tr = r.traffic.as_ref().unwrap();
+    assert_eq!(tr.generated, 10_000);
+    assert_eq!(tr.served + tr.dropped, 10_000);
+    assert!(
+        (10..=30).contains(&tr.executed),
+        "sampling every 500th of ~10k dispatches: {}",
+        tr.executed
+    );
+    assert_eq!(r.runs.len(), tr.executed);
+    assert!(r.all_valid());
+    assert!(tr.latency.p50 >= SimTime::from_ms(40.0));
+    assert!(tr.span > SimTime::from_secs(100.0), "10k frames at 15 Hz span minutes");
+    let s = r.arena;
+    assert!(
+        s.reuse_ratio() > 0.7,
+        "soak execution must run on recycled buffers: {s:?}"
+    );
+    // A second soak on the warm topology allocates (nearly) nothing.
+    let r2 = stream::run(&mut cp, &opts).unwrap();
+    assert_eq!(r2.traffic, r.traffic, "soak schedule is seed-deterministic");
+    assert!(
+        r2.arena.reused > r2.arena.allocated,
+        "warm soak must be freelist-served: {:?}",
+        r2.arena
+    );
+}
+
+#[test]
+fn fault_draws_are_independent_of_dispatch_order() {
+    // The same 10 frame seeds through (a) the stochastic lld harness
+    // on 2 nodes and (b) the legacy backlog sweep on 1 node: fault
+    // draws are keyed by frame seed, so which frames fault, how many
+    // resends they pay and what they deliver must match bit for bit.
+    let stochastic = StreamOptions::builder(conv3())
+        .seed(77)
+        .sched(SchedPolicy::LeastLoaded)
+        .fault(flips(23))
+        .traffic(TrafficConfig::poisson(conv3(), 10, 40.0).with_queue_depth(10))
+        .build();
+    let mut a = coproc("order_a", 2);
+    let ra = stream::run(&mut a, &stochastic).unwrap();
+    let ta = ra.traffic.as_ref().unwrap();
+    assert_eq!(ta.dropped, 0, "a 10-deep queue cannot overflow 10 frames");
+
+    let legacy = StreamOptions::builder(conv3())
+        .frames(10)
+        .seed(77)
+        .fault(flips(23))
+        .build();
+    let mut b = coproc("order_b", 1);
+    let rb = stream::run(&mut b, &legacy).unwrap();
+
+    assert!(ra.faults.faulted > 0, "plan must actually inject: {:?}", ra.faults);
+    assert_eq!(ra.faults, rb.faults, "identical plan-wide fault draws");
+    assert_eq!(ra.retransmits, rb.retransmits);
+    let ea: Vec<usize> = ra.frame_errors.iter().map(|e| e.frame).collect();
+    let eb: Vec<usize> = rb.frame_errors.iter().map(|e| e.frame).collect();
+    assert_eq!(ea, eb, "the same frames must fail either way");
+    assert_eq!(ra.runs.len(), rb.runs.len());
+    for (i, (x, y)) in ra.runs.iter().zip(&rb.runs).enumerate() {
+        assert_eq!(x.t_cif, y.t_cif, "frame {i} CIF time (incl. resends)");
+        assert_eq!(x.t_proc, y.t_proc, "frame {i} proc time");
+        assert_eq!(x.t_lcd, y.t_lcd, "frame {i} LCD time (incl. resends)");
+        assert_eq!(x.retransmits, y.retransmits, "frame {i} resend count");
+        assert_eq!(x.validation.pass, y.validation.pass, "frame {i}");
+        assert_eq!(x.validation.mismatches, y.validation.mismatches, "frame {i}");
+    }
+}
+
+#[test]
+fn traffic_off_stays_bit_exact_with_traffic_backlog_equivalent() {
+    // The deterministic pin both ways: an explicit single-client
+    // backlog config must reproduce the legacy fixed sweep exactly
+    // (same seeds, same per-frame results), and the traffic-off result
+    // carries no report.
+    let n = 5;
+    let legacy = StreamOptions::builder(conv3()).frames(n).seed(30).build();
+    let mut a = coproc("exact_a", 1);
+    let ra = stream::run(&mut a, &legacy).unwrap();
+    assert!(ra.traffic.is_none());
+
+    let explicit = StreamOptions::builder(conv3())
+        .seed(30)
+        .traffic(TrafficConfig::backlog(conv3(), n))
+        .build();
+    let mut b = coproc("exact_b", 1);
+    let rb = stream::run(&mut b, &explicit).unwrap();
+    let tb = rb.traffic.as_ref().unwrap();
+    assert_eq!(tb.served, n);
+    assert_eq!(tb.dropped, 0);
+    assert_eq!(ra.runs.len(), rb.runs.len());
+    for (i, (x, y)) in ra.runs.iter().zip(&rb.runs).enumerate() {
+        assert_eq!(x.t_cif, y.t_cif, "frame {i}");
+        assert_eq!(x.t_proc, y.t_proc, "frame {i}");
+        assert_eq!(x.t_lcd, y.t_lcd, "frame {i}");
+        assert_eq!(x.validation.mismatches, y.validation.mismatches, "frame {i}");
+        assert_eq!(x.crc_ok, y.crc_ok, "frame {i}");
+    }
+}
