@@ -12,7 +12,7 @@ fn main() -> spacecodesign::Result<()> {
     let t0 = std::time::Instant::now();
     let mut cp = CoProcessor::with_defaults()?;
     println!("== spacecodesign end-to-end pipeline ==");
-    println!("PJRT platform: {}\n", cp.runtime.platform());
+    println!("PJRT platform: {}\n", cp.nodes[0].runtime.platform());
     println!("{}", report::table2_header());
 
     let mut all_pass = true;
@@ -47,10 +47,12 @@ fn main() -> spacecodesign::Result<()> {
         cnn.accuracy.unwrap_or(0.0) * 100.0
     );
 
+    // One-shot runs stay on node 0 whatever the topology size.
+    let rt = &cp.nodes[0].runtime;
     println!(
         "\nPJRT executions: {} ({} wallclock inside XLA)",
-        cp.runtime.executions,
-        spacecodesign::util::fmt_time(cp.runtime.exec_wallclock.as_secs_f64()),
+        rt.executions,
+        spacecodesign::util::fmt_time(rt.exec_wallclock.as_secs_f64()),
     );
     println!("driver wallclock: {:.1}s", t0.elapsed().as_secs_f64());
     if !all_pass {

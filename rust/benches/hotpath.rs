@@ -26,7 +26,7 @@
 use std::collections::BTreeMap;
 
 use spacecodesign::cnn::layers::FeatureMap;
-use spacecodesign::config::SystemConfig;
+use spacecodesign::config::{FleetSpec, ResolvedConfig, Setting, SystemConfig};
 use spacecodesign::vpu::scheduler::SchedPolicy;
 use spacecodesign::cnn::weights::Weights;
 use spacecodesign::cnn::{cnn_forward, fast as cnn_fast};
@@ -476,6 +476,72 @@ fn main() {
     };
     if let Some((_, f4)) = base_fps.iter().find(|(v, _)| *v == 4) {
         println!("    (vpus=4 sustained {f4:.1} frames/s)");
+    }
+
+    // --- heterogeneous fleet dispatch (ISSUE 8) --------------------------
+    // New rows (non-gating until they land on main): the same Poisson
+    // load over a skewed fleet — two paper nodes plus two half-clock
+    // 4-SHAVE parts — under the node-blind dispatcher and under
+    // earliest-finish-time. Wallclock prices the schedulers themselves
+    // (identical real work either way); the annotation prints the
+    // virtual FPS delta, which is where EFT pays off.
+    {
+        let fleet_coproc = || -> spacecodesign::Result<CoProcessor> {
+            let mut rc = ResolvedConfig::from_env();
+            rc.fleet = Setting::cli(Some(FleetSpec::parse("2x600MHz:12,2x300MHz:4")?));
+            let mut cp = CoProcessor::from_config(SystemConfig::paper(), &rc)?;
+            cp.faults = None;
+            cp.backend = KernelBackend::Optimized;
+            Ok(cp)
+        };
+        let mut virt = Vec::new();
+        for sched in [SchedPolicy::LeastLoaded, SchedPolicy::Eft] {
+            match fleet_coproc() {
+                Err(e) => eprintln!("(skipping fleet sched={} bench: {e})", sched.name()),
+                Ok(mut cp) => {
+                    let opts = StreamOptions::builder(Benchmark::Conv { k: 3 })
+                        .sched(sched)
+                        .traffic(TrafficConfig::poisson(Benchmark::Conv { k: 3 }, 64, 24.0))
+                        .build();
+                    let mut last_fps = 0.0;
+                    let s = bench(1, 3, || {
+                        let r = stream::run(&mut cp, &opts).unwrap();
+                        last_fps = r.traffic.as_ref().map_or(0.0, |t| t.virtual_fps);
+                        std::hint::black_box(r);
+                    });
+                    log.push(&format!("stream conv3 N=64 fleet=mixed sched={}", sched.name()), &s);
+                    virt.push((sched.name(), last_fps));
+                }
+            }
+        }
+        if let [(a, fa), (b, fb)] = virt.as_slice() {
+            println!("    (virtual FPS on the skewed fleet: {fa:.1} {a} vs {fb:.1} {b})");
+        }
+
+        // The host-bus knee: four paper nodes behind a single shared
+        // transfer channel. The wallclock row prices the arbiter; the
+        // annotation shows virtual throughput pinned at the bus
+        // ceiling instead of 4x one node.
+        match CoProcessor::with_vpus(SystemConfig::paper(), 4) {
+            Err(e) => eprintln!("(skipping bus-knee bench: {e})"),
+            Ok(mut cp) => {
+                cp.faults = None;
+                cp.backend = KernelBackend::Optimized;
+                let opts = StreamOptions::builder(Benchmark::Conv { k: 3 })
+                    .sched(SchedPolicy::LeastLoaded)
+                    .traffic(TrafficConfig::poisson(Benchmark::Conv { k: 3 }, 64, 48.0))
+                    .bus_channels(1)
+                    .build();
+                let mut last_fps = 0.0;
+                let s = bench(1, 3, || {
+                    let r = stream::run(&mut cp, &opts).unwrap();
+                    last_fps = r.traffic.as_ref().map_or(0.0, |t| t.virtual_fps);
+                    std::hint::black_box(r);
+                });
+                log.push("stream conv3 N=64 vpus=4 bus=1", &s);
+                println!("    ({last_fps:.1} virtual FPS behind one host-bus channel)");
+            }
+        }
     }
 
     log.flush();

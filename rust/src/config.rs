@@ -72,6 +72,9 @@ pub struct VpuConfig {
     pub leon_clock_hz: f64,
     /// CMX scratchpad (SPM) capacity.
     pub cmx_bytes: usize,
+    /// On-package DRAM capacity (frame buffers + weight store live
+    /// here; masked mode double-buffers four frame-sized regions).
+    pub dram_bytes: usize,
     /// DRAM->DRAM buffered-copy rate for Masked-mode double buffering.
     /// Calibrated from the paper: "copying an 1MPixel frame requires
     /// ~42ms" => 25 Mpixel/s (DESIGN.md §4).
@@ -88,6 +91,7 @@ impl VpuConfig {
             n_leons: 2,
             leon_clock_hz: 230.0e6, // LEON4 OS/RT clock on Myriad2
             cmx_bytes: 2 * 1024 * 1024,
+            dram_bytes: 512 * 1024 * 1024, // MA2450 on-package LPDDR3
             dram_copy_mpx_per_s: 25.0e6,
             dma_bytes_per_s: 1.5e9,
         }
@@ -99,6 +103,175 @@ impl VpuConfig {
         }
         if self.cmx_bytes < 64 * 1024 {
             return Err(Error::Config("CMX implausibly small".into()));
+        }
+        if self.dram_bytes < 16 * 1024 * 1024 {
+            return Err(Error::Config(
+                "DRAM implausibly small for masked double-buffering".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Default per-group DRAM when a fleet spec omits the `:<n>MB`
+/// suffix — the MA2450 fit, matching [`VpuConfig::myriad2`].
+pub const FLEET_DEFAULT_DRAM_MB: usize = 512;
+
+/// One homogeneous group of nodes inside a [`FleetSpec`]:
+/// `<count>x<clock>MHz:<shaves>[:<dram>MB]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetGroup {
+    pub count: usize,
+    pub clock_mhz: f64,
+    pub shaves: usize,
+    pub dram_mb: usize,
+}
+
+/// A heterogeneous VPU fleet (ISSUE 8): comma-separated groups, e.g.
+/// `2x600MHz:12,1x300MHz:4` — two full Myriad2-class nodes plus one
+/// half-clock 4-SHAVE part. Parsed from `--fleet` /
+/// `SPACECODESIGN_FLEET` via [`ResolvedConfig`]; node `i`'s
+/// [`VpuConfig`] comes from [`FleetSpec::node_vpu`], so every node's
+/// cost/power/DES models price its own silicon honestly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    pub groups: Vec<FleetGroup>,
+}
+
+impl FleetSpec {
+    /// Parse the CLI/env spelling. Round-trips through
+    /// [`std::fmt::Display`]; rejects malformed or implausible specs.
+    pub fn parse(s: &str) -> Result<FleetSpec> {
+        let bad = |part: &str, why: &str| {
+            Error::Config(format!("bad fleet group '{part}': {why} (want <count>x<clock>MHz:<shaves>[:<dram>MB])"))
+        };
+        let mut groups = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (count_s, rest) = part
+                .split_once(['x', 'X'])
+                .ok_or_else(|| bad(part, "missing 'x'"))?;
+            let count: usize = count_s
+                .trim()
+                .parse()
+                .map_err(|_| bad(part, "bad node count"))?;
+            let mut fields = rest.split(':');
+            let clock_s = fields.next().unwrap_or("").trim();
+            let clock_s = clock_s
+                .strip_suffix("MHz")
+                .or_else(|| clock_s.strip_suffix("mhz"))
+                .or_else(|| clock_s.strip_suffix("MHZ"))
+                .unwrap_or(clock_s);
+            let clock_mhz: f64 = clock_s
+                .parse()
+                .map_err(|_| bad(part, "bad clock"))?;
+            let shaves: usize = fields
+                .next()
+                .ok_or_else(|| bad(part, "missing SHAVE count"))?
+                .trim()
+                .parse()
+                .map_err(|_| bad(part, "bad SHAVE count"))?;
+            let dram_mb = match fields.next() {
+                None => FLEET_DEFAULT_DRAM_MB,
+                Some(d) => {
+                    let d = d.trim();
+                    d.strip_suffix("MB")
+                        .or_else(|| d.strip_suffix("mb"))
+                        .unwrap_or(d)
+                        .parse()
+                        .map_err(|_| bad(part, "bad DRAM size"))?
+                }
+            };
+            if fields.next().is_some() {
+                return Err(bad(part, "trailing fields"));
+            }
+            groups.push(FleetGroup { count, clock_mhz, shaves, dram_mb });
+        }
+        let spec = FleetSpec { groups };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.groups.is_empty() {
+            return Err(Error::Config("empty fleet spec".into()));
+        }
+        for g in &self.groups {
+            if g.count == 0 {
+                return Err(Error::Config("fleet group with zero nodes".into()));
+            }
+            if g.shaves == 0 || g.shaves > 64 {
+                return Err(Error::Config(format!(
+                    "fleet SHAVE count {} out of range 1..=64",
+                    g.shaves
+                )));
+            }
+            if !(50.0..=2000.0).contains(&g.clock_mhz) {
+                return Err(Error::Config(format!(
+                    "fleet clock {} MHz out of range 50..=2000",
+                    g.clock_mhz
+                )));
+            }
+            if g.dram_mb < 16 {
+                return Err(Error::Config(format!(
+                    "fleet DRAM {} MB implausibly small",
+                    g.dram_mb
+                )));
+            }
+        }
+        let n = self.n_nodes();
+        if n > crate::coordinator::system::MAX_VPUS {
+            return Err(Error::Config(format!(
+                "fleet of {n} nodes exceeds MAX_VPUS {}",
+                crate::coordinator::system::MAX_VPUS
+            )));
+        }
+        Ok(())
+    }
+
+    /// Total node count across all groups.
+    pub fn n_nodes(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// The [`VpuConfig`] for node `index`: the base (paper) part with
+    /// this group's clock/SHAVEs/DRAM applied. The DRAM controller and
+    /// DMA engine run off the same system PLL as the SHAVEs, so the
+    /// buffered-copy and DMA rates scale with the clock ratio — a
+    /// half-clock node double-buffers masked frames at half the rate,
+    /// which the per-node Masked DES then prices. Indices beyond the
+    /// spec fall back to the base part unchanged.
+    pub fn node_vpu(&self, index: usize, base: &VpuConfig) -> VpuConfig {
+        let mut i = index;
+        for g in &self.groups {
+            if i < g.count {
+                let clock_hz = g.clock_mhz * 1.0e6;
+                let ratio = clock_hz / base.shave_clock_hz;
+                return VpuConfig {
+                    n_shaves: g.shaves,
+                    shave_clock_hz: clock_hz,
+                    dram_bytes: g.dram_mb * 1024 * 1024,
+                    dram_copy_mpx_per_s: base.dram_copy_mpx_per_s * ratio,
+                    dma_bytes_per_s: base.dma_bytes_per_s * ratio,
+                    ..*base
+                };
+            }
+            i -= g.count;
+        }
+        *base
+    }
+}
+
+impl std::fmt::Display for FleetSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, g) in self.groups.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{}x{}MHz:{}", g.count, g.clock_mhz, g.shaves)?;
+            if g.dram_mb != FLEET_DEFAULT_DRAM_MB {
+                write!(f, ":{}MB", g.dram_mb)?;
+            }
         }
         Ok(())
     }
@@ -183,13 +356,14 @@ impl<T> Setting<T> {
 
 /// CLI-side overrides feeding [`ResolvedConfig::resolve`] — `None`
 /// fields fall through to the environment, then the default.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct CliOverrides {
     pub backend: Option<crate::KernelBackend>,
     pub workers: Option<usize>,
     pub vpus: Option<usize>,
     pub fault_seed: Option<u64>,
     pub fault_rate: Option<f64>,
+    pub fleet: Option<FleetSpec>,
 }
 
 /// The one resolved runtime configuration (ISSUE 7 satellite): every
@@ -215,6 +389,12 @@ pub struct ResolvedConfig {
     /// Per-frame fault rate (`SPACECODESIGN_FAULT_RATE`; default 0.02,
     /// mirroring `FaultPlan::from_env`). Only meaningful with a seed.
     pub fault_rate: Setting<f64>,
+    /// Heterogeneous fleet spec (`--fleet` / `SPACECODESIGN_FLEET`;
+    /// default `None` = homogeneous paper parts). When set, it defines
+    /// the topology: `vpus` is derived from [`FleetSpec::n_nodes`]. An
+    /// explicit `--vpus` flag beats an *ambient* env fleet (CLI > env),
+    /// which then resolves to `None`.
+    pub fleet: Setting<Option<FleetSpec>>,
 }
 
 impl ResolvedConfig {
@@ -251,11 +431,27 @@ impl ResolvedConfig {
                 None => Setting::fallback(None),
             },
         };
-        let vpus = match cli.vpus {
-            Some(v) => Setting::cli(v),
-            None => match env("SPACECODESIGN_VPUS").and_then(|v| v.parse::<usize>().ok()) {
-                Some(v) => Setting::env(v.clamp(1, crate::coordinator::system::MAX_VPUS)),
-                None => Setting::fallback(1),
+        let fleet = match &cli.fleet {
+            Some(f) => Setting::cli(Some(f.clone())),
+            None => match env("SPACECODESIGN_FLEET").and_then(|v| FleetSpec::parse(&v).ok()) {
+                // An explicit --vpus flag beats an ambient env fleet
+                // (CLI > env): the fleet resolves away entirely so the
+                // topology stays homogeneous at the requested size.
+                Some(_) if cli.vpus.is_some() => Setting::fallback(None),
+                Some(f) => Setting::env(Some(f)),
+                None => Setting::fallback(None),
+            },
+        };
+        let vpus = match &fleet.value {
+            // A fleet defines the topology: node count comes from the
+            // spec, with the spec's own provenance.
+            Some(f) => Setting { value: f.n_nodes(), source: fleet.source },
+            None => match cli.vpus {
+                Some(v) => Setting::cli(v),
+                None => match env("SPACECODESIGN_VPUS").and_then(|v| v.parse::<usize>().ok()) {
+                    Some(v) => Setting::env(v.clamp(1, crate::coordinator::system::MAX_VPUS)),
+                    None => Setting::fallback(1),
+                },
             },
         };
         let fault_seed = match cli.fault_seed {
@@ -272,7 +468,7 @@ impl ResolvedConfig {
                 None => Setting::fallback(0.02),
             },
         };
-        ResolvedConfig { backend, workers, vpus, fault_seed, fault_rate }
+        ResolvedConfig { backend, workers, vpus, fault_seed, fault_rate, fleet }
     }
 
     /// The fault configuration this resolution implies (`None` when no
@@ -299,14 +495,20 @@ impl ResolvedConfig {
             Some(seed) => format!("seed {seed} rate {}", self.fault_rate.value),
             None => "off".to_string(),
         };
+        let fleet = match &self.fleet.value {
+            Some(f) => f.to_string(),
+            None => "off".to_string(),
+        };
         format!(
-            "config: backend {} [{}] | workers {} [{}] | vpus {} [{}] | faults {} [{}]",
+            "config: backend {} [{}] | workers {} [{}] | vpus {} [{}] | fleet {} [{}] | faults {} [{}]",
             self.backend.value.name(),
             self.backend.source.name(),
             workers,
             self.workers.source.name(),
             self.vpus.value,
             self.vpus.source.name(),
+            fleet,
+            self.fleet.source.name(),
             faults,
             self.fault_seed.source.name(),
         )
@@ -420,6 +622,104 @@ mod tests {
         assert!(s.contains("backend optimized [default]"), "{s}");
         assert!(s.contains("workers auto [default]"), "{s}");
         assert!(s.contains("vpus 1 [default]"), "{s}");
+        assert!(s.contains("fleet off [default]"), "{s}");
         assert!(s.contains("faults off [default]"), "{s}");
+    }
+
+    #[test]
+    fn fleet_spec_round_trips_through_display() {
+        for s in [
+            "2x600MHz:12,1x300MHz:4",
+            "1x600MHz:12",
+            "3x150MHz:2:64MB",
+            "1x600.5MHz:12",
+        ] {
+            let spec = FleetSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s, "canonical form of {s}");
+            assert_eq!(FleetSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+        // Tolerant spellings normalize to the canonical form.
+        let spec = FleetSpec::parse(" 2X600mhz:12 , 1x300:4:512mb ").unwrap();
+        assert_eq!(spec.to_string(), "2x600MHz:12,1x300MHz:4");
+        assert_eq!(spec.n_nodes(), 3);
+    }
+
+    #[test]
+    fn fleet_spec_rejects_malformed_and_implausible() {
+        for s in [
+            "",                  // empty
+            "2x600MHz",          // missing SHAVEs
+            "600MHz:12",         // missing count
+            "0x600MHz:12",       // zero nodes
+            "1x600MHz:0",        // zero SHAVEs
+            "1x600MHz:65",       // too many SHAVEs
+            "1x9000MHz:12",      // clock out of range
+            "1x600MHz:12:4MB",   // DRAM too small
+            "1x600MHz:12:4:4",   // trailing fields
+            "1xfastMHz:12",      // junk clock
+            "33x600MHz:12",      // exceeds MAX_VPUS
+        ] {
+            assert!(FleetSpec::parse(s).is_err(), "should reject {s:?}");
+        }
+    }
+
+    #[test]
+    fn fleet_node_vpu_scales_clock_shaves_and_copy_rates() {
+        let base = VpuConfig::myriad2();
+        let spec = FleetSpec::parse("1x600MHz:12,1x300MHz:4:256MB").unwrap();
+        // Node 0 is a plain Myriad2: bitwise-identical config, so the
+        // homogeneous-fleet compatibility pin holds by construction.
+        let n0 = spec.node_vpu(0, &base);
+        assert_eq!(n0.n_shaves, base.n_shaves);
+        assert_eq!(n0.shave_clock_hz, base.shave_clock_hz);
+        assert_eq!(n0.dram_copy_mpx_per_s, base.dram_copy_mpx_per_s);
+        assert_eq!(n0.dram_bytes, base.dram_bytes);
+        // Node 1 is half-clock, 4 SHAVEs, 256 MB; DRAM copy/DMA rates
+        // halve with the clock.
+        let n1 = spec.node_vpu(1, &base);
+        assert_eq!(n1.n_shaves, 4);
+        assert_eq!(n1.shave_clock_hz, 300.0e6);
+        assert_eq!(n1.dram_bytes, 256 * 1024 * 1024);
+        assert!((n1.dram_copy_mpx_per_s - base.dram_copy_mpx_per_s * 0.5).abs() < 1.0);
+        assert!((n1.dma_bytes_per_s - base.dma_bytes_per_s * 0.5).abs() < 1.0);
+        n1.validate().unwrap();
+        // Beyond the spec: base part unchanged.
+        assert_eq!(spec.node_vpu(7, &base).n_shaves, base.n_shaves);
+    }
+
+    #[test]
+    fn fleet_precedence_cli_over_env_and_vpus_flag_beats_env_fleet() {
+        let env = |k: &str| match k {
+            "SPACECODESIGN_FLEET" => Some("2x600MHz:12".to_string()),
+            "SPACECODESIGN_VPUS" => Some("7".to_string()),
+            _ => None,
+        };
+        // Env fleet wins over env vpus and derives the topology size.
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), env);
+        assert_eq!(rc.fleet.source, SettingSource::Env);
+        assert_eq!(rc.vpus.value, 2, "vpus derived from the fleet");
+        assert_eq!(rc.vpus.source, SettingSource::Env);
+        // CLI fleet beats env fleet.
+        let cli = CliOverrides {
+            fleet: Some(FleetSpec::parse("1x300MHz:4").unwrap()),
+            ..Default::default()
+        };
+        let rc = ResolvedConfig::resolve_with(&cli, env);
+        assert_eq!(rc.fleet.source, SettingSource::Cli);
+        assert_eq!(rc.vpus.value, 1);
+        assert!(rc.summary().contains("fleet 1x300MHz:4 [cli]"), "{}", rc.summary());
+        // An explicit --vpus flag beats the ambient env fleet: the
+        // fleet resolves away and the topology stays homogeneous.
+        let cli = CliOverrides { vpus: Some(3), ..Default::default() };
+        let rc = ResolvedConfig::resolve_with(&cli, env);
+        assert_eq!(rc.fleet.value, None);
+        assert_eq!(rc.vpus.value, 3);
+        assert_eq!(rc.vpus.source, SettingSource::Cli);
+        // Unparseable env fleet is ignored like other env knobs.
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), |k| {
+            (k == "SPACECODESIGN_FLEET").then(|| "garbage".to_string())
+        });
+        assert_eq!(rc.fleet.value, None);
+        assert_eq!(rc.vpus.value, 1);
     }
 }

@@ -209,6 +209,79 @@ pub fn simulate_masked(t: &MaskedTiming, n_frames: usize) -> MaskedResult {
     }
 }
 
+/// Fleet-level Masked DES under shared-host-bus contention (ISSUE 8).
+///
+/// Each node `i` runs the double-buffered pipeline on its own timing
+/// `timings[i]`, abstracted to its steady-state cycle: one frame =
+/// a host-bus grant for the wire portion `t_cif + t_lcd` (arbitrated
+/// FIFO across `bus_channels` shared channels) plus the node-local
+/// residual `period - wire` (buffer copies + processing, which need no
+/// host bandwidth). With `bus_channels >= nodes` no request ever
+/// queues and the system reproduces the uncontended sum of per-node
+/// rates; with fewer channels the wire grants serialize and the system
+/// saturates at the host — the knee `analytic::fleet_masked_throughput`
+/// predicts in closed form.
+pub fn simulate_masked_fleet(
+    timings: &[MaskedTiming],
+    bus_channels: usize,
+    frames_per_node: usize,
+) -> MaskedResult {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    assert!(!timings.is_empty(), "fleet DES needs at least one node");
+    assert!(frames_per_node >= 4, "need a few frames for steady state");
+    let periods: Vec<SimTime> =
+        timings.iter().map(|t| t.t_proc.max(t.chain())).collect();
+    let wires: Vec<SimTime> =
+        timings.iter().map(|t| t.t_cif + t.t_lcd).collect();
+    let mut bus = crate::fabric::bus::HostBus::new(bus_channels);
+    // (request time, node, frame#) — popped in time order, ties by
+    // node index, so bus grants are FIFO and fully deterministic.
+    let mut heap = BinaryHeap::new();
+    for n in 0..timings.len() {
+        heap.push(Reverse((SimTime::ZERO, n, 0usize)));
+    }
+    let mut completions: Vec<(SimTime, SimTime)> = Vec::new();
+    while let Some(Reverse((t, node, j))) = heap.pop() {
+        let grant = bus.request(t, wires[node]);
+        let residual = periods[node].saturating_sub(wires[node]);
+        let complete = grant.end + residual;
+        completions.push((t, complete));
+        if j + 1 < frames_per_node {
+            heap.push(Reverse((complete, node, j + 1)));
+        }
+    }
+    completions.sort_by_key(|&(_, c)| c);
+    let first_latency = completions[0].1;
+    // Steady-state window: skip fill and drain quarters.
+    let n = completions.len();
+    let s = n / 4;
+    let e = (3 * n / 4).max(s + 2).min(n);
+    let span = (completions[e - 1].1 - completions[s].1).as_secs();
+    let throughput_fps = if span > 0.0 {
+        (e - 1 - s) as f64 / span
+    } else {
+        0.0
+    };
+    let lat_sum: f64 = completions[s..e]
+        .iter()
+        .map(|&(req, c)| (c - req).as_secs())
+        .sum();
+    let avg_latency = SimTime::from_secs(lat_sum / (e - s) as f64);
+    let period = if throughput_fps > 0.0 {
+        SimTime::from_secs(1.0 / throughput_fps)
+    } else {
+        SimTime::ZERO
+    };
+    MaskedResult {
+        first_latency,
+        avg_latency,
+        period,
+        throughput_fps,
+        frames: n,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -366,6 +439,53 @@ mod tests {
         let none = merge_masked(&[]);
         assert_eq!(none.throughput_fps, 0.0);
         assert_eq!(none.frames, 0);
+    }
+
+    #[test]
+    fn fleet_des_uncontended_matches_summed_nodes() {
+        // Plenty of host channels: the fleet DES must reproduce the
+        // per-node sum (merge_masked of independent pipelines).
+        let t = conv_timing(29.0);
+        let one = simulate_masked(&t, 32);
+        for nodes in [1usize, 2, 4] {
+            let fleet = simulate_masked_fleet(&vec![t; nodes], nodes, 32);
+            let expect = nodes as f64 * one.throughput_fps;
+            let rel = (fleet.throughput_fps - expect).abs() / expect;
+            assert!(rel < 0.02, "{nodes} nodes: {} vs {expect}", fleet.throughput_fps);
+        }
+    }
+
+    #[test]
+    fn fleet_des_single_channel_saturates_at_the_host() {
+        // conv3: period 126 ms, wire 42 ms — one host channel can grant
+        // at most 1/42ms = 23.8 frames/s, so 4 nodes (31.7 uncontended)
+        // land at the bus ceiling instead of scaling linearly.
+        let t = conv_timing(8.0);
+        let one = simulate_masked(&t, 32).throughput_fps;
+        let fleet = simulate_masked_fleet(&vec![t; 4], 1, 32);
+        let linear = 4.0 * one;
+        let ceiling = 1.0 / (t.t_cif + t.t_lcd).as_secs();
+        assert!(
+            fleet.throughput_fps < 0.8 * linear,
+            "contended {} should be well below linear {linear}",
+            fleet.throughput_fps
+        );
+        let rel = (fleet.throughput_fps - ceiling).abs() / ceiling;
+        assert!(rel < 0.05, "{} vs bus ceiling {ceiling}", fleet.throughput_fps);
+        // Queued bus grants also stretch latency past the uncontended
+        // cycle.
+        assert!(fleet.avg_latency > simulate_masked(&t, 32).period);
+    }
+
+    #[test]
+    fn fleet_des_is_deterministic() {
+        let t = conv_timing(29.0);
+        let mixed = vec![t, conv_timing(114.0), conv_timing(8.0)];
+        let a = simulate_masked_fleet(&mixed, 1, 24);
+        let b = simulate_masked_fleet(&mixed, 1, 24);
+        assert_eq!(a.throughput_fps, b.throughput_fps);
+        assert_eq!(a.avg_latency, b.avg_latency);
+        assert_eq!(a.frames, 3 * 24);
     }
 
     #[test]

@@ -8,12 +8,18 @@
 //!    (backlog, Poisson bursts, orbital duty cycles); bounded
 //!    admission queues apply the drop/degrade policy; and the
 //!    dispatcher assigns each admitted frame to a VPU node per the
-//!    configured [`SchedPolicy`] — static round-robin, or
-//!    earliest-free-node with strict priority classes. Every frame's
+//!    configured [`SchedPolicy`] — static round-robin,
+//!    earliest-free-node with strict priority classes, or (ISSUE 8)
+//!    earliest-finish-time with bounded work stealing. Every frame's
 //!    lifecycle (arrival → admitted → dispatched → egressed, or
 //!    dropped) is decided here, deterministically, with virtual
 //!    dispatch/egress times priced by the same CIF + SHAVE + LCD
-//!    chain the Masked DES uses.
+//!    chain the Masked DES uses — priced *per node*, so a
+//!    heterogeneous fleet spec is honest about which node is fast.
+//!    With [`StreamOptions::bus_channels`] set, a host-bus arbiter
+//!    additionally serializes concurrent CIF/LCD wire occupancy over
+//!    the framing processor's channels, and each frame's grant delay
+//!    lands in its `t_cif`.
 //! 2. **Real execution**: per node, the three stages of the paper's
 //!    Masked mode run concurrently on real threads over bounded
 //!    queues (depth 1 = the VPU's double-buffered DRAM slots) —
@@ -107,6 +113,13 @@ pub struct StreamOptions {
     /// classes, bounded admission. `None` = the legacy backlog sweep
     /// of `frames` identical frames.
     pub traffic: Option<TrafficConfig>,
+    /// Shared-host-bus capacity (ISSUE 8): the number of concurrent
+    /// CIF/LCD transfers the framing processor can wire at once. When
+    /// set, the virtual-time dispatcher arbitrates every frame's wire
+    /// occupancy over these channels and the grant delays stretch the
+    /// schedule (and each frame's `t_cif`). `None` = infinite host
+    /// bandwidth — the legacy model, bit-exact.
+    pub bus_channels: Option<usize>,
 }
 
 impl StreamOptions {
@@ -126,6 +139,7 @@ impl StreamOptions {
                 vpus: None,
                 fault: None,
                 traffic: None,
+                bus_channels: None,
             },
         }
     }
@@ -198,6 +212,13 @@ impl StreamOptionsBuilder {
     /// bounded admission — see [`TrafficConfig`]).
     pub fn traffic(mut self, cfg: TrafficConfig) -> Self {
         self.opts.traffic = Some(cfg);
+        self
+    }
+
+    /// Model the framing processor's host bus as `channels` concurrent
+    /// transfer channels (see [`StreamOptions::bus_channels`]).
+    pub fn bus_channels(mut self, channels: usize) -> Self {
+        self.opts.bus_channels = Some(channels);
         self
     }
 
@@ -414,9 +435,11 @@ pub(crate) fn proc_time_of(
     Ok(makespan_of(cost, vpu, bench, &w))
 }
 
-/// Masked-mode phase timings derived from an Unmasked frame.
-pub(crate) fn masked_timing_of(cfg: &SystemConfig, run: &FrameRun) -> MaskedTiming {
-    let copy_rate = cfg.vpu.dram_copy_mpx_per_s;
+/// Masked-mode phase timings derived from an Unmasked frame. `vpu` is
+/// the part that ran the frame — buffer-copy legs scale with *its*
+/// DRAM copy rate, so a half-clock fleet node prices its own chain.
+pub(crate) fn masked_timing_of(vpu: &VpuConfig, run: &FrameRun) -> MaskedTiming {
+    let copy_rate = vpu.dram_copy_mpx_per_s;
     let in_px = run.bench.input().mpixels() * (1 << 20) as f64;
     let out_px = run.bench.output().mpixels() * (1 << 20) as f64;
     MaskedTiming {
@@ -617,6 +640,7 @@ impl EgressStage {
     pub(crate) fn run(
         &mut self,
         power: &PowerModel,
+        n_shaves: usize,
         ex: ExecutedJob,
         arena: &FrameArena,
         faults: Option<&FaultPlan>,
@@ -759,7 +783,7 @@ impl EgressStage {
             crc_ok: rx.crc_ok,
             validation,
             accuracy,
-            power_w: power.shave_power(bench.kind()),
+            power_w: power.shave_power_for(bench.kind(), n_shaves),
             t_leon: job.t_leon,
             t_exec_wall: exec_wall,
             retransmits: job.retransmits + lcd_retransmits,
@@ -865,33 +889,49 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
 
     // Phase 1 — the event loop. Each frame's virtual service time is
     // the same fault-free chain the Unmasked path measures (CIF wire
-    // in + scheduled SHAVE makespan + LCD wire out), priced off node
-    // 0's cost model — the topology is homogeneous.
+    // in + scheduled SHAVE makespan + LCD wire out), priced with the
+    // *dispatch target's* cost model — on a homogeneous topology every
+    // node prices identically (bit-exact with the node-0 pricing this
+    // replaced); under a fleet spec the schedule is honest about which
+    // node is fast. The CIF/LCD wire legs are clocked off the framing
+    // processor's pixel PLLs and are the same for every node; with
+    // `bus_channels` set they also contend for the shared host bus.
     let schedule = {
-        let node0 = &nodes[0];
+        let nodes: &[VpuNode] = nodes;
         let cif_clk = ClockDomain::new(cfg.cif.pixel_clock_hz);
         let lcd_clk = ClockDomain::new(cfg.lcd.pixel_clock_hz);
-        let service = |b: Benchmark, seed: u64| -> SimTime {
+        let wire_of = |b: Benchmark| -> SimTime {
             let (i, o) = (b.input(), b.output());
-            let t_cif = timing::planes_time(
+            timing::planes_time(
                 &cif_clk,
                 i.width,
                 i.height,
                 i.channels,
                 cfg.cif.porch_cycles_per_line,
-            );
-            let t_lcd = timing::frame_time(
+            ) + timing::frame_time(
                 &lcd_clk,
                 o.width,
                 o.height,
                 cfg.lcd.porch_cycles_per_line,
-            );
-            let t_proc =
-                proc_time_of(&node0.cost, &cfg.vpu, node0.ingest.mesh.as_ref(), b, seed)
-                    .unwrap_or(SimTime::ZERO);
-            t_cif + t_proc + t_lcd
+            )
         };
-        traffic::build_schedule(tcfg, opts.seed, n_nodes, opts.sched, service)
+        let service = |node: usize, b: Benchmark, seed: u64| -> SimTime {
+            let nd = &nodes[node];
+            let t_proc =
+                proc_time_of(&nd.cost, &nd.cost.vpu, nd.ingest.mesh.as_ref(), b, seed)
+                    .unwrap_or(SimTime::ZERO);
+            wire_of(b) + t_proc
+        };
+        let bus = opts.bus_channels.map(crate::fabric::bus::HostBus::new);
+        traffic::build_schedule_with(
+            tcfg,
+            opts.seed,
+            n_nodes,
+            opts.sched,
+            bus,
+            |_node, b| wire_of(b),
+            service,
+        )
     };
     let n = schedule.generated;
     let arena_stats0: Vec<ArenaStats> = nodes.iter().map(|v| v.arena.stats()).collect();
@@ -939,15 +979,24 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
             s.spawn(move || {
                 for sf in lane_frames.iter().filter(|f| f.execute) {
                     let t0 = Instant::now();
-                    let job = ingest.run(
-                        backend,
-                        cost,
-                        &cfg.vpu,
-                        sf.bench,
-                        sf.seed,
-                        arena,
-                        faults,
-                    );
+                    // Priced with this node's own part description; the
+                    // scheduler's host-bus grant delay (ZERO with the
+                    // bus off) is charged to the frame's CIF leg, so
+                    // FrameRun.t_cif reflects the queued grant.
+                    let job = ingest
+                        .run(
+                            backend,
+                            cost,
+                            &cost.vpu,
+                            sf.bench,
+                            sf.seed,
+                            arena,
+                            faults,
+                        )
+                        .map(|mut j| {
+                            j.t_cif += sf.bus_wait;
+                            j
+                        });
                     timed(&busy[0], t0);
                     // Receiver gone (downstream panic): stop producing.
                     if tx1.send((sf.index, job)).is_err() {
@@ -980,7 +1029,8 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
                     let r = match ex {
                         Ok(ex) => {
                             let t0 = Instant::now();
-                            let run = egress.run(power, ex, arena, faults);
+                            let run =
+                                egress.run(power, cost.vpu.n_shaves, ex, arena, faults);
                             timed(&busy[2], t0);
                             run
                         }
@@ -1026,20 +1076,24 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
     // The paper's single-node Masked DES, from the sweep's first
     // delivered frame (unchanged by the topology)...
     let masked = match runs.first() {
-        Some(r0) => simulate_masked(&masked_timing_of(cfg, r0), n.max(8)),
+        Some(r0) => simulate_masked(
+            &masked_timing_of(&nodes[r0.node].cost.vpu, r0),
+            n.max(8),
+        ),
         // Every frame failed: a degenerate (all-zero) timing keeps the
         // result shape intact; `rate_hz` reports it as 0 FPS.
         None => simulate_masked(&zero_timing(), n.max(8)),
     };
     // ...and the system-level merge: each node's DES over its
-    // dispatched share, throughputs summed.
+    // dispatched share — priced with that node's own part under a
+    // fleet spec — throughputs summed.
     let per_node_masked: Vec<MaskedResult> = (0..n_nodes)
         .filter(|&lane| per_node_frames[lane] > 0)
         .map(|lane| {
             let timing = runs
                 .iter()
                 .find(|r| r.node == lane)
-                .map(|r| masked_timing_of(cfg, r))
+                .map(|r| masked_timing_of(&nodes[lane].cost.vpu, r))
                 .unwrap_or_else(zero_timing);
             simulate_masked(&timing, per_node_frames[lane].max(8))
         })

@@ -93,11 +93,17 @@ impl FrameRun {
 /// blocks wired to it — everything a frame needs once the dispatcher
 /// has routed it here.
 ///
-/// Nodes are homogeneous (same `SystemConfig`) but fully independent at
-/// runtime: separate execution runtimes (a VPU's firmware is its own),
-/// separate driver/interface state, separate cost/power models and
-/// separate frame-buffer arenas, so N nodes stream N frames genuinely
-/// concurrently with no shared locks on the frame path.
+/// Nodes are fully independent at runtime: separate execution runtimes
+/// (a VPU's firmware is its own), separate driver/interface state,
+/// separate cost/power models and separate frame-buffer arenas, so N
+/// nodes stream N frames genuinely concurrently with no shared locks on
+/// the frame path. Since ISSUE 8 they need not be *identical* either:
+/// a [`crate::config::FleetSpec`] (`--fleet` / `SPACECODESIGN_FLEET`)
+/// gives each node its own clock, SHAVE count and DRAM size, carried
+/// here as the node's own [`VpuConfig`] inside its [`CostModel`] — so
+/// `shave_time_ideal`/`leon_time` and the Masked DES price every node
+/// honestly. Without a fleet spec all nodes clone `SystemConfig::vpu`,
+/// which keeps the homogeneous paths bit-exact.
 pub struct VpuNode {
     /// Topology index — also the node's fault-plan hop id
     /// (`Hop::Cif(index)` / `Hop::Lcd(index)`).
@@ -120,8 +126,10 @@ pub struct VpuNode {
 }
 
 impl VpuNode {
-    /// Build node `index` of the topology.
-    fn new(index: usize, cfg: &SystemConfig) -> Result<VpuNode> {
+    /// Build node `index` of the topology running the part described by
+    /// `vpu` (the fleet spec's entry for this index, or `cfg.vpu` on a
+    /// homogeneous topology).
+    fn new(index: usize, cfg: &SystemConfig, vpu: crate::config::VpuConfig) -> Result<VpuNode> {
         let runtime = Runtime::open(std::path::Path::new(&cfg.artifacts_dir))?;
         let cif = CifModule::new(cfg.cif, Bus::new(BusConfig::default_50mhz()))?;
         let lcd = LcdModule::new(cfg.lcd, Bus::new(BusConfig::default_50mhz()))?;
@@ -145,7 +153,7 @@ impl VpuNode {
 
         Ok(VpuNode {
             index,
-            cost: CostModel::new(cfg.vpu),
+            cost: CostModel::new(vpu),
             power: PowerModel::default(),
             arena: FrameArena::new(),
             runtime,
@@ -206,7 +214,12 @@ impl CoProcessor {
         rc: &crate::config::ResolvedConfig,
     ) -> Result<CoProcessor> {
         cfg.validate()?;
-        let vpus = rc.vpus.value;
+        // An active fleet spec (ISSUE 8) owns the node count and the
+        // per-node part descriptions; `rc.vpus` mirrors `n_nodes()`
+        // when resolution produced the fleet, but a hand-built `rc`
+        // might not keep them in sync, so the spec wins here.
+        let fleet = rc.fleet.value.as_ref();
+        let vpus = fleet.map_or(rc.vpus.value, |f| f.n_nodes());
         if vpus == 0 || vpus > MAX_VPUS {
             return Err(Error::Config(format!(
                 "topology needs 1..={MAX_VPUS} VPU nodes, got {vpus}"
@@ -214,7 +227,11 @@ impl CoProcessor {
         }
         let mut nodes = Vec::with_capacity(vpus);
         for i in 0..vpus {
-            nodes.push(VpuNode::new(i, &cfg)?);
+            let vpu = fleet.map_or(cfg.vpu, |f| f.node_vpu(i, &cfg.vpu));
+            vpu.validate().map_err(|e| {
+                Error::Config(format!("fleet node {i}: {e}"))
+            })?;
+            nodes.push(VpuNode::new(i, &cfg, vpu)?);
         }
         Ok(CoProcessor {
             backend: rc.backend.value,
@@ -232,10 +249,14 @@ impl CoProcessor {
     }
 
     /// Build the testbed with an explicit number of VPU nodes (other
-    /// knobs still resolve from the environment).
+    /// knobs still resolve from the environment). The explicit count
+    /// also clears any ambient `SPACECODESIGN_FLEET` — same rule as
+    /// `--vpus` beating an env fleet spec at resolution — so callers
+    /// asking for N nodes always get N *homogeneous* nodes.
     pub fn with_vpus(cfg: SystemConfig, vpus: usize) -> Result<CoProcessor> {
         let mut rc = crate::config::ResolvedConfig::from_env();
         rc.vpus = crate::config::Setting::cli(vpus);
+        rc.fleet = crate::config::Setting::fallback(None);
         CoProcessor::from_config(cfg, &rc)
     }
 
@@ -248,8 +269,9 @@ impl CoProcessor {
         self.nodes.len()
     }
 
-    /// Node 0's cost model (nodes are homogeneous, so this is *the*
-    /// cost model for timing questions that predate the topology).
+    /// Node 0's cost model — *the* cost model on a homogeneous
+    /// topology, and the paper-system reference node under a fleet
+    /// spec (per-node timing questions go through `nodes[i].cost`).
     pub fn cost(&self) -> &CostModel {
         &self.nodes[0].cost
     }
@@ -259,12 +281,12 @@ impl CoProcessor {
         &self.nodes[0].power
     }
 
-    /// Scheduled SHAVE processing time for one frame.
+    /// Scheduled SHAVE processing time for one frame on node 0.
     pub fn proc_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
         let node = &self.nodes[0];
         stream::proc_time_of(
             &node.cost,
-            &self.cfg.vpu,
+            &node.cost.vpu,
             node.ingest.mesh.as_ref(),
             bench,
             seed,
@@ -287,28 +309,36 @@ impl CoProcessor {
             backend,
             nodes,
             faults,
-            cfg,
             ..
         } = self;
         let node = &mut nodes[0];
         node.runtime.set_kernel_backend(*backend);
         let faults = faults.as_ref();
+        // Price with the node's *own* part description (== `cfg.vpu`
+        // on a homogeneous topology; the fleet node's under a spec).
         let job = node.ingest.run(
             *backend,
             &node.cost,
-            &cfg.vpu,
+            &node.cost.vpu,
             bench,
             seed,
             &node.arena,
             faults,
         )?;
         let ex = stream::execute_job(&mut node.runtime, job, &node.arena)?;
-        node.egress.run(&node.power, ex, &node.arena, faults)
+        node.egress
+            .run(&node.power, node.cost.vpu.n_shaves, ex, &node.arena, faults)
     }
 
-    /// Masked-mode phase timings derived from an Unmasked run.
+    /// Masked-mode phase timings derived from an Unmasked run, priced
+    /// with the part that ran it (node 0 on one-shot paths; out-of-
+    /// range node indices fall back to the base config).
     pub fn masked_timing(&self, run: &FrameRun) -> MaskedTiming {
-        stream::masked_timing_of(&self.cfg, run)
+        let vpu = self
+            .nodes
+            .get(run.node)
+            .map_or(&self.cfg.vpu, |n| &n.cost.vpu);
+        stream::masked_timing_of(vpu, run)
     }
 
     /// Run Unmasked once (real data) + Masked DES over `n_frames`.

@@ -31,9 +31,20 @@
 //! the seed the legacy backlog sweep gave frame `i` — which is what
 //! keeps the traffic-off path bit-exact against the pre-refactor
 //! stream.
+//!
+//! ISSUE 8 extends the loop along two axes without touching the legacy
+//! paths: [`build_schedule_with`] accepts a *per-node* service model
+//! (heterogeneous fleets price the same frame differently on different
+//! nodes) plus an optional [`HostBus`] arbiter whose grant delays
+//! stretch each frame's egress when concurrent CIF/LCD transfers
+//! contend for the framing processor; and [`SchedPolicy::Eft`] adds
+//! earliest-finish-time dispatch with bounded work stealing between
+//! per-node queues. `rr`/`lld` with the bus off remain byte-identical
+//! to the PR-7 loop.
 
 use crate::coordinator::benchmarks::Benchmark;
 use crate::error::{Error, Result};
+use crate::fabric::bus::HostBus;
 use crate::fabric::clock::SimTime;
 use crate::util::rng::Rng;
 use crate::util::stats::percentile_sorted;
@@ -125,7 +136,8 @@ pub enum AdmitPolicy {
     /// Demote the arriving frame to the next lower class with queue
     /// space; drop it only if every lower queue is also full. Falls
     /// back to [`AdmitPolicy::DropNewest`] under static round-robin
-    /// (per-node FIFOs have no classes to demote across).
+    /// and under `eft` (per-node FIFOs have no classes to demote
+    /// across).
     Degrade,
 }
 
@@ -156,7 +168,8 @@ pub struct TrafficConfig {
     /// Concurrent sensor clients (at least one).
     pub clients: Vec<SensorClient>,
     /// Bound on each admission queue (per class under `lld`, per node
-    /// under `rr`). `usize::MAX` = unbounded (the legacy backlog).
+    /// under `rr` and `eft`). `usize::MAX` = unbounded (the legacy
+    /// backlog).
     pub queue_depth: usize,
     /// Overflow behavior when a queue is full.
     pub policy: AdmitPolicy,
@@ -398,6 +411,10 @@ pub struct ScheduledFrame {
     pub bench: Benchmark,
     /// False = virtual-only (soak sampling skipped it).
     pub execute: bool,
+    /// Host-bus grant delay the arbiter charged this frame; the lanes
+    /// fold it into the CIF leg. `ZERO` whenever the bus model is off,
+    /// which keeps the legacy timeline bit-exact.
+    pub bus_wait: SimTime,
 }
 
 /// Everything the event loop decided: per-frame fates plus the
@@ -419,6 +436,9 @@ pub struct Schedule {
     pub dropped: usize,
     /// Frames demoted by [`AdmitPolicy::Degrade`].
     pub degraded: usize,
+    /// Frames an idle node stole from a backlogged peer's queue
+    /// (`eft` only; always 0 under `rr`/`lld`).
+    pub stolen: usize,
     /// Virtual makespan (last egress).
     pub span: SimTime,
 }
@@ -608,27 +628,63 @@ fn arrivals(cfg: &TrafficConfig, seed: u64) -> Vec<(SimTime, usize)> {
 const EV_NODE_FREE: u8 = 0;
 const EV_ARRIVAL: u8 = 1;
 
-struct EventLoop<'a, F: FnMut(Benchmark, u64) -> SimTime> {
+/// Which dispatch machinery the event loop runs; derived from
+/// [`SchedPolicy`].
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    /// `rr`: static assignment, per-node FIFOs, priorities inert.
+    Static,
+    /// `lld`: central per-class queues drained in strict priority.
+    Priority,
+    /// `eft`: per-node FIFOs filled by predicted finish time, with
+    /// bounded work stealing when a node idles next to a backlog.
+    Eft,
+}
+
+struct EventLoop<'a, W, F>
+where
+    W: FnMut(usize, Benchmark) -> SimTime,
+    F: FnMut(usize, Benchmark, u64) -> SimTime,
+{
     cfg: &'a TrafficConfig,
     fates: Vec<FrameFate>,
     per_node: Vec<Vec<ScheduledFrame>>,
-    /// Dynamic mode: one bounded queue per class, highest first.
+    /// Priority mode: one bounded queue per class, highest first.
     class_q: [VecDeque<usize>; 3],
-    /// Static mode: one bounded FIFO per node.
-    node_q: Vec<VecDeque<usize>>,
+    /// Static / Eft modes: one bounded FIFO per node. Each entry
+    /// carries the service estimate priced *for that node* at enqueue
+    /// time (always `ZERO` under Static, where it is unused).
+    node_q: Vec<VecDeque<(usize, SimTime)>>,
     node_busy: Vec<bool>,
+    /// Egress of the frame each node is currently running (stale once
+    /// the node idles; only read while `node_busy`).
+    busy_until: Vec<SimTime>,
+    /// Summed service estimates of each node's queued frames — the
+    /// backlog term of the Eft finish-time prediction.
+    backlog_est: Vec<SimTime>,
+    /// Shared-host-bus arbiter; `None` = infinite host bandwidth (the
+    /// legacy model, bit-exact).
+    bus: Option<HostBus>,
     heap: BinaryHeap<Reverse<(SimTime, u8, u64)>>,
-    static_rr: bool,
+    mode: Mode,
     assigned: usize,
     dispatched: usize,
     executed: usize,
     dropped: usize,
     degraded: usize,
+    stolen: usize,
     span: SimTime,
+    /// Per-hop wire time (CIF + LCD) a frame occupies the host bus for.
+    wire: W,
+    /// Per-node service chain (CIF + processing + LCD) for one frame.
     service: F,
 }
 
-impl<F: FnMut(Benchmark, u64) -> SimTime> EventLoop<'_, F> {
+impl<W, F> EventLoop<'_, W, F>
+where
+    W: FnMut(usize, Benchmark) -> SimTime,
+    F: FnMut(usize, Benchmark, u64) -> SimTime,
+{
     fn drop_frame(&mut self, i: usize, t: SimTime) {
         self.fates[i].outcome = FrameOutcome::Dropped { at: t };
         self.dropped += 1;
@@ -636,14 +692,23 @@ impl<F: FnMut(Benchmark, u64) -> SimTime> EventLoop<'_, F> {
 
     fn dispatch(&mut self, node: usize, i: usize, t: SimTime) {
         let (bench, seed) = (self.fates[i].bench, self.fates[i].seed);
-        let egress = t + (self.service)(bench, seed);
+        let svc = (self.service)(node, bench, seed);
+        let bus_wait = match self.bus.as_mut() {
+            Some(bus) => {
+                let w = (self.wire)(node, bench);
+                bus.request(t, w).wait(t)
+            }
+            None => SimTime::ZERO,
+        };
+        let egress = t + bus_wait + svc;
         let execute = self.dispatched % self.cfg.execute_every == 0;
         self.dispatched += 1;
         self.executed += execute as usize;
-        self.per_node[node].push(ScheduledFrame { index: i, seed, bench, execute });
+        self.per_node[node].push(ScheduledFrame { index: i, seed, bench, execute, bus_wait });
         self.fates[i].outcome =
             FrameOutcome::Served { node, dispatch: t, egress, executed: execute };
         self.node_busy[node] = true;
+        self.busy_until[node] = egress;
         self.span = self.span.max(egress);
         self.heap.push(Reverse((egress, EV_NODE_FREE, node as u64)));
     }
@@ -658,12 +723,64 @@ impl<F: FnMut(Benchmark, u64) -> SimTime> EventLoop<'_, F> {
             self.dispatch(node, i, t);
         } else if self.node_q[node].len() < self.cfg.queue_depth {
             self.assigned += 1;
-            self.node_q[node].push_back(i);
+            self.node_q[node].push_back((i, SimTime::ZERO));
         } else if self.cfg.policy == AdmitPolicy::DropOldest {
-            let old = self.node_q[node].pop_front().expect("full queue is non-empty");
+            let (old, _) = self.node_q[node].pop_front().expect("full queue is non-empty");
             self.drop_frame(old, t);
             self.assigned += 1;
-            self.node_q[node].push_back(i);
+            self.node_q[node].push_back((i, SimTime::ZERO));
+        } else {
+            self.drop_frame(i, t);
+        }
+    }
+
+    /// Earliest finish time (ISSUE 8): price the frame on *every* node
+    /// with that node's own service model, predict each node's finish
+    /// as `max(t, busy_until) + queued backlog + bus-grant estimate +
+    /// own service`, and take the minimum (ties -> lowest index). Idle
+    /// winners dispatch immediately; busy winners queue the frame and
+    /// fold its estimate into the node's backlog term. When every
+    /// queue is full the admission policy applies at the
+    /// earliest-finishing node overall (Degrade has no class ladder
+    /// here and behaves as drop-newest).
+    fn arrive_eft(&mut self, i: usize, t: SimTime) {
+        let (bench, seed) = (self.fates[i].bench, self.fates[i].seed);
+        let bus_wait = self
+            .bus
+            .as_ref()
+            .map_or(SimTime::ZERO, |b| b.projected_wait(t));
+        // (predicted finish, node, service estimate on that node)
+        let mut best_room: Option<(SimTime, usize, SimTime)> = None;
+        let mut best_any: Option<(SimTime, usize, SimTime)> = None;
+        for node in 0..self.node_busy.len() {
+            let est = (self.service)(node, bench, seed);
+            let finish = self.busy_until[node].max(t) + self.backlog_est[node] + bus_wait + est;
+            if best_any.is_none_or(|(f, _, _)| finish < f) {
+                best_any = Some((finish, node, est));
+            }
+            let has_room =
+                !self.node_busy[node] || self.node_q[node].len() < self.cfg.queue_depth;
+            if has_room && best_room.is_none_or(|(f, _, _)| finish < f) {
+                best_room = Some((finish, node, est));
+            }
+        }
+        if let Some((_, node, est)) = best_room {
+            if self.node_busy[node] {
+                self.node_q[node].push_back((i, est));
+                self.backlog_est[node] += est;
+            } else {
+                self.dispatch(node, i, t);
+            }
+            return;
+        }
+        let (_, node, est) = best_any.expect("topology has at least one node");
+        if self.cfg.policy == AdmitPolicy::DropOldest {
+            let (old, old_est) =
+                self.node_q[node].pop_front().expect("full queue is non-empty");
+            self.backlog_est[node] = self.backlog_est[node].saturating_sub(old_est);
+            self.drop_frame(old, t);
+            self.node_q[node].push_back((i, est));
+            self.backlog_est[node] += est;
         } else {
             self.drop_frame(i, t);
         }
@@ -704,13 +821,46 @@ impl<F: FnMut(Benchmark, u64) -> SimTime> EventLoop<'_, F> {
         }
     }
 
+    /// Eft node-free: drain the node's own FIFO first; an empty queue
+    /// triggers one bounded steal attempt from the most backlogged
+    /// peer. The steal is cost-aware: it only fires when this node
+    /// would finish the victim's front frame (priced with *this*
+    /// node's service model) before the victim is even predicted to
+    /// complete it — so a fast part drains a slow part's backlog, but
+    /// a slow part never pulls work it would only delay.
+    fn pop_or_steal_eft(&mut self, node: usize, t: SimTime) -> Option<usize> {
+        if let Some((i, est)) = self.node_q[node].pop_front() {
+            self.backlog_est[node] = self.backlog_est[node].saturating_sub(est);
+            return Some(i);
+        }
+        let victim = (0..self.node_q.len())
+            .filter(|&v| !self.node_q[v].is_empty())
+            .max_by_key(|&v| (self.node_q[v].len(), Reverse(v)))?;
+        let &(i, est_victim) = self.node_q[victim].front().expect("victim queue non-empty");
+        let (bench, seed) = (self.fates[i].bench, self.fates[i].seed);
+        let est_here = (self.service)(node, bench, seed);
+        // A node with queued work is necessarily busy, so its front
+        // frame cannot start before `busy_until[victim]`.
+        if t + est_here < self.busy_until[victim] + est_victim {
+            self.node_q[victim].pop_front();
+            self.backlog_est[victim] =
+                self.backlog_est[victim].saturating_sub(est_victim);
+            self.stolen += 1;
+            Some(i)
+        } else {
+            None
+        }
+    }
+
     fn node_free(&mut self, node: usize, t: SimTime) {
         self.node_busy[node] = false;
-        let next = if self.static_rr {
-            self.node_q[node].pop_front()
-        } else {
+        let next = match self.mode {
+            Mode::Static => self.node_q[node].pop_front().map(|(i, _)| i),
             // Strict priority: drain the highest non-empty class.
-            (0..TrafficClass::ALL.len()).find_map(|c| self.class_q[c].pop_front())
+            Mode::Priority => {
+                (0..TrafficClass::ALL.len()).find_map(|c| self.class_q[c].pop_front())
+            }
+            Mode::Eft => self.pop_or_steal_eft(node, t),
         };
         if let Some(i) = next {
             self.dispatch(node, i, t);
@@ -721,13 +871,11 @@ impl<F: FnMut(Benchmark, u64) -> SimTime> EventLoop<'_, F> {
         while let Some(Reverse((t, rank, payload))) = self.heap.pop() {
             match rank {
                 EV_NODE_FREE => self.node_free(payload as usize, t),
-                _ => {
-                    if self.static_rr {
-                        self.arrive_static(payload as usize, t);
-                    } else {
-                        self.arrive_dynamic(payload as usize, t);
-                    }
-                }
+                _ => match self.mode {
+                    Mode::Static => self.arrive_static(payload as usize, t),
+                    Mode::Priority => self.arrive_dynamic(payload as usize, t),
+                    Mode::Eft => self.arrive_eft(payload as usize, t),
+                },
             }
         }
         debug_assert!(
@@ -740,6 +888,7 @@ impl<F: FnMut(Benchmark, u64) -> SimTime> EventLoop<'_, F> {
             executed: self.executed,
             dropped: self.dropped,
             degraded: self.degraded,
+            stolen: self.stolen,
             span: self.span,
             fates: self.fates,
             per_node: self.per_node,
@@ -752,6 +901,10 @@ impl<F: FnMut(Benchmark, u64) -> SimTime> EventLoop<'_, F> {
 /// caller's `service` model (CIF wire + SHAVE processing + LCD wire;
 /// `stream::run` passes the same per-frame chain the Masked DES uses).
 ///
+/// Node-blind convenience wrapper over [`build_schedule_with`]: every
+/// node prices a frame identically and the host bus is off — the
+/// legacy homogeneous model, bit-exact against PR 7.
+///
 /// The result is a pure function of the inputs — see the module docs
 /// for the determinism contract.
 pub fn build_schedule<F: FnMut(Benchmark, u64) -> SimTime>(
@@ -759,8 +912,42 @@ pub fn build_schedule<F: FnMut(Benchmark, u64) -> SimTime>(
     seed: u64,
     nodes: usize,
     sched: SchedPolicy,
-    service: F,
+    mut service: F,
 ) -> Schedule {
+    build_schedule_with(
+        cfg,
+        seed,
+        nodes,
+        sched,
+        None,
+        |_, _| SimTime::ZERO,
+        move |_, bench, frame_seed| service(bench, frame_seed),
+    )
+}
+
+/// Heterogeneous-fleet event loop (ISSUE 8). `service(node, bench,
+/// seed)` prices one frame's full chain *on that node* — a mixed fleet
+/// passes each node's own cost model. `bus`, when present, arbitrates
+/// every frame's CIF/LCD wire occupancy (`wire(node, bench)`) over the
+/// framing processor's shared channels: the grant delay is charged to
+/// the frame's egress and recorded as [`ScheduledFrame::bus_wait`].
+///
+/// The service closure must be a pure function of `(node, bench,
+/// seed)`: `eft` re-evaluates it per node to predict finish times, so
+/// a stateful closure would break the determinism contract.
+pub fn build_schedule_with<W, F>(
+    cfg: &TrafficConfig,
+    seed: u64,
+    nodes: usize,
+    sched: SchedPolicy,
+    bus: Option<HostBus>,
+    wire: W,
+    service: F,
+) -> Schedule
+where
+    W: FnMut(usize, Benchmark) -> SimTime,
+    F: FnMut(usize, Benchmark, u64) -> SimTime,
+{
     let arr = arrivals(cfg, seed);
     let mut heap = BinaryHeap::with_capacity(arr.len() + nodes);
     let fates: Vec<FrameFate> = arr
@@ -788,14 +975,23 @@ pub fn build_schedule<F: FnMut(Benchmark, u64) -> SimTime>(
         class_q: Default::default(),
         node_q: vec![VecDeque::new(); nodes],
         node_busy: vec![false; nodes],
+        busy_until: vec![SimTime::ZERO; nodes],
+        backlog_est: vec![SimTime::ZERO; nodes],
+        bus,
         heap,
-        static_rr: sched == SchedPolicy::RoundRobin,
+        mode: match sched {
+            SchedPolicy::RoundRobin => Mode::Static,
+            SchedPolicy::LeastLoaded => Mode::Priority,
+            SchedPolicy::Eft => Mode::Eft,
+        },
         assigned: 0,
         dispatched: 0,
         executed: 0,
         dropped: 0,
         degraded: 0,
+        stolen: 0,
         span: SimTime::ZERO,
+        wire,
         service,
     }
     .run()
@@ -1009,6 +1205,151 @@ mod tests {
         assert_eq!(r.per_class.len(), 1);
         assert_eq!(r.per_class[0].class, TrafficClass::Standard);
         assert_eq!(r.per_class[0].generated, 64);
+    }
+
+    /// Per-node skew for Eft tests: node 0 is a slow 100 ms part,
+    /// node 1 a fast 25 ms part.
+    fn skewed_service(node: usize, _b: Benchmark, _s: u64) -> SimTime {
+        SimTime::from_ms(if node == 0 { 100.0 } else { 25.0 })
+    }
+
+    #[test]
+    fn eft_routes_to_the_faster_node_and_beats_lld() {
+        // Moderate Poisson load: arrivals usually find both nodes idle.
+        // lld then picks the lowest-index (slow) node; eft prices both
+        // and sends the frame to the fast part instead.
+        let cfg = TrafficConfig::poisson(conv3(), 32, 4.0).with_queue_depth(32);
+        let run = |sched| {
+            build_schedule_with(&cfg, 17, 2, sched, None, |_, _| SimTime::ZERO, skewed_service)
+        };
+        let lld = run(SchedPolicy::LeastLoaded);
+        let eft = run(SchedPolicy::Eft);
+        assert_eq!(eft.served, 32);
+        assert_eq!(eft.dropped, 0);
+        assert!(
+            eft.per_node[1].len() > lld.per_node[1].len(),
+            "eft fast-node share {} vs lld {}",
+            eft.per_node[1].len(),
+            lld.per_node[1].len()
+        );
+        let mean = |s: &Schedule| s.clone().into_report().latency.mean;
+        assert!(mean(&eft) < mean(&lld), "{} vs {}", mean(&eft), mean(&lld));
+    }
+
+    #[test]
+    fn eft_is_deterministic() {
+        let cfg = TrafficConfig::mixed_poisson(conv3(), 48, 12.0);
+        let run = || {
+            build_schedule_with(
+                &cfg,
+                23,
+                2,
+                SchedPolicy::Eft,
+                Some(HostBus::new(1)),
+                |_, _| SimTime::from_ms(10.0),
+                skewed_service,
+            )
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.fates, b.fates);
+        assert_eq!(a.stolen, b.stolen);
+        assert_eq!(a.span, b.span);
+    }
+
+    #[test]
+    fn eft_steals_from_a_backlogged_peer() {
+        // Node 0 is a slow 100 ms part, node 1 a fast 20 ms part; a
+        // burst of 8 frames lands at t=0 with per-node queues bounded
+        // at 2. The fast node fills first, the overflow lands on the
+        // slow node, and once the fast node drains its own queue it
+        // steals the slow node's backlog.
+        let service = |node: usize, _b: Benchmark, _s: u64| {
+            SimTime::from_ms(if node == 0 { 100.0 } else { 20.0 })
+        };
+        let cfg = TrafficConfig::backlog(conv3(), 8).with_queue_depth(2);
+        let run = |sched| {
+            build_schedule_with(&cfg, 5, 2, sched, None, |_, _| SimTime::ZERO, service)
+        };
+        let s = run(SchedPolicy::Eft);
+        assert_eq!(s.dropped, 2, "both queues full -> two drop-newest rejections");
+        assert_eq!(s.served, 6);
+        assert_eq!(s.stolen, 2, "fast node lifts both frames queued on the slow part");
+        assert_eq!(s.per_node[1].len(), 5);
+        assert_eq!(s.per_node[0].len(), 1);
+        // Stealing collapses the makespan: without it the slow node
+        // would grind its two queued frames serially until t=300 ms.
+        assert_eq!(s.span, SimTime::from_ms(100.0));
+        // Acceptance pin (ISSUE 8): on this skewed fleet eft's system
+        // throughput beats lld, which fills its central queue blindly
+        // and sheds more of the burst.
+        let lld = run(SchedPolicy::LeastLoaded);
+        assert_eq!(lld.span, s.span);
+        assert!(
+            s.served > lld.served,
+            "eft served {} vs lld {} over the same span",
+            s.served,
+            lld.served
+        );
+    }
+
+    #[test]
+    fn eft_without_skew_matches_node_blind_throughput() {
+        // On a homogeneous fleet Eft degenerates to "any idle node,
+        // lowest index" — the same set of frames is served with the
+        // same makespan as lld, just with per-node FIFOs.
+        let cfg = TrafficConfig::poisson(conv3(), 40, 20.0).with_queue_depth(16);
+        let lld = build_schedule(&cfg, 31, 3, SchedPolicy::LeastLoaded, flat_service);
+        let eft = build_schedule_with(
+            &cfg,
+            31,
+            3,
+            SchedPolicy::Eft,
+            None,
+            |_, _| SimTime::ZERO,
+            |_, b, s| flat_service(b, s),
+        );
+        assert_eq!(eft.served, lld.served);
+        assert_eq!(eft.dropped, lld.dropped);
+        assert_eq!(eft.span, lld.span);
+        assert_eq!(lld.stolen, 0, "stealing is an eft-only mechanism");
+    }
+
+    #[test]
+    fn host_bus_stretches_the_virtual_timeline() {
+        // 2 nodes, flat 50 ms service, 30 ms wire, one shared channel:
+        // rr interleaves grants [0,30) [30,60) [60,90) [90,120), so
+        // egresses land at 50 / 80 / 110 / 140 instead of 50 / 50 /
+        // 100 / 100.
+        let cfg = TrafficConfig::backlog(conv3(), 4);
+        let wired = |bus| {
+            build_schedule_with(
+                &cfg,
+                1,
+                2,
+                SchedPolicy::RoundRobin,
+                bus,
+                |_, _| SimTime::from_ms(30.0),
+                |_, b, s| flat_service(b, s),
+            )
+        };
+        let free = wired(None);
+        assert_eq!(free.span, SimTime::from_ms(100.0));
+        assert!(free
+            .per_node
+            .iter()
+            .flatten()
+            .all(|f| f.bus_wait == SimTime::ZERO));
+
+        let contended = wired(Some(HostBus::new(1)));
+        assert_eq!(contended.span, SimTime::from_ms(140.0));
+        let wait_of = |node: usize, slot: usize| contended.per_node[node][slot].bus_wait;
+        assert_eq!(wait_of(0, 0), SimTime::ZERO, "first grant is immediate");
+        assert_eq!(wait_of(1, 0), SimTime::from_ms(30.0), "second waits a full wire");
+        assert_eq!(wait_of(0, 1), SimTime::from_ms(10.0));
+        assert_eq!(wait_of(1, 1), SimTime::from_ms(10.0));
+        // Two channels cover two nodes: back to the uncontended span.
+        let covered = wired(Some(HostBus::new(2)));
+        assert_eq!(covered.span, free.span);
     }
 
     #[test]

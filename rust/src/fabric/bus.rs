@@ -82,6 +82,82 @@ impl Bus {
     }
 }
 
+/// A granted host-bus window: `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BusGrant {
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl BusGrant {
+    /// Time spent queued before the grant opened.
+    pub fn wait(&self, requested_at: SimTime) -> SimTime {
+        self.start.saturating_sub(requested_at)
+    }
+}
+
+/// Shared host-bus arbiter (ISSUE 8): the framing processor muxes all
+/// per-node CIF/LCD pixel links over a small number of host-side
+/// channels, so concurrent transfers queue for grants instead of
+/// scaling for free. Purely virtual-time and deterministic: requests
+/// are granted FIFO in request order onto the earliest-free channel.
+///
+/// `channels >= concurrent requesters` degenerates to zero waiting,
+/// which is how the default (uncontended) topology stays bit-exact
+/// with the pre-fleet stream.
+#[derive(Clone, Debug)]
+pub struct HostBus {
+    /// Next-free time per host channel.
+    free_at: Vec<SimTime>,
+    /// Cumulative grants issued.
+    pub grants: u64,
+    /// Cumulative time requests spent queued.
+    pub queued: SimTime,
+}
+
+impl HostBus {
+    pub fn new(channels: usize) -> HostBus {
+        HostBus {
+            free_at: vec![SimTime::ZERO; channels.max(1)],
+            grants: 0,
+            queued: SimTime::ZERO,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.free_at.len()
+    }
+
+    /// Earliest instant any channel could open a new grant.
+    pub fn earliest_free(&self) -> SimTime {
+        self.free_at.iter().copied().min().unwrap_or(SimTime::ZERO)
+    }
+
+    /// Request the bus at `now` for `duration`; the grant opens on the
+    /// earliest-free channel, no sooner than `now`.
+    pub fn request(&mut self, now: SimTime, duration: SimTime) -> BusGrant {
+        let c = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, t)| **t)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let start = self.free_at[c].max(now);
+        let end = start + duration;
+        self.free_at[c] = end;
+        self.grants += 1;
+        self.queued += start.saturating_sub(now);
+        BusGrant { start, end }
+    }
+
+    /// Non-mutating estimate of the wait a request made at `now` would
+    /// see — the earliest-finish-time scheduler's bus-grant term.
+    pub fn projected_wait(&self, now: SimTime) -> SimTime {
+        self.earliest_free().saturating_sub(now)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +198,54 @@ mod tests {
         // 50 MHz * 4 B = 200 MB/s wire; setup amortizes to ~80 %+.
         assert!(bw > 0.75 * 200.0e6, "bw {bw}");
         assert!(bw <= 200.0e6);
+    }
+
+    #[test]
+    fn single_channel_serializes_overlapping_grants() {
+        let mut bus = HostBus::new(1);
+        let w = SimTime::from_ms(10.0);
+        let g0 = bus.request(SimTime::ZERO, w);
+        let g1 = bus.request(SimTime::ZERO, w);
+        assert_eq!(g0.start, SimTime::ZERO);
+        assert_eq!(g0.end, w);
+        assert_eq!(g1.start, w, "second grant queues behind the first");
+        assert_eq!(g1.wait(SimTime::ZERO), w);
+        assert_eq!(bus.queued, w);
+        assert_eq!(bus.grants, 2);
+    }
+
+    #[test]
+    fn extra_channels_grant_in_parallel() {
+        let mut bus = HostBus::new(2);
+        let w = SimTime::from_ms(10.0);
+        let g0 = bus.request(SimTime::ZERO, w);
+        let g1 = bus.request(SimTime::ZERO, w);
+        assert_eq!(g0.start, SimTime::ZERO);
+        assert_eq!(g1.start, SimTime::ZERO, "two channels, no queueing");
+        assert_eq!(bus.queued, SimTime::ZERO);
+        // Third request waits for the first channel to free.
+        let g2 = bus.request(SimTime::ZERO, w);
+        assert_eq!(g2.start, w);
+    }
+
+    #[test]
+    fn idle_gaps_do_not_backdate_grants() {
+        let mut bus = HostBus::new(1);
+        let w = SimTime::from_ms(5.0);
+        bus.request(SimTime::ZERO, w);
+        let late = SimTime::from_ms(50.0);
+        let g = bus.request(late, w);
+        assert_eq!(g.start, late, "grants never open before the request");
+        assert_eq!(bus.projected_wait(late), SimTime::ZERO);
+    }
+
+    #[test]
+    fn projected_wait_matches_next_grant() {
+        let mut bus = HostBus::new(1);
+        let w = SimTime::from_ms(8.0);
+        bus.request(SimTime::ZERO, w);
+        let est = bus.projected_wait(SimTime::from_ms(2.0));
+        let g = bus.request(SimTime::from_ms(2.0), w);
+        assert_eq!(g.wait(SimTime::from_ms(2.0)), est);
     }
 }

@@ -18,7 +18,7 @@
 //! DESIGN.md §9.)
 
 use spacecodesign::compress::{self, Cube};
-use spacecodesign::config::{CliOverrides, ResolvedConfig, SettingSource, SystemConfig};
+use spacecodesign::config::{CliOverrides, FleetSpec, ResolvedConfig, SettingSource, SystemConfig};
 use spacecodesign::coordinator::comparators;
 use spacecodesign::coordinator::{
     report, stream, AdmitPolicy, ArrivalProcess, Benchmark, CoProcessor, StreamOptions,
@@ -74,14 +74,21 @@ COMMANDS:
   stream     N-frame streaming pipeline sweep:
              [--bench NAME] [--frames N] [--depth D] — reports per-stage
              (CIF/VPU/LCD) utilization vs the Masked DES prediction;
-             [--vpus N] [--sched rr|lld] dispatches frames across an
-             N-node VPU topology (rr = static round-robin, lld =
-             earliest-free-node with priority classes);
+             [--vpus N] [--sched rr|lld|eft] dispatches frames across
+             an N-node VPU topology (rr = static round-robin, lld =
+             earliest-free-node with priority classes, eft =
+             earliest-finish-time over per-node cost models);
+             [--fleet SPEC] sizes a heterogeneous fleet instead of
+             --vpus: comma-separated <count>x<clock>MHz:<shaves>[:<dram>MB]
+             groups, e.g. 2x600MHz:12,1x300MHz:4 — each node prices its
+             own silicon; [--bus N] arbitrates all CIF/LCD transfers
+             through N shared host-bus channels (default uncontended);
              [--backend ref|opt|simd] runs one kernel tier instead of
              the ref+opt sweep; [--workers N] caps the worker pool.
              Every knob resolves CLI > env > default (env vars:
-             SPACECODESIGN_BACKEND, _WORKERS, _VPUS, _FAULT_SEED,
-             _FAULT_RATE); the resolved settings print once per run;
+             SPACECODESIGN_BACKEND, _WORKERS, _VPUS, _FLEET,
+             _FAULT_SEED, _FAULT_RATE); the resolved settings print
+             once per run;
              [--inject RATE] [--fault-seed N] adds seeded wire faults
              with CRC-triggered retransmission + per-frame containment;
              [--traffic poisson|duty|off] turns on the constellation
@@ -339,12 +346,27 @@ fn run_stream(args: &[String]) -> Result<()> {
     let fault_seed = flag_usize(args, "--fault-seed")
         .map(|v| v as u64)
         .or_else(|| inject.map(|_| seed(args)));
+    // `--fleet` describes a heterogeneous topology (ISSUE 8); it owns
+    // the node count, so combining it with an explicit `--vpus` is a
+    // contradiction, not a tiebreak.
+    let fleet = flag_str(args, "--fleet").map(|s| match FleetSpec::parse(s) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("invalid --fleet spec: {e}");
+            std::process::exit(2);
+        }
+    });
+    if fleet.is_some() && flag_usize(args, "--vpus").is_some() {
+        eprintln!("--vpus and --fleet both size the topology; pass one or the other");
+        std::process::exit(2);
+    }
     let rc = ResolvedConfig::resolve(&CliOverrides {
         backend: backend_flag,
         workers: flag_usize(args, "--workers"),
         vpus: flag_usize(args, "--vpus"),
         fault_seed,
         fault_rate: inject,
+        fleet,
     });
     if let Some(w) = rc.workers.value {
         spacecodesign::util::par::set_max_workers(w);
@@ -401,11 +423,18 @@ fn run_stream(args: &[String]) -> Result<()> {
         Some(s) => match SchedPolicy::parse(s) {
             Some(p) => p,
             None => {
-                eprintln!("unknown scheduling policy '{s}' (rr | lld)");
+                eprintln!("unknown scheduling policy '{s}' (rr | lld | eft)");
                 std::process::exit(2);
             }
         },
     };
+    // `--bus N`: arbitrate every CIF/LCD transfer through N shared
+    // host-bus channels (default: uncontended, one per node).
+    let bus_channels = flag_usize(args, "--bus");
+    if bus_channels == Some(0) {
+        eprintln!("--bus needs at least one channel");
+        std::process::exit(2);
+    }
 
     let vpus = rc.vpus.value;
     if let Some(t) = &traffic {
@@ -447,6 +476,9 @@ fn run_stream(args: &[String]) -> Result<()> {
         .sched(sched);
     if let Some(t) = traffic {
         builder = builder.traffic(t);
+    }
+    if let Some(channels) = bus_channels {
+        builder = builder.bus_channels(channels);
     }
     let opts = builder.build();
     for backend in backends {

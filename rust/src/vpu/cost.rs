@@ -138,6 +138,13 @@ pub const AGG_FACTOR: f64 = 12.0 * 600.0 / 230.0;
 // ---------------------------------------------------------------------------
 
 /// Per-benchmark timing model over a [`VpuConfig`].
+///
+/// The `SHAVE_CPE_*` constants above are *lane-cycle aggregates*
+/// calibrated at the paper's 12 SHAVEs x 600 MHz; they are properties
+/// of the kernels, not of a particular part, so a heterogeneous fleet
+/// (ISSUE 8) reuses them per node: [`CostModel::shave_time_ideal`]
+/// divides the same aggregate by *this node's* `n_shaves x clock`, and
+/// a `1x300MHz:4` node honestly prices 6x slower than the paper part.
 #[derive(Clone, Debug)]
 pub struct CostModel {
     pub vpu: VpuConfig,

@@ -5,6 +5,15 @@
 //! become: receive a wire frame into a DRAM buffer (checking CRC), and
 //! queue a DRAM buffer out as a wire frame. Each call carries the LEON
 //! driver overhead the paper's firmware pays at frame boundaries.
+//!
+//! On a heterogeneous fleet (ISSUE 8) each node still clocks its
+//! CIF/LCD links off the *host-side* pixel PLL — wire rates are a
+//! property of the framing processor, not of the attached VPU's grade —
+//! so `for_node` takes the shared iface clock while the per-node
+//! compute/copy rates live in the node's own `CostModel`. What a
+//! heterogeneous fleet *does* change on the wire is arbitration: the
+//! shared host bus (`fabric::bus::HostBus`) queues concurrent CIF/LCD
+//! grants, surfacing as per-frame `bus_wait` in the stream's timing.
 
 use crate::error::Result;
 use crate::fabric::clock::{ClockDomain, SimTime};

@@ -57,8 +57,17 @@ impl PowerModel {
             + self.iface_active_w * a.iface_duty
     }
 
-    /// Activity profile of a SHAVE-accelerated benchmark execution.
+    /// Activity profile of a SHAVE-accelerated benchmark execution on
+    /// the paper's full 12-SHAVE part.
     pub fn shave_activity(&self, kind: BenchKind) -> Activity {
+        self.shave_activity_for(kind, 12)
+    }
+
+    /// Activity profile on a node with `n_shaves` vector cores
+    /// (ISSUE 8): duties are per-core properties of the kernel, so a
+    /// smaller part draws proportionally less SHAVE power while base /
+    /// LEON / DRAM terms stay put.
+    pub fn shave_activity_for(&self, kind: BenchKind, n_shaves: usize) -> Activity {
         // DRAM duty tracks memory-boundedness; SHAVE duty the schedule
         // balance; LEON orchestrates (low duty).
         let (shave_duty, dram_duty) = match kind {
@@ -75,7 +84,7 @@ impl PowerModel {
         };
         Activity {
             leon_duty: 0.25,
-            shaves_active: 12,
+            shaves_active: n_shaves,
             shave_duty,
             dram_duty,
             iface_duty: 0.0,
@@ -102,6 +111,13 @@ impl PowerModel {
 
     pub fn shave_power(&self, kind: BenchKind) -> f64 {
         self.power(&self.shave_activity(kind))
+    }
+
+    /// Per-node SHAVE power (ISSUE 8): the fleet's smaller parts burn
+    /// fewer active-core watts. `shave_power_for(k, 12)` is bitwise
+    /// `shave_power(k)`.
+    pub fn shave_power_for(&self, kind: BenchKind, n_shaves: usize) -> f64 {
+        self.power(&self.shave_activity_for(kind, n_shaves))
     }
 
     pub fn leon_power(&self, kind: BenchKind) -> f64 {
@@ -175,6 +191,18 @@ mod tests {
         let p_cnn = pm.shave_power(BenchKind::Cnn);
         for kind in [BenchKind::Binning, BenchKind::Render] {
             assert!(p_cnn >= pm.shave_power(kind), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn per_node_shave_power_scales_with_core_count() {
+        let pm = PowerModel::default();
+        for kind in all_kinds() {
+            let full = pm.shave_power_for(kind, 12);
+            assert_eq!(full, pm.shave_power(kind), "12-SHAVE path is bitwise legacy");
+            let small = pm.shave_power_for(kind, 4);
+            assert!(small < full, "{kind:?}: {small} !< {full}");
+            assert!(small > pm.base_w, "{kind:?}: active node above baseline");
         }
     }
 

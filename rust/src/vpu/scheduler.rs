@@ -18,10 +18,14 @@ use crate::fabric::clock::SimTime;
 
 /// Frame-dispatch policy across the VPU nodes of the topology.
 ///
-/// Since ISSUE 7 both policies are decided by the virtual-time event
+/// Since ISSUE 7 every policy is decided by the virtual-time event
 /// loop in `coordinator::traffic` *before* any worker thread starts, so
-/// node attribution is deterministic for both — a pure function of the
-/// traffic config, seed and service model, never of wallclock timing.
+/// node attribution is deterministic for all of them — a pure function
+/// of the traffic config, seed and service model, never of wallclock
+/// timing. (The PR-5 dispatcher's 50 ms wall-clock condvar anti-wedge
+/// is long gone; no dispatch path sleeps on or reads real time, and
+/// `Eft` keeps that invariant — its finish-time predictions are pure
+/// virtual-time arithmetic.)
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SchedPolicy {
     /// Static: admitted frame `i` goes to node `i % N` (with traffic
@@ -40,14 +44,26 @@ pub enum SchedPolicy {
     /// identically on every node). No node can starve: an idle node
     /// always takes the next admitted frame.
     LeastLoaded,
+    /// Cost-aware (ISSUE 8): each frame goes to the node with the
+    /// earliest predicted *finish* time — queued backlog priced by that
+    /// node's own cost model, plus a host-bus-grant estimate — not the
+    /// shortest queue. On a heterogeneous fleet a short queue on a
+    /// half-clock node routinely finishes later than a longer queue on
+    /// a full-speed one, which is exactly the case `lld` gets wrong.
+    /// Idle nodes with empty queues steal queued work from the most
+    /// backlogged peer (bounded: one frame per free event), so bounded
+    /// per-node queues can't strand frames behind a slow node.
+    Eft,
 }
 
 impl SchedPolicy {
-    /// Parse the CLI spelling (`rr` / `lld`, long forms accepted).
+    /// Parse the CLI spelling (`rr` / `lld` / `eft`, long forms
+    /// accepted).
     pub fn parse(s: &str) -> Option<SchedPolicy> {
         match s.to_ascii_lowercase().as_str() {
             "rr" | "round-robin" | "roundrobin" => Some(SchedPolicy::RoundRobin),
             "lld" | "least-loaded" | "leastloaded" => Some(SchedPolicy::LeastLoaded),
+            "eft" | "earliest-finish" | "earliestfinish" => Some(SchedPolicy::Eft),
             _ => None,
         }
     }
@@ -56,6 +72,7 @@ impl SchedPolicy {
         match self {
             SchedPolicy::RoundRobin => "rr",
             SchedPolicy::LeastLoaded => "lld",
+            SchedPolicy::Eft => "eft",
         }
     }
 }
@@ -193,9 +210,13 @@ mod tests {
         assert_eq!(SchedPolicy::parse("round-robin"), Some(SchedPolicy::RoundRobin));
         assert_eq!(SchedPolicy::parse("LLD"), Some(SchedPolicy::LeastLoaded));
         assert_eq!(SchedPolicy::parse("least-loaded"), Some(SchedPolicy::LeastLoaded));
+        assert_eq!(SchedPolicy::parse("eft"), Some(SchedPolicy::Eft));
+        assert_eq!(SchedPolicy::parse("EFT"), Some(SchedPolicy::Eft));
+        assert_eq!(SchedPolicy::parse("earliest-finish"), Some(SchedPolicy::Eft));
         assert_eq!(SchedPolicy::parse("fifo"), None);
         assert_eq!(SchedPolicy::default(), SchedPolicy::RoundRobin);
         assert_eq!(SchedPolicy::LeastLoaded.name(), "lld");
+        assert_eq!(SchedPolicy::Eft.name(), "eft");
     }
 
     #[test]

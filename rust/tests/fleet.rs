@@ -1,0 +1,212 @@
+//! Heterogeneous-fleet integration (ISSUE 8): per-node part
+//! descriptions from a [`FleetSpec`], homogeneous-fleet bit-exactness
+//! with the `--vpus N` path, earliest-finish-time dispatch on skewed
+//! fleets, and host-bus contention stretching the virtual timeline.
+//!
+//! Runs on the native execution path (builtin manifest) so it needs no
+//! `make artifacts`. Every test pins its own fleet/traffic config
+//! explicitly, so the assertions hold under any CI matrix leg
+//! (including the homogeneous `SPACECODESIGN_FLEET` leg).
+
+use spacecodesign::config::{FleetSpec, ResolvedConfig, Setting, SystemConfig};
+use spacecodesign::coordinator::{stream, Benchmark, CoProcessor, StreamOptions, TrafficConfig};
+use spacecodesign::vpu::scheduler::SchedPolicy;
+
+fn conv3() -> Benchmark {
+    Benchmark::Conv { k: 3 }
+}
+
+/// CoProcessor built through `from_config` with an explicit fleet spec
+/// (the `--fleet` path), pinned to a directory without artifacts and
+/// with fault injection off.
+fn fleet_coproc(tag: &str, spec: &str) -> CoProcessor {
+    let mut cfg = SystemConfig::paper();
+    cfg.artifacts_dir = format!("target/__fleet_{tag}__");
+    let mut rc = ResolvedConfig::from_env();
+    rc.fleet = Setting::cli(Some(FleetSpec::parse(spec).expect("valid fleet spec")));
+    let mut cp = CoProcessor::from_config(cfg, &rc).expect("fleet coprocessor");
+    cp.faults = None;
+    cp
+}
+
+/// The `--vpus N` (homogeneous) construction path, for bit-exact
+/// comparison against an equivalent fleet spec.
+fn vpus_coproc(tag: &str, vpus: usize) -> CoProcessor {
+    let mut cfg = SystemConfig::paper();
+    cfg.artifacts_dir = format!("target/__fleet_{tag}__");
+    let mut cp = CoProcessor::with_vpus(cfg, vpus).expect("native coprocessor");
+    cp.faults = None;
+    cp
+}
+
+fn opts(frames: usize, seed: u64, sched: SchedPolicy) -> StreamOptions {
+    StreamOptions::builder(conv3())
+        .frames(frames)
+        .seed(seed)
+        .sched(sched)
+        .build()
+}
+
+#[test]
+fn homogeneous_fleet_is_bit_exact_with_vpus() {
+    // ISSUE 8 acceptance: a fleet spec naming the paper part
+    // (600 MHz, 12 SHAVEs, default DRAM) must reproduce the `--vpus 2`
+    // sweep bit for bit — same timings, same numerics, same merged DES.
+    let n = 6;
+    let mut a = vpus_coproc("homog_vpus", 2);
+    let ra = stream::run(&mut a, &opts(n, 30, SchedPolicy::RoundRobin)).unwrap();
+    let mut b = fleet_coproc("homog_spec", "2x600MHz:12");
+    let rb = stream::run(&mut b, &opts(n, 30, SchedPolicy::RoundRobin)).unwrap();
+    assert!(ra.all_valid() && rb.all_valid());
+    assert_eq!(rb.vpus, 2);
+    assert_eq!(ra.per_node_frames, rb.per_node_frames);
+    for (i, (x, y)) in ra.runs.iter().zip(&rb.runs).enumerate() {
+        assert_eq!(x.t_cif, y.t_cif, "frame {i} CIF time");
+        assert_eq!(x.t_proc, y.t_proc, "frame {i} proc time");
+        assert_eq!(x.t_lcd, y.t_lcd, "frame {i} LCD time");
+        assert_eq!(x.latency, y.latency, "frame {i} latency");
+        assert_eq!(x.node, y.node, "frame {i} attribution");
+        assert_eq!(x.validation.mismatches, y.validation.mismatches, "frame {i}");
+        assert_eq!(x.crc_ok, y.crc_ok, "frame {i}");
+    }
+    // The merged Masked DES prices identical silicon identically.
+    assert_eq!(
+        ra.masked_system.throughput_fps,
+        rb.masked_system.throughput_fps
+    );
+    assert_eq!(ra.masked_system.avg_latency, rb.masked_system.avg_latency);
+}
+
+#[test]
+fn fleet_nodes_carry_their_own_parts() {
+    // Each group's clock/SHAVEs/DRAM land on the right node, and the
+    // half-clock part's DRAM machinery scales with its PLL.
+    let mut cp = fleet_coproc("parts", "1x600MHz:12,1x300MHz:4:256MB");
+    assert_eq!(cp.vpus(), 2);
+    let fast = cp.nodes[0].cost.vpu;
+    let slow = cp.nodes[1].cost.vpu;
+    assert_eq!(fast.n_shaves, 12);
+    assert_eq!(fast.shave_clock_hz, 600.0e6);
+    assert_eq!(slow.n_shaves, 4);
+    assert_eq!(slow.shave_clock_hz, 300.0e6);
+    assert_eq!(slow.dram_bytes, 256 * 1024 * 1024);
+    assert!(
+        (slow.dram_copy_mpx_per_s - fast.dram_copy_mpx_per_s / 2.0).abs() < 1e-6,
+        "half-clock node must buffer-copy at half rate"
+    );
+
+    // The sweep runs end to end, and the merged Masked DES prices the
+    // mix honestly: strictly above one paper node (the slow node still
+    // contributes) and strictly below two (it is no paper node).
+    let r = stream::run(&mut cp, &opts(6, 12, SchedPolicy::RoundRobin)).unwrap();
+    assert!(r.all_valid());
+    assert_eq!(r.per_node_frames, vec![3, 3]);
+    let one = r.masked.throughput_fps;
+    let sys = r.masked_system.throughput_fps;
+    assert!(sys > one, "system {sys} must beat the lone paper node {one}");
+    assert!(sys < 2.0 * one, "a 300MHz/4-SHAVE part is no paper node: {sys}");
+}
+
+#[test]
+fn eft_beats_node_blind_dispatch_on_a_skewed_fleet() {
+    // ISSUE 8 acceptance: a t=0 backlog over one paper node plus one
+    // half-clock 4-SHAVE part. Least-loaded splits the backlog evenly
+    // (node-blind), so half the frames grind through the slow node;
+    // earliest-finish-time prices each node's service and loads the
+    // fast node with the larger share, so the virtual timeline is
+    // shorter and the mean sojourn lower.
+    let traffic = TrafficConfig::backlog(conv3(), 12).with_queue_depth(12);
+    let build = |sched: SchedPolicy| {
+        StreamOptions::builder(conv3())
+            .seed(8)
+            .sched(sched)
+            .traffic(traffic.clone())
+            .build()
+    };
+    let mut a = fleet_coproc("eft_lld", "1x600MHz:12,1x300MHz:4");
+    let lld = stream::run(&mut a, &build(SchedPolicy::LeastLoaded)).unwrap();
+    let mut b = fleet_coproc("eft_eft", "1x600MHz:12,1x300MHz:4");
+    let eft = stream::run(&mut b, &build(SchedPolicy::Eft)).unwrap();
+    assert!(lld.all_valid() && eft.all_valid());
+
+    let tl = lld.traffic.as_ref().unwrap();
+    let te = eft.traffic.as_ref().unwrap();
+    assert_eq!(tl.generated, 12);
+    assert_eq!(tl.dropped, 0, "a 12-deep queue holds the whole backlog");
+    assert_eq!(te.served, tl.served, "same admission capacity either way");
+    // The throughput pin: same frames served over a shorter (or equal)
+    // virtual span, so EFT's virtual FPS is at least least-loaded's.
+    assert!(
+        te.span <= tl.span,
+        "eft span {:?} vs lld span {:?}",
+        te.span,
+        tl.span
+    );
+    assert!(
+        te.virtual_fps >= tl.virtual_fps,
+        "eft {} FPS vs lld {} FPS",
+        te.virtual_fps,
+        tl.virtual_fps
+    );
+    assert!(
+        te.latency.mean <= tl.latency.mean,
+        "eft mean sojourn {:?} vs lld {:?}",
+        te.latency.mean,
+        tl.latency.mean
+    );
+    // EFT routed the larger share to the paper node.
+    assert!(
+        eft.per_node_frames[0] > eft.per_node_frames[1],
+        "fast node must carry the larger share: {:?}",
+        eft.per_node_frames
+    );
+    // Determinism: the EFT schedule is a pure function of (config,
+    // seed, per-node service model).
+    let mut c = fleet_coproc("eft_again", "1x600MHz:12,1x300MHz:4");
+    let again = stream::run(&mut c, &build(SchedPolicy::Eft)).unwrap();
+    assert_eq!(again.traffic.as_ref(), Some(te), "EFT must be seed-deterministic");
+}
+
+#[test]
+fn host_bus_contention_inflates_cif_time_only() {
+    // ISSUE 8 tentpole: with one host-bus channel under two nodes, the
+    // t=0 round-robin pair contends — the loser's CIF time carries the
+    // queued grant, while compute and numerics are untouched. A
+    // channel per node never queues and stays bit-exact with no bus.
+    let n = 4;
+    let free = StreamOptions::builder(conv3()).frames(n).seed(9).build();
+    let mut a = vpus_coproc("bus_free", 2);
+    let ra = stream::run(&mut a, &free).unwrap();
+
+    let narrow = StreamOptions::builder(conv3())
+        .frames(n)
+        .seed(9)
+        .bus_channels(1)
+        .build();
+    let mut b = vpus_coproc("bus_1ch", 2);
+    let rb = stream::run(&mut b, &narrow).unwrap();
+    assert!(ra.all_valid() && rb.all_valid());
+    let mut inflated = 0;
+    for (i, (x, y)) in ra.runs.iter().zip(&rb.runs).enumerate() {
+        assert_eq!(x.t_proc, y.t_proc, "frame {i}: compute never touches the bus");
+        assert_eq!(x.t_lcd, y.t_lcd, "frame {i}");
+        assert_eq!(x.validation.mismatches, y.validation.mismatches, "frame {i}");
+        assert!(y.t_cif >= x.t_cif, "frame {i}: contention cannot shrink CIF");
+        if y.t_cif > x.t_cif {
+            inflated += 1;
+        }
+    }
+    assert!(inflated > 0, "two t=0 transfers through one channel must queue");
+
+    let wide = StreamOptions::builder(conv3())
+        .frames(n)
+        .seed(9)
+        .bus_channels(2)
+        .build();
+    let mut c = vpus_coproc("bus_2ch", 2);
+    let rc = stream::run(&mut c, &wide).unwrap();
+    for (i, (x, y)) in ra.runs.iter().zip(&rc.runs).enumerate() {
+        assert_eq!(x.t_cif, y.t_cif, "frame {i}: a channel per node never queues");
+        assert_eq!(x.latency, y.latency, "frame {i}");
+    }
+}
