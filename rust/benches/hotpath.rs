@@ -426,6 +426,20 @@ fn main() {
             log.push("stream conv3 N=8 (inject 0.3)", &s);
             cp.faults = None;
 
+            // --- FEC recovery under the same fault storm (ISSUE 9) ---
+            // New row (non-gating until it lands on main): the same 30%
+            // wire-fault sweep recovered by the erasure sidecar instead
+            // of ARQ — the delta vs the row above prices encode/repair
+            // plus the 5 extra wire lines against the saved resends.
+            let mut fec_cfg = FaultConfig::new(42, 0.3);
+            fec_cfg.strategy = spacecodesign::recovery::Strategy::Fec;
+            cp.faults = Some(FaultPlan::new(fec_cfg));
+            let s = bench(1, 3, || {
+                std::hint::black_box(stream::run(&mut cp, &opts).unwrap());
+            });
+            log.push("stream conv3 N=8 (inject 0.3, fec)", &s);
+            cp.faults = None;
+
             // --- streaming under stochastic load (ISSUE 7) -----------
             // New row (non-gating until it lands on main): a seeded
             // Poisson front end with bounded admission over the same

@@ -118,13 +118,19 @@ impl VpuConfig {
 pub const FLEET_DEFAULT_DRAM_MB: usize = 512;
 
 /// One homogeneous group of nodes inside a [`FleetSpec`]:
-/// `<count>x<clock>MHz:<shaves>[:<dram>MB]`.
+/// `<count>x<clock>MHz:<shaves>[:<dram>MB][@<rate>]`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FleetGroup {
     pub count: usize,
     pub clock_mhz: f64,
     pub shaves: usize,
     pub dram_mb: usize,
+    /// Per-node upset-rate override (ISSUE 9): the `@rate` suffix
+    /// models this group's silicon cross-section — rad-hard parts next
+    /// to COTS parts in one fleet. `None` inherits the fault plan's
+    /// global rate; the override applies to the node's wire hops *and*
+    /// memory domains.
+    pub upset_rate: Option<f64>,
 }
 
 /// A heterogeneous VPU fleet (ISSUE 8): comma-separated groups, e.g.
@@ -143,12 +149,24 @@ impl FleetSpec {
     /// [`std::fmt::Display`]; rejects malformed or implausible specs.
     pub fn parse(s: &str) -> Result<FleetSpec> {
         let bad = |part: &str, why: &str| {
-            Error::Config(format!("bad fleet group '{part}': {why} (want <count>x<clock>MHz:<shaves>[:<dram>MB])"))
+            Error::Config(format!("bad fleet group '{part}': {why} (want <count>x<clock>MHz:<shaves>[:<dram>MB][@<rate>])"))
         };
         let mut groups = Vec::new();
         for part in s.split(',') {
             let part = part.trim();
-            let (count_s, rest) = part
+            // The upset-rate suffix splits off first so the core
+            // fields parse exactly as before it existed.
+            let (core, upset_rate) = match part.split_once('@') {
+                None => (part, None),
+                Some((core, r)) => {
+                    let rate: f64 = r
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad(part, "bad upset rate"))?;
+                    (core.trim_end(), Some(rate))
+                }
+            };
+            let (count_s, rest) = core
                 .split_once(['x', 'X'])
                 .ok_or_else(|| bad(part, "missing 'x'"))?;
             let count: usize = count_s
@@ -185,7 +203,7 @@ impl FleetSpec {
             if fields.next().is_some() {
                 return Err(bad(part, "trailing fields"));
             }
-            groups.push(FleetGroup { count, clock_mhz, shaves, dram_mb });
+            groups.push(FleetGroup { count, clock_mhz, shaves, dram_mb, upset_rate });
         }
         let spec = FleetSpec { groups };
         spec.validate()?;
@@ -218,6 +236,13 @@ impl FleetSpec {
                     g.dram_mb
                 )));
             }
+            if let Some(r) = g.upset_rate {
+                if !r.is_finite() || !(0.0..=1.0).contains(&r) {
+                    return Err(Error::Config(format!(
+                        "fleet upset rate {r} out of range 0..=1"
+                    )));
+                }
+            }
         }
         let n = self.n_nodes();
         if n > crate::coordinator::system::MAX_VPUS {
@@ -232,6 +257,18 @@ impl FleetSpec {
     /// Total node count across all groups.
     pub fn n_nodes(&self) -> usize {
         self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Per-node upset-rate overrides, indexed by topology position
+    /// (ISSUE 9): feed to
+    /// [`crate::iface::fault::FaultPlan::set_node_rates`]. `None`
+    /// entries inherit the plan's global rates.
+    pub fn node_upset_rates(&self) -> Vec<Option<f64>> {
+        let mut rates = Vec::with_capacity(self.n_nodes());
+        for g in &self.groups {
+            rates.extend(std::iter::repeat(g.upset_rate).take(g.count));
+        }
+        rates
     }
 
     /// The [`VpuConfig`] for node `index`: the base (paper) part with
@@ -271,6 +308,9 @@ impl std::fmt::Display for FleetSpec {
             write!(f, "{}x{}MHz:{}", g.count, g.clock_mhz, g.shaves)?;
             if g.dram_mb != FLEET_DEFAULT_DRAM_MB {
                 write!(f, ":{}MB", g.dram_mb)?;
+            }
+            if let Some(r) = g.upset_rate {
+                write!(f, "@{r}")?;
             }
         }
         Ok(())
@@ -363,6 +403,7 @@ pub struct CliOverrides {
     pub vpus: Option<usize>,
     pub fault_seed: Option<u64>,
     pub fault_rate: Option<f64>,
+    pub fault_strategy: Option<crate::recovery::Strategy>,
     pub fleet: Option<FleetSpec>,
 }
 
@@ -389,6 +430,10 @@ pub struct ResolvedConfig {
     /// Per-frame fault rate (`SPACECODESIGN_FAULT_RATE`; default 0.02,
     /// mirroring `FaultPlan::from_env`). Only meaningful with a seed.
     pub fault_rate: Setting<f64>,
+    /// Recovery strategy (`--strategy` /
+    /// `SPACECODESIGN_FAULT_STRATEGY`; default `Resend`, the PR 4
+    /// behavior). Only meaningful with a seed.
+    pub fault_strategy: Setting<crate::recovery::Strategy>,
     /// Heterogeneous fleet spec (`--fleet` / `SPACECODESIGN_FLEET`;
     /// default `None` = homogeneous paper parts). When set, it defines
     /// the topology: `vpus` is derived from [`FleetSpec::n_nodes`]. An
@@ -468,15 +513,39 @@ impl ResolvedConfig {
                 None => Setting::fallback(0.02),
             },
         };
-        ResolvedConfig { backend, workers, vpus, fault_seed, fault_rate, fleet }
+        let fault_strategy = match cli.fault_strategy {
+            Some(s) => Setting::cli(s),
+            None => match env("SPACECODESIGN_FAULT_STRATEGY")
+                .and_then(|v| crate::recovery::Strategy::parse(&v))
+            {
+                Some(s) => Setting::env(s),
+                None => Setting::fallback(crate::recovery::Strategy::default()),
+            },
+        };
+        ResolvedConfig {
+            backend,
+            workers,
+            vpus,
+            fault_seed,
+            fault_rate,
+            fault_strategy,
+            fleet,
+        }
     }
 
     /// The fault configuration this resolution implies (`None` when no
-    /// seed is set — injection off).
+    /// seed is set — injection off). The resolved strategy is applied;
+    /// `memory_rate` stays at its inert default — memory-domain
+    /// injection is opted into programmatically (the campaign mode
+    /// does), never ambiently, so env-seeded wire-fault runs keep
+    /// their pinned counters.
     pub fn fault_config(&self) -> Option<crate::iface::fault::FaultConfig> {
-        self.fault_seed
-            .value
-            .map(|seed| crate::iface::fault::FaultConfig::new(seed, self.fault_rate.value))
+        self.fault_seed.value.map(|seed| {
+            let mut fc =
+                crate::iface::fault::FaultConfig::new(seed, self.fault_rate.value);
+            fc.strategy = self.fault_strategy.value;
+            fc
+        })
     }
 
     /// The fault plan this resolution implies.
@@ -492,7 +561,11 @@ impl ResolvedConfig {
             None => "auto".to_string(),
         };
         let faults = match self.fault_seed.value {
-            Some(seed) => format!("seed {seed} rate {}", self.fault_rate.value),
+            Some(seed) => format!(
+                "seed {seed} rate {} strategy {}",
+                self.fault_rate.value,
+                self.fault_strategy.value.name()
+            ),
             None => "off".to_string(),
         };
         let fleet = match &self.fleet.value {
@@ -616,6 +689,45 @@ mod tests {
     }
 
     #[test]
+    fn resolved_config_strategy_knob_resolves_and_lands_in_fault_config() {
+        use crate::recovery::Strategy;
+        // Default: the PR 4 resend baseline, memory domains inert.
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), |k| {
+            (k == "SPACECODESIGN_FAULT_SEED").then(|| "9".to_string())
+        });
+        assert_eq!(rc.fault_strategy.value, Strategy::Resend);
+        assert_eq!(rc.fault_strategy.source, SettingSource::Default);
+        let fc = rc.fault_config().unwrap();
+        assert_eq!(fc.strategy, Strategy::Resend);
+        assert_eq!(fc.memory_rate, 0.0, "resolution never arms memory domains");
+        assert!(rc.summary().contains("strategy resend"), "{}", rc.summary());
+        // Env knob, including a scrub period.
+        let env = |k: &str| match k {
+            "SPACECODESIGN_FAULT_SEED" => Some("9".to_string()),
+            "SPACECODESIGN_FAULT_STRATEGY" => Some("scrub:4".to_string()),
+            _ => None,
+        };
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), env);
+        assert_eq!(rc.fault_strategy.value, Strategy::Scrub { period: 4 });
+        assert_eq!(rc.fault_strategy.source, SettingSource::Env);
+        // CLI beats env.
+        let cli = CliOverrides {
+            fault_strategy: Some(Strategy::Fec),
+            ..Default::default()
+        };
+        let rc = ResolvedConfig::resolve_with(&cli, env);
+        assert_eq!(rc.fault_strategy.value, Strategy::Fec);
+        assert_eq!(rc.fault_strategy.source, SettingSource::Cli);
+        assert_eq!(rc.fault_config().unwrap().strategy, Strategy::Fec);
+        // An unparseable env value falls back to the default.
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), |k| {
+            (k == "SPACECODESIGN_FAULT_STRATEGY").then(|| "retry".to_string())
+        });
+        assert_eq!(rc.fault_strategy.value, Strategy::Resend);
+        assert_eq!(rc.fault_strategy.source, SettingSource::Default);
+    }
+
+    #[test]
     fn resolved_config_summary_names_every_source() {
         let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), |_| None);
         let s = rc.summary();
@@ -633,6 +745,9 @@ mod tests {
             "1x600MHz:12",
             "3x150MHz:2:64MB",
             "1x600.5MHz:12",
+            "2x600MHz:12@0.001",
+            "3x150MHz:2:64MB@0.001",
+            "1x600MHz:12@0.5,1x300MHz:4",
         ] {
             let spec = FleetSpec::parse(s).unwrap();
             assert_eq!(spec.to_string(), s, "canonical form of {s}");
@@ -642,6 +757,27 @@ mod tests {
         let spec = FleetSpec::parse(" 2X600mhz:12 , 1x300:4:512mb ").unwrap();
         assert_eq!(spec.to_string(), "2x600MHz:12,1x300MHz:4");
         assert_eq!(spec.n_nodes(), 3);
+        // Scientific-notation rates parse; Display renders them in
+        // Rust's canonical f64 form.
+        let spec = FleetSpec::parse("2x600MHz:12@1e-5").unwrap();
+        assert_eq!(spec.groups[0].upset_rate, Some(1e-5));
+        assert_eq!(
+            FleetSpec::parse(&spec.to_string()).unwrap(),
+            spec,
+            "rendered rate re-parses to the same spec"
+        );
+    }
+
+    #[test]
+    fn fleet_node_upset_rates_index_by_topology_position() {
+        let spec = FleetSpec::parse("2x600MHz:12@1e-4,1x300MHz:4").unwrap();
+        assert_eq!(
+            spec.node_upset_rates(),
+            vec![Some(1e-4), Some(1e-4), None],
+            "per-group rate repeats per node; no suffix inherits"
+        );
+        let plain = FleetSpec::parse("2x600MHz:12").unwrap();
+        assert_eq!(plain.node_upset_rates(), vec![None, None]);
     }
 
     #[test]
@@ -658,6 +794,10 @@ mod tests {
             "1x600MHz:12:4:4",   // trailing fields
             "1xfastMHz:12",      // junk clock
             "33x600MHz:12",      // exceeds MAX_VPUS
+            "1x600MHz:12@",      // empty upset rate
+            "1x600MHz:12@hot",   // junk upset rate
+            "1x600MHz:12@1.5",   // rate above 1
+            "1x600MHz:12@-0.1",  // negative rate
         ] {
             assert!(FleetSpec::parse(s).is_err(), "should reject {s:?}");
         }

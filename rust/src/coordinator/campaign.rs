@@ -1,0 +1,200 @@
+//! Radiation campaign sweep (ISSUE 9 tentpole cap): upset rates x
+//! recovery strategies, each cell a full streaming sweep, reduced to
+//! the paper's Table-II idiom — availability, masked-DES system
+//! throughput, and the wire bandwidth overhead the strategy paid.
+//!
+//! Every cell arms *both* fault axes at the swept rate: the wire hops
+//! (CIF/LCD, recovered by resend or FEC) and the memory domains
+//! (DRAM/weight store, recovered by scrubbing or TMR). The sweep is a
+//! pure function of `(CampaignOptions, CoProcessor topology)` — each
+//! cell gets a fresh local [`FaultPlan`](crate::iface::fault::FaultPlan)
+//! via `StreamOptions::fault`, so no counters bleed between cells and
+//! re-running the campaign reproduces it bit for bit.
+
+use crate::coordinator::benchmarks::Benchmark;
+use crate::coordinator::stream::{self, StreamOptions, StreamResult};
+use crate::coordinator::system::CoProcessor;
+use crate::error::Result;
+use crate::iface::fault::FaultConfig;
+use crate::iface::signals;
+use crate::recovery::Strategy;
+
+/// One sweep configuration: the cross product `rates x strategies`.
+#[derive(Clone, Debug)]
+pub struct CampaignOptions {
+    pub bench: Benchmark,
+    /// Frames per cell (frame i of every cell uses seed `seed + i`).
+    pub frames: usize,
+    pub seed: u64,
+    /// Per-frame upset probabilities to sweep (applied to wire hops
+    /// *and* memory domains alike — one silicon cross-section).
+    pub rates: Vec<f64>,
+    pub strategies: Vec<Strategy>,
+}
+
+impl CampaignOptions {
+    /// Defaults sized for a CI smoke leg: 8 frames over three rates
+    /// spanning quiet-orbit to storm, all five strategies.
+    pub fn new(bench: Benchmark) -> CampaignOptions {
+        CampaignOptions {
+            bench,
+            frames: 8,
+            seed: 42,
+            rates: vec![0.05, 0.2, 0.5],
+            strategies: Strategy::ALL.to_vec(),
+        }
+    }
+}
+
+/// One (rate, strategy) cell, reduced from a [`StreamResult`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignCell {
+    pub rate: f64,
+    pub strategy: Strategy,
+    /// Valid frames delivered / frames offered.
+    pub availability: f64,
+    /// Masked-DES system throughput (FPS) under the strategy's pricing.
+    pub throughput_fps: f64,
+    /// Extra wire traffic as a fraction of the clean baseline:
+    /// retransmitted transfers plus the FEC sidecar lines.
+    pub bw_overhead: f64,
+    pub retransmits: u64,
+    pub unrecovered: u64,
+    pub memory_upsets: u64,
+    /// FEC + scrub + TMR corrections, summed.
+    pub corrected: u64,
+}
+
+/// The finished matrix, ready for [`report::campaign_matrix`]
+/// (crate::coordinator::report::campaign_matrix).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignResult {
+    pub bench: Benchmark,
+    pub frames: usize,
+    pub seed: u64,
+    /// Row-major over `rates` (outer) then `strategies` (inner).
+    pub cells: Vec<CampaignCell>,
+}
+
+/// Per-transfer FEC sidecar fraction for `bench`: the 4 parity lines +
+/// 1 CRC-vector line, relative to the payload height + CRC line, mean
+/// of the ingest and egress legs (their heights differ).
+fn fec_fraction(bench: Benchmark) -> f64 {
+    let extra = (signals::FEC_PARITY_LINES + 1) as f64;
+    let i = bench.input();
+    let o = bench.output();
+    (extra / (i.height + 1) as f64 + extra / (o.height + 1) as f64) / 2.0
+}
+
+/// Reduce one cell's stream result to the matrix row.
+fn reduce(rate: f64, strategy: Strategy, bench: Benchmark, r: &StreamResult) -> CampaignCell {
+    let valid = r
+        .runs
+        .iter()
+        .filter(|run| run.crc_ok && run.validation.pass)
+        .count();
+    let offered = r.runs.len() + r.frame_errors.len();
+    // Wire traffic only: memory domains also count "transfers" (frames
+    // inspected) in the aggregate FaultStats, so sum the wire hops from
+    // the per-domain rows instead.
+    let (mut wire_tx, mut wire_retx) = (0u64, 0u64);
+    for h in &r.hop_faults {
+        if h.hop.is_wire() {
+            wire_tx += h.stats.transfers;
+            wire_retx += h.stats.retransmits;
+        }
+    }
+    let clean = wire_tx.saturating_sub(wire_retx).max(1);
+    let fec = if strategy.wire_fec() {
+        fec_fraction(bench)
+    } else {
+        0.0
+    };
+    CampaignCell {
+        rate,
+        strategy,
+        availability: if offered == 0 {
+            0.0
+        } else {
+            valid as f64 / offered as f64
+        },
+        throughput_fps: r.masked_system.throughput_fps,
+        bw_overhead: wire_retx as f64 / clean as f64 + fec,
+        retransmits: r.faults.retransmits,
+        unrecovered: r.faults.unrecovered,
+        memory_upsets: r.faults.memory_upsets,
+        corrected: r.faults.fec_corrected + r.faults.scrub_corrected + r.faults.tmr_corrected,
+    }
+}
+
+/// Run the full sweep on `cp`. Each cell overrides the processor's
+/// ambient fault plan with its own `(seed, rate, strategy)` config —
+/// the campaign's verdicts never depend on `SPACECODESIGN_FAULT_*`.
+pub fn run(cp: &mut CoProcessor, opts: &CampaignOptions) -> Result<CampaignResult> {
+    let mut cells = Vec::with_capacity(opts.rates.len() * opts.strategies.len());
+    for &rate in &opts.rates {
+        for &strategy in &opts.strategies {
+            let mut fc = FaultConfig::new(opts.seed, rate);
+            fc.memory_rate = rate;
+            fc.strategy = strategy;
+            let sopts = StreamOptions::builder(opts.bench)
+                .frames(opts.frames)
+                .seed(opts.seed)
+                .fault(fc)
+                .build();
+            let r = stream::run(cp, &sopts)?;
+            cells.push(reduce(rate, strategy, opts.bench, &r));
+        }
+    }
+    Ok(CampaignResult {
+        bench: opts.bench,
+        frames: opts.frames,
+        seed: opts.seed,
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn coproc(tag: &str) -> CoProcessor {
+        let mut cfg = SystemConfig::paper();
+        cfg.artifacts_dir = format!("target/__campaign_{tag}__");
+        let mut cp = CoProcessor::with_vpus(cfg, 1).expect("native coprocessor");
+        cp.faults = None;
+        cp
+    }
+
+    #[test]
+    fn campaign_is_deterministic_and_covers_the_grid() {
+        let mut opts = CampaignOptions::new(Benchmark::Conv { k: 3 });
+        opts.frames = 3;
+        opts.rates = vec![0.3];
+        opts.strategies = vec![Strategy::None, Strategy::Resend, Strategy::Fec];
+        let a = run(&mut coproc("det_a"), &opts).unwrap();
+        assert_eq!(a.cells.len(), 3);
+        for c in &a.cells {
+            assert!((0.0..=1.0).contains(&c.availability), "{c:?}");
+            assert!(c.throughput_fps > 0.0, "{c:?}");
+        }
+        // Resend can only improve on no-recovery at the same rate.
+        let avail =
+            |s: Strategy| a.cells.iter().find(|c| c.strategy == s).unwrap().availability;
+        assert!(avail(Strategy::Resend) >= avail(Strategy::None));
+        // FEC pays its sidecar fraction even when nothing faults.
+        let fec = a.cells.iter().find(|c| c.strategy == Strategy::Fec).unwrap();
+        assert!(fec.bw_overhead >= fec_fraction(opts.bench) - 1e-12, "{fec:?}");
+        // Pure function of (options, topology): bit-for-bit reproducible.
+        let b = run(&mut coproc("det_b"), &opts).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fec_fraction_is_five_lines_over_the_frame() {
+        // conv3: 1024-line input and output -> 2 * 5/1025 / 2 = 5/1025.
+        let f = fec_fraction(Benchmark::Conv { k: 3 });
+        assert!((f - 5.0 / 1025.0).abs() < 1e-12, "{f}");
+    }
+}

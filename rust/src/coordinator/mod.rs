@@ -24,11 +24,15 @@
 //!   threads for sustained-traffic sweeps, with per-stage utilization
 //!   and virtual p50/p99/p999 latency reported alongside the Masked
 //!   DES prediction.
+//! * [`campaign`] — the radiation campaign sweep (ISSUE 9): upset
+//!   rates x recovery strategies, each cell a full streaming sweep,
+//!   reduced to availability / throughput / bandwidth overhead.
 //! * [`report`] — Table II / speedup / Fig. 5 / stream formatting.
 //! * [`comparators`] — the cited Zynq-7020 / Jetson Nano comparison
 //!   models of §IV.
 
 pub mod benchmarks;
+pub mod campaign;
 pub mod comparators;
 pub mod host;
 pub mod pipeline;
@@ -38,6 +42,7 @@ pub mod system;
 pub mod traffic;
 
 pub use benchmarks::Benchmark;
+pub use campaign::{CampaignCell, CampaignOptions, CampaignResult};
 pub use pipeline::{merge_masked, simulate_masked, MaskedResult, MaskedTiming};
 pub use stream::{StreamOptions, StreamOptionsBuilder, StreamResult};
 pub use system::{CoProcessor, FrameRun, VpuNode};

@@ -103,20 +103,89 @@ pub fn validation_row(run: &FrameRun) -> String {
     )
 }
 
-/// Per-(node, direction) wire-fault counter rows (ISSUE 5 satellite) —
-/// rendered into Table II's fault appendix and the stream summary,
-/// one indented line per hop the plan touched.
-pub fn hop_fault_rows(rows: &[crate::iface::fault::HopFaultStats]) -> String {
+/// Per-(node, domain) fault counter rows (ISSUE 5 wire hops, extended
+/// by ISSUE 9 to the DRAM/weight-store memory domains) — rendered into
+/// Table II's fault appendix and the stream summary, one indented line
+/// per domain the plan touched. Wire hops keep the ISSUE 5 row shape
+/// (plus an FEC suffix when the sidecar corrected anything); memory
+/// domains report bit flips and scrub/TMR corrections instead of
+/// retransmissions, which they never issue.
+pub fn domain_fault_rows(rows: &[crate::iface::fault::HopFaultStats]) -> String {
     let mut out = String::new();
     for h in rows {
+        if h.hop.is_memory() {
+            out.push_str(&format!(
+                "  node {} {}: {}/{} frames hit, {} bit flips, {} corrected\n",
+                h.hop.node(),
+                h.hop.name(),
+                h.stats.faulted,
+                h.stats.transfers,
+                h.stats.memory_upsets,
+                h.stats.scrub_corrected + h.stats.tmr_corrected,
+            ));
+        } else {
+            let fec = if h.stats.fec_corrected > 0 {
+                format!(", {} fec-corrected", h.stats.fec_corrected)
+            } else {
+                String::new()
+            };
+            out.push_str(&format!(
+                "  node {} {}: {}/{} transfers hit, {} retransmits, {} unrecovered{}\n",
+                h.hop.node(),
+                h.hop.name(),
+                h.stats.faulted,
+                h.stats.transfers,
+                h.stats.retransmits,
+                h.stats.unrecovered,
+                fec,
+            ));
+        }
+    }
+    out
+}
+
+/// Pre-ISSUE-9 name for [`domain_fault_rows`], kept so external callers
+/// keep compiling for one release.
+#[deprecated(note = "renamed to `domain_fault_rows` (rows now cover memory domains too)")]
+pub fn hop_fault_rows(rows: &[crate::iface::fault::HopFaultStats]) -> String {
+    domain_fault_rows(rows)
+}
+
+/// Radiation-campaign matrix (ISSUE 9 tentpole cap): one row per
+/// (upset rate, recovery strategy) cell in the paper's Table-II idiom —
+/// availability (valid frames delivered / offered), masked-DES system
+/// throughput, and the wire bandwidth overhead the strategy paid
+/// (retransmitted transfers + FEC sidecar lines, as a fraction of the
+/// clean wire traffic).
+pub fn campaign_matrix(r: &crate::coordinator::campaign::CampaignResult) -> String {
+    let mut out = format!(
+        "-- campaign {} x{} seed {} --\n{:<9} {:>9} {:>8} {:>9} {:>8} {:>6} {:>6} {:>7} {:>10}\n{}\n",
+        r.bench.name(),
+        r.frames,
+        r.seed,
+        "strategy",
+        "rate",
+        "avail",
+        "thr(FPS)",
+        "bw-ovh",
+        "retx",
+        "unrec",
+        "upsets",
+        "corrected",
+        "-".repeat(80),
+    );
+    for c in &r.cells {
         out.push_str(&format!(
-            "  node {} {}: {}/{} transfers hit, {} retransmits, {} unrecovered\n",
-            h.hop.node(),
-            h.hop.name(),
-            h.stats.faulted,
-            h.stats.transfers,
-            h.stats.retransmits,
-            h.stats.unrecovered,
+            "{:<9} {:>9} {:>7.1}% {:>9.1} {:>7.1}% {:>6} {:>6} {:>7} {:>10}\n",
+            c.strategy.name(),
+            format!("{:.0e}", c.rate),
+            c.availability * 100.0,
+            c.throughput_fps,
+            c.bw_overhead * 100.0,
+            c.retransmits,
+            c.unrecovered,
+            c.memory_upsets,
+            c.corrected,
         ));
     }
     out
@@ -222,7 +291,19 @@ pub fn stream_summary(r: &crate::coordinator::stream::StreamResult) -> String {
             r.faults.retransmits,
             r.faults.unrecovered,
         ));
-        out.push_str(&hop_fault_rows(&r.hop_faults));
+        let corrected =
+            r.faults.fec_corrected + r.faults.scrub_corrected + r.faults.tmr_corrected;
+        if r.faults.memory_upsets > 0 || corrected > 0 {
+            out.push_str(&format!(
+                "  recovery: {} memory bit flips, {} fec-corrected, \
+                 {} scrub-corrected, {} tmr-voted\n",
+                r.faults.memory_upsets,
+                r.faults.fec_corrected,
+                r.faults.scrub_corrected,
+                r.faults.tmr_corrected,
+            ));
+        }
+        out.push_str(&domain_fault_rows(&r.hop_faults));
     }
     out.push_str(&format!(
         "  validation {valid}/{} pass, {} frame errors",
@@ -522,6 +603,10 @@ mod tests {
                 stuck_pixels: 0,
                 retransmits: 7,
                 unrecovered: 1,
+                memory_upsets: 0,
+                fec_corrected: 0,
+                scrub_corrected: 0,
+                tmr_corrected: 0,
             },
             hop_faults: vec![
                 hop(crate::iface::fault::Hop::Cif(0), 3, 8, 5),
@@ -543,7 +628,7 @@ mod tests {
     }
 
     #[test]
-    fn hop_fault_rows_render_per_node() {
+    fn domain_fault_rows_render_per_node() {
         use crate::iface::fault::{FaultStats, Hop, HopFaultStats};
         let row = HopFaultStats {
             hop: Hop::Lcd(3),
@@ -555,12 +640,154 @@ mod tests {
                 ..FaultStats::default()
             },
         };
-        let s = hop_fault_rows(&[row]);
+        let s = domain_fault_rows(&[row]);
         assert!(
             s.contains("node 3 lcd: 2/9 transfers hit, 4 retransmits, 1 unrecovered"),
             "{s}"
         );
-        assert!(hop_fault_rows(&[]).is_empty());
+        // No FEC suffix when the sidecar never fired.
+        assert!(!s.contains("fec-corrected"), "{s}");
+        assert!(domain_fault_rows(&[]).is_empty());
+        // The pre-ISSUE-9 name stays callable.
+        #[allow(deprecated)]
+        let alias = hop_fault_rows(&[]);
+        assert!(alias.is_empty());
+    }
+
+    #[test]
+    fn domain_fault_rows_cover_memory_domains() {
+        use crate::iface::fault::{FaultStats, Hop, HopFaultStats};
+        let rows = [
+            HopFaultStats {
+                hop: Hop::Cif(0),
+                stats: FaultStats {
+                    transfers: 8,
+                    faulted: 2,
+                    fec_corrected: 2,
+                    ..FaultStats::default()
+                },
+            },
+            HopFaultStats {
+                hop: Hop::Dram(1),
+                stats: FaultStats {
+                    transfers: 8,
+                    faulted: 3,
+                    memory_upsets: 5,
+                    scrub_corrected: 2,
+                    tmr_corrected: 1,
+                    ..FaultStats::default()
+                },
+            },
+        ];
+        let s = domain_fault_rows(&rows);
+        assert!(
+            s.contains("node 0 cif: 2/8 transfers hit, 0 retransmits, 0 unrecovered, 2 fec-corrected"),
+            "{s}"
+        );
+        assert!(
+            s.contains("node 1 dram: 3/8 frames hit, 5 bit flips, 3 corrected"),
+            "{s}"
+        );
+    }
+
+    #[test]
+    fn campaign_matrix_renders_one_row_per_cell() {
+        use crate::coordinator::campaign::{CampaignCell, CampaignResult};
+        use crate::recovery::Strategy;
+        let r = CampaignResult {
+            bench: Benchmark::Conv { k: 3 },
+            frames: 8,
+            seed: 42,
+            cells: vec![
+                CampaignCell {
+                    rate: 0.05,
+                    strategy: Strategy::Resend,
+                    availability: 1.0,
+                    throughput_fps: 7.9,
+                    bw_overhead: 0.125,
+                    retransmits: 3,
+                    unrecovered: 0,
+                    memory_upsets: 2,
+                    corrected: 0,
+                },
+                CampaignCell {
+                    rate: 0.05,
+                    strategy: Strategy::Fec,
+                    availability: 0.875,
+                    throughput_fps: 7.4,
+                    bw_overhead: 0.147,
+                    retransmits: 0,
+                    unrecovered: 0,
+                    memory_upsets: 2,
+                    corrected: 3,
+                },
+            ],
+        };
+        let s = campaign_matrix(&r);
+        assert!(s.contains("campaign 3x3 FP Convolution x8 seed 42"), "{s}");
+        assert!(s.contains("strategy"), "{s}");
+        assert!(s.contains("avail"), "{s}");
+        assert!(s.contains("resend"), "{s}");
+        assert!(s.contains("100.0%"), "{s}");
+        assert!(s.contains("fec"), "{s}");
+        assert!(s.contains("87.5%"), "{s}");
+        assert!(s.contains("5e-2"), "{s}");
+        assert_eq!(s.lines().count(), 5, "{s}");
+    }
+
+    #[test]
+    fn stream_summary_recovery_line_appears_only_with_memory_counters() {
+        use crate::coordinator::stream::StreamResult;
+        use crate::coordinator::Benchmark;
+        use crate::iface::fault::FaultStats;
+        use std::time::Duration;
+        let masked = MaskedResult {
+            first_latency: SimTime::from_ms(300.0),
+            avg_latency: SimTime::from_ms(336.0),
+            period: SimTime::from_ms(126.0),
+            throughput_fps: 7.9,
+            frames: 8,
+        };
+        let r = StreamResult {
+            bench: Benchmark::Conv { k: 3 },
+            backend: crate::KernelBackend::Optimized,
+            frames: 2,
+            vpus: 1,
+            sched: crate::vpu::scheduler::SchedPolicy::RoundRobin,
+            per_node_frames: vec![2],
+            wall: Duration::from_millis(100),
+            wall_fps: 20.0,
+            stage_busy: [Duration::from_millis(10); 3],
+            stage_util: [0.1; 3],
+            exec_wall: Duration::from_millis(25),
+            arena: crate::util::arena::ArenaStats {
+                reused: 9,
+                allocated: 3,
+            },
+            masked_system: masked.clone(),
+            masked,
+            runs: vec![dummy_run()],
+            frame_errors: vec![],
+            retransmits: 0,
+            faults: FaultStats {
+                transfers: 10,
+                faulted: 4,
+                memory_upsets: 6,
+                fec_corrected: 1,
+                scrub_corrected: 2,
+                tmr_corrected: 1,
+                ..FaultStats::default()
+            },
+            hop_faults: vec![],
+            traffic: None,
+        };
+        let s = stream_summary(&r);
+        assert!(
+            s.contains(
+                "recovery: 6 memory bit flips, 1 fec-corrected, 2 scrub-corrected, 1 tmr-voted"
+            ),
+            "{s}"
+        );
     }
 
     #[test]

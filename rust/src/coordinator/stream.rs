@@ -58,14 +58,17 @@ use crate::error::{Error, Result};
 use crate::fabric::clock::{ClockDomain, SimTime};
 use crate::iface::fault::{self, FaultConfig, FaultPlan, FaultStats, Hop, HopFaultStats};
 use crate::iface::lcd::RxReport;
+use crate::iface::signals::{self, FecOutcome};
 use crate::iface::timing;
 use crate::iface::{CifModule, LcdModule};
+use crate::recovery::Strategy;
 use crate::render::Mesh;
 use crate::runtime::Runtime;
 use crate::util::arena::{ArenaStats, FrameArena};
 use crate::util::image::Frame;
 use crate::vpu::cost::{workloads, CostModel, Workload};
 use crate::vpu::drivers::{CamGeneric, LcdDriver};
+use crate::vpu::memory::VpuMemory;
 use crate::vpu::power::PowerModel;
 use crate::vpu::scheduler::{self, SchedPolicy};
 use crate::KernelBackend;
@@ -451,6 +454,28 @@ pub(crate) fn masked_timing_of(vpu: &VpuConfig, run: &FrameRun) -> MaskedTiming 
     }
 }
 
+/// Extra wire time of the FEC sidecar (ISSUE 9 `Strategy::Fec`): the
+/// parity lines plus the line-CRC line ride the same pixel clock as
+/// the payload, so the overhead is their share of the transfer's
+/// `height + 1` wire lines (payload lines + frame-CRC line).
+pub(crate) fn fec_wire_overhead(wire_time: SimTime, height: usize) -> SimTime {
+    let extra = (signals::FEC_PARITY_LINES + 1) as f64;
+    SimTime::from_secs(wire_time.as_secs() * extra / (height + 1) as f64)
+}
+
+/// Amortized per-frame ECC scrub cost for `bench`'s staged DRAM region
+/// on this node (ISSUE 9 `Strategy::Scrub`) — the one formula shared
+/// by the real ingest pricing and the phase-1 virtual schedule.
+pub(crate) fn scrub_cost_of(
+    cost: &CostModel,
+    bench: Benchmark,
+    period: u32,
+) -> SimTime {
+    let io = bench.input();
+    let region = VpuMemory::scrub_region_bytes(io.width, io.height, io.channels);
+    cost.scrub_overhead(region, period)
+}
+
 /// The all-zero timing a node with no delivered frames contributes
 /// (`rate_hz` reports it as 0 FPS).
 fn zero_timing() -> MaskedTiming {
@@ -512,7 +537,19 @@ impl IngestStage {
                 return Err(e);
             }
         };
-        let t_proc = makespan_of(cost, vpu, bench, &w);
+        let mut t_proc = makespan_of(cost, vpu, bench, &w);
+        // Recovery-strategy processing surcharges (ISSUE 9): a scrub
+        // plan amortizes its periodic DRAM sweep into every frame, and
+        // TMR always pays for all three replicas — the hardware runs
+        // them regardless of whether this frame is ever upset. Default
+        // strategy (Resend) and no-plan runs add exactly nothing.
+        let strategy = faults.map(|f| f.config().strategy).unwrap_or_default();
+        if let Some(period) = strategy.scrub_period() {
+            t_proc += scrub_cost_of(cost, bench, period);
+        }
+        if strategy == Strategy::TmrVote {
+            t_proc = t_proc + t_proc + t_proc;
+        }
         let t_leon = cost.leon_time(bench.kind(), &w);
         Ok(StreamJob {
             item,
@@ -539,6 +576,7 @@ impl IngestStage {
         let mut t_cif = SimTime::ZERO;
         let mut retransmits = 0u32;
         let budget = faults.map_or(0, |f| f.max_retransmits());
+        let strategy = faults.map(|f| f.config().strategy).unwrap_or_default();
         for (p, plane) in item.input_frames.iter().enumerate() {
             self.cif.regs.configure(plane.width, plane.height, plane.format);
             let mut attempt = 0u32;
@@ -546,11 +584,26 @@ impl IngestStage {
                 let payload = arena.take_u32(plane.pixels());
                 let (mut wire, tx) =
                     self.cif.send_frame_with(plane, SimTime::ZERO, payload)?;
+                // FEC (ISSUE 9): the sidecar is encoded from the clean
+                // frame before the wire can touch it, rides as extra
+                // wire lines (priced below on every attempt), and
+                // repairs single-symbol erasures on the Rx side with
+                // no retransmission.
+                let sidecar = strategy.wire_fec().then(|| signals::fec_encode(&wire));
                 if let Some(f) = faults {
                     f.corrupt(hop, seed, p, attempt, &mut wire);
                 }
+                if let (Some(sc), Some(f)) = (&sidecar, faults) {
+                    if signals::fec_repair(&mut wire, sc) == FecOutcome::Corrected {
+                        f.note_fec_corrected(hop);
+                        self.cam.note_corrected();
+                    }
+                }
                 let rx = self.cam.receive_owned(wire, SimTime::ZERO)?;
                 t_cif += tx.wire_time;
+                if sidecar.is_some() {
+                    t_cif += fec_wire_overhead(tx.wire_time, plane.height);
+                }
                 // The DRAM copy goes straight back to the arena — on a
                 // flagged CRC it held corrupt data anyway (the real
                 // firmware drops the slot and re-arms the descriptor).
@@ -566,7 +619,12 @@ impl IngestStage {
                         received: rx.received,
                     });
                 };
-                if attempt >= budget {
+                // `Strategy::None` forgoes recovery entirely — the
+                // first flagged CRC is final (the campaign's
+                // no-mitigation baseline). FEC reaching this point had
+                // multi-erasure damage and falls back to ARQ within
+                // the same budget.
+                if !strategy.wire_resends() || attempt >= budget {
                     f.note_unrecovered(hop);
                     return Err(Error::Unrecovered {
                         attempts: attempt + 1,
@@ -591,29 +649,198 @@ impl IngestStage {
 /// execution failure is contained per frame: the job's buffers are
 /// recycled into `arena` before the error propagates, so a failed
 /// frame costs the freelist nothing.
+///
+/// With a memory-active fault plan (ISSUE 9: `memory_rate` or a
+/// per-node `@rate` above zero for `node`), the frame's DRAM staging
+/// buffers and — for the CNN — the weight store may take upsets drawn
+/// from the same order-independent `(seed, domain, frame, plane,
+/// attempt)` keys the wire hops use. DRAM flips are applied to the
+/// staged inputs *in place* and peeled back off after the run (XOR is
+/// involutive), so host groundtruth always validates against clean
+/// inputs and a corrupted execution shows up as a *wrong* — not
+/// errored — frame. `Strategy::Scrub` filters upsets through the ECC
+/// model before they land; `Strategy::TmrVote` runs three replicas
+/// with independent draws and majority-votes the outputs bitwise.
 pub(crate) fn execute_job(
     rt: &mut Runtime,
+    node: usize,
     job: StreamJob,
     arena: &FrameArena,
+    faults: Option<&FaultPlan>,
 ) -> Result<ExecutedJob> {
     let wall0 = rt.exec_wallclock;
-    let result = {
-        let inputs: Vec<&[f32]> =
-            job.item.pjrt_inputs.iter().map(|v| v.as_slice()).collect();
-        rt.execute(&job.item.bench.artifact(), &inputs)
+    let artifact = job.item.bench.artifact();
+    let mem = faults.filter(|f| f.memory_rate_for(node) > 0.0);
+
+    // Fast path — no memory-domain injection on this node: execute
+    // once, exactly the pre-ISSUE-9 flow (and its pinned counters).
+    let Some(f) = mem else {
+        let result = {
+            let inputs: Vec<&[f32]> =
+                job.item.pjrt_inputs.iter().map(|v| v.as_slice()).collect();
+            rt.execute(&artifact, &inputs)
+        };
+        let exec_wall = rt.exec_wallclock.saturating_sub(wall0);
+        return match result {
+            Ok(outputs) => Ok(ExecutedJob {
+                job,
+                outputs,
+                exec_wall,
+            }),
+            Err(e) => {
+                host::recycle_work_item(job.item, arena);
+                Err(e)
+            }
+        };
     };
-    let exec_wall = rt.exec_wallclock.saturating_sub(wall0);
-    match result {
-        Ok(outputs) => Ok(ExecutedJob {
-            job,
-            outputs,
-            exec_wall,
-        }),
-        Err(e) => {
-            host::recycle_work_item(job.item, arena);
-            Err(e)
+
+    let mut job = job;
+    let strategy = f.config().strategy;
+    let dram = Hop::Dram(node);
+    let wstore = Hop::Weights(node);
+    let dram_hit = f.targets(dram, job.seed);
+    // Only the CNN keeps a persistent weight store resident in DRAM;
+    // the DSP kernels' coefficients live in code/CMX.
+    let has_weights = matches!(job.item.bench, Benchmark::CnnShip);
+    let weights_hit = has_weights && f.targets(wstore, job.seed);
+    let scrub = strategy.scrub_period();
+    let tmr = strategy == Strategy::TmrVote && (dram_hit || weights_hit);
+    let replicas: u32 = if tmr { 3 } else { 1 };
+
+    let mut out_replicas: Vec<Vec<Vec<f32>>> = Vec::with_capacity(replicas as usize);
+    for r in 0..replicas {
+        // Draw this replica's DRAM patterns (one per staged plane).
+        let mut dram_pats: Vec<(usize, Vec<(usize, u32)>)> = Vec::new();
+        if dram_hit {
+            for (pi, buf) in job.item.pjrt_inputs.iter().enumerate() {
+                if let Some(pat) = f.mem_upset_pattern(dram, job.seed, pi, r, buf.len()) {
+                    dram_pats.push((pi, pat));
+                }
+            }
         }
+        let dram_flips: usize = dram_pats.iter().map(|(_, p)| p.len()).sum();
+        // ECC scrub (ISSUE 9): SEC-DED corrects any single-bit upset
+        // outright; multi-bit damage is caught only if a scrub pass
+        // swept the region in time (probability 1/period, drawn
+        // deterministically per frame/domain).
+        let dram_caught = dram_flips > 0
+            && matches!(scrub, Some(p) if f.scrub_catches(dram, job.seed, dram_flips, p));
+        if r == 0 {
+            if dram_flips > 0 {
+                f.note_memory_upset(dram, dram_flips as u64);
+                if dram_caught {
+                    f.note_scrub_corrected(dram);
+                }
+            } else {
+                f.note_mem_transfer(dram);
+            }
+        }
+        if !dram_caught {
+            for (pi, pat) in &dram_pats {
+                fault::apply_flips(&mut job.item.pjrt_inputs[*pi], pat);
+            }
+        }
+
+        let result = {
+            let inputs: Vec<&[f32]> =
+                job.item.pjrt_inputs.iter().map(|v| v.as_slice()).collect();
+            rt.execute(&artifact, &inputs)
+        };
+        // Peel the flips back off before *any* exit: the host's
+        // groundtruth inputs must stay clean.
+        if !dram_caught {
+            for (pi, pat) in &dram_pats {
+                fault::apply_flips(&mut job.item.pjrt_inputs[*pi], pat);
+            }
+        }
+        let mut outputs = match result {
+            Ok(o) => o,
+            Err(e) => {
+                for rep in out_replicas {
+                    for buf in rep {
+                        arena.recycle_f32(buf);
+                    }
+                }
+                host::recycle_work_item(job.item, arena);
+                return Err(e);
+            }
+        };
+
+        // Weight-store upsets surface as perturbed logits: the flips
+        // land on the output tensor the corrupted weights would have
+        // produced (a whole-network re-derivation per flipped weight
+        // is not worth modelling; the availability effect — a wrong,
+        // delivered answer — is identical).
+        if has_weights {
+            let wpat = outputs.first().and_then(|buf| {
+                f.mem_upset_pattern(wstore, job.seed, 0, r, buf.len())
+            });
+            let wflips = wpat.as_ref().map_or(0, |p| p.len());
+            let wcaught = wflips > 0
+                && matches!(scrub, Some(p) if f.scrub_catches(wstore, job.seed, wflips, p));
+            if r == 0 {
+                if wflips > 0 {
+                    f.note_memory_upset(wstore, wflips as u64);
+                    if wcaught {
+                        f.note_scrub_corrected(wstore);
+                    }
+                } else {
+                    f.note_mem_transfer(wstore);
+                }
+            }
+            if let (Some(pat), false) = (&wpat, wcaught) {
+                if let Some(buf) = outputs.first_mut() {
+                    fault::apply_flips(buf, pat);
+                }
+            }
+        }
+        out_replicas.push(outputs);
     }
+
+    // TMR vote: element-wise bitwise majority across the three
+    // replicas — any domain upset that hit a minority of replicas is
+    // outvoted. The two loser buffers go back to the arena.
+    let outputs = if out_replicas.len() == 3 {
+        let mut it = out_replicas.into_iter();
+        let mut a = it.next().unwrap();
+        let b = it.next().unwrap();
+        let c = it.next().unwrap();
+        let mut corrected = false;
+        for (ta, (tb, tc)) in a.iter_mut().zip(b.iter().zip(c.iter())) {
+            for (va, (vb, vc)) in ta.iter_mut().zip(tb.iter().zip(tc.iter())) {
+                let (ba, bb, bc) = (va.to_bits(), vb.to_bits(), vc.to_bits());
+                let vote = (ba & bb) | (ba & bc) | (bb & bc);
+                if vote != ba || vote != bb || vote != bc {
+                    corrected = true;
+                }
+                *va = f32::from_bits(vote);
+            }
+        }
+        for buf in b {
+            arena.recycle_f32(buf);
+        }
+        for buf in c {
+            arena.recycle_f32(buf);
+        }
+        if corrected {
+            if dram_hit {
+                f.note_tmr_corrected(dram);
+            }
+            if weights_hit {
+                f.note_tmr_corrected(wstore);
+            }
+        }
+        a
+    } else {
+        out_replicas.pop().expect("at least one replica ran")
+    };
+
+    let exec_wall = rt.exec_wallclock.saturating_sub(wall0);
+    Ok(ExecutedJob {
+        job,
+        outputs,
+        exec_wall,
+    })
 }
 
 /// Recycle a frame's work item + artifact outputs — the one list of
@@ -717,6 +944,8 @@ impl EgressStage {
 
         // --- LCD: VPU -> FPGA -> host --------------------------------
         let hop = Hop::Lcd(self.lcd_drv.node);
+        let strategy = faults.map(|f| f.config().strategy).unwrap_or_default();
+        let out_h = out_frame.height;
         self.lcd
             .regs
             .configure(out_frame.width, out_frame.height, out_frame.format);
@@ -732,9 +961,10 @@ impl EgressStage {
             }
             // Fault-free fast path, untouched — also taken by frames
             // an active plan never targets, so injection costs those
-            // frames nothing: the VPU output frame *moves* onto the
-            // wire (LCDQueueFrame queues the DRAM buffer; it does not
-            // copy it).
+            // frames nothing beyond the always-on FEC sidecar lines:
+            // the VPU output frame *moves* onto the wire
+            // (LCDQueueFrame queues the DRAM buffer; it does not copy
+            // it).
             other => {
                 if let Some(f) = other {
                     f.note_transfer(hop);
@@ -744,7 +974,10 @@ impl EgressStage {
                 let r = self.lcd.receive_frame(&wire_back, SimTime::ZERO);
                 arena.recycle_u32(wire_back.payload);
                 r.map(|(received, rx)| {
-                    let t = rx.wire_time;
+                    let mut t = rx.wire_time;
+                    if strategy.wire_fec() {
+                        t += fec_wire_overhead(rx.wire_time, out_h);
+                    }
                     (received, rx, t, 0u32)
                 })
             }
@@ -783,7 +1016,11 @@ impl EgressStage {
             crc_ok: rx.crc_ok,
             validation,
             accuracy,
-            power_w: power.shave_power_for(bench.kind(), n_shaves),
+            // A scrub plan keeps the DRAM interface lit between
+            // frames; the amortized draw rides on the frame's power
+            // figure (zero for every other strategy).
+            power_w: power.shave_power_for(bench.kind(), n_shaves)
+                + strategy.scrub_period().map_or(0.0, |p| power.scrub_power(p)),
             t_leon: job.t_leon,
             t_exec_wall: exec_wall,
             retransmits: job.retransmits + lcd_retransmits,
@@ -804,6 +1041,7 @@ impl EgressStage {
     ) -> Result<(Frame, RxReport, SimTime, u32)> {
         let hop = Hop::Lcd(self.lcd_drv.node);
         let budget = f.max_retransmits();
+        let strategy = f.config().strategy;
         let mut t_lcd = SimTime::ZERO;
         let mut attempt = 0u32;
         let mut retransmits = 0u32;
@@ -813,16 +1051,31 @@ impl EgressStage {
                 SimTime::ZERO,
                 arena.take_u32(out_frame.pixels()),
             );
+            // FEC mirror of the CIF side: encode from the clean frame,
+            // corrupt, repair; the sidecar's extra lines are priced on
+            // every attempt.
+            let sidecar =
+                strategy.wire_fec().then(|| signals::fec_encode(&wire_back));
             f.corrupt(hop, seed, 0, attempt, &mut wire_back);
+            if let Some(sc) = &sidecar {
+                if signals::fec_repair(&mut wire_back, sc) == FecOutcome::Corrected {
+                    f.note_fec_corrected(hop);
+                }
+            }
             let r = self.lcd.receive_frame(&wire_back, SimTime::ZERO);
             arena.recycle_u32(wire_back.payload);
             let (received, rx) = r?;
             t_lcd += rx.wire_time;
+            if sidecar.is_some() {
+                t_lcd += fec_wire_overhead(rx.wire_time, out_frame.height);
+            }
             if rx.crc_ok {
                 return Ok((received, rx, t_lcd, retransmits));
             }
             arena.recycle_u32(received.data);
-            if attempt >= budget {
+            // `Strategy::None`: no recovery, first flagged CRC is
+            // final. FEC falls back to ARQ on multi-erasure damage.
+            if !strategy.wire_resends() || attempt >= budget {
                 f.note_unrecovered(hop);
                 return Err(Error::Unrecovered {
                     attempts: attempt + 1,
@@ -900,26 +1153,45 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         let nodes: &[VpuNode] = nodes;
         let cif_clk = ClockDomain::new(cfg.cif.pixel_clock_hz);
         let lcd_clk = ClockDomain::new(cfg.lcd.pixel_clock_hz);
-        let wire_of = |b: Benchmark| -> SimTime {
+        // Strategy surcharges price into the virtual schedule with the
+        // exact formulas the real stages use (FEC sidecar lines per
+        // wire leg, amortized scrub sweep, TMR x3) so phase 1 stays an
+        // honest predictor of phase 2 under every recovery strategy.
+        let strategy = faults.map(|f| f.config().strategy).unwrap_or_default();
+        let wire_of = move |b: Benchmark| -> SimTime {
             let (i, o) = (b.input(), b.output());
-            timing::planes_time(
+            let t_in = timing::planes_time(
                 &cif_clk,
                 i.width,
                 i.height,
                 i.channels,
                 cfg.cif.porch_cycles_per_line,
-            ) + timing::frame_time(
+            );
+            let t_out = timing::frame_time(
                 &lcd_clk,
                 o.width,
                 o.height,
                 cfg.lcd.porch_cycles_per_line,
-            )
+            );
+            if strategy.wire_fec() {
+                t_in + fec_wire_overhead(t_in, i.height)
+                    + t_out
+                    + fec_wire_overhead(t_out, o.height)
+            } else {
+                t_in + t_out
+            }
         };
         let service = |node: usize, b: Benchmark, seed: u64| -> SimTime {
             let nd = &nodes[node];
-            let t_proc =
+            let mut t_proc =
                 proc_time_of(&nd.cost, &nd.cost.vpu, nd.ingest.mesh.as_ref(), b, seed)
                     .unwrap_or(SimTime::ZERO);
+            if let Some(period) = strategy.scrub_period() {
+                t_proc += scrub_cost_of(&nd.cost, b, period);
+            }
+            if strategy == Strategy::TmrVote {
+                t_proc = t_proc + t_proc + t_proc;
+            }
             wire_of(b) + t_proc
         };
         let bus = opts.bus_channels.map(crate::fabric::bus::HostBus::new);
@@ -1011,7 +1283,7 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
                     let r = match job {
                         Ok(job) => {
                             let t0 = Instant::now();
-                            let ex = execute_job(runtime, job, arena);
+                            let ex = execute_job(runtime, lane, job, arena, faults);
                             timed(&busy[1], t0);
                             ex
                         }

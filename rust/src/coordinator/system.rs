@@ -181,13 +181,18 @@ pub struct CoProcessor {
     /// serves every one-shot path; `stream::run` dispatches across all
     /// of them.
     pub nodes: Vec<VpuNode>,
-    /// Optional wire-fault injection plan (ISSUE 4): seeded upsets on
-    /// the CIF/LCD hops with CRC-triggered bounded retransmission.
-    /// `None` (the default) leaves the fault-free fast path untouched.
+    /// Optional fault-injection plan (ISSUE 4, generalized by ISSUE 9
+    /// into orthogonal fault *domains* x recovery *strategies*):
+    /// seeded upsets on the CIF/LCD wire hops and — with a nonzero
+    /// `memory_rate` — on each node's DRAM frame buffers and CNN
+    /// weight store, recovered per the plan's
+    /// [`crate::recovery::Strategy`] (resend/FEC/scrub/TMR). `None`
+    /// (the default) leaves the fault-free fast path untouched.
     /// Enabled by `SPACECODESIGN_FAULT_SEED` (+ optional
-    /// `SPACECODESIGN_FAULT_RATE`) or set directly (the `stream
-    /// --inject` CLI flag does). Shared by every node; counters
-    /// attribute per node via the hop ids.
+    /// `SPACECODESIGN_FAULT_RATE`, `SPACECODESIGN_FAULT_STRATEGY`) or
+    /// set directly (the `stream --inject` CLI flag does). Shared by
+    /// every node; counters attribute per node via the hop ids, and a
+    /// fleet entry's `@rate` suffix overrides the rate per node.
     pub faults: Option<FaultPlan>,
 }
 
@@ -233,9 +238,17 @@ impl CoProcessor {
             })?;
             nodes.push(VpuNode::new(i, &cfg, vpu)?);
         }
+        // Per-node upset-rate overrides (ISSUE 9): a fleet entry's
+        // `@rate` suffix models that node's silicon cross-section, so
+        // it overrides the plan's global rate for *both* the node's
+        // wire hops and its memory domains.
+        let mut faults = rc.fault_plan();
+        if let (Some(plan), Some(f)) = (faults.as_mut(), fleet) {
+            plan.set_node_rates(f.node_upset_rates());
+        }
         Ok(CoProcessor {
             backend: rc.backend.value,
-            faults: rc.fault_plan(),
+            faults,
             cfg,
             nodes,
         })
@@ -325,7 +338,8 @@ impl CoProcessor {
             &node.arena,
             faults,
         )?;
-        let ex = stream::execute_job(&mut node.runtime, job, &node.arena)?;
+        let ex =
+            stream::execute_job(&mut node.runtime, node.index, job, &node.arena, faults)?;
         node.egress
             .run(&node.power, node.cost.vpu.n_shaves, ex, &node.arena, faults)
     }

@@ -324,6 +324,17 @@ impl Crc16Xmodem {
         c.finish()
     }
 
+    /// One-shot CRC over a pixel line (ISSUE 9): the per-line erasure
+    /// locator of the FEC framing. Same serialization as the frame CRC
+    /// (`update_pixels`, MSB-first per pixel), restricted to one line,
+    /// so the FPGA computes it with the same shift logic it already
+    /// has — one extra register per line in flight.
+    pub fn checksum_pixels(pixels: &[u32], bits: u32) -> u16 {
+        let mut c = Crc16Xmodem::new();
+        c.update_pixels(pixels, bits);
+        c.finish()
+    }
+
     /// One-shot over the explicit Simd-tier slicing-by-32 engine.
     pub fn checksum_simd(data: &[u8]) -> u16 {
         let mut c = Crc16Xmodem::new();
@@ -363,6 +374,15 @@ mod tests {
     #[test]
     fn empty_input_is_zero() {
         assert_eq!(Crc16Xmodem::checksum(b""), 0x0000);
+    }
+
+    #[test]
+    fn line_checksum_matches_byte_serialization() {
+        // 8bpp pixels serialize one byte each, so the line CRC equals
+        // the catalogue check value over the same bytes.
+        let pixels: Vec<u32> = b"123456789".iter().map(|&b| b as u32).collect();
+        assert_eq!(Crc16Xmodem::checksum_pixels(&pixels, 8), 0x31C3);
+        assert_eq!(Crc16Xmodem::checksum_pixels(&[], 16), 0x0000);
     }
 
     #[test]

@@ -190,6 +190,18 @@ pub fn words_for_pixels(n_pixels: usize, format: PixelFormat) -> usize {
     n_pixels.div_ceil(format.pixels_per_word())
 }
 
+/// XOR `src` into `acc` lane-wise — the parity accumulator of the FEC
+/// framing (ISSUE 9): the FPGA XORs payload lines into the parity-line
+/// registers as they stream through the width FSM, so erasure recovery
+/// is a pure re-XOR of the surviving lines. Pixel values stay within
+/// their format's bit budget (XOR of in-range lanes is in range).
+pub fn xor_line(acc: &mut [u32], src: &[u32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a ^= s;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +247,18 @@ mod tests {
         assert_eq!(words_for_pixels(4, PixelFormat::Bpp8), 1);
         assert_eq!(words_for_pixels(3, PixelFormat::Bpp16), 2);
         assert_eq!(words_for_pixels(3, PixelFormat::Bpp24), 3);
+    }
+
+    #[test]
+    fn xor_line_is_involutive_and_in_range() {
+        let a0: Vec<u32> = vec![0x12, 0xFF, 0x00, 0x80];
+        let b: Vec<u32> = vec![0xFF, 0x0F, 0xAA, 0x01];
+        let mut a = a0.clone();
+        xor_line(&mut a, &b);
+        assert_ne!(a, a0);
+        assert!(a.iter().all(|&v| v <= 0xFF), "8bpp lanes stay in range");
+        xor_line(&mut a, &b);
+        assert_eq!(a, a0);
     }
 
     #[test]

@@ -41,14 +41,16 @@ use crate::iface::signals::{self, WireFrame};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Which wire hop a transfer crosses, tagged with the VPU node the hop
-/// belongs to (ISSUE 5: the datapath now drives N nodes, each behind
-/// its own CIF/LCD link pair).
+/// Which fault domain a transfer (or a resident buffer inspection)
+/// crosses, tagged with the VPU node it belongs to (ISSUE 5: the
+/// datapath drives N nodes, each behind its own CIF/LCD link pair;
+/// ISSUE 9: each node also exposes its DRAM frame buffers and CNN
+/// weight store as injectable domains).
 ///
-/// The CIF and LCD directions draw from independent fault streams. The
-/// node index is **attribution only**: fault *draws* are keyed by the
-/// hop kind + frame, never the node, so a frame draws bit-identical
-/// upsets wherever the dispatcher routes it — round-robin over N nodes
+/// The domains draw from independent fault streams. The node index is
+/// **attribution only**: fault *draws* are keyed by the domain kind +
+/// frame, never the node, so a frame draws bit-identical upsets
+/// wherever the dispatcher routes it — round-robin over N nodes
 /// reproduces the single-node sweep frame for frame, and streamed runs
 /// stay pinned to their one-shot (node-0) equivalents. Per-node
 /// *counters* ([`FaultPlan::per_hop_stats`]) are what the index feeds.
@@ -58,48 +60,72 @@ pub enum Hop {
     Cif(usize),
     /// VPU node -> FPGA/host (LCD wire, received by `LcdModule`).
     Lcd(usize),
+    /// The node's DRAM frame buffers (staged inputs awaiting execute).
+    Dram(usize),
+    /// The node's CNN weight store (upsets land on the logits).
+    Weights(usize),
 }
 
 impl Hop {
-    /// Draw-key id of the hop *kind* — deliberately node-independent
-    /// (and equal to the pre-topology ids, so existing fault seeds draw
-    /// the same upsets).
+    /// Draw-key id of the domain *kind* — deliberately node-independent
+    /// (and the wire ids equal the pre-topology ids, so existing fault
+    /// seeds draw the same wire upsets).
     fn kind_id(self) -> u64 {
         match self {
             Hop::Cif(_) => 1,
             Hop::Lcd(_) => 2,
+            Hop::Dram(_) => 3,
+            Hop::Weights(_) => 4,
         }
     }
 
-    /// The VPU node this hop serves.
+    /// The VPU node this domain serves.
     pub fn node(self) -> usize {
         match self {
-            Hop::Cif(n) | Hop::Lcd(n) => n,
+            Hop::Cif(n) | Hop::Lcd(n) | Hop::Dram(n) | Hop::Weights(n) => n,
         }
     }
 
-    /// Direction label for reports.
+    /// Domain label for reports.
     pub fn name(self) -> &'static str {
         match self {
             Hop::Cif(_) => "cif",
             Hop::Lcd(_) => "lcd",
+            Hop::Dram(_) => "dram",
+            Hop::Weights(_) => "weights",
         }
     }
 
-    /// Dense per-hop counter slot: two hops per node.
+    /// Whether this is a memory-resident domain (DRAM/weight store)
+    /// rather than a wire hop. Memory domains draw from
+    /// [`FaultConfig::memory_rate`] and are recovered by
+    /// scrubbing/TMR, not CRC resends.
+    pub fn is_memory(self) -> bool {
+        matches!(self, Hop::Dram(_) | Hop::Weights(_))
+    }
+
+    /// Whether this is a wire hop (CIF/LCD).
+    pub fn is_wire(self) -> bool {
+        !self.is_memory()
+    }
+
+    /// Dense per-hop counter slot: four domains per node.
     fn slot(self) -> usize {
         match self {
-            Hop::Cif(n) => 2 * n,
-            Hop::Lcd(n) => 2 * n + 1,
+            Hop::Cif(n) => 4 * n,
+            Hop::Lcd(n) => 4 * n + 1,
+            Hop::Dram(n) => 4 * n + 2,
+            Hop::Weights(n) => 4 * n + 3,
         }
     }
 
     /// Inverse of [`Hop::slot`].
     fn from_slot(slot: usize) -> Hop {
-        if slot % 2 == 0 {
-            Hop::Cif(slot / 2)
-        } else {
-            Hop::Lcd(slot / 2)
+        match slot % 4 {
+            0 => Hop::Cif(slot / 4),
+            1 => Hop::Lcd(slot / 4),
+            2 => Hop::Dram(slot / 4),
+            _ => Hop::Weights(slot / 4),
         }
     }
 }
@@ -132,12 +158,20 @@ pub struct FaultConfig {
     /// triggers up to this many resends before the frame is declared
     /// unrecoverable and contained as a per-frame error.
     pub max_retransmits: u32,
+    /// Per-frame rate for the *memory* domains (DRAM frame buffers and
+    /// weight store). Defaults to 0.0 — memory injection is entirely
+    /// inert unless a campaign (or a per-node rate override) enables
+    /// it, so wire-only plans reproduce PR 4 counters bit for bit.
+    pub memory_rate: f64,
+    /// Recovery strategy applied by the coordinator. Defaults to
+    /// [`crate::recovery::Strategy::Resend`] — PR 4's behavior.
+    pub strategy: crate::recovery::Strategy,
 }
 
 impl FaultConfig {
     /// A plan with the default fault mix: `rate` of frames upset,
     /// mostly-transient corruption (25% per retry), 5-deep
-    /// retransmission budget.
+    /// retransmission budget, resend recovery, memory domains off.
     pub fn new(seed: u64, rate: f64) -> FaultConfig {
         FaultConfig {
             seed,
@@ -148,6 +182,8 @@ impl FaultConfig {
             w_truncate: 0.15,
             w_stuck: 0.1,
             max_retransmits: 5,
+            memory_rate: 0.0,
+            strategy: crate::recovery::Strategy::Resend,
         }
     }
 }
@@ -169,6 +205,14 @@ pub struct FaultStats {
     pub retransmits: u64,
     /// Transfers that exhausted the retransmission budget.
     pub unrecovered: u64,
+    /// Bit flips landed on memory domains (DRAM/weight store).
+    pub memory_upsets: u64,
+    /// Wire frames repaired in place by FEC (no resend consumed).
+    pub fec_corrected: u64,
+    /// Memory upsets corrected by ECC or caught by a scrub pass.
+    pub scrub_corrected: u64,
+    /// Frames whose logits were repaired by the TMR majority vote.
+    pub tmr_corrected: u64,
 }
 
 impl FaultStats {
@@ -183,6 +227,10 @@ impl FaultStats {
             stuck_pixels: self.stuck_pixels - before.stuck_pixels,
             retransmits: self.retransmits - before.retransmits,
             unrecovered: self.unrecovered - before.unrecovered,
+            memory_upsets: self.memory_upsets - before.memory_upsets,
+            fec_corrected: self.fec_corrected - before.fec_corrected,
+            scrub_corrected: self.scrub_corrected - before.scrub_corrected,
+            tmr_corrected: self.tmr_corrected - before.tmr_corrected,
         }
     }
 
@@ -196,6 +244,10 @@ impl FaultStats {
         self.stuck_pixels += d.stuck_pixels;
         self.retransmits += d.retransmits;
         self.unrecovered += d.unrecovered;
+        self.memory_upsets += d.memory_upsets;
+        self.fec_corrected += d.fec_corrected;
+        self.scrub_corrected += d.scrub_corrected;
+        self.tmr_corrected += d.tmr_corrected;
     }
 
     /// True when every counter is zero (used to prune empty hop rows).
@@ -247,11 +299,21 @@ pub struct FaultPlan {
     stuck_pixels: AtomicU64,
     retransmits: AtomicU64,
     unrecovered: AtomicU64,
-    /// Per-(node, direction) counters, indexed by [`Hop::slot`] and
+    memory_upsets: AtomicU64,
+    fec_corrected: AtomicU64,
+    scrub_corrected: AtomicU64,
+    tmr_corrected: AtomicU64,
+    /// Per-(node, domain) counters, indexed by [`Hop::slot`] and
     /// grown on demand — the plan does not know the topology size at
     /// construction. Updates are per plane transfer (low frequency), so
     /// a mutex is cheaper than a resizable atomic structure.
     per_hop: std::sync::Mutex<Vec<FaultStats>>,
+    /// Per-node upset-rate overrides (ISSUE 9 satellite: the fleet's
+    /// `@rate` suffix). Indexed by node; `None` (or out of range)
+    /// inherits the config's global rate for the domain. Set once at
+    /// construction via [`FaultPlan::set_node_rates`], before the plan
+    /// is shared — draws read it immutably.
+    node_rates: Vec<Option<f64>>,
 }
 
 impl Default for FaultConfig {
@@ -342,6 +404,10 @@ impl FaultPlan {
             stuck_pixels: self.stuck_pixels.load(Ordering::Relaxed),
             retransmits: self.retransmits.load(Ordering::Relaxed),
             unrecovered: self.unrecovered.load(Ordering::Relaxed),
+            memory_upsets: self.memory_upsets.load(Ordering::Relaxed),
+            fec_corrected: self.fec_corrected.load(Ordering::Relaxed),
+            scrub_corrected: self.scrub_corrected.load(Ordering::Relaxed),
+            tmr_corrected: self.tmr_corrected.load(Ordering::Relaxed),
         }
     }
 
@@ -373,6 +439,10 @@ impl FaultPlan {
         self.stuck_pixels.fetch_add(d.stuck_pixels, Ordering::Relaxed);
         self.retransmits.fetch_add(d.retransmits, Ordering::Relaxed);
         self.unrecovered.fetch_add(d.unrecovered, Ordering::Relaxed);
+        self.memory_upsets.fetch_add(d.memory_upsets, Ordering::Relaxed);
+        self.fec_corrected.fetch_add(d.fec_corrected, Ordering::Relaxed);
+        self.scrub_corrected.fetch_add(d.scrub_corrected, Ordering::Relaxed);
+        self.tmr_corrected.fetch_add(d.tmr_corrected, Ordering::Relaxed);
         let mut per_hop = self.per_hop.lock().unwrap();
         let slot = hop.slot();
         if per_hop.len() <= slot {
@@ -386,13 +456,54 @@ impl FaultPlan {
     /// frame. Callers may route untargeted frames through the
     /// zero-copy fast path: [`FaultPlan::corrupt`] is a no-op for
     /// them by construction (it re-evaluates this same draw).
+    ///
+    /// Wire domains draw from `frame_rate` (gated on a nonzero fault
+    /// mix, as before); memory domains draw from `memory_rate` (the
+    /// mix describes wire corruption kinds, so it does not gate them).
+    /// A per-node rate set via [`FaultPlan::set_node_rates`] overrides
+    /// the global rate for *both* domain families of that node — the
+    /// rate changes how often a node is hit, while the draw key keeps
+    /// *which upset lands* a pure function of the frame.
     pub fn targets(&self, hop: Hop, frame: u64) -> bool {
         let c = &self.cfg;
-        let total = c.w_payload_flip + c.w_crc_corrupt + c.w_truncate + c.w_stuck;
-        if c.frame_rate <= 0.0 || total <= 0.0 {
+        let base = if hop.is_memory() {
+            c.memory_rate
+        } else {
+            let total = c.w_payload_flip + c.w_crc_corrupt + c.w_truncate + c.w_stuck;
+            if total <= 0.0 {
+                return false;
+            }
+            c.frame_rate
+        };
+        let rate = self
+            .node_rates
+            .get(hop.node())
+            .copied()
+            .flatten()
+            .unwrap_or(base);
+        if rate <= 0.0 {
             return false;
         }
-        Rng::new(sub_seed(c.seed, hop, frame, u64::MAX, u64::MAX)).bool(c.frame_rate)
+        Rng::new(sub_seed(c.seed, hop, frame, u64::MAX, u64::MAX)).bool(rate)
+    }
+
+    /// Install per-node upset-rate overrides (the fleet `@rate`
+    /// suffix). Must be called before the plan is shared; indices
+    /// beyond the vector inherit the global rate.
+    pub fn set_node_rates(&mut self, rates: Vec<Option<f64>>) {
+        self.node_rates = rates;
+    }
+
+    /// The effective memory-domain upset rate for `node` — its
+    /// override if set, else the global [`FaultConfig::memory_rate`].
+    /// Zero means the node's memory domains are inert (no draws, no
+    /// counters), which is the default for wire-only plans.
+    pub fn memory_rate_for(&self, node: usize) -> f64 {
+        self.node_rates
+            .get(node)
+            .copied()
+            .flatten()
+            .unwrap_or(self.cfg.memory_rate)
     }
 
     /// Count a wire transfer over `hop` that bypassed
@@ -499,6 +610,121 @@ impl FaultPlan {
         };
         d.stuck_pixels = 1;
         true
+    }
+
+    /// Draw the bit-flip pattern a memory-domain upset would land on a
+    /// `len`-element f32 region — `None` when the frame is untargeted
+    /// or the per-attempt transient roll misses. Pure (no counters):
+    /// the caller applies it with [`apply_flips`] (involutive, so TMR
+    /// replicas and post-execute restores reuse the same pattern) and
+    /// books it with [`FaultPlan::note_memory_upset`]. `plane` is the
+    /// buffer index within the frame; `attempt` distinguishes TMR
+    /// replicas (0 = the only execution outside TMR).
+    pub fn mem_upset_pattern(
+        &self,
+        hop: Hop,
+        frame: u64,
+        plane: usize,
+        attempt: u32,
+        len: usize,
+    ) -> Option<Vec<(usize, u32)>> {
+        if len == 0 || !self.targets(hop, frame) {
+            return None;
+        }
+        let c = &self.cfg;
+        let mut rng = Rng::new(sub_seed(c.seed, hop, frame, plane as u64, attempt as u64));
+        if !rng.bool(c.plane_rate) {
+            return None;
+        }
+        let flips = 1 + rng.range_usize(0, 2);
+        Some(
+            (0..flips)
+                .map(|_| (rng.range_usize(0, len - 1), rng.next_u32() % 32))
+                .collect(),
+        )
+    }
+
+    /// Whether a scrub pass with the given `period` catches this
+    /// frame's memory upset before it reaches the execute stage.
+    /// Single-bit upsets are always corrected in place by the SEC-DED
+    /// ECC; multi-bit upsets escape the ECC and are caught only when a
+    /// scrub pass happens to visit the region first — probability
+    /// `1/period`, drawn deterministically from its own sentinel key.
+    pub fn scrub_catches(&self, hop: Hop, frame: u64, flips: usize, period: u32) -> bool {
+        if flips <= 1 {
+            return true;
+        }
+        if period == 0 {
+            return false;
+        }
+        Rng::new(sub_seed(self.cfg.seed, hop, frame, u64::MAX - 1, 0))
+            .bool(1.0 / period as f64)
+    }
+
+    /// Record an upset of `flips` bits landed on a memory domain.
+    pub fn note_memory_upset(&self, hop: Hop, flips: u64) {
+        self.apply(
+            hop,
+            FaultStats {
+                transfers: 1,
+                faulted: 1,
+                memory_upsets: flips,
+                ..FaultStats::default()
+            },
+        );
+    }
+
+    /// Record a clean memory-domain inspection (the untargeted fast
+    /// path), mirroring [`FaultPlan::note_transfer`] on the wire.
+    pub fn note_mem_transfer(&self, hop: Hop) {
+        self.apply(
+            hop,
+            FaultStats {
+                transfers: 1,
+                ..FaultStats::default()
+            },
+        );
+    }
+
+    /// Record a wire frame repaired in place by FEC.
+    pub fn note_fec_corrected(&self, hop: Hop) {
+        self.apply(
+            hop,
+            FaultStats {
+                fec_corrected: 1,
+                ..FaultStats::default()
+            },
+        );
+    }
+
+    /// Record a memory upset corrected by ECC or caught by a scrub.
+    pub fn note_scrub_corrected(&self, hop: Hop) {
+        self.apply(
+            hop,
+            FaultStats {
+                scrub_corrected: 1,
+                ..FaultStats::default()
+            },
+        );
+    }
+
+    /// Record a frame whose logits were repaired by the TMR vote.
+    pub fn note_tmr_corrected(&self, hop: Hop) {
+        self.apply(
+            hop,
+            FaultStats {
+                tmr_corrected: 1,
+                ..FaultStats::default()
+            },
+        );
+    }
+}
+
+/// Apply (or undo — XOR is involutive) a [`FaultPlan::mem_upset_pattern`]
+/// to an f32 region, flipping the named bit of each hit element.
+pub fn apply_flips(data: &mut [f32], pattern: &[(usize, u32)]) {
+    for &(idx, bit) in pattern {
+        data[idx] = f32::from_bits(data[idx].to_bits() ^ (1u32 << bit));
     }
 }
 
@@ -724,7 +950,7 @@ mod tests {
         plan.note_retransmit(Hop::Lcd(1));
         plan.note_transfer(Hop::Lcd(0));
         let rows = plan.per_hop_stats();
-        assert_eq!(rows.len(), 4, "slots node0 cif/lcd + node1 cif/lcd");
+        assert_eq!(rows.len(), 6, "dense slots up to node1 lcd (4 domains/node)");
         let find = |hop: Hop| rows.iter().find(|r| r.hop == hop).unwrap().stats;
         assert_eq!(find(Hop::Cif(0)).transfers, 1);
         assert_eq!(find(Hop::Cif(1)).transfers, 1);
@@ -758,10 +984,138 @@ mod tests {
 
     #[test]
     fn hop_slot_roundtrips() {
-        for hop in [Hop::Cif(0), Hop::Lcd(0), Hop::Cif(5), Hop::Lcd(5)] {
+        for hop in [
+            Hop::Cif(0),
+            Hop::Lcd(0),
+            Hop::Dram(0),
+            Hop::Weights(0),
+            Hop::Cif(5),
+            Hop::Lcd(5),
+            Hop::Dram(5),
+            Hop::Weights(5),
+        ] {
             assert_eq!(Hop::from_slot(hop.slot()), hop);
         }
         assert_eq!(Hop::Cif(2).node(), 2);
         assert_eq!(Hop::Lcd(2).name(), "lcd");
+        assert_eq!(Hop::Dram(3).node(), 3);
+        assert_eq!(Hop::Dram(3).name(), "dram");
+        assert_eq!(Hop::Weights(1).name(), "weights");
+        assert!(Hop::Dram(0).is_memory() && Hop::Weights(0).is_memory());
+        assert!(Hop::Cif(0).is_wire() && Hop::Lcd(0).is_wire());
+    }
+
+    #[test]
+    fn memory_domains_are_inert_at_default_rate() {
+        // ISSUE 9: wire-only plans must not see memory-domain hits —
+        // memory_rate defaults to 0.0, keeping PR 4 counters bit-exact.
+        let plan = FaultPlan::new(always(31));
+        for frame in 0..64u64 {
+            assert!(!plan.targets(Hop::Dram(0), frame));
+            assert!(!plan.targets(Hop::Weights(0), frame));
+            assert!(plan
+                .mem_upset_pattern(Hop::Dram(0), frame, 0, 0, 1024)
+                .is_none());
+        }
+    }
+
+    #[test]
+    fn memory_upsets_draw_deterministically_and_apply_involutively() {
+        let plan = FaultPlan::new(FaultConfig {
+            memory_rate: 1.0,
+            plane_rate: 1.0,
+            ..FaultConfig::new(37, 0.0)
+        });
+        let pat = plan
+            .mem_upset_pattern(Hop::Dram(0), 5, 0, 0, 256)
+            .expect("rate 1.0 must land an upset");
+        assert!(!pat.is_empty() && pat.len() <= 3);
+        assert_eq!(pat, plan.mem_upset_pattern(Hop::Dram(0), 5, 0, 0, 256).unwrap());
+        // Node index must not feed the draw (attribution only).
+        assert_eq!(pat, plan.mem_upset_pattern(Hop::Dram(7), 5, 0, 0, 256).unwrap());
+        // DRAM and weight-store streams are independent.
+        assert_ne!(
+            pat,
+            plan.mem_upset_pattern(Hop::Weights(0), 5, 0, 0, 256).unwrap(),
+        );
+        let mut data: Vec<f32> = (0..256).map(|i| i as f32 * 0.5).collect();
+        let before = data.clone();
+        apply_flips(&mut data, &pat);
+        assert_ne!(
+            data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            before.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+        apply_flips(&mut data, &pat);
+        assert_eq!(
+            data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            before.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "XOR flips must be involutive"
+        );
+    }
+
+    #[test]
+    fn node_rate_overrides_gate_targeting_per_node() {
+        let mut plan = FaultPlan::new(FaultConfig {
+            memory_rate: 1.0,
+            plane_rate: 1.0,
+            ..always(41)
+        });
+        plan.set_node_rates(vec![Some(0.0), None, Some(1.0)]);
+        for frame in 0..32u64 {
+            // Node 0 is overridden to zero: never targeted, any domain.
+            assert!(!plan.targets(Hop::Cif(0), frame));
+            assert!(!plan.targets(Hop::Dram(0), frame));
+            // Node 1 inherits the global rates (1.0 here).
+            assert!(plan.targets(Hop::Cif(1), frame));
+            // Node 2 overridden to 1.0; node 3 beyond the vector
+            // inherits the global rate.
+            assert!(plan.targets(Hop::Weights(2), frame));
+            assert!(plan.targets(Hop::Lcd(3), frame));
+        }
+    }
+
+    #[test]
+    fn scrub_catches_single_bit_always_and_multibit_by_period() {
+        let plan = FaultPlan::new(FaultConfig {
+            memory_rate: 1.0,
+            ..FaultConfig::new(43, 0.0)
+        });
+        let mut caught = 0;
+        for frame in 0..256u64 {
+            assert!(plan.scrub_catches(Hop::Dram(0), frame, 1, 8), "ECC corrects 1-bit");
+            let c = plan.scrub_catches(Hop::Dram(0), frame, 2, 4);
+            assert_eq!(c, plan.scrub_catches(Hop::Dram(0), frame, 2, 4), "deterministic");
+            caught += c as u32;
+        }
+        // Multi-bit catches approach 1/period = 25% over 256 draws.
+        assert!((32..=96).contains(&caught), "caught {caught}/256 at period 4");
+        assert!(!plan.scrub_catches(Hop::Dram(0), 0, 3, 0), "period 0 never scrubs");
+    }
+
+    #[test]
+    fn memory_counters_flow_through_both_views() {
+        let plan = FaultPlan::new(FaultConfig::new(47, 0.0));
+        plan.note_memory_upset(Hop::Dram(1), 2);
+        plan.note_mem_transfer(Hop::Weights(1));
+        plan.note_fec_corrected(Hop::Cif(0));
+        plan.note_scrub_corrected(Hop::Dram(1));
+        plan.note_tmr_corrected(Hop::Weights(1));
+        let s = plan.stats();
+        assert_eq!(s.memory_upsets, 2);
+        assert_eq!(s.faulted, 1);
+        assert_eq!(s.transfers, 2);
+        assert_eq!(s.fec_corrected, 1);
+        assert_eq!(s.scrub_corrected, 1);
+        assert_eq!(s.tmr_corrected, 1);
+        let rows = plan.per_hop_stats();
+        let find = |hop: Hop| rows.iter().find(|r| r.hop == hop).unwrap().stats;
+        assert_eq!(find(Hop::Dram(1)).memory_upsets, 2);
+        assert_eq!(find(Hop::Dram(1)).scrub_corrected, 1);
+        assert_eq!(find(Hop::Weights(1)).tmr_corrected, 1);
+        let mut sum = FaultStats::default();
+        for r in &rows {
+            sum.add(r.stats);
+        }
+        assert_eq!(sum, plan.stats());
     }
 }

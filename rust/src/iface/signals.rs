@@ -217,6 +217,115 @@ impl WireFrame {
     }
 }
 
+/// Parity lines per frame under the FEC framing (ISSUE 9): payload
+/// line `i` folds into parity register `i % FEC_PARITY_LINES`, so any
+/// single erasure per residue class is reconstructible — up to four
+/// *interleaved* bad lines per frame with zero retransmissions, which
+/// covers every single-event upset the injector draws (1–3 bit flips
+/// in one line, one CRC-line hit, or a 1–2 line tail truncation).
+pub const FEC_PARITY_LINES: usize = 4;
+
+/// The FEC sidecar the Tx side computes while the frame streams out:
+/// per-line CRC16 erasure locators plus the interleaved XOR parity
+/// lines. On the wire these ride as `FEC_PARITY_LINES + 1` extra lines
+/// after the CRC line (the +1 carries the packed line CRCs); the
+/// timing models price that overhead, and the injector targets the
+/// payload they protect — the sidecar itself is modeled as arriving
+/// intact (it is short, interleaved, and CRC-framed in the HDL).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FecSidecar {
+    /// CRC-16/XMODEM of each payload line, in line order.
+    pub line_crcs: Vec<u16>,
+    /// `FEC_PARITY_LINES` parity lines of `width` lanes each;
+    /// `parity[j]` = XOR of payload lines `i` with `i % P == j`.
+    pub parity: Vec<Vec<u32>>,
+}
+
+/// How a received frame fared under FEC repair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FecOutcome {
+    /// Frame CRC passed on arrival — nothing to do.
+    Clean,
+    /// The frame was repaired in place and now passes its CRC.
+    Corrected,
+    /// More than one erasure in some residue class (or the repair
+    /// failed verification) — fall back to the ARQ resend budget.
+    Unrecoverable,
+}
+
+/// Compute the FEC sidecar of a (clean, Tx-side) wire frame.
+pub fn fec_encode(wire: &WireFrame) -> FecSidecar {
+    let w = wire.width;
+    let bits = wire.format.bits();
+    let line_crcs = wire
+        .payload
+        .chunks_exact(w)
+        .map(|line| Crc16Xmodem::checksum_pixels(line, bits))
+        .collect();
+    let mut parity = vec![vec![0u32; w]; FEC_PARITY_LINES];
+    for (i, line) in wire.payload.chunks_exact(w).enumerate() {
+        crate::fabric::width::xor_line(&mut parity[i % FEC_PARITY_LINES], line);
+    }
+    FecSidecar { line_crcs, parity }
+}
+
+/// Repair a received frame in place from its FEC sidecar.
+///
+/// Per-line CRCs locate the erased lines; each residue class with
+/// exactly one bad line is reconstructed by XORing the class parity
+/// with its surviving lines. If the payload is intact but the frame
+/// CRC fails, the corruption hit the CRC line itself and the line is
+/// rewritten from the recomputed payload CRC. The repaired frame is
+/// verified against the whole-frame CRC before claiming success.
+pub fn fec_repair(wire: &mut WireFrame, sidecar: &FecSidecar) -> FecOutcome {
+    if wire.check_crc().ok() {
+        return FecOutcome::Clean;
+    }
+    let w = wire.width;
+    let h = wire.height;
+    let bits = wire.format.bits();
+    if sidecar.line_crcs.len() != h || sidecar.parity.len() != FEC_PARITY_LINES {
+        return FecOutcome::Unrecoverable;
+    }
+    let bad: Vec<usize> = wire
+        .payload
+        .chunks_exact(w)
+        .enumerate()
+        .filter(|(i, line)| Crc16Xmodem::checksum_pixels(line, bits) != sidecar.line_crcs[*i])
+        .map(|(i, _)| i)
+        .collect();
+    if bad.is_empty() {
+        // Payload intact: the upset landed on the CRC line. Reseal it.
+        let crc = payload_crc(&wire.payload, wire.format);
+        wire.crc_line = make_crc_line(crc, w, wire.format);
+    } else {
+        // At most one erasure per residue class is reconstructible.
+        for j in 0..FEC_PARITY_LINES {
+            if bad.iter().filter(|&&i| i % FEC_PARITY_LINES == j).count() > 1 {
+                return FecOutcome::Unrecoverable;
+            }
+        }
+        for &i in &bad {
+            let j = i % FEC_PARITY_LINES;
+            let mut rec = sidecar.parity[j].clone();
+            for k in (j..h).step_by(FEC_PARITY_LINES) {
+                if k != i {
+                    crate::fabric::width::xor_line(&mut rec, &wire.payload[k * w..(k + 1) * w]);
+                }
+            }
+            if Crc16Xmodem::checksum_pixels(&rec, bits) != sidecar.line_crcs[i] {
+                return FecOutcome::Unrecoverable;
+            }
+            wire.payload[i * w..(i + 1) * w].copy_from_slice(&rec);
+        }
+    }
+    if wire.check_crc().ok() {
+        FecOutcome::Corrected
+    } else {
+        FecOutcome::Unrecoverable
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +441,73 @@ mod tests {
         let line = make_crc_line(0x1234, 3, PixelFormat::Bpp16);
         assert_eq!(line, vec![0x1234, 0, 0]);
         assert_eq!(extract_crc(&line, PixelFormat::Bpp16), 0x1234);
+    }
+
+    #[test]
+    fn fec_clean_frame_is_left_alone() {
+        let f = random_frame(3, 16, 12, PixelFormat::Bpp16);
+        let mut wire = WireFrame::from_frame(&f);
+        let sidecar = fec_encode(&wire);
+        assert_eq!(sidecar.line_crcs.len(), 12);
+        assert_eq!(sidecar.parity.len(), FEC_PARITY_LINES);
+        let before = wire.clone();
+        assert_eq!(fec_repair(&mut wire, &sidecar), FecOutcome::Clean);
+        assert_eq!(wire, before);
+    }
+
+    #[test]
+    fn fec_repairs_single_line_corruption_bit_exactly() {
+        for fmt in [PixelFormat::Bpp8, PixelFormat::Bpp16, PixelFormat::Bpp24] {
+            let f = random_frame(9, 8, 16, fmt);
+            let clean = WireFrame::from_frame(&f);
+            let sidecar = fec_encode(&clean);
+            let mut wire = clean.clone();
+            wire.corrupt_bit(5 * 8 + 3, 2); // one flip in line 5
+            assert!(!wire.check_crc().ok());
+            assert_eq!(fec_repair(&mut wire, &sidecar), FecOutcome::Corrected);
+            assert_eq!(wire, clean, "repair must restore the exact payload");
+        }
+    }
+
+    #[test]
+    fn fec_repairs_crc_line_corruption() {
+        let f = random_frame(11, 8, 8, PixelFormat::Bpp16);
+        let clean = WireFrame::from_frame(&f);
+        let sidecar = fec_encode(&clean);
+        let mut wire = clean.clone();
+        wire.crc_line[0] ^= 1 << 4;
+        assert!(!wire.check_crc().ok());
+        assert_eq!(fec_repair(&mut wire, &sidecar), FecOutcome::Corrected);
+        assert_eq!(wire, clean);
+    }
+
+    #[test]
+    fn fec_repairs_interleaved_tail_truncation() {
+        // A 2-line tail drop lands in distinct residue classes, so the
+        // interleaved parity recovers both lines — the injector's
+        // worst truncation case, zero retransmissions.
+        let f = random_frame(13, 8, 16, PixelFormat::Bpp8);
+        let clean = WireFrame::from_frame(&f);
+        let sidecar = fec_encode(&clean);
+        let mut wire = clean.clone();
+        let n = wire.payload.len();
+        for v in &mut wire.payload[n - 2 * 8..] {
+            *v = 0;
+        }
+        assert_eq!(fec_repair(&mut wire, &sidecar), FecOutcome::Corrected);
+        assert_eq!(wire, clean);
+    }
+
+    #[test]
+    fn fec_gives_up_on_two_erasures_in_one_class() {
+        let f = random_frame(17, 8, 16, PixelFormat::Bpp16);
+        let clean = WireFrame::from_frame(&f);
+        let sidecar = fec_encode(&clean);
+        let mut wire = clean.clone();
+        // Lines 1 and 1+P share a residue class.
+        wire.corrupt_bit(8 + 2, 1);
+        wire.corrupt_bit((1 + FEC_PARITY_LINES) * 8 + 2, 1);
+        assert_eq!(fec_repair(&mut wire, &sidecar), FecOutcome::Unrecoverable);
     }
 
     #[test]

@@ -21,6 +21,7 @@
 
 pub mod config;
 pub mod error;
+pub mod recovery;
 pub mod util;
 
 /// Which kernel tier executes the DSP/CNN hot paths.

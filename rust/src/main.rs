@@ -21,9 +21,10 @@ use spacecodesign::compress::{self, Cube};
 use spacecodesign::config::{CliOverrides, FleetSpec, ResolvedConfig, SettingSource, SystemConfig};
 use spacecodesign::coordinator::comparators;
 use spacecodesign::coordinator::{
-    report, stream, AdmitPolicy, ArrivalProcess, Benchmark, CoProcessor, StreamOptions,
-    TrafficConfig,
+    campaign, report, stream, AdmitPolicy, ArrivalProcess, Benchmark, CampaignOptions,
+    CoProcessor, StreamOptions, TrafficConfig,
 };
+use spacecodesign::recovery::Strategy;
 use spacecodesign::fpga::{designs, Device};
 use spacecodesign::iface::loopback;
 use spacecodesign::util::rng::Rng;
@@ -41,6 +42,7 @@ fn main() {
         "loopback" => run_loopback(),
         "run" => run_one(&args),
         "stream" => run_stream(&args),
+        "campaign" => run_campaign(&args),
         "compress" => run_compress(&args),
         "report" => report_all(seed(&args)),
         "help" | "--help" | "-h" => {
@@ -91,6 +93,9 @@ COMMANDS:
              once per run;
              [--inject RATE] [--fault-seed N] adds seeded wire faults
              with CRC-triggered retransmission + per-frame containment;
+             [--strategy none|resend|fec|scrub[:N]|tmr] picks the
+             recovery strategy (default resend; env var
+             SPACECODESIGN_FAULT_STRATEGY);
              [--traffic poisson|duty|off] turns on the constellation
              traffic harness — seeded stochastic arrivals across
              priority classes with bounded admission — tuned by
@@ -98,6 +103,14 @@ COMMANDS:
              [--drop newest|oldest|degrade] [--execute-every K];
              lld becomes the default dispatcher and the summary adds
              virtual p50/p99/p999 sojourn latency vs the Masked DES
+  campaign   radiation campaign sweep (upset rates x recovery
+             strategies): [--bench NAME] [--frames N] [--seed N]
+             [--rates R1,R2,...] (default 0.05,0.2,0.5)
+             [--strategies none,resend,fec,scrub[:N],tmr] (default all)
+             [--scrub-period N] [--backend ref|opt|simd] — each cell
+             arms wire + memory upsets at the rate and reports
+             availability, masked-DES throughput and wire bandwidth
+             overhead in one matrix
   compress   CCSDS-123 compression demo: [--bands Z] [--rows Y] [--cols X]
   report     all of the above
 ";
@@ -200,14 +213,14 @@ fn table2(frames: usize, seed: u64) -> Result<()> {
     for run in &runs {
         println!("{}", report::validation_row(run));
     }
-    // Fault appendix (ISSUE 5 satellite): when an env-enabled plan
-    // injected during these rows, attribute what happened per node and
-    // wire direction.
+    // Fault appendix (ISSUE 5 satellite, per-domain since ISSUE 9):
+    // when an env-enabled plan injected during these rows, attribute
+    // what happened per node, wire direction and memory domain.
     if let Some(plan) = &cp.faults {
         let rows = plan.per_hop_stats();
         if rows.iter().any(|h| h.stats.transfers > 0) {
-            println!("\nWire faults (per node/hop):");
-            print!("{}", report::hop_fault_rows(&rows));
+            println!("\nFaults (per node/domain):");
+            print!("{}", report::domain_fault_rows(&rows));
         }
     }
     Ok(())
@@ -360,12 +373,20 @@ fn run_stream(args: &[String]) -> Result<()> {
         eprintln!("--vpus and --fleet both size the topology; pass one or the other");
         std::process::exit(2);
     }
+    let fault_strategy = flag_str(args, "--strategy").map(|s| match Strategy::parse(s) {
+        Some(st) => st,
+        None => {
+            eprintln!("unknown recovery strategy '{s}' (none | resend | fec | scrub[:N] | tmr)");
+            std::process::exit(2);
+        }
+    });
     let rc = ResolvedConfig::resolve(&CliOverrides {
         backend: backend_flag,
         workers: flag_usize(args, "--workers"),
         vpus: flag_usize(args, "--vpus"),
         fault_seed,
         fault_rate: inject,
+        fault_strategy,
         fleet,
     });
     if let Some(w) = rc.workers.value {
@@ -494,6 +515,74 @@ fn run_stream(args: &[String]) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+fn run_campaign(args: &[String]) -> Result<()> {
+    let name = flag_str(args, "--bench").unwrap_or("conv3");
+    let Some(bench) = parse_bench(name) else {
+        eprintln!("unknown benchmark '{name}'");
+        std::process::exit(2);
+    };
+    let mut opts = CampaignOptions::new(bench);
+    opts.frames = flag_usize(args, "--frames").unwrap_or(opts.frames);
+    opts.seed = seed(args);
+    if let Some(csv) = flag_str(args, "--rates") {
+        opts.rates = csv
+            .split(',')
+            .map(|r| match r.trim().parse::<f64>() {
+                Ok(v) if v.is_finite() && (0.0..=1.0).contains(&v) => v,
+                _ => {
+                    eprintln!("invalid upset rate '{r}' in --rates (want 0.0..=1.0)");
+                    std::process::exit(2);
+                }
+            })
+            .collect();
+    }
+    if let Some(csv) = flag_str(args, "--strategies") {
+        opts.strategies = csv
+            .split(',')
+            .map(|s| match Strategy::parse(s.trim()) {
+                Some(st) => st,
+                None => {
+                    eprintln!(
+                        "unknown recovery strategy '{s}' (none | resend | fec | scrub[:N] | tmr)"
+                    );
+                    std::process::exit(2);
+                }
+            })
+            .collect();
+    }
+    if let Some(p) = flag_usize(args, "--scrub-period") {
+        if p == 0 {
+            eprintln!("--scrub-period needs at least 1");
+            std::process::exit(2);
+        }
+        for s in &mut opts.strategies {
+            if let Strategy::Scrub { period } = s {
+                *period = p as u32;
+            }
+        }
+    }
+    println!(
+        "== Radiation campaign: {} x{} frames/cell, {} rates x {} strategies ==",
+        bench.name(),
+        opts.frames,
+        opts.rates.len(),
+        opts.strategies.len(),
+    );
+    let mut cp = CoProcessor::with_defaults()?;
+    if let Some(b) = flag_str(args, "--backend") {
+        match KernelBackend::parse(b) {
+            Some(k) => cp.backend = k,
+            None => {
+                eprintln!("unknown backend '{b}' (ref | opt | simd)");
+                std::process::exit(2);
+            }
+        }
+    }
+    let r = campaign::run(&mut cp, &opts)?;
+    print!("{}", report::campaign_matrix(&r));
     Ok(())
 }
 

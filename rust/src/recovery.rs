@@ -1,0 +1,161 @@
+//! Recovery strategies for radiation-induced upsets (ISSUE 9).
+//!
+//! PR 4 hardcoded one counter-measure: bounded ARQ resend on a wire
+//! CRC failure. The group's fault-tolerance companion (arXiv
+//! 2506.12971) evaluates a *portfolio* — FEC on the links, ECC plus
+//! periodic scrubbing on the memories, TMR-style voting on compute —
+//! and the right pick depends on the upset rate and on which resource
+//! (bandwidth, time, energy) is scarcest. This module names the
+//! portfolio; `iface::fault` + `coordinator::stream` implement it, and
+//! `coordinator::campaign` sweeps it against upset rates.
+//!
+//! The strategy is orthogonal to the *fault domain* ([`crate::iface::fault::Hop`]):
+//! wire domains (CIF/LCD) are protected by `None`/`Resend`/`Fec`,
+//! memory domains (DRAM frame buffers, CNN weight store) by
+//! `Scrub`/ECC, and the execute stage by `TmrVote`. Strategies that do
+//! not apply to a domain degrade to the `Resend` baseline there, so a
+//! single knob always yields a runnable system.
+
+/// Default scrub period (frames between scrub passes) when
+/// [`Strategy::parse`] sees bare `scrub`.
+pub const DEFAULT_SCRUB_PERIOD: u32 = 8;
+
+/// How the system responds to injected upsets. Selected per run via
+/// `--strategy` / `SPACECODESIGN_FAULT_STRATEGY`
+/// (`config::ResolvedConfig`); the default reproduces PR 4 bit-exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// No counter-measure: the first CRC failure on a wire hop is a
+    /// frame error (no resends), memory upsets land unchecked. The
+    /// availability floor of the campaign matrix.
+    None,
+    /// Bounded ARQ resend on wire CRC failure — PR 4's behavior,
+    /// bit-exact when selected. Memory upsets land unchecked.
+    Resend,
+    /// Forward error correction on the wire: per-line CRC16 erasure
+    /// locators plus interleaved parity lines reconstruct single-symbol
+    /// upsets with **zero retransmissions**, at a fixed bandwidth
+    /// overhead priced into the DES. Multi-erasure residues fall back
+    /// to the ARQ budget.
+    Fec,
+    /// ECC (SEC-DED) plus periodic scrubbing of the DRAM/weight
+    /// regions: single-bit upsets always correct; multi-bit upsets are
+    /// caught with probability `1/period` per frame. The scrub pass is
+    /// a `vpu::cost` + `power` term amortized over `period` frames.
+    Scrub {
+        /// Frames between scrub passes (>= 1). Shorter periods catch
+        /// more multi-bit upsets but cost more DMA time and power.
+        period: u32,
+    },
+    /// Triple-execute-and-vote on the CNN logits: the execute stage
+    /// runs three replicas and takes a bitwise majority, masking
+    /// memory-domain upsets at 3x compute cost.
+    TmrVote,
+}
+
+impl Default for Strategy {
+    fn default() -> Strategy {
+        Strategy::Resend
+    }
+}
+
+impl Strategy {
+    /// Every strategy at its default knob setting — the campaign sweep
+    /// axis, in the order the matrix renders.
+    pub const ALL: [Strategy; 5] = [
+        Strategy::None,
+        Strategy::Resend,
+        Strategy::Fec,
+        Strategy::Scrub { period: DEFAULT_SCRUB_PERIOD },
+        Strategy::TmrVote,
+    ];
+
+    /// Parse the CLI/env spelling: `none`, `resend`, `fec`, `scrub`
+    /// (default period), `scrub:N`, `tmr`. Case-insensitive.
+    pub fn parse(s: &str) -> Option<Strategy> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "none" => Some(Strategy::None),
+            "resend" | "arq" => Some(Strategy::Resend),
+            "fec" => Some(Strategy::Fec),
+            "scrub" => Some(Strategy::Scrub { period: DEFAULT_SCRUB_PERIOD }),
+            "tmr" | "tmrvote" => Some(Strategy::TmrVote),
+            _ => {
+                let period = s.strip_prefix("scrub:")?.parse::<u32>().ok()?;
+                (period >= 1).then_some(Strategy::Scrub { period })
+            }
+        }
+    }
+
+    /// Stable label for reports and the campaign matrix.
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::None => "none",
+            Strategy::Resend => "resend",
+            Strategy::Fec => "fec",
+            Strategy::Scrub { .. } => "scrub",
+            Strategy::TmrVote => "tmr",
+        }
+    }
+
+    /// The scrub period when scrubbing is active, else `None`.
+    pub fn scrub_period(self) -> Option<u32> {
+        match self {
+            Strategy::Scrub { period } => Some(period),
+            _ => None,
+        }
+    }
+
+    /// Whether wire CRC failures may consume the ARQ resend budget
+    /// under this strategy. `None` fails fast; everything else keeps
+    /// the bounded-resend backstop (FEC falls back on multi-erasure).
+    pub fn wire_resends(self) -> bool {
+        !matches!(self, Strategy::None)
+    }
+
+    /// Whether wire frames carry the FEC sidecar (parity lines +
+    /// per-line CRCs) under this strategy.
+    pub fn wire_fec(self) -> bool {
+        matches!(self, Strategy::Fec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_every_spelling() {
+        assert_eq!(Strategy::parse("none"), Some(Strategy::None));
+        assert_eq!(Strategy::parse("resend"), Some(Strategy::Resend));
+        assert_eq!(Strategy::parse("ARQ"), Some(Strategy::Resend));
+        assert_eq!(Strategy::parse("fec"), Some(Strategy::Fec));
+        assert_eq!(
+            Strategy::parse("scrub"),
+            Some(Strategy::Scrub { period: DEFAULT_SCRUB_PERIOD })
+        );
+        assert_eq!(Strategy::parse("scrub:3"), Some(Strategy::Scrub { period: 3 }));
+        assert_eq!(Strategy::parse(" TMR "), Some(Strategy::TmrVote));
+        for bad in ["", "scrub:0", "scrub:x", "fecc", "retry"] {
+            assert_eq!(Strategy::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()), Some(s), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn default_is_the_pr4_resend_baseline() {
+        assert_eq!(Strategy::default(), Strategy::Resend);
+        assert!(Strategy::Resend.wire_resends());
+        assert!(!Strategy::None.wire_resends());
+        assert!(Strategy::Fec.wire_fec());
+        assert!(!Strategy::Resend.wire_fec());
+        assert_eq!(Strategy::Scrub { period: 4 }.scrub_period(), Some(4));
+        assert_eq!(Strategy::TmrVote.scrub_period(), None);
+    }
+}

@@ -212,6 +212,26 @@ impl CostModel {
         self.leon_time(kind, w).as_secs()
             / self.shave_time_ideal(kind, w).as_secs()
     }
+
+    /// One full ECC scrub pass over a DRAM region (ISSUE 9
+    /// `recovery::Strategy::Scrub`): the scrubber streams
+    /// `region_bytes` through the DMA engine, so the pass is priced at
+    /// this node's DMA rate (read + SEC-DED check + write-back folded
+    /// into the streaming rate, as on real scrub engines).
+    pub fn scrub_pass_time(&self, region_bytes: usize) -> SimTime {
+        SimTime::from_secs(region_bytes as f64 / self.vpu.dma_bytes_per_s)
+    }
+
+    /// Amortized per-frame cost of scrubbing once every `period`
+    /// frames. Period 0 means "never" and costs nothing.
+    pub fn scrub_overhead(&self, region_bytes: usize, period: u32) -> SimTime {
+        if period == 0 {
+            return SimTime::from_secs(0.0);
+        }
+        SimTime::from_secs(
+            self.scrub_pass_time(region_bytes).as_secs() / period as f64,
+        )
+    }
 }
 
 /// Standard Table II workloads.
@@ -376,6 +396,21 @@ mod tests {
         let bands = m.band_cycles(BenchKind::Ccsds, &w, 8);
         assert_eq!(bands.len(), 8);
         assert!((bands[0] - bands[7]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scrub_overhead_amortizes_a_dma_priced_pass() {
+        let m = model();
+        // 24 MB frame-buffer region at 1.5 GB/s DMA: one pass = 16 ms.
+        let region = 24 * 1024 * 1024;
+        let pass = m.scrub_pass_time(region);
+        assert!((pass.as_ms() - 16.78).abs() < 0.1, "{} ms", pass.as_ms());
+        let per_frame = m.scrub_overhead(region, 8);
+        assert!(
+            (per_frame.as_secs() - pass.as_secs() / 8.0).abs() < 1e-12,
+            "period divides the pass"
+        );
+        assert_eq!(m.scrub_overhead(region, 0).as_secs(), 0.0, "period 0 = never");
     }
 
     #[test]

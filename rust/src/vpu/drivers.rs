@@ -55,6 +55,11 @@ pub struct CamGeneric {
     pub node: usize,
     pub frames_received: u64,
     pub crc_errors: u64,
+    /// Frames whose wire lines faulted but whose payload the FEC
+    /// sidecar reconstructed before receive (ISSUE 9
+    /// `recovery::Strategy::Fec`) — repaired frames pass CRC at Rx, so
+    /// they do *not* count in `crc_errors` and cost no retransmit.
+    pub fec_corrected: u64,
 }
 
 impl CamGeneric {
@@ -70,7 +75,13 @@ impl CamGeneric {
             node,
             frames_received: 0,
             crc_errors: 0,
+            fec_corrected: 0,
         }
+    }
+
+    /// Record an FEC erasure recovery on this node's CIF Rx path.
+    pub fn note_corrected(&mut self) {
+        self.fec_corrected += 1;
     }
 
     /// CIF Rx: wire -> DRAM frame. Always yields the frame (whatever
@@ -266,6 +277,16 @@ mod tests {
         assert!(!rx.crc_ok);
         assert_eq!(cam.crc_errors, 1);
         assert_eq!(cam.frames_received, 1);
+    }
+
+    #[test]
+    fn fec_corrections_count_separately_from_crc_errors() {
+        let mut cam = CamGeneric::new(50.0e6, 27);
+        assert_eq!(cam.fec_corrected, 0);
+        cam.note_corrected();
+        cam.note_corrected();
+        assert_eq!(cam.fec_corrected, 2);
+        assert_eq!(cam.crc_errors, 0, "corrections are not wire errors");
     }
 
     #[test]

@@ -99,6 +99,16 @@ impl VpuMemory {
         self.cmx.capacity / n_shaves
     }
 
+    /// DRAM bytes the background ECC scrubber sweeps per pass for one
+    /// in-flight frame (ISSUE 9 `recovery::Strategy::Scrub`): the f32
+    /// staging copy of the input frame, double-buffered as Masked mode
+    /// keeps it in DRAM (`w x h x channels x 4 B x 2`). Documented
+    /// simplification: output and weight buffers are an order of
+    /// magnitude smaller and are absorbed by the factor of 2.
+    pub fn scrub_region_bytes(width: usize, height: usize, channels: usize) -> usize {
+        width * height * channels * 4 * 2
+    }
+
     /// Feasibility: a conv band of `width` px f32 with `k`/2 halo rows
     /// (input) + output band must fit one SHAVE's CMX slice when staged.
     pub fn conv_band_fits(
@@ -156,6 +166,16 @@ mod tests {
     fn cmx_slices_per_shave() {
         let m = VpuMemory::myriad2(2 * 1024 * 1024);
         assert_eq!(m.cmx_slice_per_shave(12), 174_762);
+    }
+
+    #[test]
+    fn scrub_region_is_the_double_buffered_f32_frame() {
+        // 1024^2 mono frame: 4 MB staged f32, x2 for double buffering.
+        assert_eq!(VpuMemory::scrub_region_bytes(1024, 1024, 1), 8 << 20);
+        // RGB triples it; the region always fits the 512 MB DRAM pool.
+        let rgb = VpuMemory::scrub_region_bytes(1024, 1024, 3);
+        assert_eq!(rgb, 24 << 20);
+        assert!(rgb < 512 * 1024 * 1024);
     }
 
     #[test]

@@ -123,6 +123,22 @@ impl PowerModel {
     pub fn leon_power(&self, kind: BenchKind) -> f64 {
         self.power(&self.leon_activity(kind))
     }
+
+    /// Added draw of the background ECC scrubber (ISSUE 9
+    /// `recovery::Strategy::Scrub`): one DRAM sweep every `period`
+    /// frames keeps the memory interface busy for roughly `1/period`
+    /// of the frame window, so the extra power is `dram_active_w /
+    /// period`. Documented simplification: the true duty is
+    /// `pass_time / frame_time`, but power is annotated before frame
+    /// wall time is known; with the default period the error is under
+    /// 15 mW. Kept out of [`PowerModel::shave_activity_for`] so the
+    /// no-scrub envelopes stay bitwise.
+    pub fn scrub_power(&self, period: u32) -> f64 {
+        if period == 0 {
+            return 0.0;
+        }
+        self.dram_active_w / period as f64
+    }
 }
 
 #[cfg(test)]
@@ -204,6 +220,16 @@ mod tests {
             assert!(small < full, "{kind:?}: {small} !< {full}");
             assert!(small > pm.base_w, "{kind:?}: active node above baseline");
         }
+    }
+
+    #[test]
+    fn scrub_power_is_a_small_dram_duty_term() {
+        let pm = PowerModel::default();
+        assert_eq!(pm.scrub_power(0), 0.0, "period 0 = scrubber off");
+        let p8 = pm.scrub_power(8);
+        assert!((p8 - pm.dram_active_w / 8.0).abs() < 1e-12);
+        assert!(p8 < 0.02, "amortized scrub stays under 20 mW: {p8}");
+        assert!(pm.scrub_power(2) > p8, "shorter period draws more");
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Recovery-strategy integration (ISSUE 9): the strategy axis is
+//! orthogonal to the fault-domain axis — Resend reproduces the PR 4
+//! wire behavior bit for bit, FEC absorbs single-symbol wire upsets
+//! with zero retransmissions, scrubbing and TMR mask memory upsets,
+//! and `Strategy::None` fails fast.
+//!
+//! Runs on the native execution path (builtin manifest) so it needs no
+//! `make artifacts`. Every test pins its own explicit [`FaultPlan`]
+//! (overriding any `SPACECODESIGN_FAULT_*` the environment sets), so
+//! the assertions hold under any CI matrix leg.
+
+use spacecodesign::config::SystemConfig;
+use spacecodesign::coordinator::{stream, Benchmark, CoProcessor, StreamOptions};
+use spacecodesign::iface::fault::{FaultConfig, FaultPlan};
+use spacecodesign::recovery::Strategy;
+
+fn coproc(tag: &str, faults: Option<FaultPlan>) -> CoProcessor {
+    let mut cfg = SystemConfig::paper();
+    cfg.artifacts_dir = format!("target/__recovery_{tag}__");
+    let mut cp = CoProcessor::new(cfg).expect("native coprocessor");
+    cp.faults = faults;
+    cp
+}
+
+fn opts(frames: usize, seed: u64) -> StreamOptions {
+    StreamOptions::builder(Benchmark::Conv { k: 3 })
+        .frames(frames)
+        .seed(seed)
+        .build()
+}
+
+/// Wire plan hitting every attempt of every frame with exactly one
+/// stuck pixel — a single corrupted line, the FEC single-symbol case.
+/// Persistent (`plane_rate` 1.0): resend can never outrun it.
+fn stuck_storm(seed: u64, strategy: Strategy) -> FaultPlan {
+    FaultPlan::new(FaultConfig {
+        frame_rate: 1.0,
+        plane_rate: 1.0,
+        w_payload_flip: 0.0,
+        w_crc_corrupt: 0.0,
+        w_truncate: 0.0,
+        w_stuck: 1.0,
+        strategy,
+        ..FaultConfig::new(seed, 1.0)
+    })
+}
+
+/// Memory-domain-only plan: wire untouched, every frame's DRAM staging
+/// buffer takes a 1–3 bit upset.
+fn memory_only(seed: u64, strategy: Strategy) -> FaultPlan {
+    FaultPlan::new(FaultConfig {
+        memory_rate: 1.0,
+        strategy,
+        ..FaultConfig::new(seed, 0.0)
+    })
+}
+
+#[test]
+fn resend_strategy_is_bit_exact_with_the_default_plan() {
+    // ISSUE 9 acceptance: `Strategy::Resend` IS the pre-refactor
+    // behavior — a plan that spells it out must reproduce the
+    // default-constructed plan (whose counters the PR 4/5 suites pin)
+    // transfer for transfer and microsecond for microsecond.
+    let mixed = |strategy: Option<Strategy>| {
+        let mut cfg = FaultConfig::new(21, 0.7);
+        cfg.plane_rate = 0.5;
+        if let Some(s) = strategy {
+            cfg.strategy = s;
+        }
+        let mut cp = coproc(
+            if strategy.is_some() { "res_e" } else { "res_d" },
+            Some(FaultPlan::new(cfg)),
+        );
+        stream::run(&mut cp, &opts(8, 30)).unwrap()
+    };
+    let explicit = mixed(Some(Strategy::Resend));
+    let default = mixed(None);
+    assert_eq!(explicit.faults, default.faults);
+    assert_eq!(explicit.retransmits, default.retransmits);
+    assert_eq!(explicit.runs.len(), default.runs.len());
+    for (a, b) in explicit.runs.iter().zip(&default.runs) {
+        assert_eq!(a.t_cif, b.t_cif);
+        assert_eq!(a.t_proc, b.t_proc);
+        assert_eq!(a.t_lcd, b.t_lcd);
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.retransmits, b.retransmits);
+        assert_eq!(a.validation.mismatches, b.validation.mismatches);
+    }
+    let ea: Vec<usize> = explicit.frame_errors.iter().map(|e| e.frame).collect();
+    let eb: Vec<usize> = default.frame_errors.iter().map(|e| e.frame).collect();
+    assert_eq!(ea, eb);
+}
+
+#[test]
+fn fec_absorbs_single_symbol_upsets_with_zero_retransmissions() {
+    // ISSUE 9 acceptance: one corrupted line per attempt is exactly
+    // one erasure per parity class — the sidecar reconstructs it in
+    // place, so a storm that defeats any resend budget costs FEC zero
+    // retransmissions and zero frame losses.
+    let n = 5;
+    let mut cp = coproc("fec", Some(stuck_storm(19, Strategy::Fec)));
+    let r = stream::run(&mut cp, &opts(n, 80)).unwrap();
+    assert!(r.frame_errors.is_empty(), "{:?}", r.frame_errors);
+    assert_eq!(r.runs.len(), n);
+    assert_eq!(r.retransmits, 0, "single-symbol upsets never retransmit");
+    assert_eq!(r.faults.retransmits, 0);
+    assert!(r.faults.faulted > 0, "the storm must actually inject");
+    // Both wire legs of every frame were hit and repaired.
+    assert!(
+        r.faults.fec_corrected >= n as u64,
+        "{:?}",
+        r.faults
+    );
+    for run in &r.runs {
+        assert!(run.crc_ok, "repaired frames arrive with a clean CRC");
+        assert!(run.validation.pass, "repair is bit-exact");
+        assert_eq!(run.retransmits, 0);
+    }
+    // The sidecar is not free: 5 extra lines per transfer land in the
+    // wire time relative to a fault-free resend run.
+    let mut clean = coproc("fec_clean", None);
+    let c = stream::run(&mut clean, &opts(n, 80)).unwrap();
+    assert!(c.all_valid());
+    assert!(
+        r.runs[0].t_cif > c.runs[0].t_cif,
+        "FEC overhead must be priced: {:?} vs {:?}",
+        r.runs[0].t_cif,
+        c.runs[0].t_cif
+    );
+}
+
+#[test]
+fn the_same_storm_defeats_resend_and_none_fails_fast() {
+    // Contrast case for the FEC test above: under plain resend a
+    // persistent bit-flip storm (XOR always corrupts, unlike a stuck
+    // pixel that may rewrite its own value) exhausts the budget on
+    // every frame; under `Strategy::None` each frame dies on its first
+    // CRC failure without issuing a single resend.
+    let flip_storm = |strategy: Strategy| {
+        FaultPlan::new(FaultConfig {
+            frame_rate: 1.0,
+            plane_rate: 1.0,
+            w_payload_flip: 1.0,
+            w_crc_corrupt: 0.0,
+            w_truncate: 0.0,
+            w_stuck: 0.0,
+            strategy,
+            ..FaultConfig::new(19, 1.0)
+        })
+    };
+    let n = 3;
+    let mut resend = coproc("storm_r", Some(flip_storm(Strategy::Resend)));
+    let rr = stream::run(&mut resend, &opts(n, 80)).unwrap();
+    assert_eq!(rr.frame_errors.len(), n);
+    assert!(rr.faults.retransmits > 0);
+    assert_eq!(rr.faults.fec_corrected, 0);
+
+    let mut none = coproc("storm_n", Some(flip_storm(Strategy::None)));
+    let rn = stream::run(&mut none, &opts(n, 80)).unwrap();
+    assert_eq!(rn.frame_errors.len(), n);
+    assert_eq!(rn.faults.retransmits, 0, "no-recovery never resends");
+    for fe in &rn.frame_errors {
+        assert!(
+            matches!(
+                fe.error,
+                spacecodesign::Error::Unrecovered { attempts: 1, .. }
+            ),
+            "frame {} must fail on its first attempt: {}",
+            fe.frame,
+            fe.error
+        );
+    }
+}
+
+#[test]
+fn streamed_and_one_shot_memory_upsets_draw_identically() {
+    // ISSUE 9 acceptance: the DRAM-domain draw keys on the frame seed
+    // like the wire domains do, so a streamed sweep and the equivalent
+    // one-shot runs land the *same* bit flips on the same frames.
+    let n = 4u64;
+    let mut streamed = coproc("mem_s", Some(memory_only(33, Strategy::Resend)));
+    let rs = stream::run(&mut streamed, &opts(n as usize, 90)).unwrap();
+    assert!(rs.frame_errors.is_empty(), "memory upsets deliver frames");
+    assert_eq!(rs.runs.len(), n as usize);
+    assert!(rs.faults.memory_upsets > 0, "{:?}", rs.faults);
+    assert_eq!(rs.retransmits, 0, "memory upsets are not wire faults");
+    let mut oneshot = coproc("mem_o", Some(memory_only(33, Strategy::Resend)));
+    for (i, s) in rs.runs.iter().enumerate() {
+        let one = oneshot
+            .run_unmasked(Benchmark::Conv { k: 3 }, 90 + i as u64)
+            .unwrap();
+        assert!(s.crc_ok && one.crc_ok, "wire stays clean both ways");
+        assert_eq!(
+            s.validation.mismatches, one.validation.mismatches,
+            "frame {i} corruption footprint"
+        );
+        assert_eq!(s.validation.pass, one.validation.pass, "frame {i}");
+    }
+    // Every frame upset: 4 DRAM frame hits in the per-domain rows.
+    let dram: Vec<_> = rs
+        .hop_faults
+        .iter()
+        .filter(|h| h.hop.is_memory())
+        .collect();
+    assert!(!dram.is_empty(), "memory domains must appear in the rows");
+    assert_eq!(dram.iter().map(|h| h.stats.faulted).sum::<u64>(), n);
+}
+
+#[test]
+fn scrub_catches_upsets_and_tmr_outvotes_them() {
+    // Period-1 scrubbing checks every frame: SEC-DED corrects 1-bit
+    // upsets outright and the sweep always wins the multi-bit race, so
+    // every frame validates — at a priced DRAM-sweep cost. TMR gets
+    // the same result by majority vote at triple the compute time.
+    let n = 4;
+    let mut clean = coproc("mask_c", None);
+    let c = stream::run(&mut clean, &opts(n, 50)).unwrap();
+    assert!(c.all_valid());
+
+    let mut scrub =
+        coproc("mask_s", Some(memory_only(61, Strategy::Scrub { period: 1 })));
+    let rs = stream::run(&mut scrub, &opts(n, 50)).unwrap();
+    assert!(rs.all_valid(), "period-1 scrub must mask every upset");
+    assert!(rs.faults.scrub_corrected > 0, "{:?}", rs.faults);
+    assert!(
+        rs.runs[0].t_proc > c.runs[0].t_proc,
+        "the scrub sweep is priced into compute time"
+    );
+
+    let mut tmr = coproc("mask_t", Some(memory_only(61, Strategy::TmrVote)));
+    let rt = stream::run(&mut tmr, &opts(n, 50)).unwrap();
+    assert!(rt.all_valid(), "2-of-3 vote must mask independent upsets");
+    assert!(rt.faults.tmr_corrected > 0, "{:?}", rt.faults);
+    assert!(
+        rt.runs[0].t_proc > c.runs[0].t_proc + c.runs[0].t_proc,
+        "TMR charges all three replicas: {:?} vs {:?}",
+        rt.runs[0].t_proc,
+        c.runs[0].t_proc
+    );
+}
