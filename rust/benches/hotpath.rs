@@ -238,6 +238,31 @@ fn main() {
     });
     log.push("cnn forward 128x128x3 [simd]", &v);
 
+    // --- int8 quantized CNN forward pass (ISSUE 10) ----------------------
+    // New rows: the `Precision::Int8` path. The pair's "reference" is
+    // the f32 *Optimized* tier above, so the recorded speedup is the
+    // quantization win itself (acceptance: >= 2x), not a scalar-tier
+    // strawman. The simd int8 tier rides under its own name.
+    let qweights = spacecodesign::cnn::QuantizedWeights::from_weights(&weights).unwrap();
+    let q = bench(1, 5, || {
+        std::hint::black_box(
+            spacecodesign::cnn::quant::cnn_forward_q(
+                KernelBackend::Optimized,
+                &qweights,
+                &chip,
+            )
+            .unwrap(),
+        );
+    });
+    log.push_pair("cnn forward int8 128x128x3", &s, &q);
+    let qv = bench(1, 5, || {
+        std::hint::black_box(
+            spacecodesign::cnn::quant::cnn_forward_q(KernelBackend::Simd, &qweights, &chip)
+                .unwrap(),
+        );
+    });
+    log.push("cnn forward int8 128x128x3 [simd]", &qv);
+
     // --- rasterizer ------------------------------------------------------
     let mesh = render::Mesh::octahedron();
     let pose = render::Pose {
@@ -408,6 +433,38 @@ fn main() {
                     n as f64 / r.median,
                     n as f64 / o.median,
                     n as f64 / v.median
+                );
+            }
+
+            // --- streaming quantized CNN (ISSUE 10) ------------------
+            // New rows: the ship-detection workload end to end at both
+            // precisions — same seed, same frames, the only delta is
+            // the arithmetic (and the matching int8 groundtruth). The
+            // int8 row carries the knob in its name so each row keeps
+            // one meaning once both are gated.
+            {
+                cp.backend = KernelBackend::Optimized;
+                let opts_f32 = StreamOptions::builder(Benchmark::CnnShip)
+                    .frames(8)
+                    .precision(spacecodesign::Precision::F32)
+                    .build();
+                let f = bench(1, 3, || {
+                    std::hint::black_box(stream::run(&mut cp, &opts_f32).unwrap());
+                });
+                log.push("stream cnn N=8", &f);
+                let opts_int8 = StreamOptions::builder(Benchmark::CnnShip)
+                    .frames(8)
+                    .precision(spacecodesign::Precision::Int8)
+                    .build();
+                let q = bench(1, 3, || {
+                    std::hint::black_box(stream::run(&mut cp, &opts_int8).unwrap());
+                });
+                log.push("stream cnn N=8 precision=int8", &q);
+                println!(
+                    "    ({:.1} f32 / {:.1} int8 frames/s wallclock, {:.2}x)",
+                    8.0 / f.median,
+                    8.0 / q.median,
+                    f.median / q.median
                 );
             }
 

@@ -75,6 +75,7 @@ fn main() {
                 &pose, &mesh, 1024, 1024, mesh.faces.len(),
             );
             spacecodesign::vpu::cost::Workload {
+                precision: spacecodesign::Precision::F32,
                 out_elems: 1 << 20,
                 in_elems: 6,
                 band_bbox_px: spacecodesign::render::camera::band_bbox_px(

@@ -12,15 +12,19 @@
 //! fan-out) and [`simd`] the `KernelBackend::Simd` twin (eight
 //! output-channel lanes over the unpacked HWIO layout, bit-identical
 //! to the reference); [`forward`]/[`classify`] dispatch between the
-//! tiers.
+//! tiers. [`quant`] is the `Precision::Int8` path: per-layer symmetric
+//! quantization with its own three backend tiers, bit-reproducible
+//! across all of them by integer construction.
 
 pub mod fast;
 pub mod layers;
+pub mod quant;
 pub mod ships;
 pub mod simd;
 pub mod weights;
 
 pub use layers::cnn_forward;
+pub use quant::QuantizedWeights;
 pub use weights::Weights;
 
 use crate::error::Result;

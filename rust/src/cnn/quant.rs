@@ -1,0 +1,741 @@
+//! Int8 quantized CNN inference (`Precision::Int8`) — per-layer
+//! symmetric post-training quantization of the 6-layer ship CNN.
+//!
+//! Quantization scheme (the Myriad2's real SHAVE advantage is
+//! low-precision arithmetic — arXiv 2506.12970):
+//!
+//! * **weights**: per-layer symmetric i8, `q = round(w / s_w)` with
+//!   `s_w = max|w| / 127` (an all-zero tensor is rejected — a zero
+//!   scale cannot be inverted).
+//! * **activations**: u8 with zero-point 0 (every activation is
+//!   post-ReLU, so the domain is one-sided); the input chip is [0, 1]
+//!   RGB quantized at `s = 1/255`. Per-layer output scales are
+//!   calibrated with one scalar-reference forward pass over a small
+//!   deterministic ship-chip set ([`CALIB_SEED`]), recording each
+//!   layer's max activation. Max pool commutes with the (monotonic)
+//!   quantizer, so conv output and pool output share one scale.
+//! * **accumulators**: i32, initialized from the i32-quantized bias
+//!   (scaled at `s_in * s_w`), then a single rounding/saturating
+//!   [`requantize`] back to u8 per layer. The worst-case accumulator
+//!   (`2048` taps of `255·127`) stays far below `i32::MAX`, so integer
+//!   addition is exact and **associative** — every backend tier and
+//!   every worker split produces bit-identical results by construction
+//!   (stronger than the f32 tiers' order-replay contract).
+//!
+//! Three kernel tiers mirror the f32 path: a scalar reference, an
+//! Optimized tier (tap-major repacked weights + row fan-out via
+//! [`crate::util::par`]), and a Simd tier (eight output-channel
+//! [`I32x8`] lanes with widening u8×i8 multiply-accumulate, [`U8x8`]
+//! lane max pool). The final dense layer dequantizes its i32
+//! accumulators to f32 logits so the public signature matches the f32
+//! path's `[f32; 2]`.
+
+use crate::cnn::layers::{conv3x3_relu, dense, maxpool2x2, FeatureMap};
+use crate::cnn::weights::Weights;
+use crate::error::{Error, Result};
+use crate::util::lanes::{I32x8, U8x8, LANES};
+use crate::util::par;
+use crate::util::par::GRAIN_OPS;
+use crate::KernelBackend;
+
+/// Seed of the deterministic ship-chip calibration set — fixed so the
+/// quantization parameters are a pure function of the f32 weights.
+pub const CALIB_SEED: u64 = 0xCA11B;
+
+/// Calibration set size (full 128 px chips; two suffice — the scales
+/// only need the activation *magnitude*, not the distribution tails).
+pub const CALIB_CHIPS: usize = 2;
+
+/// u8 activation map with zero-point 0: `value ≈ q * scale`.
+#[derive(Clone, Debug)]
+pub struct QuantMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<u8>,
+}
+
+/// One quantized conv layer (both weight layouts are materialized once
+/// at build time: HWIO for the reference/Simd tiers, tap-major for the
+/// Optimized tier's contiguous-`ic` scalar loop).
+#[derive(Clone, Debug)]
+pub struct QuantConv {
+    pub cin: usize,
+    pub cout: usize,
+    /// HWIO i8 taps, same layout as the f32 tensor.
+    pub w: Vec<i8>,
+    /// Tap-major `(tap, Cout, Cin)` repack (see `cnn::fast`).
+    pub packed: Vec<i8>,
+    /// Bias quantized at `s_in * s_w`.
+    pub bias: Vec<i32>,
+    /// Requantize multiplier `s_in * s_w / s_out`.
+    pub m: f64,
+    /// Weight scale (`f32 weight ≈ q * s_w`).
+    pub s_w: f64,
+    /// Output activation scale (`f32 activation ≈ q * s_out`).
+    pub s_out: f64,
+}
+
+/// One quantized dense layer, row-major `(Din, Dout)` weights.
+#[derive(Clone, Debug)]
+pub struct QuantDense {
+    pub din: usize,
+    pub dout: usize,
+    pub w: Vec<i8>,
+    pub bias: Vec<i32>,
+    /// fc0: requantize multiplier to the hidden scale. fc1: dequantize
+    /// multiplier straight to f32 logits (`s_in * s_w`).
+    pub m: f64,
+    pub s_w: f64,
+}
+
+/// The fully-quantized 6-layer parameter set, built once per weight set
+/// by [`QuantizedWeights::from_weights`] and cached by the callers that
+/// stream patches (`runtime::native`, `coordinator::host`).
+#[derive(Clone, Debug)]
+pub struct QuantizedWeights {
+    /// Input activation scale (1/255 over the [0, 1] RGB domain).
+    pub s_in: f64,
+    pub conv: Vec<QuantConv>,
+    pub fc0: QuantDense,
+    pub fc1: QuantDense,
+}
+
+/// Round-and-saturate an i32 accumulator back to a u8 activation:
+/// `clamp(round(acc * m), 0, 255)`. ReLU is folded in (a negative
+/// accumulator clamps to 0 — the zero-point), and both i32 extremes
+/// saturate cleanly. `round` is half-away-from-zero in f64 — exactly
+/// reproducible on every platform.
+#[inline(always)]
+pub fn requantize(acc: i32, m: f64) -> u8 {
+    let v = (acc as f64 * m).round();
+    if v <= 0.0 {
+        0
+    } else if v >= 255.0 {
+        255
+    } else {
+        v as u8
+    }
+}
+
+/// Quantize a [0, 1] f32 chip to u8 at scale 1/255 (values outside the
+/// domain saturate).
+pub fn quantize_chip(chip: &FeatureMap) -> QuantMap {
+    QuantMap {
+        h: chip.h,
+        w: chip.w,
+        c: chip.c,
+        data: chip
+            .data
+            .iter()
+            .map(|&v| (v * 255.0).round().clamp(0.0, 255.0) as u8)
+            .collect(),
+    }
+}
+
+/// Dequantize a u8 map back to f32 at `scale` (accuracy tests only —
+/// the inference path never leaves the integer domain between layers).
+pub fn dequantize(q: &QuantMap, scale: f64) -> FeatureMap {
+    FeatureMap {
+        h: q.h,
+        w: q.w,
+        c: q.c,
+        data: q.data.iter().map(|&v| (v as f64 * scale) as f32).collect(),
+    }
+}
+
+/// Symmetric i8 quantization of one tensor; errors on an all-zero (or
+/// non-finite) tensor — a zero scale cannot be inverted at requantize.
+fn quantize_tensor(name: &str, data: &[f32]) -> Result<(Vec<i8>, f64)> {
+    let maxabs = data.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if !(maxabs > 0.0) || !maxabs.is_finite() {
+        return Err(Error::ArtifactParse {
+            path: "<weights>".into(),
+            msg: format!("{name}: cannot quantize (max|w| = {maxabs}, zero scale)"),
+        });
+    }
+    let s = maxabs as f64 / 127.0;
+    let q = data
+        .iter()
+        .map(|&v| (v as f64 / s).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    Ok((q, s))
+}
+
+fn quantize_bias(b: f32, scale: f64) -> i32 {
+    (b as f64 / scale)
+        .round()
+        .clamp(i32::MIN as f64, i32::MAX as f64) as i32
+}
+
+/// Tap-major i8 repack, the integer twin of `cnn::fast::repack_hwio`:
+/// `packed[(tap * cout + oc) * cin + ic] = w[(tap * cin + ic) * cout + oc]`.
+fn repack_hwio_i8(w: &[i8], cin: usize, cout: usize) -> Vec<i8> {
+    debug_assert_eq!(w.len(), 9 * cin * cout);
+    let mut packed = vec![0i8; 9 * cout * cin];
+    for tap in 0..9 {
+        for ic in 0..cin {
+            for oc in 0..cout {
+                packed[(tap * cout + oc) * cin + ic] = w[(tap * cin + ic) * cout + oc];
+            }
+        }
+    }
+    packed
+}
+
+impl QuantizedWeights {
+    /// Quantize the f32 parameter set: symmetric per-layer weight
+    /// scales first (cheap, fails fast on a zero scale), then one
+    /// scalar-reference calibration pass over the [`CALIB_SEED`] ship
+    /// chips for the activation scales. Backend- and worker-independent
+    /// by construction (the calibration always runs the single-threaded
+    /// scalar tier).
+    pub fn from_weights(weights: &Weights) -> Result<QuantizedWeights> {
+        // Weight quantization (fails fast on degenerate tensors).
+        let mut conv_q = Vec::with_capacity(4);
+        for i in 0..4 {
+            let wt = weights.get(&format!("conv{i}_w"))?;
+            let (q, s_w) = quantize_tensor(&format!("conv{i}_w"), &wt.data)?;
+            conv_q.push((q, s_w));
+        }
+        let fc0w = weights.get("fc0_w")?;
+        let fc1w = weights.get("fc1_w")?;
+        let (qf0, s_wf0) = quantize_tensor("fc0_w", &fc0w.data)?;
+        let (qf1, s_wf1) = quantize_tensor("fc1_w", &fc1w.data)?;
+
+        // Activation-scale calibration: max |activation| per stage over
+        // the deterministic ship set, scalar reference tier.
+        let mut maxes = [0f32; 5]; // conv0..conv3 outputs, fc0 hidden
+        let fc0b = weights.get("fc0_b")?;
+        let hid = *fc0w.dims.last().unwrap();
+        for chip in crate::cnn::ships::ship_chips(CALIB_CHIPS, 128, CALIB_SEED) {
+            let mut fm = chip.fm;
+            for (i, mx) in maxes.iter_mut().take(4).enumerate() {
+                let w = weights.get(&format!("conv{i}_w"))?;
+                let b = weights.get(&format!("conv{i}_b"))?;
+                let cout = *w.dims.last().unwrap();
+                fm = conv3x3_relu(&fm, &w.data, &b.data, cout);
+                *mx = fm.data.iter().fold(*mx, |m, &v| m.max(v));
+                fm = maxpool2x2(&fm);
+            }
+            let hidden = dense(&fm.data, &fc0w.data, &fc0b.data, hid, true);
+            maxes[4] = hidden.iter().fold(maxes[4], |m, &v| m.max(v));
+        }
+        let s_in0 = 1.0 / 255.0f64;
+        // A stage that never activates still needs an invertible scale.
+        let act_scale = |mx: f32| if mx > 0.0 { mx as f64 / 255.0 } else { s_in0 };
+
+        let mut conv = Vec::with_capacity(4);
+        let mut s_in = s_in0;
+        for (i, (q, s_w)) in conv_q.into_iter().enumerate() {
+            let wt = weights.get(&format!("conv{i}_w"))?;
+            let bt = weights.get(&format!("conv{i}_b"))?;
+            let cin = wt.dims[2];
+            let cout = *wt.dims.last().unwrap();
+            let s_out = act_scale(maxes[i]);
+            let bs = s_in * s_w;
+            let packed = repack_hwio_i8(&q, cin, cout);
+            conv.push(QuantConv {
+                cin,
+                cout,
+                w: q,
+                packed,
+                bias: bt.data.iter().map(|&b| quantize_bias(b, bs)).collect(),
+                m: bs / s_out,
+                s_w,
+                s_out,
+            });
+            s_in = s_out;
+        }
+        let s_h = act_scale(maxes[4]);
+        let fc1b = weights.get("fc1_b")?;
+        let fc0 = QuantDense {
+            din: fc0w.dims[0],
+            dout: hid,
+            w: qf0,
+            bias: fc0b
+                .data
+                .iter()
+                .map(|&b| quantize_bias(b, s_in * s_wf0))
+                .collect(),
+            m: s_in * s_wf0 / s_h,
+            s_w: s_wf0,
+        };
+        let fc1 = QuantDense {
+            din: fc1w.dims[0],
+            dout: *fc1w.dims.last().unwrap(),
+            w: qf1,
+            bias: fc1b
+                .data
+                .iter()
+                .map(|&b| quantize_bias(b, s_h * s_wf1))
+                .collect(),
+            m: s_h * s_wf1, // dequantize multiplier: logits stay f32
+            s_w: s_wf1,
+        };
+        Ok(QuantizedWeights {
+            s_in: s_in0,
+            conv,
+            fc0,
+            fc1,
+        })
+    }
+}
+
+/// Scalar reference int8 conv: same clamped-window structure as the f32
+/// reference, i32 accumulate, one requantize per output.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_requant_ref(
+    xd: &[u8],
+    h: usize,
+    w: usize,
+    cin: usize,
+    wts: &[i8],
+    bias: &[i32],
+    cout: usize,
+    m: f64,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(xd.len(), h * w * cin);
+    debug_assert_eq!(wts.len(), 9 * cin * cout);
+    debug_assert_eq!(out.len(), h * w * cout);
+    for y in 0..h {
+        for xx in 0..w {
+            for oc in 0..cout {
+                let mut acc = bias[oc];
+                for u in 0..3usize {
+                    let yy = y as isize + u as isize - 1;
+                    if yy < 0 || yy >= h as isize {
+                        continue;
+                    }
+                    for v in 0..3usize {
+                        let xv = xx as isize + v as isize - 1;
+                        if xv < 0 || xv >= w as isize {
+                            continue;
+                        }
+                        let base = ((u * 3 + v) * cin) * cout + oc;
+                        let px = (yy as usize * w + xv as usize) * cin;
+                        for ic in 0..cin {
+                            acc += xd[px + ic] as i32 * wts[base + ic * cout] as i32;
+                        }
+                    }
+                }
+                out[(y * w + xx) * cout + oc] = requantize(acc, m);
+            }
+        }
+    }
+}
+
+/// Optimized int8 conv: tap-major packed weights, contiguous `ic`
+/// accumulation (u8×i8 widening products LLVM lowers to 16/32-wide
+/// integer dot products), conv rows fanned across the worker pool.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_requant_packed(
+    xd: &[u8],
+    h: usize,
+    w: usize,
+    cin: usize,
+    packed: &[i8],
+    bias: &[i32],
+    cout: usize,
+    m: f64,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(xd.len(), h * w * cin);
+    debug_assert_eq!(out.len(), h * w * cout);
+    if h == 0 || w == 0 || cout == 0 {
+        return;
+    }
+    let row_len = w * cout;
+    let min_rows = (GRAIN_OPS / (w * 9 * cin * cout).max(1)).max(1);
+    par::par_row_bands(out, h, row_len, min_rows, |y0, band| {
+        for (r, orow) in band.chunks_exact_mut(row_len).enumerate() {
+            let y = y0 + r;
+            let u_lo = usize::from(y == 0);
+            let u_hi = if y + 1 == h { 2 } else { 3 };
+            for xx in 0..w {
+                let v_lo = usize::from(xx == 0);
+                let v_hi = if xx + 1 == w { 2 } else { 3 };
+                let opix = &mut orow[xx * cout..(xx + 1) * cout];
+                for (oc, o) in opix.iter_mut().enumerate() {
+                    let mut acc = bias[oc];
+                    for u in u_lo..u_hi {
+                        let yy = y + u - 1;
+                        for v in v_lo..v_hi {
+                            let xv = xx + v - 1;
+                            let xrow = &xd[(yy * w + xv) * cin..][..cin];
+                            let wrow = &packed[((u * 3 + v) * cout + oc) * cin..][..cin];
+                            for ic in 0..cin {
+                                acc += xrow[ic] as i32 * wrow[ic] as i32;
+                            }
+                        }
+                    }
+                    *o = requantize(acc, m);
+                }
+            }
+        }
+    });
+}
+
+/// Simd int8 conv: eight output-channel [`I32x8`] lanes over the
+/// unpacked HWIO layout (the `oc` axis is innermost and contiguous),
+/// widening u8×i8 multiply-accumulate per `(tap, ic)` term, scalar tail
+/// for non-lane-multiple widths. Exact-integer arithmetic makes the
+/// result bit-identical to the other tiers in any order.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_requant_lanes(
+    xd: &[u8],
+    h: usize,
+    w: usize,
+    cin: usize,
+    wts: &[i8],
+    bias: &[i32],
+    cout: usize,
+    m: f64,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(xd.len(), h * w * cin);
+    debug_assert_eq!(wts.len(), 9 * cin * cout);
+    debug_assert_eq!(out.len(), h * w * cout);
+    if h == 0 || w == 0 || cout == 0 {
+        return;
+    }
+    let row_len = w * cout;
+    let min_rows = (GRAIN_OPS / (w * 9 * cin * cout).max(1)).max(1);
+    let blocks = cout / LANES;
+    par::par_row_bands(out, h, row_len, min_rows, |y0, band| {
+        for (r, orow) in band.chunks_exact_mut(row_len).enumerate() {
+            let y = y0 + r;
+            let u_lo = usize::from(y == 0);
+            let u_hi = if y + 1 == h { 2 } else { 3 };
+            for xx in 0..w {
+                let v_lo = usize::from(xx == 0);
+                let v_hi = if xx + 1 == w { 2 } else { 3 };
+                let opix = &mut orow[xx * cout..(xx + 1) * cout];
+                for blk in 0..blocks {
+                    let oc0 = blk * LANES;
+                    let mut acc = I32x8::load(&bias[oc0..]);
+                    for u in u_lo..u_hi {
+                        let yy = y + u - 1;
+                        for v in v_lo..v_hi {
+                            let xv = xx + v - 1;
+                            let px = (yy * w + xv) * cin;
+                            let base = ((u * 3 + v) * cin) * cout + oc0;
+                            for ic in 0..cin {
+                                acc.acc_widening(xd[px + ic], &wts[base + ic * cout..]);
+                            }
+                        }
+                    }
+                    for (i, &a) in acc.0.iter().enumerate() {
+                        opix[oc0 + i] = requantize(a, m);
+                    }
+                }
+                for oc in blocks * LANES..cout {
+                    let mut acc = bias[oc];
+                    for u in u_lo..u_hi {
+                        let yy = y + u - 1;
+                        for v in v_lo..v_hi {
+                            let xv = xx + v - 1;
+                            let px = (yy * w + xv) * cin;
+                            let base = ((u * 3 + v) * cin) * cout + oc;
+                            for ic in 0..cin {
+                                acc += xd[px + ic] as i32 * wts[base + ic * cout] as i32;
+                            }
+                        }
+                    }
+                    opix[oc] = requantize(acc, m);
+                }
+            }
+        }
+    });
+}
+
+/// Row-pointer 2x2 stride-2 u8 max pool (exact: u8 `max` is a total
+/// order, so every tier and reduction order agrees bit-for-bit).
+fn maxpool2x2_u8(xd: &[u8], h: usize, w: usize, c: usize, out: &mut [u8]) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), oh * ow * c);
+    if oh == 0 || ow == 0 || c == 0 {
+        return;
+    }
+    let row_len = w * c;
+    for (oy, orow) in out.chunks_exact_mut(ow * c).enumerate() {
+        let r0 = &xd[(2 * oy) * row_len..][..row_len];
+        let r1 = &xd[(2 * oy + 1) * row_len..][..row_len];
+        for ox in 0..ow {
+            let base = 2 * ox * c;
+            let opix = &mut orow[ox * c..(ox + 1) * c];
+            let (a0, a1) = (&r0[base..base + c], &r0[base + c..base + 2 * c]);
+            let (b0, b1) = (&r1[base..base + c], &r1[base + c..base + 2 * c]);
+            for ch in 0..c {
+                opix[ch] = a0[ch].max(a1[ch]).max(b0[ch]).max(b1[ch]);
+            }
+        }
+    }
+}
+
+/// [`U8x8`] lane twin of [`maxpool2x2_u8`] (channel lanes of eight,
+/// scalar tail) — the Simd tier's pool.
+fn maxpool2x2_u8_lanes(xd: &[u8], h: usize, w: usize, c: usize, out: &mut [u8]) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), oh * ow * c);
+    if oh == 0 || ow == 0 || c == 0 {
+        return;
+    }
+    let row_len = w * c;
+    let blocks = c / LANES;
+    for (oy, orow) in out.chunks_exact_mut(ow * c).enumerate() {
+        let r0 = &xd[(2 * oy) * row_len..][..row_len];
+        let r1 = &xd[(2 * oy + 1) * row_len..][..row_len];
+        for ox in 0..ow {
+            let base = 2 * ox * c;
+            let opix = &mut orow[ox * c..(ox + 1) * c];
+            let (a0, a1) = (&r0[base..base + c], &r0[base + c..base + 2 * c]);
+            let (b0, b1) = (&r1[base..base + c], &r1[base + c..base + 2 * c]);
+            for blk in 0..blocks {
+                let ch0 = blk * LANES;
+                let m = U8x8::load(&a0[ch0..])
+                    .max(U8x8::load(&a1[ch0..]))
+                    .max(U8x8::load(&b0[ch0..]))
+                    .max(U8x8::load(&b1[ch0..]));
+                m.store(&mut opix[ch0..]);
+            }
+            for ch in blocks * LANES..c {
+                opix[ch] = a0[ch].max(a1[ch]).max(b0[ch]).max(b1[ch]);
+            }
+        }
+    }
+}
+
+/// Backend-dispatched single int8 conv layer (tests and layer-level
+/// accuracy pins; the forward pass uses the raw-slice kernels with
+/// ping-pong buffers).
+pub fn conv3x3_requant(backend: KernelBackend, x: &QuantMap, qc: &QuantConv) -> QuantMap {
+    let mut out = QuantMap {
+        h: x.h,
+        w: x.w,
+        c: qc.cout,
+        data: vec![0u8; x.h * x.w * qc.cout],
+    };
+    run_conv(backend, &x.data, x.h, x.w, qc, &mut out.data);
+    out
+}
+
+/// Backend-dispatched 2x2 u8 max pool.
+pub fn maxpool2x2_q(backend: KernelBackend, x: &QuantMap) -> QuantMap {
+    let mut out = QuantMap {
+        h: x.h / 2,
+        w: x.w / 2,
+        c: x.c,
+        data: vec![0u8; (x.h / 2) * (x.w / 2) * x.c],
+    };
+    match backend {
+        KernelBackend::Simd => maxpool2x2_u8_lanes(&x.data, x.h, x.w, x.c, &mut out.data),
+        _ => maxpool2x2_u8(&x.data, x.h, x.w, x.c, &mut out.data),
+    }
+    out
+}
+
+fn run_conv(backend: KernelBackend, xd: &[u8], h: usize, w: usize, qc: &QuantConv, out: &mut [u8]) {
+    match backend {
+        KernelBackend::Reference => {
+            conv3x3_requant_ref(xd, h, w, qc.cin, &qc.w, &qc.bias, qc.cout, qc.m, out)
+        }
+        KernelBackend::Optimized => {
+            conv3x3_requant_packed(xd, h, w, qc.cin, &qc.packed, &qc.bias, qc.cout, qc.m, out)
+        }
+        KernelBackend::Simd => {
+            if qc.cout < LANES {
+                // All-tail conv: the packed scalar tier is tuned for it.
+                conv3x3_requant_packed(xd, h, w, qc.cin, &qc.packed, &qc.bias, qc.cout, qc.m, out)
+            } else {
+                conv3x3_requant_lanes(xd, h, w, qc.cin, &qc.w, &qc.bias, qc.cout, qc.m, out)
+            }
+        }
+    }
+}
+
+/// Int8 dense with requantized u8 output (fc0): i32 accumulate from the
+/// quantized bias, zero-activation skip (post-ReLU u8 maps are sparse).
+fn dense_requant(x: &[u8], d: &QuantDense) -> Vec<u8> {
+    debug_assert_eq!(x.len(), d.din);
+    debug_assert_eq!(d.w.len(), d.din * d.dout);
+    let mut acc = d.bias.clone();
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let xi = xv as i32;
+        let row = &d.w[i * d.dout..(i + 1) * d.dout];
+        for (o, &wv) in row.iter().enumerate() {
+            acc[o] += xi * wv as i32;
+        }
+    }
+    acc.iter().map(|&a| requantize(a, d.m)).collect()
+}
+
+/// Int8 dense head (fc1): i32 accumulate, dequantized straight to f32
+/// logits (no requantize — classification reads the logits directly).
+fn dense_logits(x: &[u8], d: &QuantDense) -> Vec<f32> {
+    debug_assert_eq!(x.len(), d.din);
+    debug_assert_eq!(d.w.len(), d.din * d.dout);
+    let mut acc = d.bias.clone();
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let xi = xv as i32;
+        let row = &d.w[i * d.dout..(i + 1) * d.dout];
+        for (o, &wv) in row.iter().enumerate() {
+            acc[o] += xi * wv as i32;
+        }
+    }
+    acc.iter().map(|&a| (a as f64 * d.m) as f32).collect()
+}
+
+/// Full int8 forward pass on one 128x128x3 chip → 2 f32 logits.
+/// Bit-identical across `ref|opt|simd` and any worker count (pure
+/// integer arithmetic between the input quantizer and the final
+/// dequantize).
+pub fn cnn_forward_q(
+    backend: KernelBackend,
+    qw: &QuantizedWeights,
+    chip: &FeatureMap,
+) -> Result<[f32; 2]> {
+    if chip.h != 128 || chip.w != 128 || chip.c != 3 {
+        return Err(Error::Geometry(format!(
+            "ship CNN expects 128x128x3 chips, got {}x{}x{}",
+            chip.h, chip.w, chip.c
+        )));
+    }
+    let input = quantize_chip(chip);
+    let (mut h, mut w) = (chip.h, chip.w);
+    let mut conv_buf: Vec<u8> = Vec::new();
+    let mut pool_buf: Vec<u8> = Vec::new();
+    for (i, qc) in qw.conv.iter().enumerate() {
+        conv_buf.resize(h * w * qc.cout, 0);
+        {
+            let src: &[u8] = if i == 0 { &input.data } else { &pool_buf };
+            run_conv(backend, src, h, w, qc, &mut conv_buf);
+        }
+        pool_buf.resize((h / 2) * (w / 2) * qc.cout, 0);
+        match backend {
+            KernelBackend::Simd => maxpool2x2_u8_lanes(&conv_buf, h, w, qc.cout, &mut pool_buf),
+            _ => maxpool2x2_u8(&conv_buf, h, w, qc.cout, &mut pool_buf),
+        }
+        h /= 2;
+        w /= 2;
+    }
+    let hidden = dense_requant(&pool_buf, &qw.fc0);
+    let logits = dense_logits(&hidden, &qw.fc1);
+    Ok([logits[0], logits[1]])
+}
+
+/// Int8 argmax classification — same tie-break rule as the f32 path
+/// (`logit[1] > logit[0]`).
+pub fn classify_q(
+    backend: KernelBackend,
+    qw: &QuantizedWeights,
+    chip: &FeatureMap,
+) -> Result<usize> {
+    let l = cnn_forward_q(backend, qw, chip)?;
+    Ok(usize::from(l[1] > l[0]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn requantize_rounds_and_saturates() {
+        assert_eq!(requantize(100, 0.5), 50);
+        assert_eq!(requantize(5, 0.5), 3); // 2.5 rounds away from zero
+        assert_eq!(requantize(-100, 0.5), 0); // folded ReLU
+        assert_eq!(requantize(0, 1.0), 0);
+        assert_eq!(requantize(255, 1.0), 255);
+        assert_eq!(requantize(256, 1.0), 255); // high saturation
+        assert_eq!(requantize(i32::MAX, 1.0), 255);
+        assert_eq!(requantize(i32::MIN, 1.0), 0);
+        assert_eq!(requantize(i32::MAX, 1e-12), 0); // rounds to zero
+        assert_eq!(requantize(i32::MIN, -1.0), 255); // sign-flip saturates high
+    }
+
+    #[test]
+    fn quantize_chip_maps_unit_range_exactly() {
+        let chip = FeatureMap::from_data(1, 2, 2, vec![0.0, 1.0, 0.5, -0.25]).unwrap();
+        let q = quantize_chip(&chip);
+        assert_eq!(q.data, vec![0, 255, 128, 0]); // 127.5 rounds away from zero
+        let d = dequantize(&q, 1.0 / 255.0);
+        assert!((d.data[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_scale_weights_rejected() {
+        let mut w = Weights::synthetic_ship(1);
+        for v in w.tensors.get_mut("conv2_w").unwrap().data.iter_mut() {
+            *v = 0.0;
+        }
+        let err = QuantizedWeights::from_weights(&w).unwrap_err();
+        assert!(err.to_string().contains("zero scale"), "{err}");
+    }
+
+    fn random_qconv(rng: &mut Rng, cin: usize, cout: usize) -> QuantConv {
+        let w: Vec<i8> = (0..9 * cin * cout)
+            .map(|_| ((rng.next_f32() - 0.5) * 254.0) as i8)
+            .collect();
+        let packed = repack_hwio_i8(&w, cin, cout);
+        QuantConv {
+            cin,
+            cout,
+            packed,
+            w,
+            bias: (0..cout).map(|_| ((rng.next_f32() - 0.5) * 1000.0) as i32).collect(),
+            m: 0.003,
+            s_w: 1.0,
+            s_out: 1.0,
+        }
+    }
+
+    fn random_qmap(rng: &mut Rng, h: usize, w: usize, c: usize) -> QuantMap {
+        QuantMap {
+            h,
+            w,
+            c,
+            data: (0..h * w * c).map(|_| (rng.next_f32() * 255.0) as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn conv_tiers_bit_identical() {
+        let mut rng = Rng::new(77);
+        // Lane-multiple, tail, and sub-lane (Simd falls back) widths.
+        for (h, w, cin, cout) in [(6usize, 7usize, 3usize, 8usize), (5, 4, 4, 11), (4, 5, 2, 3)] {
+            let qc = random_qconv(&mut rng, cin, cout);
+            let x = random_qmap(&mut rng, h, w, cin);
+            let r = conv3x3_requant(KernelBackend::Reference, &x, &qc);
+            let o = conv3x3_requant(KernelBackend::Optimized, &x, &qc);
+            let s = conv3x3_requant(KernelBackend::Simd, &x, &qc);
+            assert_eq!(r.data, o.data, "{h}x{w} {cin}->{cout} opt");
+            assert_eq!(r.data, s.data, "{h}x{w} {cin}->{cout} simd");
+        }
+    }
+
+    #[test]
+    fn maxpool_tiers_bit_identical() {
+        let mut rng = Rng::new(78);
+        for (h, w, c) in [(8usize, 8usize, 8usize), (6, 4, 13), (2, 2, 3)] {
+            let x = random_qmap(&mut rng, h, w, c);
+            let a = maxpool2x2_q(KernelBackend::Reference, &x);
+            let b = maxpool2x2_q(KernelBackend::Simd, &x);
+            assert_eq!(a.data, b.data, "{h}x{w}x{c}");
+        }
+    }
+
+    #[test]
+    fn forward_rejects_wrong_chip_size() {
+        let qw = QuantizedWeights::from_weights(&Weights::synthetic_ship(1)).unwrap();
+        let chip = FeatureMap::new(64, 64, 3);
+        assert!(cnn_forward_q(KernelBackend::Reference, &qw, &chip).is_err());
+    }
+}

@@ -399,6 +399,7 @@ impl<T> Setting<T> {
 #[derive(Clone, Debug, Default)]
 pub struct CliOverrides {
     pub backend: Option<crate::KernelBackend>,
+    pub precision: Option<crate::Precision>,
     pub workers: Option<usize>,
     pub vpus: Option<usize>,
     pub fault_seed: Option<u64>,
@@ -418,6 +419,11 @@ pub struct CliOverrides {
 pub struct ResolvedConfig {
     /// Kernel tier (`SPACECODESIGN_BACKEND`; default `Optimized`).
     pub backend: Setting<crate::KernelBackend>,
+    /// CNN inference precision (`--precision` /
+    /// `SPACECODESIGN_PRECISION`; default `F32`, the pinned PR 9
+    /// behavior). Orthogonal to `backend`: every tier has both an f32
+    /// and an int8 CNN implementation.
+    pub precision: Setting<crate::Precision>,
     /// Worker-pool cap (`SPACECODESIGN_WORKERS`; default `None` =
     /// auto-size from the core count).
     pub workers: Setting<Option<usize>>,
@@ -467,6 +473,15 @@ impl ResolvedConfig {
             {
                 Some(b) => Setting::env(b),
                 None => Setting::fallback(crate::KernelBackend::default()),
+            },
+        };
+        let precision = match cli.precision {
+            Some(p) => Setting::cli(p),
+            None => match env("SPACECODESIGN_PRECISION")
+                .and_then(|v| crate::Precision::parse(&v))
+            {
+                Some(p) => Setting::env(p),
+                None => Setting::fallback(crate::Precision::default()),
             },
         };
         let workers = match cli.workers {
@@ -524,6 +539,7 @@ impl ResolvedConfig {
         };
         ResolvedConfig {
             backend,
+            precision,
             workers,
             vpus,
             fault_seed,
@@ -573,9 +589,11 @@ impl ResolvedConfig {
             None => "off".to_string(),
         };
         format!(
-            "config: backend {} [{}] | workers {} [{}] | vpus {} [{}] | fleet {} [{}] | faults {} [{}]",
+            "config: backend {} [{}] | precision {} [{}] | workers {} [{}] | vpus {} [{}] | fleet {} [{}] | faults {} [{}]",
             self.backend.value.name(),
             self.backend.source.name(),
+            self.precision.value.name(),
+            self.precision.source.name(),
             workers,
             self.workers.source.name(),
             self.vpus.value,
@@ -708,7 +726,10 @@ mod tests {
             _ => None,
         };
         let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), env);
-        assert_eq!(rc.fault_strategy.value, Strategy::Scrub { period: 4 });
+        assert_eq!(
+            rc.fault_strategy.value,
+            Strategy::Scrub { period: 4, weights_period: 4 }
+        );
         assert_eq!(rc.fault_strategy.source, SettingSource::Env);
         // CLI beats env.
         let cli = CliOverrides {
@@ -728,10 +749,42 @@ mod tests {
     }
 
     #[test]
+    fn resolved_config_precision_precedence_and_summary() {
+        use crate::Precision;
+        // Default: f32, the pinned PR 9 behavior.
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), |_| None);
+        assert_eq!(rc.precision.value, Precision::F32);
+        assert_eq!(rc.precision.source, SettingSource::Default);
+        // Env knob (tolerant spelling).
+        let env = |k: &str| {
+            (k == "SPACECODESIGN_PRECISION").then(|| "INT8".to_string())
+        };
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), env);
+        assert_eq!(rc.precision.value, Precision::Int8);
+        assert_eq!(rc.precision.source, SettingSource::Env);
+        assert!(rc.summary().contains("precision int8 [env]"), "{}", rc.summary());
+        // CLI beats env.
+        let cli = CliOverrides {
+            precision: Some(Precision::F32),
+            ..Default::default()
+        };
+        let rc = ResolvedConfig::resolve_with(&cli, env);
+        assert_eq!(rc.precision.value, Precision::F32);
+        assert_eq!(rc.precision.source, SettingSource::Cli);
+        // An unparseable env value falls back to the default.
+        let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), |k| {
+            (k == "SPACECODESIGN_PRECISION").then(|| "fp4".to_string())
+        });
+        assert_eq!(rc.precision.value, Precision::F32);
+        assert_eq!(rc.precision.source, SettingSource::Default);
+    }
+
+    #[test]
     fn resolved_config_summary_names_every_source() {
         let rc = ResolvedConfig::resolve_with(&CliOverrides::default(), |_| None);
         let s = rc.summary();
         assert!(s.contains("backend optimized [default]"), "{s}");
+        assert!(s.contains("precision f32 [default]"), "{s}");
         assert!(s.contains("workers auto [default]"), "{s}");
         assert!(s.contains("vpus 1 [default]"), "{s}");
         assert!(s.contains("fleet off [default]"), "{s}");

@@ -12,7 +12,7 @@ use crate::render::{self, Mesh, Pose};
 use crate::util::arena::FrameArena;
 use crate::util::image::{Frame, PixelFormat};
 use crate::util::rng::Rng;
-use crate::KernelBackend;
+use crate::{KernelBackend, Precision};
 
 /// Far-plane used to quantize render depths to 16 bpp.
 pub const RENDER_DEPTH_MAX: f32 = 8.0;
@@ -76,7 +76,7 @@ pub fn make_work(
 }
 
 /// Build the work item for one benchmark execution with a throwaway
-/// buffer arena (see [`make_work_in`]).
+/// buffer arena (see [`make_work_in`]), at the default f32 precision.
 pub fn make_work_with(
     backend: KernelBackend,
     bench: Benchmark,
@@ -84,7 +84,16 @@ pub fn make_work_with(
     mesh: Option<&Mesh>,
     weights: Option<&crate::cnn::Weights>,
 ) -> Result<WorkItem> {
-    make_work_in(backend, bench, seed, mesh, weights, &FrameArena::new())
+    make_work_in(
+        backend,
+        Precision::F32,
+        bench,
+        seed,
+        mesh,
+        weights,
+        None,
+        &FrameArena::new(),
+    )
 }
 
 /// Build the work item for one benchmark execution.
@@ -93,6 +102,12 @@ pub fn make_work_with(
 /// computation: `Optimized` by default (the tiers are pinned to each
 /// other by the equivalence property tests), `Reference` to force the
 /// scalar groundtruth for strict pinning runs.
+///
+/// `precision` selects the CNN groundtruth arithmetic: under
+/// [`Precision::Int8`] the expected labels come from the quantized
+/// classifier (`qweights` is then required for [`Benchmark::CnnShip`]),
+/// so validation of the engine's quantized output stays exact-match.
+/// The DSP benchmarks have no quantized path and ignore it.
 ///
 /// `mesh` is required for [`Benchmark::Render`] (the same model baked
 /// into the artifact); `weights` for [`Benchmark::CnnShip`].
@@ -103,12 +118,15 @@ pub fn make_work_with(
 /// there, so steady-state ingest allocates nothing frame-sized; one-shot
 /// callers pass a fresh arena and get plain allocations. Buffer origin
 /// never changes content: arena and non-arena work items are identical.
+#[allow(clippy::too_many_arguments)] // the host side's real wiring
 pub fn make_work_in(
     backend: KernelBackend,
+    precision: Precision,
     bench: Benchmark,
     seed: u64,
     mesh: Option<&Mesh>,
     weights: Option<&crate::cnn::Weights>,
+    qweights: Option<&crate::cnn::QuantizedWeights>,
     arena: &FrameArena,
 ) -> Result<WorkItem> {
     match bench {
@@ -216,9 +234,18 @@ pub fn make_work_in(
                 let px = i / 3;
                 planes[c].data[px] as f32 / 65535.0
             }));
-            // Groundtruth: scalar CNN on each dequantized patch,
-            // extracted through the same splitter the native engine
-            // uses so both sides see bit-identical patch inputs.
+            // Groundtruth: host CNN on each dequantized patch at the
+            // sweep's precision, extracted through the same splitter
+            // the native engine uses so both sides see bit-identical
+            // patch inputs.
+            let quant = match precision {
+                Precision::Int8 => Some(qweights.ok_or_else(|| {
+                    Error::Config(
+                        "int8 cnn work item needs quantized weights".into(),
+                    )
+                })?),
+                Precision::F32 => None,
+            };
             let mut chip = crate::cnn::layers::FeatureMap::new(patch, patch, 3);
             let mut expected_labels = Vec::with_capacity(grid * grid);
             for gy in 0..grid {
@@ -226,8 +253,11 @@ pub fn make_work_in(
                     crate::cnn::ships::extract_chip_into(
                         &dequant, side, patch, gy, gx, &mut chip,
                     );
-                    expected_labels
-                        .push(crate::cnn::classify(backend, weights, &chip)? as u32);
+                    let label = match quant {
+                        Some(qw) => crate::cnn::quant::classify_q(backend, qw, &chip)?,
+                        None => crate::cnn::classify(backend, weights, &chip)?,
+                    };
+                    expected_labels.push(label as u32);
                 }
             }
             let expected =

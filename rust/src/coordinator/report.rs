@@ -144,13 +144,6 @@ pub fn domain_fault_rows(rows: &[crate::iface::fault::HopFaultStats]) -> String 
     out
 }
 
-/// Pre-ISSUE-9 name for [`domain_fault_rows`], kept so external callers
-/// keep compiling for one release.
-#[deprecated(note = "renamed to `domain_fault_rows` (rows now cover memory domains too)")]
-pub fn hop_fault_rows(rows: &[crate::iface::fault::HopFaultStats]) -> String {
-    domain_fault_rows(rows)
-}
-
 /// Radiation-campaign matrix (ISSUE 9 tentpole cap): one row per
 /// (upset rate, recovery strategy) cell in the paper's Table-II idiom —
 /// availability (valid frames delivered / offered), masked-DES system
@@ -394,6 +387,7 @@ mod tests {
         let r = StreamResult {
             bench: Benchmark::Conv { k: 3 },
             backend: crate::KernelBackend::Optimized,
+            precision: crate::Precision::F32,
             frames: 2,
             vpus: 1,
             sched: crate::vpu::scheduler::SchedPolicy::RoundRobin,
@@ -495,6 +489,7 @@ mod tests {
         let r = StreamResult {
             bench: Benchmark::Conv { k: 3 },
             backend: crate::KernelBackend::Optimized,
+            precision: crate::Precision::F32,
             frames: 48,
             vpus: 1,
             sched: crate::vpu::scheduler::SchedPolicy::LeastLoaded,
@@ -562,6 +557,7 @@ mod tests {
         let r = StreamResult {
             bench: Benchmark::Conv { k: 3 },
             backend: crate::KernelBackend::Optimized,
+            precision: crate::Precision::F32,
             frames: 3,
             vpus: 2,
             sched: crate::vpu::scheduler::SchedPolicy::LeastLoaded,
@@ -648,10 +644,6 @@ mod tests {
         // No FEC suffix when the sidecar never fired.
         assert!(!s.contains("fec-corrected"), "{s}");
         assert!(domain_fault_rows(&[]).is_empty());
-        // The pre-ISSUE-9 name stays callable.
-        #[allow(deprecated)]
-        let alias = hop_fault_rows(&[]);
-        assert!(alias.is_empty());
     }
 
     #[test]
@@ -751,6 +743,7 @@ mod tests {
         let r = StreamResult {
             bench: Benchmark::Conv { k: 3 },
             backend: crate::KernelBackend::Optimized,
+            precision: crate::Precision::F32,
             frames: 2,
             vpus: 1,
             sched: crate::vpu::scheduler::SchedPolicy::RoundRobin,

@@ -103,6 +103,11 @@ pub struct StreamOptions {
     pub sched: SchedPolicy,
     /// Kernel tier for this sweep (`None` = the `CoProcessor`'s).
     pub backend: Option<KernelBackend>,
+    /// CNN arithmetic precision for this sweep (`None` = the
+    /// `CoProcessor`'s, itself resolved from CLI/env by
+    /// `config::ResolvedConfig`). Orthogonal to `backend`: `ref|opt|simd`
+    /// each have an f32 and an int8 CNN path.
+    pub precision: Option<crate::Precision>,
     /// Worker-pool cap applied at run start via
     /// `util::par::set_max_workers` (`None` = leave the pool as-is).
     pub workers: Option<usize>,
@@ -138,6 +143,7 @@ impl StreamOptions {
                 depth: 1,
                 sched: SchedPolicy::RoundRobin,
                 backend: None,
+                precision: None,
                 workers: None,
                 vpus: None,
                 fault: None,
@@ -145,12 +151,6 @@ impl StreamOptions {
                 bus_channels: None,
             },
         }
-    }
-
-    /// Legacy positional constructor.
-    #[deprecated(note = "use StreamOptions::builder(bench).frames(n).build()")]
-    pub fn new(bench: Benchmark, frames: usize) -> StreamOptions {
-        StreamOptions::builder(bench).frames(frames).build()
     }
 }
 
@@ -190,6 +190,12 @@ impl StreamOptionsBuilder {
     /// Kernel-tier override for this sweep.
     pub fn backend(mut self, backend: KernelBackend) -> Self {
         self.opts.backend = Some(backend);
+        self
+    }
+
+    /// CNN-precision override for this sweep (`f32` or `int8`).
+    pub fn precision(mut self, precision: crate::Precision) -> Self {
+        self.opts.precision = Some(precision);
         self
     }
 
@@ -249,6 +255,9 @@ pub struct FrameError {
 pub struct StreamResult {
     pub bench: Benchmark,
     pub backend: KernelBackend,
+    /// CNN arithmetic precision the sweep ran at (f32 for non-CNN
+    /// benchmarks, which have no quantized path).
+    pub precision: crate::Precision,
     pub frames: usize,
     /// VPU nodes the sweep dispatched across.
     pub vpus: usize,
@@ -341,6 +350,10 @@ pub(crate) struct IngestStage {
     pub(crate) cam: CamGeneric,
     pub(crate) mesh: Option<Mesh>,
     pub(crate) weights: Option<crate::cnn::Weights>,
+    /// Quantized twin of `weights`, built lazily on the first
+    /// `Precision::Int8` CNN frame (quantization parameters are a pure
+    /// function of the f32 weights, so the cache never goes stale).
+    pub(crate) qweights: Option<crate::cnn::QuantizedWeights>,
 }
 
 /// Stage 3 state: one node's LCD output path. The topology index lives
@@ -372,16 +385,21 @@ pub(crate) struct ExecutedJob {
 }
 
 /// Cost-model workload for a benchmark (render uses the real projected
-/// content of this seed's pose).
+/// content of this seed's pose; the CNN carries the sweep's precision
+/// so the cost model prices quantized MACs).
 pub(crate) fn workload_of(
     mesh: Option<&Mesh>,
     bench: Benchmark,
     seed: u64,
+    precision: crate::Precision,
 ) -> Result<Workload> {
     Ok(match bench {
         Benchmark::Binning => workloads::binning_4mp(),
         Benchmark::Conv { .. } => workloads::conv_1mp(),
-        Benchmark::CnnShip => workloads::cnn_1mp(),
+        Benchmark::CnnShip => Workload {
+            precision,
+            ..workloads::cnn_1mp()
+        },
         Benchmark::Ccsds => workloads::ccsds_8band(),
         Benchmark::Render => {
             let mesh = mesh.ok_or_else(|| {
@@ -398,6 +416,7 @@ pub(crate) fn workload_of(
             );
             let (n_bands, _) = bench.bands();
             Workload {
+                precision,
                 out_elems: out.width * out.height,
                 in_elems: 6,
                 band_bbox_px: crate::render::camera::band_bbox_px(
@@ -433,8 +452,9 @@ pub(crate) fn proc_time_of(
     mesh: Option<&Mesh>,
     bench: Benchmark,
     seed: u64,
+    precision: crate::Precision,
 ) -> Result<SimTime> {
-    let w = workload_of(mesh, bench, seed)?;
+    let w = workload_of(mesh, bench, seed, precision)?;
     Ok(makespan_of(cost, vpu, bench, &w))
 }
 
@@ -463,17 +483,30 @@ pub(crate) fn fec_wire_overhead(wire_time: SimTime, height: usize) -> SimTime {
     SimTime::from_secs(wire_time.as_secs() * extra / (height + 1) as f64)
 }
 
-/// Amortized per-frame ECC scrub cost for `bench`'s staged DRAM region
-/// on this node (ISSUE 9 `Strategy::Scrub`) — the one formula shared
-/// by the real ingest pricing and the phase-1 virtual schedule.
+/// Amortized per-frame ECC scrub cost on this node (ISSUE 9
+/// `Strategy::Scrub`) — the one formula shared by the real ingest
+/// pricing and the phase-1 virtual schedule. Zero for every non-scrub
+/// strategy. The two memory domains are priced on their own periods:
+/// `bench`'s staged frame-buffer region on `period`, and — for the CNN,
+/// the only benchmark with a persistent DRAM weight store — the weight
+/// region on `weights_period`.
 pub(crate) fn scrub_cost_of(
     cost: &CostModel,
     bench: Benchmark,
-    period: u32,
+    strategy: Strategy,
 ) -> SimTime {
+    let Some(period) = strategy.scrub_period() else {
+        return SimTime::ZERO;
+    };
     let io = bench.input();
     let region = VpuMemory::scrub_region_bytes(io.width, io.height, io.channels);
-    cost.scrub_overhead(region, period)
+    let mut t = cost.scrub_overhead(region, period);
+    if matches!(bench, Benchmark::CnnShip) {
+        if let Some(wp) = strategy.scrub_period_weights() {
+            t += cost.scrub_overhead(VpuMemory::cnn_weight_store_bytes(), wp);
+        }
+    }
+    t
 }
 
 /// The all-zero timing a node with no delivered frames contributes
@@ -506,6 +539,7 @@ impl IngestStage {
     pub(crate) fn run(
         &mut self,
         backend: KernelBackend,
+        precision: crate::Precision,
         cost: &CostModel,
         vpu: &VpuConfig,
         bench: Benchmark,
@@ -513,12 +547,25 @@ impl IngestStage {
         arena: &FrameArena,
         faults: Option<&FaultPlan>,
     ) -> Result<StreamJob> {
+        // Int8 CNN groundtruth quantizes the same weight set the engine
+        // runs, once per stage (the quantized parameters are a pure
+        // function of the f32 weights, so the cache never goes stale).
+        if precision == crate::Precision::Int8
+            && matches!(bench, Benchmark::CnnShip)
+            && self.qweights.is_none()
+        {
+            if let Some(w) = self.weights.as_ref() {
+                self.qweights = Some(crate::cnn::QuantizedWeights::from_weights(w)?);
+            }
+        }
         let item = host::make_work_in(
             backend,
+            precision,
             bench,
             seed,
             self.mesh.as_ref(),
             self.weights.as_ref(),
+            self.qweights.as_ref(),
             arena,
         )?;
 
@@ -530,7 +577,7 @@ impl IngestStage {
             }
         };
 
-        let w = match workload_of(self.mesh.as_ref(), bench, seed) {
+        let w = match workload_of(self.mesh.as_ref(), bench, seed, precision) {
             Ok(w) => w,
             Err(e) => {
                 host::recycle_work_item(item, arena);
@@ -539,14 +586,14 @@ impl IngestStage {
         };
         let mut t_proc = makespan_of(cost, vpu, bench, &w);
         // Recovery-strategy processing surcharges (ISSUE 9): a scrub
-        // plan amortizes its periodic DRAM sweep into every frame, and
-        // TMR always pays for all three replicas — the hardware runs
-        // them regardless of whether this frame is ever upset. Default
-        // strategy (Resend) and no-plan runs add exactly nothing.
+        // plan amortizes its periodic DRAM sweeps (frame buffers and —
+        // for the CNN — the weight store, each on its own period) into
+        // every frame, and TMR always pays for all three replicas — the
+        // hardware runs them regardless of whether this frame is ever
+        // upset. Default strategy (Resend) and no-plan runs add exactly
+        // nothing.
         let strategy = faults.map(|f| f.config().strategy).unwrap_or_default();
-        if let Some(period) = strategy.scrub_period() {
-            t_proc += scrub_cost_of(cost, bench, period);
-        }
+        t_proc += scrub_cost_of(cost, bench, strategy);
         if strategy == Strategy::TmrVote {
             t_proc = t_proc + t_proc + t_proc;
         }
@@ -703,7 +750,11 @@ pub(crate) fn execute_job(
     // the DSP kernels' coefficients live in code/CMX.
     let has_weights = matches!(job.item.bench, Benchmark::CnnShip);
     let weights_hit = has_weights && f.targets(wstore, job.seed);
+    // The two memory domains scrub on independent periods (ISSUE 10
+    // satellite): frame buffers on `period`, the persistent weight
+    // store on `weights_period`.
     let scrub = strategy.scrub_period();
+    let scrub_w = strategy.scrub_period_weights();
     let tmr = strategy == Strategy::TmrVote && (dram_hit || weights_hit);
     let replicas: u32 = if tmr { 3 } else { 1 };
 
@@ -777,7 +828,7 @@ pub(crate) fn execute_job(
             });
             let wflips = wpat.as_ref().map_or(0, |p| p.len());
             let wcaught = wflips > 0
-                && matches!(scrub, Some(p) if f.scrub_catches(wstore, job.seed, wflips, p));
+                && matches!(scrub_w, Some(p) if f.scrub_catches(wstore, job.seed, wflips, p));
             if r == 0 {
                 if wflips > 0 {
                     f.note_memory_upset(wstore, wflips as u64);
@@ -868,6 +919,7 @@ impl EgressStage {
         &mut self,
         power: &PowerModel,
         n_shaves: usize,
+        precision: crate::Precision,
         ex: ExecutedJob,
         arena: &FrameArena,
         faults: Option<&FaultPlan>,
@@ -1019,7 +1071,7 @@ impl EgressStage {
             // A scrub plan keeps the DRAM interface lit between
             // frames; the amortized draw rides on the frame's power
             // figure (zero for every other strategy).
-            power_w: power.shave_power_for(bench.kind(), n_shaves)
+            power_w: power.shave_power_for_precision(bench.kind(), n_shaves, precision)
                 + strategy.scrub_period().map_or(0.0, |p| power.scrub_power(p)),
             t_leon: job.t_leon,
             t_exec_wall: exec_wall,
@@ -1108,6 +1160,7 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         crate::util::par::set_max_workers(w);
     }
     let backend = opts.backend.unwrap_or(cp.backend);
+    let precision = opts.precision.unwrap_or(cp.precision);
     let bench = opts.bench;
     // Traffic off = the legacy fixed sweep, expressed as a backlog
     // schedule (every frame queued at t=0, unbounded admission, one
@@ -1138,6 +1191,7 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
     let depth = opts.depth.max(1);
     for node in nodes.iter_mut() {
         node.runtime.set_kernel_backend(backend);
+        node.runtime.set_precision(precision);
     }
 
     // Phase 1 — the event loop. Each frame's virtual service time is
@@ -1183,12 +1237,16 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         };
         let service = |node: usize, b: Benchmark, seed: u64| -> SimTime {
             let nd = &nodes[node];
-            let mut t_proc =
-                proc_time_of(&nd.cost, &nd.cost.vpu, nd.ingest.mesh.as_ref(), b, seed)
-                    .unwrap_or(SimTime::ZERO);
-            if let Some(period) = strategy.scrub_period() {
-                t_proc += scrub_cost_of(&nd.cost, b, period);
-            }
+            let mut t_proc = proc_time_of(
+                &nd.cost,
+                &nd.cost.vpu,
+                nd.ingest.mesh.as_ref(),
+                b,
+                seed,
+                precision,
+            )
+            .unwrap_or(SimTime::ZERO);
+            t_proc += scrub_cost_of(&nd.cost, b, strategy);
             if strategy == Strategy::TmrVote {
                 t_proc = t_proc + t_proc + t_proc;
             }
@@ -1258,6 +1316,7 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
                     let job = ingest
                         .run(
                             backend,
+                            precision,
                             cost,
                             &cost.vpu,
                             sf.bench,
@@ -1301,8 +1360,14 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
                     let r = match ex {
                         Ok(ex) => {
                             let t0 = Instant::now();
-                            let run =
-                                egress.run(power, cost.vpu.n_shaves, ex, arena, faults);
+                            let run = egress.run(
+                                power,
+                                cost.vpu.n_shaves,
+                                precision,
+                                ex,
+                                arena,
+                                faults,
+                            );
                             timed(&busy[2], t0);
                             run
                         }
@@ -1407,6 +1472,7 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
     Ok(StreamResult {
         bench,
         backend,
+        precision,
         frames: n,
         vpus: n_nodes,
         sched: opts.sched,
@@ -1426,4 +1492,41 @@ pub fn run(cp: &mut CoProcessor, opts: &StreamOptions) -> Result<StreamResult> {
         hop_faults,
         traffic,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_pricing_splits_the_weight_store_onto_its_own_period() {
+        // ISSUE 10 satellite: the CNN's persistent weight store scrubs
+        // on `weights_period`, independent of the frame-buffer period,
+        // and only the CNN pays it (no other benchmark has one).
+        let cost = CostModel::new(VpuConfig::myriad2());
+        let both = |p, wp| {
+            scrub_cost_of(&cost, Benchmark::CnnShip, Strategy::Scrub {
+                period: p,
+                weights_period: wp,
+            })
+        };
+        // A shorter weights period strictly raises the CNN's cost...
+        assert!(both(8, 1) > both(8, 8));
+        // ...by exactly the weight-region sweep delta.
+        let wsweep = |wp| cost.scrub_overhead(VpuMemory::cnn_weight_store_bytes(), wp);
+        assert_eq!(both(8, 1) - both(8, 8), wsweep(1) - wsweep(8));
+        // Non-CNN benchmarks ignore the weights period entirely.
+        let conv = |wp| {
+            scrub_cost_of(&cost, Benchmark::Conv { k: 3 }, Strategy::Scrub {
+                period: 8,
+                weights_period: wp,
+            })
+        };
+        assert_eq!(conv(1), conv(64));
+        // Non-scrub strategies price nothing.
+        assert_eq!(
+            scrub_cost_of(&cost, Benchmark::CnnShip, Strategy::Fec),
+            SimTime::ZERO
+        );
+    }
 }

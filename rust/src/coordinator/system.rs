@@ -162,6 +162,7 @@ impl VpuNode {
                 cam,
                 mesh,
                 weights,
+                qweights: None,
             },
             egress: EgressStage { lcd, lcd_drv },
         })
@@ -177,6 +178,12 @@ pub struct CoProcessor {
     /// `Optimized`; `SPACECODESIGN_BACKEND=reference` forces the scalar
     /// tier for strict groundtruth pinning.
     pub backend: KernelBackend,
+    /// CNN arithmetic precision (ISSUE 10): `F32` (the default, every
+    /// prior PR's numerics bit-exactly) or `Int8` (the quantized path
+    /// in `cnn::quant`). Kept in sync between the native engine and
+    /// the host groundtruth so validation stays exact-match. Resolved
+    /// from `stream --precision` / `SPACECODESIGN_PRECISION`.
+    pub precision: crate::Precision,
     /// The VPU topology. Node 0 is the paper's evaluated system and
     /// serves every one-shot path; `stream::run` dispatches across all
     /// of them.
@@ -248,6 +255,7 @@ impl CoProcessor {
         }
         Ok(CoProcessor {
             backend: rc.backend.value,
+            precision: rc.precision.value,
             faults,
             cfg,
             nodes,
@@ -294,7 +302,8 @@ impl CoProcessor {
         &self.nodes[0].power
     }
 
-    /// Scheduled SHAVE processing time for one frame on node 0.
+    /// Scheduled SHAVE processing time for one frame on node 0 (at the
+    /// testbed's configured precision).
     pub fn proc_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
         let node = &self.nodes[0];
         stream::proc_time_of(
@@ -303,13 +312,20 @@ impl CoProcessor {
             node.ingest.mesh.as_ref(),
             bench,
             seed,
+            self.precision,
         )
     }
 
-    /// LEON baseline time for the speedup comparison.
+    /// LEON baseline time for the speedup comparison (always the fp32
+    /// scalar model — LEON has no int8 SIMD to exploit).
     pub fn leon_time(&self, bench: Benchmark, seed: u64) -> Result<SimTime> {
         let node = &self.nodes[0];
-        let w = stream::workload_of(node.ingest.mesh.as_ref(), bench, seed)?;
+        let w = stream::workload_of(
+            node.ingest.mesh.as_ref(),
+            bench,
+            seed,
+            self.precision,
+        )?;
         Ok(node.cost.leon_time(bench.kind(), &w))
     }
 
@@ -320,17 +336,20 @@ impl CoProcessor {
     pub fn run_unmasked(&mut self, bench: Benchmark, seed: u64) -> Result<FrameRun> {
         let CoProcessor {
             backend,
+            precision,
             nodes,
             faults,
             ..
         } = self;
         let node = &mut nodes[0];
         node.runtime.set_kernel_backend(*backend);
+        node.runtime.set_precision(*precision);
         let faults = faults.as_ref();
         // Price with the node's *own* part description (== `cfg.vpu`
         // on a homogeneous topology; the fleet node's under a spec).
         let job = node.ingest.run(
             *backend,
+            *precision,
             &node.cost,
             &node.cost.vpu,
             bench,
@@ -340,8 +359,14 @@ impl CoProcessor {
         )?;
         let ex =
             stream::execute_job(&mut node.runtime, node.index, job, &node.arena, faults)?;
-        node.egress
-            .run(&node.power, node.cost.vpu.n_shaves, ex, &node.arena, faults)
+        node.egress.run(
+            &node.power,
+            node.cost.vpu.n_shaves,
+            *precision,
+            ex,
+            &node.arena,
+            faults,
+        )
     }
 
     /// Masked-mode phase timings derived from an Unmasked run, priced

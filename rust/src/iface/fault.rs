@@ -25,7 +25,10 @@
 //!   frame; the FSM pads the image buffer with zeros, so geometry is
 //!   preserved and the corruption is a CRC failure, not a size error;
 //! * **stuck pixels** — one pixel forced to all-zeros or full-scale
-//!   (may coincide with the transmitted value: a benign upset).
+//!   (may coincide with the transmitted value: a benign upset);
+//! * **burst erasures** (opt-in, weight 0 by default) — a lost DMA
+//!   beat zeroes a block of contiguous mid-frame lines; sized to the
+//!   FEC interleave depth so the parity sidecar absorbs it.
 //!
 //! The fault-free fast path is untouched: every hook in the
 //! coordinator is behind `Option<&FaultPlan>`, and `None` follows the
@@ -154,6 +157,14 @@ pub struct FaultConfig {
     pub w_truncate: f64,
     /// Relative weight of stuck pixels.
     pub w_stuck: f64,
+    /// Relative weight of burst erasures (ISSUE 10 satellite): a lost
+    /// DMA beat zeroes [`signals::FEC_PARITY_LINES`] *contiguous*
+    /// payload lines mid-frame. Because the FEC parity classes
+    /// interleave (`line % FEC_PARITY_LINES`), the burst lands exactly
+    /// one erasure per class and the sidecar repairs it with zero
+    /// retransmissions. Defaults to 0.0 — at zero weight the draw walk
+    /// is bit-identical to the pre-burst mix.
+    pub w_burst: f64,
     /// Retransmission budget per plane transfer: a CRC failure
     /// triggers up to this many resends before the frame is declared
     /// unrecoverable and contained as a per-frame error.
@@ -181,6 +192,7 @@ impl FaultConfig {
             w_crc_corrupt: 0.2,
             w_truncate: 0.15,
             w_stuck: 0.1,
+            w_burst: 0.0,
             max_retransmits: 5,
             memory_rate: 0.0,
             strategy: crate::recovery::Strategy::Resend,
@@ -198,7 +210,8 @@ pub struct FaultStats {
     pub faulted: u64,
     pub payload_flips: u64,
     pub crc_corruptions: u64,
-    /// Lines lost to truncation (not events: a 2-line drop counts 2).
+    /// Lines lost to truncation or burst erasure (not events: a 2-line
+    /// drop counts 2, a 4-line burst counts 4).
     pub truncated_lines: u64,
     pub stuck_pixels: u64,
     /// CRC-triggered resends issued by the recovery loops.
@@ -469,7 +482,8 @@ impl FaultPlan {
         let base = if hop.is_memory() {
             c.memory_rate
         } else {
-            let total = c.w_payload_flip + c.w_crc_corrupt + c.w_truncate + c.w_stuck;
+            let total =
+                c.w_payload_flip + c.w_crc_corrupt + c.w_truncate + c.w_stuck + c.w_burst;
             if total <= 0.0 {
                 return false;
             }
@@ -560,7 +574,8 @@ impl FaultPlan {
             return false;
         }
         let c = &self.cfg;
-        let total = c.w_payload_flip + c.w_crc_corrupt + c.w_truncate + c.w_stuck;
+        let total =
+            c.w_payload_flip + c.w_crc_corrupt + c.w_truncate + c.w_stuck + c.w_burst;
         // Plane/attempt-level draw: transient — re-rolled per resend.
         let mut rng =
             Rng::new(sub_seed(c.seed, hop, frame, plane as u64, attempt as u64));
@@ -602,13 +617,33 @@ impl FaultPlan {
             d.truncated_lines = lines as u64;
             return true;
         }
-        let idx = rng.range_usize(0, wire.payload.len() - 1);
-        wire.payload[idx] = if rng.bool(0.5) {
-            wire.format.max_value()
-        } else {
-            0
-        };
-        d.stuck_pixels = 1;
+        pick -= c.w_truncate;
+        // The `w_burst <= 0.0` guard keeps legacy (burst-free) mixes on
+        // the exact pre-burst draw walk: stuck was the unconditional
+        // last kind, so its rng consumption must not change.
+        if c.w_burst <= 0.0 || pick < c.w_stuck {
+            let idx = rng.range_usize(0, wire.payload.len() - 1);
+            wire.payload[idx] = if rng.bool(0.5) {
+                wire.format.max_value()
+            } else {
+                0
+            };
+            d.stuck_pixels = 1;
+            return true;
+        }
+        // Burst erasure: a lost DMA beat zeroes FEC_PARITY_LINES
+        // contiguous payload lines at a drawn start. The interleaved
+        // parity classes (`line % FEC_PARITY_LINES`) each lose exactly
+        // one line, so the FEC sidecar reconstructs all of them —
+        // zero retransmissions. Counted as lost lines alongside tail
+        // truncation (same loss family, different position).
+        let nlines = wire.payload.len() / wire.width;
+        let burst = signals::FEC_PARITY_LINES.min(nlines);
+        let start = rng.range_usize(0, nlines - burst);
+        for v in &mut wire.payload[start * wire.width..(start + burst) * wire.width] {
+            *v = 0;
+        }
+        d.truncated_lines = burst as u64;
         true
     }
 
@@ -903,6 +938,71 @@ mod tests {
             }
             assert!(!w.check_crc().ok(), "{kind} fault must trip the CRC");
         }
+    }
+
+    #[test]
+    fn burst_zeroes_one_line_per_interleaved_parity_class() {
+        use crate::iface::signals::{fec_encode, fec_repair, FecOutcome, FEC_PARITY_LINES};
+        let plan = FaultPlan::new(FaultConfig {
+            w_payload_flip: 0.0,
+            w_crc_corrupt: 0.0,
+            w_truncate: 0.0,
+            w_stuck: 0.0,
+            w_burst: 1.0,
+            ..always(53)
+        });
+        let mut w = wire(6);
+        let before = w.clone();
+        let sidecar = fec_encode(&before);
+        assert!(plan.corrupt(Hop::Cif(0), 3, 0, 0, &mut w));
+        let width = w.width;
+        let bad: Vec<usize> = w
+            .payload
+            .chunks_exact(width)
+            .zip(before.payload.chunks_exact(width))
+            .enumerate()
+            .filter(|(_, (a, b))| a != b)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(bad.len(), FEC_PARITY_LINES, "{bad:?}");
+        assert_eq!(
+            bad.last().unwrap() - bad[0] + 1,
+            bad.len(),
+            "burst lines must be contiguous: {bad:?}"
+        );
+        for &i in &bad {
+            assert!(w.payload[i * width..(i + 1) * width].iter().all(|&v| v == 0));
+            assert_eq!(
+                bad.iter().filter(|&&j| j % FEC_PARITY_LINES == i % FEC_PARITY_LINES).count(),
+                1,
+                "each parity class takes exactly one erasure"
+            );
+        }
+        assert!(!w.check_crc().ok(), "burst must trip the frame CRC");
+        assert_eq!(plan.stats().truncated_lines, FEC_PARITY_LINES as u64);
+        // The interleaved sidecar repairs the whole burst in place.
+        assert_eq!(fec_repair(&mut w, &sidecar), FecOutcome::Corrected);
+        assert_eq!(w.payload, before.payload);
+    }
+
+    #[test]
+    fn zero_burst_weight_keeps_the_stuck_draw_walk() {
+        // Legacy mixes (w_burst = 0.0) must land on stuck pixels for
+        // the final walk segment, never on a burst.
+        let plan = FaultPlan::new(FaultConfig {
+            w_payload_flip: 0.0,
+            w_crc_corrupt: 0.0,
+            w_truncate: 0.0,
+            w_stuck: 1.0,
+            ..always(59)
+        });
+        for frame in 0..8u64 {
+            let mut w = wire(frame);
+            assert!(plan.corrupt(Hop::Cif(0), frame, 0, 0, &mut w));
+        }
+        let s = plan.stats();
+        assert_eq!(s.stuck_pixels, 8);
+        assert_eq!(s.truncated_lines, 0);
     }
 
     #[test]

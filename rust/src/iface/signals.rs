@@ -456,6 +456,30 @@ mod tests {
     }
 
     #[test]
+    fn fec_repairs_a_contiguous_burst_of_interleave_depth() {
+        // ISSUE 10 satellite: the parity classes interleave precisely
+        // so that a *contiguous* burst of FEC_PARITY_LINES lines (a
+        // lost DMA beat) lands one erasure per class — repairable with
+        // zero retransmissions. One more line doubles up a class and
+        // correctly falls back to ARQ.
+        let f = random_frame(9, 16, 12, PixelFormat::Bpp16);
+        let clean = WireFrame::from_frame(&f);
+        let sidecar = fec_encode(&clean);
+        let mut wire = clean.clone();
+        for v in &mut wire.payload[3 * 16..(3 + FEC_PARITY_LINES) * 16] {
+            *v = 0;
+        }
+        assert!(!wire.check_crc().ok());
+        assert_eq!(fec_repair(&mut wire, &sidecar), FecOutcome::Corrected);
+        assert_eq!(wire.to_frame().unwrap(), f);
+        let mut wire = clean.clone();
+        for v in &mut wire.payload[..(FEC_PARITY_LINES + 1) * 16] {
+            *v = 0;
+        }
+        assert_eq!(fec_repair(&mut wire, &sidecar), FecOutcome::Unrecoverable);
+    }
+
+    #[test]
     fn fec_repairs_single_line_corruption_bit_exactly() {
         for fmt in [PixelFormat::Bpp8, PixelFormat::Bpp16, PixelFormat::Bpp24] {
             let f = random_frame(9, 8, 16, fmt);

@@ -103,6 +103,65 @@ impl KernelBackend {
     }
 }
 
+/// Arithmetic precision of the CNN inference path.
+///
+/// Orthogonal to [`KernelBackend`]: every backend tier has both an f32
+/// and an int8 implementation of the ship-CNN forward pass, so the two
+/// knobs compose freely (`ref|opt|simd` × `f32|int8`).
+///
+/// * [`Precision::F32`] — the default single-precision path, bit-exact
+///   with every prior PR under all existing CI legs.
+/// * [`Precision::Int8`] — per-layer symmetric quantization
+///   (`cnn::quant`): u8 activations, i8 weights, i32 accumulators with
+///   a single rounding/saturating requantize per layer. Pure integer
+///   arithmetic, so results are bit-reproducible across worker counts
+///   and backend tiers by construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Single-precision float inference — the pinned default.
+    #[default]
+    F32,
+    /// Per-layer symmetric int8 quantized inference (`cnn::quant`).
+    Int8,
+}
+
+impl Precision {
+    /// Select from `SPACECODESIGN_PRECISION` (case-insensitive `f32` /
+    /// `fp32` / `float` or `int8` / `i8`), defaulting to
+    /// [`Precision::F32`]. An unrecognized value warns on stderr rather
+    /// than silently running the wrong precision.
+    pub fn from_env() -> Precision {
+        match std::env::var("SPACECODESIGN_PRECISION") {
+            Ok(v) => Precision::parse(&v).unwrap_or_else(|| {
+                eprintln!(
+                    "warning: unrecognized SPACECODESIGN_PRECISION='{v}', \
+                     using the default (f32)"
+                );
+                Precision::F32
+            }),
+            Err(_) => Precision::F32,
+        }
+    }
+
+    /// Parse a precision name (case-insensitive; `f32`/`fp32`/`float`,
+    /// `int8`/`i8`) — the one spelling table shared by the env var, the
+    /// CLI flag, and `config::ResolvedConfig`.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float" => Some(Precision::F32),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
 pub mod fabric;
 pub mod iface;
 pub mod vpu;

@@ -29,7 +29,7 @@ use spacecodesign::fpga::{designs, Device};
 use spacecodesign::iface::loopback;
 use spacecodesign::util::rng::Rng;
 use spacecodesign::vpu::scheduler::SchedPolicy;
-use spacecodesign::{KernelBackend, Result};
+use spacecodesign::{KernelBackend, Precision, Result};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -86,16 +86,19 @@ COMMANDS:
              own silicon; [--bus N] arbitrates all CIF/LCD transfers
              through N shared host-bus channels (default uncontended);
              [--backend ref|opt|simd] runs one kernel tier instead of
-             the ref+opt sweep; [--workers N] caps the worker pool.
-             Every knob resolves CLI > env > default (env vars:
-             SPACECODESIGN_BACKEND, _WORKERS, _VPUS, _FLEET,
-             _FAULT_SEED, _FAULT_RATE); the resolved settings print
-             once per run;
+             the ref+opt sweep; [--precision f32|int8] selects the
+             numeric tier (int8 runs the quantized CNN inference path;
+             non-CNN benches ignore it); [--workers N] caps the worker
+             pool. Every knob resolves CLI > env > default (env vars:
+             SPACECODESIGN_BACKEND, _PRECISION, _WORKERS, _VPUS,
+             _FLEET, _FAULT_SEED, _FAULT_RATE); the resolved settings
+             print once per run;
              [--inject RATE] [--fault-seed N] adds seeded wire faults
              with CRC-triggered retransmission + per-frame containment;
-             [--strategy none|resend|fec|scrub[:N]|tmr] picks the
-             recovery strategy (default resend; env var
-             SPACECODESIGN_FAULT_STRATEGY);
+             [--strategy none|resend|fec|scrub[:N[:M]]|tmr] picks the
+             recovery strategy (default resend; scrub:N:M scrubs frame
+             buffers every N frames and the weight store every M; env
+             var SPACECODESIGN_FAULT_STRATEGY);
              [--traffic poisson|duty|off] turns on the constellation
              traffic harness — seeded stochastic arrivals across
              priority classes with bounded admission — tuned by
@@ -106,8 +109,9 @@ COMMANDS:
   campaign   radiation campaign sweep (upset rates x recovery
              strategies): [--bench NAME] [--frames N] [--seed N]
              [--rates R1,R2,...] (default 0.05,0.2,0.5)
-             [--strategies none,resend,fec,scrub[:N],tmr] (default all)
-             [--scrub-period N] [--backend ref|opt|simd] — each cell
+             [--strategies none,resend,fec,scrub[:N[:M]],tmr] (default all)
+             [--scrub-period N] [--scrub-period-weights M]
+             [--backend ref|opt|simd] — each cell
              arms wire + memory upsets at the rate and reports
              availability, masked-DES throughput and wire bandwidth
              overhead in one matrix
@@ -376,12 +380,22 @@ fn run_stream(args: &[String]) -> Result<()> {
     let fault_strategy = flag_str(args, "--strategy").map(|s| match Strategy::parse(s) {
         Some(st) => st,
         None => {
-            eprintln!("unknown recovery strategy '{s}' (none | resend | fec | scrub[:N] | tmr)");
+            eprintln!(
+                "unknown recovery strategy '{s}' (none | resend | fec | scrub[:N[:M]] | tmr)"
+            );
+            std::process::exit(2);
+        }
+    });
+    let precision = flag_str(args, "--precision").map(|p| match Precision::parse(p) {
+        Some(prec) => prec,
+        None => {
+            eprintln!("unknown precision '{p}' (f32 | int8)");
             std::process::exit(2);
         }
     });
     let rc = ResolvedConfig::resolve(&CliOverrides {
         backend: backend_flag,
+        precision,
         workers: flag_usize(args, "--workers"),
         vpus: flag_usize(args, "--vpus"),
         fault_seed,
@@ -494,7 +508,8 @@ fn run_stream(args: &[String]) -> Result<()> {
         .frames(frames)
         .seed(seed(args))
         .depth(depth)
-        .sched(sched);
+        .sched(sched)
+        .precision(rc.precision.value);
     if let Some(t) = traffic {
         builder = builder.traffic(t);
     }
@@ -553,14 +568,27 @@ fn run_campaign(args: &[String]) -> Result<()> {
             })
             .collect();
     }
-    if let Some(p) = flag_usize(args, "--scrub-period") {
-        if p == 0 {
-            eprintln!("--scrub-period needs at least 1");
+    // `--scrub-period` keeps its pre-split meaning (both memory
+    // domains); `--scrub-period-weights` then overrides the persistent
+    // weight-store domain independently (ROADMAP radiation (d)).
+    let scrub_p = flag_usize(args, "--scrub-period");
+    let scrub_w = flag_usize(args, "--scrub-period-weights");
+    for (flag, v) in [("--scrub-period", scrub_p), ("--scrub-period-weights", scrub_w)] {
+        if v == Some(0) {
+            eprintln!("{flag} needs at least 1");
             std::process::exit(2);
         }
+    }
+    if scrub_p.is_some() || scrub_w.is_some() {
         for s in &mut opts.strategies {
-            if let Strategy::Scrub { period } = s {
-                *period = p as u32;
+            if let Strategy::Scrub { period, weights_period } = s {
+                if let Some(p) = scrub_p {
+                    *period = p as u32;
+                    *weights_period = p as u32;
+                }
+                if let Some(w) = scrub_w {
+                    *weights_period = w as u32;
+                }
             }
         }
     }

@@ -41,11 +41,21 @@ pub enum Strategy {
     /// ECC (SEC-DED) plus periodic scrubbing of the DRAM/weight
     /// regions: single-bit upsets always correct; multi-bit upsets are
     /// caught with probability `1/period` per frame. The scrub pass is
-    /// a `vpu::cost` + `power` term amortized over `period` frames.
+    /// a `vpu::cost` + `power` term amortized over the period. The two
+    /// memory domains scrub on **independent periods**: frame buffers
+    /// are transient (rewritten every frame), the weight store is
+    /// persistent — one knob for both over-scrubs the frames (ROADMAP
+    /// radiation follow-on (d)).
     Scrub {
-        /// Frames between scrub passes (>= 1). Shorter periods catch
-        /// more multi-bit upsets but cost more DMA time and power.
+        /// Frames between DRAM frame-buffer scrub passes (>= 1).
+        /// Shorter periods catch more multi-bit upsets but cost more
+        /// DMA time and power.
         period: u32,
+        /// Frames between weight-store scrub passes (>= 1). Defaults
+        /// to `period` for the legacy `scrub`/`scrub:N` spellings;
+        /// `scrub:N:M` or `--scrub-period-weights` sets it
+        /// independently.
+        weights_period: u32,
     },
     /// Triple-execute-and-vote on the CNN logits: the execute stage
     /// runs three replicas and takes a bitwise majority, masking
@@ -66,23 +76,40 @@ impl Strategy {
         Strategy::None,
         Strategy::Resend,
         Strategy::Fec,
-        Strategy::Scrub { period: DEFAULT_SCRUB_PERIOD },
+        Strategy::Scrub {
+            period: DEFAULT_SCRUB_PERIOD,
+            weights_period: DEFAULT_SCRUB_PERIOD,
+        },
         Strategy::TmrVote,
     ];
 
     /// Parse the CLI/env spelling: `none`, `resend`, `fec`, `scrub`
-    /// (default period), `scrub:N`, `tmr`. Case-insensitive.
+    /// (default period), `scrub:N` (both domains at N), `scrub:N:M`
+    /// (frames at N, weight store at M), `tmr`. Case-insensitive.
     pub fn parse(s: &str) -> Option<Strategy> {
         let s = s.trim().to_ascii_lowercase();
         match s.as_str() {
             "none" => Some(Strategy::None),
             "resend" | "arq" => Some(Strategy::Resend),
             "fec" => Some(Strategy::Fec),
-            "scrub" => Some(Strategy::Scrub { period: DEFAULT_SCRUB_PERIOD }),
+            "scrub" => Some(Strategy::Scrub {
+                period: DEFAULT_SCRUB_PERIOD,
+                weights_period: DEFAULT_SCRUB_PERIOD,
+            }),
             "tmr" | "tmrvote" => Some(Strategy::TmrVote),
             _ => {
-                let period = s.strip_prefix("scrub:")?.parse::<u32>().ok()?;
-                (period >= 1).then_some(Strategy::Scrub { period })
+                let rest = s.strip_prefix("scrub:")?;
+                let (period_s, weights_s) = match rest.split_once(':') {
+                    None => (rest, None),
+                    Some((p, w)) => (p, Some(w)),
+                };
+                let period = period_s.parse::<u32>().ok()?;
+                let weights_period = match weights_s {
+                    None => period,
+                    Some(w) => w.parse::<u32>().ok()?,
+                };
+                (period >= 1 && weights_period >= 1)
+                    .then_some(Strategy::Scrub { period, weights_period })
             }
         }
     }
@@ -98,10 +125,21 @@ impl Strategy {
         }
     }
 
-    /// The scrub period when scrubbing is active, else `None`.
+    /// The frame-buffer scrub period when scrubbing is active, else
+    /// `None`.
     pub fn scrub_period(self) -> Option<u32> {
         match self {
-            Strategy::Scrub { period } => Some(period),
+            Strategy::Scrub { period, .. } => Some(period),
+            _ => None,
+        }
+    }
+
+    /// The weight-store scrub period when scrubbing is active, else
+    /// `None` — independent of the frame-buffer period (the weight
+    /// store is persistent; frames are transient).
+    pub fn scrub_period_weights(self) -> Option<u32> {
+        match self {
+            Strategy::Scrub { weights_period, .. } => Some(weights_period),
             _ => None,
         }
     }
@@ -132,11 +170,23 @@ mod tests {
         assert_eq!(Strategy::parse("fec"), Some(Strategy::Fec));
         assert_eq!(
             Strategy::parse("scrub"),
-            Some(Strategy::Scrub { period: DEFAULT_SCRUB_PERIOD })
+            Some(Strategy::Scrub {
+                period: DEFAULT_SCRUB_PERIOD,
+                weights_period: DEFAULT_SCRUB_PERIOD,
+            })
         );
-        assert_eq!(Strategy::parse("scrub:3"), Some(Strategy::Scrub { period: 3 }));
+        assert_eq!(
+            Strategy::parse("scrub:3"),
+            Some(Strategy::Scrub { period: 3, weights_period: 3 })
+        );
+        assert_eq!(
+            Strategy::parse("scrub:2:16"),
+            Some(Strategy::Scrub { period: 2, weights_period: 16 })
+        );
         assert_eq!(Strategy::parse(" TMR "), Some(Strategy::TmrVote));
-        for bad in ["", "scrub:0", "scrub:x", "fecc", "retry"] {
+        for bad in [
+            "", "scrub:0", "scrub:x", "scrub:2:0", "scrub:2:x", "scrub:2:3:4", "fecc", "retry",
+        ] {
             assert_eq!(Strategy::parse(bad), None, "{bad:?}");
         }
     }
@@ -155,7 +205,10 @@ mod tests {
         assert!(!Strategy::None.wire_resends());
         assert!(Strategy::Fec.wire_fec());
         assert!(!Strategy::Resend.wire_fec());
-        assert_eq!(Strategy::Scrub { period: 4 }.scrub_period(), Some(4));
+        let s = Strategy::Scrub { period: 4, weights_period: 32 };
+        assert_eq!(s.scrub_period(), Some(4));
+        assert_eq!(s.scrub_period_weights(), Some(32));
         assert_eq!(Strategy::TmrVote.scrub_period(), None);
+        assert_eq!(Strategy::TmrVote.scrub_period_weights(), None);
     }
 }

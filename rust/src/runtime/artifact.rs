@@ -207,6 +207,16 @@ impl Manifest {
                 ("scalar_artifact", Json::Str("cnn_patch_b1".into())),
             ],
         );
+        // Always-int8 quantized single-patch classifier (ISSUE 10):
+        // same I/O shapes as `cnn_patch_b1`, numerics from the
+        // quantized forward pass regardless of the engine's precision
+        // knob. Native engine only (no HLO behind it).
+        add(
+            "cnn_patch_int8",
+            &[&[128, 128, 3]],
+            &[&[2]],
+            &[("precision", Json::Str("int8".into()))],
+        );
         add("cnn_frame_1024", &[&[1024, 1024, 3]], &[&[64, 2]], &[]);
         // Multi-frame CNN artifacts (ISSUE 3): `cnn_frame_b1` is the
         // scalar twin the `_b{N}` fallback convention resolves to,
@@ -314,10 +324,15 @@ mod tests {
             "cnn_frame_b4",
             "cnn_patch_b1",
             "cnn_patch_b64",
+            "cnn_patch_int8",
             "ccsds_256_b8",
         ] {
             assert!(m.get(name).is_ok(), "{name} missing from builtin set");
         }
+        let q = m.get("cnn_patch_int8").unwrap();
+        assert_eq!(q.inputs[0].shape, vec![128, 128, 3]);
+        assert_eq!(q.outputs[0].numel(), 2);
+        assert_eq!(q.meta_str("precision"), Some("int8"));
         let ccsds = m.get("ccsds_256_b8").unwrap();
         assert_eq!(ccsds.inputs[0].shape, vec![8, 256, 256]);
         assert_eq!(ccsds.outputs[0].numel(), 64);

@@ -113,6 +113,16 @@ impl Runtime {
         }
     }
 
+    /// Select the numeric precision of the native engine's CNN path
+    /// (ISSUE 10; no-op under PJRT, whose artifacts bake their numerics
+    /// in). The coordinator syncs this with its resolved precision so
+    /// host groundtruth and native execution quantize identically.
+    pub fn set_precision(&mut self, precision: crate::Precision) {
+        if let Engine::Native(native) = &mut self.engine {
+            native.set_precision(precision);
+        }
+    }
+
     /// Compile (or fetch cached) an artifact's executable. A no-op on
     /// the native engine beyond checking the artifact exists.
     pub fn prepare(&mut self, name: &str) -> Result<()> {

@@ -74,8 +74,16 @@ pub fn manifest_weights(manifest: &Manifest) -> Option<Weights> {
 /// The native kernel engine with its reusable scratch state.
 pub struct NativeEngine {
     backend: KernelBackend,
+    /// Numeric precision of the CNN path (ISSUE 10): `Int8` routes the
+    /// `cnn_patch_*` / `cnn_frame_*` artifacts through the quantized
+    /// forward pass. Non-CNN artifacts ignore it.
+    precision: crate::Precision,
     mesh: Option<Mesh>,
     weights: Option<Weights>,
+    /// Lazily-built quantization parameters — a pure function of
+    /// `weights`, so host groundtruth quantizing the same weights gets
+    /// bit-identical scales.
+    qweights: Option<cnn::QuantizedWeights>,
     /// Reused patch buffer for the CNN artifacts (no per-patch alloc).
     chip: FeatureMap,
 }
@@ -84,8 +92,10 @@ impl NativeEngine {
     pub fn new(manifest: &Manifest) -> NativeEngine {
         NativeEngine {
             backend: KernelBackend::from_env(),
+            precision: crate::Precision::from_env(),
             mesh: manifest_mesh(manifest),
             weights: manifest_weights(manifest),
+            qweights: None,
             chip: FeatureMap::new(PATCH, PATCH, 3),
         }
     }
@@ -96,6 +106,14 @@ impl NativeEngine {
 
     pub fn backend(&self) -> KernelBackend {
         self.backend
+    }
+
+    pub fn set_precision(&mut self, precision: crate::Precision) {
+        self.precision = precision;
+    }
+
+    pub fn precision(&self) -> crate::Precision {
+        self.precision
     }
 
     /// The resolved render mesh (shared with the coordinator so host
@@ -121,6 +139,44 @@ impl NativeEngine {
                 "native CNN execution needs cnn_weights.bin (run `make artifacts`)".into(),
             )
         })
+    }
+
+    /// Build the quantization parameter cache once per engine. The
+    /// calibration pass is deterministic, so rebuilding on a fresh
+    /// engine over the same weights yields identical scales.
+    fn build_qweights(&mut self) -> Result<()> {
+        if self.qweights.is_none() {
+            let qw = cnn::QuantizedWeights::from_weights(self.require_weights()?)?;
+            self.qweights = Some(qw);
+        }
+        Ok(())
+    }
+
+    /// Fan the patch forward passes of a batched CNN artifact across
+    /// the worker pool at the engine's precision.
+    fn run_patches_at_precision<F>(
+        &mut self,
+        logits: &mut [f32],
+        dims: (usize, usize, usize),
+        fill: F,
+    ) -> Result<()>
+    where
+        F: Fn(usize, &mut FeatureMap) + Sync,
+    {
+        let backend = self.backend;
+        match self.precision {
+            crate::Precision::F32 => {
+                let w = self.require_weights()?;
+                run_patches(logits, dims, fill, |chip| cnn::forward(backend, w, chip))
+            }
+            crate::Precision::Int8 => {
+                self.build_qweights()?;
+                let qw = self.qweights.as_ref().expect("built above");
+                run_patches(logits, dims, fill, |chip| {
+                    cnn::quant::cnn_forward_q(backend, qw, chip)
+                })
+            }
+        }
     }
 
     /// Execute `spec` on validated inputs, writing the outputs into
@@ -150,6 +206,27 @@ impl NativeEngine {
             let pose = Pose::from_slice(inputs[0]);
             let tris = render::project_triangles(&pose, mesh, w, h, n_tris);
             out.push(render::depth_render(&tris, w, h));
+        } else if name == "cnn_patch_int8" {
+            // Always-quantized single-patch artifact (ISSUE 10): int8
+            // numerics regardless of the engine's precision knob, so an
+            // f32 session can A/B the quantized forward pass per call.
+            let shape = &spec.inputs[0].shape;
+            if shape.len() != 3 {
+                return Err(Error::Validation(format!(
+                    "{name}: input expected 3-D (h, w, c), got {:?}",
+                    shape
+                )));
+            }
+            let (h, w, c) = (shape[0], shape[1], shape[2]);
+            self.ensure_chip(h, w, c);
+            self.chip.data.copy_from_slice(inputs[0]);
+            self.build_qweights()?;
+            let l = cnn::quant::cnn_forward_q(
+                self.backend,
+                self.qweights.as_ref().expect("built above"),
+                &self.chip,
+            )?;
+            out.push(l.to_vec());
         } else if let Some(suffix) = name.strip_prefix("cnn_patch_b") {
             let batch: usize = suffix.parse().map_err(|_| {
                 Error::UnknownArtifact(format!("{name} (bad batch suffix)"))
@@ -181,18 +258,26 @@ impl NativeEngine {
                 // Single-patch hot path: reuse the engine's scratch chip.
                 self.ensure_chip(h, w, c);
                 self.chip.data.copy_from_slice(&inputs[0][..per]);
-                let l = cnn::forward(self.backend, self.require_weights()?, &self.chip)?;
+                let l = match self.precision {
+                    crate::Precision::F32 => {
+                        cnn::forward(self.backend, self.require_weights()?, &self.chip)?
+                    }
+                    crate::Precision::Int8 => {
+                        self.build_qweights()?;
+                        cnn::quant::cnn_forward_q(
+                            self.backend,
+                            self.qweights.as_ref().expect("built above"),
+                            &self.chip,
+                        )?
+                    }
+                };
                 out.push(l.to_vec());
             } else {
                 let input = inputs[0];
                 let mut logits = vec![0f32; batch * 2];
-                run_patches(
-                    self.backend,
-                    self.require_weights()?,
-                    &mut logits,
-                    (h, w, c),
-                    |p, chip| chip.data.copy_from_slice(&input[p * per..][..per]),
-                )?;
+                self.run_patches_at_precision(&mut logits, (h, w, c), |p, chip| {
+                    chip.data.copy_from_slice(&input[p * per..][..per])
+                })?;
                 out.push(logits);
             }
         } else if name.starts_with("cnn_frame_") {
@@ -220,17 +305,11 @@ impl NativeEngine {
                 )));
             }
             let mut logits = vec![0f32; nframes * per_frame * 2];
-            run_patches(
-                self.backend,
-                self.require_weights()?,
-                &mut logits,
-                (PATCH, PATCH, 3),
-                |p, chip| {
-                    let (f, rem) = (p / per_frame, p % per_frame);
-                    let frame = &input[f * plane..][..plane];
-                    ships::extract_chip_into(frame, side, PATCH, rem / grid, rem % grid, chip);
-                },
-            )?;
+            self.run_patches_at_precision(&mut logits, (PATCH, PATCH, 3), |p, chip| {
+                let (f, rem) = (p / per_frame, p % per_frame);
+                let frame = &input[f * plane..][..plane];
+                ships::extract_chip_into(frame, side, PATCH, rem / grid, rem % grid, chip);
+            })?;
             out.push(logits);
         } else if name.starts_with("ccsds_") {
             // Band-parallel CCSDS-123: rebuild the u16 cube from the
@@ -264,8 +343,9 @@ impl NativeEngine {
 }
 
 /// Fan independent patch forward passes across the resident worker
-/// pool: `fill(patch_index, chip)` loads each chip and the patch's
-/// logit pair lands in `logits[2 * patch ..]` (`logits.len() / 2`
+/// pool: `fill(patch_index, chip)` loads each chip, `forward(chip)`
+/// produces its logit pair (the f32 or quantized pass — ISSUE 10), and
+/// the pair lands in `logits[2 * patch ..]` (`logits.len() / 2`
 /// patches total). Each executing thread reuses a thread-local scratch
 /// chip (pool workers are resident, so steady-state batches allocate
 /// nothing patch-sized) and patches never share state; the first
@@ -273,15 +353,15 @@ impl NativeEngine {
 /// is returned. Bit-exact with a serial loop — each patch is an
 /// independent forward pass, and nested conv fan-out inside a band
 /// runs inline.
-fn run_patches<F>(
-    backend: KernelBackend,
-    weights: &Weights,
+fn run_patches<F, G>(
     logits: &mut [f32],
     (h, w, c): (usize, usize, usize),
     fill: F,
+    forward: G,
 ) -> Result<()>
 where
     F: Fn(usize, &mut FeatureMap) + Sync,
+    G: Fn(&FeatureMap) -> Result<[f32; 2]> + Sync,
 {
     thread_local! {
         static SCRATCH: std::cell::RefCell<FeatureMap> =
@@ -296,7 +376,7 @@ where
             }
             for (j, pair) in band.chunks_exact_mut(2).enumerate() {
                 fill(p0 + j, &mut chip);
-                match cnn::forward(backend, weights, &chip) {
+                match forward(&chip) {
                     Ok(l) => pair.copy_from_slice(&l),
                     Err(e) => {
                         err.lock().unwrap().get_or_insert(e);
@@ -412,6 +492,59 @@ mod tests {
         let mut out = Vec::new();
         let got = eng.execute(&spec, &[&x], &mut out);
         assert!(matches!(&got, Err(Error::Validation(_))), "{got:?}");
+    }
+
+    #[test]
+    fn cnn_patch_int8_artifact_matches_quant_groundtruth() {
+        let (mut eng, m) = engine_and_manifest();
+        let chips = ships::ship_chips(1, 128, 99);
+        let mut out = Vec::new();
+        eng.execute(m.get("cnn_patch_int8").unwrap(), &[&chips[0].fm.data], &mut out)
+            .unwrap();
+        let qw = cnn::QuantizedWeights::from_weights(eng.weights().unwrap()).unwrap();
+        let gt = cnn::quant::cnn_forward_q(eng.backend(), &qw, &chips[0].fm).unwrap();
+        assert_eq!(out[0], gt.to_vec());
+        // The dedicated artifact is int8 even while the engine is f32.
+        assert_eq!(eng.precision(), crate::Precision::F32);
+    }
+
+    #[test]
+    fn precision_knob_flips_patch_numerics_and_batched_matches_serial() {
+        use crate::runtime::artifact::TensorSpec;
+        let (mut eng, m) = engine_and_manifest();
+        let chips = ships::ship_chips(4, 128, 55);
+        let spec1 = m.get("cnn_patch_b1").unwrap().clone();
+        let mut f32_out = Vec::new();
+        eng.execute(&spec1, &[&chips[0].fm.data], &mut f32_out).unwrap();
+        eng.set_precision(crate::Precision::Int8);
+        let mut q_out = Vec::new();
+        eng.execute(&spec1, &[&chips[0].fm.data], &mut q_out).unwrap();
+        assert_ne!(f32_out, q_out, "int8 requantization must move the logits");
+        // Batched int8 bit-equals the serial int8 calls, in patch order.
+        let spec4 = ArtifactSpec {
+            name: "cnn_patch_b4".into(),
+            file: "cnn_patch_b4.hlo.txt".into(),
+            inputs: vec![TensorSpec {
+                shape: vec![4, 128, 128, 3],
+                dtype: "f32".into(),
+            }],
+            outputs: vec![TensorSpec {
+                shape: vec![4, 2],
+                dtype: "f32".into(),
+            }],
+            meta: Default::default(),
+        };
+        let flat: Vec<f32> =
+            chips.iter().flat_map(|c| c.fm.data.iter().copied()).collect();
+        let mut batched = Vec::new();
+        eng.execute(&spec4, &[&flat], &mut batched).unwrap();
+        let mut serial = Vec::new();
+        for c in &chips {
+            let mut one = Vec::new();
+            eng.execute(&spec1, &[&c.fm.data], &mut one).unwrap();
+            serial.extend_from_slice(&one[0]);
+        }
+        assert_eq!(batched[0], serial);
     }
 
     #[test]

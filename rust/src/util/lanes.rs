@@ -81,6 +81,106 @@ impl F32x8 {
     }
 }
 
+/// Eight independent i32 lanes — the accumulator type of the int8
+/// quantized CNN tier (`cnn::quant`).
+///
+/// Integer addition is associative and the per-lane widening
+/// multiply-accumulate (`u8 × i8 → i32`, summed in i32) cannot wrap for
+/// the ship CNN's operand ranges (≤ `9·32` taps of `255·127` each, far
+/// below `i32::MAX`), so lane kernels built on `I32x8` are
+/// **bit-identical** to the scalar reference for any accumulation
+/// order — stronger than the f32 lanes' order-replay contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct I32x8(pub [i32; LANES]);
+
+impl I32x8 {
+    #[inline(always)]
+    pub fn zero() -> I32x8 {
+        I32x8([0; LANES])
+    }
+
+    #[inline(always)]
+    pub fn splat(v: i32) -> I32x8 {
+        I32x8([v; LANES])
+    }
+
+    /// Load the first `LANES` elements of `src` (panics if shorter).
+    #[inline(always)]
+    pub fn load(src: &[i32]) -> I32x8 {
+        let mut v = [0i32; LANES];
+        v.copy_from_slice(&src[..LANES]);
+        I32x8(v)
+    }
+
+    /// Store into the first `LANES` elements of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [i32]) {
+        dst[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Widening multiply-accumulate: `self[i] += a as i32 * w[i] as i32`
+    /// per lane, with a u8 activation broadcast against eight i8 weight
+    /// taps — the int8 analogue of [`F32x8::acc_scaled`].
+    #[inline(always)]
+    pub fn acc_widening(&mut self, a: u8, w: &[i8]) {
+        let av = a as i32;
+        for i in 0..LANES {
+            self.0[i] += av * w[i] as i32;
+        }
+    }
+
+    /// Lane-wise `self[i] += o[i]` (wrapping is unreachable for the
+    /// quantized CNN's operand ranges; debug builds still check).
+    #[inline(always)]
+    pub fn add_assign(&mut self, o: I32x8) {
+        for i in 0..LANES {
+            self.0[i] += o.0[i];
+        }
+    }
+
+    /// Lane-wise `max` — used for integer ReLU against a zero vector.
+    #[inline(always)]
+    pub fn max(self, o: I32x8) -> I32x8 {
+        let mut v = self.0;
+        for i in 0..LANES {
+            v[i] = v[i].max(o.0[i]);
+        }
+        I32x8(v)
+    }
+}
+
+/// Eight independent u8 lanes — quantized activations for the int8
+/// tier's lane maxpool (`cnn::quant::simd`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct U8x8(pub [u8; LANES]);
+
+impl U8x8 {
+    /// Load the first `LANES` elements of `src` (panics if shorter).
+    #[inline(always)]
+    pub fn load(src: &[u8]) -> U8x8 {
+        let mut v = [0u8; LANES];
+        v.copy_from_slice(&src[..LANES]);
+        U8x8(v)
+    }
+
+    /// Store into the first `LANES` elements of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [u8]) {
+        dst[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Lane-wise `max` — exact (total order on u8), so the lane maxpool
+    /// is bit-identical to the scalar one in any reduction order.
+    #[inline(always)]
+    pub fn max(self, o: U8x8) -> U8x8 {
+        let mut v = self.0;
+        for i in 0..LANES {
+            v[i] = v[i].max(o.0[i]);
+        }
+        U8x8(v)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +210,44 @@ mod tests {
         }
         let r = F32x8([-1.0, 2.0, -3.0, 4.0, -5.0, 6.0, -7.0, 0.0]).relu();
         assert_eq!(r.0, [0.0, 2.0, 0.0, 4.0, 0.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn i32x8_widening_mac_matches_scalar() {
+        let mut acc = I32x8::splat(10);
+        let w: [i8; LANES] = [-128, 127, -1, 0, 64, -64, 3, -3];
+        acc.acc_widening(255, &w);
+        for i in 0..LANES {
+            assert_eq!(acc.0[i], 10 + 255 * w[i] as i32, "lane {i}");
+        }
+        let m = acc.max(I32x8::zero());
+        for i in 0..LANES {
+            assert_eq!(m.0[i], acc.0[i].max(0), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn i32x8_load_store_roundtrip() {
+        let data = [i32::MIN, -1, 0, 1, i32::MAX, 7, -7, 42];
+        let v = I32x8::load(&data);
+        let mut out = [0i32; LANES];
+        v.store(&mut out);
+        assert_eq!(out, data);
+        let mut sum = I32x8::splat(1);
+        sum.add_assign(I32x8::splat(2));
+        assert_eq!(sum, I32x8::splat(3));
+    }
+
+    #[test]
+    fn u8x8_max_matches_scalar() {
+        let a = U8x8::load(&[0, 255, 7, 128, 3, 9, 200, 1]);
+        let b = U8x8::load(&[255, 0, 8, 127, 3, 10, 199, 2]);
+        let m = a.max(b);
+        for i in 0..LANES {
+            assert_eq!(m.0[i], a.0[i].max(b.0[i]), "lane {i}");
+        }
+        let mut out = [0u8; LANES];
+        m.store(&mut out);
+        assert_eq!(out, m.0);
     }
 }

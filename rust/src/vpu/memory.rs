@@ -109,6 +109,22 @@ impl VpuMemory {
         width * height * channels * 4 * 2
     }
 
+    /// DRAM bytes of the CNN's persistent weight store — the second
+    /// scrub domain (ISSUE 10 satellite: it sweeps on its own
+    /// `weights_period`, independent of the transient frame buffers).
+    /// The f32 parameter count of the 6-layer ship network (four
+    /// 3x3 HWIO conv stages, two dense stages, biases included):
+    /// ~132 k parameters ≈ 0.5 MB.
+    pub fn cnn_weight_store_bytes() -> usize {
+        let conv = |cin: usize, cout: usize| 9 * cin * cout + cout;
+        (conv(3, 8) + conv(8, 16) + conv(16, 32) + conv(32, 32)
+            + 2048 * 57
+            + 57
+            + 57 * 2
+            + 2)
+            * 4
+    }
+
     /// Feasibility: a conv band of `width` px f32 with `k`/2 halo rows
     /// (input) + output band must fit one SHAVE's CMX slice when staged.
     pub fn conv_band_fits(
@@ -176,6 +192,15 @@ mod tests {
         let rgb = VpuMemory::scrub_region_bytes(1024, 1024, 3);
         assert_eq!(rgb, 24 << 20);
         assert!(rgb < 512 * 1024 * 1024);
+    }
+
+    #[test]
+    fn weight_store_region_is_half_a_megabyte() {
+        let b = VpuMemory::cnn_weight_store_bytes();
+        assert_eq!(b, 132_189 * 4);
+        // Two orders of magnitude below the staged RGB frame region:
+        // scrubbing it every frame costs far less than the frame sweep.
+        assert!(b * 40 < VpuMemory::scrub_region_bytes(1024, 1024, 3));
     }
 
     #[test]

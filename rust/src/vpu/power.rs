@@ -68,19 +68,35 @@ impl PowerModel {
     /// smaller part draws proportionally less SHAVE power while base /
     /// LEON / DRAM terms stay put.
     pub fn shave_activity_for(&self, kind: BenchKind, n_shaves: usize) -> Activity {
+        self.shave_activity_for_precision(kind, n_shaves, crate::Precision::F32)
+    }
+
+    /// Precision-aware activity profile (ISSUE 10): the int8 CNN
+    /// finishes each MAC window in half the cycles, so per unit time it
+    /// leans harder on DRAM (higher memory-boundedness) while the MAC
+    /// issue slots are slightly less saturated (the requantize stage
+    /// interleaves). Every non-CNN kind — and the f32 CNN — is bitwise
+    /// the legacy profile.
+    pub fn shave_activity_for_precision(
+        &self,
+        kind: BenchKind,
+        n_shaves: usize,
+        precision: crate::Precision,
+    ) -> Activity {
         // DRAM duty tracks memory-boundedness; SHAVE duty the schedule
         // balance; LEON orchestrates (low duty).
-        let (shave_duty, dram_duty) = match kind {
-            BenchKind::Binning => (0.88, 1.00),      // bandwidth-bound
-            BenchKind::Conv { k } => {
+        let (shave_duty, dram_duty) = match (kind, precision) {
+            (BenchKind::Binning, _) => (0.88, 1.00), // bandwidth-bound
+            (BenchKind::Conv { k }, _) => {
                 let k = k as f64;
                 // More taps -> more compute-bound, less DRAM-relative.
                 (0.95, (0.9 - 0.03 * k).max(0.4))
             }
-            BenchKind::Render => (0.93, 0.55),
-            BenchKind::Cnn => (0.97, 0.70),
+            (BenchKind::Render, _) => (0.93, 0.55),
+            (BenchKind::Cnn, crate::Precision::F32) => (0.97, 0.70),
+            (BenchKind::Cnn, crate::Precision::Int8) => (0.94, 0.82),
             // Integer predict/code: steady streaming reads, byte writes.
-            BenchKind::Ccsds => (0.90, 0.85),
+            (BenchKind::Ccsds, _) => (0.90, 0.85),
         };
         Activity {
             leon_duty: 0.25,
@@ -118,6 +134,18 @@ impl PowerModel {
     /// `shave_power(k)`.
     pub fn shave_power_for(&self, kind: BenchKind, n_shaves: usize) -> f64 {
         self.power(&self.shave_activity_for(kind, n_shaves))
+    }
+
+    /// Precision-aware per-node SHAVE power (ISSUE 10).
+    /// `shave_power_for_precision(k, n, F32)` is bitwise
+    /// `shave_power_for(k, n)`.
+    pub fn shave_power_for_precision(
+        &self,
+        kind: BenchKind,
+        n_shaves: usize,
+        precision: crate::Precision,
+    ) -> f64 {
+        self.power(&self.shave_activity_for_precision(kind, n_shaves, precision))
     }
 
     pub fn leon_power(&self, kind: BenchKind) -> f64 {
@@ -220,6 +248,31 @@ mod tests {
             assert!(small < full, "{kind:?}: {small} !< {full}");
             assert!(small > pm.base_w, "{kind:?}: active node above baseline");
         }
+    }
+
+    #[test]
+    fn int8_cnn_power_stays_in_envelope_and_f32_is_bitwise_legacy() {
+        let pm = PowerModel::default();
+        let k = BenchKind::Cnn;
+        let p8 = pm.shave_power_for_precision(k, 12, crate::Precision::Int8);
+        assert!((0.8..=1.0).contains(&p8), "{p8} W");
+        assert_ne!(p8, pm.shave_power(k), "int8 has its own activity profile");
+        for kind in all_kinds() {
+            assert_eq!(
+                pm.shave_power_for_precision(kind, 12, crate::Precision::F32),
+                pm.shave_power_for(kind, 12),
+                "{kind:?}: f32 path is bitwise legacy"
+            );
+            if !matches!(kind, BenchKind::Cnn) {
+                assert_eq!(
+                    pm.shave_power_for_precision(kind, 12, crate::Precision::Int8),
+                    pm.shave_power_for(kind, 12),
+                    "{kind:?}: only the CNN has a quantized path"
+                );
+            }
+        }
+        // Energy per frame drops ~2x: near-equal draw at half the time.
+        assert!((p8 - pm.shave_power(k)).abs() < 0.05);
     }
 
     #[test]

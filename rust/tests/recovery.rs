@@ -129,6 +129,54 @@ fn fec_absorbs_single_symbol_upsets_with_zero_retransmissions() {
     );
 }
 
+/// Wire plan hitting every attempt of every frame with a burst erasure:
+/// a lost DMA beat zeroing `FEC_PARITY_LINES` contiguous payload lines.
+fn burst_storm(seed: u64, strategy: Strategy) -> FaultPlan {
+    FaultPlan::new(FaultConfig {
+        frame_rate: 1.0,
+        plane_rate: 1.0,
+        w_payload_flip: 0.0,
+        w_crc_corrupt: 0.0,
+        w_truncate: 0.0,
+        w_stuck: 0.0,
+        w_burst: 1.0,
+        strategy,
+        ..FaultConfig::new(seed, 1.0)
+    })
+}
+
+#[test]
+fn fec_interleaving_spreads_a_contiguous_burst_with_zero_retransmits() {
+    // ISSUE 10 satellite: the burst zeroes 4 *contiguous* lines, but
+    // the parity classes interleave (`line % 4`), so each class takes
+    // exactly one erasure — the sidecar repairs every burst in place
+    // and the resend budget is never touched.
+    let n = 4;
+    let mut cp = coproc("burst", Some(burst_storm(23, Strategy::Fec)));
+    let r = stream::run(&mut cp, &opts(n, 70)).unwrap();
+    assert!(r.frame_errors.is_empty(), "{:?}", r.frame_errors);
+    assert_eq!(r.retransmits, 0, "interleaving must absorb the burst");
+    assert_eq!(r.faults.retransmits, 0);
+    assert!(r.faults.fec_corrected >= n as u64, "{:?}", r.faults);
+    assert!(
+        r.faults.truncated_lines >= 4 * n as u64,
+        "each burst loses 4 lines: {:?}",
+        r.faults
+    );
+    for run in &r.runs {
+        assert!(run.crc_ok, "repaired frames arrive with a clean CRC");
+        assert!(run.validation.pass, "repair is bit-exact");
+        assert_eq!(run.retransmits, 0);
+    }
+    // Contrast: the same persistent storm defeats plain resend — every
+    // attempt of every frame re-draws a burst, so the budget exhausts.
+    let mut resend = coproc("burst_r", Some(burst_storm(23, Strategy::Resend)));
+    let rr = stream::run(&mut resend, &opts(n, 70)).unwrap();
+    assert_eq!(rr.frame_errors.len(), n);
+    assert!(rr.faults.retransmits > 0);
+    assert_eq!(rr.faults.fec_corrected, 0);
+}
+
 #[test]
 fn the_same_storm_defeats_resend_and_none_fails_fast() {
     // Contrast case for the FEC test above: under plain resend a
@@ -218,7 +266,10 @@ fn scrub_catches_upsets_and_tmr_outvotes_them() {
     assert!(c.all_valid());
 
     let mut scrub =
-        coproc("mask_s", Some(memory_only(61, Strategy::Scrub { period: 1 })));
+        coproc(
+            "mask_s",
+            Some(memory_only(61, Strategy::Scrub { period: 1, weights_period: 1 })),
+        );
     let rs = stream::run(&mut scrub, &opts(n, 50)).unwrap();
     assert!(rs.all_valid(), "period-1 scrub must mask every upset");
     assert!(rs.faults.scrub_corrected > 0, "{:?}", rs.faults);

@@ -25,20 +25,18 @@ fn opts(bench: Benchmark, frames: usize, seed: u64) -> StreamOptions {
 }
 
 #[test]
-fn deprecated_new_shim_matches_builder_defaults() {
-    // ISSUE 7 satellite: the deprecated constructor keeps old callers
-    // compiling with exactly the builder's defaults.
-    #[allow(deprecated)]
-    let legacy = StreamOptions::new(Benchmark::Conv { k: 3 }, 5);
+fn builder_defaults_are_the_documented_sweep() {
+    // ISSUE 10 satellite: the deprecated `StreamOptions::new` shim is
+    // gone after its one-release grace period; the builder is the only
+    // constructor, and its defaults stay what the shim produced.
     let built = StreamOptions::builder(Benchmark::Conv { k: 3 }).frames(5).build();
-    assert_eq!(legacy.frames, built.frames);
-    assert_eq!(legacy.seed, built.seed);
-    assert_eq!(legacy.depth, built.depth);
-    assert_eq!(legacy.sched, built.sched);
-    assert_eq!(legacy.backend, built.backend);
-    assert_eq!(legacy.workers, built.workers);
-    assert_eq!(legacy.vpus, built.vpus);
-    assert!(legacy.traffic.is_none() && built.traffic.is_none());
+    assert_eq!(built.frames, 5);
+    assert_eq!(built.seed, 42);
+    assert_eq!(built.depth, 1);
+    assert!(built.backend.is_none(), "backend resolves from config/env");
+    assert!(built.precision.is_none(), "precision resolves from config/env");
+    assert!(built.workers.is_none() && built.vpus.is_none());
+    assert!(built.traffic.is_none());
 }
 
 #[test]
